@@ -1,0 +1,61 @@
+//! Accuracy-parity experiment (the accuracy half of the paper's Fig. 2):
+//! train the same model with the same seed and global batch across
+//! homogeneous and heterogeneous cluster shapes, and verify the final
+//! accuracy is unaffected by KAITIAN's communication/scheduling.
+//!
+//! ```bash
+//! cargo run --release --example accuracy_parity -- [--epochs 3] [--steps 30]
+//! ```
+
+use std::sync::Arc;
+
+use kaitian::config::Args;
+use kaitian::metrics::MarkdownTable;
+use kaitian::runtime::Engine;
+use kaitian::train::{train, TrainOptions};
+
+fn main() -> kaitian::Result<()> {
+    let args = Args::parse();
+    let engine = Arc::new(Engine::load(args.flag_or("artifacts", "artifacts"))?);
+    let configs = ["2G", "2M", "1G+1M", "2G+2M"];
+
+    let mut table = MarkdownTable::new(&["config", "final loss", "accuracy", "allocation"]);
+    let mut accs = Vec::new();
+    for spec in configs {
+        let opts = TrainOptions {
+            preset: args.flag_or("preset", "mobinet_small").to_string(),
+            cluster: spec.into(),
+            global_batch: 32,
+            dataset_len: 4096,
+            epochs: args.usize_flag("epochs", 3)?,
+            steps_per_epoch: Some(args.usize_flag("steps", 30)?),
+            eval_batches: 4,
+            throttle: false, // accuracy only; no need to slow the run down
+            profile: false,
+            seed: 7,
+            ..Default::default()
+        };
+        let report = train(engine.clone(), &opts)?;
+        let acc = report.final_accuracy().unwrap_or(0.0);
+        accs.push(acc);
+        table.row(vec![
+            spec.into(),
+            format!("{:.4}", report.final_loss().unwrap_or(f64::NAN)),
+            format!("{:.1}%", acc * 100.0),
+            format!("{:?}", report.allocation),
+        ]);
+        eprintln!("[parity] {spec}: acc {:.3}", acc);
+    }
+
+    println!("\n{}", table.render());
+    let max = accs.iter().cloned().fold(0.0_f64, f64::max);
+    let min = accs.iter().cloned().fold(1.0_f64, f64::min);
+    println!("accuracy spread = {:.1} pp (paper: ~2 pp across configs)", (max - min) * 100.0);
+    anyhow::ensure!(
+        max - min < 0.10,
+        "accuracy parity violated: spread {:.3}",
+        max - min
+    );
+    println!("ACCURACY PARITY OK");
+    Ok(())
+}

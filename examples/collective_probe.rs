@@ -1,0 +1,24 @@
+//! Collective microbenchmark probe: measured all-reduce latency/bandwidth
+//! on the vendor (in-proc) path vs the Gloo host-relay (real TCP) path,
+//! across message sizes and world sizes — the measured counterpart of the
+//! paper's discussion in §V-B.
+//!
+//! ```bash
+//! cargo run --release --example collective_probe -- [--world 4] [--quick]
+//! ```
+
+use kaitian::bench::microbench_collectives;
+use kaitian::config::Args;
+
+fn main() -> kaitian::Result<()> {
+    let args = Args::parse();
+    let world = args.usize_flag("world", 4)?;
+    let quick = args.has("quick");
+    println!("== measured all-reduce, world={world} ==\n");
+    let report = microbench_collectives(world, quick)?;
+    println!("{}", report.render());
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/collective_probe.json", report.json.to_string_pretty())?;
+    println!("wrote results/collective_probe.json");
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: train a small CNN across a simulated heterogeneous
+//! 1 GPU + 1 MLU cluster with KAITIAN in ~30 seconds.
+//!
+//! ```bash
+//! make artifacts           # once: AOT-lower the JAX/Pallas programs
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use kaitian::runtime::Engine;
+use kaitian::train::{train, TrainOptions};
+
+fn main() -> kaitian::Result<()> {
+    // 1. Load the AOT artifacts (HLO text lowered by python/compile/aot.py)
+    //    into the PJRT CPU engine. Python is NOT needed from here on.
+    let engine = Arc::new(Engine::load("artifacts")?);
+    println!("engine: platform = {}", engine.platform());
+
+    // 2. Describe the job: one simulated NVIDIA-class GPU + one
+    //    Cambricon-class MLU, KAITIAN process group, load-adaptive split.
+    let mut opts = TrainOptions::default();
+    opts.preset = "mobinet_small".into();
+    opts.cluster = "1G+1M".into();
+    opts.global_batch = 24; // adaptive split visible within the 16-sample buckets
+    opts.dataset_len = 2048;
+    opts.epochs = 2;
+    opts.steps_per_epoch = Some(16);
+    opts.eval_batches = 2;
+    opts.log_every = 4;
+
+    // 3. Train. Each device runs real fwd/bwd through XLA; gradients are
+    //    aggregated through ProcessGroupKaiTian (vendor lib intra-group,
+    //    host relay inter-group); the fused Pallas SGD kernel applies the
+    //    update.
+    let report = train(engine, &opts)?;
+
+    // 4. Inspect what the load-adaptive mechanism decided.
+    println!("\n{}", report.summary());
+    println!("device scores   : {:?}", report.scores);
+    println!("batch allocation: {:?} (Σ = {})", report.allocation, opts.global_batch);
+    println!(
+        "loss: {:.4} -> {:.4}",
+        report.step_losses.first().unwrap(),
+        report.step_losses.last().unwrap()
+    );
+    if let Some(acc) = report.final_accuracy() {
+        println!("eval accuracy   : {:.1}%", acc * 100.0);
+    }
+    Ok(())
+}

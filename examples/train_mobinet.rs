@@ -1,0 +1,72 @@
+//! The paper's benchmark workload, real-mode: MobileNetV2-class CNN on
+//! synthetic CIFAR-10 across a heterogeneous cluster, with the full
+//! communication breakdown the paper discusses.
+//!
+//! ```bash
+//! cargo run --release --example train_mobinet -- \
+//!     --cluster 2G+2M --epochs 2 --steps 25 [--strategy equal]
+//! ```
+//!
+//! This is the *real* execution path (PJRT compute + real collectives +
+//! sleep-imposed relative device speeds); the 50-epoch paper figures are
+//! regenerated in virtual time by `kaitian bench` / `cargo bench`.
+
+use std::sync::Arc;
+
+use kaitian::config::Args;
+use kaitian::runtime::Engine;
+use kaitian::sched::Strategy;
+use kaitian::train::{train, TrainOptions};
+use kaitian::util::fmt_bytes;
+
+fn main() -> kaitian::Result<()> {
+    let args = Args::parse();
+    let mut opts = TrainOptions {
+        preset: "mobinet".into(),
+        cluster: args.flag_or("cluster", "2G+2M").to_string(),
+        global_batch: args.usize_flag("global-batch", 256)?,
+        epochs: args.usize_flag("epochs", 2)?,
+        steps_per_epoch: Some(args.usize_flag("steps", 25)?),
+        dataset_len: 50_000,
+        eval_batches: 2,
+        log_every: 5,
+        ..Default::default()
+    };
+    if let Some(s) = args.flag("strategy") {
+        opts.strategy = Strategy::parse(s)?;
+    }
+
+    println!(
+        "== KAITIAN mobinet training: {} | B={} | {} epochs x {:?} steps ==",
+        opts.cluster, opts.global_batch, opts.epochs, opts.steps_per_epoch
+    );
+    let engine = Arc::new(Engine::load(args.flag_or("artifacts", "artifacts"))?);
+    let report = train(engine, &opts)?;
+
+    println!("\n{}", report.summary());
+    println!("\nload-adaptive decisions:");
+    println!("  scores     = {:?}", report.scores);
+    println!("  allocation = {:?}", report.allocation);
+
+    println!("\nper-rank breakdown:");
+    for (rank, acc) in report.per_rank.iter().enumerate() {
+        println!(
+            "  rank {rank}: compute {:6.2}s | comm {:6.2}s (stage {:5.2}s) | \
+             update {:6.2}s | moved {} | {:.0} samples/s",
+            acc.compute_s,
+            acc.comm_s,
+            acc.stage_s,
+            acc.update_s,
+            fmt_bytes(acc.comm_bytes as usize),
+            acc.throughput(),
+        );
+    }
+
+    println!("\nloss curve (per epoch): {:?}", report.epoch_losses);
+    println!("accuracy   (per epoch): {:?}", report.epoch_accuracy);
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/mobinet_{}.json", report.cluster.replace('+', "_"));
+    std::fs::write(&path, report.to_json().to_string_pretty())?;
+    println!("\nwrote {path}");
+    Ok(())
+}

@@ -1,0 +1,169 @@
+"""AOT lowering: JAX programs -> HLO *text* artifacts + manifest.json.
+
+This is the only place python touches the pipeline; it runs once at build
+time (`make artifacts`). The rust coordinator loads the emitted HLO text
+via `HloModuleProto::from_text_file` and never imports python.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--presets mobinet,tinygpt]
+                          [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import HYPER_LEN
+from .model import PRESETS, ProgramSet
+
+# Batch-size buckets per preset: a rank's load-adaptive allocation b_i is
+# padded (with masked samples) up to the smallest bucket >= b_i. Keep the
+# grid geometric-ish so padding waste stays < ~30%.
+DEFAULT_BUCKETS: dict[str, list[int]] = {
+    "mobinet": [16, 32, 48, 64, 96, 128, 192, 256],
+    "mobinet_small": [4, 8, 16],
+    "tinygpt": [2, 4, 8, 16],
+    "tinygpt_small": [2, 4],
+}
+
+# `--quick` lowers only the small presets (used by pytest).
+QUICK_PRESETS = ["mobinet_small", "tinygpt_small"]
+FULL_PRESETS = ["mobinet", "tinygpt", "mobinet_small", "tinygpt_small"]
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple — see load_hlo.rs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _lower(fn, *specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def _write(out_dir: str, name: str, text: str) -> dict:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    return {
+        "file": name,
+        "bytes": len(text),
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+    }
+
+
+def _spec_json(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": s.dtype.name}
+
+
+def lower_preset(ps: ProgramSet, buckets: list[int], out_dir: str, verbose: bool = True) -> dict:
+    """Lower every program of one preset; return its manifest entry."""
+    n = ps.param_count
+    flat_spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    hyper_spec = jax.ShapeDtypeStruct((HYPER_LEN,), jnp.float32)
+    seed_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    entry: dict = {
+        "param_count": n,
+        "buckets": sorted(buckets),
+        "hyper_len": HYPER_LEN,
+        "hyper_layout": ["lr", "momentum", "weight_decay", "grad_scale"],
+        "meta": ps.meta,
+        "batch_inputs": {str(b): [_spec_json(s) for s in ps.batch_specs(b)] for b in buckets},
+        "files": {"grad": {}, "eval": {}},
+        "outputs": {
+            "init": ["params"],
+            "apply": ["params", "momentum"],
+            "grad": ["grads", "loss_sum", "correct"],
+            "eval": ["loss_sum", "correct"],
+        },
+    }
+
+    def log(msg):
+        if verbose:
+            print(f"[aot] {ps.name}: {msg}", flush=True)
+
+    t0 = time.time()
+    entry["files"]["init"] = _write(out_dir, f"{ps.name}_init.hlo.txt", _lower(ps.init_params, seed_spec))
+    log(f"init lowered ({time.time()-t0:.1f}s)")
+
+    t0 = time.time()
+    entry["files"]["apply"] = _write(
+        out_dir,
+        f"{ps.name}_apply.hlo.txt",
+        _lower(ps.apply_update, flat_spec, flat_spec, flat_spec, hyper_spec),
+    )
+    log(f"apply lowered ({time.time()-t0:.1f}s)")
+
+    for b in sorted(buckets):
+        specs = ps.batch_specs(b)
+        t0 = time.time()
+        entry["files"]["grad"][str(b)] = _write(
+            out_dir, f"{ps.name}_grad_b{b}.hlo.txt", _lower(ps.grad_step, flat_spec, *specs)
+        )
+        log(f"grad b={b} lowered ({time.time()-t0:.1f}s)")
+        t0 = time.time()
+        entry["files"]["eval"][str(b)] = _write(
+            out_dir, f"{ps.name}_eval_b{b}.hlo.txt", _lower(ps.eval_step, flat_spec, *specs)
+        )
+        log(f"eval b={b} lowered ({time.time()-t0:.1f}s)")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default=None, help="comma-separated preset names")
+    ap.add_argument("--quick", action="store_true", help="small presets only (tests)")
+    ap.add_argument("--buckets", default=None, help="override bucket list, e.g. 8,16")
+    args = ap.parse_args()
+
+    names = (
+        args.presets.split(",")
+        if args.presets
+        else (QUICK_PRESETS if args.quick else FULL_PRESETS)
+    )
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest: dict = {"format": "hlo-text-v1", "programs": {}}
+    t_start = time.time()
+    for name in names:
+        if name not in PRESETS:
+            raise SystemExit(f"unknown preset {name!r}; have {sorted(PRESETS)}")
+        import dataclasses
+
+        ps = dataclasses.replace(PRESETS[name](), name=name)
+        buckets = (
+            [int(x) for x in args.buckets.split(",")] if args.buckets else DEFAULT_BUCKETS[name]
+        )
+        manifest["programs"][name] = lower_preset(ps, buckets, args.out_dir)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(
+        f"[aot] wrote {sum(len(e['files']['grad']) * 2 + 2 for e in manifest['programs'].values())}"
+        f" programs for {list(manifest['programs'])} to {args.out_dir}"
+        f" in {time.time()-t_start:.1f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

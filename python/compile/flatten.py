@@ -1,0 +1,62 @@
+"""Param-pytree <-> flat-buffer packing.
+
+The rust coordinator treats all training state as flat f32 buffers — one
+for params, one for momentum — so the AllReduce path, the checkpoint format,
+and the optimizer kernel all operate on a single contiguous array (this is
+exactly PyTorch-DDP's gradient-bucket flattening, done once for the whole
+model). The layout is the deterministic `jax.tree_util` flatten order and is
+recorded in the AOT manifest so it is stable across python and rust.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def tree_size(tree: Pytree) -> int:
+    """Total element count across all leaves."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def leaf_specs(tree: Pytree) -> list[dict]:
+    """Stable description of the flat layout: [{path, shape, offset}...]."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    specs = []
+    off = 0
+    for path, leaf in leaves_with_paths:
+        specs.append(
+            {
+                "path": jax.tree_util.keystr(path),
+                "shape": list(leaf.shape),
+                "offset": off,
+                "size": int(leaf.size),
+            }
+        )
+        off += int(leaf.size)
+    return specs
+
+
+def pack(tree: Pytree) -> jax.Array:
+    """Flatten a pytree of arrays into one contiguous f32 `(L,)` buffer."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), jnp.float32)
+    return jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in leaves])
+
+
+def unpack(flat: jax.Array, template: Pytree) -> Pytree:
+    """Inverse of `pack`: slice the flat buffer back into `template`'s
+    structure/shapes. `template` supplies structure only; values ignored."""
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    out = []
+    off = 0
+    for leaf in leaves:
+        n = int(leaf.size)
+        out.append(jax.lax.slice(flat, (off,), (off + n,)).reshape(leaf.shape))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)

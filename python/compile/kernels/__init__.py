@@ -1,0 +1,20 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO artifacts).
+
+Every kernel has a pure-jnp oracle in ref.py; python/tests/test_kernels.py
+is the correctness gate.
+"""
+
+from .matmul import matmul, matmul_raw, vmem_footprint_bytes
+from .scale import axpby, scale
+from .sgd import HYPER_LEN, make_hyper, sgd_momentum_update
+
+__all__ = [
+    "matmul",
+    "matmul_raw",
+    "vmem_footprint_bytes",
+    "axpby",
+    "scale",
+    "sgd_momentum_update",
+    "make_hyper",
+    "HYPER_LEN",
+]

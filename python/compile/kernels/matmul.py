@@ -1,0 +1,140 @@
+"""L1 Pallas kernel: tiled matrix multiply (the model's compute hot-spot).
+
+TPU adaptation of the paper's implicit cuDNN/CNNL GEMMs (DESIGN.md
+Hardware-Adaptation): instead of warp-level WMMA tiles in shared memory, we
+tile for the MXU systolic array — (128, 128) f32 blocks staged HBM->VMEM via
+BlockSpec index maps, accumulating over the K grid axis directly in the
+output block (revisited across the innermost grid dimension, so it stays
+VMEM-resident between K steps).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs on the rust/PJRT CPU client. On a real TPU the identical
+kernel source compiles to Mosaic.
+
+A custom VJP is defined so the kernel is used in the backward pass too
+(dx = g @ w^T, dw = x^T @ g — both routed through the same Pallas kernel).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tile. f32 accumulate.
+DEFAULT_BLOCK = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step: o[i,j] (+)= x[i,k] @ w[k,j].
+
+    The output block is revisited for every k; we zero it on the first K
+    step and accumulate in place — the VMEM-resident accumulator pattern.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jax.Array, multiples: tuple[int, int]) -> jax.Array:
+    m0 = _cdiv(x.shape[0], multiples[0]) * multiples[0]
+    m1 = _cdiv(x.shape[1], multiples[1]) * multiples[1]
+    if (m0, m1) == x.shape:
+        return x
+    return jnp.pad(x, ((0, m0 - x.shape[0]), (0, m1 - x.shape[1])))
+
+
+def _block_for(dim: int, requested: int) -> int:
+    """Clamp the block to the (padded) dim so tiny shapes stay one block."""
+    return min(requested, max(8, 1 << (dim - 1).bit_length()))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def matmul_raw(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    """`x @ w` through the Pallas kernel (no autodiff rule). f32 out."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+
+    bm = _block_for(m, block_m)
+    bn = _block_for(n, block_n)
+    bk = _block_for(k, block_k)
+
+    xp = _pad_to(x.astype(jnp.float32), (bm, bk))
+    wp = _pad_to(w.astype(jnp.float32), (bk, bn))
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable tiled-Pallas matmul: `x @ w`.
+
+    Forward and both backward GEMMs run through the same Pallas kernel, so
+    the L1 hot-spot is exercised by fwd *and* bwd of every train_step.
+    """
+    return matmul_raw(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_raw(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    dx = matmul_raw(g, w.T)
+    dw = matmul_raw(x.T, g)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_footprint_bytes(
+    block_m: int = DEFAULT_BLOCK,
+    block_n: int = DEFAULT_BLOCK,
+    block_k: int = DEFAULT_BLOCK,
+) -> int:
+    """Estimated VMEM working set of one grid step (f32): x, w, o blocks.
+
+    Used by DESIGN.md / EXPERIMENTS.md real-TPU estimates (interpret-mode
+    wallclock is not a TPU proxy).
+    """
+    return 4 * (block_m * block_k + block_k * block_n + block_m * block_n)

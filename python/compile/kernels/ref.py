@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: python/tests/test_kernels.py sweeps
+shapes/dtypes with hypothesis and asserts allclose(kernel, ref). Keep these
+trivially-obviously-correct — no tiling, no padding, no tricks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain `x @ w` with f32 accumulation."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def sgd_momentum_ref(
+    params: jax.Array, momentum: jax.Array, grads: jax.Array, hyper: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Reference fused SGD-momentum update (same hyper layout as sgd.py)."""
+    lr, mu, wd, gs = hyper[0], hyper[1], hyper[2], hyper[3]
+    p = params.astype(jnp.float32)
+    v = momentum.astype(jnp.float32)
+    g = grads.astype(jnp.float32) * gs + wd * p
+    v_new = mu * v + g
+    p_new = p - lr * v_new
+    return p_new, v_new
+
+
+def axpby_ref(alpha_beta: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    return alpha_beta[0] * x.astype(jnp.float32) + alpha_beta[1] * y.astype(jnp.float32)

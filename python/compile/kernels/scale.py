@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: blockwise axpby over flat buffers.
+
+    out = alpha * x + beta * y
+
+Used by the DDP path for gradient-buffer scaling (e.g. pre-multiplying a
+packed gradient bucket by a per-device weight before an average all-reduce,
+or normalizing a summed buffer by 1/B_global when the optimizer is not
+fused). Bandwidth-bound single-pass streaming kernel, same HBM->VMEM
+1-D BlockSpec schedule as sgd.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 65536
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def _axpby_kernel(coef_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = coef_ref[0] * x_ref[...] + coef_ref[1] * y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def axpby(
+    alpha_beta: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    """`alpha_beta[0] * x + alpha_beta[1] * y` for flat f32 `(L,)` buffers."""
+    (n,) = x.shape
+    assert y.shape == (n,)
+    assert alpha_beta.shape == (2,)
+
+    bs = min(block, max(256, 1 << (n - 1).bit_length()))
+    npad = _cdiv(n, bs) * bs
+    pad = npad - n
+
+    def _p(a):
+        return jnp.pad(a.astype(jnp.float32), (0, pad)) if pad else a.astype(jnp.float32)
+
+    out = pl.pallas_call(
+        _axpby_kernel,
+        grid=(npad // bs,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=interpret,
+    )(alpha_beta.astype(jnp.float32), _p(x), _p(y))
+    return out[:n]
+
+
+def scale(x: jax.Array, s: float | jax.Array, *, interpret: bool = True) -> jax.Array:
+    """`s * x` via the axpby kernel (beta = 0)."""
+    coef = jnp.stack([jnp.asarray(s, jnp.float32), jnp.float32(0.0)])
+    return axpby(coef, x, x, interpret=interpret)

@@ -1,0 +1,216 @@
+"""L2 program builders: the AOT-compiled units the rust coordinator runs.
+
+KAITIAN's data-parallel step is split at exactly the point where the
+coordinator's AllReduce happens (mirroring PyTorch DDP + ProcessGroup):
+
+    grad_step(flat_params, x, y, mask) -> (flat_grads, loss_sum, correct)
+        fwd + bwd on the local micro-batch. Gradients are the *sum* of
+        per-sample gradients (masked), packed into one flat buffer — so an
+        AllReduce(SUM) across ranks followed by a 1/B_global scale is
+        bit-identical to the gradient of the concatenated global batch.
+
+    apply_update(flat_params, flat_momentum, flat_avg_grad, hyper)
+        -> (new_params, new_momentum)
+        the fused Pallas SGD-momentum kernel; `hyper[3]` (grad_scale)
+        carries the 1/B_global normalization.
+
+    eval_step(flat_params, x, y, mask) -> (loss_sum, correct)
+
+    init_params(seed) -> flat_params
+        deterministic init from a scalar seed, so rust never needs python.
+
+Batch buckets: each program is lowered per bucket size; a rank whose
+load-adaptive allocation is b_i uses the smallest bucket >= b_i with the
+tail masked out. Masking makes bucketed execution *exact*, not approximate
+(GroupNorm/LayerNorm are per-sample; see models/__init__.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import flatten
+from .kernels import sgd_momentum_update
+from .models import (
+    MobiNetConfig,
+    TinyGPTConfig,
+    mobinet_fwd,
+    mobinet_init,
+    tinygpt_fwd,
+    tinygpt_init,
+)
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramSet:
+    """Everything aot.py needs to lower one model family."""
+
+    name: str
+    param_count: int
+    init_params: Callable  # (seed_i32,) -> flat (L,)
+    grad_step: Callable  # (flat, *batch) -> (flat_grads, loss_sum, correct)
+    apply_update: Callable  # (flat_p, flat_v, flat_g, hyper) -> (p', v')
+    eval_step: Callable  # (flat, *batch) -> (loss_sum, correct)
+    batch_specs: Callable  # (bucket,) -> list[jax.ShapeDtypeStruct]
+    leaf_specs: list[dict]
+    meta: dict
+
+
+def _masked_ce_sum(logits: jax.Array, y: jax.Array, mask: jax.Array) -> jax.Array:
+    """Sum over samples of mask * cross_entropy. logits (B, C), y (B,)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return jnp.sum(ce * mask)
+
+
+def _apply_update(flat_p, flat_v, flat_g, hyper):
+    return sgd_momentum_update(flat_p, flat_v, flat_g, hyper)
+
+
+# ---------------------------------------------------------------------------
+# MobiNet (image classification — the paper's benchmark task)
+# ---------------------------------------------------------------------------
+
+
+def build_mobinet(cfg: MobiNetConfig | None = None, image_size: int = 32) -> ProgramSet:
+    cfg = cfg or MobiNetConfig()
+    template = jax.eval_shape(lambda k: mobinet_init(k, cfg), jax.random.key(0))
+    n_params = flatten.tree_size(template)
+
+    def init_params(seed: jax.Array) -> jax.Array:
+        key = jax.random.key(seed.astype(jnp.uint32))
+        return flatten.pack(mobinet_init(key, cfg))
+
+    def loss_fn(flat: jax.Array, x, y, mask):
+        params = flatten.unpack(flat, template)
+        logits = mobinet_fwd(params, x, cfg)
+        return _masked_ce_sum(logits, y, mask), logits
+
+    def grad_step(flat, x, y, mask):
+        (loss_sum, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            flat, x, y, mask
+        )
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y) * mask)
+        return grads, loss_sum, correct
+
+    def eval_step(flat, x, y, mask):
+        loss_sum, logits = loss_fn(flat, x, y, mask)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y) * mask)
+        return loss_sum, correct
+
+    def batch_specs(bucket: int):
+        return [
+            jax.ShapeDtypeStruct((bucket, image_size, image_size, 3), jnp.float32),
+            jax.ShapeDtypeStruct((bucket,), jnp.int32),
+            jax.ShapeDtypeStruct((bucket,), jnp.float32),
+        ]
+
+    return ProgramSet(
+        name="mobinet",
+        param_count=n_params,
+        init_params=init_params,
+        grad_step=grad_step,
+        apply_update=_apply_update,
+        eval_step=eval_step,
+        batch_specs=batch_specs,
+        leaf_specs=flatten.leaf_specs(template),
+        meta={
+            "task": "image_classification",
+            "image_size": image_size,
+            "num_classes": cfg.num_classes,
+            "width_mult": cfg.width_mult,
+            "pallas_pointwise": cfg.pallas_pointwise,
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# TinyGPT (language modeling — the e2e transformer driver)
+# ---------------------------------------------------------------------------
+
+
+def build_tinygpt(cfg: TinyGPTConfig | None = None) -> ProgramSet:
+    cfg = cfg or TinyGPTConfig()
+    template = jax.eval_shape(lambda k: tinygpt_init(k, cfg), jax.random.key(0))
+    n_params = flatten.tree_size(template)
+
+    def init_params(seed: jax.Array) -> jax.Array:
+        key = jax.random.key(seed.astype(jnp.uint32))
+        return flatten.pack(tinygpt_init(key, cfg))
+
+    def loss_fn(flat: jax.Array, tokens, targets, mask):
+        """Next-token CE, summed over (sample, position), sample-masked.
+
+        loss_sum is normalized per *token position* within a sample (mean
+        over T) so grad_scale=1/B_global keeps the same semantics as the
+        classifier task: one unit of loss per sample.
+        """
+        params = flatten.unpack(flat, template)
+        logits = tinygpt_fwd(params, tokens, cfg)  # (B, T, V)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ce = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]  # (B, T)
+        per_sample = ce.mean(axis=-1)  # (B,)
+        return jnp.sum(per_sample * mask), logits
+
+    def grad_step(flat, tokens, targets, mask):
+        (loss_sum, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            flat, tokens, targets, mask
+        )
+        pred = jnp.argmax(logits, axis=-1)
+        correct = jnp.sum(jnp.mean((pred == targets).astype(jnp.float32), axis=-1) * mask)
+        return grads, loss_sum, correct
+
+    def eval_step(flat, tokens, targets, mask):
+        loss_sum, logits = loss_fn(flat, tokens, targets, mask)
+        pred = jnp.argmax(logits, axis=-1)
+        correct = jnp.sum(jnp.mean((pred == targets).astype(jnp.float32), axis=-1) * mask)
+        return loss_sum, correct
+
+    def batch_specs(bucket: int):
+        return [
+            jax.ShapeDtypeStruct((bucket, cfg.seq_len), jnp.int32),
+            jax.ShapeDtypeStruct((bucket, cfg.seq_len), jnp.int32),
+            jax.ShapeDtypeStruct((bucket,), jnp.float32),
+        ]
+
+    return ProgramSet(
+        name="tinygpt",
+        param_count=n_params,
+        init_params=init_params,
+        grad_step=grad_step,
+        apply_update=_apply_update,
+        eval_step=eval_step,
+        batch_specs=batch_specs,
+        leaf_specs=flatten.leaf_specs(template),
+        meta={
+            "task": "language_modeling",
+            "vocab": cfg.vocab,
+            "seq_len": cfg.seq_len,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "pallas_proj": cfg.pallas_proj,
+        },
+    )
+
+
+PRESETS: dict[str, Callable[[], ProgramSet]] = {
+    # The paper's benchmark: MobileNetV2-class CNN on 32x32x10.
+    "mobinet": lambda: build_mobinet(MobiNetConfig()),
+    # Smaller CNN for fast tests / CI.
+    "mobinet_small": lambda: build_mobinet(
+        MobiNetConfig(width_mult=0.25, blocks=((1, 16, 1, 1), (6, 24, 1, 2), (6, 32, 1, 2)), head_channels=256)
+    ),
+    # E2E transformer driver (examples/train_transformer.rs).
+    "tinygpt": lambda: build_tinygpt(TinyGPTConfig()),
+    # Tiny variant for tests.
+    "tinygpt_small": lambda: build_tinygpt(
+        TinyGPTConfig(seq_len=32, d_model=64, n_layers=2, n_heads=2, d_ff=128)
+    ),
+}

@@ -1,0 +1,20 @@
+"""L2 model zoo (build-time JAX; lowered to HLO artifacts by aot.py).
+
+Models are pure functions over explicit param pytrees (nested dicts of
+jnp arrays) — no flax/haiku. Normalization is GroupNorm/LayerNorm rather
+than BatchNorm so that mask-padded samples in a batch bucket contribute
+*exactly zero* to the loss and gradients of real samples (see
+DESIGN.md §3: batch buckets + masks make load-adaptive splits exact).
+"""
+
+from .mobinet import MobiNetConfig, mobinet_fwd, mobinet_init
+from .tinygpt import TinyGPTConfig, tinygpt_fwd, tinygpt_init
+
+__all__ = [
+    "MobiNetConfig",
+    "mobinet_init",
+    "mobinet_fwd",
+    "TinyGPTConfig",
+    "tinygpt_init",
+    "tinygpt_fwd",
+]

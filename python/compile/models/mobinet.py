@@ -1,0 +1,194 @@
+"""MobiNet: the paper's MobileNetV2 benchmark model, restated in pure JAX.
+
+MobileNetV2-style inverted-residual CNN sized for 32x32 CIFAR-class inputs
+(stride-1 stem, reduced stage depths, width multiplier) — the same
+architecture family and compute profile the paper trains (Sandler et al.,
+CVPR'18), built from scratch on explicit param pytrees.
+
+Substitutions vs the paper (recorded in DESIGN.md §3):
+  * BatchNorm -> GroupNorm. BN couples samples within a batch, which breaks
+    the exactness of mask-padded batch buckets and differs under unequal
+    per-device batch splits; GN is per-sample, so a zero-masked (padded)
+    sample contributes exactly nothing to any real sample's activations or
+    gradients, and DDP gradients are bit-identical to the concatenated
+    single-device batch. The paper's accuracy-parity claim is preserved.
+  * The classifier head (and optionally every pointwise 1x1 conv, which is
+    a GEMM over (B*H*W, Cin)) routes through the L1 Pallas matmul kernel,
+    so the paper's compute hot-spot exercises the Pallas path in fwd+bwd.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import matmul
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MobiNetConfig:
+    """MobileNetV2-for-CIFAR architecture knobs."""
+
+    num_classes: int = 10
+    width_mult: float = 0.5
+    # (expansion t, out channels c, repeats n, first stride s) per stage —
+    # the MobileNetV2 table, depths trimmed for 32x32 inputs.
+    blocks: tuple[tuple[int, int, int, int], ...] = (
+        (1, 16, 1, 1),
+        (6, 24, 2, 1),
+        (6, 32, 2, 2),
+        (6, 64, 2, 2),
+        (6, 96, 2, 1),
+        (6, 160, 2, 2),
+    )
+    stem_channels: int = 32
+    head_channels: int = 640
+    gn_groups: int = 8
+    # Route pointwise (1x1) convs through the Pallas matmul kernel. The
+    # classifier head always does; this extends it to every inverted
+    # residual's expand/project GEMMs (slower under interpret mode on CPU,
+    # identical numerics — used by the kernel-ablation bench).
+    pallas_pointwise: bool = False
+
+    def scaled(self, c: int) -> int:
+        return max(8, int(c * self.width_mult + 0.5) // 8 * 8)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _conv_init(key, kh, kw, cin, cout) -> jax.Array:
+    """He-normal for conv kernels, HWIO layout."""
+    fan_in = kh * kw * cin
+    std = (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def _gn_init(c: int) -> dict:
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _block_init(key, cin: int, cout: int, t: int) -> dict:
+    kexp, kdw, kproj = jax.random.split(key, 3)
+    cmid = cin * t
+    p: dict = {}
+    if t != 1:
+        p["expand"] = {"w": _conv_init(kexp, 1, 1, cin, cmid), "gn": _gn_init(cmid)}
+    # depthwise 3x3: HWIO with feature_group_count=cmid => (3, 3, 1, cmid)
+    p["dw"] = {"w": _conv_init(kdw, 3, 3, 1, cmid), "gn": _gn_init(cmid)}
+    p["project"] = {"w": _conv_init(kproj, 1, 1, cmid, cout), "gn": _gn_init(cout)}
+    return p
+
+
+def mobinet_init(key: jax.Array, cfg: MobiNetConfig) -> Params:
+    """Initialize the full parameter pytree (nested dicts, string keys)."""
+    n_stages = len(cfg.blocks)
+    keys = jax.random.split(key, 3 + sum(n for _, _, n, _ in cfg.blocks))
+    ki = iter(range(len(keys)))
+
+    stem_c = cfg.scaled(cfg.stem_channels)
+    params: dict = {
+        "stem": {"w": _conv_init(keys[next(ki)], 3, 3, 3, stem_c), "gn": _gn_init(stem_c)}
+    }
+    cin = stem_c
+    stages: dict = {}
+    for si, (t, c, n, s) in enumerate(cfg.blocks):
+        cout = cfg.scaled(c)
+        blocks: dict = {}
+        for bi in range(n):
+            blocks[f"b{bi}"] = _block_init(keys[next(ki)], cin, cout, t)
+            cin = cout
+        stages[f"s{si}"] = blocks
+    params["stages"] = stages
+
+    head_c = cfg.scaled(cfg.head_channels)
+    params["head"] = {"w": _conv_init(keys[next(ki)], 1, 1, cin, head_c), "gn": _gn_init(head_c)}
+    kcls = keys[next(ki)]
+    std = (1.0 / head_c) ** 0.5
+    params["classifier"] = {
+        "w": jax.random.normal(kcls, (head_c, cfg.num_classes), jnp.float32) * std,
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _group_norm(x: jax.Array, gn: dict, groups: int, eps: float = 1e-5) -> jax.Array:
+    """Per-sample GroupNorm over NHWC activations."""
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:  # channel counts are multiples of 8, but stay safe
+        g -= 1
+    xg = x.reshape(b, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(b, h, w, c) * gn["scale"] + gn["bias"]
+
+
+def _relu6(x: jax.Array) -> jax.Array:
+    return jnp.minimum(jnp.maximum(x, 0.0), 6.0)
+
+
+def _conv(x: jax.Array, w: jax.Array, stride: int = 1, groups: int = 1) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def _pointwise(x: jax.Array, w: jax.Array, use_pallas: bool) -> jax.Array:
+    """1x1 conv == GEMM over (B*H*W, Cin) @ (Cin, Cout)."""
+    b, h, wd, cin = x.shape
+    cout = w.shape[-1]
+    if use_pallas:
+        y = matmul(x.reshape(b * h * wd, cin), w.reshape(cin, cout))
+        return y.reshape(b, h, wd, cout)
+    return _conv(x, w)
+
+
+def _inv_residual(x: jax.Array, p: dict, t: int, stride: int, cfg: MobiNetConfig) -> jax.Array:
+    cin = x.shape[-1]
+    y = x
+    if t != 1:
+        y = _pointwise(y, p["expand"]["w"], cfg.pallas_pointwise)
+        y = _relu6(_group_norm(y, p["expand"]["gn"], cfg.gn_groups))
+    cmid = y.shape[-1]
+    y = _conv(y, p["dw"]["w"], stride=stride, groups=cmid)
+    y = _relu6(_group_norm(y, p["dw"]["gn"], cfg.gn_groups))
+    y = _pointwise(y, p["project"]["w"], cfg.pallas_pointwise)
+    y = _group_norm(y, p["project"]["gn"], cfg.gn_groups)
+    if stride == 1 and cin == y.shape[-1]:
+        y = y + x
+    return y
+
+
+def mobinet_fwd(params: Params, x: jax.Array, cfg: MobiNetConfig) -> jax.Array:
+    """Forward pass: NHWC f32 images -> (B, num_classes) logits."""
+    y = _conv(x, params["stem"]["w"], stride=1)
+    y = _relu6(_group_norm(y, params["stem"]["gn"], cfg.gn_groups))
+    for si, (t, _c, n, s) in enumerate(cfg.blocks):
+        for bi in range(n):
+            stride = s if bi == 0 else 1
+            y = _inv_residual(y, params["stages"][f"s{si}"][f"b{bi}"], t, stride, cfg)
+    y = _pointwise(y, params["head"]["w"], cfg.pallas_pointwise)
+    y = _relu6(_group_norm(y, params["head"]["gn"], cfg.gn_groups))
+    y = y.mean(axis=(1, 2))  # global average pool -> (B, head_c)
+    # Classifier head always goes through the L1 Pallas matmul.
+    logits = matmul(y, params["classifier"]["w"]) + params["classifier"]["b"]
+    return logits

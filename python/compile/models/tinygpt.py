@@ -1,0 +1,141 @@
+"""TinyGPT: decoder-only transformer LM for the end-to-end training example.
+
+A from-scratch GPT-2-style byte-level language model on explicit param
+pytrees: learned positional embeddings, pre-LN blocks (causal multi-head
+attention + GELU MLP), untied LM head. The LM head GEMM routes through the
+L1 Pallas matmul kernel (fwd + custom-VJP bwd); `pallas_proj=True` extends
+that to the attention/MLP projections for the kernel-ablation bench.
+
+Size presets are in aot.py; the e2e example (examples/train_transformer.rs)
+trains the default preset for a few hundred steps on a synthetic corpus and
+logs the loss curve (EXPERIMENTS.md §E2E).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import matmul
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyGPTConfig:
+    vocab: int = 256
+    seq_len: int = 128
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024
+    # Route attention/MLP projections through the Pallas matmul too (the LM
+    # head always does). Identical numerics; used by the ablation bench.
+    pallas_proj: bool = False
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, din, dout, std=None) -> dict:
+    std = std if std is not None else (2.0 / (din + dout)) ** 0.5
+    return {
+        "w": jax.random.normal(key, (din, dout), jnp.float32) * std,
+        "b": jnp.zeros((dout,), jnp.float32),
+    }
+
+
+def _ln_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def tinygpt_init(key: jax.Array, cfg: TinyGPTConfig) -> Params:
+    keys = jax.random.split(key, 4 + 6 * cfg.n_layers)
+    ki = iter(range(len(keys)))
+    d = cfg.d_model
+    params: dict = {
+        "tok_emb": jax.random.normal(keys[next(ki)], (cfg.vocab, d), jnp.float32) * 0.02,
+        "pos_emb": jax.random.normal(keys[next(ki)], (cfg.seq_len, d), jnp.float32) * 0.02,
+        "final_ln": _ln_init(d),
+        "lm_head": _dense_init(keys[next(ki)], d, cfg.vocab, std=0.02),
+    }
+    layers: dict = {}
+    for li in range(cfg.n_layers):
+        layers[f"l{li}"] = {
+            "ln1": _ln_init(d),
+            "qkv": _dense_init(keys[next(ki)], d, 3 * d),
+            "attn_out": _dense_init(keys[next(ki)], d, d),
+            "ln2": _ln_init(d),
+            "mlp_in": _dense_init(keys[next(ki)], d, cfg.d_ff),
+            "mlp_out": _dense_init(keys[next(ki)], cfg.d_ff, d),
+        }
+    params["layers"] = layers
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x: jax.Array, ln: dict, eps: float = 1e-5) -> jax.Array:
+    mean = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * ln["scale"] + ln["bias"]
+
+
+def _dense(x: jax.Array, p: dict, use_pallas: bool) -> jax.Array:
+    """(.., din) @ (din, dout) + b, optionally via the Pallas kernel."""
+    if use_pallas:
+        lead = x.shape[:-1]
+        y = matmul(x.reshape(-1, x.shape[-1]), p["w"])
+        return y.reshape(*lead, p["w"].shape[-1]) + p["b"]
+    return x @ p["w"] + p["b"]
+
+
+def _attention(x: jax.Array, layer: dict, cfg: TinyGPTConfig) -> jax.Array:
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    qkv = _dense(x, layer["qkv"], cfg.pallas_proj)  # (b, t, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, h, dh).transpose(0, 2, 1, 3)  # (b, h, t, dh)
+    k = k.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (dh**0.5)
+    causal = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    att = jnp.where(causal, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return _dense(y, layer["attn_out"], cfg.pallas_proj)
+
+
+def _mlp(x: jax.Array, layer: dict, cfg: TinyGPTConfig) -> jax.Array:
+    y = _dense(x, layer["mlp_in"], cfg.pallas_proj)
+    y = jax.nn.gelu(y)
+    return _dense(y, layer["mlp_out"], cfg.pallas_proj)
+
+
+def tinygpt_fwd(params: Params, tokens: jax.Array, cfg: TinyGPTConfig) -> jax.Array:
+    """(B, T) int32 tokens -> (B, T, vocab) logits."""
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][:t]
+    for li in range(cfg.n_layers):
+        layer = params["layers"][f"l{li}"]
+        x = x + _attention(_layer_norm(x, layer["ln1"]), layer, cfg)
+        x = x + _mlp(_layer_norm(x, layer["ln2"]), layer, cfg)
+    x = _layer_norm(x, params["final_ln"])
+    # LM head always goes through the L1 Pallas matmul.
+    logits = matmul(x.reshape(b * t, cfg.d_model), params["lm_head"]["w"])
+    logits = logits.reshape(b, t, cfg.vocab) + params["lm_head"]["b"]
+    return logits

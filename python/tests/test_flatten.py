@@ -1,0 +1,70 @@
+"""flatten.py invariants: pack/unpack is the identity, layout is stable."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import flatten
+
+
+def _tree(seed: int, shapes):
+    key = jax.random.key(seed)
+    keys = jax.random.split(key, len(shapes))
+    return {f"leaf{i}": jax.random.normal(k, s) for i, (k, s) in enumerate(zip(keys, shapes))}
+
+
+def test_pack_unpack_roundtrip():
+    tree = _tree(0, [(3, 4), (7,), (2, 2, 2)])
+    flat = flatten.pack(tree)
+    assert flat.shape == (12 + 7 + 8,)
+    back = flatten.unpack(flat, tree)
+    for k in tree:
+        np.testing.assert_array_equal(tree[k], back[k])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(
+        st.lists(st.integers(1, 8), min_size=1, max_size=3).map(tuple),
+        min_size=1,
+        max_size=6,
+    ),
+    st.integers(0, 100),
+)
+def test_pack_unpack_roundtrip_property(shapes, seed):
+    tree = _tree(seed, shapes)
+    back = flatten.unpack(flatten.pack(tree), tree)
+    for k in tree:
+        np.testing.assert_array_equal(tree[k], back[k])
+
+
+def test_nested_tree_roundtrip():
+    tree = {
+        "a": {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.zeros(3)},
+        "z": {"inner": {"x": jnp.ones((4, 1))}},
+    }
+    back = flatten.unpack(flatten.pack(tree), tree)
+    np.testing.assert_array_equal(back["a"]["w"], tree["a"]["w"])
+    np.testing.assert_array_equal(back["z"]["inner"]["x"], tree["z"]["inner"]["x"])
+
+
+def test_leaf_specs_offsets_are_contiguous():
+    tree = _tree(1, [(5, 5), (3,), (2, 6)])
+    specs = flatten.leaf_specs(tree)
+    assert specs[0]["offset"] == 0
+    for prev, cur in zip(specs, specs[1:]):
+        assert cur["offset"] == prev["offset"] + prev["size"]
+    assert sum(s["size"] for s in specs) == flatten.tree_size(tree)
+
+
+def test_tree_size_matches_pack_length():
+    tree = _tree(2, [(4, 4), (16,)])
+    assert flatten.tree_size(tree) == flatten.pack(tree).shape[0] == 32
+
+
+def test_pack_order_is_deterministic():
+    tree = _tree(3, [(2, 2), (3,)])
+    f1 = flatten.pack(tree)
+    f2 = flatten.pack(dict(reversed(list(tree.items()))))  # insertion order differs
+    np.testing.assert_array_equal(f1, f2)  # jax sorts dict keys

@@ -1,0 +1,173 @@
+"""L1 correctness gate: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes/dtypes; assert_allclose against ref.py. This is
+the CORE correctness signal for the kernels that end up inside every AOT
+artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    axpby,
+    make_hyper,
+    matmul,
+    matmul_raw,
+    scale,
+    sgd_momentum_update,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import axpby_ref, matmul_ref, sgd_momentum_ref
+
+DIMS = st.integers(min_value=1, max_value=300)
+SMALL_DIMS = st.integers(min_value=1, max_value=64)
+LENS = st.integers(min_value=1, max_value=300_000)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.key(key), shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    got = matmul_raw(x, w)
+    want = matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=SMALL_DIMS, k=SMALL_DIMS, n=SMALL_DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_bf16_inputs(m, k, n, seed):
+    x = _rand(seed, (m, k), jnp.bfloat16)
+    w = _rand(seed + 1, (k, n), jnp.bfloat16)
+    got = matmul_raw(x, w)
+    want = matmul_ref(x, w)
+    assert got.dtype == jnp.float32  # f32 accumulation
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 1), (128, 128, 128), (129, 127, 130), (7, 311, 5)])
+def test_matmul_edge_shapes(shape):
+    m, k, n = shape
+    x = _rand(0, (m, k))
+    w = _rand(1, (k, n))
+    np.testing.assert_allclose(matmul_raw(x, w), matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_vjp_matches_ref_grads():
+    x = _rand(2, (33, 47))
+    w = _rand(3, (47, 21))
+
+    def f(x, w):
+        return (matmul(x, w) ** 2).sum()
+
+    def f_ref(x, w):
+        return (matmul_ref(x, w) ** 2).sum()
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    gxr, gwr = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, gxr, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gw, gwr, rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_inside_jit_and_grad_composition():
+    # The exact composition aot.py lowers: jit(grad(f(pallas_matmul))).
+    x = _rand(4, (16, 8))
+    w = _rand(5, (8, 4))
+    g = jax.jit(jax.grad(lambda w: matmul(x, w).sum()))(w)
+    g_ref = jax.grad(lambda w: matmul_ref(x, w).sum())(w)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_footprint_under_budget():
+    # Default BlockSpec working set must fit the ~16 MiB VMEM budget
+    # claimed in DESIGN.md §Perf.
+    assert vmem_footprint_bytes() <= 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# sgd
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=LENS,
+    lr=st.floats(1e-4, 1.0),
+    mu=st.floats(0.0, 0.99),
+    wd=st.floats(0.0, 1e-2),
+    gs=st.floats(1e-3, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_matches_ref(n, lr, mu, wd, gs, seed):
+    p = _rand(seed, (n,))
+    v = _rand(seed + 1, (n,))
+    g = _rand(seed + 2, (n,))
+    h = make_hyper(lr, mu, wd, gs)
+    p1, v1 = sgd_momentum_update(p, v, g, h)
+    p2, v2 = sgd_momentum_ref(p, v, g, h)
+    np.testing.assert_allclose(p1, p2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5, atol=1e-6)
+
+
+def test_sgd_zero_momentum_is_plain_sgd():
+    p = _rand(7, (1000,))
+    g = _rand(8, (1000,))
+    h = make_hyper(0.1, momentum=0.0, weight_decay=0.0, grad_scale=1.0)
+    p1, _ = sgd_momentum_update(p, jnp.zeros(1000), g, h)
+    np.testing.assert_allclose(p1, p - 0.1 * g, rtol=1e-5, atol=1e-6)
+
+
+def test_sgd_grad_scale_folds_averaging():
+    # update with grad_scale=1/B on summed grads == update on averaged grads
+    p = _rand(9, (512,))
+    v = _rand(10, (512,))
+    g_sum = _rand(11, (512,)) * 256.0
+    h_scaled = make_hyper(0.05, grad_scale=1.0 / 256.0)
+    h_plain = make_hyper(0.05, grad_scale=1.0)
+    p1, v1 = sgd_momentum_update(p, v, g_sum, h_scaled)
+    p2, v2 = sgd_momentum_update(p, v, g_sum / 256.0, h_plain)
+    np.testing.assert_allclose(p1, p2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# axpby / scale
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=LENS,
+    a=st.floats(-10, 10),
+    b=st.floats(-10, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_axpby_matches_ref(n, a, b, seed):
+    x = _rand(seed, (n,))
+    y = _rand(seed + 1, (n,))
+    ab = jnp.array([a, b], jnp.float32)
+    np.testing.assert_allclose(axpby(ab, x, y), axpby_ref(ab, x, y), rtol=1e-5, atol=1e-5)
+
+
+def test_scale_is_multiplication():
+    x = _rand(12, (12345,))
+    np.testing.assert_allclose(scale(x, 0.25), x * 0.25, rtol=1e-6)
+
+
+def test_axpby_length_one():
+    x = jnp.array([3.0])
+    y = jnp.array([4.0])
+    out = axpby(jnp.array([2.0, 0.5]), x, y)
+    np.testing.assert_allclose(out, [8.0], rtol=1e-6)

@@ -1,0 +1,22 @@
+//! Bench: measured collective performance — all-reduce latency/bandwidth
+//! sweep over message sizes and world sizes, vendor path vs host relay
+//! (the measured basis for the paper's §V-B overhead discussion).
+//!
+//! Run: `cargo bench --bench collectives [-- --quick]`
+
+use kaitian::bench::microbench_collectives;
+
+fn main() -> kaitian::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    for world in [2, 4] {
+        let report = microbench_collectives(world, quick)?;
+        println!("== world = {world} ==\n{}\n", report.render());
+        std::fs::create_dir_all("results")?;
+        std::fs::write(
+            format!("results/collectives_w{world}.json"),
+            report.json.to_string_pretty(),
+        )?;
+    }
+    println!("wrote results/collectives_w{{2,4}}.json");
+    Ok(())
+}

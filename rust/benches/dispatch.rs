@@ -1,0 +1,77 @@
+//! Bench: dispatch-layer microcost + DDP bucket-size ablation.
+//!
+//! 1. The raw cost of one all-reduce through ProcessGroupKaiTian vs the
+//!    native vendor backend on the same homogeneous mesh (the per-op
+//!    "KAITIAN tax" our implementation actually imposes).
+//! 2. Gradient-sync time vs DDP bucket size on a heterogeneous cluster
+//!    (ablation of the bucketed-communication design choice).
+//!
+//! Run: `cargo bench --bench dispatch`
+
+use kaitian::bench::BenchRunner;
+use kaitian::collectives::ReduceOp;
+use kaitian::ddp::DdpEngine;
+use kaitian::device::parse_cluster;
+use kaitian::group::{build_cluster, GroupMode, RelayKind};
+use kaitian::metrics::MarkdownTable;
+
+fn time_all_reduce(mode: GroupMode, spec: &str, elems: usize, runner: &BenchRunner) -> f64 {
+    let devices = parse_cluster(spec).unwrap();
+    let handles = build_cluster(&devices, RelayKind::Inproc, mode).unwrap();
+    runner
+        .bench("all_reduce", || {
+            std::thread::scope(|s| {
+                for g in &handles.groups {
+                    s.spawn(move || {
+                        let mut buf = vec![1.0_f32; elems];
+                        g.all_reduce(&mut buf, ReduceOp::Sum).unwrap();
+                    });
+                }
+            });
+        })
+        .p50_s
+}
+
+fn main() -> kaitian::Result<()> {
+    let runner = BenchRunner::default();
+
+    println!("== dispatch-layer cost: native vs kaitian on homogeneous 2M ==\n");
+    let mut t1 = MarkdownTable::new(&["elems", "native", "kaitian", "overhead"]);
+    for elems in [1_000, 100_000, 1_000_000] {
+        let native = time_all_reduce(GroupMode::Native, "2M", elems, &runner);
+        let kaitian = time_all_reduce(GroupMode::Kaitian, "2M", elems, &runner);
+        t1.row(vec![
+            elems.to_string(),
+            kaitian::util::fmt_secs(native),
+            kaitian::util::fmt_secs(kaitian),
+            format!("{:+.1}%", (kaitian - native) / native * 100.0),
+        ]);
+    }
+    println!("{}", t1.render());
+
+    println!("== DDP bucket-size ablation: grad sync on 2G+2M (1M f32) ==\n");
+    let devices = parse_cluster("2G+2M")?;
+    let mut t2 = MarkdownTable::new(&["bucket", "sync p50", "buckets"]);
+    for bucket_bytes in [64 << 10, 256 << 10, 1 << 20, 4 << 20, 25 << 20] {
+        let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian)?;
+        let stat = runner.bench("sync", || {
+            std::thread::scope(|s| {
+                for g in &handles.groups {
+                    s.spawn(move || {
+                        let ddp = DdpEngine::new(g.as_ref(), bucket_bytes);
+                        let mut grads = vec![1.0_f32; 1_000_000];
+                        ddp.all_reduce_grads(&mut grads).unwrap();
+                    });
+                }
+            });
+        });
+        let n_buckets = (1_000_000_usize * 4).div_ceil(bucket_bytes);
+        t2.row(vec![
+            kaitian::util::fmt_bytes(bucket_bytes),
+            kaitian::util::fmt_secs(stat.p50_s),
+            n_buckets.to_string(),
+        ]);
+    }
+    println!("{}", t2.render());
+    Ok(())
+}

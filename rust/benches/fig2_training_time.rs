@@ -1,0 +1,63 @@
+//! Bench: regenerate the paper's Fig. 2 (training time across cluster
+//! configurations) in virtual time, and spot-check the model against two
+//! real shortened runs.
+//!
+//! Run: `cargo bench --bench fig2_training_time`
+
+use std::sync::Arc;
+
+use kaitian::bench::fig2;
+use kaitian::perfmodel::PerfModel;
+use kaitian::runtime::Engine;
+use kaitian::train::{train, TrainOptions};
+
+fn main() -> kaitian::Result<()> {
+    let model = PerfModel::paper_default();
+    let engine = Engine::load("artifacts").ok().map(Arc::new);
+    let grad_bytes = engine
+        .as_ref()
+        .and_then(|e| e.manifest().program("mobinet").ok().map(|p| p.param_count * 4))
+        .unwrap_or(933_544);
+
+    let report = fig2(&model, grad_bytes)?;
+    println!("{}\n", report.render());
+
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/fig2.json", report.json.to_string_pretty())?;
+    println!("wrote results/fig2.json");
+
+    // Real-mode spot check: the *measured* ordering on shortened real runs
+    // must match the model's ordering (2G slower than 2G+2M).
+    let Some(engine) = engine else {
+        println!("(no artifacts — skipping real-mode spot check)");
+        return Ok(());
+    };
+    println!("\nreal-mode spot check (mobinet_small, 10 steps, throttled):");
+    let mut results = Vec::new();
+    for spec in ["2G", "2G+2M"] {
+        let opts = TrainOptions {
+            preset: "mobinet_small".into(),
+            cluster: spec.into(),
+            global_batch: 32,
+            dataset_len: 2048,
+            epochs: 1,
+            steps_per_epoch: Some(10),
+            eval_batches: 0,
+            throttle: true,
+            profile: true,
+            group_mode: kaitian::group::GroupMode::Kaitian,
+            ..Default::default()
+        };
+        let r = train(engine.clone(), &opts)?;
+        println!("  {spec:>6}: wall {:.2}s", r.wall_s);
+        results.push((spec, r.wall_s));
+    }
+    assert!(
+        results[1].1 < results[0].1,
+        "measured: 2G+2M must beat 2G ({:.2}s vs {:.2}s)",
+        results[1].1,
+        results[0].1
+    );
+    println!("spot check OK: heterogeneous beats homogeneous in real mode too");
+    Ok(())
+}

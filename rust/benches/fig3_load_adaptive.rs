@@ -1,0 +1,70 @@
+//! Bench: regenerate the paper's Fig. 3 (impact of the load-adaptive
+//! mechanism) in virtual time, plus a real-mode strategy comparison.
+//!
+//! Run: `cargo bench --bench fig3_load_adaptive`
+
+use std::sync::Arc;
+
+use kaitian::bench::fig3;
+use kaitian::perfmodel::PerfModel;
+use kaitian::runtime::Engine;
+use kaitian::sched::Strategy;
+use kaitian::train::{train, TrainOptions};
+
+fn main() -> kaitian::Result<()> {
+    let model = PerfModel::paper_default();
+    let engine = Engine::load("artifacts").ok().map(Arc::new);
+    let grad_bytes = engine
+        .as_ref()
+        .and_then(|e| e.manifest().program("mobinet").ok().map(|p| p.param_count * 4))
+        .unwrap_or(933_544);
+
+    let report = fig3(&model, grad_bytes)?;
+    println!("{}\n", report.render());
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/fig3.json", report.json.to_string_pretty())?;
+    println!("wrote results/fig3.json");
+
+    // Real-mode: measure wall time per strategy on a throttled 1G+1M.
+    let Some(engine) = engine else {
+        println!("(no artifacts — skipping real-mode strategy sweep)");
+        return Ok(());
+    };
+    println!("\nreal-mode strategy sweep (mobinet_small, 12 steps, 1G+1M, B=24):");
+    // Warm the executable cache so compile time doesn't skew the sweep.
+    kaitian::runtime::ModelPrograms::new(engine.clone(), "mobinet_small")?
+        .warm(&[4, 8, 16])?;
+    let strategies = [
+        ("A: equal", Strategy::Equal),
+        ("B: adaptive", Strategy::Adaptive),
+        ("C: fixed 70/30", Strategy::Fixed(vec![0.7, 0.3])),
+    ];
+    let mut walls = Vec::new();
+    for (label, strategy) in strategies {
+        let opts = TrainOptions {
+            preset: "mobinet_small".into(),
+            cluster: "1G+1M".into(),
+            global_batch: 24,
+            dataset_len: 2048,
+            epochs: 1,
+            steps_per_epoch: Some(12),
+            eval_batches: 0,
+            throttle: true,
+            profile: true,
+            strategy,
+            ..Default::default()
+        };
+        let r = train(engine.clone(), &opts)?;
+        println!(
+            "  {label:>16}: wall {:.2}s alloc {:?}",
+            r.wall_s, r.allocation
+        );
+        walls.push(r.wall_s);
+    }
+    assert!(
+        walls[1] < walls[0] && walls[1] < walls[2],
+        "measured: adaptive must win: {walls:?}"
+    );
+    println!("real-mode OK: adaptive (B) fastest, as in the paper");
+    Ok(())
+}

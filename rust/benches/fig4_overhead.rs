@@ -1,0 +1,62 @@
+//! Bench: regenerate the paper's Fig. 4 (KAITIAN overhead in homogeneous
+//! settings) in virtual time, and measure our *actual* dispatch-layer
+//! overhead in real mode (expected far below the paper's 2.8–4.3 %,
+//! which includes PyTorch-extension costs — see EXPERIMENTS.md).
+//!
+//! Run: `cargo bench --bench fig4_overhead`
+
+use std::sync::Arc;
+
+use kaitian::bench::fig4;
+use kaitian::group::GroupMode;
+use kaitian::perfmodel::PerfModel;
+use kaitian::runtime::Engine;
+use kaitian::train::{train, TrainOptions};
+
+fn main() -> kaitian::Result<()> {
+    let model = PerfModel::paper_default();
+    let engine = Engine::load("artifacts").ok().map(Arc::new);
+    let grad_bytes = engine
+        .as_ref()
+        .and_then(|e| e.manifest().program("mobinet").ok().map(|p| p.param_count * 4))
+        .unwrap_or(933_544);
+
+    let report = fig4(&model, grad_bytes)?;
+    println!("{}\n", report.render());
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/fig4.json", report.json.to_string_pretty())?;
+    println!("wrote results/fig4.json");
+
+    let Some(engine) = engine else {
+        println!("(no artifacts — skipping real measurement)");
+        return Ok(());
+    };
+    println!("\nreal measured dispatch overhead (mobinet_small, 2M, 40 steps, no throttle):");
+    // Warm the executable cache so compile time doesn't pollute either side.
+    kaitian::runtime::ModelPrograms::new(engine.clone(), "mobinet_small")?.warm(&[4, 8, 16])?;
+    let mut walls = Vec::new();
+    for (label, mode) in [("native", GroupMode::Native), ("kaitian", GroupMode::Kaitian)] {
+        let opts = TrainOptions {
+            preset: "mobinet_small".into(),
+            cluster: "2M".into(),
+            group_mode: mode,
+            global_batch: 32,
+            dataset_len: 2048,
+            epochs: 1,
+            steps_per_epoch: Some(40),
+            eval_batches: 0,
+            throttle: false,
+            profile: false,
+            ..Default::default()
+        };
+        let r = train(engine.clone(), &opts)?;
+        println!("  {label:>8}: wall {:.3}s", r.wall_s);
+        walls.push(r.wall_s);
+    }
+    let overhead = (walls[1] - walls[0]) / walls[0];
+    println!(
+        "  measured kaitian-vs-native overhead: {:+.2}% (paper: +2.8–4.3% incl. PyTorch layer)",
+        overhead * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Vendor-library simulations: NCCL-sim (GPU groups) and CNCL-sim
+//! (MLU groups).
+//!
+//! Both run the same ring/tree algorithms over the in-process transport —
+//! exactly as the real libraries share algorithm families but differ in
+//! identity, tuning and the devices they bind to. The simulated vendor
+//! distinction matters to the system: `ProcessGroupKaiTian` must pick the
+//! right one per sub-group and must never hand an MLU buffer to NCCL
+//! (enforced by construction + tests).
+
+use crate::collectives::{CommStats, Communicator, ReduceOp};
+use crate::device::DeviceType;
+use crate::Result;
+
+use super::CollectiveBackend;
+
+/// Which vendor library this instance simulates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VendorKind {
+    /// NVIDIA collective library (GPU-sim groups).
+    Nccl,
+    /// Cambricon collective library (MLU-sim groups).
+    Cncl,
+}
+
+impl VendorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            VendorKind::Nccl => "nccl-sim",
+            VendorKind::Cncl => "cncl-sim",
+        }
+    }
+
+    /// The device type this vendor library is compatible with.
+    pub fn device_type(self) -> DeviceType {
+        match self {
+            VendorKind::Nccl => DeviceType::GpuSim,
+            VendorKind::Cncl => DeviceType::MluSim,
+        }
+    }
+
+    pub fn for_device(dtype: DeviceType) -> VendorKind {
+        match dtype {
+            DeviceType::GpuSim => VendorKind::Nccl,
+            DeviceType::MluSim => VendorKind::Cncl,
+        }
+    }
+}
+
+/// A vendor-library communicator bound to one homogeneous device group.
+pub struct VendorSim {
+    kind: VendorKind,
+    comm: Communicator,
+}
+
+impl VendorSim {
+    pub fn new(kind: VendorKind, comm: Communicator) -> Self {
+        Self { kind, comm }
+    }
+
+    pub fn kind(&self) -> VendorKind {
+        self.kind
+    }
+}
+
+impl CollectiveBackend for VendorSim {
+    fn name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.comm.world()
+    }
+
+    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<CommStats> {
+        self.comm.all_reduce(buf, op)
+    }
+
+    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<CommStats> {
+        self.comm.broadcast(buf, root)
+    }
+
+    fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, CommStats)> {
+        self.comm.all_gather(send)
+    }
+
+    fn barrier(&self) -> Result<CommStats> {
+        self.comm.barrier()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::InprocMesh;
+    use std::sync::Arc;
+
+    #[test]
+    fn vendor_identity() {
+        assert_eq!(VendorKind::Nccl.name(), "nccl-sim");
+        assert_eq!(VendorKind::Cncl.name(), "cncl-sim");
+        assert_eq!(VendorKind::for_device(DeviceType::GpuSim), VendorKind::Nccl);
+        assert_eq!(VendorKind::for_device(DeviceType::MluSim), VendorKind::Cncl);
+        assert_eq!(VendorKind::Nccl.device_type(), DeviceType::GpuSim);
+    }
+
+    #[test]
+    fn cncl_all_reduce_works_like_nccl() {
+        let eps = InprocMesh::new(2);
+        let sims: Vec<VendorSim> = eps
+            .into_iter()
+            .map(|e| VendorSim::new(VendorKind::Cncl, Communicator::new(Arc::new(e))))
+            .collect();
+        let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let hs: Vec<_> = sims
+                .iter()
+                .map(|b| {
+                    s.spawn(move || {
+                        let mut buf = vec![b.rank() as f32 + 1.0; 4];
+                        let stats = b.all_reduce(&mut buf, ReduceOp::Sum).unwrap();
+                        assert_eq!(stats.staged_bytes, 0, "vendor path must not stage");
+                        buf
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for o in out {
+            assert_eq!(o, vec![3.0; 4]);
+        }
+    }
+}

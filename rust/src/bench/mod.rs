@@ -1,0 +1,9 @@
+//! Benchmark infrastructure: a mini-criterion timing harness (the
+//! vendored crate set has no `criterion`) plus the paper-figure harness
+//! shared by `cargo bench` targets and `kaitian bench`.
+
+pub mod figures;
+pub mod runner;
+
+pub use figures::{fig2, fig3, fig4, microbench_collectives, FigureReport};
+pub use runner::{BenchRunner, BenchStat};

@@ -1,0 +1,96 @@
+//! Mini-criterion: warmup + timed iterations, robust summary statistics.
+
+use std::time::Instant;
+
+/// Summary of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStat {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStat {
+    pub fn line(&self) -> String {
+        format!(
+            "{:40} {:>12} {:>12} {:>12} ({} iters)",
+            self.name,
+            crate::util::fmt_secs(self.p50_s),
+            format!("±{}", crate::util::fmt_secs(self.std_s)),
+            format!("min {}", crate::util::fmt_secs(self.min_s)),
+            self.iters
+        )
+    }
+}
+
+/// Timing harness with fixed warmup/iteration counts.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchRunner {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        Self {
+            warmup: 3,
+            iters: 15,
+        }
+    }
+}
+
+impl BenchRunner {
+    pub fn quick() -> Self {
+        Self { warmup: 1, iters: 5 }
+    }
+
+    /// Time `f` (called once per iteration).
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStat {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / times.len() as f64;
+        BenchStat {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: times[0],
+            p50_s: times[times.len() / 2],
+            max_s: *times.last().unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let r = BenchRunner { warmup: 1, iters: 9 };
+        let stat = r.bench("spin", || {
+            let mut x = 0_u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert_eq!(stat.iters, 9);
+        assert!(stat.min_s <= stat.p50_s && stat.p50_s <= stat.max_s);
+        assert!(stat.mean_s > 0.0);
+        assert!(!stat.line().is_empty());
+    }
+}

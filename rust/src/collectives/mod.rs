@@ -1,0 +1,336 @@
+//! Collective communication algorithms over any [`Transport`].
+//!
+//! This is the algorithm substrate beneath the simulated vendor libraries
+//! (`backend::NcclSim` / `backend::CnclSim`) and the host-relay path
+//! (`backend::GlooHostRelay`): bandwidth-optimal ring all-reduce
+//! (reduce-scatter + all-gather), binomial-tree broadcast, ring
+//! all-gather, and a dissemination barrier.
+//!
+//! Every rank of a communicator must call the same sequence of collectives
+//! (SPMD); tags are derived from a per-communicator operation counter that
+//! stays aligned across ranks by construction.
+
+pub mod ops;
+pub mod ring;
+pub mod tree;
+
+pub use ops::ReduceOp;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::transport::Transport;
+use crate::Result;
+
+/// Accounting for one collective call (feeds metrics + Fig 4 overhead).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CommStats {
+    pub op: &'static str,
+    /// Payload bytes this rank pushed to the transport.
+    pub bytes_sent: u64,
+    /// Payload bytes this rank received.
+    pub bytes_recv: u64,
+    /// Wall-clock seconds spent inside the collective.
+    pub seconds: f64,
+    /// Number of point-to-point messages sent.
+    pub messages: u64,
+    /// Bytes staged through host memory (device→host + host→device), only
+    /// non-zero on the Gloo host-relay path.
+    pub staged_bytes: u64,
+    /// Seconds spent in D2H/H2D staging copies (host-relay path).
+    pub stage_seconds: f64,
+}
+
+impl CommStats {
+    pub fn merge(&mut self, other: &CommStats) {
+        self.bytes_sent += other.bytes_sent;
+        self.bytes_recv += other.bytes_recv;
+        self.seconds += other.seconds;
+        self.messages += other.messages;
+        self.staged_bytes += other.staged_bytes;
+        self.stage_seconds += other.stage_seconds;
+    }
+}
+
+/// A communicator: a transport endpoint + operation counter.
+pub struct Communicator {
+    transport: Arc<dyn Transport>,
+    op_counter: AtomicU64,
+}
+
+impl Communicator {
+    pub fn new(transport: Arc<dyn Transport>) -> Self {
+        Self {
+            transport,
+            op_counter: AtomicU64::new(0),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.transport.rank()
+    }
+
+    pub fn world(&self) -> usize {
+        self.transport.world()
+    }
+
+    pub fn transport_kind(&self) -> &'static str {
+        self.transport.kind()
+    }
+
+    /// Fresh tag namespace for one collective op: all ranks call the same
+    /// op sequence, so local counters agree. Low 16 bits left for chunks.
+    fn next_tag(&self) -> u64 {
+        (self.op_counter.fetch_add(1, Ordering::Relaxed) + 1) << 16
+    }
+
+    /// Sum/max/min-reduce `buf` across all ranks, in place (ring).
+    pub fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<CommStats> {
+        let t0 = Instant::now();
+        let tag = self.next_tag();
+        let mut stats = ring::ring_all_reduce(self.transport.as_ref(), buf, op, tag)?;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        stats.op = "all_reduce";
+        Ok(stats)
+    }
+
+    /// Broadcast `buf` from `root` to all ranks (binomial tree).
+    pub fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<CommStats> {
+        let t0 = Instant::now();
+        let tag = self.next_tag();
+        let mut stats = tree::broadcast(self.transport.as_ref(), buf, root, tag)?;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        stats.op = "broadcast";
+        Ok(stats)
+    }
+
+    /// Gather equal-length contributions from all ranks (ring); returns
+    /// the concatenation in rank order.
+    pub fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, CommStats)> {
+        let t0 = Instant::now();
+        let tag = self.next_tag();
+        let (out, mut stats) = ring::ring_all_gather(self.transport.as_ref(), send, tag)?;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        stats.op = "all_gather";
+        Ok((out, stats))
+    }
+
+    /// Reduce to `root` only (tree).
+    pub fn reduce(&self, buf: &mut [f32], op: ReduceOp, root: usize) -> Result<CommStats> {
+        let t0 = Instant::now();
+        let tag = self.next_tag();
+        let mut stats = tree::reduce(self.transport.as_ref(), buf, op, root, tag)?;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        stats.op = "reduce";
+        Ok(stats)
+    }
+
+    /// Dissemination barrier.
+    pub fn barrier(&self) -> Result<CommStats> {
+        let t0 = Instant::now();
+        let tag = self.next_tag();
+        let t = self.transport.as_ref();
+        let world = t.world();
+        let mut stats = CommStats {
+            op: "barrier",
+            ..Default::default()
+        };
+        // log2 rounds: at round k, send to (rank + 2^k) % world.
+        let mut k = 1;
+        while k < world {
+            let to = (t.rank() + k) % world;
+            let from = (t.rank() + world - k) % world;
+            t.send(to, tag | k as u64, vec![1])?;
+            t.recv(from, tag | k as u64)?;
+            stats.messages += 1;
+            stats.bytes_sent += 1;
+            stats.bytes_recv += 1;
+            k <<= 1;
+        }
+        stats.seconds = t0.elapsed().as_secs_f64();
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::InprocMesh;
+
+    fn communicators(world: usize) -> Vec<Communicator> {
+        InprocMesh::new(world)
+            .into_iter()
+            .map(|e| Communicator::new(Arc::new(e)))
+            .collect()
+    }
+
+    #[test]
+    fn all_reduce_sum_across_worlds() {
+        for world in [1, 2, 3, 4, 7] {
+            let comms = communicators(world);
+            let results: Vec<Vec<f32>> = std::thread::scope(|s| {
+                let handles: Vec<_> = comms
+                    .iter()
+                    .map(|c| {
+                        s.spawn(move || {
+                            let mut buf: Vec<f32> =
+                                (0..10).map(|i| (c.rank() * 10 + i) as f32).collect();
+                            c.all_reduce(&mut buf, ReduceOp::Sum).unwrap();
+                            buf
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            // expected: sum over ranks of (rank*10 + i)
+            let expect: Vec<f32> = (0..10)
+                .map(|i| (0..world).map(|r| (r * 10 + i) as f32).sum())
+                .collect();
+            for r in &results {
+                assert_eq!(r, &expect, "world={world}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_max_min() {
+        let comms = communicators(3);
+        let out: Vec<(Vec<f32>, Vec<f32>)> = std::thread::scope(|s| {
+            let hs: Vec<_> = comms
+                .iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut mx = vec![c.rank() as f32, -(c.rank() as f32)];
+                        c.all_reduce(&mut mx, ReduceOp::Max).unwrap();
+                        let mut mn = vec![c.rank() as f32, -(c.rank() as f32)];
+                        c.all_reduce(&mut mn, ReduceOp::Min).unwrap();
+                        (mx, mn)
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (mx, mn) in out {
+            assert_eq!(mx, vec![2.0, 0.0]);
+            assert_eq!(mn, vec![0.0, -2.0]);
+        }
+    }
+
+    #[test]
+    fn broadcast_from_each_root() {
+        for root in 0..3 {
+            let comms = communicators(3);
+            let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+                let hs: Vec<_> = comms
+                    .iter()
+                    .map(|c| {
+                        s.spawn(move || {
+                            let mut buf = if c.rank() == root {
+                                vec![1.0, 2.0, 3.0]
+                            } else {
+                                vec![0.0; 3]
+                            };
+                            c.broadcast(&mut buf, root).unwrap();
+                            buf
+                        })
+                    })
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for b in out {
+                assert_eq!(b, vec![1.0, 2.0, 3.0], "root={root}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_concatenates_in_rank_order() {
+        let comms = communicators(4);
+        let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let hs: Vec<_> = comms
+                .iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let send = vec![c.rank() as f32; 2];
+                        c.all_gather(&send).unwrap().0
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for b in out {
+            assert_eq!(b, vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn reduce_lands_on_root_only() {
+        let comms = communicators(4);
+        let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let hs: Vec<_> = comms
+                .iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut buf = vec![1.0_f32, c.rank() as f32];
+                        c.reduce(&mut buf, ReduceOp::Sum, 2).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(out[2], vec![4.0, 6.0]); // root has the sum
+    }
+
+    #[test]
+    fn barrier_completes() {
+        let comms = communicators(5);
+        std::thread::scope(|s| {
+            for c in &comms {
+                s.spawn(move || {
+                    for _ in 0..3 {
+                        c.barrier().unwrap();
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn stats_report_bytes() {
+        let comms = communicators(2);
+        let stats: Vec<CommStats> = std::thread::scope(|s| {
+            let hs: Vec<_> = comms
+                .iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut buf = vec![0.0_f32; 1000];
+                        c.all_reduce(&mut buf, ReduceOp::Sum).unwrap()
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for st in stats {
+            // ring: 2*(w-1)/w * 4000 bytes ≈ 4000 for w=2
+            assert!(st.bytes_sent >= 3900, "sent {}", st.bytes_sent);
+            assert!(st.seconds >= 0.0);
+            assert_eq!(st.op, "all_reduce");
+        }
+    }
+
+    #[test]
+    fn empty_buffer_is_noop() {
+        let comms = communicators(2);
+        std::thread::scope(|s| {
+            for c in &comms {
+                s.spawn(move || {
+                    let mut buf: Vec<f32> = vec![];
+                    c.all_reduce(&mut buf, ReduceOp::Sum).unwrap();
+                    assert!(buf.is_empty());
+                });
+            }
+        });
+    }
+}

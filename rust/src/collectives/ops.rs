@@ -1,0 +1,63 @@
+//! Reduction operators for collectives.
+
+/// Elementwise reduction applied across ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Min,
+}
+
+impl ReduceOp {
+    /// Fold `incoming` into `acc` elementwise.
+    #[inline]
+    pub fn fold(self, acc: &mut [f32], incoming: &[f32]) {
+        debug_assert_eq!(acc.len(), incoming.len());
+        match self {
+            ReduceOp::Sum => {
+                for (a, b) in acc.iter_mut().zip(incoming) {
+                    *a += *b;
+                }
+            }
+            ReduceOp::Max => {
+                for (a, b) in acc.iter_mut().zip(incoming) {
+                    *a = a.max(*b);
+                }
+            }
+            ReduceOp::Min => {
+                for (a, b) in acc.iter_mut().zip(incoming) {
+                    *a = a.min(*b);
+                }
+            }
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ReduceOp::Sum => "sum",
+            ReduceOp::Max => "max",
+            ReduceOp::Min => "min",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_sum() {
+        let mut a = vec![1.0, 2.0];
+        ReduceOp::Sum.fold(&mut a, &[10.0, 20.0]);
+        assert_eq!(a, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn fold_max_min() {
+        let mut a = vec![1.0, 5.0];
+        ReduceOp::Max.fold(&mut a, &[3.0, 2.0]);
+        assert_eq!(a, vec![3.0, 5.0]);
+        ReduceOp::Min.fold(&mut a, &[2.0, -1.0]);
+        assert_eq!(a, vec![2.0, -1.0]);
+    }
+}

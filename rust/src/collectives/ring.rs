@@ -1,0 +1,163 @@
+//! Ring algorithms: bandwidth-optimal all-reduce and all-gather.
+//!
+//! `ring_all_reduce` is the NCCL-style two-phase ring:
+//!   1. reduce-scatter — `w-1` steps; after them, rank r holds the fully
+//!      reduced segment `(r+1) % w`.
+//!   2. all-gather — `w-1` steps circulating the reduced segments.
+//!
+//! Each rank sends `2·(w-1)/w · n` elements total, which is the
+//! bandwidth lower bound for all-reduce.
+
+use crate::transport::{bytes_to_f32s, f32s_to_bytes, Transport};
+use crate::Result;
+
+use super::ops::ReduceOp;
+use super::CommStats;
+
+/// Split `n` into `w` contiguous segments; returns (start, end) of `s`.
+#[inline]
+fn segment(n: usize, w: usize, s: usize) -> (usize, usize) {
+    let s = s % w;
+    (s * n / w, (s + 1) * n / w)
+}
+
+/// In-place ring all-reduce of `buf` across all ranks of `t`.
+pub fn ring_all_reduce(
+    t: &dyn Transport,
+    buf: &mut [f32],
+    op: ReduceOp,
+    tag: u64,
+) -> Result<CommStats> {
+    let (rank, w) = (t.rank(), t.world());
+    let mut stats = CommStats::default();
+    if w == 1 || buf.is_empty() {
+        return Ok(stats);
+    }
+    let n = buf.len();
+    let next = (rank + 1) % w;
+    let prev = (rank + w - 1) % w;
+
+    // Phase 1: reduce-scatter. At step k we send the segment we just
+    // finished accumulating and fold the one arriving from prev.
+    for k in 0..w - 1 {
+        let (s0, s1) = segment(n, w, rank + w - k);
+        let payload = f32s_to_bytes(&buf[s0..s1]);
+        stats.bytes_sent += payload.len() as u64;
+        stats.messages += 1;
+        t.send(next, tag | k as u64, payload)?;
+
+        let (r0, r1) = segment(n, w, rank + w - k - 1);
+        let incoming = bytes_to_f32s(&t.recv(prev, tag | k as u64)?)?;
+        stats.bytes_recv += (incoming.len() * 4) as u64;
+        op.fold(&mut buf[r0..r1], &incoming);
+    }
+
+    // Phase 2: all-gather the reduced segments.
+    for k in 0..w - 1 {
+        let (s0, s1) = segment(n, w, rank + 1 + w - k);
+        let payload = f32s_to_bytes(&buf[s0..s1]);
+        stats.bytes_sent += payload.len() as u64;
+        stats.messages += 1;
+        t.send(next, tag | (64 + k) as u64, payload)?;
+
+        let (r0, r1) = segment(n, w, rank + w - k);
+        let incoming = bytes_to_f32s(&t.recv(prev, tag | (64 + k) as u64)?)?;
+        stats.bytes_recv += (incoming.len() * 4) as u64;
+        buf[r0..r1].copy_from_slice(&incoming);
+    }
+    Ok(stats)
+}
+
+/// Ring all-gather of equal-length `send` buffers; returns concatenation
+/// in rank order.
+pub fn ring_all_gather(
+    t: &dyn Transport,
+    send: &[f32],
+    tag: u64,
+) -> Result<(Vec<f32>, CommStats)> {
+    let (rank, w) = (t.rank(), t.world());
+    let mut stats = CommStats::default();
+    let chunk = send.len();
+    let mut out = vec![0.0_f32; chunk * w];
+    out[rank * chunk..(rank + 1) * chunk].copy_from_slice(send);
+    if w == 1 || chunk == 0 {
+        return Ok((out, stats));
+    }
+    let next = (rank + 1) % w;
+    let prev = (rank + w - 1) % w;
+    // At step k, pass along the chunk originally from (rank - k).
+    for k in 0..w - 1 {
+        let src = (rank + w - k) % w;
+        let payload = f32s_to_bytes(&out[src * chunk..(src + 1) * chunk]);
+        stats.bytes_sent += payload.len() as u64;
+        stats.messages += 1;
+        t.send(next, tag | k as u64, payload)?;
+
+        let dst = (rank + w - k - 1) % w;
+        let incoming = bytes_to_f32s(&t.recv(prev, tag | k as u64)?)?;
+        stats.bytes_recv += (incoming.len() * 4) as u64;
+        out[dst * chunk..(dst + 1) * chunk].copy_from_slice(&incoming);
+    }
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::InprocMesh;
+
+    #[test]
+    fn segments_cover_exactly() {
+        for n in [1_usize, 7, 100, 1024] {
+            for w in [1_usize, 2, 3, 8] {
+                let mut covered = 0;
+                for s in 0..w {
+                    let (a, b) = segment(n, w, s);
+                    assert!(a <= b && b <= n);
+                    covered += b - a;
+                }
+                assert_eq!(covered, n, "n={n} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_all_reduce_odd_sizes() {
+        // n not divisible by w exercises uneven segments.
+        for (w, n) in [(3, 7), (4, 10), (5, 3)] {
+            let eps = InprocMesh::new(w);
+            let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+                let hs: Vec<_> = eps
+                    .iter()
+                    .map(|e| {
+                        s.spawn(move || {
+                            let mut buf: Vec<f32> = (0..n).map(|i| (i + e.rank()) as f32).collect();
+                            ring_all_reduce(e, &mut buf, ReduceOp::Sum, 1 << 16).unwrap();
+                            buf
+                        })
+                    })
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let expect: Vec<f32> = (0..n)
+                .map(|i| (0..w).map(|r| (i + r) as f32).sum())
+                .collect();
+            for o in out {
+                assert_eq!(o, expect, "w={w} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_empty_chunks() {
+        let eps = InprocMesh::new(3);
+        std::thread::scope(|s| {
+            for e in &eps {
+                s.spawn(move || {
+                    let (out, _) = ring_all_gather(e, &[], 1 << 16).unwrap();
+                    assert!(out.is_empty());
+                });
+            }
+        });
+    }
+}

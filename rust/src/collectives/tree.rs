@@ -1,0 +1,158 @@
+//! Binomial-tree broadcast and reduce (latency-optimal for small payloads,
+//! log2(w) rounds).
+
+use crate::transport::{bytes_to_f32s, f32s_to_bytes, Transport};
+use crate::Result;
+
+use super::ops::ReduceOp;
+use super::CommStats;
+
+/// Virtual rank relative to root (root becomes 0).
+#[inline]
+fn vrank(rank: usize, root: usize, w: usize) -> usize {
+    (rank + w - root) % w
+}
+
+#[inline]
+fn unvrank(v: usize, root: usize, w: usize) -> usize {
+    (v + root) % w
+}
+
+/// Binomial-tree broadcast of `buf` from `root`, in place.
+pub fn broadcast(t: &dyn Transport, buf: &mut [f32], root: usize, tag: u64) -> Result<CommStats> {
+    let (rank, w) = (t.rank(), t.world());
+    let mut stats = CommStats::default();
+    if w == 1 {
+        return Ok(stats);
+    }
+    let v = vrank(rank, root, w);
+
+    // Receive once from parent (if not root).
+    if v != 0 {
+        // Parent clears the lowest set bit of v.
+        let parent = v & (v - 1);
+        let incoming = t.recv(unvrank(parent, root, w), tag)?;
+        let vals = bytes_to_f32s(&incoming)?;
+        stats.bytes_recv += (vals.len() * 4) as u64;
+        buf.copy_from_slice(&vals);
+    }
+    // Forward to children: v + 2^k for k above v's lowest set bit.
+    let lowbit = if v == 0 { w.next_power_of_two() } else { v & v.wrapping_neg() };
+    let mut k = 1;
+    while k < lowbit && k < w.next_power_of_two() {
+        let child = v + k;
+        if child < w {
+            let payload = f32s_to_bytes(buf);
+            stats.bytes_sent += payload.len() as u64;
+            stats.messages += 1;
+            t.send(unvrank(child, root, w), tag, payload)?;
+        }
+        k <<= 1;
+    }
+    Ok(stats)
+}
+
+/// Binomial-tree reduce into `root`'s `buf`. Non-root ranks' buffers are
+/// left with partial sums (callers treat them as scratch).
+pub fn reduce(
+    t: &dyn Transport,
+    buf: &mut [f32],
+    op: ReduceOp,
+    root: usize,
+    tag: u64,
+) -> Result<CommStats> {
+    let (rank, w) = (t.rank(), t.world());
+    let mut stats = CommStats::default();
+    if w == 1 {
+        return Ok(stats);
+    }
+    let v = vrank(rank, root, w);
+
+    // Mirror of broadcast: gather from children (low bits) then send to
+    // parent once.
+    let lowbit = if v == 0 { w.next_power_of_two() } else { v & v.wrapping_neg() };
+    let mut k = 1;
+    while k < lowbit && k < w.next_power_of_two() {
+        let child = v + k;
+        if child < w {
+            let incoming = t.recv(unvrank(child, root, w), tag | k as u64)?;
+            let vals = bytes_to_f32s(&incoming)?;
+            stats.bytes_recv += (vals.len() * 4) as u64;
+            op.fold(buf, &vals);
+        }
+        k <<= 1;
+    }
+    if v != 0 {
+        let parent = v & (v - 1);
+        let kbit = (v ^ parent) as u64; // the bit that distinguishes us
+        let payload = f32s_to_bytes(buf);
+        stats.bytes_sent += payload.len() as u64;
+        stats.messages += 1;
+        t.send(unvrank(parent, root, w), tag | kbit, payload)?;
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::InprocMesh;
+
+    #[test]
+    fn broadcast_all_world_sizes_and_roots() {
+        for w in [2_usize, 3, 4, 5, 8] {
+            for root in 0..w {
+                let eps = InprocMesh::new(w);
+                let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+                    let hs: Vec<_> = eps
+                        .iter()
+                        .map(|e| {
+                            s.spawn(move || {
+                                let mut buf = if e.rank() == root {
+                                    vec![3.5, -1.0, 0.25]
+                                } else {
+                                    vec![0.0; 3]
+                                };
+                                broadcast(e, &mut buf, root, 1 << 16).unwrap();
+                                buf
+                            })
+                        })
+                        .collect();
+                    hs.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+                for o in out {
+                    assert_eq!(o, vec![3.5, -1.0, 0.25], "w={w} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_all_world_sizes_and_roots() {
+        for w in [2_usize, 3, 5, 8] {
+            for root in 0..w {
+                let eps = InprocMesh::new(w);
+                let out: Vec<(usize, Vec<f32>)> = std::thread::scope(|s| {
+                    let hs: Vec<_> = eps
+                        .iter()
+                        .map(|e| {
+                            s.spawn(move || {
+                                let mut buf = vec![e.rank() as f32 + 1.0, 2.0];
+                                reduce(e, &mut buf, ReduceOp::Sum, root, 1 << 16).unwrap();
+                                (e.rank(), buf)
+                            })
+                        })
+                        .collect();
+                    hs.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+                let expect0: f32 = (1..=w).map(|r| r as f32).sum();
+                let expect1 = 2.0 * w as f32;
+                for (rank, buf) in out {
+                    if rank == root {
+                        assert_eq!(buf, vec![expect0, expect1], "w={w} root={root}");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Minimal CLI argument parser (std-only; no `clap` in the vendored set).
+//!
+//! Grammar: `kaitian <subcommand> [--key value | --key] [positional...]`.
+//! A `--key` followed by another `--...` token (or end of args) is a bare
+//! boolean flag with value `"true"`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (the subcommand), if any.
+    pub subcommand: Option<String>,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1).collect())
+    }
+
+    /// Parse from an explicit token list (tests).
+    pub fn parse_from(tokens: Vec<String>) -> Self {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if let Some(key) = tok.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare `--key`.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.flags.insert(key.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flag(key).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn usize_flag(&self, key: &str, default: usize) -> crate::Result<usize> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --cluster 2G+2M --epochs 5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.flag("cluster"), Some("2G+2M"));
+        assert_eq!(a.flag("epochs"), Some("5"));
+        assert_eq!(a.flag("verbose"), Some("true"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --fig=2 --out=results");
+        assert_eq!(a.flag("fig"), Some("2"));
+        assert_eq!(a.flag("out"), Some("results"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse("probe one two --k v three");
+        assert_eq!(a.subcommand.as_deref(), Some("probe"));
+        assert_eq!(a.positional, vec!["one", "two", "three"]);
+    }
+
+    #[test]
+    fn usize_flag_parses_and_errors() {
+        let a = parse("x --n 42 --bad abc");
+        assert_eq!(a.usize_flag("n", 0).unwrap(), 42);
+        assert_eq!(a.usize_flag("missing", 7).unwrap(), 7);
+        assert!(a.usize_flag("bad", 0).is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! Configuration: JSON config files + a from-scratch CLI argument parser
+//! (the vendored crate set has no `clap`).
+
+pub mod cli;
+
+pub use cli::Args;
+
+use crate::group::{GroupMode, RelayKind};
+use crate::sched::Strategy;
+use crate::train::TrainOptions;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Parse a training config from JSON text (all fields optional; defaults
+/// are the paper's setup — see [`TrainOptions::default`]).
+pub fn train_options_from_json(text: &str) -> Result<TrainOptions> {
+    let v = Json::parse(text)?;
+    let mut o = TrainOptions::default();
+    apply_json(&mut o, &v)?;
+    Ok(o)
+}
+
+fn apply_json(o: &mut TrainOptions, v: &Json) -> Result<()> {
+    if let Some(x) = v.get("preset").and_then(Json::as_str) {
+        o.preset = x.to_string();
+    }
+    if let Some(x) = v.get("cluster").and_then(Json::as_str) {
+        o.cluster = x.to_string();
+    }
+    if let Some(x) = v.get("group_mode").and_then(Json::as_str) {
+        o.group_mode = GroupMode::parse(x)?;
+    }
+    if let Some(x) = v.get("relay").and_then(Json::as_str) {
+        o.relay = RelayKind::parse(x)?;
+    }
+    if let Some(x) = v.get("strategy").and_then(Json::as_str) {
+        o.strategy = Strategy::parse(x)?;
+    }
+    if let Some(x) = v.get("global_batch").and_then(Json::as_usize) {
+        o.global_batch = x;
+    }
+    if let Some(x) = v.get("epochs").and_then(Json::as_usize) {
+        o.epochs = x;
+    }
+    if let Some(x) = v.get("steps_per_epoch").and_then(Json::as_usize) {
+        o.steps_per_epoch = Some(x);
+    }
+    if let Some(x) = v.get("dataset_len").and_then(Json::as_usize) {
+        o.dataset_len = x;
+    }
+    if let Some(x) = v.get("eval_batches").and_then(Json::as_usize) {
+        o.eval_batches = x;
+    }
+    if let Some(x) = v.get("lr").and_then(Json::as_f64) {
+        o.lr = x as f32;
+    }
+    if let Some(x) = v.get("momentum").and_then(Json::as_f64) {
+        o.momentum = x as f32;
+    }
+    if let Some(x) = v.get("weight_decay").and_then(Json::as_f64) {
+        o.weight_decay = x as f32;
+    }
+    if let Some(x) = v.get("lr_decay").and_then(Json::as_f64) {
+        o.lr_decay = x as f32;
+    }
+    if let Some(x) = v.get("lr_decay_epochs").and_then(Json::as_usize) {
+        o.lr_decay_epochs = x;
+    }
+    if let Some(x) = v.get("seed").and_then(Json::as_f64) {
+        o.seed = x as u64;
+    }
+    if let Some(x) = v.get("throttle").and_then(Json::as_bool) {
+        o.throttle = x;
+    }
+    if let Some(x) = v.get("profile").and_then(Json::as_bool) {
+        o.profile = x;
+    }
+    if let Some(x) = v.get("bucket_bytes").and_then(Json::as_usize) {
+        o.bucket_bytes = x;
+    }
+    if let Some(x) = v.get("log_every").and_then(Json::as_usize) {
+        o.log_every = x;
+    }
+    Ok(())
+}
+
+/// Apply CLI flag overrides (same keys as the JSON config) on top.
+pub fn apply_cli_overrides(o: &mut TrainOptions, args: &Args) -> Result<()> {
+    let mut pairs = Vec::new();
+    for key in [
+        "preset",
+        "cluster",
+        "group_mode",
+        "relay",
+        "strategy",
+        "global_batch",
+        "epochs",
+        "steps_per_epoch",
+        "dataset_len",
+        "eval_batches",
+        "lr",
+        "momentum",
+        "weight_decay",
+        "lr_decay",
+        "lr_decay_epochs",
+        "seed",
+        "bucket_bytes",
+        "log_every",
+    ] {
+        if let Some(v) = args.flag(key) {
+            // Numbers stay bare; strings get quoted.
+            let quoted = if v.parse::<f64>().is_ok() {
+                v.to_string()
+            } else {
+                format!("\"{v}\"")
+            };
+            pairs.push(format!("\"{key}\": {quoted}"));
+        }
+    }
+    for key in ["throttle", "profile"] {
+        if let Some(v) = args.flag(key) {
+            pairs.push(format!("\"{key}\": {v}"));
+        }
+    }
+    let json = format!("{{{}}}", pairs.join(","));
+    apply_json(o, &Json::parse(&json)?)
+}
+
+/// Load options: optional `--config file.json`, then CLI overrides.
+pub fn load_train_options(args: &Args) -> Result<TrainOptions> {
+    let mut o = if let Some(path) = args.flag("config") {
+        train_options_from_json(&std::fs::read_to_string(path)?)?
+    } else {
+        TrainOptions::default()
+    };
+    apply_cli_overrides(&mut o, args)?;
+    Ok(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_config_overrides_defaults() {
+        let o = train_options_from_json(
+            r#"{"preset": "tinygpt", "cluster": "1G+2M", "epochs": 3,
+                "strategy": "fixed:0.5,0.25,0.25", "lr": 0.02,
+                "group_mode": "flat-gloo", "throttle": false}"#,
+        )
+        .unwrap();
+        assert_eq!(o.preset, "tinygpt");
+        assert_eq!(o.cluster, "1G+2M");
+        assert_eq!(o.epochs, 3);
+        assert!((o.lr - 0.02).abs() < 1e-9);
+        assert_eq!(o.group_mode, GroupMode::FlatGloo);
+        assert!(!o.throttle);
+        assert_eq!(o.strategy.name(), "fixed");
+    }
+
+    #[test]
+    fn empty_json_keeps_defaults() {
+        let o = train_options_from_json("{}").unwrap();
+        assert_eq!(o.global_batch, 256);
+        assert_eq!(o.cluster, "2G+2M");
+    }
+
+    #[test]
+    fn cli_overrides_apply() {
+        let args = Args::parse_from(vec![
+            "train".into(),
+            "--cluster".into(),
+            "2M".into(),
+            "--epochs".into(),
+            "7".into(),
+            "--profile".into(),
+            "false".into(),
+        ]);
+        let mut o = TrainOptions::default();
+        apply_cli_overrides(&mut o, &args).unwrap();
+        assert_eq!(o.cluster, "2M");
+        assert_eq!(o.epochs, 7);
+        assert!(!o.profile);
+    }
+
+    #[test]
+    fn bad_strategy_in_json_is_error() {
+        assert!(train_options_from_json(r#"{"strategy": "bogus"}"#).is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! Synthetic CIFAR-10 stand-in: deterministic, learnable, index-addressed.
+//!
+//! Each of the 10 classes gets a prototype image built from a few seeded
+//! low-frequency sinusoids over the 32×32 grid (so classes are visually
+//! distinct patterns rather than pure noise); a sample is its class
+//! prototype plus i.i.d. Gaussian pixel noise. With the default
+//! `noise_std=0.6` a MobiNet-class CNN reaches high accuracy in a few
+//! epochs while the task remains non-trivial.
+
+use crate::util::Rng;
+
+/// Deterministic synthetic image-classification dataset.
+#[derive(Debug, Clone)]
+pub struct SynthCifar {
+    len: usize,
+    seed: u64,
+    /// Extra per-sample entropy; lets an eval split share the class
+    /// prototypes (the *task*) while drawing disjoint samples.
+    sample_salt: u64,
+    noise_std: f32,
+    num_classes: usize,
+    image_size: usize,
+    /// Per-class prototype images (class-major, row-major pixels).
+    prototypes: Vec<Vec<f32>>,
+}
+
+impl SynthCifar {
+    pub fn new(len: usize, seed: u64) -> Self {
+        Self::with_params(len, seed, 0.6, 10, 32)
+    }
+
+    /// An evaluation split of the *same task*: identical class prototypes,
+    /// disjoint sample noise (fresh `sample_salt`).
+    pub fn eval_split(&self, len: usize) -> Self {
+        let mut out = self.clone();
+        out.len = len;
+        out.sample_salt = self.sample_salt ^ 0x5EED_E7A1_u64;
+        out
+    }
+
+    pub fn with_params(
+        len: usize,
+        seed: u64,
+        noise_std: f32,
+        num_classes: usize,
+        image_size: usize,
+    ) -> Self {
+        let mut rng = Rng::new(seed ^ 0xC1FA_u64);
+        let pixels = image_size * image_size * 3;
+        let prototypes = (0..num_classes)
+            .map(|_| {
+                // 3 random sinusoid components per channel.
+                let mut img = vec![0.0_f32; pixels];
+                for c in 0..3 {
+                    for _ in 0..3 {
+                        let fx = 1.0 + rng.next_f32() * 3.0;
+                        let fy = 1.0 + rng.next_f32() * 3.0;
+                        let phase = rng.next_f32() * std::f32::consts::TAU;
+                        let amp = 0.4 + rng.next_f32() * 0.6;
+                        for yy in 0..image_size {
+                            for xx in 0..image_size {
+                                let v = amp
+                                    * ((fx * xx as f32 / image_size as f32
+                                        + fy * yy as f32 / image_size as f32)
+                                        * std::f32::consts::TAU
+                                        + phase)
+                                        .sin();
+                                img[(yy * image_size + xx) * 3 + c] += v;
+                            }
+                        }
+                    }
+                }
+                img
+            })
+            .collect();
+        Self {
+            len,
+            seed,
+            sample_salt: 0,
+            noise_std,
+            num_classes,
+            image_size,
+            prototypes,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn image_size(&self) -> usize {
+        self.image_size
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Deterministic (image, label) for dataset index `idx`.
+    pub fn sample(&self, idx: usize) -> (Vec<f32>, i32) {
+        assert!(idx < self.len, "index {idx} out of range {}", self.len);
+        let mut rng = Rng::new(
+            self.seed ^ self.sample_salt ^ (idx as u64).wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        let label = (idx % self.num_classes) as i32; // balanced classes
+        let proto = &self.prototypes[label as usize];
+        let img = proto
+            .iter()
+            .map(|&p| p + rng.normal_f32(0.0, self.noise_std))
+            .collect();
+        (img, label)
+    }
+
+    /// Gather samples for a set of indices.
+    pub fn gather(&self, indices: &[usize]) -> Vec<(Vec<f32>, i32)> {
+        indices.iter().map(|&i| self.sample(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_index() {
+        let d = SynthCifar::new(100, 7);
+        let (a, la) = d.sample(13);
+        let (b, lb) = d.sample(13);
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+        let (c, _) = d.sample(14);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn labels_are_balanced() {
+        let d = SynthCifar::new(1000, 0);
+        let mut counts = [0_usize; 10];
+        for i in 0..1000 {
+            counts[d.sample(i).1 as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 100), "{counts:?}");
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // Distance to own prototype must be far smaller than to others
+        // (sanity on learnability).
+        let d = SynthCifar::new(100, 3);
+        let (img, label) = d.sample(5);
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>()
+        };
+        let own = dist(&img, &d.prototypes[label as usize]);
+        for (c, proto) in d.prototypes.iter().enumerate() {
+            if c != label as usize {
+                let other = dist(&img, proto);
+                assert!(own < other, "class {c}: own {own} !< other {other}");
+            }
+        }
+    }
+
+    #[test]
+    fn image_values_are_bounded() {
+        let d = SynthCifar::new(10, 1);
+        let (img, _) = d.sample(0);
+        assert_eq!(img.len(), 32 * 32 * 3);
+        assert!(img.iter().all(|v| v.is_finite() && v.abs() < 10.0));
+    }
+
+    #[test]
+    fn eval_split_shares_task_but_not_samples() {
+        let train = SynthCifar::new(100, 5);
+        let eval = train.eval_split(50);
+        // Same prototypes (same task)...
+        assert_eq!(train.prototypes, eval.prototypes);
+        // ...but different noise draws for the same index.
+        assert_ne!(train.sample(3).0, eval.sample(3).0);
+        // Labels still balanced the same way.
+        assert_eq!(train.sample(3).1, eval.sample(3).1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_panics() {
+        SynthCifar::new(5, 0).sample(5);
+    }
+}

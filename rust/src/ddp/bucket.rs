@@ -1,0 +1,95 @@
+//! Gradient bucketing: split a flat buffer into fixed-byte-size ranges.
+//!
+//! PyTorch DDP all-reduces gradients in ~25 MiB buckets as backward
+//! produces them; we reproduce the bucketed communication structure (the
+//! basis of the bucket-size ablation bench and future overlap work).
+
+use std::ops::Range;
+
+/// Splits flat f32 buffers into bucket index ranges.
+#[derive(Debug, Clone, Copy)]
+pub struct Bucketizer {
+    bucket_bytes: usize,
+}
+
+impl Bucketizer {
+    /// `bucket_bytes` is clamped to at least one element (4 bytes).
+    pub fn new(bucket_bytes: usize) -> Self {
+        Self {
+            bucket_bytes: bucket_bytes.max(4),
+        }
+    }
+
+    pub fn bucket_elems(&self) -> usize {
+        self.bucket_bytes / 4
+    }
+
+    /// Contiguous element ranges covering `len` elements.
+    pub fn ranges(&self, len: usize) -> Vec<Range<usize>> {
+        let per = self.bucket_elems().max(1);
+        let mut out = Vec::with_capacity(len.div_ceil(per));
+        let mut start = 0;
+        while start < len {
+            let end = (start + per).min(len);
+            out.push(start..end);
+            start = end;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_default;
+    use crate::util::Rng;
+
+    #[test]
+    fn exact_multiple() {
+        let b = Bucketizer::new(16); // 4 elems
+        assert_eq!(b.ranges(8), vec![0..4, 4..8]);
+    }
+
+    #[test]
+    fn remainder_bucket() {
+        let b = Bucketizer::new(16);
+        assert_eq!(b.ranges(10), vec![0..4, 4..8, 8..10]);
+    }
+
+    #[test]
+    fn empty_buffer_no_buckets() {
+        let b = Bucketizer::new(1024);
+        assert!(b.ranges(0).is_empty());
+    }
+
+    #[test]
+    fn tiny_bucket_clamps_to_one_element() {
+        let b = Bucketizer::new(1);
+        assert_eq!(b.ranges(3), vec![0..1, 1..2, 2..3]);
+    }
+
+    #[test]
+    fn prop_ranges_partition_exactly() {
+        check_default(
+            "bucket-partition",
+            |rng: &mut Rng| (rng.below(100_000), 4 * (1 + rng.below(10_000))),
+            |(len, bytes)| {
+                let ranges = Bucketizer::new(*bytes).ranges(*len);
+                let mut expected_start = 0;
+                for r in &ranges {
+                    if r.start != expected_start {
+                        return Err(format!("gap at {}", r.start));
+                    }
+                    if r.end <= r.start {
+                        return Err("empty range".into());
+                    }
+                    expected_start = r.end;
+                }
+                if expected_start != *len {
+                    return Err(format!("covers {expected_start}, want {len}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,120 @@
+//! Simulated device-memory (VRAM) accounting.
+//!
+//! Training state, gradient buffers and batch tensors are charged against
+//! the device's budget; exceeding it is a simulated OOM. Used by the
+//! trainer to validate configs (e.g. whether a batch bucket fits a
+//! GTX-1080-class 8 GiB budget) and by failure-injection tests.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::bail;
+
+use crate::Result;
+
+/// Thread-safe VRAM budget tracker for one simulated device.
+#[derive(Debug)]
+pub struct MemoryTracker {
+    capacity: usize,
+    used: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl MemoryTracker {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            used: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn used(&self) -> usize {
+        self.used.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Charge `bytes`; errors (simulated OOM) if the budget is exceeded.
+    pub fn alloc(&self, bytes: usize) -> Result<()> {
+        let prev = self.used.fetch_add(bytes, Ordering::Relaxed);
+        let now = prev + bytes;
+        if now > self.capacity {
+            self.used.fetch_sub(bytes, Ordering::Relaxed);
+            bail!(
+                "simulated device OOM: requested {bytes} B with {prev} B in use \
+                 (capacity {} B)",
+                self.capacity
+            );
+        }
+        self.peak.fetch_max(now, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Release `bytes`.
+    pub fn free(&self, bytes: usize) {
+        let prev = self.used.fetch_sub(bytes, Ordering::Relaxed);
+        debug_assert!(prev >= bytes, "free({bytes}) with only {prev} in use");
+    }
+
+    /// RAII allocation guard.
+    pub fn alloc_guard(&self, bytes: usize) -> Result<AllocGuard<'_>> {
+        self.alloc(bytes)?;
+        Ok(AllocGuard { mem: self, bytes })
+    }
+}
+
+/// Frees its allocation on drop.
+pub struct AllocGuard<'a> {
+    mem: &'a MemoryTracker,
+    bytes: usize,
+}
+
+impl Drop for AllocGuard<'_> {
+    fn drop(&mut self) {
+        self.mem.free(self.bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_tracks_usage() {
+        let m = MemoryTracker::new(1000);
+        m.alloc(400).unwrap();
+        assert_eq!(m.used(), 400);
+        m.alloc(500).unwrap();
+        assert_eq!(m.used(), 900);
+        m.free(400);
+        assert_eq!(m.used(), 500);
+        assert_eq!(m.peak(), 900);
+    }
+
+    #[test]
+    fn oom_is_error_and_rolls_back() {
+        let m = MemoryTracker::new(100);
+        m.alloc(80).unwrap();
+        let err = m.alloc(30).unwrap_err();
+        assert!(err.to_string().contains("OOM"));
+        assert_eq!(m.used(), 80, "failed alloc must not leak");
+        m.alloc(20).unwrap(); // exactly full is fine
+    }
+
+    #[test]
+    fn guard_frees_on_drop() {
+        let m = MemoryTracker::new(100);
+        {
+            let _g = m.alloc_guard(60).unwrap();
+            assert_eq!(m.used(), 60);
+        }
+        assert_eq!(m.used(), 0);
+        assert_eq!(m.peak(), 60);
+    }
+}

@@ -1,0 +1,197 @@
+//! Simulated heterogeneous accelerator substrate.
+//!
+//! The paper's testbed (2× NVIDIA GTX 1080 + 2× Cambricon MLU370-S4) is not
+//! available here, so devices are simulated (DESIGN.md §3): every rank
+//! executes the *same real computation* on the CPU PJRT client, while the
+//! device layer imposes the paper-calibrated *relative* performance
+//! characteristics:
+//!
+//! * [`speed::SpeedModel`] — per-type compute-time model
+//!   `t(b) = t0 + c·b`, calibrated so the homogeneous 2G/2M Fig-2 numbers
+//!   (236.4 s / 166.3 s over 50 epochs) are reproduced, and a relative
+//!   throttle for real-mode runs (the slower device type sleeps the
+//!   difference — heterogeneity is relative, machine-independent).
+//! * [`memory::MemoryTracker`] — VRAM accounting with OOM errors
+//!   (8 GiB GTX-1080-class vs 16 GiB MLU370-class budgets).
+
+pub mod memory;
+pub mod speed;
+
+pub use memory::MemoryTracker;
+pub use speed::SpeedModel;
+
+use std::fmt;
+
+/// The accelerator families of the paper's testbed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DeviceType {
+    /// NVIDIA-GPU-class simulated device (vendor lib: NCCL-sim).
+    GpuSim,
+    /// Cambricon-MLU-class simulated device (vendor lib: CNCL-sim).
+    MluSim,
+}
+
+impl DeviceType {
+    /// Vendor collective library this device type uses intra-group.
+    pub fn vendor_lib(self) -> &'static str {
+        match self {
+            DeviceType::GpuSim => "nccl-sim",
+            DeviceType::MluSim => "cncl-sim",
+        }
+    }
+
+    /// Single-letter tag used in config names ("2G+2M").
+    pub fn letter(self) -> char {
+        match self {
+            DeviceType::GpuSim => 'G',
+            DeviceType::MluSim => 'M',
+        }
+    }
+
+    /// Default VRAM budget (paper testbed: GTX 1080 8 GB, MLU370-S4 16 GB).
+    pub fn default_vram(self) -> usize {
+        match self {
+            DeviceType::GpuSim => 8 << 30,
+            DeviceType::MluSim => 16 << 30,
+        }
+    }
+
+    pub fn parse(c: char) -> Option<DeviceType> {
+        match c.to_ascii_uppercase() {
+            'G' => Some(DeviceType::GpuSim),
+            'M' => Some(DeviceType::MluSim),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for DeviceType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DeviceType::GpuSim => write!(f, "gpu-sim"),
+            DeviceType::MluSim => write!(f, "mlu-sim"),
+        }
+    }
+}
+
+/// One simulated device in the cluster.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    /// Global rank of the worker bound to this device.
+    pub rank: usize,
+    pub dtype: DeviceType,
+    /// VRAM capacity in bytes.
+    pub vram: usize,
+}
+
+impl DeviceSpec {
+    pub fn new(rank: usize, dtype: DeviceType) -> Self {
+        Self {
+            rank,
+            dtype,
+            vram: dtype.default_vram(),
+        }
+    }
+}
+
+/// Parse a cluster spec like "2G+2M", "1G+1M" or "GGMM" into device specs.
+///
+/// `"<n>G"` adds n GPU-sim devices, `"<n>M"` n MLU-sim devices; groups
+/// joined with `+`. Bare letters are also accepted.
+pub fn parse_cluster(spec: &str) -> crate::Result<Vec<DeviceSpec>> {
+    let mut out = Vec::new();
+    for part in spec.split('+') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (count_str, letters): (String, String) = part.chars().partition(|c| c.is_ascii_digit());
+        if letters.is_empty() {
+            anyhow::bail!("cluster spec part {part:?} has no device letter");
+        }
+        let count: usize = if count_str.is_empty() {
+            1
+        } else {
+            count_str.parse()?
+        };
+        for letter in letters.chars() {
+            let dtype = DeviceType::parse(letter)
+                .ok_or_else(|| anyhow::anyhow!("unknown device letter {letter:?} in {spec:?}"))?;
+            for _ in 0..count {
+                out.push(DeviceSpec::new(out.len(), dtype));
+            }
+        }
+    }
+    if out.is_empty() {
+        anyhow::bail!("empty cluster spec {spec:?}");
+    }
+    Ok(out)
+}
+
+/// Canonical name of a cluster ("2G+2M") from its specs.
+pub fn cluster_name(devices: &[DeviceSpec]) -> String {
+    let g = devices
+        .iter()
+        .filter(|d| d.dtype == DeviceType::GpuSim)
+        .count();
+    let m = devices
+        .iter()
+        .filter(|d| d.dtype == DeviceType::MluSim)
+        .count();
+    match (g, m) {
+        (0, m) => format!("{m}M"),
+        (g, 0) => format!("{g}G"),
+        (g, m) => format!("{g}G+{m}M"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_standard_configs() {
+        let d = parse_cluster("2G+2M").unwrap();
+        assert_eq!(d.len(), 4);
+        assert_eq!(d[0].dtype, DeviceType::GpuSim);
+        assert_eq!(d[3].dtype, DeviceType::MluSim);
+        assert_eq!(cluster_name(&d), "2G+2M");
+
+        let d = parse_cluster("1G+2M").unwrap();
+        assert_eq!(cluster_name(&d), "1G+2M");
+
+        let d = parse_cluster("GGMM").unwrap();
+        assert_eq!(cluster_name(&d), "2G+2M");
+
+        let d = parse_cluster("2M").unwrap();
+        assert_eq!(cluster_name(&d), "2M");
+        assert!(d.iter().all(|x| x.dtype == DeviceType::MluSim));
+    }
+
+    #[test]
+    fn ranks_are_sequential() {
+        let d = parse_cluster("2G+3M").unwrap();
+        for (i, dev) in d.iter().enumerate() {
+            assert_eq!(dev.rank, i);
+        }
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!(parse_cluster("").is_err());
+        assert!(parse_cluster("2X").is_err());
+        assert!(parse_cluster("3").is_err());
+    }
+
+    #[test]
+    fn vram_defaults_match_testbed() {
+        assert_eq!(DeviceType::GpuSim.default_vram(), 8 << 30);
+        assert_eq!(DeviceType::MluSim.default_vram(), 16 << 30);
+    }
+
+    #[test]
+    fn vendor_lib_mapping() {
+        assert_eq!(DeviceType::GpuSim.vendor_lib(), "nccl-sim");
+        assert_eq!(DeviceType::MluSim.vendor_lib(), "cncl-sim");
+    }
+}

@@ -1,0 +1,146 @@
+//! Per-device-type compute-speed model.
+//!
+//! Calibration (DESIGN.md §3): the paper's homogeneous Fig-2 runs give the
+//! only absolute anchors we have —
+//!
+//! * 2×GTX1080 (NCCL): 236.4 s / 50 epochs / 196 steps/epoch = 24.12 ms
+//!   per step at per-device batch 128;
+//! * 2×MLU370 (CNCL): 166.3 s → 16.97 ms per step at batch 128.
+//!
+//! Subtracting a ~0.3 ms intra-group ring all-reduce (≈2.7 MiB gradients
+//! over a PCIe-class link) leaves the per-device compute model
+//! `t(b) = t0 + c·b` used by the virtual-time simulator (`simnet`) and, in
+//! relative form, by the real-mode throttle.
+//!
+//! The *relative* speed (MLU ≈ 1.42× GPU throughput on this workload) is
+//! what the paper's load-adaptive mechanism keys on; absolute numbers are
+//! calibration constants checked by `benches`/EXPERIMENTS.md.
+
+use super::DeviceType;
+
+/// Affine per-sample compute model for one device type (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeCoeffs {
+    /// Fixed per-step overhead (kernel launches, sync) in seconds.
+    pub t0: f64,
+    /// Per-sample seconds.
+    pub per_sample: f64,
+}
+
+impl ComputeCoeffs {
+    pub fn step_time(&self, batch: usize) -> f64 {
+        self.t0 + self.per_sample * batch as f64
+    }
+}
+
+/// Speed model over all device types.
+#[derive(Debug, Clone, Copy)]
+pub struct SpeedModel {
+    pub gpu: ComputeCoeffs,
+    pub mlu: ComputeCoeffs,
+}
+
+impl SpeedModel {
+    /// Paper-calibrated defaults (see module docs for the derivation).
+    pub fn paper_default() -> Self {
+        // GPU: 24.12 ms step at b=128 minus ~0.36 ms comm ⇒ compute 23.76 ms
+        //   t0 = 2.0 ms, c = (23.76-2.0)/128 = 0.170 ms/sample
+        // MLU: 16.97 ms step at b=128 minus ~0.45 ms comm ⇒ compute 16.52 ms
+        //   t0 = 1.5 ms, c = (16.52-1.5)/128 = 0.1174 ms/sample
+        Self {
+            gpu: ComputeCoeffs {
+                t0: 2.0e-3,
+                per_sample: 0.170e-3,
+            },
+            mlu: ComputeCoeffs {
+                t0: 1.5e-3,
+                per_sample: 0.1174e-3,
+            },
+        }
+    }
+
+    pub fn coeffs(&self, dtype: DeviceType) -> ComputeCoeffs {
+        match dtype {
+            DeviceType::GpuSim => self.gpu,
+            DeviceType::MluSim => self.mlu,
+        }
+    }
+
+    /// Modeled compute time for one step of `batch` samples (seconds).
+    pub fn step_time(&self, dtype: DeviceType, batch: usize) -> f64 {
+        self.coeffs(dtype).step_time(batch)
+    }
+
+    /// Relative *throughput* of `dtype` vs the fastest type at a reference
+    /// batch size — the paper's benchmark score
+    /// (`score_i = time_fastest / time_i`, fastest = 1.0).
+    pub fn paper_score(&self, dtype: DeviceType, ref_batch: usize) -> f64 {
+        let t_this = self.step_time(dtype, ref_batch);
+        let t_best = [DeviceType::GpuSim, DeviceType::MluSim]
+            .iter()
+            .map(|d| self.step_time(*d, ref_batch))
+            .fold(f64::INFINITY, f64::min);
+        t_best / t_this
+    }
+
+    /// Real-mode throttle factor: how much *longer* a device of `dtype`
+    /// must take than the fastest type for the same work. The worker
+    /// sleeps `measured * (factor - 1)` after each real compute step, so
+    /// imposed heterogeneity is purely relative (machine-independent).
+    pub fn throttle_factor(&self, dtype: DeviceType, ref_batch: usize) -> f64 {
+        1.0 / self.paper_score(dtype, ref_batch)
+    }
+}
+
+impl Default for SpeedModel {
+    fn default() -> Self {
+        Self::paper_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_reproduces_paper_step_times() {
+        let m = SpeedModel::paper_default();
+        // Per-step compute at b=128 should be within 3% of the derived
+        // 23.76 ms (GPU) / 16.52 ms (MLU).
+        let g = m.step_time(DeviceType::GpuSim, 128);
+        let c = m.step_time(DeviceType::MluSim, 128);
+        assert!((g - 23.76e-3).abs() / 23.76e-3 < 0.03, "gpu {g}");
+        assert!((c - 16.52e-3).abs() / 16.52e-3 < 0.03, "mlu {c}");
+    }
+
+    #[test]
+    fn mlu_is_faster_and_scores_reflect_it() {
+        let m = SpeedModel::paper_default();
+        assert!(
+            m.step_time(DeviceType::MluSim, 128) < m.step_time(DeviceType::GpuSim, 128)
+        );
+        let s_mlu = m.paper_score(DeviceType::MluSim, 128);
+        let s_gpu = m.paper_score(DeviceType::GpuSim, 128);
+        assert!((s_mlu - 1.0).abs() < 1e-9, "fastest must score 1.0");
+        // GPU ≈ 0.70 of MLU throughput on this workload.
+        assert!((0.6..0.8).contains(&s_gpu), "gpu score {s_gpu}");
+    }
+
+    #[test]
+    fn throttle_factor_is_inverse_score() {
+        let m = SpeedModel::paper_default();
+        let f = m.throttle_factor(DeviceType::GpuSim, 128);
+        let s = m.paper_score(DeviceType::GpuSim, 128);
+        assert!((f * s - 1.0).abs() < 1e-9);
+        assert!((m.throttle_factor(DeviceType::MluSim, 128) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_time_is_affine_in_batch() {
+        let m = SpeedModel::paper_default();
+        let t64 = m.step_time(DeviceType::GpuSim, 64);
+        let t128 = m.step_time(DeviceType::GpuSim, 128);
+        let t192 = m.step_time(DeviceType::GpuSim, 192);
+        assert!(((t192 - t128) - (t128 - t64)).abs() < 1e-12);
+    }
+}

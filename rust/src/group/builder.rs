@@ -1,0 +1,344 @@
+//! Cluster construction: build every rank's process group for an
+//! in-process simulated cluster.
+//!
+//! Communicator layout for a heterogeneous cluster (e.g. 2G+2M):
+//!
+//! ```text
+//! vendor meshes (inproc):   [G0 G1]          [M0 M1]
+//!                            └─ nccl-sim       └─ cncl-sim
+//! relay mesh (tcp/inproc):  [G0      M0]   ← leaders only, gloo-relay
+//! control mesh (inproc):    [G0 G1 M0 M1]  ← barriers/metadata
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::ensure;
+
+use crate::backend::{CollectiveBackend, Fp16Relay, GlooHostRelay, VendorKind, VendorSim};
+use crate::collectives::Communicator;
+use crate::device::DeviceSpec;
+use crate::transport::{InprocMesh, TcpMesh, Transport};
+use crate::Result;
+
+use super::flat::ProcessGroupFlatGloo;
+use super::kaitian::ProcessGroupKaiTian;
+use super::native::ProcessGroupNative;
+use super::topology::Topology;
+use super::ProcessGroup;
+
+/// Transport used for the inter-group (host) hop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RelayKind {
+    /// Real TCP sockets over loopback — the honest syscall path (default
+    /// for training runs).
+    Tcp,
+    /// In-process mailboxes — fast, for unit tests.
+    Inproc,
+    /// TCP with fp16 wire compression on the relay (extension; paper §V-B
+    /// overhead mitigation).
+    TcpFp16,
+    /// In-process with fp16 compression (tests/benches).
+    InprocFp16,
+}
+
+impl RelayKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "tcp" => Ok(RelayKind::Tcp),
+            "inproc" => Ok(RelayKind::Inproc),
+            "tcp-fp16" => Ok(RelayKind::TcpFp16),
+            "inproc-fp16" => Ok(RelayKind::InprocFp16),
+            _ => anyhow::bail!("unknown relay kind {s:?} (tcp|inproc|tcp-fp16|inproc-fp16)"),
+        }
+    }
+
+    fn compressed(self) -> bool {
+        matches!(self, RelayKind::TcpFp16 | RelayKind::InprocFp16)
+    }
+}
+
+/// Which process-group implementation to build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupMode {
+    /// The paper's system (hybrid dispatch).
+    Kaitian,
+    /// Vendor library directly, no dispatch layer (Fig-4 baseline;
+    /// homogeneous clusters only).
+    Native,
+    /// Everything through the host relay (ablation baseline).
+    FlatGloo,
+}
+
+impl GroupMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "kaitian" => Ok(GroupMode::Kaitian),
+            "native" => Ok(GroupMode::Native),
+            "flat-gloo" | "flatgloo" => Ok(GroupMode::FlatGloo),
+            _ => anyhow::bail!("unknown group mode {s:?} (kaitian|native|flat-gloo)"),
+        }
+    }
+}
+
+/// All ranks' process groups plus the shared topology.
+pub struct ClusterHandles {
+    pub topo: Arc<Topology>,
+    /// One process group per global rank (hand each to its worker thread).
+    pub groups: Vec<Box<dyn ProcessGroup>>,
+}
+
+fn relay_endpoints(kind: RelayKind, world: usize) -> Result<Vec<Arc<dyn Transport>>> {
+    Ok(match kind {
+        RelayKind::Inproc | RelayKind::InprocFp16 => InprocMesh::new(world)
+            .into_iter()
+            .map(|e| Arc::new(e) as Arc<dyn Transport>)
+            .collect(),
+        RelayKind::Tcp | RelayKind::TcpFp16 => TcpMesh::loopback(world)?
+            .into_iter()
+            .map(|e| Arc::new(e) as Arc<dyn Transport>)
+            .collect(),
+    })
+}
+
+/// Wrap a relay transport in the configured relay backend.
+fn relay_backend(kind: RelayKind, t: Arc<dyn Transport>) -> Box<dyn CollectiveBackend> {
+    if kind.compressed() {
+        Box::new(Fp16Relay::new(Communicator::new(t)))
+    } else {
+        Box::new(GlooHostRelay::new(Communicator::new(t)))
+    }
+}
+
+/// Build process groups for every rank of `devices` in one process.
+pub fn build_cluster(
+    devices: &[DeviceSpec],
+    relay: RelayKind,
+    mode: GroupMode,
+) -> Result<ClusterHandles> {
+    let topo = Arc::new(Topology::new(devices.to_vec()));
+    let world = topo.world();
+
+    match mode {
+        GroupMode::Native => {
+            ensure!(
+                topo.is_homogeneous(),
+                "native mode requires a homogeneous cluster (got {} groups)",
+                topo.groups().len()
+            );
+            let kind = VendorKind::for_device(topo.device_type(0));
+            let groups = InprocMesh::new(world)
+                .into_iter()
+                .map(|e| {
+                    Box::new(ProcessGroupNative::new(Box::new(VendorSim::new(
+                        kind,
+                        Communicator::new(Arc::new(e)),
+                    )))) as Box<dyn ProcessGroup>
+                })
+                .collect();
+            Ok(ClusterHandles { topo, groups })
+        }
+        GroupMode::FlatGloo => {
+            let groups = relay_endpoints(relay, world)?
+                .into_iter()
+                .map(|t| {
+                    Box::new(ProcessGroupFlatGloo::new(relay_backend(relay, t)))
+                        as Box<dyn ProcessGroup>
+                })
+                .collect();
+            Ok(ClusterHandles { topo, groups })
+        }
+        GroupMode::Kaitian => {
+            // Vendor mesh per homogeneous group.
+            let mut vendor_slots: Vec<Option<Box<dyn CollectiveBackend>>> =
+                (0..world).map(|_| None).collect();
+            for (dtype, members) in topo.groups() {
+                let kind = VendorKind::for_device(*dtype);
+                let mesh = InprocMesh::new(members.len());
+                for (local, ep) in mesh.into_iter().enumerate() {
+                    let global = members[local];
+                    vendor_slots[global] = Some(Box::new(VendorSim::new(
+                        kind,
+                        Communicator::new(Arc::new(ep)),
+                    )));
+                }
+            }
+
+            // Relay mesh over group leaders (only if >1 group).
+            let leaders = topo.leaders();
+            let mut relay_slots: Vec<Option<Box<dyn CollectiveBackend>>> =
+                (0..world).map(|_| None).collect();
+            if leaders.len() > 1 {
+                for (i, t) in relay_endpoints(relay, leaders.len())?.into_iter().enumerate() {
+                    relay_slots[leaders[i]] = Some(relay_backend(relay, t));
+                }
+            } else {
+                // Homogeneous cluster under KaiTian: the leader still gets
+                // a (single-rank, no-op) relay so the dispatch layer is
+                // structurally identical — this is what Fig 4 measures.
+                let t = relay_endpoints(RelayKind::Inproc, 1)?.pop().unwrap();
+                relay_slots[leaders[0]] =
+                    Some(Box::new(GlooHostRelay::new(Communicator::new(t))));
+            }
+
+            // Control mesh across all ranks.
+            let control_eps = InprocMesh::new(world);
+
+            let mut groups: Vec<Box<dyn ProcessGroup>> = Vec::with_capacity(world);
+            for (rank, control_ep) in control_eps.into_iter().enumerate() {
+                let vendor = vendor_slots[rank].take().expect("vendor comm built");
+                let relay_backend = relay_slots[rank].take();
+                // Non-leaders must not carry a relay; leaders must.
+                let relay_backend = if topo.is_leader(rank) {
+                    relay_backend
+                } else {
+                    None
+                };
+                let control: Box<dyn CollectiveBackend> = Box::new(GlooHostRelay::new(
+                    Communicator::new(Arc::new(control_ep)),
+                ));
+                groups.push(Box::new(ProcessGroupKaiTian::new(
+                    topo.clone(),
+                    rank,
+                    vendor,
+                    relay_backend,
+                    control,
+                )?) as Box<dyn ProcessGroup>);
+            }
+            Ok(ClusterHandles { topo, groups })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::ReduceOp;
+    use crate::device::parse_cluster;
+    use crate::group::CommPath;
+
+    fn run_all_reduce(handles: ClusterHandles, init: impl Fn(usize) -> Vec<f32> + Sync) -> Vec<(Vec<f32>, CommPath)> {
+        std::thread::scope(|s| {
+            let hs: Vec<_> = handles
+                .groups
+                .iter()
+                .map(|g| {
+                    let init = &init;
+                    s.spawn(move || {
+                        let mut buf = init(g.rank());
+                        let report = g.all_reduce(&mut buf, ReduceOp::Sum).unwrap();
+                        (buf, report.path)
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn kaitian_heterogeneous_all_reduce_is_correct() {
+        for spec in ["1G+1M", "2G+1M", "1G+2M", "2G+2M", "3G+2M"] {
+            let devices = parse_cluster(spec).unwrap();
+            let world = devices.len();
+            let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+            let out = run_all_reduce(handles, |rank| vec![(rank + 1) as f32; 6]);
+            let expect = ((1..=world).sum::<usize>()) as f32;
+            for (buf, path) in out {
+                assert_eq!(buf, vec![expect; 6], "{spec}");
+                assert_eq!(path, CommPath::Hierarchical, "{spec}");
+            }
+        }
+    }
+
+    #[test]
+    fn kaitian_homogeneous_routes_vendor_only() {
+        let devices = parse_cluster("3G").unwrap();
+        let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+        let out = run_all_reduce(handles, |rank| vec![rank as f32; 4]);
+        for (buf, path) in out {
+            assert_eq!(buf, vec![3.0; 4]);
+            assert_eq!(path, CommPath::Vendor, "homogeneous ops must not relay");
+        }
+    }
+
+    #[test]
+    fn native_matches_kaitian_numerics() {
+        let devices = parse_cluster("2M").unwrap();
+        let native = build_cluster(&devices, RelayKind::Inproc, GroupMode::Native).unwrap();
+        let out_native = run_all_reduce(native, |r| vec![r as f32 + 0.5; 3]);
+        let kaitian = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+        let out_kaitian = run_all_reduce(kaitian, |r| vec![r as f32 + 0.5; 3]);
+        assert_eq!(out_native[0].0, out_kaitian[0].0);
+        assert_eq!(out_native[0].1, CommPath::Vendor);
+    }
+
+    #[test]
+    fn native_rejects_heterogeneous() {
+        let devices = parse_cluster("1G+1M").unwrap();
+        assert!(build_cluster(&devices, RelayKind::Inproc, GroupMode::Native).is_err());
+    }
+
+    #[test]
+    fn flat_gloo_works_but_stages_everything() {
+        let devices = parse_cluster("2G+2M").unwrap();
+        let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::FlatGloo).unwrap();
+        let out = run_all_reduce(handles, |r| vec![(r + 1) as f32; 5]);
+        for (buf, path) in out {
+            assert_eq!(buf, vec![10.0; 5]);
+            assert_eq!(path, CommPath::HostRelay);
+        }
+    }
+
+    #[test]
+    fn kaitian_broadcast_heterogeneous_from_each_root() {
+        let devices = parse_cluster("2G+2M").unwrap();
+        for root in 0..4 {
+            let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+            let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+                let hs: Vec<_> = handles
+                    .groups
+                    .iter()
+                    .map(|g| {
+                        s.spawn(move || {
+                            let mut buf = if g.rank() == root {
+                                vec![42.0; 4]
+                            } else {
+                                vec![0.0; 4]
+                            };
+                            g.broadcast(&mut buf, root).unwrap();
+                            buf
+                        })
+                    })
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for buf in out {
+                assert_eq!(buf, vec![42.0; 4], "root={root}");
+            }
+        }
+    }
+
+    #[test]
+    fn kaitian_over_real_tcp_relay() {
+        let devices = parse_cluster("1G+1M").unwrap();
+        let handles = build_cluster(&devices, RelayKind::Tcp, GroupMode::Kaitian).unwrap();
+        let out = run_all_reduce(handles, |r| vec![(r + 1) as f32; 1000]);
+        for (buf, _) in out {
+            assert_eq!(buf, vec![3.0; 1000]);
+        }
+    }
+
+    #[test]
+    fn barrier_across_heterogeneous_cluster() {
+        let devices = parse_cluster("2G+2M").unwrap();
+        let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+        std::thread::scope(|s| {
+            for g in &handles.groups {
+                s.spawn(move || {
+                    for _ in 0..3 {
+                        g.barrier().unwrap();
+                    }
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,62 @@
+//! Flat-Gloo process group: the ablation baseline without the hybrid
+//! architecture.
+//!
+//! Every collective — including purely homogeneous ones — goes through the
+//! host relay. This is what a naive portable implementation does (bind the
+//! whole job to Gloo), and what the paper's hybrid design explicitly
+//! avoids. The ablation bench compares KaiTian-hierarchical vs FlatGloo to
+//! quantify the value of vendor-path dispatch.
+
+use crate::backend::CollectiveBackend;
+use crate::collectives::{CommStats, ReduceOp};
+use crate::Result;
+
+use super::{CommPath, GroupCommReport, ProcessGroup};
+
+/// All-ranks host-relay process group.
+pub struct ProcessGroupFlatGloo {
+    relay: Box<dyn CollectiveBackend>,
+}
+
+impl ProcessGroupFlatGloo {
+    pub fn new(relay: Box<dyn CollectiveBackend>) -> Self {
+        Self { relay }
+    }
+}
+
+impl ProcessGroup for ProcessGroupFlatGloo {
+    fn name(&self) -> &'static str {
+        "flat-gloo"
+    }
+
+    fn rank(&self) -> usize {
+        self.relay.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.relay.world()
+    }
+
+    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<GroupCommReport> {
+        let inter = self.relay.all_reduce(buf, op)?;
+        Ok(GroupCommReport {
+            path: CommPath::HostRelay,
+            intra: CommStats::default(),
+            inter,
+        })
+    }
+
+    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<GroupCommReport> {
+        let inter = self.relay.broadcast(buf, root)?;
+        Ok(GroupCommReport {
+            path: CommPath::HostRelay,
+            intra: CommStats::default(),
+            inter,
+        })
+    }
+
+    fn barrier(&self) -> Result<()> {
+        self.relay.barrier()?;
+        Ok(())
+    }
+}

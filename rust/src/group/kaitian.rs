@@ -1,0 +1,163 @@
+//! The KAITIAN meta process group: hybrid dispatch across vendor backends
+//! and the host relay.
+
+use std::sync::Arc;
+
+use anyhow::Context;
+
+use crate::backend::CollectiveBackend;
+use crate::collectives::{CommStats, ReduceOp};
+use crate::Result;
+
+use super::topology::Topology;
+use super::{CommPath, GroupCommReport, ProcessGroup};
+
+/// One rank's handle on the KAITIAN meta process group.
+///
+/// Owned communicators (SPMD; every rank holds its own view):
+/// * `vendor` — the vendor-library communicator of this rank's homogeneous
+///   device group (NCCL-sim or CNCL-sim),
+/// * `relay` — the leaders-only Gloo host-relay communicator (present only
+///   on group leaders),
+/// * `control` — an all-ranks communicator for barriers/metadata (the
+///   control plane, not the gradient data path).
+pub struct ProcessGroupKaiTian {
+    topo: Arc<Topology>,
+    rank: usize,
+    vendor: Box<dyn CollectiveBackend>,
+    relay: Option<Box<dyn CollectiveBackend>>,
+    control: Box<dyn CollectiveBackend>,
+}
+
+impl ProcessGroupKaiTian {
+    pub fn new(
+        topo: Arc<Topology>,
+        rank: usize,
+        vendor: Box<dyn CollectiveBackend>,
+        relay: Option<Box<dyn CollectiveBackend>>,
+        control: Box<dyn CollectiveBackend>,
+    ) -> Result<Self> {
+        // Dispatch-layer sanity: the vendor communicator must exactly span
+        // this rank's homogeneous group, and only leaders carry a relay.
+        anyhow::ensure!(
+            vendor.world() == topo.group_of(rank).len(),
+            "vendor communicator world {} != group size {}",
+            vendor.world(),
+            topo.group_of(rank).len()
+        );
+        anyhow::ensure!(
+            vendor.rank() == topo.local_rank(rank),
+            "vendor communicator rank mismatch"
+        );
+        anyhow::ensure!(
+            relay.is_some() == topo.is_leader(rank),
+            "relay communicator present iff leader"
+        );
+        Ok(Self {
+            topo,
+            rank,
+            vendor,
+            relay,
+            control,
+        })
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// The vendor library serving this rank's intra-group traffic.
+    pub fn vendor_name(&self) -> &'static str {
+        self.vendor.name()
+    }
+
+    /// Analyze + dispatch one all-reduce (the paper's §III-B steps 1-3).
+    fn dispatch_all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<GroupCommReport> {
+        // Step 1: analyze the participating processes' device types.
+        if self.topo.is_homogeneous() {
+            // Step 2: homogeneous → vendor library only.
+            let intra = self.vendor.all_reduce(buf, op)?;
+            return Ok(GroupCommReport::vendor(intra));
+        }
+        // Step 3: heterogeneous → hierarchical orchestration.
+        let mut intra = CommStats::default();
+        let mut inter = CommStats::default();
+
+        // 3a. Aggregate within the homogeneous group via the vendor
+        //     library (every member ends with the group partial sum; the
+        //     leader, group-local rank 0, feeds it to the relay).
+        intra.merge(&self.vendor.all_reduce(buf, op)?);
+
+        // 3b. Leaders exchange partial aggregates over the host relay.
+        if let Some(relay) = &self.relay {
+            inter.merge(&relay.all_reduce(buf, op)?);
+        }
+
+        // 3c. Leader broadcasts the global result back into its group
+        //     (vendor path).
+        intra.merge(&self.vendor.broadcast(buf, 0)?);
+
+        Ok(GroupCommReport {
+            path: CommPath::Hierarchical,
+            intra,
+            inter,
+        })
+    }
+}
+
+impl ProcessGroup for ProcessGroupKaiTian {
+    fn name(&self) -> &'static str {
+        "kaitian"
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.topo.world()
+    }
+
+    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<GroupCommReport> {
+        self.dispatch_all_reduce(buf, op)
+            .with_context(|| format!("kaitian all_reduce on rank {}", self.rank))
+    }
+
+    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<GroupCommReport> {
+        if self.topo.is_homogeneous() {
+            let intra = self.vendor.broadcast(buf, self.topo.local_rank(root))?;
+            return Ok(GroupCommReport::vendor(intra));
+        }
+        let mut intra = CommStats::default();
+        let mut inter = CommStats::default();
+        let root_leader = self.topo.leader_of(root);
+
+        // 1. Within the root's group: vendor-broadcast from root to the
+        //    group (so the leader definitely has the data).
+        if self.topo.group_of(self.rank) == self.topo.group_of(root) {
+            intra.merge(&self.vendor.broadcast(buf, self.topo.local_rank(root))?);
+        }
+        // 2. Leaders: relay-broadcast from the root group's leader.
+        if let Some(relay) = &self.relay {
+            let relay_root = self
+                .topo
+                .relay_rank(root_leader)
+                .expect("root leader must be in relay");
+            inter.merge(&relay.broadcast(buf, relay_root)?);
+        }
+        // 3. Non-root groups: leader vendor-broadcasts to its group.
+        if self.topo.group_of(self.rank) != self.topo.group_of(root) {
+            intra.merge(&self.vendor.broadcast(buf, 0)?);
+        }
+        Ok(GroupCommReport {
+            path: CommPath::Hierarchical,
+            intra,
+            inter,
+        })
+    }
+
+    fn barrier(&self) -> Result<()> {
+        self.control.barrier()?;
+        Ok(())
+    }
+}

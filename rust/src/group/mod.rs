@@ -1,0 +1,90 @@
+//! `ProcessGroupKaiTian` — the paper's primary contribution (Section III).
+//!
+//! A meta process group that owns multiple underlying communicators and
+//! dispatches each collective by topology:
+//!
+//! * **homogeneous op** (all participating ranks share one device type) →
+//!   the vendor library for that type (NCCL-sim for GPU groups, CNCL-sim
+//!   for MLU groups) — the blue paths of Fig. 1;
+//! * **heterogeneous op** → hierarchical orchestration (pink paths):
+//!   intra-group tree-reduce to each group leader → leaders all-reduce
+//!   over the Gloo host relay (D2H → TCP-class hop → H2D) → intra-group
+//!   broadcast.
+//!
+//! [`native::ProcessGroupNative`] is the Fig-4 baseline: the same vendor
+//! backend with *no* KAITIAN dispatch layer. [`flat::ProcessGroupFlatGloo`]
+//! is the ablation baseline that sends *everything* through the host relay
+//! (what you'd get without the hybrid architecture).
+
+pub mod builder;
+pub mod flat;
+pub mod kaitian;
+pub mod native;
+pub mod topology;
+
+pub use builder::{build_cluster, ClusterHandles, GroupMode, RelayKind};
+pub use kaitian::ProcessGroupKaiTian;
+pub use native::ProcessGroupNative;
+pub use topology::Topology;
+
+use crate::collectives::{CommStats, ReduceOp};
+use crate::Result;
+
+/// Which path a collective took (for metrics + routing invariants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommPath {
+    /// Entire op served by one vendor library.
+    Vendor,
+    /// Hierarchical: vendor intra-group + Gloo host relay inter-group.
+    Hierarchical,
+    /// Entire op through the host relay (flat-Gloo baseline).
+    HostRelay,
+}
+
+/// Outcome of one collective through a process group.
+#[derive(Debug, Clone)]
+pub struct GroupCommReport {
+    pub path: CommPath,
+    /// Stats of the intra-group (vendor) portion, if any.
+    pub intra: CommStats,
+    /// Stats of the inter-group (host-relay) portion, if any.
+    pub inter: CommStats,
+}
+
+impl GroupCommReport {
+    pub fn vendor(intra: CommStats) -> Self {
+        Self {
+            path: CommPath::Vendor,
+            intra,
+            inter: CommStats::default(),
+        }
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.intra.seconds + self.inter.seconds + self.inter.stage_seconds
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.intra.bytes_sent + self.inter.bytes_sent
+    }
+}
+
+/// The interface DDP trains against — implemented by KaiTian, Native and
+/// FlatGloo groups.
+pub trait ProcessGroup: Send + Sync {
+    /// Implementation name for reports.
+    fn name(&self) -> &'static str;
+
+    fn rank(&self) -> usize;
+
+    fn world(&self) -> usize;
+
+    /// Global in-place all-reduce across all ranks.
+    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<GroupCommReport>;
+
+    /// Global broadcast from global rank `root`.
+    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<GroupCommReport>;
+
+    /// Barrier across all ranks.
+    fn barrier(&self) -> Result<()>;
+}

@@ -1,0 +1,55 @@
+//! Native process group: the Fig-4 baseline.
+//!
+//! Homogeneous training driven directly by the vendor library, with no
+//! KAITIAN dispatch layer on top — what `torch.distributed` does natively
+//! with a single NCCL/CNCL backend. Comparing Native vs KaiTian on the
+//! same homogeneous devices isolates the "KAITIAN tax" (paper: 2.8% on
+//! GPUs, 4.3% on MLUs).
+
+use crate::backend::CollectiveBackend;
+use crate::collectives::ReduceOp;
+use crate::Result;
+
+use super::{GroupCommReport, ProcessGroup};
+
+/// Direct vendor-backed process group (homogeneous clusters only).
+pub struct ProcessGroupNative {
+    backend: Box<dyn CollectiveBackend>,
+}
+
+impl ProcessGroupNative {
+    pub fn new(backend: Box<dyn CollectiveBackend>) -> Self {
+        Self { backend }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+}
+
+impl ProcessGroup for ProcessGroupNative {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn rank(&self) -> usize {
+        self.backend.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.backend.world()
+    }
+
+    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<GroupCommReport> {
+        Ok(GroupCommReport::vendor(self.backend.all_reduce(buf, op)?))
+    }
+
+    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<GroupCommReport> {
+        Ok(GroupCommReport::vendor(self.backend.broadcast(buf, root)?))
+    }
+
+    fn barrier(&self) -> Result<()> {
+        self.backend.barrier()?;
+        Ok(())
+    }
+}

@@ -1,0 +1,133 @@
+//! Cluster topology analysis: which ranks are which device type, who
+//! leads each homogeneous group.
+
+use std::collections::BTreeMap;
+
+use crate::device::{DeviceSpec, DeviceType};
+
+/// Immutable view of the cluster's device layout.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    devices: Vec<DeviceSpec>,
+    /// device type -> global ranks, in rank order.
+    groups: BTreeMap<DeviceType, Vec<usize>>,
+}
+
+impl Topology {
+    pub fn new(devices: Vec<DeviceSpec>) -> Self {
+        let mut groups: BTreeMap<DeviceType, Vec<usize>> = BTreeMap::new();
+        for d in &devices {
+            groups.entry(d.dtype).or_default().push(d.rank);
+        }
+        Self { devices, groups }
+    }
+
+    pub fn world(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn devices(&self) -> &[DeviceSpec] {
+        &self.devices
+    }
+
+    pub fn device(&self, rank: usize) -> &DeviceSpec {
+        &self.devices[rank]
+    }
+
+    pub fn device_type(&self, rank: usize) -> DeviceType {
+        self.devices[rank].dtype
+    }
+
+    /// All homogeneous groups, keyed by device type.
+    pub fn groups(&self) -> &BTreeMap<DeviceType, Vec<usize>> {
+        &self.groups
+    }
+
+    /// True if the whole cluster is one device type.
+    pub fn is_homogeneous(&self) -> bool {
+        self.groups.len() <= 1
+    }
+
+    /// Global ranks of `rank`'s homogeneous group (includes `rank`).
+    pub fn group_of(&self, rank: usize) -> &[usize] {
+        &self.groups[&self.devices[rank].dtype]
+    }
+
+    /// `rank`'s index within its homogeneous group (the vendor
+    /// communicator's local rank).
+    pub fn local_rank(&self, rank: usize) -> usize {
+        self.group_of(rank)
+            .iter()
+            .position(|&r| r == rank)
+            .expect("rank must be in its own group")
+    }
+
+    /// The leader (first global rank) of `rank`'s group — the rank that
+    /// participates in the inter-group relay.
+    pub fn leader_of(&self, rank: usize) -> usize {
+        self.group_of(rank)[0]
+    }
+
+    pub fn is_leader(&self, rank: usize) -> bool {
+        self.leader_of(rank) == rank
+    }
+
+    /// Leaders of all groups, in device-type order (the relay
+    /// communicator's membership; index = relay rank).
+    pub fn leaders(&self) -> Vec<usize> {
+        self.groups.values().map(|g| g[0]).collect()
+    }
+
+    /// The relay-communicator rank of a leader (None for non-leaders).
+    pub fn relay_rank(&self, rank: usize) -> Option<usize> {
+        self.leaders().iter().position(|&l| l == rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::parse_cluster;
+
+    fn topo(spec: &str) -> Topology {
+        Topology::new(parse_cluster(spec).unwrap())
+    }
+
+    #[test]
+    fn homogeneous_detection() {
+        assert!(topo("2G").is_homogeneous());
+        assert!(topo("4M").is_homogeneous());
+        assert!(!topo("2G+2M").is_homogeneous());
+    }
+
+    #[test]
+    fn groups_and_local_ranks_2g2m() {
+        let t = topo("2G+2M");
+        assert_eq!(t.world(), 4);
+        assert_eq!(t.group_of(0), &[0, 1]);
+        assert_eq!(t.group_of(3), &[2, 3]);
+        assert_eq!(t.local_rank(0), 0);
+        assert_eq!(t.local_rank(1), 1);
+        assert_eq!(t.local_rank(2), 0);
+        assert_eq!(t.local_rank(3), 1);
+    }
+
+    #[test]
+    fn leaders_are_first_of_each_group() {
+        let t = topo("2G+3M");
+        assert_eq!(t.leaders(), vec![0, 2]);
+        assert!(t.is_leader(0) && t.is_leader(2));
+        assert!(!t.is_leader(1) && !t.is_leader(3) && !t.is_leader(4));
+        assert_eq!(t.leader_of(4), 2);
+        assert_eq!(t.relay_rank(2), Some(1));
+        assert_eq!(t.relay_rank(1), None);
+    }
+
+    #[test]
+    fn single_device_cluster() {
+        let t = topo("1G");
+        assert!(t.is_homogeneous());
+        assert_eq!(t.leaders(), vec![0]);
+        assert_eq!(t.local_rank(0), 0);
+    }
+}

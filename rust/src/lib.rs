@@ -1,0 +1,46 @@
+//! # KAITIAN — unified communication for heterogeneous accelerators
+//!
+//! Reproduction of *"KAITIAN: A Unified Communication Framework for Enabling
+//! Efficient Collaboration Across Heterogeneous Accelerators in Embodied AI
+//! Systems"* (Lin, Wang, Yin & Han, CS.DC 2025) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a meta process group
+//!   ([`group::ProcessGroupKaiTian`]) that dispatches collectives to
+//!   vendor-style backends ([`backend::NcclSim`], [`backend::CnclSim`])
+//!   inside homogeneous device groups and stages cross-vendor traffic
+//!   through a host relay ([`backend::GlooHostRelay`]); plus the
+//!   load-adaptive scheduler ([`sched`]), the DDP engine ([`ddp`]), a
+//!   Redis-like rendezvous service ([`rendezvous`]), and the simulated
+//!   heterogeneous device substrate ([`device`]).
+//! * **L2** — JAX model programs (`python/compile/model.py`), AOT-lowered
+//!   to HLO text artifacts loaded by [`runtime`].
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) fused into those
+//!   artifacts.
+//!
+//! Python never runs at training time: the rust binary is self-contained
+//! once `make artifacts` has produced `artifacts/`.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod backend;
+pub mod bench;
+pub mod collectives;
+pub mod config;
+pub mod data;
+pub mod ddp;
+pub mod device;
+pub mod group;
+pub mod metrics;
+pub mod perfmodel;
+pub mod rendezvous;
+pub mod runtime;
+pub mod sched;
+pub mod simnet;
+pub mod train;
+pub mod transport;
+pub mod util;
+
+/// Crate-wide result type (rich error context via `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

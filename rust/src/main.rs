@@ -1,0 +1,197 @@
+//! KAITIAN CLI launcher.
+//!
+//! ```text
+//! kaitian train  [--config cfg.json] [--preset P --cluster 2G+2M ...]
+//! kaitian bench  --fig 2|3|4|micro|all [--out results/] [--quick]
+//! kaitian probe  [--cluster 2G+2M] [--preset mobinet]
+//! kaitian rendezvous-serve [--addr 127.0.0.1:6379]
+//! kaitian worker --rendezvous ADDR --world N  (multi-process demo)
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use kaitian::bench::{fig2, fig3, fig4, microbench_collectives};
+use kaitian::config::{load_train_options, Args};
+use kaitian::perfmodel::PerfModel;
+use kaitian::rendezvous::{RendezvousClient, RendezvousServer};
+use kaitian::runtime::Engine;
+use kaitian::train::train;
+use kaitian::Result;
+
+fn main() {
+    let args = Args::parse();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("kaitian: error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("bench") => cmd_bench(args),
+        Some("probe") => cmd_probe(args),
+        Some("rendezvous-serve") => cmd_rendezvous_serve(args),
+        Some("worker") => cmd_worker(args),
+        _ => {
+            eprintln!(
+                "usage: kaitian <train|bench|probe|rendezvous-serve|worker> [--flags]\n\
+                 see README.md for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.flag_or("artifacts", "artifacts").to_string()
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let opts = load_train_options(args)?;
+    eprintln!(
+        "[kaitian] training {} on {} (mode={:?}, strategy={}, B={})",
+        opts.preset,
+        opts.cluster,
+        opts.group_mode,
+        opts.strategy.name(),
+        opts.global_batch
+    );
+    let engine = Arc::new(Engine::load(artifacts_dir(args))?);
+    let report = train(engine, &opts)?;
+    println!("{}", report.summary());
+    println!("scores     = {:?}", report.scores);
+    println!("allocation = {:?}", report.allocation);
+    if let Some(out) = args.flag("out") {
+        std::fs::create_dir_all(out)?;
+        let path = format!("{out}/train_{}_{}.json", opts.preset, report.cluster.replace('+', "_"));
+        std::fs::write(&path, report.to_json().to_string_pretty())?;
+        eprintln!("[kaitian] wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args.flag_or("fig", "all");
+    let quick = args.has("quick");
+    let model = PerfModel::paper_default();
+    // Gradient bytes from the real manifest when available, else the
+    // calibration constant.
+    let grad_bytes = Engine::load(artifacts_dir(args))
+        .ok()
+        .and_then(|e| e.manifest().program("mobinet").ok().map(|p| p.param_count * 4))
+        .unwrap_or(933_544);
+
+    let mut reports = Vec::new();
+    if which == "2" || which == "all" {
+        reports.push(fig2(&model, grad_bytes)?);
+    }
+    if which == "3" || which == "all" {
+        reports.push(fig3(&model, grad_bytes)?);
+    }
+    if which == "4" || which == "all" {
+        reports.push(fig4(&model, grad_bytes)?);
+    }
+    if which == "micro" || which == "all" {
+        reports.push(microbench_collectives(4, quick)?);
+    }
+    anyhow::ensure!(!reports.is_empty(), "unknown --fig {which:?} (2|3|4|micro|all)");
+
+    let mut json_all = BTreeMap::new();
+    for r in &reports {
+        println!("{}\n", r.render());
+        json_all.insert(r.id.to_string(), r.json.clone());
+    }
+    if let Some(out) = args.flag("out") {
+        let path = kaitian::metrics::write_report(out, "figures", json_all)?;
+        eprintln!("[kaitian] wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_probe(args: &Args) -> Result<()> {
+    use kaitian::device::{parse_cluster, SpeedModel};
+    use kaitian::sched::{proportional_allocation, Profiler};
+    let cluster = args.flag_or("cluster", "2G+2M");
+    let devices = parse_cluster(cluster)?;
+    let profiler = Profiler {
+        probe_batch: args.usize_flag("probe-batch", 128)?,
+        ..Default::default()
+    };
+    let scores = profiler.model_scores(&devices, &SpeedModel::paper_default());
+    let batch = args.usize_flag("global-batch", 256)?;
+    let alloc = proportional_allocation(&scores, batch);
+    println!("cluster    = {cluster}");
+    for (d, (s, b)) in devices.iter().zip(scores.iter().zip(&alloc)) {
+        println!(
+            "rank {}  {}  vendor={}  score={s:.3}  batch={b}",
+            d.rank,
+            d.dtype,
+            d.dtype.vendor_lib()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_rendezvous_serve(args: &Args) -> Result<()> {
+    let addr = args.flag_or("addr", "127.0.0.1:6379");
+    let server = RendezvousServer::spawn(addr)?;
+    println!("[kaitian] rendezvous serving on {}", server.addr());
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Multi-process worker demo: discover peers through the rendezvous
+/// service, build a real TCP mesh across processes, and verify a
+/// collective — the cross-host path of the paper's control plane.
+fn cmd_worker(args: &Args) -> Result<()> {
+    use kaitian::backend::{CollectiveBackend, GlooHostRelay};
+    use kaitian::collectives::{Communicator, ReduceOp};
+    use kaitian::transport::TcpEndpoint;
+    use std::net::TcpListener;
+    use std::time::Duration;
+
+    let rdv_addr: std::net::SocketAddr = args
+        .flag("rendezvous")
+        .ok_or_else(|| anyhow::anyhow!("--rendezvous host:port required"))?
+        .parse()?;
+    let world = args.usize_flag("world", 2)?;
+    let job = args.flag_or("job", "demo").to_string();
+
+    let mut rdv = RendezvousClient::connect_retry(rdv_addr, 50, Duration::from_millis(100))?;
+    // Rank discovery (paper §III-D).
+    let rank = (rdv.incr(&format!("{job}:rank"))? - 1) as usize;
+    anyhow::ensure!(rank < world, "more workers than --world");
+
+    // Publish our mesh address, collect everyone's.
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    rdv.set(&format!("{job}:addr:{rank}"), &listener.local_addr()?.to_string())?;
+    let mut addrs = Vec::with_capacity(world);
+    for r in 0..world {
+        let a = rdv.get_blocking(&format!("{job}:addr:{r}"), Duration::from_secs(30))?;
+        addrs.push(a.parse()?);
+    }
+    rdv.barrier(&format!("{job}:mesh"), world as u64, Duration::from_secs(30))?;
+
+    // Real cross-process TCP mesh + host-relay collective.
+    let ep = TcpEndpoint::connect(rank, &addrs, listener)?;
+    let relay = GlooHostRelay::new(Communicator::new(Arc::new(ep)));
+    let mut buf = vec![(rank + 1) as f32; 1000];
+    relay.all_reduce(&mut buf, ReduceOp::Sum)?;
+    let expect: f32 = (1..=world).map(|r| r as f32).sum();
+    anyhow::ensure!(
+        buf.iter().all(|&v| (v - expect).abs() < 1e-5),
+        "collective mismatch: got {} want {expect}",
+        buf[0]
+    );
+    println!("[worker {rank}/{world}] all_reduce OK (sum={})", buf[0]);
+    rdv.barrier(&format!("{job}:done"), world as u64, Duration::from_secs(30))?;
+    Ok(())
+}

@@ -1,0 +1,273 @@
+//! Training/communication metrics collection and report emission.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// One training step's timing breakdown for one rank.
+#[derive(Debug, Clone, Default)]
+pub struct StepMetrics {
+    /// Samples this rank processed (its allocation).
+    pub batch: usize,
+    /// Bucket the batch was padded to.
+    pub bucket: usize,
+    /// Seconds in the local grad computation (incl. throttle).
+    pub compute_s: f64,
+    /// Seconds in gradient all-reduce (total).
+    pub comm_s: f64,
+    /// of which: host-staging copies.
+    pub stage_s: f64,
+    /// Seconds in the optimizer update.
+    pub update_s: f64,
+    /// Bytes moved by this rank's collectives.
+    pub comm_bytes: u64,
+}
+
+impl StepMetrics {
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.comm_s + self.update_s
+    }
+}
+
+/// Aggregate over steps (per rank or cluster-wide).
+#[derive(Debug, Clone, Default)]
+pub struct Accumulator {
+    pub steps: usize,
+    pub compute_s: f64,
+    pub comm_s: f64,
+    pub stage_s: f64,
+    pub update_s: f64,
+    pub comm_bytes: u64,
+    pub samples: usize,
+}
+
+impl Accumulator {
+    pub fn add(&mut self, m: &StepMetrics) {
+        self.steps += 1;
+        self.compute_s += m.compute_s;
+        self.comm_s += m.comm_s;
+        self.stage_s += m.stage_s;
+        self.update_s += m.update_s;
+        self.comm_bytes += m.comm_bytes;
+        self.samples += m.batch;
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.comm_s + self.update_s
+    }
+
+    pub fn throughput(&self) -> f64 {
+        if self.total_s() > 0.0 {
+            self.samples as f64 / self.total_s()
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("steps", Json::num(self.steps as f64)),
+            ("compute_s", Json::num(self.compute_s)),
+            ("comm_s", Json::num(self.comm_s)),
+            ("stage_s", Json::num(self.stage_s)),
+            ("update_s", Json::num(self.update_s)),
+            ("comm_bytes", Json::num(self.comm_bytes as f64)),
+            ("samples", Json::num(self.samples as f64)),
+            ("throughput_sps", Json::num(self.throughput())),
+        ])
+    }
+}
+
+/// End-of-run training report (returned by the trainer, consumed by
+/// examples/benches/EXPERIMENTS.md).
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub config_name: String,
+    pub cluster: String,
+    pub group_mode: String,
+    pub strategy: String,
+    pub scores: Vec<f64>,
+    pub allocation: Vec<usize>,
+    pub epochs: usize,
+    pub steps: usize,
+    /// Wall-clock seconds for the training loop.
+    pub wall_s: f64,
+    /// Virtual (modeled) seconds, when run under the simulator.
+    pub virtual_s: Option<f64>,
+    /// Mean loss per epoch (global, sample-weighted).
+    pub epoch_losses: Vec<f64>,
+    /// Eval accuracy per epoch (if eval ran).
+    pub epoch_accuracy: Vec<f64>,
+    /// Loss at every step (rank-0 view, for loss curves).
+    pub step_losses: Vec<f64>,
+    /// Per-rank aggregates.
+    pub per_rank: Vec<Accumulator>,
+}
+
+impl TrainReport {
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.epoch_accuracy.last().copied()
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.epoch_losses.last().copied()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("config", Json::str(self.config_name.clone())),
+            ("cluster", Json::str(self.cluster.clone())),
+            ("group_mode", Json::str(self.group_mode.clone())),
+            ("strategy", Json::str(self.strategy.clone())),
+            (
+                "scores",
+                Json::arr(self.scores.iter().map(|s| Json::num(*s)).collect()),
+            ),
+            (
+                "allocation",
+                Json::arr(self.allocation.iter().map(|a| Json::num(*a as f64)).collect()),
+            ),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            (
+                "virtual_s",
+                self.virtual_s.map(Json::num).unwrap_or(Json::Null),
+            ),
+            (
+                "epoch_losses",
+                Json::arr(self.epoch_losses.iter().map(|l| Json::num(*l)).collect()),
+            ),
+            (
+                "epoch_accuracy",
+                Json::arr(self.epoch_accuracy.iter().map(|a| Json::num(*a)).collect()),
+            ),
+            (
+                "per_rank",
+                Json::arr(self.per_rank.iter().map(|a| a.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "[{}] {} mode={} strategy={} steps={} wall={} acc={} loss={}",
+            self.config_name,
+            self.cluster,
+            self.group_mode,
+            self.strategy,
+            self.steps,
+            crate::util::fmt_secs(self.wall_s),
+            self.final_accuracy()
+                .map(|a| format!("{:.1}%", a * 100.0))
+                .unwrap_or_else(|| "-".into()),
+            self.final_loss()
+                .map(|l| format!("{l:.4}"))
+                .unwrap_or_else(|| "-".into()),
+        )
+    }
+}
+
+/// Markdown table builder for bench harness output.
+#[derive(Debug, Default)]
+pub struct MarkdownTable {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl MarkdownTable {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Write a JSON report under `results/` (creating the dir).
+pub fn write_report(dir: &str, name: &str, entries: BTreeMap<String, Json>) -> crate::Result<String> {
+    std::fs::create_dir_all(dir)?;
+    let path = format!("{dir}/{name}.json");
+    let json = Json::Obj(entries);
+    std::fs::write(&path, json.to_string_pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_adds() {
+        let mut acc = Accumulator::default();
+        acc.add(&StepMetrics {
+            batch: 64,
+            bucket: 64,
+            compute_s: 0.1,
+            comm_s: 0.02,
+            stage_s: 0.001,
+            update_s: 0.01,
+            comm_bytes: 1000,
+        });
+        acc.add(&StepMetrics {
+            batch: 64,
+            bucket: 64,
+            compute_s: 0.1,
+            comm_s: 0.02,
+            stage_s: 0.0,
+            update_s: 0.01,
+            comm_bytes: 1000,
+        });
+        assert_eq!(acc.steps, 2);
+        assert_eq!(acc.samples, 128);
+        assert!((acc.total_s() - 0.26).abs() < 1e-12);
+        assert!(acc.throughput() > 0.0);
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let mut r = TrainReport {
+            config_name: "t".into(),
+            cluster: "2G+2M".into(),
+            ..Default::default()
+        };
+        r.epoch_losses.push(1.5);
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(parsed.str_req("cluster").unwrap(), "2G+2M");
+    }
+
+    #[test]
+    fn markdown_table_renders() {
+        let mut t = MarkdownTable::new(&["config", "time"]);
+        t.row(vec!["2G".into(), "236.4".into()]);
+        let md = t.render();
+        assert!(md.contains("| config | time |"));
+        assert!(md.contains("| 2G | 236.4 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn wrong_arity_row_panics() {
+        MarkdownTable::new(&["a"]).row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,166 @@
+//! Communication cost model: alpha–beta (latency + bandwidth) costs for
+//! the vendor rings, the host relay, and the KAITIAN dispatch layer.
+//!
+//! Calibration derivation (all anchors from the paper; workload =
+//! MobileNetV2-class, 233,386 params → 933,544 B of f32 gradients;
+//! 50 epochs × 195 steps; per-device batch 128 in homogeneous configs):
+//!
+//! * 2G native 236.4 s → 24.246 ms/step; modeled GPU compute(128) =
+//!   23.760 ms → ring cost 0.486 ms = 2·(n/2 / bw + α) with bw = 12 GB/s
+//!   (PCIe Gen3 effective) → α_nccl = 0.204 ms.
+//! * 2M native 166.3 s → 17.056 ms/step; MLU compute(128) = 16.527 ms →
+//!   ring cost 0.529 ms → α_cncl = 0.226 ms.
+//! * Fig 4 overheads (2.8 % GPU / 4.3 % MLU of the native step) →
+//!   dispatch 0.679 ms / 0.733 ms.
+//! * 2G+2M KAITIAN 137.4 s → 14.09 ms/step; subtracting modeled compute
+//!   (11.01 ms straggler), intra (0.832 ms) and dispatch (0.733 ms)
+//!   leaves 1.52 ms for the relay → host hop ≈ 1.25 GB/s with
+//!   α_host = 0.29 ms (loopback TCP through host RAM), staging at PCIe.
+//!
+//! Cross-check (not an anchor): the model then predicts 2G+1M = 172.9 s
+//! vs the paper's 175.0 s (−1.2 %).
+
+use crate::device::DeviceType;
+
+/// Alpha–beta cost model for all links in the testbed.
+#[derive(Debug, Clone)]
+pub struct CommModel {
+    /// Vendor-link effective bandwidth (bytes/s) — PCIe Gen3 class.
+    pub vendor_bw: f64,
+    /// Per-message latency of the NCCL-class ring step (seconds).
+    pub nccl_alpha: f64,
+    /// Per-message latency of the CNCL-class ring step (seconds).
+    pub cncl_alpha: f64,
+    /// D2H/H2D staging bandwidth (bytes/s).
+    pub pcie_bw: f64,
+    /// Host-to-host (Gloo) bandwidth (bytes/s).
+    pub host_bw: f64,
+    /// Host hop per-message latency (seconds).
+    pub host_alpha: f64,
+    /// KAITIAN dispatch-layer overhead per step (seconds), per device type
+    /// (the paper's 2.8 % / 4.3 % "KAITIAN tax").
+    pub dispatch_gpu: f64,
+    pub dispatch_mlu: f64,
+}
+
+impl CommModel {
+    pub fn paper_default() -> Self {
+        Self {
+            vendor_bw: 12.0e9,
+            nccl_alpha: 0.204e-3,
+            cncl_alpha: 0.226e-3,
+            pcie_bw: 12.0e9,
+            host_bw: 1.25e9,
+            host_alpha: 0.29e-3,
+            dispatch_gpu: 0.679e-3,
+            dispatch_mlu: 0.733e-3,
+        }
+    }
+
+    fn vendor_alpha(&self, dtype: DeviceType) -> f64 {
+        match dtype {
+            DeviceType::GpuSim => self.nccl_alpha,
+            DeviceType::MluSim => self.cncl_alpha,
+        }
+    }
+
+    /// Ring all-reduce: 2(w−1) steps of (n/w)/bw + α.
+    pub fn vendor_all_reduce_s(&self, bytes: usize, world: usize, dtype: DeviceType) -> f64 {
+        if world <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let chunk = bytes as f64 / world as f64;
+        2.0 * (world - 1) as f64 * (chunk / self.vendor_bw + self.vendor_alpha(dtype))
+    }
+
+    /// Binomial broadcast: ⌈log2 w⌉ rounds of n/bw + α.
+    pub fn vendor_broadcast_s(&self, bytes: usize, world: usize, dtype: DeviceType) -> f64 {
+        if world <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let rounds = (world as f64).log2().ceil();
+        rounds * (bytes as f64 / self.vendor_bw + self.vendor_alpha(dtype))
+    }
+
+    /// Host-relay all-reduce among `world` participants:
+    /// D2H + H2D staging of the full buffer, plus a host-side ring.
+    pub fn relay_all_reduce_s(&self, bytes: usize, world: usize) -> f64 {
+        if world <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let staging = 2.0 * bytes as f64 / self.pcie_bw;
+        let chunk = bytes as f64 / world as f64;
+        let ring = 2.0 * (world - 1) as f64 * (chunk / self.host_bw + self.host_alpha);
+        staging + ring
+    }
+
+    /// Per-step framework overhead of KAITIAN's dispatch layer.
+    pub fn kaitian_dispatch_s(&self, dtype: DeviceType) -> f64 {
+        match dtype {
+            DeviceType::GpuSim => self.dispatch_gpu,
+            DeviceType::MluSim => self.dispatch_mlu,
+        }
+    }
+}
+
+impl Default for CommModel {
+    fn default() -> Self {
+        Self::paper_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GRAD_BYTES: usize = 933_544;
+
+    #[test]
+    fn singleton_worlds_cost_nothing() {
+        let m = CommModel::paper_default();
+        assert_eq!(m.vendor_all_reduce_s(GRAD_BYTES, 1, DeviceType::GpuSim), 0.0);
+        assert_eq!(m.vendor_broadcast_s(GRAD_BYTES, 1, DeviceType::MluSim), 0.0);
+        assert_eq!(m.relay_all_reduce_s(GRAD_BYTES, 1), 0.0);
+    }
+
+    #[test]
+    fn ring_anchor_two_gpus() {
+        // The 2G calibration anchor: ring ≈ 0.486 ms.
+        let m = CommModel::paper_default();
+        let t = m.vendor_all_reduce_s(GRAD_BYTES, 2, DeviceType::GpuSim);
+        assert!((t - 0.486e-3).abs() < 0.01e-3, "{t}");
+    }
+
+    #[test]
+    fn ring_cost_grows_with_world_but_sublinearly_in_bytes_per_rank() {
+        let m = CommModel::paper_default();
+        let t2 = m.vendor_all_reduce_s(GRAD_BYTES, 2, DeviceType::GpuSim);
+        let t4 = m.vendor_all_reduce_s(GRAD_BYTES, 4, DeviceType::GpuSim);
+        assert!(t4 > t2);
+        // Bandwidth term is 2(w-1)/w·n/bw → bounded by 2n/bw.
+        let bw_term4 = 2.0 * 3.0 * (GRAD_BYTES as f64 / 4.0) / m.vendor_bw;
+        assert!(bw_term4 < 2.0 * GRAD_BYTES as f64 / m.vendor_bw);
+    }
+
+    #[test]
+    fn relay_is_much_slower_than_vendor_ring() {
+        // The premise of the paper's hybrid design.
+        let m = CommModel::paper_default();
+        let vendor = m.vendor_all_reduce_s(GRAD_BYTES, 2, DeviceType::GpuSim);
+        let relay = m.relay_all_reduce_s(GRAD_BYTES, 2);
+        assert!(
+            relay > 2.0 * vendor,
+            "relay {relay} should dwarf vendor {vendor}"
+        );
+    }
+
+    #[test]
+    fn dispatch_overheads_match_fig4_percentages() {
+        let m = CommModel::paper_default();
+        // Against the modeled native step times (24.246 / 17.056 ms).
+        let gpu_pct = m.dispatch_gpu / 24.246e-3;
+        let mlu_pct = m.dispatch_mlu / 17.056e-3;
+        assert!((gpu_pct - 0.028).abs() < 0.002, "{gpu_pct}");
+        assert!((mlu_pct - 0.043).abs() < 0.002, "{mlu_pct}");
+    }
+}

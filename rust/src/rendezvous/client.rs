@@ -1,0 +1,112 @@
+//! Blocking rendezvous client used by workers for discovery/score exchange.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context};
+
+use super::protocol::{read_reply, write_command, Command, Reply};
+use crate::Result;
+
+/// One connection to the rendezvous server.
+pub struct RendezvousClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl RendezvousClient {
+    pub fn connect(addr: SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connect to rendezvous server")?;
+        stream.set_nodelay(true).ok();
+        Ok(Self {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    /// Connect with retries (server may start after the workers).
+    pub fn connect_retry(addr: SocketAddr, attempts: u32, delay: Duration) -> Result<Self> {
+        let mut last = None;
+        for _ in 0..attempts {
+            match Self::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => {
+                    last = Some(e);
+                    std::thread::sleep(delay);
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| anyhow!("connect_retry: zero attempts")))
+    }
+
+    fn call(&mut self, cmd: Command) -> Result<Reply> {
+        write_command(&mut self.writer, &cmd)?;
+        let reply = read_reply(&mut self.reader)?;
+        if let Reply::Err(msg) = &reply {
+            bail!("rendezvous error: {msg}");
+        }
+        Ok(reply)
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        Ok(matches!(self.call(Command::Ping)?, Reply::Pong))
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match self.call(Command::Set(key.into(), value.into()))? {
+            Reply::Ok => Ok(()),
+            r => bail!("unexpected SET reply {r:?}"),
+        }
+    }
+
+    pub fn get(&mut self, key: &str) -> Result<Option<String>> {
+        match self.call(Command::Get(key.into()))? {
+            Reply::Value(v) => Ok(Some(v)),
+            Reply::Nil => Ok(None),
+            r => bail!("unexpected GET reply {r:?}"),
+        }
+    }
+
+    /// Blocking get: poll until the key appears (metadata published by a
+    /// peer) or the timeout expires.
+    pub fn get_blocking(&mut self, key: &str, timeout: Duration) -> Result<String> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(v) = self.get(key)? {
+                return Ok(v);
+            }
+            if std::time::Instant::now() >= deadline {
+                bail!("timeout waiting for rendezvous key {key:?}");
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    pub fn del(&mut self, key: &str) -> Result<()> {
+        match self.call(Command::Del(key.into()))? {
+            Reply::Ok => Ok(()),
+            r => bail!("unexpected DEL reply {r:?}"),
+        }
+    }
+
+    pub fn incr(&mut self, key: &str) -> Result<i64> {
+        match self.call(Command::Incr(key.into()))? {
+            Reply::Int(n) => Ok(n),
+            r => bail!("unexpected INCR reply {r:?}"),
+        }
+    }
+
+    /// Counting barrier: returns when `n` participants have arrived at
+    /// `name`. Use a fresh name per round (e.g. suffix a step counter).
+    pub fn barrier(&mut self, name: &str, n: u64, timeout: Duration) -> Result<()> {
+        match self.call(Command::Wait {
+            key: name.into(),
+            n,
+            timeout_ms: timeout.as_millis() as u64,
+        })? {
+            Reply::Ok => Ok(()),
+            r => bail!("unexpected WAIT reply {r:?}"),
+        }
+    }
+}

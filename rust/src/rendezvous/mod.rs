@@ -1,0 +1,87 @@
+//! Lightweight coordination service — the paper's Redis replacement.
+//!
+//! Paper, Section III-D: "KAITIAN utilizes a lightweight coordination
+//! service, such as Redis, for initial process discovery, group membership
+//! management, and synchronization of metadata (e.g., benchmark scores,
+//! rendezvous information)." No Redis exists in this sandbox, so the repo
+//! implements the subset KAITIAN needs from scratch:
+//!
+//! * a TCP key-value store with `SET/GET/DEL/INCR/PING` ([`server`]),
+//! * counting barriers (`WAIT key n` blocks until n arrivals),
+//! * a blocking client ([`client`]) used by workers for rank discovery,
+//!   score exchange and mesh address exchange.
+//!
+//! Protocol ([`protocol`]): single-line text commands, length-prefixed
+//! values — trivially debuggable with `nc`.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::RendezvousClient;
+pub use server::RendezvousServer;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn end_to_end_kv_and_barrier() {
+        let server = RendezvousServer::spawn("127.0.0.1:0").unwrap();
+        let addr = server.addr();
+
+        let mut c = RendezvousClient::connect(addr).unwrap();
+        assert!(c.ping().unwrap());
+        c.set("score:0", "1.0").unwrap();
+        assert_eq!(c.get("score:0").unwrap().as_deref(), Some("1.0"));
+        assert_eq!(c.get("missing").unwrap(), None);
+        assert_eq!(c.incr("rank").unwrap(), 1);
+        assert_eq!(c.incr("rank").unwrap(), 2);
+
+        // 3-party barrier across threads.
+        let hs: Vec<_> = (0..3)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut c = RendezvousClient::connect(addr).unwrap();
+                    c.barrier("start", 3, Duration::from_secs(5)).unwrap();
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn barrier_timeout_errors() {
+        let server = RendezvousServer::spawn("127.0.0.1:0").unwrap();
+        let mut c = RendezvousClient::connect(server.addr()).unwrap();
+        let err = c
+            .barrier("lonely", 2, Duration::from_millis(100))
+            .unwrap_err();
+        assert!(err.to_string().contains("timeout"), "{err}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn values_with_spaces_and_newlines() {
+        let server = RendezvousServer::spawn("127.0.0.1:0").unwrap();
+        let mut c = RendezvousClient::connect(server.addr()).unwrap();
+        let v = "a b c\nmulti line\tvalue";
+        c.set("k", v).unwrap();
+        assert_eq!(c.get("k").unwrap().as_deref(), Some(v));
+        server.shutdown();
+    }
+
+    #[test]
+    fn del_removes() {
+        let server = RendezvousServer::spawn("127.0.0.1:0").unwrap();
+        let mut c = RendezvousClient::connect(server.addr()).unwrap();
+        c.set("x", "1").unwrap();
+        c.del("x").unwrap();
+        assert_eq!(c.get("x").unwrap(), None);
+        server.shutdown();
+    }
+}

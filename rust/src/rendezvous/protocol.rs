@@ -1,0 +1,208 @@
+//! Wire protocol for the rendezvous service.
+//!
+//! Commands (client → server), one per line:
+//! ```text
+//! PING
+//! SET <key> <value-len>\n<value-bytes>
+//! GET <key>
+//! DEL <key>
+//! INCR <key>
+//! WAIT <key> <n> <timeout-ms>
+//! ```
+//! Replies (server → client):
+//! ```text
+//! PONG | OK | NIL | INT <n> | VALUE <len>\n<bytes> | ERR <message>
+//! ```
+//! Values are length-prefixed so they can contain spaces/newlines.
+
+use std::io::{BufRead, Write};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::Result;
+
+/// Parsed client command.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    Ping,
+    Set(String, String),
+    Get(String),
+    Del(String),
+    Incr(String),
+    Wait {
+        key: String,
+        n: u64,
+        timeout_ms: u64,
+    },
+}
+
+/// Server reply.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    Pong,
+    Ok,
+    Nil,
+    Int(i64),
+    Value(String),
+    Err(String),
+}
+
+/// Read one command from a buffered stream.
+pub fn read_command(r: &mut impl BufRead) -> Result<Option<Command>> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Ok(None); // connection closed
+    }
+    let line = line.trim_end_matches(['\r', '\n']);
+    let mut parts = line.splitn(3, ' ');
+    let verb = parts.next().unwrap_or("");
+    let cmd = match verb.to_ascii_uppercase().as_str() {
+        "PING" => Command::Ping,
+        "SET" => {
+            let key = parts.next().ok_or_else(|| anyhow!("SET needs key"))?.to_string();
+            let len: usize = parts
+                .next()
+                .ok_or_else(|| anyhow!("SET needs value length"))?
+                .parse()
+                .context("SET length")?;
+            let mut buf = vec![0_u8; len + 1]; // + trailing '\n'
+            r.read_exact(&mut buf)?;
+            buf.pop();
+            Command::Set(key, String::from_utf8(buf).context("SET value utf8")?)
+        }
+        "GET" => Command::Get(parts.next().ok_or_else(|| anyhow!("GET needs key"))?.to_string()),
+        "DEL" => Command::Del(parts.next().ok_or_else(|| anyhow!("DEL needs key"))?.to_string()),
+        "INCR" => Command::Incr(parts.next().ok_or_else(|| anyhow!("INCR needs key"))?.to_string()),
+        "WAIT" => {
+            let key = parts.next().ok_or_else(|| anyhow!("WAIT needs key"))?.to_string();
+            let rest = parts.next().ok_or_else(|| anyhow!("WAIT needs n and timeout"))?;
+            let mut nums = rest.split(' ');
+            let n = nums.next().ok_or_else(|| anyhow!("WAIT n"))?.parse()?;
+            let timeout_ms = nums.next().ok_or_else(|| anyhow!("WAIT timeout"))?.parse()?;
+            Command::Wait { key, n, timeout_ms }
+        }
+        other => bail!("unknown command {other:?}"),
+    };
+    Ok(Some(cmd))
+}
+
+/// Write one command.
+pub fn write_command(w: &mut impl Write, cmd: &Command) -> Result<()> {
+    match cmd {
+        Command::Ping => writeln!(w, "PING")?,
+        Command::Set(k, v) => {
+            writeln!(w, "SET {k} {}", v.len())?;
+            w.write_all(v.as_bytes())?;
+            w.write_all(b"\n")?;
+        }
+        Command::Get(k) => writeln!(w, "GET {k}")?,
+        Command::Del(k) => writeln!(w, "DEL {k}")?,
+        Command::Incr(k) => writeln!(w, "INCR {k}")?,
+        Command::Wait { key, n, timeout_ms } => writeln!(w, "WAIT {key} {n} {timeout_ms}")?,
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one reply.
+pub fn read_reply(r: &mut impl BufRead) -> Result<Reply> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        bail!("rendezvous server closed the connection");
+    }
+    let line = line.trim_end_matches(['\r', '\n']);
+    let reply = if line == "PONG" {
+        Reply::Pong
+    } else if line == "OK" {
+        Reply::Ok
+    } else if line == "NIL" {
+        Reply::Nil
+    } else if let Some(n) = line.strip_prefix("INT ") {
+        Reply::Int(n.parse().context("INT reply")?)
+    } else if let Some(len) = line.strip_prefix("VALUE ") {
+        let len: usize = len.parse().context("VALUE length")?;
+        let mut buf = vec![0_u8; len + 1];
+        r.read_exact(&mut buf)?;
+        buf.pop();
+        Reply::Value(String::from_utf8(buf).context("VALUE utf8")?)
+    } else if let Some(msg) = line.strip_prefix("ERR ") {
+        Reply::Err(msg.to_string())
+    } else {
+        bail!("malformed reply {line:?}")
+    };
+    Ok(reply)
+}
+
+/// Write one reply.
+pub fn write_reply(w: &mut impl Write, reply: &Reply) -> Result<()> {
+    match reply {
+        Reply::Pong => writeln!(w, "PONG")?,
+        Reply::Ok => writeln!(w, "OK")?,
+        Reply::Nil => writeln!(w, "NIL")?,
+        Reply::Int(n) => writeln!(w, "INT {n}")?,
+        Reply::Value(v) => {
+            writeln!(w, "VALUE {}", v.len())?;
+            w.write_all(v.as_bytes())?;
+            w.write_all(b"\n")?;
+        }
+        Reply::Err(m) => writeln!(w, "ERR {}", m.replace('\n', " "))?,
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn roundtrip_cmd(cmd: Command) {
+        let mut buf = Vec::new();
+        write_command(&mut buf, &cmd).unwrap();
+        let mut r = BufReader::new(buf.as_slice());
+        assert_eq!(read_command(&mut r).unwrap().unwrap(), cmd);
+    }
+
+    fn roundtrip_reply(reply: Reply) {
+        let mut buf = Vec::new();
+        write_reply(&mut buf, &reply).unwrap();
+        let mut r = BufReader::new(buf.as_slice());
+        assert_eq!(read_reply(&mut r).unwrap(), reply);
+    }
+
+    #[test]
+    fn command_roundtrips() {
+        roundtrip_cmd(Command::Ping);
+        roundtrip_cmd(Command::Set("k".into(), "v with spaces\nand newline".into()));
+        roundtrip_cmd(Command::Get("key:with:colons".into()));
+        roundtrip_cmd(Command::Del("x".into()));
+        roundtrip_cmd(Command::Incr("counter".into()));
+        roundtrip_cmd(Command::Wait {
+            key: "b".into(),
+            n: 4,
+            timeout_ms: 5000,
+        });
+    }
+
+    #[test]
+    fn reply_roundtrips() {
+        roundtrip_reply(Reply::Pong);
+        roundtrip_reply(Reply::Ok);
+        roundtrip_reply(Reply::Nil);
+        roundtrip_reply(Reply::Int(-7));
+        roundtrip_reply(Reply::Value("multi\nline value".into()));
+        roundtrip_reply(Reply::Err("boom".into()));
+    }
+
+    #[test]
+    fn eof_is_none() {
+        let mut r = BufReader::new(&b""[..]);
+        assert!(read_command(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn unknown_command_is_error() {
+        let mut r = BufReader::new(&b"BOGUS x\n"[..]);
+        assert!(read_command(&mut r).is_err());
+    }
+}

@@ -1,0 +1,191 @@
+//! Rendezvous server: thread-per-connection TCP KV store with barriers.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use super::protocol::{read_command, write_reply, Command, Reply};
+use crate::Result;
+
+#[derive(Default)]
+struct State {
+    kv: HashMap<String, String>,
+    counters: HashMap<String, i64>,
+    barriers: HashMap<String, u64>,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    barrier_cv: Condvar,
+    running: AtomicBool,
+}
+
+/// A running rendezvous server (background accept loop).
+pub struct RendezvousServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RendezvousServer {
+    /// Bind `addr` (use port 0 for ephemeral) and start serving.
+    pub fn spawn(addr: &str) -> Result<Self> {
+        let listener = TcpListener::bind(addr).context("bind rendezvous server")?;
+        let local = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State::default()),
+            barrier_cv: Condvar::new(),
+            running: AtomicBool::new(true),
+        });
+        let shared2 = shared.clone();
+        let accept_thread = std::thread::spawn(move || {
+            // Nonblocking-ish accept loop: poll `running` between accepts.
+            listener
+                .set_nonblocking(true)
+                .expect("set_nonblocking on listener");
+            while shared2.running.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        let shared3 = shared2.clone();
+                        std::thread::spawn(move || {
+                            let _ = serve_connection(stream, shared3);
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(Self {
+            addr: local,
+            shared,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting; existing connections die with their threads.
+    pub fn shutdown(mut self) {
+        self.shared.running.store(false, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RendezvousServer {
+    fn drop(&mut self) {
+        self.shared.running.store(false, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    while let Some(cmd) = read_command(&mut reader).unwrap_or(None) {
+        let reply = handle(&shared, cmd);
+        write_reply(&mut writer, &reply)?;
+    }
+    Ok(())
+}
+
+fn handle(shared: &Shared, cmd: Command) -> Reply {
+    match cmd {
+        Command::Ping => Reply::Pong,
+        Command::Set(k, v) => {
+            shared.state.lock().unwrap().kv.insert(k, v);
+            Reply::Ok
+        }
+        Command::Get(k) => match shared.state.lock().unwrap().kv.get(&k) {
+            Some(v) => Reply::Value(v.clone()),
+            None => Reply::Nil,
+        },
+        Command::Del(k) => {
+            shared.state.lock().unwrap().kv.remove(&k);
+            Reply::Ok
+        }
+        Command::Incr(k) => {
+            let mut st = shared.state.lock().unwrap();
+            let c = st.counters.entry(k).or_insert(0);
+            *c += 1;
+            Reply::Int(*c)
+        }
+        Command::Wait { key, n, timeout_ms } => {
+            let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+            let mut st = shared.state.lock().unwrap();
+            *st.barriers.entry(key.clone()).or_insert(0) += 1;
+            shared.barrier_cv.notify_all();
+            loop {
+                let arrived = *st.barriers.get(&key).unwrap_or(&0);
+                // Barrier generation trick: once n arrivals happen the
+                // count stays >= n for this generation; clients of the
+                // same barrier name should use distinct names per round
+                // (the client appends a round counter).
+                if arrived >= n {
+                    return Reply::Ok;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    return Reply::Err(format!(
+                        "barrier {key:?} timeout: {arrived}/{n} arrived"
+                    ));
+                }
+                let (guard, _) = shared
+                    .barrier_cv
+                    .wait_timeout(st, deadline - now)
+                    .unwrap();
+                st = guard;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rendezvous::RendezvousClient;
+
+    #[test]
+    fn concurrent_incr_is_linearizable() {
+        let server = RendezvousServer::spawn("127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut c = RendezvousClient::connect(addr).unwrap();
+                    (0..25).map(|_| c.incr("n").unwrap()).collect::<Vec<i64>>()
+                })
+            })
+            .collect();
+        let mut all: Vec<i64> = hs.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        // 200 increments must yield exactly 1..=200 — no lost updates.
+        assert_eq!(all, (1..=200).collect::<Vec<i64>>());
+        server.shutdown();
+    }
+
+    #[test]
+    fn many_clients_share_kv() {
+        let server = RendezvousServer::spawn("127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let mut a = RendezvousClient::connect(addr).unwrap();
+        let mut b = RendezvousClient::connect(addr).unwrap();
+        a.set("shared", "from-a").unwrap();
+        assert_eq!(b.get("shared").unwrap().as_deref(), Some("from-a"));
+        server.shutdown();
+    }
+}

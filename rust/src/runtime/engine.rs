@@ -1,0 +1,136 @@
+//! The PJRT engine: one CPU client + a cache of compiled executables.
+//!
+//! Executables are compiled lazily on first use (compiling every batch
+//! bucket of every program up front would cost tens of seconds) and cached
+//! for the life of the process. The engine is shared by all simulated
+//! devices/worker threads.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context};
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+use crate::Result;
+
+/// Thread-safe wrapper around a compiled PJRT executable.
+///
+/// SAFETY: the `xla` crate wrappers hold raw pointers and are therefore not
+/// auto-`Send`/`Sync`, but the underlying PJRT *CPU* client
+/// (`TfrtCpuClient`) and its loaded executables are documented thread-safe
+/// in XLA — `Execute` may be invoked concurrently from multiple threads.
+/// We never expose interior mutability beyond `execute`.
+pub struct SharedExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Name for diagnostics (file stem).
+    pub name: String,
+}
+
+unsafe impl Send for SharedExecutable {}
+unsafe impl Sync for SharedExecutable {}
+
+impl SharedExecutable {
+    /// Execute with host tensors; returns the decomposed output tuple.
+    ///
+    /// All L2 programs are lowered with `return_tuple=True`, so the single
+    /// output literal is always a tuple (possibly of one element).
+    pub fn run(&self, args: &[HostTensor]) -> Result<Vec<xla::Literal>> {
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with pre-built literals (hot path: avoids re-building
+    /// literals for buffers that don't change between calls).
+    pub fn run_literals(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("PJRT execute failed for {}: {e:?}", self.name))?;
+        let tuple = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output of {}: {e:?}", self.name))?;
+        tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple output of {}: {e:?}", self.name))
+    }
+}
+
+/// PJRT engine: client + manifest + lazy executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<SharedExecutable>>>,
+}
+
+// SAFETY: see SharedExecutable — the PJRT CPU client is thread-safe.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            dir,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of executables currently compiled & cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Get (compiling + caching on first use) the executable for an
+    /// artifact file name, e.g. `"mobinet_grad_b64.hlo.txt"`.
+    pub fn executable(&self, file: &str) -> Result<Arc<SharedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(file) {
+            return Ok(exe.clone());
+        }
+        // Compile outside the lock: compilation can take seconds and other
+        // threads may want other executables meanwhile. A duplicate compile
+        // of the same file is possible but harmless (last one wins).
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO text {path:?}: {e:?}"))
+        .context("run `make artifacts` if artifacts are missing/stale")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("XLA compile of {file}: {e:?}"))?;
+        let shared = Arc::new(SharedExecutable {
+            exe,
+            name: file.to_string(),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(file.to_string(), shared.clone());
+        Ok(shared)
+    }
+}

@@ -1,0 +1,267 @@
+//! `artifacts/manifest.json` schema — the contract between `aot.py` (which
+//! writes it) and the rust runtime (which loads executables through it).
+//! Parsed with the in-repo JSON parser (`util::json`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor argument: shape + dtype, as recorded by aot.py.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<i64>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<i64>() as usize
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let shape = v
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("shape not an array"))?
+            .iter()
+            .map(|d| d.as_f64().map(|f| f as i64).ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            shape,
+            dtype: v.str_req("dtype")?.to_string(),
+        })
+    }
+}
+
+/// A single lowered HLO file.
+#[derive(Debug, Clone)]
+pub struct FileEntry {
+    pub file: String,
+    pub bytes: u64,
+    pub sha256: String,
+}
+
+impl FileEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            file: v.str_req("file")?.to_string(),
+            bytes: v.f64_req("bytes")? as u64,
+            sha256: v.str_req("sha256")?.to_string(),
+        })
+    }
+}
+
+/// Per-program-family files: init/apply once, grad/eval per batch bucket.
+#[derive(Debug, Clone)]
+pub struct FileSet {
+    pub init: FileEntry,
+    pub apply: FileEntry,
+    pub grad: BTreeMap<usize, FileEntry>,
+    pub eval: BTreeMap<usize, FileEntry>,
+}
+
+fn bucket_map(v: &Json) -> Result<BTreeMap<usize, FileEntry>> {
+    v.as_obj()
+        .ok_or_else(|| anyhow!("bucket file map is not an object"))?
+        .iter()
+        .map(|(k, f)| {
+            Ok((
+                k.parse::<usize>().context("bucket key not an integer")?,
+                FileEntry::from_json(f)?,
+            ))
+        })
+        .collect()
+}
+
+/// Manifest entry for one model preset (e.g. "mobinet").
+#[derive(Debug, Clone)]
+pub struct ProgramManifest {
+    pub param_count: usize,
+    pub buckets: Vec<usize>,
+    pub hyper_len: usize,
+    pub hyper_layout: Vec<String>,
+    /// bucket -> ordered batch input specs (x, y, mask).
+    pub batch_inputs: BTreeMap<usize, Vec<TensorSpec>>,
+    pub files: FileSet,
+    /// Free-form model metadata (task, dims...) for diagnostics.
+    pub meta: Json,
+}
+
+impl ProgramManifest {
+    fn from_json(v: &Json) -> Result<Self> {
+        let buckets = v
+            .req("buckets")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("buckets not an array"))?
+            .iter()
+            .map(|b| b.as_usize().ok_or_else(|| anyhow!("bad bucket")))
+            .collect::<Result<Vec<_>>>()?;
+        let files = v.req("files")?;
+        let batch_inputs = v
+            .req("batch_inputs")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("batch_inputs not an object"))?
+            .iter()
+            .map(|(k, specs)| {
+                let bucket = k.parse::<usize>().context("batch_inputs key")?;
+                let specs = specs
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("batch_inputs entry not an array"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok((bucket, specs))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(Self {
+            param_count: v.usize_req("param_count")?,
+            buckets,
+            hyper_len: v.usize_req("hyper_len")?,
+            hyper_layout: v
+                .req("hyper_layout")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|s| s.as_str().map(String::from))
+                .collect(),
+            batch_inputs,
+            files: FileSet {
+                init: FileEntry::from_json(files.req("init")?)?,
+                apply: FileEntry::from_json(files.req("apply")?)?,
+                grad: bucket_map(files.req("grad")?)?,
+                eval: bucket_map(files.req("eval")?)?,
+            },
+            meta: v.get("meta").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    /// Smallest compiled bucket that can hold `n` samples.
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.buckets.iter().copied().find(|&b| b >= n).ok_or_else(|| {
+            anyhow!(
+                "no batch bucket >= {n} (largest lowered bucket is {:?})",
+                self.buckets.last()
+            )
+        })
+    }
+
+    pub fn batch_specs(&self, bucket: usize) -> Result<&[TensorSpec]> {
+        self.batch_inputs
+            .get(&bucket)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("bucket {bucket} not in manifest"))
+    }
+}
+
+/// The whole manifest file.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub programs: BTreeMap<String, ProgramManifest>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("parsing manifest.json")?;
+        let format = v.str_req("format")?.to_string();
+        if format != "hlo-text-v1" {
+            bail!("unsupported artifact format {format:?}");
+        }
+        let programs = v
+            .req("programs")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("programs not an object"))?
+            .iter()
+            .map(|(k, p)| {
+                Ok((
+                    k.clone(),
+                    ProgramManifest::from_json(p).with_context(|| format!("program {k:?}"))?,
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(Self { format, programs })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramManifest> {
+        self.programs.get(name).ok_or_else(|| {
+            anyhow!(
+                "program {name:?} not in manifest (have {:?}) — re-run `make artifacts`",
+                self.programs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Manifest {
+        let json = r#"{
+          "format": "hlo-text-v1",
+          "programs": {
+            "m": {
+              "param_count": 10,
+              "buckets": [4, 8, 16],
+              "hyper_len": 4,
+              "hyper_layout": ["lr", "momentum", "weight_decay", "grad_scale"],
+              "meta": {"task": "image_classification"},
+              "batch_inputs": {"4": [{"shape": [4, 2], "dtype": "float32"}]},
+              "files": {
+                "init": {"file": "m_init.hlo.txt", "bytes": 1, "sha256": "x"},
+                "apply": {"file": "m_apply.hlo.txt", "bytes": 1, "sha256": "x"},
+                "grad": {"4": {"file": "g4", "bytes": 1, "sha256": "x"}},
+                "eval": {"4": {"file": "e4", "bytes": 1, "sha256": "x"}}
+              },
+              "outputs": {}
+            }
+          }
+        }"#;
+        Manifest::parse(json).unwrap()
+    }
+
+    #[test]
+    fn bucket_selection_picks_smallest_fit() {
+        let m = sample_manifest();
+        let p = m.program("m").unwrap();
+        assert_eq!(p.bucket_for(1).unwrap(), 4);
+        assert_eq!(p.bucket_for(4).unwrap(), 4);
+        assert_eq!(p.bucket_for(5).unwrap(), 8);
+        assert_eq!(p.bucket_for(16).unwrap(), 16);
+        assert!(p.bucket_for(17).is_err());
+    }
+
+    #[test]
+    fn unknown_program_is_error() {
+        let m = sample_manifest();
+        assert!(m.program("nope").is_err());
+    }
+
+    #[test]
+    fn specs_parse() {
+        let m = sample_manifest();
+        let p = m.program("m").unwrap();
+        let specs = p.batch_specs(4).unwrap();
+        assert_eq!(specs[0].shape, vec![4, 2]);
+        assert_eq!(specs[0].dtype, "float32");
+        assert_eq!(specs[0].element_count(), 8);
+        assert_eq!(p.files.grad.get(&4).unwrap().file, "g4");
+        assert_eq!(p.meta.str_req("task").unwrap(), "image_classification");
+    }
+
+    #[test]
+    fn bad_format_rejected() {
+        let json = r#"{"format": "hlo-text-v999", "programs": {}}"#;
+        assert!(Manifest::parse(json).is_err());
+    }
+}

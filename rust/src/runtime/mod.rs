@@ -1,0 +1,27 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them from the coordinator's hot path.
+//!
+//! The flow (see `/opt/xla-example/load_hlo` and `python/compile/aot.py`):
+//!
+//! ```text
+//! jax.jit(fn).lower(...) ──(HLO text)──▶ HloModuleProto::from_text_file
+//!        (build time, python)             │
+//!                                         ▼
+//!                        XlaComputation::from_proto ─▶ client.compile
+//!                                         │
+//!                 execute(&[Literal]) ◀───┘  (request path, rust only)
+//! ```
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids.
+
+pub mod engine;
+pub mod manifest;
+pub mod programs;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{Manifest, ProgramManifest, TensorSpec};
+pub use programs::{BatchData, GradOut, ModelPrograms};
+pub use tensor::HostTensor;

@@ -1,0 +1,166 @@
+//! Typed API over one model preset's program family
+//! (init / grad_step / apply_update / eval_step), matching the contract in
+//! `python/compile/model.py`.
+
+use std::sync::Arc;
+
+use anyhow::anyhow;
+
+use super::engine::Engine;
+use super::manifest::ProgramManifest;
+use super::tensor::{literal_from_f32_slice, literal_scalar_f32, literal_to_f32, HostTensor};
+use crate::Result;
+
+/// One rank's (already bucket-padded) batch: inputs in manifest order.
+#[derive(Debug, Clone)]
+pub struct BatchData {
+    /// x (images f32 / tokens i32), y (labels/targets i32), mask (f32).
+    pub tensors: Vec<HostTensor>,
+    /// Number of *real* (unmasked) samples.
+    pub real_samples: usize,
+    /// Bucket size the tensors are padded to.
+    pub bucket: usize,
+}
+
+impl BatchData {
+    pub fn size_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.size_bytes()).sum()
+    }
+}
+
+/// Output of one local grad step.
+#[derive(Debug, Clone)]
+pub struct GradOut {
+    /// Flat sum-of-per-sample gradients (length = param_count).
+    pub grads: Vec<f32>,
+    /// Masked sum of per-sample losses.
+    pub loss_sum: f32,
+    /// Masked count of correct predictions (f32 for uniformity).
+    pub correct: f32,
+}
+
+/// Handle to a model preset's executables, lazily compiled via [`Engine`].
+pub struct ModelPrograms {
+    engine: Arc<Engine>,
+    name: String,
+    manifest: ProgramManifest,
+}
+
+impl ModelPrograms {
+    pub fn new(engine: Arc<Engine>, preset: &str) -> Result<Self> {
+        let manifest = engine.manifest().program(preset)?.clone();
+        Ok(Self {
+            engine,
+            name: preset.to_string(),
+            manifest,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn manifest(&self) -> &ProgramManifest {
+        &self.manifest
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.manifest.param_count
+    }
+
+    pub fn buckets(&self) -> &[usize] {
+        &self.manifest.buckets
+    }
+
+    /// Deterministic parameter init from a scalar seed.
+    pub fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
+        let exe = self.engine.executable(&self.manifest.files.init.file)?;
+        let outs = exe.run(&[HostTensor::scalar_i32(seed)])?;
+        let flat = literal_to_f32(&outs[0])?;
+        if flat.len() != self.manifest.param_count {
+            return Err(anyhow!(
+                "init returned {} params, manifest says {}",
+                flat.len(),
+                self.manifest.param_count
+            ));
+        }
+        Ok(flat)
+    }
+
+    /// Local fwd+bwd: returns summed gradients + loss/accuracy numerators.
+    pub fn grad_step(&self, params: &[f32], batch: &BatchData) -> Result<GradOut> {
+        let file = self
+            .manifest
+            .files
+            .grad
+            .get(&batch.bucket)
+            .ok_or_else(|| anyhow!("no grad program for bucket {}", batch.bucket))?;
+        let exe = self.engine.executable(&file.file)?;
+        // Build literals straight from borrowed buffers (no staging Vecs).
+        let mut args = vec![literal_from_f32_slice(params, &[params.len() as i64])?];
+        for t in &batch.tensors {
+            args.push(t.to_literal()?);
+        }
+        let outs = exe.run_literals(&args)?;
+        Ok(GradOut {
+            grads: literal_to_f32(&outs[0])?,
+            loss_sum: literal_scalar_f32(&outs[1])?,
+            correct: literal_scalar_f32(&outs[2])?,
+        })
+    }
+
+    /// Fused SGD-momentum update (L1 Pallas kernel); `hyper` =
+    /// [lr, momentum, weight_decay, grad_scale].
+    pub fn apply_update(
+        &self,
+        params: &mut Vec<f32>,
+        momentum: &mut Vec<f32>,
+        grads: &[f32],
+        hyper: [f32; 4],
+    ) -> Result<()> {
+        let exe = self.engine.executable(&self.manifest.files.apply.file)?;
+        let n = params.len() as i64;
+        let outs = exe.run_literals(&[
+            literal_from_f32_slice(params, &[n])?,
+            literal_from_f32_slice(momentum, &[n])?,
+            literal_from_f32_slice(grads, &[n])?,
+            literal_from_f32_slice(&hyper, &[4])?,
+        ])?;
+        *params = literal_to_f32(&outs[0])?;
+        *momentum = literal_to_f32(&outs[1])?;
+        Ok(())
+    }
+
+    /// Eval pass: (loss_sum, correct) numerators over the masked batch.
+    pub fn eval_step(&self, params: &[f32], batch: &BatchData) -> Result<(f32, f32)> {
+        let file = self
+            .manifest
+            .files
+            .eval
+            .get(&batch.bucket)
+            .ok_or_else(|| anyhow!("no eval program for bucket {}", batch.bucket))?;
+        let exe = self.engine.executable(&file.file)?;
+        let mut args = vec![literal_from_f32_slice(params, &[params.len() as i64])?];
+        for t in &batch.tensors {
+            args.push(t.to_literal()?);
+        }
+        let outs = exe.run_literals(&args)?;
+        Ok((literal_scalar_f32(&outs[0])?, literal_scalar_f32(&outs[1])?))
+    }
+
+    /// Warm the executable cache for a set of buckets (used by the
+    /// profiler so benchmarking doesn't include compile time).
+    pub fn warm(&self, buckets: &[usize]) -> Result<()> {
+        self.engine.executable(&self.manifest.files.init.file)?;
+        self.engine.executable(&self.manifest.files.apply.file)?;
+        for b in buckets {
+            if let Some(f) = self.manifest.files.grad.get(b) {
+                self.engine.executable(&f.file)?;
+            }
+            if let Some(f) = self.manifest.files.eval.get(b) {
+                self.engine.executable(&f.file)?;
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,275 @@
+//! Proportional batch allocation with exact global-batch preservation.
+
+/// Split `global_batch` across devices proportionally to `scores`
+/// (paper Eq. in §III-C), using the largest-remainder method so that
+/// `Σ b_i == global_batch` exactly.
+///
+/// Zero/negative scores get zero samples. If all scores are zero the
+/// batch is split as evenly as possible (degenerate but total-preserving).
+pub fn proportional_allocation(scores: &[f64], global_batch: usize) -> Vec<usize> {
+    let n = scores.len();
+    if n == 0 {
+        return vec![];
+    }
+    let clamped: Vec<f64> = scores.iter().map(|s| s.max(0.0)).collect();
+    let total: f64 = clamped.iter().sum();
+    if total <= 0.0 {
+        // Degenerate: even split.
+        let base = global_batch / n;
+        let extra = global_batch % n;
+        return (0..n).map(|i| base + usize::from(i < extra)).collect();
+    }
+
+    // Ideal (real-valued) shares, floored; distribute the remainder to the
+    // largest fractional parts (ties broken by lower index for
+    // determinism).
+    let ideal: Vec<f64> = clamped
+        .iter()
+        .map(|s| s / total * global_batch as f64)
+        .collect();
+    let mut alloc: Vec<usize> = ideal.iter().map(|x| x.floor() as usize).collect();
+    let assigned: usize = alloc.iter().sum();
+    let mut remainder: Vec<(usize, f64)> = ideal
+        .iter()
+        .enumerate()
+        .map(|(i, x)| (i, x - x.floor()))
+        .collect();
+    remainder.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    for k in 0..global_batch - assigned {
+        alloc[remainder[k % n].0] += 1;
+    }
+    debug_assert_eq!(alloc.iter().sum::<usize>(), global_batch);
+    alloc
+}
+
+/// Clamp each device's allocation to `cap` (the largest compiled batch
+/// bucket), redistributing the excess to devices with headroom while
+/// preserving the total. Errors if the total cannot fit (`Σ > cap·n`).
+///
+/// Redistribution follows the original proportions: devices that were
+/// assigned more keep receiving the excess first.
+pub fn cap_allocation(alloc: &[usize], cap: usize) -> crate::Result<Vec<usize>> {
+    let total: usize = alloc.iter().sum();
+    anyhow::ensure!(
+        total <= cap * alloc.len(),
+        "global batch {total} cannot fit {} devices at max bucket {cap} — \
+         lower the global batch or lower `aot.py` bucket coverage",
+        alloc.len()
+    );
+    let mut out: Vec<usize> = alloc.iter().map(|&b| b.min(cap)).collect();
+    let mut excess = total - out.iter().sum::<usize>();
+    // Hand excess to devices with headroom, largest original share first
+    // (deterministic: ties by index).
+    let mut order: Vec<usize> = (0..alloc.len()).collect();
+    order.sort_by(|&a, &b| alloc[b].cmp(&alloc[a]).then(a.cmp(&b)));
+    while excess > 0 {
+        let mut moved = false;
+        for &i in &order {
+            if excess == 0 {
+                break;
+            }
+            if out[i] < cap {
+                out[i] += 1;
+                excess -= 1;
+                moved = true;
+            }
+        }
+        debug_assert!(moved, "headroom exists by the ensure above");
+        if !moved {
+            break;
+        }
+    }
+    debug_assert_eq!(out.iter().sum::<usize>(), total);
+    Ok(out)
+}
+
+/// The per-device share as a fraction of the global batch.
+pub fn shares(alloc: &[usize]) -> Vec<f64> {
+    let total: usize = alloc.iter().sum();
+    if total == 0 {
+        return vec![0.0; alloc.len()];
+    }
+    alloc.iter().map(|&b| b as f64 / total as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_default;
+
+    #[test]
+    fn equal_scores_even_split() {
+        assert_eq!(proportional_allocation(&[1.0, 1.0], 256), vec![128, 128]);
+        assert_eq!(
+            proportional_allocation(&[1.0, 1.0, 1.0, 1.0], 256),
+            vec![64, 64, 64, 64]
+        );
+    }
+
+    #[test]
+    fn paper_example_gpu_mlu() {
+        // GPU score 0.7, MLU score 1.0 (MLU ≈ 1.42x faster): the MLU gets
+        // ~59% of the batch.
+        let alloc = proportional_allocation(&[0.7, 1.0], 256);
+        assert_eq!(alloc.iter().sum::<usize>(), 256);
+        assert_eq!(alloc, vec![105, 151]);
+    }
+
+    #[test]
+    fn rounding_preserves_total_exactly() {
+        let alloc = proportional_allocation(&[1.0, 1.0, 1.0], 256);
+        assert_eq!(alloc.iter().sum::<usize>(), 256);
+        // 256/3 = 85.33: two get 85, one gets 86.
+        let mut sorted = alloc.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![85, 85, 86]);
+    }
+
+    #[test]
+    fn zero_score_devices_starve() {
+        let alloc = proportional_allocation(&[1.0, 0.0, 1.0], 100);
+        assert_eq!(alloc[1], 0);
+        assert_eq!(alloc.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn all_zero_scores_fall_back_to_even() {
+        let alloc = proportional_allocation(&[0.0, 0.0, 0.0], 10);
+        assert_eq!(alloc, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn empty_devices() {
+        assert!(proportional_allocation(&[], 256).is_empty());
+    }
+
+    #[test]
+    fn batch_smaller_than_world() {
+        let alloc = proportional_allocation(&[1.0, 1.0, 1.0, 1.0], 2);
+        assert_eq!(alloc.iter().sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn cap_redistributes_excess() {
+        // 19/13 with cap 16 -> 16/16.
+        let capped = cap_allocation(&[13, 19], 16).unwrap();
+        assert_eq!(capped.iter().sum::<usize>(), 32);
+        assert!(capped.iter().all(|&b| b <= 16));
+        assert_eq!(capped, vec![16, 16]);
+    }
+
+    #[test]
+    fn cap_noop_when_under() {
+        assert_eq!(cap_allocation(&[5, 7], 16).unwrap(), vec![5, 7]);
+    }
+
+    #[test]
+    fn cap_infeasible_total_errors() {
+        assert!(cap_allocation(&[20, 20], 16).is_err());
+    }
+
+    #[test]
+    fn prop_cap_preserves_total_and_bound() {
+        check_default(
+            "cap-alloc",
+            |rng| {
+                let n = 1 + rng.below(8);
+                let cap = 8 + rng.below(64);
+                // Feasible totals only.
+                let total = rng.below(cap * n + 1);
+                let alloc = proportional_allocation(
+                    &(0..n).map(|_| 0.1 + rng.next_f64()).collect::<Vec<_>>(),
+                    total,
+                );
+                (alloc, cap)
+            },
+            |(alloc, cap)| {
+                let capped = cap_allocation(alloc, *cap).map_err(|e| e.to_string())?;
+                if capped.iter().sum::<usize>() != alloc.iter().sum::<usize>() {
+                    return Err("total changed".into());
+                }
+                if capped.iter().any(|&b| b > *cap) {
+                    return Err("cap violated".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // properties (invariants from DESIGN.md §5)
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn prop_sum_always_equals_global_batch() {
+        check_default(
+            "alloc-sum",
+            |rng| {
+                let n = 1 + rng.below(16);
+                let scores: Vec<f64> = (0..n).map(|_| rng.next_f64() * 2.0).collect();
+                let batch = rng.below(1024);
+                (scores, batch)
+            },
+            |(scores, batch)| {
+                let alloc = proportional_allocation(scores, *batch);
+                if alloc.iter().sum::<usize>() == *batch {
+                    Ok(())
+                } else {
+                    Err(format!("sum {} != batch {batch}", alloc.iter().sum::<usize>()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_allocation_close_to_ideal() {
+        // |b_i - ideal_i| < 1 for the largest-remainder method.
+        check_default(
+            "alloc-near-ideal",
+            |rng| {
+                let n = 1 + rng.below(8);
+                let scores: Vec<f64> = (0..n).map(|_| 0.1 + rng.next_f64()).collect();
+                let batch = 1 + rng.below(512);
+                (scores, batch)
+            },
+            |(scores, batch)| {
+                let alloc = proportional_allocation(scores, *batch);
+                let total: f64 = scores.iter().sum();
+                for (i, &b) in alloc.iter().enumerate() {
+                    let ideal = scores[i] / total * *batch as f64;
+                    if (b as f64 - ideal).abs() >= 1.0 {
+                        return Err(format!("b[{i}]={b} vs ideal {ideal:.3}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_monotone_in_score() {
+        // A strictly higher score never gets a smaller share.
+        check_default(
+            "alloc-monotone",
+            |rng| {
+                let n = 2 + rng.below(8);
+                let scores: Vec<f64> = (0..n).map(|_| 0.05 + rng.next_f64()).collect();
+                (scores, 64 + rng.below(512))
+            },
+            |(scores, batch)| {
+                let alloc = proportional_allocation(scores, *batch);
+                for i in 0..scores.len() {
+                    for j in 0..scores.len() {
+                        if scores[i] > scores[j] && alloc[i] < alloc[j] {
+                            return Err(format!(
+                                "score[{i}]={:.3} > score[{j}]={:.3} but b {} < {}",
+                                scores[i], scores[j], alloc[i], alloc[j]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

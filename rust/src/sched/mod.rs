@@ -1,0 +1,29 @@
+//! Load-adaptive scheduling — the paper's second contribution
+//! (Section III-C).
+//!
+//! In synchronous data-parallel training the step pace is set by the
+//! slowest worker; heterogeneous devices therefore need workload shares
+//! proportional to their effective speed. KAITIAN:
+//!
+//! 1. benchmarks each device with a few timed fwd/bwd passes
+//!    ([`profiler::Profiler`]), scoring the fastest 1.0 and others
+//!    `score_i = t_fastest / t_i`;
+//! 2. splits each global mini-batch proportionally
+//!    ([`allocation::proportional_allocation`]):
+//!    `b_i = score_i / Σ score_j · B`, integer-rounded with the
+//!    largest-remainder method so `Σ b_i = B` exactly;
+//! 3. the per-rank sampler ([`sampler::KaitianSampler`]) turns the
+//!    allocation into dataset index ranges.
+//!
+//! [`strategy::Strategy`] also provides the Fig-3 baselines: naive equal
+//! split (A) and a fixed wrong-way ratio (C).
+
+pub mod allocation;
+pub mod profiler;
+pub mod sampler;
+pub mod strategy;
+
+pub use allocation::{cap_allocation, proportional_allocation};
+pub use profiler::Profiler;
+pub use sampler::KaitianSampler;
+pub use strategy::Strategy;

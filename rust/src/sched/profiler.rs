@@ -1,0 +1,134 @@
+//! Device benchmarking: measure per-device step time, derive scores.
+//!
+//! Paper §III-C "Offline Benchmarking": before the main loop, run a few
+//! fwd/bwd passes of the target model with a small fixed batch on every
+//! device; the fastest device scores 1.0 and device i scores
+//! `t_fastest / t_i`. Scores feed [`super::allocation`].
+//!
+//! Two sources of timings:
+//! * [`Profiler::profile_real`] — wall-clock timing of actual PJRT
+//!   `grad_step` executions (plus the device throttle, so the imposed
+//!   heterogeneity is observed exactly the way a real mixed cluster's
+//!   would be);
+//! * [`Profiler::profile_model`] — the calibrated [`SpeedModel`], used by
+//!   virtual-time simulation and unit tests.
+
+use std::time::Instant;
+
+use crate::device::{DeviceSpec, SpeedModel};
+use crate::runtime::{BatchData, ModelPrograms};
+use crate::Result;
+
+/// Benchmark configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Profiler {
+    /// Untimed warm-up iterations (compile + cache effects).
+    pub warmup_iters: usize,
+    /// Timed iterations; the median is used.
+    pub timed_iters: usize,
+    /// Per-device probe batch size (paper: "a small, fixed amount of
+    /// data").
+    pub probe_batch: usize,
+}
+
+impl Default for Profiler {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            timed_iters: 5,
+            probe_batch: 16,
+        }
+    }
+}
+
+impl Profiler {
+    /// Convert raw per-device times into paper scores
+    /// (`fastest == 1.0`, slower < 1.0).
+    pub fn scores_from_times(times: &[f64]) -> Vec<f64> {
+        let best = times.iter().copied().fold(f64::INFINITY, f64::min);
+        if !best.is_finite() || best <= 0.0 {
+            return vec![1.0; times.len()];
+        }
+        times.iter().map(|t| best / t).collect()
+    }
+
+    /// Time one device's real `grad_step` (median of `timed_iters`),
+    /// *including* the heterogeneity throttle applied by the caller via
+    /// `throttle` (seconds of extra sleep per measured second).
+    pub fn profile_real(
+        &self,
+        progs: &ModelPrograms,
+        params: &[f32],
+        batch: &BatchData,
+        throttle_factor: f64,
+    ) -> Result<f64> {
+        for _ in 0..self.warmup_iters {
+            progs.grad_step(params, batch)?;
+        }
+        let mut times = Vec::with_capacity(self.timed_iters);
+        for _ in 0..self.timed_iters {
+            let t0 = Instant::now();
+            progs.grad_step(params, batch)?;
+            let measured = t0.elapsed().as_secs_f64();
+            let extra = measured * (throttle_factor - 1.0).max(0.0);
+            if extra > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(extra));
+            }
+            times.push(measured * throttle_factor.max(1.0));
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok(times[times.len() / 2])
+    }
+
+    /// Modeled per-device probe times from the calibrated speed model.
+    pub fn profile_model(&self, devices: &[DeviceSpec], model: &SpeedModel) -> Vec<f64> {
+        devices
+            .iter()
+            .map(|d| model.step_time(d.dtype, self.probe_batch))
+            .collect()
+    }
+
+    /// Modeled scores for a cluster (used by simnet and by real mode as
+    /// the prior when `--no-profile` is set).
+    pub fn model_scores(&self, devices: &[DeviceSpec], model: &SpeedModel) -> Vec<f64> {
+        Self::scores_from_times(&self.profile_model(devices, model))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{parse_cluster, DeviceType};
+
+    #[test]
+    fn scores_fastest_is_one() {
+        let s = Profiler::scores_from_times(&[0.02, 0.017, 0.04]);
+        assert!((s[1] - 1.0).abs() < 1e-12);
+        assert!(s[0] < 1.0 && s[2] < s[0]);
+    }
+
+    #[test]
+    fn scores_equal_times_all_one() {
+        let s = Profiler::scores_from_times(&[0.5, 0.5]);
+        assert_eq!(s, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn degenerate_times_fall_back() {
+        assert_eq!(Profiler::scores_from_times(&[0.0, 0.0]), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn model_scores_match_paper_shape() {
+        let p = Profiler {
+            probe_batch: 128,
+            ..Default::default()
+        };
+        let devices = parse_cluster("1G+1M").unwrap();
+        let scores = p.model_scores(&devices, &SpeedModel::paper_default());
+        // MLU fastest → 1.0; GPU ≈ 0.7.
+        assert!((scores[1] - 1.0).abs() < 1e-12);
+        assert!((0.6..0.8).contains(&scores[0]), "{scores:?}");
+        assert_eq!(devices[0].dtype, DeviceType::GpuSim);
+    }
+}

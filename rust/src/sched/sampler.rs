@@ -1,0 +1,143 @@
+//! KaitianDistributedSampler: per-rank dataset index assignment under
+//! unequal (score-proportional) batch shares.
+//!
+//! Mirrors the paper's `KaitianDistributedSampler` override of PyTorch's
+//! `DistributedSampler`: given the per-device allocation for a step, each
+//! rank gets a disjoint, contiguous slice of the (deterministically
+//! shuffled) global sample sequence. Epoch boundaries reshuffle.
+
+use crate::util::Rng;
+
+/// Deterministic epoch-shuffled sampler over `dataset_len` samples.
+#[derive(Debug, Clone)]
+pub struct KaitianSampler {
+    dataset_len: usize,
+    global_batch: usize,
+    seed: u64,
+}
+
+impl KaitianSampler {
+    pub fn new(dataset_len: usize, global_batch: usize, seed: u64) -> Self {
+        assert!(dataset_len > 0 && global_batch > 0);
+        Self {
+            dataset_len,
+            global_batch,
+            seed,
+        }
+    }
+
+    /// Number of full steps per epoch (drop-last semantics, like the
+    /// paper's 196 steps/epoch for CIFAR-10 @ B=256).
+    pub fn steps_per_epoch(&self) -> usize {
+        self.dataset_len / self.global_batch
+    }
+
+    /// The shuffled global index sequence for an epoch.
+    fn epoch_perm(&self, epoch: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.dataset_len).collect();
+        let mut rng = Rng::new(self.seed ^ (epoch as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        rng.shuffle(&mut idx);
+        idx
+    }
+
+    /// Per-rank indices for `(epoch, step)` under `allocation`
+    /// (`allocation[r]` = rank r's batch share; `Σ = global_batch`).
+    ///
+    /// Returns one `Vec<usize>` of dataset indices per rank; slices are
+    /// disjoint and together cover exactly the step's global batch.
+    pub fn step_indices(
+        &self,
+        epoch: usize,
+        step: usize,
+        allocation: &[usize],
+    ) -> Vec<Vec<usize>> {
+        assert_eq!(
+            allocation.iter().sum::<usize>(),
+            self.global_batch,
+            "allocation must sum to the global batch"
+        );
+        assert!(step < self.steps_per_epoch(), "step out of range");
+        let perm = self.epoch_perm(epoch);
+        let base = step * self.global_batch;
+        let mut out = Vec::with_capacity(allocation.len());
+        let mut off = base;
+        for &b in allocation {
+            out.push(perm[off..off + b].to_vec());
+            off += b;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_default;
+
+    #[test]
+    fn steps_per_epoch_matches_paper() {
+        // CIFAR-10: 50_000 train samples, B=256 → 195 full steps
+        // (paper's "196" rounds up; we use drop-last).
+        let s = KaitianSampler::new(50_000, 256, 0);
+        assert_eq!(s.steps_per_epoch(), 195);
+    }
+
+    #[test]
+    fn slices_are_disjoint_and_cover_batch() {
+        let s = KaitianSampler::new(1000, 64, 7);
+        let alloc = vec![20, 30, 14];
+        let per_rank = s.step_indices(0, 3, &alloc);
+        assert_eq!(per_rank.len(), 3);
+        let mut all: Vec<usize> = per_rank.iter().flatten().copied().collect();
+        assert_eq!(all.len(), 64);
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 64, "indices must be disjoint");
+    }
+
+    #[test]
+    fn epochs_reshuffle_deterministically() {
+        let s = KaitianSampler::new(100, 10, 42);
+        let a = s.step_indices(0, 0, &[10]);
+        let b = s.step_indices(0, 0, &[10]);
+        assert_eq!(a, b, "same (epoch, step) must be reproducible");
+        let c = s.step_indices(1, 0, &[10]);
+        assert_ne!(a, c, "different epochs must differ");
+    }
+
+    #[test]
+    fn no_overlap_across_steps_within_epoch() {
+        let s = KaitianSampler::new(200, 50, 1);
+        let s0: Vec<usize> = s.step_indices(0, 0, &[25, 25]).concat();
+        let s1: Vec<usize> = s.step_indices(0, 1, &[25, 25]).concat();
+        for i in &s0 {
+            assert!(!s1.contains(i), "step batches within an epoch overlap");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "allocation must sum")]
+    fn wrong_allocation_sum_panics() {
+        let s = KaitianSampler::new(100, 10, 0);
+        s.step_indices(0, 0, &[3, 3]);
+    }
+
+    #[test]
+    fn prop_every_epoch_is_a_permutation() {
+        check_default(
+            "sampler-perm",
+            |rng| (1 + rng.below(500), rng.next_u64(), rng.below(10)),
+            |(len, seed, epoch)| {
+                let s = KaitianSampler::new(*len, 1, *seed);
+                let perm = s.epoch_perm(*epoch);
+                let mut sorted = perm.clone();
+                sorted.sort_unstable();
+                if sorted == (0..*len).collect::<Vec<_>>() {
+                    Ok(())
+                } else {
+                    Err("not a permutation".into())
+                }
+            },
+        );
+    }
+}

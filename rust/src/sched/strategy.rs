@@ -1,0 +1,104 @@
+//! Batch-split strategies (Fig. 3): KAITIAN's adaptive split vs the
+//! naive and fixed baselines.
+
+use super::allocation::proportional_allocation;
+
+/// How the global mini-batch is split across devices each step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Strategy {
+    /// Strategy B (KAITIAN): proportional to measured scores.
+    Adaptive,
+    /// Strategy A: naive equal split, ignoring device speed.
+    Equal,
+    /// Strategy C: a fixed ratio (e.g. a stale or wrong-way-around guess);
+    /// weights are normalized internally.
+    Fixed(Vec<f64>),
+}
+
+impl Strategy {
+    /// Compute per-device batch sizes for one step.
+    pub fn allocate(&self, scores: &[f64], global_batch: usize) -> Vec<usize> {
+        match self {
+            Strategy::Adaptive => proportional_allocation(scores, global_batch),
+            Strategy::Equal => {
+                let ones = vec![1.0; scores.len()];
+                proportional_allocation(&ones, global_batch)
+            }
+            Strategy::Fixed(weights) => {
+                assert_eq!(
+                    weights.len(),
+                    scores.len(),
+                    "fixed strategy weight count must match device count"
+                );
+                proportional_allocation(weights, global_batch)
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Adaptive => "adaptive",
+            Strategy::Equal => "equal",
+            Strategy::Fixed(_) => "fixed",
+        }
+    }
+
+    /// Parse from CLI text: "adaptive" | "equal" | "fixed:0.5,0.5".
+    pub fn parse(text: &str) -> crate::Result<Strategy> {
+        if text == "adaptive" {
+            Ok(Strategy::Adaptive)
+        } else if text == "equal" {
+            Ok(Strategy::Equal)
+        } else if let Some(ws) = text.strip_prefix("fixed:") {
+            let weights: Vec<f64> = ws
+                .split(',')
+                .map(|w| w.trim().parse::<f64>())
+                .collect::<Result<_, _>>()?;
+            Ok(Strategy::Fixed(weights))
+        } else {
+            anyhow::bail!("unknown strategy {text:?} (adaptive|equal|fixed:w1,w2,...)")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_follows_scores() {
+        let s = Strategy::Adaptive;
+        let alloc = s.allocate(&[0.7, 1.0], 256);
+        assert!(alloc[1] > alloc[0]);
+        assert_eq!(alloc.iter().sum::<usize>(), 256);
+    }
+
+    #[test]
+    fn equal_ignores_scores() {
+        let s = Strategy::Equal;
+        assert_eq!(s.allocate(&[0.1, 0.9], 100), vec![50, 50]);
+    }
+
+    #[test]
+    fn fixed_uses_weights_not_scores() {
+        let s = Strategy::Fixed(vec![3.0, 1.0]);
+        assert_eq!(s.allocate(&[1.0, 1.0], 100), vec![75, 25]);
+    }
+
+    #[test]
+    fn parse_all_forms() {
+        assert_eq!(Strategy::parse("adaptive").unwrap(), Strategy::Adaptive);
+        assert_eq!(Strategy::parse("equal").unwrap(), Strategy::Equal);
+        assert_eq!(
+            Strategy::parse("fixed:0.3,0.7").unwrap(),
+            Strategy::Fixed(vec![0.3, 0.7])
+        );
+        assert!(Strategy::parse("bogus").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "weight count")]
+    fn fixed_wrong_arity_panics() {
+        Strategy::Fixed(vec![1.0]).allocate(&[1.0, 1.0], 10);
+    }
+}

@@ -1,0 +1,172 @@
+//! Virtual-time training simulator.
+//!
+//! Replays the paper's 50-epoch experiments in milliseconds of wall-clock:
+//! the *same* scheduling code (scores → strategy → allocation) drives a
+//! per-step cost composition from the calibrated [`PerfModel`], producing
+//! figure-ready training-time totals plus per-device utilization
+//! timelines. Real-mode spot checks (examples/) validate that the
+//! simulated orderings match reality on shortened runs.
+
+use crate::device::{parse_cluster, DeviceSpec};
+use crate::group::GroupMode;
+use crate::perfmodel::{PerfModel, StepCost};
+use crate::sched::Strategy;
+use crate::Result;
+
+/// A virtual-time experiment description.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub cluster: String,
+    pub mode: GroupMode,
+    pub strategy: Strategy,
+    pub global_batch: usize,
+    /// Gradient bytes per step (param_count × 4 for f32).
+    pub grad_bytes: usize,
+    pub steps_per_epoch: usize,
+    pub epochs: usize,
+}
+
+impl SimConfig {
+    /// The paper's workload shape (CIFAR-10 @ B=256, 50 epochs) for a
+    /// given cluster/mode, with `grad_bytes` from the artifact manifest.
+    pub fn paper_workload(cluster: &str, mode: GroupMode, grad_bytes: usize) -> Self {
+        Self {
+            cluster: cluster.into(),
+            mode,
+            strategy: Strategy::Adaptive,
+            global_batch: 256,
+            grad_bytes,
+            steps_per_epoch: 50_000 / 256,
+            epochs: 50,
+        }
+    }
+}
+
+/// Simulation outcome.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub cluster: String,
+    pub mode: GroupMode,
+    pub strategy_name: String,
+    pub scores: Vec<f64>,
+    pub allocation: Vec<usize>,
+    pub step: StepCost,
+    pub steps: usize,
+    /// Modeled total training time (seconds).
+    pub total_s: f64,
+    /// Mean device utilization during compute (straggler effect).
+    pub utilization: f64,
+    /// Modeled throughput (samples/second).
+    pub throughput: f64,
+}
+
+/// Run one virtual-time experiment.
+pub fn simulate(model: &PerfModel, cfg: &SimConfig) -> Result<SimReport> {
+    let devices: Vec<DeviceSpec> = parse_cluster(&cfg.cluster)?;
+    let scores = model.scores(&devices);
+    let allocation = cfg.strategy.allocate(&scores, cfg.global_batch);
+    let step = model.step_cost_with_alloc(&devices, &allocation, cfg.grad_bytes, cfg.mode);
+    let steps = cfg.steps_per_epoch * cfg.epochs;
+    let total_s = step.total() * steps as f64;
+    Ok(SimReport {
+        cluster: cfg.cluster.clone(),
+        mode: cfg.mode,
+        strategy_name: cfg.strategy.name().to_string(),
+        scores,
+        allocation,
+        utilization: step.compute_utilization(),
+        throughput: cfg.global_batch as f64 / step.total(),
+        step,
+        steps,
+        total_s,
+    })
+}
+
+/// Simulate with an explicit allocation (Fig-3 strategy sweeps).
+pub fn simulate_with_alloc(
+    model: &PerfModel,
+    cfg: &SimConfig,
+    allocation: Vec<usize>,
+) -> Result<SimReport> {
+    let devices: Vec<DeviceSpec> = parse_cluster(&cfg.cluster)?;
+    let scores = model.scores(&devices);
+    let step = model.step_cost_with_alloc(&devices, &allocation, cfg.grad_bytes, cfg.mode);
+    let steps = cfg.steps_per_epoch * cfg.epochs;
+    let total_s = step.total() * steps as f64;
+    Ok(SimReport {
+        cluster: cfg.cluster.clone(),
+        mode: cfg.mode,
+        strategy_name: "explicit".into(),
+        scores,
+        allocation,
+        utilization: step.compute_utilization(),
+        throughput: cfg.global_batch as f64 / step.total(),
+        step,
+        steps,
+        total_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GRAD_BYTES: usize = 933_544;
+
+    #[test]
+    fn paper_fig2_ordering_holds() {
+        let m = PerfModel::paper_default();
+        let sim = |spec: &str, mode| {
+            simulate(&m, &SimConfig::paper_workload(spec, mode, GRAD_BYTES))
+                .unwrap()
+                .total_s
+        };
+        let t_2g = sim("2G", GroupMode::Native);
+        let t_2m = sim("2M", GroupMode::Native);
+        let t_1g1m = sim("1G+1M", GroupMode::Kaitian);
+        let t_2g1m = sim("2G+1M", GroupMode::Kaitian);
+        let t_1g2m = sim("1G+2M", GroupMode::Kaitian);
+        let t_2g2m = sim("2G+2M", GroupMode::Kaitian);
+        // Paper Fig 2 ordering: 2G slowest, 2G+2M fastest; adding devices
+        // to a heterogeneous config helps monotonically.
+        assert!(t_2g > t_2m, "{t_2g} {t_2m}");
+        assert!(t_1g1m > t_2g1m && t_2g1m > t_2g2m);
+        assert!(t_1g2m > t_2g2m);
+        assert!(t_2g2m < t_2m);
+    }
+
+    #[test]
+    fn adaptive_beats_equal_and_fixed_wrong_way() {
+        // Fig 3: strategy B (adaptive) < A (equal) < C (wrong fixed).
+        let m = PerfModel::paper_default();
+        let base = SimConfig::paper_workload("1G+1M", GroupMode::Kaitian, GRAD_BYTES);
+        let b = simulate(&m, &base).unwrap();
+        let mut eq = base.clone();
+        eq.strategy = Strategy::Equal;
+        let a = simulate(&m, &eq).unwrap();
+        let mut fixed = base.clone();
+        // Wrong way: give the slower GPU 70% of the batch.
+        fixed.strategy = Strategy::Fixed(vec![0.7, 0.3]);
+        let c = simulate(&m, &fixed).unwrap();
+        assert!(b.total_s < a.total_s && a.total_s < c.total_s);
+        assert!(b.utilization > a.utilization);
+    }
+
+    #[test]
+    fn utilization_reflects_straggling() {
+        let m = PerfModel::paper_default();
+        let cfg = SimConfig::paper_workload("1G+1M", GroupMode::Kaitian, GRAD_BYTES);
+        let adaptive = simulate(&m, &cfg).unwrap();
+        assert!(adaptive.utilization > 0.95, "{}", adaptive.utilization);
+        let equal = simulate_with_alloc(&m, &cfg, vec![128, 128]).unwrap();
+        assert!(equal.utilization < 0.9, "{}", equal.utilization);
+    }
+
+    #[test]
+    fn throughput_is_batch_over_step() {
+        let m = PerfModel::paper_default();
+        let cfg = SimConfig::paper_workload("2M", GroupMode::Native, GRAD_BYTES);
+        let r = simulate(&m, &cfg).unwrap();
+        assert!((r.throughput - 256.0 / r.step.total()).abs() < 1e-9);
+    }
+}

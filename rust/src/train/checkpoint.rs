@@ -1,0 +1,167 @@
+//! Checkpointing: persist/restore training state (flat params + momentum
+//! + scheduler metadata) so long runs survive restarts.
+//!
+//! Format `KTCKPT1`: a JSON header line (preset, counts, scores) followed
+//! by the two raw little-endian f32 buffers. Written atomically
+//! (temp file + rename).
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+const MAGIC: &[u8] = b"KTCKPT1\n";
+
+/// A complete training-state snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub preset: String,
+    pub epoch: usize,
+    pub step: usize,
+    pub scores: Vec<f64>,
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+}
+
+impl Checkpoint {
+    /// Write atomically to `path`.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let file = std::fs::File::create(&tmp).context("create checkpoint temp")?;
+            let mut w = BufWriter::new(file);
+            w.write_all(MAGIC)?;
+            let header = Json::obj(vec![
+                ("preset", Json::str(self.preset.clone())),
+                ("epoch", Json::num(self.epoch as f64)),
+                ("step", Json::num(self.step as f64)),
+                ("param_count", Json::num(self.params.len() as f64)),
+                (
+                    "scores",
+                    Json::arr(self.scores.iter().map(|s| Json::num(*s)).collect()),
+                ),
+            ]);
+            let header_text = header.to_string();
+            w.write_all(header_text.as_bytes())?;
+            w.write_all(b"\n")?;
+            w.write_all(&crate::transport::f32s_to_bytes(&self.params))?;
+            w.write_all(&crate::transport::f32s_to_bytes(&self.momentum))?;
+            w.flush()?;
+        }
+        std::fs::rename(&tmp, path).context("atomic checkpoint rename")?;
+        Ok(())
+    }
+
+    /// Load and validate a checkpoint.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let file = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open checkpoint {:?}", path.as_ref()))?;
+        let mut r = BufReader::new(file);
+        let mut magic = [0_u8; 8];
+        r.read_exact(&mut magic)?;
+        if magic != MAGIC {
+            bail!("not a KAITIAN checkpoint (bad magic)");
+        }
+        let mut header_line = Vec::new();
+        loop {
+            let mut b = [0_u8; 1];
+            r.read_exact(&mut b)?;
+            if b[0] == b'\n' {
+                break;
+            }
+            header_line.push(b[0]);
+            if header_line.len() > 1 << 20 {
+                bail!("checkpoint header too large");
+            }
+        }
+        let header = Json::parse(std::str::from_utf8(&header_line)?)?;
+        let n = header.usize_req("param_count")?;
+        let scores = header
+            .req("scores")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+
+        let mut buf = vec![0_u8; n * 4];
+        r.read_exact(&mut buf).context("checkpoint params truncated")?;
+        let params = crate::transport::bytes_to_f32s(&buf)?;
+        r.read_exact(&mut buf).context("checkpoint momentum truncated")?;
+        let momentum = crate::transport::bytes_to_f32s(&buf)?;
+
+        Ok(Self {
+            preset: header.str_req("preset")?.to_string(),
+            epoch: header.usize_req("epoch")?,
+            step: header.usize_req("step")?,
+            scores,
+            params,
+            momentum,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            preset: "mobinet".into(),
+            epoch: 7,
+            step: 1365,
+            scores: vec![0.7, 1.0],
+            params: (0..1000).map(|i| i as f32 * 0.5).collect(),
+            momentum: (0..1000).map(|i| -(i as f32)).collect(),
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ktckpt-{}", std::process::id()));
+        let path = dir.join("state.ckpt");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join(format!("ktckpt-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.ckpt");
+        std::fs::write(&path, b"NOTACKPT......").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let dir = std::env::temp_dir().join(format!("ktckpt-tr-{}", std::process::id()));
+        let path = dir.join("state.ckpt");
+        sample().save(&path).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_no_tmp_left() {
+        let dir = std::env::temp_dir().join(format!("ktckpt-at-{}", std::process::id()));
+        let path = dir.join("state.ckpt");
+        sample().save(&path).unwrap();
+        assert!(path.exists());
+        assert!(!path.with_extension("tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,492 @@
+//! The multi-threaded training loop (one worker thread per device).
+
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::Instant;
+
+use anyhow::Context;
+
+use crate::data::{image_batch, token_batch, SynthCifar, SynthCorpus};
+use crate::ddp::DdpEngine;
+use crate::device::{cluster_name, parse_cluster, DeviceSpec, SpeedModel};
+use crate::group::{build_cluster, ProcessGroup};
+use crate::metrics::{Accumulator, StepMetrics, TrainReport};
+use crate::runtime::{BatchData, Engine, ModelPrograms};
+use crate::sched::{KaitianSampler, Profiler};
+use crate::Result;
+
+use super::options::TrainOptions;
+use super::schedule::LrSchedule;
+
+/// Which workload the preset trains (from the manifest meta).
+enum TaskData {
+    Image {
+        train: SynthCifar,
+        eval: SynthCifar,
+        image_size: usize,
+    },
+    Lm {
+        train: SynthCorpus,
+        eval: SynthCorpus,
+        seq_len: usize,
+    },
+}
+
+impl TaskData {
+    fn build(engine: &Engine, opts: &TrainOptions) -> Result<Self> {
+        let meta = &engine.manifest().program(&opts.preset)?.meta;
+        let task = meta.str_req("task")?;
+        let eval_len = (opts.eval_batches * opts.global_batch).max(1);
+        match task {
+            "image_classification" => {
+                let image_size = meta.usize_req("image_size")?;
+                let train = SynthCifar::new(opts.dataset_len, opts.seed);
+                let eval = train.eval_split(eval_len);
+                Ok(TaskData::Image {
+                    train,
+                    eval,
+                    image_size,
+                })
+            }
+            "language_modeling" => {
+                let seq_len = meta.usize_req("seq_len")?;
+                let vocab = meta.usize_req("vocab")?;
+                let train_tokens = opts.dataset_len * (seq_len + 1);
+                let eval_tokens = eval_len * (seq_len + 1);
+                Ok(TaskData::Lm {
+                    train: SynthCorpus::new(train_tokens, vocab, opts.seed),
+                    eval: SynthCorpus::with_salt(eval_tokens, vocab, opts.seed, 1),
+                    seq_len,
+                })
+            }
+            other => anyhow::bail!("unknown task {other:?} in manifest meta"),
+        }
+    }
+
+    /// Build a (bucket-padded, masked) train batch for dataset indices.
+    fn train_batch(&self, indices: &[usize], bucket: usize) -> BatchData {
+        match self {
+            TaskData::Image { train, image_size, .. } => {
+                image_batch(&train.gather(indices), bucket, *image_size)
+            }
+            TaskData::Lm { train, seq_len, .. } => {
+                token_batch(&train.gather(indices, *seq_len), bucket, *seq_len)
+            }
+        }
+    }
+
+    fn eval_batch(&self, indices: &[usize], bucket: usize) -> BatchData {
+        match self {
+            TaskData::Image { eval, image_size, .. } => {
+                image_batch(&eval.gather(indices), bucket, *image_size)
+            }
+            TaskData::Lm { eval, seq_len, .. } => {
+                token_batch(&eval.gather(indices, *seq_len), bucket, *seq_len)
+            }
+        }
+    }
+
+    fn eval_len(&self) -> usize {
+        match self {
+            TaskData::Image { eval, .. } => eval.len(),
+            TaskData::Lm { eval, seq_len, .. } => eval.num_windows(*seq_len),
+        }
+    }
+}
+
+/// Shared mutable state between worker threads.
+struct Shared {
+    scores: Mutex<Vec<f64>>,
+    /// Real-seconds per modeled-second (max across ranks), calibrated in
+    /// the profiling phase; drives the model-paced throttle.
+    pace: Mutex<f64>,
+    /// EWMA per-sample compute times published for online adaptation.
+    adapt_times: Mutex<Vec<f64>>,
+    step_losses: Mutex<Vec<f64>>,
+    epoch_losses: Mutex<Vec<f64>>,
+    epoch_accuracy: Mutex<Vec<f64>>,
+    barrier: Barrier,
+}
+
+/// Run a full training job; blocks until done.
+pub fn train(engine: Arc<Engine>, opts: &TrainOptions) -> Result<TrainReport> {
+    let devices = parse_cluster(&opts.cluster)?;
+    let world = devices.len();
+    let handles = build_cluster(&devices, opts.relay, opts.group_mode)?;
+    let task = Arc::new(TaskData::build(&engine, opts)?);
+    let speed_model = SpeedModel::paper_default();
+
+    let sampler = KaitianSampler::new(opts.dataset_len, opts.global_batch, opts.seed);
+    let steps_per_epoch = opts
+        .steps_per_epoch
+        .map(|s| s.min(sampler.steps_per_epoch()))
+        .unwrap_or_else(|| sampler.steps_per_epoch());
+    anyhow::ensure!(steps_per_epoch > 0, "dataset too small for one step");
+
+    let shared = Arc::new(Shared {
+        scores: Mutex::new(vec![1.0; world]),
+        pace: Mutex::new(0.0),
+        adapt_times: Mutex::new(vec![0.0; world]),
+        step_losses: Mutex::new(Vec::new()),
+        epoch_losses: Mutex::new(Vec::new()),
+        epoch_accuracy: Mutex::new(Vec::new()),
+        barrier: Barrier::new(world),
+    });
+
+    let t_start = Instant::now();
+    let accs: Vec<Accumulator> = std::thread::scope(|s| -> Result<Vec<Accumulator>> {
+        let mut joins = Vec::with_capacity(world);
+        for (rank, pg) in handles.groups.iter().enumerate() {
+            let engine = engine.clone();
+            let shared = shared.clone();
+            let task = task.clone();
+            let device = devices[rank].clone();
+            let sampler = sampler.clone();
+            let opts = opts.clone();
+            joins.push(s.spawn(move || {
+                worker(
+                    rank,
+                    &device,
+                    pg.as_ref(),
+                    engine,
+                    task,
+                    shared,
+                    sampler,
+                    steps_per_epoch,
+                    &speed_model,
+                    &opts,
+                )
+                .with_context(|| format!("worker rank {rank} ({})", device.dtype))
+            }));
+        }
+        joins
+            .into_iter()
+            .map(|j| j.join().expect("worker thread panicked"))
+            .collect()
+    })?;
+    let wall_s = t_start.elapsed().as_secs_f64();
+
+    let scores = shared.scores.lock().unwrap().clone();
+    // Report the allocation the workers actually used (bucket-capped).
+    let max_bucket = *engine
+        .manifest()
+        .program(&opts.preset)?
+        .buckets
+        .last()
+        .expect("no buckets");
+    let allocation = crate::sched::cap_allocation(
+        &opts.strategy.allocate(&scores, opts.global_batch),
+        max_bucket,
+    )?;
+    let epoch_losses = shared.epoch_losses.lock().unwrap().clone();
+    let epoch_accuracy = shared.epoch_accuracy.lock().unwrap().clone();
+    let step_losses = shared.step_losses.lock().unwrap().clone();
+    Ok(TrainReport {
+        config_name: opts.preset.clone(),
+        cluster: cluster_name(&devices),
+        group_mode: format!("{:?}", opts.group_mode).to_lowercase(),
+        strategy: opts.strategy.name().to_string(),
+        scores,
+        allocation,
+        epochs: opts.epochs,
+        steps: opts.epochs * steps_per_epoch,
+        wall_s,
+        virtual_s: None,
+        epoch_losses,
+        epoch_accuracy,
+        step_losses,
+        per_rank: accs,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker(
+    rank: usize,
+    device: &DeviceSpec,
+    pg: &dyn ProcessGroup,
+    engine: Arc<Engine>,
+    task: Arc<TaskData>,
+    shared: Arc<Shared>,
+    sampler: KaitianSampler,
+    steps_per_epoch: usize,
+    speed_model: &SpeedModel,
+    opts: &TrainOptions,
+) -> Result<Accumulator> {
+    let progs = ModelPrograms::new(engine, &opts.preset)?;
+    let n_params = progs.param_count();
+    let ddp = DdpEngine::new(pg, opts.bucket_bytes);
+    let schedule = LrSchedule::new(opts.lr, opts.lr_decay, opts.lr_decay_epochs);
+    // Model-paced throttle (see DESIGN.md §3): after calibration, every
+    // step's compute is stretched to `model_step_time(dtype, b) * pace`,
+    // so imposed heterogeneity tracks *real* per-rank batch shares (not
+    // the bucket-padded compute, which is quantized).
+    let mut pace = 0.0_f64;
+
+    // --- init & sync -----------------------------------------------------
+    let (mut params, mut momentum) = match &opts.resume_from {
+        Some(path) => {
+            let ck = super::checkpoint::Checkpoint::load(path)?;
+            anyhow::ensure!(
+                ck.preset == opts.preset,
+                "checkpoint is for preset {:?}, training {:?}",
+                ck.preset,
+                opts.preset
+            );
+            anyhow::ensure!(ck.params.len() == n_params, "checkpoint size mismatch");
+            (ck.params, ck.momentum)
+        }
+        None => (
+            progs.init_params(opts.seed as i32)?,
+            vec![0.0_f32; n_params],
+        ),
+    };
+    ddp.sync_params(&mut params)?;
+
+    // --- profiling phase (paper §III-C "Initial Benchmarking") -----------
+    let profiler = Profiler::default();
+    let cluster_devices = parse_cluster(&opts.cluster)?;
+    if opts.throttle {
+        // Calibrate the pace (real seconds per modeled second) from a raw
+        // probe, then derive scores the way a benchmark on the *simulated*
+        // devices would: from the speed model.
+        let probe_real = profiler
+            .probe_batch
+            .min(*progs.buckets().last().expect("no buckets"));
+        let probe_b = progs.manifest().bucket_for(probe_real)?;
+        let probe_idx: Vec<usize> = (0..probe_real).collect();
+        let batch = task.train_batch(&probe_idx, probe_b);
+        let raw = profiler.profile_real(&progs, &params, &batch, 1.0)?;
+        let my_pace =
+            raw / speed_model.step_time(device.dtype, probe_real) * opts.pace_slowdown;
+        {
+            let mut p = shared.pace.lock().unwrap();
+            *p = p.max(my_pace);
+        }
+        if rank == 0 {
+            let mut sc = shared.scores.lock().unwrap();
+            let model_scores = profiler.model_scores(&cluster_devices, speed_model);
+            sc.copy_from_slice(&model_scores);
+        }
+        shared.barrier.wait();
+        pace = *shared.pace.lock().unwrap();
+    } else if opts.profile {
+        // Un-throttled: benchmark the real (homogeneous CPU) execution.
+        let probe_real = profiler
+            .probe_batch
+            .min(*progs.buckets().last().expect("no buckets"));
+        let probe_b = progs.manifest().bucket_for(probe_real)?;
+        let probe_idx: Vec<usize> = (0..probe_real).collect();
+        let batch = task.train_batch(&probe_idx, probe_b);
+        let t = profiler.profile_real(&progs, &params, &batch, 1.0)?;
+        shared.scores.lock().unwrap()[rank] = t;
+        shared.barrier.wait();
+        if rank == 0 {
+            let mut sc = shared.scores.lock().unwrap();
+            let scores = Profiler::scores_from_times(&sc);
+            sc.copy_from_slice(&scores);
+        }
+        shared.barrier.wait();
+    } else {
+        if rank == 0 {
+            let mut sc = shared.scores.lock().unwrap();
+            let model_scores = profiler.model_scores(&cluster_devices, speed_model);
+            sc.copy_from_slice(&model_scores);
+        }
+        shared.barrier.wait();
+    }
+    let scores = shared.scores.lock().unwrap().clone();
+
+    // --- training loop ----------------------------------------------------
+    let mut acc = Accumulator::default();
+    let hyper_scale = 1.0 / opts.global_batch as f32;
+    let max_bucket = *progs.buckets().last().expect("no buckets");
+    let mut scores = scores;
+    // EWMA of this rank's measured per-sample compute seconds (online
+    // adaptation signal; paper §V future work).
+    let mut ewma_per_sample = 0.0_f64;
+    let mut global_step = 0_usize;
+    for epoch in 0..opts.epochs {
+        let lr = schedule.lr_at(epoch);
+        // Clamp to the largest compiled batch bucket (excess is
+        // redistributed to devices with headroom).
+        let mut allocation = crate::sched::cap_allocation(
+            &opts.strategy.allocate(&scores, opts.global_batch),
+            max_bucket,
+        )?;
+        let mut epoch_loss_num = 0.0_f64;
+        let mut epoch_loss_den = 0.0_f64;
+
+        for step in 0..steps_per_epoch {
+            let indices = sampler.step_indices(epoch, step, &allocation);
+            let my_indices = &indices[rank];
+            let mut m = StepMetrics {
+                batch: my_indices.len(),
+                ..Default::default()
+            };
+
+            // Local compute (or a zero contribution if starved).
+            let t0 = Instant::now();
+            let (mut grads, loss_sum, _correct) = if my_indices.is_empty() {
+                (vec![0.0_f32; n_params], 0.0, 0.0)
+            } else {
+                let bucket = progs.manifest().bucket_for(my_indices.len())?;
+                m.bucket = bucket;
+                let batch = task.train_batch(my_indices, bucket);
+                let out = progs.grad_step(&params, &batch)?;
+                (out.grads, out.loss_sum, out.correct)
+            };
+            let measured = t0.elapsed().as_secs_f64();
+            if opts.throttle && !my_indices.is_empty() {
+                // Stretch compute to the modeled device time for the
+                // *real* batch share (machine-independent heterogeneity).
+                let target =
+                    speed_model.step_time(device.dtype, my_indices.len()) * pace;
+                if target > measured {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        target - measured,
+                    ));
+                }
+            }
+            m.compute_s = t0.elapsed().as_secs_f64();
+            if !my_indices.is_empty() {
+                // Normalize by the *bucket*, not the real share: padded
+                // samples cost real compute, so per-bucket-sample time is
+                // the device's true processing rate.
+                let per_sample = m.compute_s / m.bucket.max(1) as f64;
+                ewma_per_sample = if ewma_per_sample == 0.0 {
+                    per_sample
+                } else {
+                    0.5 * ewma_per_sample + 0.5 * per_sample
+                };
+            }
+
+            // Gradient aggregation through the process group.
+            let sync = ddp.all_reduce_grads(&mut grads)?;
+            m.comm_s = sync.seconds;
+            m.stage_s = sync.stage_seconds;
+            m.comm_bytes = sync.bytes;
+
+            // Fused optimizer update (grad_scale folds the 1/B average).
+            let t2 = Instant::now();
+            progs.apply_update(
+                &mut params,
+                &mut momentum,
+                &grads,
+                [lr, opts.momentum, opts.weight_decay, hyper_scale],
+            )?;
+            m.update_s = t2.elapsed().as_secs_f64();
+
+            // Global train-loss logging (small metrics all-reduce).
+            let mut metrics_buf = vec![loss_sum, 0.0, 0.0];
+            ddp.all_reduce_metrics(&mut metrics_buf)?;
+            let global_loss = metrics_buf[0] as f64 / opts.global_batch as f64;
+            epoch_loss_num += metrics_buf[0] as f64;
+            epoch_loss_den += opts.global_batch as f64;
+            if rank == 0 {
+                shared.step_losses.lock().unwrap().push(global_loss);
+                if opts.log_every > 0 && step % opts.log_every == 0 {
+                    eprintln!(
+                        "[train] epoch {epoch} step {step}/{steps_per_epoch} \
+                         loss {global_loss:.4} lr {lr:.4}"
+                    );
+                }
+            }
+            acc.add(&m);
+            global_step += 1;
+
+            // --- online adaptation (paper §V future work) --------------
+            if opts.online_adapt && global_step % opts.adapt_every == 0 {
+                shared.adapt_times.lock().unwrap()[rank] = ewma_per_sample;
+                shared.barrier.wait();
+                if rank == 0 {
+                    let times = shared.adapt_times.lock().unwrap().clone();
+                    if times.iter().all(|&t| t > 0.0) {
+                        let new_scores = Profiler::scores_from_times(&times);
+                        shared.scores.lock().unwrap().copy_from_slice(&new_scores);
+                    }
+                }
+                shared.barrier.wait();
+                scores = shared.scores.lock().unwrap().clone();
+                allocation = crate::sched::cap_allocation(
+                    &opts.strategy.allocate(&scores, opts.global_batch),
+                    max_bucket,
+                )?;
+            }
+        }
+
+        if rank == 0 {
+            shared
+                .epoch_losses
+                .lock()
+                .unwrap()
+                .push(epoch_loss_num / epoch_loss_den.max(1.0));
+        }
+
+        // --- eval --------------------------------------------------------
+        if opts.eval_batches > 0 {
+            let (loss, correct, count) = evaluate(rank, pg, &progs, &task, &params, &ddp)?;
+            if rank == 0 {
+                let _ = loss;
+                shared
+                    .epoch_accuracy
+                    .lock()
+                    .unwrap()
+                    .push(correct / count.max(1.0));
+            }
+        }
+    }
+
+    // --- checkpoint (rank 0 owns the write; replicas are identical) ------
+    if let (0, Some(path)) = (rank, &opts.checkpoint) {
+        super::checkpoint::Checkpoint {
+            preset: opts.preset.clone(),
+            epoch: opts.epochs,
+            step: opts.epochs * steps_per_epoch,
+            scores: scores.clone(),
+            params: params.clone(),
+            momentum: momentum.clone(),
+        }
+        .save(path)?;
+    }
+
+    // --- consistency check: replicas must agree bit-for-bit-ish ----------
+    let mut probe = vec![params.iter().sum::<f32>(), params[0], params[n_params - 1]];
+    let mut probe_min = probe.clone();
+    pg.all_reduce(&mut probe, crate::collectives::ReduceOp::Max)?;
+    pg.all_reduce(&mut probe_min, crate::collectives::ReduceOp::Min)?;
+    for (mx, mn) in probe.iter().zip(&probe_min) {
+        anyhow::ensure!(
+            (mx - mn).abs() <= 1e-3 * mx.abs().max(1.0),
+            "replica divergence: max {mx} vs min {mn}"
+        );
+    }
+
+    Ok(acc)
+}
+
+/// Distributed evaluation: strided shard per rank, metrics all-reduced.
+fn evaluate(
+    rank: usize,
+    pg: &dyn ProcessGroup,
+    progs: &ModelPrograms,
+    task: &TaskData,
+    params: &[f32],
+    ddp: &DdpEngine,
+) -> Result<(f64, f64, f64)> {
+    let world = pg.world();
+    let eval_len = task.eval_len();
+    let my_indices: Vec<usize> = (rank..eval_len).step_by(world).collect();
+    let max_bucket = *progs.buckets().last().expect("no buckets");
+
+    let mut loss_sum = 0.0_f32;
+    let mut correct = 0.0_f32;
+    for chunk in my_indices.chunks(max_bucket) {
+        let bucket = progs.manifest().bucket_for(chunk.len())?;
+        let batch = task.eval_batch(chunk, bucket);
+        let (l, c) = progs.eval_step(params, &batch)?;
+        loss_sum += l;
+        correct += c;
+    }
+    let mut m = vec![loss_sum, correct, my_indices.len() as f32];
+    ddp.all_reduce_metrics(&mut m)?;
+    Ok((m[0] as f64, m[1] as f64, m[2] as f64))
+}

@@ -1,0 +1,26 @@
+//! The synchronous data-parallel trainer: KAITIAN's end-to-end loop.
+//!
+//! One worker thread per simulated device. Each step:
+//!
+//! ```text
+//! sampler ─▶ per-rank shard (score-proportional b_i, Σ=B)
+//!   worker: build batch (pad to bucket, mask) ─▶ grad_step (PJRT)
+//!           [+ throttle: impose the device's relative speed]
+//!   DDP:    all_reduce(SUM) of flat grads through ProcessGroupKaiTian
+//!   worker: apply_update (fused Pallas SGD, grad_scale = 1/B)
+//! ```
+//!
+//! Parameters never leave the worker after the initial broadcast: they
+//! stay identical across ranks because every rank applies the same
+//! deterministic update to the same averaged gradients (checked at the
+//! end of training).
+
+pub mod checkpoint;
+pub mod loop_;
+pub mod options;
+pub mod schedule;
+
+pub use checkpoint::Checkpoint;
+pub use loop_::train;
+pub use options::TrainOptions;
+pub use schedule::LrSchedule;

@@ -1,0 +1,139 @@
+//! Training-run configuration.
+
+use crate::group::{GroupMode, RelayKind};
+use crate::sched::Strategy;
+
+/// Everything a training run needs (parsed from config JSON / CLI).
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    /// Model preset name in the artifact manifest ("mobinet", "tinygpt").
+    pub preset: String,
+    /// Cluster spec ("2G+2M", "2M", ...).
+    pub cluster: String,
+    /// Process-group implementation (kaitian / native / flat-gloo).
+    pub group_mode: GroupMode,
+    /// Inter-group transport (tcp for honest runs, inproc for tests).
+    pub relay: RelayKind,
+    /// Batch-split strategy (B=adaptive is the paper's mechanism).
+    pub strategy: Strategy,
+    /// Global batch size (paper: 256).
+    pub global_batch: usize,
+    pub epochs: usize,
+    /// Cap steps per epoch (None = full epoch like the paper's 195).
+    pub steps_per_epoch: Option<usize>,
+    /// Synthetic train-set size (paper CIFAR-10: 50_000).
+    pub dataset_len: usize,
+    /// Eval-set size in batches of `global_batch` (0 disables eval).
+    pub eval_batches: usize,
+    // SGD hyper-parameters (paper: lr 0.1, momentum 0.9, wd 5e-4).
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// Step-decay: multiply lr by `lr_decay` every `lr_decay_epochs`.
+    pub lr_decay: f32,
+    pub lr_decay_epochs: usize,
+    pub seed: u64,
+    /// Impose paper-relative device speeds on real compute: each step is
+    /// stretched to `speed_model.step_time(dtype, b_real) * pace`, where
+    /// pace is auto-calibrated from a raw probe.
+    pub throttle: bool,
+    /// Pace safety margin: how many times slower than raw execution the
+    /// modeled step times run, so modeled time dominates bucket-quantized
+    /// real compute even for small batch shares.
+    pub pace_slowdown: f64,
+    /// Run the benchmark-profiling phase (else use calibrated model
+    /// scores directly).
+    pub profile: bool,
+    /// DDP gradient bucket size in bytes.
+    pub bucket_bytes: usize,
+    /// Print a progress line every N steps (0 = silent).
+    pub log_every: usize,
+    /// Online load adaptation (paper §V "Future Work"): every
+    /// `adapt_every` steps, refresh the per-device scores from an EWMA of
+    /// measured per-sample compute times and re-balance the allocation.
+    /// Only meaningful with `Strategy::Adaptive`.
+    pub online_adapt: bool,
+    /// Re-balancing period in steps (when `online_adapt`).
+    pub adapt_every: usize,
+    /// Save a checkpoint (params + momentum + scores) here when training
+    /// completes; resume with `resume_from`.
+    pub checkpoint: Option<String>,
+    /// Initialize training state from a saved checkpoint instead of
+    /// `init_params(seed)`.
+    pub resume_from: Option<String>,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        Self {
+            preset: "mobinet".into(),
+            cluster: "2G+2M".into(),
+            group_mode: GroupMode::Kaitian,
+            relay: RelayKind::Tcp,
+            strategy: Strategy::Adaptive,
+            global_batch: 256,
+            epochs: 50,
+            steps_per_epoch: None,
+            dataset_len: 50_000,
+            eval_batches: 4,
+            lr: 0.1,
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            lr_decay: 0.1,
+            lr_decay_epochs: 20,
+            seed: 42,
+            throttle: true,
+            pace_slowdown: 4.0,
+            profile: true,
+            bucket_bytes: 25 << 20, // PyTorch DDP default bucket
+            log_every: 0,
+            online_adapt: false,
+            adapt_every: 10,
+            checkpoint: None,
+            resume_from: None,
+        }
+    }
+}
+
+impl TrainOptions {
+    /// A configuration sized for fast tests (small preset, few steps).
+    pub fn quick_test(cluster: &str) -> Self {
+        Self {
+            preset: "mobinet_small".into(),
+            cluster: cluster.into(),
+            relay: RelayKind::Inproc,
+            global_batch: 16,
+            epochs: 1,
+            steps_per_epoch: Some(4),
+            dataset_len: 256,
+            eval_batches: 1,
+            throttle: false,
+            profile: false,
+            lr: 0.05,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_setup() {
+        let o = TrainOptions::default();
+        assert_eq!(o.global_batch, 256);
+        assert_eq!(o.epochs, 50);
+        assert_eq!(o.dataset_len, 50_000);
+        assert!((o.lr - 0.1).abs() < 1e-9);
+        assert!((o.momentum - 0.9).abs() < 1e-9);
+        assert!((o.weight_decay - 5e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quick_test_is_small() {
+        let o = TrainOptions::quick_test("1G+1M");
+        assert!(o.dataset_len <= 1024);
+        assert_eq!(o.steps_per_epoch, Some(4));
+    }
+}

@@ -1,0 +1,40 @@
+//! Learning-rate schedule (paper: initial 0.1 with step decay).
+
+/// Step-decay LR schedule: `lr0 * decay^(epoch / every)`.
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub lr0: f32,
+    pub decay: f32,
+    pub every: usize,
+}
+
+impl LrSchedule {
+    pub fn new(lr0: f32, decay: f32, every: usize) -> Self {
+        assert!(every > 0, "decay interval must be positive");
+        Self { lr0, decay, every }
+    }
+
+    pub fn lr_at(&self, epoch: usize) -> f32 {
+        self.lr0 * self.decay.powi((epoch / self.every) as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_schedule() {
+        let s = LrSchedule::new(0.1, 0.1, 20);
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-9);
+        assert!((s.lr_at(19) - 0.1).abs() < 1e-9);
+        assert!((s.lr_at(20) - 0.01).abs() < 1e-9);
+        assert!((s.lr_at(40) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_decay_when_factor_one() {
+        let s = LrSchedule::new(0.05, 1.0, 10);
+        assert!((s.lr_at(99) - 0.05).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,134 @@
+//! In-process transport: one mailbox per rank, senders push directly.
+//!
+//! This is the "vendor library" class of path in the simulation: a single
+//! memcpy hand-off between threads, no syscalls, no framing. The intra-
+//! group collectives of `NcclSim`/`CnclSim` run over this.
+
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use super::mailbox::{recv_timeout, Mailbox};
+use super::Transport;
+use crate::Result;
+
+/// Builder: create all endpoints of an in-process communicator at once.
+pub struct InprocMesh;
+
+impl InprocMesh {
+    /// Returns one endpoint per rank; hand them to the worker threads.
+    pub fn new(world: usize) -> Vec<InprocEndpoint> {
+        let mailboxes: Vec<Arc<Mailbox>> = (0..world).map(|_| Arc::new(Mailbox::new())).collect();
+        (0..world)
+            .map(|rank| InprocEndpoint {
+                rank,
+                mailboxes: mailboxes.clone(),
+            })
+            .collect()
+    }
+}
+
+/// One rank's endpoint in an in-process mesh.
+pub struct InprocEndpoint {
+    rank: usize,
+    /// All ranks' mailboxes; `send(j, ..)` pushes into `mailboxes[j]`.
+    mailboxes: Vec<Arc<Mailbox>>,
+}
+
+impl InprocEndpoint {
+    /// Close every mailbox, waking blocked receivers (mesh shutdown).
+    pub fn shutdown(&self) {
+        for mb in &self.mailboxes {
+            mb.close();
+        }
+    }
+}
+
+impl Transport for InprocEndpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.mailboxes.len()
+    }
+
+    fn send(&self, peer: usize, tag: u64, data: Vec<u8>) -> Result<()> {
+        if peer >= self.mailboxes.len() {
+            bail!("send to rank {peer} but world is {}", self.mailboxes.len());
+        }
+        self.mailboxes[peer].push(self.rank, tag, data);
+        Ok(())
+    }
+
+    fn recv(&self, peer: usize, tag: u64) -> Result<Vec<u8>> {
+        if peer >= self.mailboxes.len() {
+            bail!("recv from rank {peer} but world is {}", self.mailboxes.len());
+        }
+        self.mailboxes[self.rank].pop(peer, tag, recv_timeout())
+    }
+
+    fn kind(&self) -> &'static str {
+        "inproc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_rank_ping_pong() {
+        let mut eps = InprocMesh::new(2);
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            let msg = e1.recv(0, 1).unwrap();
+            e1.send(0, 2, msg.iter().map(|b| b + 1).collect()).unwrap();
+        });
+        e0.send(1, 1, vec![10, 20]).unwrap();
+        assert_eq!(e0.recv(1, 2).unwrap(), vec![11, 21]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn world_size_and_rank() {
+        let eps = InprocMesh::new(4);
+        for (i, e) in eps.iter().enumerate() {
+            assert_eq!(e.rank(), i);
+            assert_eq!(e.world(), 4);
+            assert_eq!(e.kind(), "inproc");
+        }
+    }
+
+    #[test]
+    fn out_of_range_peer_is_error() {
+        let eps = InprocMesh::new(2);
+        assert!(eps[0].send(5, 0, vec![]).is_err());
+        assert!(eps[0].recv(5, 0).is_err());
+    }
+
+    #[test]
+    fn self_send_works() {
+        let eps = InprocMesh::new(1);
+        eps[0].send(0, 3, vec![7]).unwrap();
+        assert_eq!(eps[0].recv(0, 3).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn many_threads_all_to_all() {
+        let eps = InprocMesh::new(4);
+        std::thread::scope(|s| {
+            for e in &eps {
+                s.spawn(move || {
+                    for p in 0..4 {
+                        e.send(p, 42, vec![e.rank() as u8]).unwrap();
+                    }
+                    for p in 0..4 {
+                        assert_eq!(e.recv(p, 42).unwrap(), vec![p as u8]);
+                    }
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,318 @@
+//! TCP mesh transport: the host-staged (Gloo-class) path.
+//!
+//! A full mesh of real sockets. Each connection gets a writer thread
+//! (drains an unbounded queue, so `send` never blocks — avoiding the
+//! classic ring-collective head-of-line deadlock when both peers write
+//! simultaneously) and a reader thread (demuxes frames into the rank's
+//! [`Mailbox`]).
+//!
+//! Frame format (little-endian):
+//! `[tag: u64][len: u64][payload: len bytes]`
+//! The sender's rank is exchanged once at connection setup.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context};
+
+use super::mailbox::{recv_timeout, Mailbox};
+use super::Transport;
+use crate::Result;
+
+/// Builder for a TCP mesh communicator.
+pub struct TcpMesh;
+
+impl TcpMesh {
+    /// Create an all-loopback mesh for `world` ranks in one process
+    /// (used by tests and the single-host launcher). Returns endpoints.
+    pub fn loopback(world: usize) -> Result<Vec<TcpEndpoint>> {
+        // Bind one listener per rank on an ephemeral port.
+        let listeners: Vec<TcpListener> = (0..world)
+            .map(|_| TcpListener::bind("127.0.0.1:0").context("bind loopback"))
+            .collect::<Result<_>>()?;
+        let addrs: Vec<SocketAddr> = listeners
+            .iter()
+            .map(|l| l.local_addr().context("local_addr"))
+            .collect::<Result<_>>()?;
+        // Connect each rank in its own thread (dial higher ranks, accept
+        // lower ranks) to avoid ordering deadlock.
+        let handles: Vec<_> = listeners
+            .into_iter()
+            .enumerate()
+            .map(|(rank, listener)| {
+                let addrs = addrs.clone();
+                std::thread::spawn(move || TcpEndpoint::connect(rank, &addrs, listener))
+            })
+            .collect();
+        let mut eps: Vec<TcpEndpoint> = Vec::with_capacity(world);
+        for h in handles {
+            eps.push(h.join().expect("mesh thread panicked")?);
+        }
+        eps.sort_by_key(|e| e.rank);
+        Ok(eps)
+    }
+}
+
+enum WriterMsg {
+    Frame(u64, Vec<u8>),
+    Shutdown,
+}
+
+struct PeerLink {
+    queue: mpsc::Sender<WriterMsg>,
+}
+
+/// One rank's endpoint in a TCP mesh.
+pub struct TcpEndpoint {
+    rank: usize,
+    world: usize,
+    mailbox: Arc<Mailbox>,
+    /// Writer queues per peer (`None` for self).
+    links: Vec<Option<PeerLink>>,
+    threads: Vec<JoinHandle<()>>,
+    bytes_sent: Arc<AtomicU64>,
+}
+
+impl TcpEndpoint {
+    /// Establish the full mesh for `rank` given everyone's listen address.
+    /// Dials every higher rank; accepts connections from every lower rank.
+    pub fn connect(rank: usize, addrs: &[SocketAddr], listener: TcpListener) -> Result<Self> {
+        let world = addrs.len();
+        let mailbox = Arc::new(Mailbox::new());
+        let bytes_sent = Arc::new(AtomicU64::new(0));
+        let mut streams: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+
+        // Dial higher ranks (retry briefly: the peer may not be listening
+        // yet in multi-process mode).
+        for peer in rank + 1..world {
+            let mut attempt = 0;
+            let stream = loop {
+                match TcpStream::connect(addrs[peer]) {
+                    Ok(s) => break s,
+                    Err(e) if attempt < 50 => {
+                        attempt += 1;
+                        std::thread::sleep(Duration::from_millis(100));
+                        let _ = e;
+                    }
+                    Err(e) => return Err(e).context(format!("dial rank {peer}")),
+                }
+            };
+            stream.set_nodelay(true).ok();
+            // Identify ourselves.
+            let mut s = stream.try_clone()?;
+            s.write_all(&(rank as u64).to_le_bytes())?;
+            streams[peer] = Some(stream);
+        }
+        // Accept lower ranks.
+        for _ in 0..rank {
+            let (stream, _) = listener.accept().context("accept")?;
+            stream.set_nodelay(true).ok();
+            let mut id = [0_u8; 8];
+            let mut r = stream.try_clone()?;
+            r.read_exact(&mut id)?;
+            let peer = u64::from_le_bytes(id) as usize;
+            if peer >= world {
+                bail!("peer announced invalid rank {peer}");
+            }
+            streams[peer] = Some(stream);
+        }
+
+        // Spawn reader + writer threads per link.
+        let mut links: Vec<Option<PeerLink>> = Vec::with_capacity(world);
+        let mut threads = Vec::new();
+        for (peer, stream) in streams.into_iter().enumerate() {
+            match stream {
+                None => links.push(None),
+                Some(stream) => {
+                    let (tx, rx) = mpsc::channel::<WriterMsg>();
+                    let write_half = stream.try_clone().context("clone for writer")?;
+                    let sent = bytes_sent.clone();
+                    threads.push(std::thread::spawn(move || {
+                        writer_loop(write_half, rx, sent);
+                    }));
+                    let mb = mailbox.clone();
+                    threads.push(std::thread::spawn(move || {
+                        reader_loop(stream, peer, mb);
+                    }));
+                    links.push(Some(PeerLink { queue: tx }));
+                }
+            }
+        }
+
+        Ok(Self {
+            rank,
+            world,
+            mailbox,
+            links,
+            threads,
+            bytes_sent,
+        })
+    }
+
+    /// Total payload bytes pushed to the wire by this endpoint.
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent.load(Ordering::Relaxed)
+    }
+}
+
+fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<WriterMsg>, sent: Arc<AtomicU64>) {
+    let mut w = BufWriter::new(stream);
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WriterMsg::Frame(tag, data) => {
+                if w.write_all(&tag.to_le_bytes()).is_err() {
+                    return;
+                }
+                if w.write_all(&(data.len() as u64).to_le_bytes()).is_err() {
+                    return;
+                }
+                if w.write_all(&data).is_err() {
+                    return;
+                }
+                // Flush eagerly: collectives are latency-sensitive and
+                // message-oriented.
+                if w.flush().is_err() {
+                    return;
+                }
+                sent.fetch_add(data.len() as u64, Ordering::Relaxed);
+            }
+            WriterMsg::Shutdown => return,
+        }
+    }
+}
+
+fn reader_loop(stream: TcpStream, peer: usize, mailbox: Arc<Mailbox>) {
+    let mut r = BufReader::new(stream);
+    loop {
+        let mut hdr = [0_u8; 16];
+        if r.read_exact(&mut hdr).is_err() {
+            // Peer closed: wake any blocked receivers so they error out
+            // instead of hanging.
+            mailbox.close();
+            return;
+        }
+        let tag = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
+        let len = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
+        let mut data = vec![0_u8; len];
+        if r.read_exact(&mut data).is_err() {
+            mailbox.close();
+            return;
+        }
+        mailbox.push(peer, tag, data);
+    }
+}
+
+impl Transport for TcpEndpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&self, peer: usize, tag: u64, data: Vec<u8>) -> Result<()> {
+        if peer == self.rank {
+            // Loop back locally; no socket for self.
+            self.mailbox.push(peer, tag, data);
+            return Ok(());
+        }
+        let link = self
+            .links
+            .get(peer)
+            .and_then(|l| l.as_ref())
+            .ok_or_else(|| anyhow::anyhow!("no link to rank {peer}"))?;
+        link.queue
+            .send(WriterMsg::Frame(tag, data))
+            .map_err(|_| anyhow::anyhow!("writer thread for rank {peer} is gone"))?;
+        Ok(())
+    }
+
+    fn recv(&self, peer: usize, tag: u64) -> Result<Vec<u8>> {
+        self.mailbox.pop(peer, tag, recv_timeout())
+    }
+
+    fn kind(&self) -> &'static str {
+        "tcp"
+    }
+}
+
+impl Drop for TcpEndpoint {
+    fn drop(&mut self) {
+        for link in self.links.iter().flatten() {
+            let _ = link.queue.send(WriterMsg::Shutdown);
+        }
+        self.mailbox.close();
+        // Reader threads exit when the peer's writer closes its socket;
+        // don't join (peers may drop in any order) — threads are detached
+        // by dropping the handles.
+        self.threads.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_ping_pong() {
+        let mut eps = TcpMesh::loopback(2).unwrap();
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            let msg = e1.recv(0, 1).unwrap();
+            e1.send(0, 2, msg).unwrap();
+        });
+        e0.send(1, 1, vec![1, 2, 3]).unwrap();
+        assert_eq!(e0.recv(1, 2).unwrap(), vec![1, 2, 3]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn four_rank_all_to_all() {
+        let eps = TcpMesh::loopback(4).unwrap();
+        std::thread::scope(|s| {
+            for e in &eps {
+                s.spawn(move || {
+                    for p in 0..4 {
+                        e.send(p, 9, vec![e.rank() as u8; 3]).unwrap();
+                    }
+                    for p in 0..4 {
+                        assert_eq!(e.recv(p, 9).unwrap(), vec![p as u8; 3]);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn large_message_no_deadlock() {
+        // Both ranks send 4 MiB simultaneously — queued writers must
+        // prevent the write-write deadlock.
+        let eps = TcpMesh::loopback(2).unwrap();
+        let big = vec![0xAB_u8; 4 << 20];
+        std::thread::scope(|s| {
+            for e in &eps {
+                let big = big.clone();
+                s.spawn(move || {
+                    let peer = 1 - e.rank();
+                    e.send(peer, 1, big.clone()).unwrap();
+                    let got = e.recv(peer, 1).unwrap();
+                    assert_eq!(got.len(), big.len());
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn bytes_sent_accounting() {
+        let eps = TcpMesh::loopback(2).unwrap();
+        eps[0].send(1, 1, vec![0; 1000]).unwrap();
+        let _ = eps[1].recv(0, 1).unwrap();
+        assert!(eps[0].bytes_sent() >= 1000);
+    }
+}

@@ -1,0 +1,72 @@
+//! Small shared utilities: deterministic PRNG, timing, formatting.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::{ScopedTimer, Stopwatch};
+
+/// Ceiling division for usize.
+#[inline]
+pub fn cdiv(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Human-readable byte count (KiB/MiB/GiB).
+pub fn fmt_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Human-readable duration from seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2} s")
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdiv_rounds_up() {
+        assert_eq!(cdiv(10, 3), 4);
+        assert_eq!(cdiv(9, 3), 3);
+        assert_eq!(cdiv(1, 256), 1);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert!(fmt_bytes(3 * 1024 * 1024).starts_with("3.00 MiB"));
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(0.000_000_5).contains("µs"));
+        assert!(fmt_secs(0.005).contains("ms"));
+        assert!(fmt_secs(5.0).contains("s"));
+        assert!(fmt_secs(600.0).contains("min"));
+    }
+}

@@ -1,0 +1,86 @@
+//! Minimal property-based testing runner (no external crates).
+//!
+//! The vendored crate set has no `proptest`, so this module provides the
+//! subset the invariant tests need: run a closure over N randomly
+//! generated cases from a seeded [`Rng`]; on failure, report the case
+//! index and the derived seed so the exact case replays deterministically.
+//! Shrinking is replaced by deterministic replay — good enough for CI
+//! diagnosis at this scale.
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `prop` over `cases` random cases. `gen` builds a case from an Rng;
+/// `prop` returns `Err(reason)` to fail. Panics with a replayable seed on
+/// the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base_seed = 0x5EED_u64 ^ name.len() as u64;
+    for i in 0..cases {
+        let case_seed = base_seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let case = gen(&mut rng);
+        if let Err(reason) = prop(&case) {
+            panic!(
+                "property {name:?} failed on case {i}/{cases} (seed {case_seed:#x}):\n\
+                 case: {case:?}\nreason: {reason}"
+            );
+        }
+    }
+}
+
+/// Convenience: `check` with [`DEFAULT_CASES`].
+pub fn check_default<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check(name, DEFAULT_CASES, gen, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_default(
+            "sum-commutes",
+            |rng| (rng.next_f64(), rng.next_f64()),
+            |(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("not commutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\" failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |rng| rng.next_u64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic_across_runs() {
+        let mut first: Vec<u64> = vec![];
+        check("collect", 10, |rng| rng.next_u64(), |v| {
+            first.push(*v);
+            Ok(())
+        });
+        let mut second: Vec<u64> = vec![];
+        check("collect", 10, |rng| rng.next_u64(), |v| {
+            second.push(*v);
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,108 @@
+//! Timing helpers used by the profiler, metrics and benches.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch: start/stop many times, read total + count.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    total: Duration,
+    count: u64,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "stopwatch already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) -> Duration {
+        let d = self
+            .started
+            .take()
+            .expect("stopwatch not running")
+            .elapsed();
+        self.total += d;
+        self.count += 1;
+        d
+    }
+
+    /// Time a closure, accumulating its duration.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.count as u32
+        }
+    }
+
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+/// RAII timer: records elapsed time into a callback on drop.
+pub struct ScopedTimer<F: FnMut(Duration)> {
+    start: Instant,
+    sink: F,
+}
+
+impl<F: FnMut(Duration)> ScopedTimer<F> {
+    pub fn new(sink: F) -> Self {
+        Self {
+            start: Instant::now(),
+            sink,
+        }
+    }
+}
+
+impl<F: FnMut(Duration)> Drop for ScopedTimer<F> {
+    fn drop(&mut self) {
+        let d = self.start.elapsed();
+        (self.sink)(d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(2)));
+        sw.time(|| std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(sw.count(), 2);
+        assert!(sw.total() >= Duration::from_millis(4));
+        assert!(sw.mean() >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn scoped_timer_fires() {
+        let mut got = Duration::ZERO;
+        {
+            let _t = ScopedTimer::new(|d| got = d);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(got >= Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,196 @@
+//! Routing/state invariants of the KAITIAN process group, checked
+//! property-style across randomized cluster shapes (DESIGN.md §5).
+//! Pure rust — no artifacts needed.
+
+use kaitian::collectives::ReduceOp;
+use kaitian::device::{parse_cluster, DeviceSpec, DeviceType};
+use kaitian::group::{build_cluster, CommPath, GroupMode, RelayKind};
+use kaitian::util::prop::check;
+use kaitian::util::Rng;
+
+fn random_cluster(rng: &mut Rng) -> (String, Vec<DeviceSpec>) {
+    let g = rng.below(4);
+    let m = rng.below(4);
+    let (g, m) = if g + m == 0 { (1, 1) } else { (g, m) };
+    let spec = match (g, m) {
+        (0, m) => format!("{m}M"),
+        (g, 0) => format!("{g}G"),
+        (g, m) => format!("{g}G+{m}M"),
+    };
+    let devices = parse_cluster(&spec).unwrap();
+    (spec, devices)
+}
+
+#[test]
+fn prop_all_reduce_sums_correctly_on_any_cluster() {
+    check(
+        "cluster-allreduce-sum",
+        24,
+        |rng| {
+            let (spec, _) = random_cluster(rng);
+            let n = 1 + rng.below(5000);
+            (spec, n, rng.next_u64())
+        },
+        |(spec, n, seed)| {
+            let devices = parse_cluster(spec).unwrap();
+            let handles =
+                build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+            let world = devices.len();
+            let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+                let hs: Vec<_> = handles
+                    .groups
+                    .iter()
+                    .map(|g| {
+                        let (n, seed) = (*n, *seed);
+                        s.spawn(move || {
+                            let mut rng = Rng::new(seed ^ g.rank() as u64);
+                            let buf: Vec<f32> =
+                                (0..n).map(|_| (rng.below(100) as f32) / 10.0).collect();
+                            let mut out = buf.clone();
+                            g.all_reduce(&mut out, ReduceOp::Sum).unwrap();
+                            // return both input and output
+                            let mut combined = buf;
+                            combined.extend_from_slice(&out);
+                            combined
+                        })
+                    })
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            // Expected sum from each rank's inputs.
+            let mut expect = vec![0.0_f32; *n];
+            for r in &out {
+                for i in 0..*n {
+                    expect[i] += r[i];
+                }
+            }
+            for (rank, r) in out.iter().enumerate() {
+                for i in 0..*n {
+                    let got = r[*n + i];
+                    if (got - expect[i]).abs() > 1e-3 * expect[i].abs().max(1.0) {
+                        return Err(format!(
+                            "{spec} world={world} rank={rank} elem={i}: {got} != {}",
+                            expect[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn homogeneous_ops_never_touch_the_relay() {
+    for spec in ["1G", "3G", "2M", "4M"] {
+        let devices = parse_cluster(spec).unwrap();
+        let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+        let reports: Vec<_> = std::thread::scope(|s| {
+            let hs: Vec<_> = handles
+                .groups
+                .iter()
+                .map(|g| {
+                    s.spawn(move || {
+                        let mut buf = vec![1.0_f32; 100];
+                        g.all_reduce(&mut buf, ReduceOp::Sum).unwrap()
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in reports {
+            assert_eq!(r.path, CommPath::Vendor, "{spec}");
+            assert_eq!(r.inter.staged_bytes, 0, "{spec}: host staging on vendor path");
+            assert_eq!(r.inter.bytes_sent, 0, "{spec}");
+        }
+    }
+}
+
+#[test]
+fn heterogeneous_ops_always_stage_on_leaders() {
+    for spec in ["1G+1M", "2G+2M", "3G+1M"] {
+        let devices = parse_cluster(spec).unwrap();
+        let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+        let reports: Vec<_> = std::thread::scope(|s| {
+            let hs: Vec<_> = handles
+                .groups
+                .iter()
+                .map(|g| {
+                    s.spawn(move || {
+                        let mut buf = vec![1.0_f32; 100];
+                        (g.rank(), g.all_reduce(&mut buf, ReduceOp::Sum).unwrap())
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let leaders: Vec<usize> = {
+            let topo = kaitian::group::Topology::new(devices.clone());
+            topo.leaders()
+        };
+        for (rank, r) in reports {
+            assert_eq!(r.path, CommPath::Hierarchical, "{spec}");
+            if leaders.contains(&rank) {
+                assert!(
+                    r.inter.staged_bytes > 0,
+                    "{spec}: leader {rank} must stage through host"
+                );
+            } else {
+                assert_eq!(
+                    r.inter.staged_bytes, 0,
+                    "{spec}: non-leader {rank} must not touch the relay"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_device_letters_group_correctly() {
+    // Interleaved ordering: G M G M — groups must still form by type.
+    let devices: Vec<DeviceSpec> = vec![
+        DeviceSpec::new(0, DeviceType::GpuSim),
+        DeviceSpec::new(1, DeviceType::MluSim),
+        DeviceSpec::new(2, DeviceType::GpuSim),
+        DeviceSpec::new(3, DeviceType::MluSim),
+    ];
+    let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+    let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let hs: Vec<_> = handles
+            .groups
+            .iter()
+            .map(|g| {
+                s.spawn(move || {
+                    let mut buf = vec![(g.rank() + 1) as f32; 3];
+                    g.all_reduce(&mut buf, ReduceOp::Sum).unwrap();
+                    buf
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for o in out {
+        assert_eq!(o, vec![10.0; 3]);
+    }
+}
+
+#[test]
+fn repeated_collectives_stay_in_sync() {
+    // 50 consecutive mixed ops (all_reduce + broadcast) must not skew tags.
+    let devices = parse_cluster("2G+1M").unwrap();
+    let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+    std::thread::scope(|s| {
+        for g in &handles.groups {
+            s.spawn(move || {
+                for i in 0..50 {
+                    let mut buf = vec![g.rank() as f32 + 1.0; 17];
+                    g.all_reduce(&mut buf, ReduceOp::Sum).unwrap();
+                    assert_eq!(buf, vec![6.0; 17], "iteration {i}");
+                    let mut b2 = if g.rank() == 1 { vec![i as f32; 5] } else { vec![0.0; 5] };
+                    g.broadcast(&mut b2, 1).unwrap();
+                    assert_eq!(b2, vec![i as f32; 5], "iteration {i}");
+                }
+            });
+        }
+    });
+}

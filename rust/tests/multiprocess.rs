@@ -1,0 +1,77 @@
+//! True multi-process distribution: spawn the `kaitian` binary as a
+//! rendezvous server + N worker processes, and verify the cross-process
+//! TCP collective completes (the paper's §III-D control plane, end to
+//! end, across real process boundaries).
+
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+fn kaitian_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_kaitian")
+}
+
+struct KillOnDrop(Child);
+
+impl Drop for KillOnDrop {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[test]
+fn workers_discover_and_all_reduce_across_processes() {
+    // 1. Rendezvous server on a fixed ephemeral-ish port.
+    let port = 23791;
+    let addr = format!("127.0.0.1:{port}");
+    let server = KillOnDrop(
+        Command::new(kaitian_bin())
+            .args(["rendezvous-serve", "--addr", &addr])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn rendezvous server"),
+    );
+    std::thread::sleep(Duration::from_millis(300));
+
+    // 2. Three worker processes rendezvous and run a TCP all-reduce.
+    let world = 3;
+    let workers: Vec<Child> = (0..world)
+        .map(|_| {
+            Command::new(kaitian_bin())
+                .args([
+                    "worker",
+                    "--rendezvous",
+                    &addr,
+                    "--world",
+                    &world.to_string(),
+                    "--job",
+                    "itest",
+                ])
+                .stdout(Stdio::piped())
+                .stderr(Stdio::piped())
+                .spawn()
+                .expect("spawn worker")
+        })
+        .collect();
+
+    let mut outputs = Vec::new();
+    for w in workers {
+        let out = w.wait_with_output().expect("wait worker");
+        outputs.push(out);
+    }
+    drop(server);
+
+    for (i, out) in outputs.iter().enumerate() {
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            out.status.success(),
+            "worker {i} failed:\nstdout: {stdout}\nstderr: {stderr}"
+        );
+        assert!(
+            stdout.contains("all_reduce OK (sum=6)"),
+            "worker {i} wrong result: {stdout}"
+        );
+    }
+}

@@ -1,0 +1,194 @@
+//! Integration tests for the PJRT runtime: load the AOT artifacts produced
+//! by `make artifacts` (or `make artifacts-quick`) and run real training
+//! steps through them.
+//!
+//! These tests require `artifacts/manifest.json` with the *_small presets;
+//! they are skipped (with a loud message) if artifacts are missing so that
+//! pure-rust unit tests can run standalone.
+
+use std::sync::Arc;
+
+use kaitian::runtime::{BatchData, Engine, HostTensor, ModelPrograms};
+use kaitian::util::Rng;
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts-quick`");
+        return None;
+    }
+    Some(Arc::new(Engine::load(dir).expect("engine load")))
+}
+
+/// Build a random classification batch for mobinet_small (32x32x3).
+fn image_batch(rng: &mut Rng, bucket: usize, real: usize) -> BatchData {
+    let n = bucket * 32 * 32 * 3;
+    let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let y: Vec<i32> = (0..bucket).map(|_| rng.below(10) as i32).collect();
+    let mask: Vec<f32> = (0..bucket).map(|i| if i < real { 1.0 } else { 0.0 }).collect();
+    BatchData {
+        tensors: vec![
+            HostTensor::f32(x, &[bucket as i64, 32, 32, 3]),
+            HostTensor::i32(y, &[bucket as i64]),
+            HostTensor::f32(mask, &[bucket as i64]),
+        ],
+        real_samples: real,
+        bucket,
+    }
+}
+
+#[test]
+fn init_is_deterministic() {
+    let Some(engine) = engine() else { return };
+    let progs = ModelPrograms::new(engine, "mobinet_small").unwrap();
+    let a = progs.init_params(42).unwrap();
+    let b = progs.init_params(42).unwrap();
+    let c = progs.init_params(7).unwrap();
+    assert_eq!(a.len(), progs.param_count());
+    assert_eq!(a, b, "same seed must give identical params");
+    assert_ne!(a, c, "different seeds must differ");
+    assert!(a.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn grad_step_runs_and_is_finite() {
+    let Some(engine) = engine() else { return };
+    let progs = ModelPrograms::new(engine, "mobinet_small").unwrap();
+    let params = progs.init_params(0).unwrap();
+    let mut rng = Rng::new(1);
+    let batch = image_batch(&mut rng, 4, 4);
+    let out = progs.grad_step(&params, &batch).unwrap();
+    assert_eq!(out.grads.len(), progs.param_count());
+    assert!(out.loss_sum.is_finite() && out.loss_sum > 0.0);
+    assert!(out.grads.iter().all(|g| g.is_finite()));
+    assert!(out.grads.iter().any(|&g| g != 0.0), "gradients all zero");
+}
+
+#[test]
+fn masked_padding_is_exact() {
+    // Gradients of a bucket with padding == gradients of the bare batch:
+    // the mask makes bucketed execution exact, not approximate.
+    let Some(engine) = engine() else { return };
+    let progs = ModelPrograms::new(engine, "mobinet_small").unwrap();
+    let params = progs.init_params(3).unwrap();
+
+    let mut rng = Rng::new(2);
+    let small = image_batch(&mut rng, 4, 4); // bucket 4, all real
+
+    // Same 4 real samples, padded into bucket 8 with junk in the tail.
+    let mut rng2 = Rng::new(2);
+    let b4 = image_batch(&mut rng2, 4, 4);
+    let xb4 = b4.tensors[0].as_f32().unwrap().to_vec();
+    let mut x8 = xb4.clone();
+    x8.extend((0..4 * 32 * 32 * 3).map(|_| 123.0_f32)); // junk padding
+    let y8: Vec<i32> = match &b4.tensors[1] {
+        HostTensor::I32(d, _) => d.iter().copied().chain([9, 9, 9, 9]).collect(),
+        _ => unreachable!(),
+    };
+    let mask8: Vec<f32> = vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0];
+    let padded = BatchData {
+        tensors: vec![
+            HostTensor::f32(x8, &[8, 32, 32, 3]),
+            HostTensor::i32(y8, &[8]),
+            HostTensor::f32(mask8, &[8]),
+        ],
+        real_samples: 4,
+        bucket: 8,
+    };
+
+    let g_small = progs.grad_step(&params, &small).unwrap();
+    let g_padded = progs.grad_step(&params, &padded).unwrap();
+    assert!(
+        (g_small.loss_sum - g_padded.loss_sum).abs() < 1e-3,
+        "loss {} vs {}",
+        g_small.loss_sum,
+        g_padded.loss_sum
+    );
+    let max_dg = g_small
+        .grads
+        .iter()
+        .zip(&g_padded.grads)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0_f32, f32::max);
+    assert!(max_dg < 1e-4, "max grad diff {max_dg}");
+}
+
+#[test]
+fn sgd_training_reduces_loss() {
+    // The real thing: a few full train steps through PJRT must reduce the
+    // loss on a fixed batch (overfit test).
+    let Some(engine) = engine() else { return };
+    let progs = ModelPrograms::new(engine, "mobinet_small").unwrap();
+    let mut params = progs.init_params(5).unwrap();
+    let mut momentum = vec![0.0_f32; params.len()];
+    let mut rng = Rng::new(9);
+    let batch = image_batch(&mut rng, 8, 8);
+
+    let first = progs.grad_step(&params, &batch).unwrap();
+    let mut last_loss = first.loss_sum;
+    let mut g = first.grads;
+    for _ in 0..8 {
+        // grad_scale = 1/B averages the summed gradients.
+        progs
+            .apply_update(&mut params, &mut momentum, &g, [0.05, 0.9, 0.0, 1.0 / 8.0])
+            .unwrap();
+        let out = progs.grad_step(&params, &batch).unwrap();
+        last_loss = out.loss_sum;
+        g = out.grads;
+    }
+    assert!(
+        last_loss < first.loss_sum * 0.9,
+        "loss did not drop: {} -> {}",
+        first.loss_sum,
+        last_loss
+    );
+}
+
+#[test]
+fn eval_matches_grad_metrics() {
+    let Some(engine) = engine() else { return };
+    let progs = ModelPrograms::new(engine, "mobinet_small").unwrap();
+    let params = progs.init_params(4).unwrap();
+    let mut rng = Rng::new(3);
+    let batch = image_batch(&mut rng, 4, 3);
+    let g = progs.grad_step(&params, &batch).unwrap();
+    let (loss, correct) = progs.eval_step(&params, &batch).unwrap();
+    assert!((g.loss_sum - loss).abs() < 1e-3);
+    assert!((g.correct - correct).abs() < 1e-6);
+}
+
+#[test]
+fn tinygpt_grad_and_update() {
+    let Some(engine) = engine() else { return };
+    let progs = ModelPrograms::new(engine, "tinygpt_small").unwrap();
+    let mut params = progs.init_params(0).unwrap();
+    let mut momentum = vec![0.0_f32; params.len()];
+    let mut rng = Rng::new(4);
+    let (b, t) = (2_usize, 32_usize);
+    let tokens: Vec<i32> = (0..b * t).map(|_| rng.below(256) as i32).collect();
+    let batch = BatchData {
+        tensors: vec![
+            HostTensor::i32(tokens.clone(), &[b as i64, t as i64]),
+            HostTensor::i32(tokens, &[b as i64, t as i64]),
+            HostTensor::f32(vec![1.0; b], &[b as i64]),
+        ],
+        real_samples: b,
+        bucket: b,
+    };
+    let first = progs.grad_step(&params, &batch).unwrap();
+    assert!(first.loss_sum.is_finite());
+    let mut g = first.grads.clone();
+    for _ in 0..5 {
+        progs
+            .apply_update(&mut params, &mut momentum, &g, [0.1, 0.9, 0.0, 1.0 / 2.0])
+            .unwrap();
+        g = progs.grad_step(&params, &batch).unwrap().grads;
+    }
+    let last = progs.grad_step(&params, &batch).unwrap();
+    assert!(
+        last.loss_sum < first.loss_sum,
+        "gpt loss did not drop: {} -> {}",
+        first.loss_sum,
+        last.loss_sum
+    );
+}

@@ -1,0 +1,247 @@
+//! End-to-end training through the full KAITIAN stack: simulated
+//! heterogeneous cluster, load-adaptive split, hierarchical collectives,
+//! real PJRT compute, fused Pallas optimizer.
+//!
+//! Requires `make artifacts-quick` (small presets).
+
+use std::sync::Arc;
+
+use kaitian::group::GroupMode;
+use kaitian::runtime::Engine;
+use kaitian::sched::Strategy;
+use kaitian::train::{train, TrainOptions};
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts — run `make artifacts-quick`");
+        return None;
+    }
+    Some(Arc::new(Engine::load(dir).expect("engine load")))
+}
+
+#[test]
+fn heterogeneous_training_loss_decreases() {
+    let Some(engine) = engine() else { return };
+    let mut opts = TrainOptions::quick_test("1G+1M");
+    opts.epochs = 4;
+    opts.steps_per_epoch = Some(8);
+    opts.lr = 0.1;
+    let report = train(engine, &opts).unwrap();
+    assert_eq!(report.cluster, "1G+1M");
+    assert_eq!(report.steps, 32);
+    assert_eq!(report.step_losses.len(), 32);
+    // Fresh batches each step: compare window means, not endpoints.
+    let head: f64 = report.step_losses[..8].iter().sum::<f64>() / 8.0;
+    let tail: f64 = report.step_losses[24..].iter().sum::<f64>() / 8.0;
+    assert!(
+        tail < head,
+        "mean loss should fall under SGD: {head:.4} -> {tail:.4}"
+    );
+    assert!(report.final_accuracy().is_some());
+}
+
+#[test]
+fn homogeneous_and_heterogeneous_agree_on_gradients() {
+    // Same seed + same global batch => same loss trajectory regardless of
+    // cluster shape (the DDP-exactness invariant, end to end).
+    let Some(engine) = engine() else { return };
+    let mut base = TrainOptions::quick_test("1G");
+    base.epochs = 1;
+    base.steps_per_epoch = Some(4);
+    base.eval_batches = 0;
+    let solo = train(engine.clone(), &base).unwrap();
+
+    let mut hetero = base.clone();
+    hetero.cluster = "1G+1M".into();
+    let duo = train(engine.clone(), &hetero).unwrap();
+
+    let mut trio = base.clone();
+    trio.cluster = "2G+1M".into();
+    let tri = train(engine, &trio).unwrap();
+
+    for (i, ((a, b), c)) in solo
+        .step_losses
+        .iter()
+        .zip(&duo.step_losses)
+        .zip(&tri.step_losses)
+        .enumerate()
+    {
+        assert!(
+            (a - b).abs() < 1e-3 && (a - c).abs() < 1e-3,
+            "step {i}: losses diverge across cluster shapes: {a} {b} {c}"
+        );
+    }
+}
+
+#[test]
+fn strategies_change_allocation_not_result() {
+    let Some(engine) = engine() else { return };
+    let mut opts = TrainOptions::quick_test("1G+1M");
+    opts.epochs = 1;
+    opts.steps_per_epoch = Some(3);
+    opts.eval_batches = 0;
+    opts.strategy = Strategy::Equal;
+    let equal = train(engine.clone(), &opts).unwrap();
+    assert_eq!(equal.allocation, vec![8, 8]);
+
+    opts.strategy = Strategy::Fixed(vec![0.75, 0.25]);
+    let fixed = train(engine, &opts).unwrap();
+    assert_eq!(fixed.allocation, vec![12, 4]);
+
+    // Same data order => same global gradients => same losses.
+    for (a, b) in equal.step_losses.iter().zip(&fixed.step_losses) {
+        assert!((a - b).abs() < 1e-3, "strategy must not change numerics");
+    }
+}
+
+#[test]
+fn flat_gloo_mode_trains_identically() {
+    let Some(engine) = engine() else { return };
+    let mut opts = TrainOptions::quick_test("1G+1M");
+    opts.epochs = 1;
+    opts.steps_per_epoch = Some(3);
+    opts.eval_batches = 0;
+    let kaitian = train(engine.clone(), &opts).unwrap();
+    opts.group_mode = GroupMode::FlatGloo;
+    let flat = train(engine, &opts).unwrap();
+    for (a, b) in kaitian.step_losses.iter().zip(&flat.step_losses) {
+        assert!((a - b).abs() < 1e-3, "group mode must not change numerics");
+    }
+}
+
+#[test]
+fn native_mode_homogeneous() {
+    let Some(engine) = engine() else { return };
+    let mut opts = TrainOptions::quick_test("2M");
+    opts.group_mode = GroupMode::Native;
+    opts.epochs = 1;
+    opts.steps_per_epoch = Some(3);
+    let report = train(engine, &opts).unwrap();
+    assert_eq!(report.group_mode, "native");
+    assert_eq!(report.step_losses.len(), 3);
+}
+
+#[test]
+fn tinygpt_trains_over_hetero_cluster() {
+    let Some(engine) = engine() else { return };
+    let mut opts = TrainOptions::quick_test("1G+1M");
+    opts.preset = "tinygpt_small".into();
+    opts.global_batch = 4;
+    opts.dataset_len = 64;
+    opts.epochs = 2;
+    opts.steps_per_epoch = Some(5);
+    opts.lr = 0.1;
+    let report = train(engine, &opts).unwrap();
+    let first = report.step_losses[0];
+    let last = *report.step_losses.last().unwrap();
+    assert!(last < first, "LM loss should fall: {first} -> {last}");
+}
+
+#[test]
+fn throttled_profiling_orders_scores_by_device_speed() {
+    let Some(engine) = engine() else { return };
+    let mut opts = TrainOptions::quick_test("1G+1M");
+    opts.throttle = true;
+    opts.profile = true;
+    opts.epochs = 1;
+    opts.steps_per_epoch = Some(2);
+    opts.eval_batches = 0;
+    let report = train(engine, &opts).unwrap();
+    // rank 0 = GPU-sim (throttled slower), rank 1 = MLU-sim (fastest).
+    assert!(
+        report.scores[1] > report.scores[0],
+        "MLU must outscore GPU: {:?}",
+        report.scores
+    );
+    assert!((report.scores[1] - 1.0).abs() < 1e-9);
+    // Allocation follows scores.
+    assert!(report.allocation[1] > report.allocation[0]);
+}
+
+#[test]
+fn online_adaptation_corrects_stale_scores() {
+    // Paper §V future work: without throttling, all simulated devices are
+    // equally fast in reality — but the *initial* (model-derived) scores
+    // claim the GPU is ~0.72x. Online adaptation must pull the allocation
+    // back toward an even split as measured per-sample times come in.
+    let Some(engine) = engine() else { return };
+    let mut opts = TrainOptions::quick_test("1G+1M");
+    opts.global_batch = 24;
+    opts.epochs = 1;
+    opts.steps_per_epoch = Some(20);
+    opts.eval_batches = 0;
+    opts.profile = false; // start from the (wrong, for unthrottled) model scores
+    opts.throttle = false;
+    opts.online_adapt = true;
+    opts.adapt_every = 4;
+    let report = train(engine, &opts).unwrap();
+    // Initial model scores are [~0.72, 1.0] -> allocation ~[10, 14].
+    // Measured equality must pull the final scores together.
+    let gap = (report.scores[0] - report.scores[1]).abs();
+    assert!(
+        gap < 0.28,
+        "online adaptation failed to converge scores: {:?}",
+        report.scores
+    );
+    let alloc_gap = (report.allocation[0] as i64 - report.allocation[1] as i64).abs();
+    assert!(
+        alloc_gap <= 3,
+        "allocation still skewed: {:?}",
+        report.allocation
+    );
+}
+
+#[test]
+fn fp16_relay_training_matches_uncompressed_closely() {
+    // Extension (paper §V-B): fp16 relay compression must not disturb
+    // convergence — losses track the exact run within fp16 tolerance.
+    let Some(engine) = engine() else { return };
+    let mut opts = TrainOptions::quick_test("1G+1M");
+    opts.epochs = 1;
+    opts.steps_per_epoch = Some(5);
+    opts.eval_batches = 0;
+    let exact = train(engine.clone(), &opts).unwrap();
+    opts.relay = kaitian::group::RelayKind::InprocFp16;
+    let fp16 = train(engine, &opts).unwrap();
+    for (i, (a, b)) in exact.step_losses.iter().zip(&fp16.step_losses).enumerate() {
+        assert!(
+            (a - b).abs() < 0.02 * a.abs().max(1.0),
+            "step {i}: fp16 diverged: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn checkpoint_save_and_resume() {
+    let Some(engine) = engine() else { return };
+    let dir = std::env::temp_dir().join(format!("kt-resume-{}", std::process::id()));
+    let ckpt = dir.join("state.ckpt").to_string_lossy().to_string();
+
+    let mut opts = TrainOptions::quick_test("1G+1M");
+    opts.epochs = 1;
+    opts.steps_per_epoch = Some(3);
+    opts.eval_batches = 0;
+    opts.checkpoint = Some(ckpt.clone());
+    let first = train(engine.clone(), &opts).unwrap();
+
+    // Resume: loss must continue from (not reset to) the trained state.
+    let mut opts2 = opts.clone();
+    opts2.checkpoint = None;
+    opts2.resume_from = Some(ckpt.clone());
+    let resumed = train(engine.clone(), &opts2).unwrap();
+
+    // Fresh run for comparison.
+    let mut opts3 = opts.clone();
+    opts3.checkpoint = None;
+    let fresh = train(engine, &opts3).unwrap();
+
+    assert!(
+        resumed.step_losses[0] < fresh.step_losses[0],
+        "resumed start {} should beat fresh start {}",
+        resumed.step_losses[0],
+        fresh.step_losses[0]
+    );
+    let _ = first;
+    std::fs::remove_dir_all(&dir).ok();
+}
