@@ -1,0 +1,117 @@
+//! Bench: blocking vs pipelined (overlapped) gradient sync on
+//! heterogeneous clusters.
+//!
+//! The blocking baseline serializes every bucket's 3-step hierarchical
+//! all-reduce (vendor reduce → host-relay hop → vendor broadcast); the
+//! pipelined path issues all buckets up front so bucket *k*'s relay hop
+//! overlaps bucket *k+1*'s vendor reduce. The headline number is the
+//! *exposed* comm time per sync — what actually lands on the training
+//! step's critical path.
+//!
+//! Run: `cargo bench --bench overlap [-- --quick]`
+
+use std::collections::BTreeMap;
+
+use kaitian::ddp::DdpEngine;
+use kaitian::device::parse_cluster;
+use kaitian::group::{build_cluster, GroupMode, RelayKind};
+use kaitian::metrics::MarkdownTable;
+use kaitian::util::json::Json;
+
+/// Per-sync (straggler wall seconds, mean per-rank busy seconds).
+fn sync_time(
+    spec: &str,
+    pipelined: bool,
+    iters: usize,
+    elems: usize,
+    bucket_bytes: usize,
+) -> kaitian::Result<(f64, f64)> {
+    let devices = parse_cluster(spec)?;
+    // TCP relay: the honest syscall path whose latency the pipeline hides.
+    let handles = build_cluster(&devices, RelayKind::Tcp, GroupMode::Kaitian)?;
+    let results: Vec<(f64, f64)> = std::thread::scope(|s| {
+        let hs: Vec<_> = handles
+            .groups
+            .iter()
+            .map(|g| {
+                s.spawn(move || {
+                    let ddp = DdpEngine::new(g.as_ref(), bucket_bytes);
+                    let mut grads: Vec<f32> =
+                        (0..elems).map(|i| (i % 13) as f32 + g.rank() as f32).collect();
+                    for _ in 0..2 {
+                        // warmup
+                        if pipelined {
+                            ddp.all_reduce_grads(&mut grads).unwrap();
+                        } else {
+                            ddp.all_reduce_grads_blocking(&mut grads).unwrap();
+                        }
+                    }
+                    let t0 = std::time::Instant::now();
+                    let mut busy = 0.0;
+                    for _ in 0..iters {
+                        let rep = if pipelined {
+                            ddp.all_reduce_grads(&mut grads).unwrap()
+                        } else {
+                            ddp.all_reduce_grads_blocking(&mut grads).unwrap()
+                        };
+                        busy += rep.seconds;
+                    }
+                    (
+                        t0.elapsed().as_secs_f64() / iters as f64,
+                        busy / iters as f64,
+                    )
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // Ranks are lock-stepped by the collective: report the straggler wall
+    // time and the mean busy time.
+    let wall = results.iter().map(|r| r.0).fold(0.0, f64::max);
+    let busy = results.iter().map(|r| r.1).sum::<f64>() / results.len() as f64;
+    Ok((wall, busy))
+}
+
+fn main() -> kaitian::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 5 } else { 15 };
+    let elems = 1 << 20; // 4 MiB of gradients
+    let bucket_bytes = 64 << 10; // 64 KiB buckets -> 64 pipeline slots
+
+    let mut table = MarkdownTable::new(&[
+        "cluster",
+        "blocking (s/sync)",
+        "pipelined exposed (s/sync)",
+        "pipelined busy (s/sync)",
+        "speedup",
+    ]);
+    let mut json = BTreeMap::new();
+    for spec in ["1G+2M", "2G+2M"] {
+        let (blocking, _) = sync_time(spec, false, iters, elems, bucket_bytes)?;
+        let (exposed, busy) = sync_time(spec, true, iters, elems, bucket_bytes)?;
+        let speedup = blocking / exposed.max(1e-12);
+        table.row(vec![
+            spec.to_string(),
+            kaitian::util::fmt_secs(blocking),
+            kaitian::util::fmt_secs(exposed),
+            kaitian::util::fmt_secs(busy),
+            format!("{speedup:.2}x"),
+        ]);
+        json.insert(
+            spec.to_string(),
+            Json::obj(vec![
+                ("blocking_s", Json::num(blocking)),
+                ("pipelined_exposed_s", Json::num(exposed)),
+                ("pipelined_busy_s", Json::num(busy)),
+                ("speedup", Json::num(speedup)),
+                ("elems", Json::num(elems as f64)),
+                ("bucket_bytes", Json::num(bucket_bytes as f64)),
+            ]),
+        );
+    }
+    println!("== gradient sync: blocking vs pipelined (TCP relay) ==\n");
+    println!("{}", table.render());
+    let path = kaitian::metrics::write_report("results", "overlap", json)?;
+    println!("wrote {path}");
+    Ok(())
+}

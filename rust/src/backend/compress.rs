@@ -16,7 +16,7 @@
 
 use std::time::Instant;
 
-use crate::collectives::{CommStats, Communicator, ReduceOp};
+use crate::collectives::{ring, tree, CommStats, Communicator, ReduceOp, WorkHandle};
 use crate::Result;
 
 use super::CollectiveBackend;
@@ -134,6 +134,70 @@ impl Fp16Relay {
     }
 }
 
+/// The fp16 all-reduce body shared by the blocking-tagged and async
+/// paths: compress, all-gather the halves as f32 lanes, local f32 fold.
+fn fp16_all_reduce(
+    t: &dyn crate::transport::Transport,
+    world: usize,
+    buf: &mut [f32],
+    op: ReduceOp,
+    tag: u64,
+) -> Result<CommStats> {
+    let t0 = Instant::now();
+    let compressed = compress_f16(buf);
+    // All-gather at byte level through the f32 API: reinterpret the
+    // f16 pairs as f32 lanes (content-agnostic transport).
+    let lanes = crate::transport::bytes_to_f32s(&pad4(&compressed))?;
+    let t_stage1 = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let (gathered, mut stats) = ring::ring_all_gather(t, &lanes, tag)?;
+    stats.seconds = t1.elapsed().as_secs_f64();
+    stats.op = "all_reduce";
+    let per = lanes.len();
+
+    let t2 = Instant::now();
+    // Local reduction across every rank's contribution.
+    let mut first = true;
+    for r in 0..world {
+        let bytes = crate::transport::f32s_to_bytes(&gathered[r * per..(r + 1) * per]);
+        let vals = decompress_f16(&bytes[..buf.len() * 2])?;
+        if first {
+            buf.copy_from_slice(&vals);
+            first = false;
+        } else {
+            op.fold(buf, &vals);
+        }
+    }
+    stats.staged_bytes += 2 * (buf.len() * 2) as u64; // f16 staging both ways
+    stats.stage_seconds += t_stage1 + t2.elapsed().as_secs_f64();
+    Ok(stats)
+}
+
+/// The fp16 broadcast body (see [`fp16_all_reduce`]).
+fn fp16_broadcast(
+    t: &dyn crate::transport::Transport,
+    buf: &mut [f32],
+    root: usize,
+    tag: u64,
+) -> Result<CommStats> {
+    let t0 = Instant::now();
+    let compressed = compress_f16(buf);
+    let mut lanes = crate::transport::bytes_to_f32s(&pad4(&compressed))?;
+    let t_stage = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let mut stats = tree::broadcast(t, &mut lanes, root, tag)?;
+    stats.seconds = t1.elapsed().as_secs_f64();
+    stats.op = "broadcast";
+    let t2 = Instant::now();
+    let bytes = crate::transport::f32s_to_bytes(&lanes);
+    let vals = decompress_f16(&bytes[..buf.len() * 2])?;
+    buf.copy_from_slice(&vals);
+    stats.staged_bytes += 2 * (buf.len() * 2) as u64;
+    stats.stage_seconds += t_stage + t2.elapsed().as_secs_f64();
+    Ok(stats)
+}
+
 impl CollectiveBackend for Fp16Relay {
     fn name(&self) -> &'static str {
         "gloo-relay-fp16"
@@ -147,62 +211,46 @@ impl CollectiveBackend for Fp16Relay {
         self.comm.world()
     }
 
-    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<CommStats> {
-        // D2H + compress, all-gather the halves, local f32 reduce, H2D.
-        let t0 = Instant::now();
-        let compressed = compress_f16(buf);
-        let t_stage1 = t0.elapsed().as_secs_f64();
-
-        // All-gather at byte level through the f32 API: reinterpret the
-        // f16 pairs as f32 lanes (content-agnostic transport).
-        let lanes = crate::transport::bytes_to_f32s(&pad4(&compressed))?;
-        let (gathered, mut stats) = self.comm.all_gather(&lanes)?;
-        let per = lanes.len();
-
-        let t1 = Instant::now();
-        // Local reduction across every rank's contribution.
-        for (i, v) in buf.iter_mut().enumerate() {
-            *v = 0.0;
-            let _ = i;
-        }
-        let mut first = true;
-        for r in 0..self.world() {
-            let bytes = crate::transport::f32s_to_bytes(&gathered[r * per..(r + 1) * per]);
-            let vals = decompress_f16(&bytes[..buf.len() * 2])?;
-            if first {
-                buf.copy_from_slice(&vals);
-                first = false;
-            } else {
-                op.fold(buf, &vals);
-            }
-        }
-        stats.staged_bytes += 2 * (buf.len() * 2) as u64; // f16 staging both ways
-        stats.stage_seconds += t_stage1 + t1.elapsed().as_secs_f64();
-        Ok(stats)
+    fn reserve_tag(&self) -> u64 {
+        self.comm.reserve_tag()
     }
 
-    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<CommStats> {
-        let t0 = Instant::now();
-        let compressed = compress_f16(buf);
-        let mut lanes = crate::transport::bytes_to_f32s(&pad4(&compressed))?;
-        let t_stage = t0.elapsed().as_secs_f64();
-        let mut stats = self.comm.broadcast(&mut lanes, root)?;
-        let t1 = Instant::now();
-        let bytes = crate::transport::f32s_to_bytes(&lanes);
-        let vals = decompress_f16(&bytes[..buf.len() * 2])?;
-        buf.copy_from_slice(&vals);
-        stats.staged_bytes += 2 * (buf.len() * 2) as u64;
-        stats.stage_seconds += t_stage + t1.elapsed().as_secs_f64();
-        Ok(stats)
+    fn all_reduce_tagged(&self, buf: &mut [f32], op: ReduceOp, tag: u64) -> Result<CommStats> {
+        fp16_all_reduce(self.comm.transport(), self.world(), buf, op, tag)
     }
 
-    fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, CommStats)> {
+    fn broadcast_tagged(&self, buf: &mut [f32], root: usize, tag: u64) -> Result<CommStats> {
+        fp16_broadcast(self.comm.transport(), buf, root, tag)
+    }
+
+    fn all_gather_tagged(&self, send: &[f32], tag: u64) -> Result<(Vec<f32>, CommStats)> {
         // Metadata-sized; compression not worth the error. Pass through.
-        self.comm.all_gather(send)
+        self.comm.all_gather_tagged(send, tag)
     }
 
     fn barrier(&self) -> Result<CommStats> {
         self.comm.barrier()
+    }
+
+    fn all_reduce_async(
+        &self,
+        mut buf: Vec<f32>,
+        op: ReduceOp,
+    ) -> WorkHandle<(Vec<f32>, CommStats)> {
+        let tag = self.comm.reserve_tag();
+        let world = self.world();
+        self.comm.run_async(move |t| {
+            let stats = fp16_all_reduce(t, world, &mut buf, op, tag)?;
+            Ok((buf, stats))
+        })
+    }
+
+    fn broadcast_async(&self, mut buf: Vec<f32>, root: usize) -> WorkHandle<(Vec<f32>, CommStats)> {
+        let tag = self.comm.reserve_tag();
+        self.comm.run_async(move |t| {
+            let stats = fp16_broadcast(t, &mut buf, root, tag)?;
+            Ok((buf, stats))
+        })
     }
 }
 

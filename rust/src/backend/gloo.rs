@@ -17,7 +17,7 @@
 
 use std::time::Instant;
 
-use crate::collectives::{CommStats, Communicator, ReduceOp};
+use crate::collectives::{ring, tree, CommStats, Communicator, ReduceOp, WorkHandle};
 use crate::Result;
 
 use super::CollectiveBackend;
@@ -47,6 +47,43 @@ impl GlooHostRelay {
     }
 }
 
+/// The 3-step relay all-reduce body, shared by the blocking-tagged and
+/// async paths: D2H stage, ring all-reduce over `t`, H2D stage.
+fn relay_all_reduce(
+    t: &dyn crate::transport::Transport,
+    buf: &mut [f32],
+    op: ReduceOp,
+    tag: u64,
+) -> Result<CommStats> {
+    let (mut host, t_d2h) = GlooHostRelay::d2h(buf);
+    let t0 = Instant::now();
+    let mut stats = ring::ring_all_reduce(t, &mut host, op, tag)?;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    stats.op = "all_reduce";
+    let t_h2d = GlooHostRelay::h2d(&host, buf);
+    stats.staged_bytes += 2 * (buf.len() * 4) as u64;
+    stats.stage_seconds += t_d2h + t_h2d;
+    Ok(stats)
+}
+
+/// The 3-step relay broadcast body (see [`relay_all_reduce`]).
+fn relay_broadcast(
+    t: &dyn crate::transport::Transport,
+    buf: &mut [f32],
+    root: usize,
+    tag: u64,
+) -> Result<CommStats> {
+    let (mut host, t_d2h) = GlooHostRelay::d2h(buf);
+    let t0 = Instant::now();
+    let mut stats = tree::broadcast(t, &mut host, root, tag)?;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    stats.op = "broadcast";
+    let t_h2d = GlooHostRelay::h2d(&host, buf);
+    stats.staged_bytes += 2 * (buf.len() * 4) as u64;
+    stats.stage_seconds += t_d2h + t_h2d;
+    Ok(stats)
+}
+
 impl CollectiveBackend for GlooHostRelay {
     fn name(&self) -> &'static str {
         "gloo-relay"
@@ -60,28 +97,21 @@ impl CollectiveBackend for GlooHostRelay {
         self.comm.world()
     }
 
-    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<CommStats> {
-        // D2H -> host collective -> H2D (the 3-step relay).
-        let (mut host, t_d2h) = Self::d2h(buf);
-        let mut stats = self.comm.all_reduce(&mut host, op)?;
-        let t_h2d = Self::h2d(&host, buf);
-        stats.staged_bytes += 2 * (buf.len() * 4) as u64;
-        stats.stage_seconds += t_d2h + t_h2d;
-        Ok(stats)
+    fn reserve_tag(&self) -> u64 {
+        self.comm.reserve_tag()
     }
 
-    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<CommStats> {
-        let (mut host, t_d2h) = Self::d2h(buf);
-        let mut stats = self.comm.broadcast(&mut host, root)?;
-        let t_h2d = Self::h2d(&host, buf);
-        stats.staged_bytes += 2 * (buf.len() * 4) as u64;
-        stats.stage_seconds += t_d2h + t_h2d;
-        Ok(stats)
+    fn all_reduce_tagged(&self, buf: &mut [f32], op: ReduceOp, tag: u64) -> Result<CommStats> {
+        relay_all_reduce(self.comm.transport(), buf, op, tag)
     }
 
-    fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, CommStats)> {
+    fn broadcast_tagged(&self, buf: &mut [f32], root: usize, tag: u64) -> Result<CommStats> {
+        relay_broadcast(self.comm.transport(), buf, root, tag)
+    }
+
+    fn all_gather_tagged(&self, send: &[f32], tag: u64) -> Result<(Vec<f32>, CommStats)> {
         let (host, t_d2h) = Self::d2h(send);
-        let (gathered_host, mut stats) = self.comm.all_gather(&host)?;
+        let (gathered_host, mut stats) = self.comm.all_gather_tagged(&host, tag)?;
         // H2D of the gathered result.
         let t0 = Instant::now();
         let out = gathered_host.clone();
@@ -93,6 +123,28 @@ impl CollectiveBackend for GlooHostRelay {
 
     fn barrier(&self) -> Result<CommStats> {
         self.comm.barrier()
+    }
+
+    fn all_reduce_async(
+        &self,
+        mut buf: Vec<f32>,
+        op: ReduceOp,
+    ) -> WorkHandle<(Vec<f32>, CommStats)> {
+        // The staging copies run on the comm thread: overlapping them
+        // with the caller's compute is the point of the async path.
+        let tag = self.comm.reserve_tag();
+        self.comm.run_async(move |t| {
+            let stats = relay_all_reduce(t, &mut buf, op, tag)?;
+            Ok((buf, stats))
+        })
+    }
+
+    fn broadcast_async(&self, mut buf: Vec<f32>, root: usize) -> WorkHandle<(Vec<f32>, CommStats)> {
+        let tag = self.comm.reserve_tag();
+        self.comm.run_async(move |t| {
+            let stats = relay_broadcast(t, &mut buf, root, tag)?;
+            Ok((buf, stats))
+        })
     }
 }
 

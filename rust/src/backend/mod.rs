@@ -19,11 +19,21 @@ pub use compress::Fp16Relay;
 pub use gloo::GlooHostRelay;
 pub use vendor::{VendorKind, VendorSim};
 
-use crate::collectives::{CommStats, ReduceOp};
+use crate::collectives::{CommStats, ReduceOp, WorkHandle};
 use crate::Result;
 
 /// The collective interface KAITIAN dispatches to (one instance per rank
 /// per communicator, SPMD).
+///
+/// Every collective exists in three forms:
+/// * blocking untagged (`all_reduce`, …) — provided methods that reserve a
+///   tag and run inline; the seed API, unchanged for callers;
+/// * blocking *tagged* (`all_reduce_tagged`, …) — the tag was reserved by
+///   the caller (via [`CollectiveBackend::reserve_tag`]) at issue time, so
+///   the op may execute on any thread, in any order relative to other
+///   in-flight ops, without breaking SPMD tag alignment;
+/// * async (`all_reduce_async`, …) — issue now on an ordered comm thread,
+///   `wait()` the returned [`WorkHandle`] later.
 pub trait CollectiveBackend: Send + Sync {
     /// Backend identity for metrics ("nccl-sim", "cncl-sim", "gloo-relay").
     fn name(&self) -> &'static str;
@@ -34,17 +44,46 @@ pub trait CollectiveBackend: Send + Sync {
     /// Communicator size.
     fn world(&self) -> usize;
 
-    /// In-place all-reduce.
-    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<CommStats>;
+    /// Reserve the tag namespace for one collective at issue time (must
+    /// happen in SPMD program order on the caller thread).
+    fn reserve_tag(&self) -> u64;
 
-    /// In-place broadcast from `root`.
-    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<CommStats>;
+    /// In-place all-reduce under a caller-reserved tag.
+    fn all_reduce_tagged(&self, buf: &mut [f32], op: ReduceOp, tag: u64) -> Result<CommStats>;
 
-    /// Gather equal-length buffers; concatenation in rank order.
-    fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, CommStats)>;
+    /// In-place broadcast from `root` under a caller-reserved tag.
+    fn broadcast_tagged(&self, buf: &mut [f32], root: usize, tag: u64) -> Result<CommStats>;
+
+    /// Gather equal-length buffers under a caller-reserved tag;
+    /// concatenation in rank order.
+    fn all_gather_tagged(&self, send: &[f32], tag: u64) -> Result<(Vec<f32>, CommStats)>;
 
     /// Rendezvous of all ranks in the communicator.
     fn barrier(&self) -> Result<CommStats>;
+
+    /// Issue an all-reduce on the backend's comm thread.
+    fn all_reduce_async(&self, buf: Vec<f32>, op: ReduceOp) -> WorkHandle<(Vec<f32>, CommStats)>;
+
+    /// Issue a broadcast on the backend's comm thread.
+    fn broadcast_async(&self, buf: Vec<f32>, root: usize) -> WorkHandle<(Vec<f32>, CommStats)>;
+
+    /// In-place all-reduce (blocking).
+    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<CommStats> {
+        let tag = self.reserve_tag();
+        self.all_reduce_tagged(buf, op, tag)
+    }
+
+    /// In-place broadcast from `root` (blocking).
+    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<CommStats> {
+        let tag = self.reserve_tag();
+        self.broadcast_tagged(buf, root, tag)
+    }
+
+    /// Gather equal-length buffers (blocking); concatenation in rank order.
+    fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, CommStats)> {
+        let tag = self.reserve_tag();
+        self.all_gather_tagged(send, tag)
+    }
 }
 
 #[cfg(test)]
@@ -92,6 +131,59 @@ mod tests {
         for o in &out {
             assert_eq!(o, &vec![7.0; 3]);
         }
+        // all_gather: concatenation in rank order
+        let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let hs: Vec<_> = backends
+                .iter()
+                .map(|b| {
+                    s.spawn(move || {
+                        let send = vec![b.rank() as f32; 2];
+                        b.all_gather(&send).unwrap().0
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let expect: Vec<f32> = (0..world).flat_map(|r| [r as f32, r as f32]).collect();
+        for o in &out {
+            assert_eq!(o, &expect);
+        }
+        // async all_reduce matches blocking
+        let out: Vec<(Vec<f32>, Vec<f32>)> = std::thread::scope(|s| {
+            let hs: Vec<_> = backends
+                .iter()
+                .map(|b| {
+                    s.spawn(move || {
+                        let init = vec![(b.rank() + 1) as f32; 4];
+                        let mut blocking = init.clone();
+                        b.all_reduce(&mut blocking, ReduceOp::Sum).unwrap();
+                        let (issued, _) =
+                            b.all_reduce_async(init, ReduceOp::Sum).wait().unwrap();
+                        (blocking, issued)
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (blocking, issued) in &out {
+            assert_eq!(blocking, issued);
+        }
+        // async broadcast delivers the root buffer
+        let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let hs: Vec<_> = backends
+                .iter()
+                .map(|b| {
+                    s.spawn(move || {
+                        let buf = if b.rank() == 0 { vec![2.5; 3] } else { vec![0.0; 3] };
+                        b.broadcast_async(buf, 0).wait().unwrap().0
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for o in &out {
+            assert_eq!(o, &vec![2.5; 3]);
+        }
         // barrier
         std::thread::scope(|s| {
             for b in &backends {
@@ -122,6 +214,20 @@ mod tests {
             .into_iter()
             .map(|e| {
                 Box::new(GlooHostRelay::new(Communicator::new(Arc::new(e))))
+                    as Box<dyn CollectiveBackend>
+            })
+            .collect();
+        conformance(backends);
+    }
+
+    #[test]
+    fn fp16_backend_conformance() {
+        // The conformance values (small integers, 2.5) are f16-exact.
+        let eps = InprocMesh::new(3);
+        let backends: Vec<Box<dyn CollectiveBackend>> = eps
+            .into_iter()
+            .map(|e| {
+                Box::new(Fp16Relay::new(Communicator::new(Arc::new(e))))
                     as Box<dyn CollectiveBackend>
             })
             .collect();

@@ -8,7 +8,7 @@
 //! right one per sub-group and must never hand an MLU buffer to NCCL
 //! (enforced by construction + tests).
 
-use crate::collectives::{CommStats, Communicator, ReduceOp};
+use crate::collectives::{CommStats, Communicator, ReduceOp, WorkHandle};
 use crate::device::DeviceType;
 use crate::Result;
 
@@ -76,20 +76,32 @@ impl CollectiveBackend for VendorSim {
         self.comm.world()
     }
 
-    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<CommStats> {
-        self.comm.all_reduce(buf, op)
+    fn reserve_tag(&self) -> u64 {
+        self.comm.reserve_tag()
     }
 
-    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<CommStats> {
-        self.comm.broadcast(buf, root)
+    fn all_reduce_tagged(&self, buf: &mut [f32], op: ReduceOp, tag: u64) -> Result<CommStats> {
+        self.comm.all_reduce_tagged(buf, op, tag)
     }
 
-    fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, CommStats)> {
-        self.comm.all_gather(send)
+    fn broadcast_tagged(&self, buf: &mut [f32], root: usize, tag: u64) -> Result<CommStats> {
+        self.comm.broadcast_tagged(buf, root, tag)
+    }
+
+    fn all_gather_tagged(&self, send: &[f32], tag: u64) -> Result<(Vec<f32>, CommStats)> {
+        self.comm.all_gather_tagged(send, tag)
     }
 
     fn barrier(&self) -> Result<CommStats> {
         self.comm.barrier()
+    }
+
+    fn all_reduce_async(&self, buf: Vec<f32>, op: ReduceOp) -> WorkHandle<(Vec<f32>, CommStats)> {
+        self.comm.all_reduce_async(buf, op)
+    }
+
+    fn broadcast_async(&self, buf: Vec<f32>, root: usize) -> WorkHandle<(Vec<f32>, CommStats)> {
+        self.comm.broadcast_async(buf, root)
     }
 }
 

@@ -13,11 +13,13 @@
 pub mod ops;
 pub mod ring;
 pub mod tree;
+pub mod work;
 
 pub use ops::ReduceOp;
+pub use work::{CommQueue, CommThread, WorkHandle, WorkSender};
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use crate::transport::Transport;
@@ -44,6 +46,11 @@ pub struct CommStats {
 
 impl CommStats {
     pub fn merge(&mut self, other: &CommStats) {
+        // Keep a meaningful op label on merged stats: adopt the first
+        // non-empty label instead of silently dropping it.
+        if self.op.is_empty() {
+            self.op = other.op;
+        }
         self.bytes_sent += other.bytes_sent;
         self.bytes_recv += other.bytes_recv;
         self.seconds += other.seconds;
@@ -53,10 +60,12 @@ impl CommStats {
     }
 }
 
-/// A communicator: a transport endpoint + operation counter.
+/// A communicator: a transport endpoint + operation counter + (lazily
+/// spawned) comm thread for issued async collectives.
 pub struct Communicator {
     transport: Arc<dyn Transport>,
     op_counter: AtomicU64,
+    comm_thread: OnceLock<CommThread>,
 }
 
 impl Communicator {
@@ -64,6 +73,7 @@ impl Communicator {
         Self {
             transport,
             op_counter: AtomicU64::new(0),
+            comm_thread: OnceLock::new(),
         }
     }
 
@@ -79,47 +89,124 @@ impl Communicator {
         self.transport.kind()
     }
 
-    /// Fresh tag namespace for one collective op: all ranks call the same
-    /// op sequence, so local counters agree. Low 16 bits left for chunks.
-    fn next_tag(&self) -> u64 {
+    /// The raw transport — for backends whose blocking and async paths
+    /// share one collective body over `&dyn Transport`.
+    pub fn transport(&self) -> &dyn Transport {
+        self.transport.as_ref()
+    }
+
+    /// Reserve a fresh tag namespace for one collective op — always on the
+    /// caller thread, in SPMD program order, so local counters agree
+    /// across ranks even when the op itself executes later on a comm
+    /// thread. Low 16 bits left for chunks.
+    pub fn reserve_tag(&self) -> u64 {
         (self.op_counter.fetch_add(1, Ordering::Relaxed) + 1) << 16
     }
 
-    /// Sum/max/min-reduce `buf` across all ranks, in place (ring).
-    pub fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<CommStats> {
+    fn comm_thread(&self) -> &CommThread {
+        self.comm_thread
+            .get_or_init(|| CommThread::spawn(&format!("r{}", self.transport.rank())))
+    }
+
+    /// Run `f` against this communicator's transport on the comm thread;
+    /// returns a handle on its eventual result. `f` must use tags reserved
+    /// via [`Communicator::reserve_tag`] *before* submission.
+    pub fn run_async<T, F>(&self, f: F) -> WorkHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce(&dyn Transport) -> Result<T> + Send + 'static,
+    {
+        let transport = self.transport.clone();
+        let (handle, done) = WorkHandle::pair();
+        self.comm_thread().submit(move || done.send(f(transport.as_ref())));
+        handle
+    }
+
+    /// Sum/max/min-reduce `buf` across all ranks, in place (ring), under a
+    /// caller-reserved tag.
+    pub fn all_reduce_tagged(&self, buf: &mut [f32], op: ReduceOp, tag: u64) -> Result<CommStats> {
         let t0 = Instant::now();
-        let tag = self.next_tag();
         let mut stats = ring::ring_all_reduce(self.transport.as_ref(), buf, op, tag)?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "all_reduce";
         Ok(stats)
     }
 
-    /// Broadcast `buf` from `root` to all ranks (binomial tree).
-    pub fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<CommStats> {
+    /// Sum/max/min-reduce `buf` across all ranks, in place (ring).
+    pub fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<CommStats> {
+        let tag = self.reserve_tag();
+        self.all_reduce_tagged(buf, op, tag)
+    }
+
+    /// Issue an all-reduce; the returned handle yields the reduced buffer.
+    pub fn all_reduce_async(
+        &self,
+        mut buf: Vec<f32>,
+        op: ReduceOp,
+    ) -> WorkHandle<(Vec<f32>, CommStats)> {
+        let tag = self.reserve_tag();
+        self.run_async(move |t| {
+            let t0 = Instant::now();
+            let mut stats = ring::ring_all_reduce(t, &mut buf, op, tag)?;
+            stats.seconds = t0.elapsed().as_secs_f64();
+            stats.op = "all_reduce";
+            Ok((buf, stats))
+        })
+    }
+
+    /// Broadcast `buf` from `root` (binomial tree), under a caller-reserved
+    /// tag.
+    pub fn broadcast_tagged(&self, buf: &mut [f32], root: usize, tag: u64) -> Result<CommStats> {
         let t0 = Instant::now();
-        let tag = self.next_tag();
         let mut stats = tree::broadcast(self.transport.as_ref(), buf, root, tag)?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "broadcast";
         Ok(stats)
     }
 
-    /// Gather equal-length contributions from all ranks (ring); returns
-    /// the concatenation in rank order.
-    pub fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, CommStats)> {
+    /// Broadcast `buf` from `root` to all ranks (binomial tree).
+    pub fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<CommStats> {
+        let tag = self.reserve_tag();
+        self.broadcast_tagged(buf, root, tag)
+    }
+
+    /// Issue a broadcast; the returned handle yields the broadcast buffer.
+    pub fn broadcast_async(
+        &self,
+        mut buf: Vec<f32>,
+        root: usize,
+    ) -> WorkHandle<(Vec<f32>, CommStats)> {
+        let tag = self.reserve_tag();
+        self.run_async(move |t| {
+            let t0 = Instant::now();
+            let mut stats = tree::broadcast(t, &mut buf, root, tag)?;
+            stats.seconds = t0.elapsed().as_secs_f64();
+            stats.op = "broadcast";
+            Ok((buf, stats))
+        })
+    }
+
+    /// Gather equal-length contributions (ring) under a caller-reserved
+    /// tag; returns the concatenation in rank order.
+    pub fn all_gather_tagged(&self, send: &[f32], tag: u64) -> Result<(Vec<f32>, CommStats)> {
         let t0 = Instant::now();
-        let tag = self.next_tag();
         let (out, mut stats) = ring::ring_all_gather(self.transport.as_ref(), send, tag)?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "all_gather";
         Ok((out, stats))
     }
 
+    /// Gather equal-length contributions from all ranks (ring); returns
+    /// the concatenation in rank order.
+    pub fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, CommStats)> {
+        let tag = self.reserve_tag();
+        self.all_gather_tagged(send, tag)
+    }
+
     /// Reduce to `root` only (tree).
     pub fn reduce(&self, buf: &mut [f32], op: ReduceOp, root: usize) -> Result<CommStats> {
         let t0 = Instant::now();
-        let tag = self.next_tag();
+        let tag = self.reserve_tag();
         let mut stats = tree::reduce(self.transport.as_ref(), buf, op, root, tag)?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "reduce";
@@ -129,7 +216,7 @@ impl Communicator {
     /// Dissemination barrier.
     pub fn barrier(&self) -> Result<CommStats> {
         let t0 = Instant::now();
-        let tag = self.next_tag();
+        let tag = self.reserve_tag();
         let t = self.transport.as_ref();
         let world = t.world();
         let mut stats = CommStats {
@@ -332,5 +419,111 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn merge_keeps_op_label() {
+        let mut a = CommStats {
+            op: "all_reduce",
+            bytes_sent: 10,
+            ..Default::default()
+        };
+        let b = CommStats {
+            op: "broadcast",
+            bytes_sent: 5,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.op, "all_reduce", "first label wins");
+        assert_eq!(a.bytes_sent, 15);
+
+        let mut empty = CommStats::default();
+        empty.merge(&b);
+        assert_eq!(empty.op, "broadcast", "empty label adopts the merged op");
+    }
+
+    #[test]
+    fn async_all_reduce_matches_blocking() {
+        let comms = communicators(3);
+        let out: Vec<(Vec<f32>, Vec<f32>)> = std::thread::scope(|s| {
+            let hs: Vec<_> = comms
+                .iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let init: Vec<f32> =
+                            (0..100).map(|i| (i * (c.rank() + 1)) as f32).collect();
+                        let mut blocking = init.clone();
+                        c.all_reduce(&mut blocking, ReduceOp::Sum).unwrap();
+                        let (issued, stats) =
+                            c.all_reduce_async(init, ReduceOp::Sum).wait().unwrap();
+                        assert_eq!(stats.op, "all_reduce");
+                        (blocking, issued)
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (blocking, issued) in out {
+            assert_eq!(blocking, issued);
+        }
+    }
+
+    #[test]
+    fn async_ops_wait_out_of_order() {
+        // Issue several collectives, wait newest-first: the per-rank comm
+        // thread still executes them in issue order, and reserved tags
+        // keep ranks aligned.
+        let comms = communicators(2);
+        let out: Vec<Vec<Vec<f32>>> = std::thread::scope(|s| {
+            let hs: Vec<_> = comms
+                .iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut handles = Vec::new();
+                        for k in 0..8 {
+                            let buf = vec![(k + c.rank() + 1) as f32; 16];
+                            handles.push(c.all_reduce_async(buf, ReduceOp::Sum));
+                        }
+                        let mut results = vec![Vec::new(); 8];
+                        for k in (0..8).rev() {
+                            let (buf, _) = handles.pop().unwrap().wait().unwrap();
+                            results[k] = buf;
+                        }
+                        results
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for per_rank in out {
+            for (k, buf) in per_rank.iter().enumerate() {
+                // sum over ranks r of (k + r + 1) = 2k + 3 for world 2
+                assert_eq!(buf, &vec![(2 * k + 3) as f32; 16], "op {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn async_broadcast_delivers_root_buffer() {
+        let comms = communicators(3);
+        let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let hs: Vec<_> = comms
+                .iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let buf = if c.rank() == 1 {
+                            vec![9.0, 8.0, 7.0]
+                        } else {
+                            vec![0.0; 3]
+                        };
+                        c.broadcast_async(buf, 1).wait().unwrap().0
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for b in out {
+            assert_eq!(b, vec![9.0, 8.0, 7.0]);
+        }
     }
 }

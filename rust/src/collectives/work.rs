@@ -1,0 +1,226 @@
+//! Asynchronous work infrastructure: [`WorkHandle`] (the PyTorch
+//! `ProcessGroup::allreduce → Work` model) and the ordered per-rank comm
+//! thread that executes issued collectives in submission order.
+//!
+//! Correctness model: a collective's *tag* is reserved on the caller
+//! thread at issue time (see `Communicator::reserve_tag`), in SPMD program
+//! order — identical on every rank by construction. Because the transports
+//! match messages on `(peer, tag)`, the *execution* of two in-flight
+//! collectives may then interleave freely across threads without
+//! cross-talk; the queue only has to preserve per-thread FIFO so that a
+//! job's side effects (e.g. chained pipeline stages) stay ordered.
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::Result;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+struct Queue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+/// Clonable submitter handle for a [`CommThread`]'s ordered job queue.
+#[derive(Clone)]
+pub struct CommQueue {
+    q: Arc<Queue>,
+}
+
+impl CommQueue {
+    /// Enqueue `job`; jobs run in FIFO order on the owning comm thread.
+    /// If the thread has already shut down, the job runs inline (so
+    /// completions are never silently dropped).
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let mut st = self.q.state.lock().unwrap();
+        if st.closed {
+            drop(st);
+            job();
+            return;
+        }
+        st.jobs.push_back(Box::new(job));
+        drop(st);
+        self.q.cv.notify_all();
+    }
+}
+
+/// An ordered single-thread executor for issued collectives. Dropping it
+/// drains any remaining jobs, then joins the thread.
+pub struct CommThread {
+    q: Arc<Queue>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl CommThread {
+    pub fn spawn(name: &str) -> Self {
+        let q = Arc::new(Queue {
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let worker = q.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("kaitian-comm-{name}"))
+            .spawn(move || loop {
+                let job = {
+                    let mut st = worker.state.lock().unwrap();
+                    loop {
+                        if let Some(j) = st.jobs.pop_front() {
+                            break Some(j);
+                        }
+                        if st.closed {
+                            break None;
+                        }
+                        st = worker.cv.wait(st).unwrap();
+                    }
+                };
+                match job {
+                    Some(j) => j(),
+                    None => return,
+                }
+            })
+            .expect("spawn comm thread");
+        Self { q, join: Some(join) }
+    }
+
+    pub fn queue(&self) -> CommQueue {
+        CommQueue { q: self.q.clone() }
+    }
+
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.queue().submit(job)
+    }
+}
+
+impl Drop for CommThread {
+    fn drop(&mut self) {
+        {
+            let mut st = self.q.state.lock().unwrap();
+            st.closed = true;
+        }
+        self.q.cv.notify_all();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Handle on an issued (possibly still running) collective: `wait()` for
+/// the result. Modeled on `torch.distributed`'s `Work`.
+pub struct WorkHandle<T> {
+    inner: Box<dyn FnOnce() -> Result<T> + Send>,
+}
+
+impl<T: Send + 'static> WorkHandle<T> {
+    /// Create a (handle, completion-sender) pair backed by a channel.
+    pub fn pair() -> (WorkHandle<T>, WorkSender<T>) {
+        let (tx, rx) = mpsc::channel::<Result<T>>();
+        let handle = WorkHandle {
+            inner: Box::new(move || match rx.recv() {
+                Ok(res) => res,
+                Err(_) => Err(anyhow::anyhow!(
+                    "async collective dropped before completion (comm thread gone)"
+                )),
+            }),
+        };
+        (handle, WorkSender { tx })
+    }
+
+    /// A handle that is already complete.
+    pub fn ready(res: Result<T>) -> Self {
+        WorkHandle {
+            inner: Box::new(move || res),
+        }
+    }
+
+    /// Block until the issued op finishes; returns its result.
+    pub fn wait(self) -> Result<T> {
+        (self.inner)()
+    }
+
+    /// Transform the result once it completes (lazy; runs inside `wait`).
+    pub fn map<U: Send + 'static>(
+        self,
+        f: impl FnOnce(T) -> U + Send + 'static,
+    ) -> WorkHandle<U> {
+        WorkHandle {
+            inner: Box::new(move || (self.inner)().map(f)),
+        }
+    }
+}
+
+/// Completion side of a [`WorkHandle`]: the executing comm thread sends
+/// exactly one result through it.
+pub struct WorkSender<T> {
+    tx: mpsc::Sender<Result<T>>,
+}
+
+impl<T> WorkSender<T> {
+    pub fn send(self, res: Result<T>) {
+        // A dropped handle (caller no longer cares) is not an error.
+        let _ = self.tx.send(res);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn jobs_run_in_fifo_order() {
+        let t = CommThread::spawn("test-fifo");
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for i in 0..16 {
+            let log = log.clone();
+            t.submit(move || log.lock().unwrap().push(i));
+        }
+        drop(t); // drains + joins
+        assert_eq!(*log.lock().unwrap(), (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handle_wait_returns_sent_value() {
+        let t = CommThread::spawn("test-wait");
+        let (handle, done) = WorkHandle::<u32>::pair();
+        t.submit(move || done.send(Ok(7)));
+        assert_eq!(handle.wait().unwrap(), 7);
+    }
+
+    #[test]
+    fn dropped_sender_is_an_error_not_a_hang() {
+        let t = CommThread::spawn("test-drop");
+        let (handle, done) = WorkHandle::<u32>::pair();
+        t.submit(move || drop(done));
+        let err = handle.wait().unwrap_err();
+        assert!(err.to_string().contains("dropped"), "{err}");
+    }
+
+    #[test]
+    fn map_transforms_result() {
+        let h = WorkHandle::ready(Ok(21_u32)).map(|v| v * 2);
+        assert_eq!(h.wait().unwrap(), 42);
+    }
+
+    #[test]
+    fn submit_after_shutdown_runs_inline() {
+        let t = CommThread::spawn("test-inline");
+        let q = t.queue();
+        drop(t);
+        let ran = Arc::new(AtomicUsize::new(0));
+        let ran2 = ran.clone();
+        q.submit(move || {
+            ran2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+}

@@ -9,13 +9,21 @@
 //!   global batch on one device (tested in `rust/tests/`),
 //! * gradient bucketing ([`bucket::Bucketizer`]): large gradients are
 //!   all-reduced in fixed-size buckets, matching PyTorch DDP's bucketed
-//!   communication (and enabling compute/comm overlap studies).
+//!   communication,
+//! * compute/comm overlap: [`DdpEngine::issue_grad_sync`] issues every
+//!   bucket's all-reduce immediately (the KaiTian group pipelines the
+//!   vendor reduce / host-relay hop / re-broadcast stages across buckets)
+//!   and [`DdpEngine::wait_grad_sync`] only blocks right before the
+//!   optimizer update — the PyTorch-DDP overlap model.
 
 pub mod bucket;
 
 pub use bucket::Bucketizer;
 
-use crate::collectives::ReduceOp;
+use std::ops::Range;
+use std::time::Instant;
+
+use crate::collectives::{ReduceOp, WorkHandle};
 use crate::group::{GroupCommReport, ProcessGroup};
 use crate::Result;
 
@@ -29,7 +37,17 @@ pub struct DdpEngine<'pg> {
 #[derive(Debug, Clone, Default)]
 pub struct SyncReport {
     pub buckets: usize,
+    /// Busy seconds: sum over buckets of each collective's total time
+    /// (stages of different buckets may run concurrently, so this can
+    /// exceed wall-clock).
     pub seconds: f64,
+    /// Wall-clock seconds the caller spent *blocked* on the sync (inside
+    /// `wait_grad_sync`, or the whole loop for the blocking path) — the
+    /// communication time actually on the critical path. Compute done
+    /// between issue and wait does not count.
+    pub exposed_s: f64,
+    /// Busy seconds hidden by the pipeline: `max(0, seconds - exposed_s)`.
+    pub overlapped_s: f64,
     pub stage_seconds: f64,
     pub bytes: u64,
     pub staged_bytes: u64,
@@ -42,6 +60,17 @@ impl SyncReport {
         self.stage_seconds += r.inter.stage_seconds;
         self.bytes += r.total_bytes();
         self.staged_bytes += r.inter.staged_bytes;
+    }
+}
+
+/// In-flight gradient sync: one issued all-reduce per bucket.
+pub struct GradSync {
+    parts: Vec<(Range<usize>, WorkHandle<(Vec<f32>, GroupCommReport)>)>,
+}
+
+impl GradSync {
+    pub fn buckets(&self) -> usize {
+        self.parts.len()
     }
 }
 
@@ -63,13 +92,53 @@ impl<'pg> DdpEngine<'pg> {
         self.pg.broadcast(params, 0)
     }
 
-    /// All-reduce (SUM) the flat gradient buffer, bucket by bucket.
+    /// Issue the bucketed all-reduce (SUM) of the flat gradient buffer.
+    /// Every bucket goes out immediately; the process group pipelines
+    /// them. Pair with [`DdpEngine::wait_grad_sync`].
+    pub fn issue_grad_sync(&self, grads: &[f32]) -> GradSync {
+        let mut parts = Vec::new();
+        for range in self.bucketizer.ranges(grads.len()) {
+            let buf = grads[range.clone()].to_vec();
+            parts.push((range, self.pg.all_reduce_async(buf, ReduceOp::Sum)));
+        }
+        GradSync { parts }
+    }
+
+    /// Wait for an issued gradient sync and copy the reduced buckets back
+    /// into `grads` (the same buffer the sync was issued from). Only the
+    /// time spent blocked *here* counts as exposed — comm that completed
+    /// while the caller was computing is overlap, not exposure.
+    pub fn wait_grad_sync(&self, sync: GradSync, grads: &mut [f32]) -> Result<SyncReport> {
+        let t_wait = Instant::now();
+        let mut report = SyncReport::default();
+        for (range, handle) in sync.parts {
+            let (out, r) = handle.wait()?;
+            grads[range].copy_from_slice(&out);
+            report.absorb(&r);
+        }
+        report.exposed_s = t_wait.elapsed().as_secs_f64();
+        report.overlapped_s = (report.seconds - report.exposed_s).max(0.0);
+        Ok(report)
+    }
+
+    /// All-reduce (SUM) the flat gradient buffer, bucket by bucket, via
+    /// the pipelined path (issue all buckets, then wait).
     pub fn all_reduce_grads(&self, grads: &mut [f32]) -> Result<SyncReport> {
+        let sync = self.issue_grad_sync(grads);
+        self.wait_grad_sync(sync, grads)
+    }
+
+    /// The fully blocking baseline: one synchronous all-reduce per bucket,
+    /// each on the critical path (what the stack did before the async
+    /// refactor; kept for the overlap bench and parity tests).
+    pub fn all_reduce_grads_blocking(&self, grads: &mut [f32]) -> Result<SyncReport> {
+        let t0 = Instant::now();
         let mut report = SyncReport::default();
         for range in self.bucketizer.ranges(grads.len()) {
             let r = self.pg.all_reduce(&mut grads[range], ReduceOp::Sum)?;
             report.absorb(&r);
         }
+        report.exposed_s = t0.elapsed().as_secs_f64();
         Ok(report)
     }
 
@@ -78,12 +147,21 @@ impl<'pg> DdpEngine<'pg> {
     pub fn all_reduce_metrics(&self, metrics: &mut [f32]) -> Result<GroupCommReport> {
         self.pg.all_reduce(metrics, ReduceOp::Sum)
     }
+
+    /// Issue the metrics all-reduce so it rides alongside the gradient
+    /// sync instead of adding a serial round-trip.
+    pub fn all_reduce_metrics_async(
+        &self,
+        metrics: Vec<f32>,
+    ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
+        self.pg.all_reduce_async(metrics, ReduceOp::Sum)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::device::parse_cluster;
+    use crate::device::{parse_cluster, DeviceSpec};
     use crate::group::{build_cluster, GroupMode, RelayKind};
 
     #[test]
@@ -111,6 +189,76 @@ mod tests {
         let expect: Vec<f32> = (0..n).map(|i| (i % 17) as f32 * 6.0).collect();
         for o in out {
             assert_eq!(o, expect);
+        }
+    }
+
+    #[test]
+    fn pipelined_sync_matches_blocking_bitwise() {
+        fn init(rank: usize) -> Vec<f32> {
+            (0..20_000)
+                .map(|i| ((i % 31) as f32 - 7.5) * (rank + 1) as f32 * 0.125)
+                .collect()
+        }
+        fn run(devices: &[DeviceSpec], pipelined: bool) -> Vec<Vec<f32>> {
+            let handles =
+                build_cluster(devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+            std::thread::scope(|s| {
+                let hs: Vec<_> = handles
+                    .groups
+                    .iter()
+                    .map(|g| {
+                        s.spawn(move || {
+                            let ddp = DdpEngine::new(g.as_ref(), 4096);
+                            let mut grads = init(g.rank());
+                            let rep = if pipelined {
+                                ddp.all_reduce_grads(&mut grads).unwrap()
+                            } else {
+                                ddp.all_reduce_grads_blocking(&mut grads).unwrap()
+                            };
+                            assert!(rep.buckets > 1);
+                            grads
+                        })
+                    })
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+        }
+        let devices = parse_cluster("1G+2M").unwrap();
+        let blocking = run(&devices, false);
+        let pipelined = run(&devices, true);
+        assert_eq!(blocking, pipelined, "pipelined sync must be bit-identical");
+    }
+
+    #[test]
+    fn issue_then_wait_overlaps_with_caller_work() {
+        let devices = parse_cluster("1G+1M").unwrap();
+        let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+        let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let hs: Vec<_> = handles
+                .groups
+                .iter()
+                .map(|g| {
+                    s.spawn(move || {
+                        let ddp = DdpEngine::new(g.as_ref(), 1024);
+                        let mut grads = vec![(g.rank() + 1) as f32; 2000];
+                        let sync = ddp.issue_grad_sync(&grads);
+                        assert!(sync.buckets() > 1);
+                        // Caller-side "compute" while comm is in flight.
+                        let mut acc = 0.0_f64;
+                        for i in 0..10_000 {
+                            acc += (i as f64).sqrt();
+                        }
+                        std::hint::black_box(acc);
+                        let rep = ddp.wait_grad_sync(sync, &mut grads).unwrap();
+                        assert!(rep.exposed_s >= 0.0);
+                        grads
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for o in out {
+            assert_eq!(o, vec![3.0; 2000]);
         }
     }
 

@@ -328,6 +328,59 @@ mod tests {
     }
 
     #[test]
+    fn all_gather_concatenates_in_global_rank_order() {
+        // "1M+1G" puts the MLU group first by rank but second by device
+        // type, exercising the global-rank reassembly of the hierarchical
+        // path; "1G+2M" exercises unequal group sizes (padding).
+        for spec in ["1G+2M", "2G+2M", "1M+1G", "3G"] {
+            let devices = parse_cluster(spec).unwrap();
+            let world = devices.len();
+            let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+            let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+                let hs: Vec<_> = handles
+                    .groups
+                    .iter()
+                    .map(|g| {
+                        s.spawn(move || {
+                            let r = g.rank() as f32;
+                            let send = vec![r * 10.0, r * 10.0 + 1.0];
+                            g.all_gather(&send).unwrap().0
+                        })
+                    })
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let expect: Vec<f32> = (0..world)
+                .flat_map(|r| [r as f32 * 10.0, r as f32 * 10.0 + 1.0])
+                .collect();
+            for o in out {
+                assert_eq!(o, expect, "{spec}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_gather_across_group_modes() {
+        let devices = parse_cluster("2M").unwrap();
+        for mode in [GroupMode::Native, GroupMode::FlatGloo, GroupMode::Kaitian] {
+            let handles = build_cluster(&devices, RelayKind::Inproc, mode).unwrap();
+            let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+                let hs: Vec<_> = handles
+                    .groups
+                    .iter()
+                    .map(|g| {
+                        s.spawn(move || g.all_gather(&[g.rank() as f32]).unwrap().0)
+                    })
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for o in out {
+                assert_eq!(o, vec![0.0, 1.0], "{mode:?}");
+            }
+        }
+    }
+
+    #[test]
     fn barrier_across_heterogeneous_cluster() {
         let devices = parse_cluster("2G+2M").unwrap();
         let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();

@@ -8,10 +8,18 @@
 //! quantify the value of vendor-path dispatch.
 
 use crate::backend::CollectiveBackend;
-use crate::collectives::{CommStats, ReduceOp};
+use crate::collectives::{CommStats, ReduceOp, WorkHandle};
 use crate::Result;
 
 use super::{CommPath, GroupCommReport, ProcessGroup};
+
+fn relay_report(inter: CommStats) -> GroupCommReport {
+    GroupCommReport {
+        path: CommPath::HostRelay,
+        intra: CommStats::default(),
+        inter,
+    }
+}
 
 /// All-ranks host-relay process group.
 pub struct ProcessGroupFlatGloo {
@@ -37,26 +45,42 @@ impl ProcessGroup for ProcessGroupFlatGloo {
         self.relay.world()
     }
 
-    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<GroupCommReport> {
-        let inter = self.relay.all_reduce(buf, op)?;
-        Ok(GroupCommReport {
-            path: CommPath::HostRelay,
-            intra: CommStats::default(),
-            inter,
-        })
+    fn all_reduce_async(
+        &self,
+        buf: Vec<f32>,
+        op: ReduceOp,
+    ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
+        self.relay
+            .all_reduce_async(buf, op)
+            .map(|(buf, inter)| (buf, relay_report(inter)))
     }
 
-    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<GroupCommReport> {
-        let inter = self.relay.broadcast(buf, root)?;
-        Ok(GroupCommReport {
-            path: CommPath::HostRelay,
-            intra: CommStats::default(),
-            inter,
-        })
+    fn broadcast_async(
+        &self,
+        buf: Vec<f32>,
+        root: usize,
+    ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
+        self.relay
+            .broadcast_async(buf, root)
+            .map(|(buf, inter)| (buf, relay_report(inter)))
+    }
+
+    fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, GroupCommReport)> {
+        let (out, inter) = self.relay.all_gather(send)?;
+        Ok((out, relay_report(inter)))
     }
 
     fn barrier(&self) -> Result<()> {
         self.relay.barrier()?;
         Ok(())
+    }
+
+    /// Inline blocking path (no async round-trip): the honest baseline.
+    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<GroupCommReport> {
+        Ok(relay_report(self.relay.all_reduce(buf, op)?))
+    }
+
+    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<GroupCommReport> {
+        Ok(relay_report(self.relay.broadcast(buf, root)?))
     }
 }

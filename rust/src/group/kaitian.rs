@@ -1,12 +1,29 @@
 //! The KAITIAN meta process group: hybrid dispatch across vendor backends
-//! and the host relay.
+//! and the host relay, with a *pipelined* asynchronous data path.
+//!
+//! A heterogeneous all-reduce is a 3-stage pipeline (paper §III-B):
+//!
+//! ```text
+//! stage A (intra thread): vendor all-reduce inside the homogeneous group
+//! stage B (inter thread): leaders-only all-reduce over the host relay
+//! stage C (bcast thread): vendor broadcast of the global result
+//! ```
+//!
+//! Each stage runs on its own ordered comm thread, so while bucket *k* is
+//! crossing the host relay (stage B, the slow hop), bucket *k+1* is
+//! already inside its vendor reduce (stage A) — the leaders' D2H→TCP→H2D
+//! relay latency is hidden behind intra-group work exactly like PyTorch
+//! DDP hides bucket all-reduces behind backward.
+//!
+//! SPMD tag discipline: all tags are reserved on the *caller* thread at
+//! issue time (`reserve_tag`), in program order — identical on every rank
+//! — so stages may execute in any interleaving across threads without two
+//! ranks ever pairing different logical ops under one tag.
 
 use std::sync::Arc;
 
-use anyhow::Context;
-
 use crate::backend::CollectiveBackend;
-use crate::collectives::{CommStats, ReduceOp};
+use crate::collectives::{CommStats, CommThread, ReduceOp, WorkHandle};
 use crate::Result;
 
 use super::topology::Topology;
@@ -24,9 +41,55 @@ use super::{CommPath, GroupCommReport, ProcessGroup};
 pub struct ProcessGroupKaiTian {
     topo: Arc<Topology>,
     rank: usize,
-    vendor: Box<dyn CollectiveBackend>,
-    relay: Option<Box<dyn CollectiveBackend>>,
+    vendor: Arc<dyn CollectiveBackend>,
+    relay: Option<Arc<dyn CollectiveBackend>>,
     control: Box<dyn CollectiveBackend>,
+    /// Pipeline stage A executor (vendor intra-group reduce).
+    intra: CommThread,
+    /// Pipeline stage B executor (leaders' host-relay hop).
+    inter: CommThread,
+    /// Pipeline stage C executor (vendor intra-group broadcast).
+    bcast: CommThread,
+}
+
+/// Pre-reserved tags + routing facts for one hierarchical broadcast; built
+/// at issue time on the caller thread so execution can happen anywhere.
+struct BcastPlan {
+    /// Vendor-broadcast tag within the root's group (members only).
+    tag_root_group: Option<u64>,
+    /// Relay-broadcast tag (leaders only) + the root leader's relay rank.
+    tag_relay: Option<u64>,
+    relay_root: usize,
+    /// Vendor-broadcast tag within non-root groups (members only).
+    tag_other_group: Option<u64>,
+    /// The root's rank within its own vendor communicator.
+    local_root: usize,
+}
+
+/// Execute a hierarchical broadcast under a pre-reserved [`BcastPlan`].
+fn run_hetero_broadcast(
+    vendor: &dyn CollectiveBackend,
+    relay: Option<&dyn CollectiveBackend>,
+    buf: &mut [f32],
+    plan: &BcastPlan,
+) -> Result<(CommStats, CommStats)> {
+    let mut intra = CommStats::default();
+    let mut inter = CommStats::default();
+    // 1. Within the root's group: vendor-broadcast from root to the group
+    //    (so the leader definitely has the data).
+    if let Some(tag) = plan.tag_root_group {
+        intra.merge(&vendor.broadcast_tagged(buf, plan.local_root, tag)?);
+    }
+    // 2. Leaders: relay-broadcast from the root group's leader.
+    if let Some(relay) = relay {
+        let tag = plan.tag_relay.expect("leaders reserve a relay tag");
+        inter.merge(&relay.broadcast_tagged(buf, plan.relay_root, tag)?);
+    }
+    // 3. Non-root groups: leader vendor-broadcasts to its group.
+    if let Some(tag) = plan.tag_other_group {
+        intra.merge(&vendor.broadcast_tagged(buf, 0, tag)?);
+    }
+    Ok((intra, inter))
 }
 
 impl ProcessGroupKaiTian {
@@ -53,12 +116,17 @@ impl ProcessGroupKaiTian {
             relay.is_some() == topo.is_leader(rank),
             "relay communicator present iff leader"
         );
+        let vendor: Arc<dyn CollectiveBackend> = Arc::from(vendor);
+        let relay: Option<Arc<dyn CollectiveBackend>> = relay.map(|r| Arc::from(r));
         Ok(Self {
             topo,
             rank,
             vendor,
             relay,
             control,
+            intra: CommThread::spawn(&format!("kt{rank}-intra")),
+            inter: CommThread::spawn(&format!("kt{rank}-inter")),
+            bcast: CommThread::spawn(&format!("kt{rank}-bcast")),
         })
     }
 
@@ -71,37 +139,34 @@ impl ProcessGroupKaiTian {
         self.vendor.name()
     }
 
-    /// Analyze + dispatch one all-reduce (the paper's §III-B steps 1-3).
-    fn dispatch_all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<GroupCommReport> {
-        // Step 1: analyze the participating processes' device types.
-        if self.topo.is_homogeneous() {
-            // Step 2: homogeneous → vendor library only.
-            let intra = self.vendor.all_reduce(buf, op)?;
-            return Ok(GroupCommReport::vendor(intra));
+    /// Build the tag plan for one hierarchical broadcast (issue-time, SPMD
+    /// order). Each vendor communicator reserves exactly one tag — the
+    /// branch its whole group takes — and leaders reserve one relay tag.
+    fn plan_broadcast(&self, root: usize) -> BcastPlan {
+        let same_group = self.topo.group_of(self.rank) == self.topo.group_of(root);
+        let tag_root_group = if same_group {
+            Some(self.vendor.reserve_tag())
+        } else {
+            None
+        };
+        let tag_relay = self.relay.as_ref().map(|r| r.reserve_tag());
+        let tag_other_group = if same_group {
+            None
+        } else {
+            Some(self.vendor.reserve_tag())
+        };
+        let root_leader = self.topo.leader_of(root);
+        let relay_root = self
+            .topo
+            .relay_rank(root_leader)
+            .expect("root leader must be in relay");
+        BcastPlan {
+            tag_root_group,
+            tag_relay,
+            relay_root,
+            tag_other_group,
+            local_root: self.topo.local_rank(root),
         }
-        // Step 3: heterogeneous → hierarchical orchestration.
-        let mut intra = CommStats::default();
-        let mut inter = CommStats::default();
-
-        // 3a. Aggregate within the homogeneous group via the vendor
-        //     library (every member ends with the group partial sum; the
-        //     leader, group-local rank 0, feeds it to the relay).
-        intra.merge(&self.vendor.all_reduce(buf, op)?);
-
-        // 3b. Leaders exchange partial aggregates over the host relay.
-        if let Some(relay) = &self.relay {
-            inter.merge(&relay.all_reduce(buf, op)?);
-        }
-
-        // 3c. Leader broadcasts the global result back into its group
-        //     (vendor path).
-        intra.merge(&self.vendor.broadcast(buf, 0)?);
-
-        Ok(GroupCommReport {
-            path: CommPath::Hierarchical,
-            intra,
-            inter,
-        })
     }
 }
 
@@ -118,37 +183,237 @@ impl ProcessGroup for ProcessGroupKaiTian {
         self.topo.world()
     }
 
-    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<GroupCommReport> {
-        self.dispatch_all_reduce(buf, op)
-            .with_context(|| format!("kaitian all_reduce on rank {}", self.rank))
+    fn all_reduce_async(
+        &self,
+        buf: Vec<f32>,
+        op: ReduceOp,
+    ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
+        let rank = self.rank;
+        // Step 1: analyze the participating processes' device types.
+        if self.topo.is_homogeneous() {
+            // Step 2: homogeneous → vendor library only (single stage).
+            let tag = self.vendor.reserve_tag();
+            let vendor = self.vendor.clone();
+            let (handle, done) = WorkHandle::pair();
+            self.intra.submit(move || {
+                let mut buf = buf;
+                let res = match vendor.all_reduce_tagged(&mut buf, op, tag) {
+                    Ok(s) => Ok((buf, GroupCommReport::vendor(s))),
+                    Err(e) => Err(e.context(format!("kaitian vendor all_reduce rank {rank}"))),
+                };
+                done.send(res);
+            });
+            return handle;
+        }
+
+        // Step 3: heterogeneous → hierarchical orchestration, pipelined
+        // across the three stage threads. Tags are reserved *here*, on the
+        // caller thread, in SPMD order.
+        let tag_a = self.vendor.reserve_tag();
+        let tag_b = self.relay.as_ref().map(|r| r.reserve_tag());
+        let tag_c = self.vendor.reserve_tag();
+
+        let vendor_a = self.vendor.clone();
+        let vendor_c = self.vendor.clone();
+        let relay = self.relay.clone();
+        let inter_q = self.inter.queue();
+        let bcast_q = self.bcast.queue();
+        let (handle, done) = WorkHandle::pair();
+
+        // Stage A: aggregate within the homogeneous group via the vendor
+        // library (every member ends with the group partial sum; the
+        // leader, group-local rank 0, feeds it to the relay).
+        self.intra.submit(move || {
+            let mut buf = buf;
+            let mut intra = CommStats::default();
+            match vendor_a.all_reduce_tagged(&mut buf, op, tag_a) {
+                Err(e) => {
+                    done.send(Err(e.context(format!("kaitian intra all_reduce rank {rank}"))));
+                }
+                Ok(s) => {
+                    intra.merge(&s);
+                    // Stage B: leaders exchange partial aggregates over the
+                    // host relay; non-leaders pass straight through (their
+                    // stage-C recv blocks until the leader re-broadcasts).
+                    inter_q.submit(move || {
+                        let mut inter = CommStats::default();
+                        if let Some(relay) = &relay {
+                            let tag = tag_b.expect("leaders reserve a relay tag");
+                            match relay.all_reduce_tagged(&mut buf, op, tag) {
+                                Err(e) => {
+                                    done.send(Err(e.context(format!(
+                                        "kaitian relay all_reduce rank {rank}"
+                                    ))));
+                                    return;
+                                }
+                                Ok(s) => inter.merge(&s),
+                            }
+                        }
+                        // Stage C: leader broadcasts the global result back
+                        // into its group (vendor path).
+                        bcast_q.submit(move || {
+                            match vendor_c.broadcast_tagged(&mut buf, 0, tag_c) {
+                                Err(e) => {
+                                    done.send(Err(e.context(format!(
+                                        "kaitian re-broadcast rank {rank}"
+                                    ))));
+                                }
+                                Ok(s) => {
+                                    intra.merge(&s);
+                                    done.send(Ok((
+                                        buf,
+                                        GroupCommReport {
+                                            path: CommPath::Hierarchical,
+                                            intra,
+                                            inter,
+                                        },
+                                    )));
+                                }
+                            }
+                        });
+                    });
+                }
+            }
+        });
+        handle
     }
 
-    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<GroupCommReport> {
+    fn broadcast_async(
+        &self,
+        buf: Vec<f32>,
+        root: usize,
+    ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
+        let rank = self.rank;
         if self.topo.is_homogeneous() {
-            let intra = self.vendor.broadcast(buf, self.topo.local_rank(root))?;
-            return Ok(GroupCommReport::vendor(intra));
+            let local_root = self.topo.local_rank(root);
+            let tag = self.vendor.reserve_tag();
+            let vendor = self.vendor.clone();
+            let (handle, done) = WorkHandle::pair();
+            self.intra.submit(move || {
+                let mut buf = buf;
+                let res = match vendor.broadcast_tagged(&mut buf, local_root, tag) {
+                    Ok(s) => Ok((buf, GroupCommReport::vendor(s))),
+                    Err(e) => Err(e.context(format!("kaitian vendor broadcast rank {rank}"))),
+                };
+                done.send(res);
+            });
+            return handle;
         }
+        // Hierarchical broadcast: tags reserved at issue time; the whole
+        // 3-step sequence runs as one job (broadcasts are rare — params at
+        // start of training — so they don't need the bucket pipeline).
+        let plan = self.plan_broadcast(root);
+        let vendor = self.vendor.clone();
+        let relay = self.relay.clone();
+        let (handle, done) = WorkHandle::pair();
+        self.intra.submit(move || {
+            let mut buf = buf;
+            let res = run_hetero_broadcast(vendor.as_ref(), relay.as_deref(), &mut buf, &plan);
+            let res = match res {
+                Ok((intra, inter)) => Ok((
+                    buf,
+                    GroupCommReport {
+                        path: CommPath::Hierarchical,
+                        intra,
+                        inter,
+                    },
+                )),
+                Err(e) => Err(e.context(format!("kaitian broadcast rank {rank}"))),
+            };
+            done.send(res);
+        });
+        handle
+    }
+
+    fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, GroupCommReport)> {
+        if self.topo.is_homogeneous() {
+            let tag = self.vendor.reserve_tag();
+            let (out, s) = self.vendor.all_gather_tagged(send, tag)?;
+            return Ok((out, GroupCommReport::vendor(s)));
+        }
+        // Hierarchical all-gather: intra-group gather → leaders exchange
+        // (padded) group blocks over the relay → leader broadcasts the
+        // reassembled global buffer into its group.
+        let chunk = send.len();
+        let world = self.topo.world();
+        let maxg = self
+            .topo
+            .groups()
+            .values()
+            .map(|g| g.len())
+            .max()
+            .unwrap_or(1);
         let mut intra = CommStats::default();
         let mut inter = CommStats::default();
-        let root_leader = self.topo.leader_of(root);
+        // Reserve in a fixed order on every rank of each communicator.
+        let tag_gather = self.vendor.reserve_tag();
+        let tag_relay = self.relay.as_ref().map(|r| r.reserve_tag());
+        let tag_bcast = self.vendor.reserve_tag();
 
-        // 1. Within the root's group: vendor-broadcast from root to the
-        //    group (so the leader definitely has the data).
-        if self.topo.group_of(self.rank) == self.topo.group_of(root) {
-            intra.merge(&self.vendor.broadcast(buf, self.topo.local_rank(root))?);
-        }
-        // 2. Leaders: relay-broadcast from the root group's leader.
+        // 1. Gather this group's contributions (group-local rank order).
+        let (group_block, s1) = self.vendor.all_gather_tagged(send, tag_gather)?;
+        intra.merge(&s1);
+
+        // 2. Leaders all-gather the group blocks (padded to the largest
+        //    group so contributions are equal-length), then scatter them
+        //    into global-rank positions.
+        let mut global = vec![0.0_f32; world * chunk];
         if let Some(relay) = &self.relay {
-            let relay_root = self
-                .topo
-                .relay_rank(root_leader)
-                .expect("root leader must be in relay");
-            inter.merge(&relay.broadcast(buf, relay_root)?);
+            let mut padded = group_block;
+            padded.resize(maxg * chunk, 0.0);
+            let (blocks, s2) =
+                relay.all_gather_tagged(&padded, tag_relay.expect("leaders reserve a relay tag"))?;
+            inter.merge(&s2);
+            for (gi, members) in self.topo.groups().values().enumerate() {
+                for (p, &r) in members.iter().enumerate() {
+                    let src = gi * maxg * chunk + p * chunk;
+                    global[r * chunk..(r + 1) * chunk]
+                        .copy_from_slice(&blocks[src..src + chunk]);
+                }
+            }
         }
-        // 3. Non-root groups: leader vendor-broadcasts to its group.
-        if self.topo.group_of(self.rank) != self.topo.group_of(root) {
-            intra.merge(&self.vendor.broadcast(buf, 0)?);
+
+        // 3. Leader broadcasts the assembled buffer into its group.
+        let s3 = self.vendor.broadcast_tagged(&mut global, 0, tag_bcast)?;
+        intra.merge(&s3);
+
+        Ok((
+            global,
+            GroupCommReport {
+                path: CommPath::Hierarchical,
+                intra,
+                inter,
+            },
+        ))
+    }
+
+    fn barrier(&self) -> Result<()> {
+        self.control.barrier()?;
+        Ok(())
+    }
+
+    /// Inline blocking path (overrides the async-routed default): the
+    /// pre-refactor serial dispatch, kept honest for baselines — no
+    /// buffer copies, no thread hand-offs. Tags are still reserved in
+    /// caller program order, so mixing this with in-flight async ops is
+    /// safe.
+    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<GroupCommReport> {
+        if self.topo.is_homogeneous() {
+            let tag = self.vendor.reserve_tag();
+            let intra = self.vendor.all_reduce_tagged(buf, op, tag)?;
+            return Ok(GroupCommReport::vendor(intra));
         }
+        let tag_a = self.vendor.reserve_tag();
+        let tag_b = self.relay.as_ref().map(|r| r.reserve_tag());
+        let tag_c = self.vendor.reserve_tag();
+        let mut intra = CommStats::default();
+        let mut inter = CommStats::default();
+        intra.merge(&self.vendor.all_reduce_tagged(buf, op, tag_a)?);
+        if let Some(relay) = &self.relay {
+            let tag = tag_b.expect("leaders reserve a relay tag");
+            inter.merge(&relay.all_reduce_tagged(buf, op, tag)?);
+        }
+        intra.merge(&self.vendor.broadcast_tagged(buf, 0, tag_c)?);
         Ok(GroupCommReport {
             path: CommPath::Hierarchical,
             intra,
@@ -156,8 +421,22 @@ impl ProcessGroup for ProcessGroupKaiTian {
         })
     }
 
-    fn barrier(&self) -> Result<()> {
-        self.control.barrier()?;
-        Ok(())
+    /// Inline blocking broadcast (same rationale as `all_reduce`).
+    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<GroupCommReport> {
+        if self.topo.is_homogeneous() {
+            let tag = self.vendor.reserve_tag();
+            let intra = self
+                .vendor
+                .broadcast_tagged(buf, self.topo.local_rank(root), tag)?;
+            return Ok(GroupCommReport::vendor(intra));
+        }
+        let plan = self.plan_broadcast(root);
+        let (intra, inter) =
+            run_hetero_broadcast(self.vendor.as_ref(), self.relay.as_deref(), buf, &plan)?;
+        Ok(GroupCommReport {
+            path: CommPath::Hierarchical,
+            intra,
+            inter,
+        })
     }
 }

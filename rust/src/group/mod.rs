@@ -27,7 +27,7 @@ pub use kaitian::ProcessGroupKaiTian;
 pub use native::ProcessGroupNative;
 pub use topology::Topology;
 
-use crate::collectives::{CommStats, ReduceOp};
+use crate::collectives::{CommStats, ReduceOp, WorkHandle};
 use crate::Result;
 
 /// Which path a collective took (for metrics + routing invariants).
@@ -71,6 +71,16 @@ impl GroupCommReport {
 
 /// The interface DDP trains against — implemented by KaiTian, Native and
 /// FlatGloo groups.
+///
+/// The primary API is *asynchronous*, modeled on PyTorch's
+/// `ProcessGroup::allreduce → Work`: `*_async` issues the collective on a
+/// per-rank comm thread (tags are reserved at issue time, in SPMD program
+/// order, so in-flight ops never misalign across ranks) and the returned
+/// [`WorkHandle`] yields the buffer plus a [`GroupCommReport`] on `wait()`.
+/// The blocking methods default to async-issue-then-wait; implementations
+/// override them with inline serial execution (no copies or thread
+/// hand-offs). Both paths reserve tags in caller program order, so they
+/// can be mixed freely without breaking SPMD alignment.
 pub trait ProcessGroup: Send + Sync {
     /// Implementation name for reports.
     fn name(&self) -> &'static str;
@@ -79,12 +89,38 @@ pub trait ProcessGroup: Send + Sync {
 
     fn world(&self) -> usize;
 
-    /// Global in-place all-reduce across all ranks.
-    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<GroupCommReport>;
+    /// Issue a global all-reduce; `wait()` returns the reduced buffer.
+    fn all_reduce_async(
+        &self,
+        buf: Vec<f32>,
+        op: ReduceOp,
+    ) -> WorkHandle<(Vec<f32>, GroupCommReport)>;
 
-    /// Global broadcast from global rank `root`.
-    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<GroupCommReport>;
+    /// Issue a global broadcast from global rank `root`.
+    fn broadcast_async(
+        &self,
+        buf: Vec<f32>,
+        root: usize,
+    ) -> WorkHandle<(Vec<f32>, GroupCommReport)>;
+
+    /// Gather equal-length per-rank contributions; returns the
+    /// concatenation in *global* rank order.
+    fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, GroupCommReport)>;
 
     /// Barrier across all ranks.
     fn barrier(&self) -> Result<()>;
+
+    /// Global in-place all-reduce across all ranks (blocking).
+    fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<GroupCommReport> {
+        let (out, report) = self.all_reduce_async(buf.to_vec(), op).wait()?;
+        buf.copy_from_slice(&out);
+        Ok(report)
+    }
+
+    /// Global broadcast from global rank `root` (blocking).
+    fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<GroupCommReport> {
+        let (out, report) = self.broadcast_async(buf.to_vec(), root).wait()?;
+        buf.copy_from_slice(&out);
+        Ok(report)
+    }
 }

@@ -7,7 +7,7 @@
 //! GPUs, 4.3% on MLUs).
 
 use crate::backend::CollectiveBackend;
-use crate::collectives::ReduceOp;
+use crate::collectives::{ReduceOp, WorkHandle};
 use crate::Result;
 
 use super::{GroupCommReport, ProcessGroup};
@@ -40,16 +40,42 @@ impl ProcessGroup for ProcessGroupNative {
         self.backend.world()
     }
 
+    fn all_reduce_async(
+        &self,
+        buf: Vec<f32>,
+        op: ReduceOp,
+    ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
+        self.backend
+            .all_reduce_async(buf, op)
+            .map(|(buf, s)| (buf, GroupCommReport::vendor(s)))
+    }
+
+    fn broadcast_async(
+        &self,
+        buf: Vec<f32>,
+        root: usize,
+    ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
+        self.backend
+            .broadcast_async(buf, root)
+            .map(|(buf, s)| (buf, GroupCommReport::vendor(s)))
+    }
+
+    fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, GroupCommReport)> {
+        let (out, s) = self.backend.all_gather(send)?;
+        Ok((out, GroupCommReport::vendor(s)))
+    }
+
+    fn barrier(&self) -> Result<()> {
+        self.backend.barrier()?;
+        Ok(())
+    }
+
+    /// Inline blocking path (no async round-trip): the honest baseline.
     fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<GroupCommReport> {
         Ok(GroupCommReport::vendor(self.backend.all_reduce(buf, op)?))
     }
 
     fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<GroupCommReport> {
         Ok(GroupCommReport::vendor(self.backend.broadcast(buf, root)?))
-    }
-
-    fn barrier(&self) -> Result<()> {
-        self.backend.barrier()?;
-        Ok(())
     }
 }

@@ -7,12 +7,15 @@
 //!
 //! * **L3 (this crate)** — the paper's contribution: a meta process group
 //!   ([`group::ProcessGroupKaiTian`]) that dispatches collectives to
-//!   vendor-style backends ([`backend::NcclSim`], [`backend::CnclSim`])
-//!   inside homogeneous device groups and stages cross-vendor traffic
-//!   through a host relay ([`backend::GlooHostRelay`]); plus the
-//!   load-adaptive scheduler ([`sched`]), the DDP engine ([`ddp`]), a
-//!   Redis-like rendezvous service ([`rendezvous`]), and the simulated
-//!   heterogeneous device substrate ([`device`]).
+//!   vendor-style backends inside homogeneous device groups and stages
+//!   cross-vendor traffic through a host relay
+//!   ([`backend::GlooHostRelay`]); every collective is also available as
+//!   a non-blocking issued op ([`collectives::WorkHandle`], PyTorch's
+//!   `Work` model) so the DDP engine ([`ddp`]) overlaps the relay hop
+//!   with intra-group reduces and compute; plus the load-adaptive
+//!   scheduler ([`sched`]), a Redis-like rendezvous service
+//!   ([`rendezvous`]), and the simulated heterogeneous device substrate
+//!   ([`device`]).
 //! * **L2** — JAX model programs (`python/compile/model.py`), AOT-lowered
 //!   to HLO text artifacts loaded by [`runtime`].
 //! * **L1** — Pallas kernels (`python/compile/kernels/`) fused into those

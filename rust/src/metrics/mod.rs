@@ -13,8 +13,14 @@ pub struct StepMetrics {
     pub bucket: usize,
     /// Seconds in the local grad computation (incl. throttle).
     pub compute_s: f64,
-    /// Seconds in gradient all-reduce (total).
+    /// Busy seconds in gradient all-reduce (sum over buckets; pipeline
+    /// stages of different buckets may run concurrently).
     pub comm_s: f64,
+    /// Wall-clock comm seconds actually exposed to this step (issue →
+    /// last-bucket wait of the pipelined sync).
+    pub comm_exposed_s: f64,
+    /// Busy comm seconds hidden by the bucket pipeline.
+    pub comm_overlap_s: f64,
     /// of which: host-staging copies.
     pub stage_s: f64,
     /// Seconds in the optimizer update.
@@ -24,8 +30,17 @@ pub struct StepMetrics {
 }
 
 impl StepMetrics {
+    /// Critical-path seconds of the step. Charges the *exposed* comm time
+    /// when the pipelined sync reported one (busy `comm_s` double-counts
+    /// stages that ran concurrently); falls back to `comm_s` for legacy
+    /// blocking flows that never set it.
     pub fn total_s(&self) -> f64 {
-        self.compute_s + self.comm_s + self.update_s
+        let comm = if self.comm_exposed_s > 0.0 {
+            self.comm_exposed_s
+        } else {
+            self.comm_s
+        };
+        self.compute_s + comm + self.update_s
     }
 }
 
@@ -35,6 +50,8 @@ pub struct Accumulator {
     pub steps: usize,
     pub compute_s: f64,
     pub comm_s: f64,
+    pub comm_exposed_s: f64,
+    pub comm_overlap_s: f64,
     pub stage_s: f64,
     pub update_s: f64,
     pub comm_bytes: u64,
@@ -46,14 +63,23 @@ impl Accumulator {
         self.steps += 1;
         self.compute_s += m.compute_s;
         self.comm_s += m.comm_s;
+        self.comm_exposed_s += m.comm_exposed_s;
+        self.comm_overlap_s += m.comm_overlap_s;
         self.stage_s += m.stage_s;
         self.update_s += m.update_s;
         self.comm_bytes += m.comm_bytes;
         self.samples += m.batch;
     }
 
+    /// Critical-path seconds (see [`StepMetrics::total_s`]): exposed comm
+    /// when available, busy comm otherwise.
     pub fn total_s(&self) -> f64 {
-        self.compute_s + self.comm_s + self.update_s
+        let comm = if self.comm_exposed_s > 0.0 {
+            self.comm_exposed_s
+        } else {
+            self.comm_s
+        };
+        self.compute_s + comm + self.update_s
     }
 
     pub fn throughput(&self) -> f64 {
@@ -69,6 +95,8 @@ impl Accumulator {
             ("steps", Json::num(self.steps as f64)),
             ("compute_s", Json::num(self.compute_s)),
             ("comm_s", Json::num(self.comm_s)),
+            ("comm_exposed_s", Json::num(self.comm_exposed_s)),
+            ("comm_overlap_s", Json::num(self.comm_overlap_s)),
             ("stage_s", Json::num(self.stage_s)),
             ("update_s", Json::num(self.update_s)),
             ("comm_bytes", Json::num(self.comm_bytes as f64)),
@@ -225,6 +253,8 @@ mod tests {
             bucket: 64,
             compute_s: 0.1,
             comm_s: 0.02,
+            comm_exposed_s: 0.015,
+            comm_overlap_s: 0.005,
             stage_s: 0.001,
             update_s: 0.01,
             comm_bytes: 1000,
@@ -234,13 +264,18 @@ mod tests {
             bucket: 64,
             compute_s: 0.1,
             comm_s: 0.02,
+            comm_exposed_s: 0.02,
+            comm_overlap_s: 0.0,
             stage_s: 0.0,
             update_s: 0.01,
             comm_bytes: 1000,
         });
         assert_eq!(acc.steps, 2);
         assert_eq!(acc.samples, 128);
-        assert!((acc.total_s() - 0.26).abs() < 1e-12);
+        // total_s charges the exposed comm (0.035), not the busy sum (0.04).
+        assert!((acc.total_s() - 0.255).abs() < 1e-12);
+        assert!((acc.comm_exposed_s - 0.035).abs() < 1e-12);
+        assert!((acc.comm_overlap_s - 0.005).abs() < 1e-12);
         assert!(acc.throughput() > 0.0);
     }
 

@@ -359,9 +359,18 @@ fn worker(
                 };
             }
 
-            // Gradient aggregation through the process group.
-            let sync = ddp.all_reduce_grads(&mut grads)?;
+            // Gradient aggregation through the process group, pipelined:
+            // every bucket's all-reduce is issued immediately (the KaiTian
+            // group overlaps the leaders' host-relay hop of bucket k with
+            // the vendor reduce of bucket k+1), the small metrics
+            // all-reduce rides alongside, and we only wait() right before
+            // the optimizer update.
+            let grad_sync = ddp.issue_grad_sync(&grads);
+            let metrics_work = ddp.all_reduce_metrics_async(vec![loss_sum, 0.0, 0.0]);
+            let sync = ddp.wait_grad_sync(grad_sync, &mut grads)?;
             m.comm_s = sync.seconds;
+            m.comm_exposed_s = sync.exposed_s;
+            m.comm_overlap_s = sync.overlapped_s;
             m.stage_s = sync.stage_seconds;
             m.comm_bytes = sync.bytes;
 
@@ -375,9 +384,9 @@ fn worker(
             )?;
             m.update_s = t2.elapsed().as_secs_f64();
 
-            // Global train-loss logging (small metrics all-reduce).
-            let mut metrics_buf = vec![loss_sum, 0.0, 0.0];
-            ddp.all_reduce_metrics(&mut metrics_buf)?;
+            // Global train-loss logging (the metrics op was issued before
+            // the gradient wait; collect it after the update).
+            let (metrics_buf, _metrics_report) = metrics_work.wait()?;
             let global_loss = metrics_buf[0] as f64 / opts.global_batch as f64;
             epoch_loss_num += metrics_buf[0] as f64;
             epoch_loss_den += opts.global_batch as f64;

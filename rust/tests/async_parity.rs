@@ -1,0 +1,194 @@
+//! Async/blocking parity and tag-alignment stress for the non-blocking
+//! collective path. Pure rust — no artifacts needed.
+//!
+//! * The pipelined gradient sync must be *bit-identical* to the blocking
+//!   path on heterogeneous clusters (same ring order per bucket → same
+//!   float associativity).
+//! * Many concurrent `WorkHandle`s on one process group must never
+//!   misalign tags across ranks, whatever order the caller waits in.
+
+use kaitian::collectives::ReduceOp;
+use kaitian::ddp::DdpEngine;
+use kaitian::device::parse_cluster;
+use kaitian::group::{build_cluster, ClusterHandles, GroupMode, RelayKind};
+
+fn grads_for(rank: usize, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| ((i % 97) as f32 - 48.0) * 0.0625 * (rank as f32 + 1.0) + i as f32 * 1e-4)
+        .collect()
+}
+
+fn run_sync(handles: &ClusterHandles, n: usize, bucket: usize, pipelined: bool) -> Vec<Vec<f32>> {
+    std::thread::scope(|s| {
+        let hs: Vec<_> = handles
+            .groups
+            .iter()
+            .map(|g| {
+                s.spawn(move || {
+                    let ddp = DdpEngine::new(g.as_ref(), bucket);
+                    let mut grads = grads_for(g.rank(), n);
+                    let rep = if pipelined {
+                        ddp.all_reduce_grads(&mut grads).unwrap()
+                    } else {
+                        ddp.all_reduce_grads_blocking(&mut grads).unwrap()
+                    };
+                    assert!(rep.buckets >= 1);
+                    assert!(rep.bytes > 0);
+                    grads
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[test]
+fn pipelined_grad_sync_bit_identical_to_blocking() {
+    for spec in ["1G+2M", "2G+2M"] {
+        let devices = parse_cluster(spec).unwrap();
+        let n = 50_000;
+        let bucket = 16 << 10; // 4096 elems -> ~13 buckets
+        let blocking = {
+            let handles =
+                build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+            run_sync(&handles, n, bucket, false)
+        };
+        let pipelined = {
+            let handles =
+                build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+            run_sync(&handles, n, bucket, true)
+        };
+        assert_eq!(
+            blocking, pipelined,
+            "{spec}: pipelined sync must be bit-identical to blocking"
+        );
+        // And all ranks agree with each other.
+        for r in 1..pipelined.len() {
+            assert_eq!(pipelined[0], pipelined[r], "{spec}: replica divergence");
+        }
+    }
+}
+
+#[test]
+fn pipelined_sync_over_tcp_relay_matches_inproc() {
+    let devices = parse_cluster("1G+2M").unwrap();
+    let n = 10_000;
+    let inproc = {
+        let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+        run_sync(&handles, n, 8 << 10, true)
+    };
+    let tcp = {
+        let handles = build_cluster(&devices, RelayKind::Tcp, GroupMode::Kaitian).unwrap();
+        run_sync(&handles, n, 8 << 10, true)
+    };
+    assert_eq!(inproc, tcp, "relay transport must not change numerics");
+}
+
+#[test]
+fn many_concurrent_work_handles_stay_aligned() {
+    // 32 in-flight all-reduces per rank, waited newest-first: execution
+    // order across stage threads differs from wait order, but issue-time
+    // tag reservation keeps every rank pairing the same logical op.
+    let devices = parse_cluster("2G+2M").unwrap();
+    let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+    let world = devices.len();
+    const OPS: usize = 32;
+    let out: Vec<Vec<Vec<f32>>> = std::thread::scope(|s| {
+        let hs: Vec<_> = handles
+            .groups
+            .iter()
+            .map(|g| {
+                s.spawn(move || {
+                    let mut issued = Vec::new();
+                    for k in 0..OPS {
+                        // Distinct payload per op and per rank.
+                        let buf: Vec<f32> =
+                            (0..64).map(|i| (k * 1000 + i) as f32 + g.rank() as f32).collect();
+                        issued.push(g.all_reduce_async(buf, ReduceOp::Sum));
+                    }
+                    let mut results = vec![Vec::new(); OPS];
+                    for k in (0..OPS).rev() {
+                        let (buf, report) = issued.pop().unwrap().wait().unwrap();
+                        assert_eq!(
+                            report.path,
+                            kaitian::group::CommPath::Hierarchical,
+                            "hetero op must take the hierarchical path"
+                        );
+                        results[k] = buf;
+                    }
+                    results
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let rank_sum: f32 = (0..world).map(|r| r as f32).sum();
+    for per_rank in &out {
+        for (k, buf) in per_rank.iter().enumerate() {
+            let expect: Vec<f32> = (0..64)
+                .map(|i| world as f32 * (k * 1000 + i) as f32 + rank_sum)
+                .collect();
+            assert_eq!(buf, &expect, "op {k} misaligned");
+        }
+    }
+}
+
+#[test]
+fn interleaved_all_reduce_and_broadcast_handles() {
+    // Mixing op kinds in flight must also stay aligned (grad sync +
+    // metrics + param broadcast all share the same stage queues).
+    let devices = parse_cluster("1G+2M").unwrap();
+    let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+    let out: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = std::thread::scope(|s| {
+        let hs: Vec<_> = handles
+            .groups
+            .iter()
+            .map(|g| {
+                s.spawn(move || {
+                    let a = g.all_reduce_async(vec![(g.rank() + 1) as f32; 32], ReduceOp::Sum);
+                    let b = g.broadcast_async(
+                        if g.rank() == 2 { vec![5.0; 8] } else { vec![0.0; 8] },
+                        2,
+                    );
+                    let c = g.all_reduce_async(vec![2.0; 16], ReduceOp::Max);
+                    // Wait in a different order than issued.
+                    let (cv, _) = c.wait().unwrap();
+                    let (av, _) = a.wait().unwrap();
+                    let (bv, _) = b.wait().unwrap();
+                    (av, bv, cv)
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (a, b, c) in out {
+        assert_eq!(a, vec![6.0; 32]); // 1+2+3
+        assert_eq!(b, vec![5.0; 8]);
+        assert_eq!(c, vec![2.0; 16]);
+    }
+}
+
+#[test]
+fn group_all_gather_matches_communicator_semantics() {
+    let devices = parse_cluster("2G+2M").unwrap();
+    let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+    let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let hs: Vec<_> = handles
+            .groups
+            .iter()
+            .map(|g| {
+                s.spawn(move || {
+                    let send = vec![g.rank() as f32; 3];
+                    let (out, report) = g.all_gather(&send).unwrap();
+                    assert!(report.total_bytes() > 0);
+                    out
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let expect: Vec<f32> = (0..4).flat_map(|r| [r as f32; 3]).collect();
+    for o in out {
+        assert_eq!(o, expect);
+    }
+}
