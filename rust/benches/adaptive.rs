@@ -1,0 +1,144 @@
+//! Bench: dynamic load-adaptive rebalancing vs static splits under
+//! runtime perturbations (paper Fig. 5/6 analogue: time-to-epoch and
+//! per-device utilization on the 2G+2M cluster).
+//!
+//! Three contenders per scenario, all in virtual time over one
+//! paper-shaped epoch (B=256, 195 steps):
+//!
+//! * **equal** — Strategy A, naive equal split, frozen;
+//! * **adaptive-frozen** — KAITIAN's offline-benchmark split, frozen
+//!   (what the repo did before the runtime controller);
+//! * **adaptive+controller** — the guarded runtime rebalancer.
+//!
+//! Writes `results/adaptive.json` and asserts the headline claims: the
+//! controller beats the equal split by ≥ 15% time-to-epoch under the
+//! step-change and thermal-drift scenarios, with at least one and a
+//! bounded number of rebalance events.
+//!
+//! Run: `cargo bench --bench adaptive`
+
+use std::collections::BTreeMap;
+
+use kaitian::device::Scenario;
+use kaitian::metrics::MarkdownTable;
+use kaitian::perfmodel::PerfModel;
+use kaitian::sched::Strategy;
+use kaitian::simnet::{simulate_dynamic, DynamicSimConfig, DynamicSimReport};
+use kaitian::util::json::Json;
+
+const CLUSTER: &str = "2G+2M";
+const SCENARIOS: [&str; 4] = ["step-change", "thermal-drift", "contention", "spikes"];
+/// Scenarios whose ≥15% time-to-epoch win is an acceptance criterion.
+const HEADLINE: [&str; 2] = ["step-change", "thermal-drift"];
+
+fn run(
+    model: &PerfModel,
+    scenario: &Scenario,
+    strategy: Strategy,
+    online: bool,
+) -> DynamicSimReport {
+    let mut cfg = DynamicSimConfig::paper_epoch(CLUSTER, scenario.clone(), online);
+    cfg.strategy = strategy;
+    simulate_dynamic(model, &cfg).expect("simulation")
+}
+
+fn report_json(r: &DynamicSimReport) -> Json {
+    Json::obj(vec![
+        ("strategy", Json::str(r.strategy_name.clone())),
+        ("time_to_epoch_s", Json::num(r.total_s)),
+        (
+            "utilization",
+            Json::arr(r.utilization.iter().map(|u| Json::num(*u)).collect()),
+        ),
+        ("tail_imbalance", Json::num(r.tail_imbalance(20))),
+        (
+            "final_allocation",
+            Json::arr(
+                r.final_allocation
+                    .iter()
+                    .map(|b| Json::num(*b as f64))
+                    .collect(),
+            ),
+        ),
+        ("rebalance_count", Json::num(r.events.len() as f64)),
+        (
+            "rebalance_events",
+            Json::arr(r.events.iter().map(|e| e.to_json()).collect()),
+        ),
+    ])
+}
+
+fn main() -> kaitian::Result<()> {
+    let model = PerfModel::paper_default();
+    let proto = DynamicSimConfig::paper_epoch(CLUSTER, Scenario::none(), true);
+    let steps = proto.steps;
+    let max_events = 1 + steps / proto.controller.cooldown_steps.max(1);
+
+    let mut table = MarkdownTable::new(&[
+        "scenario",
+        "equal (s)",
+        "adaptive-frozen (s)",
+        "adaptive+controller (s)",
+        "win vs equal",
+        "rebalances",
+        "tail imbalance",
+    ]);
+    let mut json = BTreeMap::new();
+
+    for name in SCENARIOS {
+        let scenario = Scenario::named(name)?;
+        let equal = run(&model, &scenario, Strategy::Equal, false);
+        let frozen = run(&model, &scenario, Strategy::Adaptive, false);
+        let adaptive = run(&model, &scenario, Strategy::Adaptive, true);
+
+        let win = 1.0 - adaptive.total_s / equal.total_s;
+        table.row(vec![
+            name.to_string(),
+            format!("{:.3}", equal.total_s),
+            format!("{:.3}", frozen.total_s),
+            format!("{:.3}", adaptive.total_s),
+            format!("{:.1}%", win * 100.0),
+            format!("{}", adaptive.events.len()),
+            format!("{:.3}", adaptive.tail_imbalance(20)),
+        ]);
+        json.insert(
+            name.to_string(),
+            Json::obj(vec![
+                ("cluster", Json::str(CLUSTER)),
+                ("steps", Json::num(steps as f64)),
+                ("equal", report_json(&equal)),
+                ("adaptive_frozen", report_json(&frozen)),
+                ("adaptive_controller", report_json(&adaptive)),
+                ("win_vs_equal", Json::num(win)),
+            ]),
+        );
+
+        // Bounded-frequency guard holds for every scenario.
+        assert!(
+            adaptive.events.len() <= max_events,
+            "{name}: {} rebalances exceed the cooldown bound {max_events}",
+            adaptive.events.len()
+        );
+        if HEADLINE.contains(&name) {
+            assert!(
+                !adaptive.events.is_empty(),
+                "{name}: expected at least one rebalance"
+            );
+            assert!(
+                win >= 0.15,
+                "{name}: adaptive+controller must beat equal by >= 15%, got {:.1}%",
+                win * 100.0
+            );
+            assert!(
+                adaptive.total_s < frozen.total_s,
+                "{name}: the controller must beat the frozen adaptive split"
+            );
+        }
+    }
+
+    println!("== dynamic load-adaptive rebalancing (virtual time, {CLUSTER}) ==\n");
+    println!("{}", table.render());
+    let path = kaitian::metrics::write_report("results", "adaptive", json)?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -81,6 +81,32 @@ fn apply_json(o: &mut TrainOptions, v: &Json) -> Result<()> {
     if let Some(x) = v.get("log_every").and_then(Json::as_usize) {
         o.log_every = x;
     }
+    if let Some(x) = v.get("online_adapt").and_then(Json::as_bool) {
+        o.online_adapt = x;
+    }
+    if let Some(x) = v.get("adapt_every").and_then(Json::as_usize) {
+        o.adapt_every = x;
+    }
+    if let Some(x) = v.get("adapt_ema_alpha").and_then(Json::as_f64) {
+        o.adapt_ema_alpha = x;
+    }
+    if let Some(x) = v.get("adapt_min_rel_delta").and_then(Json::as_f64) {
+        o.adapt_min_rel_delta = x;
+    }
+    if let Some(x) = v.get("adapt_cooldown").and_then(Json::as_usize) {
+        o.adapt_cooldown = x;
+    }
+    if let Some(x) = v.get("adapt_shift_cap").and_then(Json::as_usize) {
+        o.adapt_shift_cap = x;
+    }
+    if let Some(x) = v.get("adapt_freshness").and_then(Json::as_usize) {
+        o.adapt_freshness = x;
+    }
+    if let Some(x) = v.get("scenario").and_then(Json::as_str) {
+        // Validate eagerly so a typo fails at config load, not mid-run.
+        crate::device::Scenario::parse(x)?;
+        o.scenario = x.to_string();
+    }
     Ok(())
 }
 
@@ -106,6 +132,12 @@ pub fn apply_cli_overrides(o: &mut TrainOptions, args: &Args) -> Result<()> {
         "seed",
         "bucket_bytes",
         "log_every",
+        "adapt_every",
+        "adapt_ema_alpha",
+        "adapt_min_rel_delta",
+        "adapt_cooldown",
+        "adapt_shift_cap",
+        "adapt_freshness",
     ] {
         if let Some(v) = args.flag(key) {
             // Numbers stay bare; strings get quoted.
@@ -117,10 +149,15 @@ pub fn apply_cli_overrides(o: &mut TrainOptions, args: &Args) -> Result<()> {
             pairs.push(format!("\"{key}\": {quoted}"));
         }
     }
-    for key in ["throttle", "profile"] {
+    for key in ["throttle", "profile", "online_adapt"] {
         if let Some(v) = args.flag(key) {
             pairs.push(format!("\"{key}\": {v}"));
         }
+    }
+    // Scenario specs are always strings — never leave a numeric-looking
+    // value bare, or it would skip (and silently bypass) validation.
+    if let Some(v) = args.flag("scenario") {
+        pairs.push(format!("\"scenario\": \"{v}\""));
     }
     let json = format!("{{{}}}", pairs.join(","));
     apply_json(o, &Json::parse(&json)?)
@@ -186,5 +223,44 @@ mod tests {
     #[test]
     fn bad_strategy_in_json_is_error() {
         assert!(train_options_from_json(r#"{"strategy": "bogus"}"#).is_err());
+    }
+
+    #[test]
+    fn controller_and_scenario_knobs_parse() {
+        let o = train_options_from_json(
+            r#"{"online_adapt": true, "adapt_every": 5,
+                "adapt_min_rel_delta": 0.1, "adapt_cooldown": 15,
+                "adapt_shift_cap": 16, "adapt_freshness": 20,
+                "adapt_ema_alpha": 0.3,
+                "scenario": "step-change"}"#,
+        )
+        .unwrap();
+        assert!(o.online_adapt);
+        assert_eq!(o.adapt_every, 5);
+        assert!((o.adapt_min_rel_delta - 0.1).abs() < 1e-12);
+        assert_eq!(o.adapt_cooldown, 15);
+        assert_eq!(o.adapt_shift_cap, 16);
+        assert_eq!(o.adapt_freshness, 20);
+        assert!((o.adapt_ema_alpha - 0.3).abs() < 1e-12);
+        assert_eq!(o.scenario, "step-change");
+
+        // Scenario typos fail at load time.
+        assert!(train_options_from_json(r#"{"scenario": "bogus"}"#).is_err());
+
+        // CLI overrides reach the same knobs, incl. per-rank specs.
+        let args = Args::parse_from(vec![
+            "train".into(),
+            "--online_adapt".into(),
+            "true".into(),
+            "--scenario".into(),
+            "rank0=step:40:2.5".into(),
+            "--adapt_cooldown".into(),
+            "30".into(),
+        ]);
+        let mut o = TrainOptions::default();
+        apply_cli_overrides(&mut o, &args).unwrap();
+        assert!(o.online_adapt);
+        assert_eq!(o.scenario, "rank0=step:40:2.5");
+        assert_eq!(o.adapt_cooldown, 30);
     }
 }

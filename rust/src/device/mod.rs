@@ -13,11 +13,17 @@
 //!   difference — heterogeneity is relative, machine-independent).
 //! * [`memory::MemoryTracker`] — VRAM accounting with OOM errors
 //!   (8 GiB GTX-1080-class vs 16 GiB MLU370-class budgets).
+//! * [`perturb::LoadProfile`] / [`perturb::Scenario`] — runtime load
+//!   perturbations (thermal drift, contention, spikes) that scale a
+//!   device's effective compute over virtual time, exercising the
+//!   dynamic rebalancing controller.
 
 pub mod memory;
+pub mod perturb;
 pub mod speed;
 
 pub use memory::MemoryTracker;
+pub use perturb::{LoadProfile, Scenario};
 pub use speed::SpeedModel;
 
 use std::fmt;
@@ -82,6 +88,10 @@ pub struct DeviceSpec {
     pub dtype: DeviceType,
     /// VRAM capacity in bytes.
     pub vram: usize,
+    /// Runtime load perturbation (default: none). Scales the device's
+    /// effective compute time over virtual steps; consulted by the
+    /// real-mode throttle and the virtual-time simulator.
+    pub load: LoadProfile,
 }
 
 impl DeviceSpec {
@@ -90,6 +100,7 @@ impl DeviceSpec {
             rank,
             dtype,
             vram: dtype.default_vram(),
+            load: LoadProfile::none(),
         }
     }
 }

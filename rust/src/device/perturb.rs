@@ -1,0 +1,428 @@
+//! Runtime load perturbations: the dynamic-load scenarios the adaptive
+//! scheduler must survive.
+//!
+//! Embodied deployments drift at runtime — thermal throttling, background
+//! contention, transient co-located jobs — so a device's *effective*
+//! compute speed is a function of time, not a constant. A [`LoadProfile`]
+//! is a deterministic multiplier on a device's modeled step time
+//! (`factor ≥ 1` = slower), composable and evaluated over virtual step
+//! numbers; a [`Scenario`] assigns one profile per rank and is applied to
+//! the parsed [`DeviceSpec`]s before training/simulation starts.
+//!
+//! The throttle in the real-mode train loop and the virtual-time
+//! simulator both consult `spec.load.factor_at(step)`, so a scenario
+//! perturbs real runs and simulations identically.
+
+use crate::util::Rng;
+
+use super::DeviceSpec;
+
+/// A deterministic, stateless load multiplier over virtual step time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LoadProfile {
+    /// Fixed factor (1.0 = unperturbed).
+    Constant(f64),
+    /// Step change: factor jumps from 1.0 to `factor` at `at_step`
+    /// (e.g. a co-located job starting).
+    StepChange { at_step: usize, factor: f64 },
+    /// Thermal drift: factor grows linearly from 1.0 by `per_step` each
+    /// step, saturating at `max_factor`.
+    LinearDrift { per_step: f64, max_factor: f64 },
+    /// Periodic contention: within each `period`, the first
+    /// `duty`-fraction of steps run at `factor`, the rest at 1.0.
+    Periodic { period: usize, duty: f64, factor: f64 },
+    /// Seeded random spikes: each step independently runs at `factor`
+    /// with probability `prob` (deterministic in `(seed, step)`).
+    RandomSpikes { seed: u64, prob: f64, factor: f64 },
+    /// Product of component profiles.
+    Compose(Vec<LoadProfile>),
+}
+
+impl Default for LoadProfile {
+    fn default() -> Self {
+        LoadProfile::Constant(1.0)
+    }
+}
+
+impl LoadProfile {
+    pub fn none() -> Self {
+        LoadProfile::default()
+    }
+
+    /// The load multiplier at `step` (clamped to a sane positive range).
+    pub fn factor_at(&self, step: usize) -> f64 {
+        let f = match self {
+            LoadProfile::Constant(f) => *f,
+            LoadProfile::StepChange { at_step, factor } => {
+                if step >= *at_step {
+                    *factor
+                } else {
+                    1.0
+                }
+            }
+            LoadProfile::LinearDrift {
+                per_step,
+                max_factor,
+            } => (1.0 + per_step * step as f64).min(*max_factor),
+            LoadProfile::Periodic {
+                period,
+                duty,
+                factor,
+            } => {
+                let period = (*period).max(1);
+                if ((step % period) as f64) < duty * period as f64 {
+                    *factor
+                } else {
+                    1.0
+                }
+            }
+            LoadProfile::RandomSpikes { seed, prob, factor } => {
+                let mut r =
+                    Rng::new(seed ^ (step as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                if r.next_f64() < *prob {
+                    *factor
+                } else {
+                    1.0
+                }
+            }
+            LoadProfile::Compose(parts) => {
+                parts.iter().map(|p| p.factor_at(step)).product()
+            }
+        };
+        f.clamp(1e-3, 1e3)
+    }
+
+    /// Parse one profile:
+    /// `none | const:F | step:AT:F | drift:PER_STEP:MAX |
+    ///  periodic:PERIOD:DUTY:F | spikes:SEED:PROB:F`,
+    /// with `*` composing parts (`step:40:2.0*periodic:20:0.5:1.5`).
+    pub fn parse(text: &str) -> crate::Result<LoadProfile> {
+        let parts: Vec<&str> = text.split('*').collect();
+        if parts.len() > 1 {
+            let composed = parts
+                .iter()
+                .map(|p| Self::parse_one(p))
+                .collect::<crate::Result<Vec<_>>>()?;
+            return Ok(LoadProfile::Compose(composed));
+        }
+        Self::parse_one(text)
+    }
+
+    fn parse_one(text: &str) -> crate::Result<LoadProfile> {
+        let fields: Vec<&str> = text.trim().split(':').collect();
+        let f64_at = |i: usize| -> crate::Result<f64> {
+            let v: f64 = fields
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("profile {text:?}: missing field {i}"))?
+                .parse()
+                .map_err(|_| anyhow::anyhow!("profile {text:?}: field {i} not a number"))?;
+            anyhow::ensure!(v.is_finite(), "profile {text:?}: field {i} not finite");
+            Ok(v)
+        };
+        // Integer fields parse as u64 directly: negatives error instead
+        // of saturating, and big seeds keep full precision.
+        let uint_at = |i: usize| -> crate::Result<u64> {
+            fields
+                .get(i)
+                .ok_or_else(|| anyhow::anyhow!("profile {text:?}: missing field {i}"))?
+                .trim()
+                .parse()
+                .map_err(|_| {
+                    anyhow::anyhow!("profile {text:?}: field {i} must be a non-negative integer")
+                })
+        };
+        let factor_at = |i: usize| -> crate::Result<f64> {
+            let v = f64_at(i)?;
+            anyhow::ensure!(v > 0.0, "profile {text:?}: factor must be positive");
+            Ok(v)
+        };
+        let unit_at = |i: usize| -> crate::Result<f64> {
+            let v = f64_at(i)?;
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&v),
+                "profile {text:?}: field {i} must be in [0, 1]"
+            );
+            Ok(v)
+        };
+        match fields[0] {
+            "none" => Ok(LoadProfile::none()),
+            "const" => Ok(LoadProfile::Constant(factor_at(1)?)),
+            "step" => Ok(LoadProfile::StepChange {
+                at_step: uint_at(1)? as usize,
+                factor: factor_at(2)?,
+            }),
+            "drift" => {
+                let per_step = f64_at(1)?;
+                anyhow::ensure!(per_step >= 0.0, "profile {text:?}: per_step must be >= 0");
+                let max_factor = f64_at(2)?;
+                anyhow::ensure!(max_factor >= 1.0, "profile {text:?}: max_factor must be >= 1");
+                Ok(LoadProfile::LinearDrift {
+                    per_step,
+                    max_factor,
+                })
+            }
+            "periodic" => Ok(LoadProfile::Periodic {
+                period: uint_at(1)?.max(1) as usize,
+                duty: unit_at(2)?,
+                factor: factor_at(3)?,
+            }),
+            "spikes" => Ok(LoadProfile::RandomSpikes {
+                seed: uint_at(1)?,
+                prob: unit_at(2)?,
+                factor: factor_at(3)?,
+            }),
+            other => anyhow::bail!(
+                "unknown load profile {other:?} \
+                 (none|const|step|drift|periodic|spikes)"
+            ),
+        }
+    }
+}
+
+/// Per-rank load profiles for one experiment.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// `(rank, profile)` pairs; unlisted ranks are unperturbed.
+    profiles: Vec<(usize, LoadProfile)>,
+}
+
+impl Scenario {
+    /// No perturbation.
+    pub fn none() -> Self {
+        Self {
+            name: "none".into(),
+            profiles: vec![],
+        }
+    }
+
+    pub fn new(name: &str, profiles: Vec<(usize, LoadProfile)>) -> Self {
+        Self {
+            name: name.into(),
+            profiles,
+        }
+    }
+
+    /// Named presets (all perturb rank 0, the slow-GPU rank in the paper
+    /// clusters): `step-change`, `thermal-drift`, `contention`, `spikes`.
+    pub fn named(name: &str) -> crate::Result<Scenario> {
+        let profile = match name {
+            "none" => return Ok(Scenario::none()),
+            "step-change" => LoadProfile::StepChange {
+                at_step: 40,
+                factor: 2.5,
+            },
+            "thermal-drift" => LoadProfile::LinearDrift {
+                per_step: 0.01,
+                max_factor: 2.5,
+            },
+            "contention" => LoadProfile::Periodic {
+                period: 40,
+                duty: 0.5,
+                factor: 2.0,
+            },
+            "spikes" => LoadProfile::RandomSpikes {
+                seed: 7,
+                prob: 0.08,
+                factor: 3.0,
+            },
+            other => anyhow::bail!(
+                "unknown scenario {other:?} \
+                 (none|step-change|thermal-drift|contention|spikes|rankN=<profile>;...)"
+            ),
+        };
+        Ok(Scenario::new(name, vec![(0, profile)]))
+    }
+
+    /// Parse either a named preset or an explicit per-rank spec:
+    /// `rank0=step:40:2.5;rank2=drift:0.01:2.0`.
+    pub fn parse(text: &str) -> crate::Result<Scenario> {
+        let text = text.trim();
+        if !text.contains('=') {
+            return Self::named(text);
+        }
+        let mut profiles = Vec::new();
+        for part in text.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (rank_str, profile_str) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("scenario part {part:?}: expected rankN=<profile>")
+            })?;
+            let rank: usize = rank_str
+                .trim()
+                .strip_prefix("rank")
+                .ok_or_else(|| anyhow::anyhow!("scenario part {part:?}: expected rankN=..."))?
+                .parse()
+                .map_err(|_| anyhow::anyhow!("scenario part {part:?}: bad rank"))?;
+            anyhow::ensure!(
+                profiles.iter().all(|(r, _)| *r != rank),
+                "scenario {text:?}: rank {rank} listed twice"
+            );
+            profiles.push((rank, LoadProfile::parse(profile_str)?));
+        }
+        Ok(Scenario::new(text, profiles))
+    }
+
+    /// Install the profiles on parsed device specs; errors on a rank
+    /// outside the cluster.
+    pub fn apply(&self, devices: &mut [DeviceSpec]) -> crate::Result<()> {
+        let world = devices.len();
+        for (rank, profile) in &self.profiles {
+            let d = devices.get_mut(*rank).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "scenario {:?} perturbs rank {rank}, but the cluster has {world} devices",
+                    self.name
+                )
+            })?;
+            d.load = profile.clone();
+        }
+        Ok(())
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.profiles.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::parse_cluster;
+
+    #[test]
+    fn constant_and_step_change() {
+        assert_eq!(LoadProfile::none().factor_at(100), 1.0);
+        let p = LoadProfile::StepChange {
+            at_step: 40,
+            factor: 2.5,
+        };
+        assert_eq!(p.factor_at(39), 1.0);
+        assert_eq!(p.factor_at(40), 2.5);
+        assert_eq!(p.factor_at(400), 2.5);
+    }
+
+    #[test]
+    fn drift_saturates() {
+        let p = LoadProfile::LinearDrift {
+            per_step: 0.01,
+            max_factor: 2.0,
+        };
+        assert!((p.factor_at(0) - 1.0).abs() < 1e-12);
+        assert!((p.factor_at(50) - 1.5).abs() < 1e-12);
+        assert!((p.factor_at(1000) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn periodic_duty_cycle() {
+        let p = LoadProfile::Periodic {
+            period: 10,
+            duty: 0.3,
+            factor: 2.0,
+        };
+        let slow: usize = (0..100).filter(|&s| p.factor_at(s) > 1.0).count();
+        assert_eq!(slow, 30);
+        assert_eq!(p.factor_at(0), 2.0);
+        assert_eq!(p.factor_at(5), 1.0);
+    }
+
+    #[test]
+    fn spikes_are_deterministic_and_rare() {
+        let p = LoadProfile::RandomSpikes {
+            seed: 7,
+            prob: 0.1,
+            factor: 3.0,
+        };
+        let a: Vec<f64> = (0..200).map(|s| p.factor_at(s)).collect();
+        let b: Vec<f64> = (0..200).map(|s| p.factor_at(s)).collect();
+        assert_eq!(a, b, "spikes must replay deterministically");
+        let spiked = a.iter().filter(|&&f| f > 1.0).count();
+        assert!((5..50).contains(&spiked), "{spiked} spikes in 200 steps");
+    }
+
+    #[test]
+    fn compose_multiplies() {
+        let p = LoadProfile::Compose(vec![
+            LoadProfile::Constant(2.0),
+            LoadProfile::StepChange {
+                at_step: 10,
+                factor: 1.5,
+            },
+        ]);
+        assert!((p.factor_at(0) - 2.0).abs() < 1e-12);
+        assert!((p.factor_at(10) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_all_profile_forms() {
+        assert_eq!(LoadProfile::parse("none").unwrap(), LoadProfile::none());
+        assert_eq!(
+            LoadProfile::parse("step:40:2.5").unwrap(),
+            LoadProfile::StepChange {
+                at_step: 40,
+                factor: 2.5
+            }
+        );
+        assert_eq!(
+            LoadProfile::parse("drift:0.01:2.0").unwrap(),
+            LoadProfile::LinearDrift {
+                per_step: 0.01,
+                max_factor: 2.0
+            }
+        );
+        assert!(LoadProfile::parse("periodic:10:0.5:2.0").is_ok());
+        assert!(LoadProfile::parse("spikes:7:0.1:3.0").is_ok());
+        assert!(LoadProfile::parse("step:40:2.0*periodic:20:0.5:1.5").is_ok());
+        assert!(LoadProfile::parse("bogus:1").is_err());
+        assert!(LoadProfile::parse("step:40").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_out_of_range_values() {
+        // Negative integers must error, not saturate to 0.
+        assert!(LoadProfile::parse("step:-5:2.0").is_err());
+        assert!(LoadProfile::parse("spikes:-1:0.1:3.0").is_err());
+        // Non-positive factors are typos, not speed-ups.
+        assert!(LoadProfile::parse("const:-3").is_err());
+        assert!(LoadProfile::parse("const:0").is_err());
+        // Duty cycles and probabilities live in [0, 1].
+        assert!(LoadProfile::parse("periodic:10:1.5:2.0").is_err());
+        assert!(LoadProfile::parse("spikes:7:1.7:3.0").is_err());
+        // Drift cannot shrink below the unperturbed speed.
+        assert!(LoadProfile::parse("drift:0.01:0.5").is_err());
+        assert!(LoadProfile::parse("drift:-0.01:2.0").is_err());
+    }
+
+    #[test]
+    fn scenario_rejects_duplicate_ranks() {
+        assert!(Scenario::parse("rank0=const:2.0;rank0=const:3.0").is_err());
+        assert!(Scenario::parse("rank0=const:2.0;rank1=const:3.0").is_ok());
+    }
+
+    #[test]
+    fn scenario_named_and_applied() {
+        let sc = Scenario::named("step-change").unwrap();
+        let mut devices = parse_cluster("2G+2M").unwrap();
+        sc.apply(&mut devices).unwrap();
+        assert!(devices[0].load.factor_at(50) > 1.0);
+        assert_eq!(devices[1].load.factor_at(50), 1.0);
+        assert!(Scenario::named("bogus").is_err());
+        assert!(Scenario::none().is_none());
+    }
+
+    #[test]
+    fn scenario_per_rank_spec() {
+        let sc = Scenario::parse("rank0=step:5:2.0;rank2=drift:0.1:3.0").unwrap();
+        let mut devices = parse_cluster("2G+2M").unwrap();
+        sc.apply(&mut devices).unwrap();
+        assert_eq!(devices[0].load.factor_at(5), 2.0);
+        assert_eq!(devices[1].load.factor_at(5), 1.0);
+        assert!((devices[2].load.factor_at(10) - 2.0).abs() < 1e-9);
+
+        // Out-of-range rank errors.
+        let sc = Scenario::parse("rank9=step:5:2.0").unwrap();
+        let mut devices = parse_cluster("1G+1M").unwrap();
+        assert!(sc.apply(&mut devices).is_err());
+    }
+}

@@ -31,6 +31,16 @@ impl ComputeCoeffs {
     pub fn step_time(&self, batch: usize) -> f64 {
         self.t0 + self.per_sample * batch as f64
     }
+
+    /// Coefficients under a load multiplier (perturbation harness):
+    /// `factor > 1` slows both the fixed overhead and the per-sample cost,
+    /// the way throttled silicon slows the whole step.
+    pub fn scaled(&self, factor: f64) -> ComputeCoeffs {
+        ComputeCoeffs {
+            t0: self.t0 * factor,
+            per_sample: self.per_sample * factor,
+        }
+    }
 }
 
 /// Speed model over all device types.
@@ -69,6 +79,14 @@ impl SpeedModel {
     /// Modeled compute time for one step of `batch` samples (seconds).
     pub fn step_time(&self, dtype: DeviceType, batch: usize) -> f64 {
         self.coeffs(dtype).step_time(batch)
+    }
+
+    /// Modeled compute time with the device's load perturbation applied
+    /// at virtual step `step` (the dynamic-scenario path).
+    pub fn step_time_loaded(&self, spec: &super::DeviceSpec, batch: usize, step: usize) -> f64 {
+        self.coeffs(spec.dtype)
+            .scaled(spec.load.factor_at(step))
+            .step_time(batch)
     }
 
     /// Relative *throughput* of `dtype` vs the fastest type at a reference
@@ -133,6 +151,20 @@ mod tests {
         let s = m.paper_score(DeviceType::GpuSim, 128);
         assert!((f * s - 1.0).abs() < 1e-9);
         assert!((m.throttle_factor(DeviceType::MluSim, 128) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loaded_step_time_scales_with_the_profile() {
+        use crate::device::{DeviceSpec, LoadProfile};
+        let m = SpeedModel::paper_default();
+        let mut d = DeviceSpec::new(0, DeviceType::GpuSim);
+        d.load = LoadProfile::StepChange {
+            at_step: 10,
+            factor: 2.0,
+        };
+        let base = m.step_time(DeviceType::GpuSim, 64);
+        assert!((m.step_time_loaded(&d, 64, 5) - base).abs() < 1e-12);
+        assert!((m.step_time_loaded(&d, 64, 10) - 2.0 * base).abs() < 1e-12);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::sched::RebalanceEvent;
 use crate::util::json::Json;
 
 /// One training step's timing breakdown for one rank.
@@ -130,6 +131,14 @@ pub struct TrainReport {
     pub step_losses: Vec<f64>,
     /// Per-rank aggregates.
     pub per_rank: Vec<Accumulator>,
+    /// Rebalances the runtime controller applied (empty unless
+    /// `online_adapt` was on).
+    pub rebalance_events: Vec<RebalanceEvent>,
+    /// Per-rank busy fraction of the straggler-bound compute window
+    /// (1.0 = the straggler), approximated from aggregate compute
+    /// seconds relative to the busiest rank — the same quantity
+    /// `simnet::DynamicSimReport::utilization` computes per step.
+    pub utilization: Vec<f64>,
 }
 
 impl TrainReport {
@@ -174,7 +183,25 @@ impl TrainReport {
                 "per_rank",
                 Json::arr(self.per_rank.iter().map(|a| a.to_json()).collect()),
             ),
+            (
+                "utilization",
+                Json::arr(self.utilization.iter().map(|u| Json::num(*u)).collect()),
+            ),
+            (
+                "rebalance_events",
+                Json::arr(self.rebalance_events.iter().map(|e| e.to_json()).collect()),
+            ),
         ])
+    }
+
+    /// Per-rank utilization from the per-rank accumulators: busy compute
+    /// seconds relative to the busiest rank.
+    pub fn utilization_from(per_rank: &[Accumulator]) -> Vec<f64> {
+        let max = per_rank.iter().map(|a| a.compute_s).fold(0.0, f64::max);
+        per_rank
+            .iter()
+            .map(|a| if max > 0.0 { a.compute_s / max } else { 1.0 })
+            .collect()
     }
 
     /// One-line human summary.
@@ -287,8 +314,34 @@ mod tests {
             ..Default::default()
         };
         r.epoch_losses.push(1.5);
+        r.utilization = vec![1.0, 0.8];
+        r.rebalance_events.push(RebalanceEvent {
+            step: 40,
+            old_scores: vec![1.0, 1.0],
+            new_scores: vec![0.5, 1.0],
+            old_allocation: vec![128, 128],
+            new_allocation: vec![96, 160],
+            reason: "score-drift".into(),
+        });
         let parsed = Json::parse(&r.to_json().to_string()).unwrap();
         assert_eq!(parsed.str_req("cluster").unwrap(), "2G+2M");
+        let events = parsed.get("rebalance_events").unwrap();
+        let Json::Arr(events) = events else {
+            panic!("rebalance_events must be an array")
+        };
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("reason").and_then(Json::as_str), Some("score-drift"));
+    }
+
+    #[test]
+    fn utilization_relative_to_straggler() {
+        let mk = |compute_s| Accumulator {
+            compute_s,
+            ..Default::default()
+        };
+        let u = TrainReport::utilization_from(&[mk(2.0), mk(1.0), mk(0.5)]);
+        assert_eq!(u, vec![1.0, 0.5, 0.25]);
+        assert_eq!(TrainReport::utilization_from(&[]), Vec::<f64>::new());
     }
 
     #[test]

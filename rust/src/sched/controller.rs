@@ -1,0 +1,608 @@
+//! Guarded runtime rebalancing controller (paper §III-C "dynamically
+//! balances tasks based on real-time performance").
+//!
+//! The one-shot offline benchmark gives a *static* allocation; at runtime
+//! devices drift (thermal throttling, background contention — the embodied
+//! deployment scenarios of §I). [`AdaptiveController`] closes the loop:
+//! workers feed per-sample compute-time observations in, the controller
+//! EMA-smooths them per rank, and a rebalance is applied only when every
+//! guard passes:
+//!
+//! * **freshness** — every rank must have reported within
+//!   `freshness_steps`; a rank that skipped a window is never rescored on
+//!   stale data (the bug in the old inline adaptation block, which kept
+//!   `adapt_times` entries forever);
+//! * **cooldown** — at least `cooldown_steps` between rebalances, so the
+//!   allocation cannot thrash on noise;
+//! * **minimum drift** — the max relative score change must reach
+//!   `min_rel_delta` (hysteresis);
+//! * **shift cap** — no rank's share moves by more than `shift_cap`
+//!   samples per rebalance (bounded perturbation of the data order).
+//!
+//! Every applied rebalance is recorded as a [`RebalanceEvent`] (old/new
+//! scores and allocation, trigger reason) and surfaced in the training
+//! report JSON.
+
+use super::allocation::{cap_allocation, proportional_allocation};
+use super::profiler::Profiler;
+use crate::util::json::Json;
+
+/// Guard and smoothing knobs for [`AdaptiveController`].
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// Weight of a new observation in the per-rank EMA (0 < α ≤ 1).
+    pub ema_alpha: f64,
+    /// Minimum max-relative score change that justifies a rebalance.
+    pub min_rel_delta: f64,
+    /// Minimum steps between applied rebalances.
+    pub cooldown_steps: usize,
+    /// Max per-rank allocation change per rebalance in samples
+    /// (0 = uncapped).
+    pub shift_cap: usize,
+    /// Observations older than this many steps are stale; a rebalance
+    /// needs a fresh observation from *every* rank.
+    pub freshness_steps: usize,
+    /// Keep every rank at least this many samples (when the global batch
+    /// allows), so a slow rank still produces timing observations.
+    pub min_share: usize,
+}
+
+// Keep these in sync with `TrainOptions::default()` /
+// `TrainOptions::controller_config()` — the trainer's knobs are the
+// canonical defaults (the virtual-time bench calibrates its own copy in
+// `simnet::DynamicSimConfig::paper_epoch`).
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        Self {
+            ema_alpha: 0.5,
+            min_rel_delta: 0.10,
+            cooldown_steps: 10,
+            shift_cap: 32,
+            freshness_steps: 30,
+            min_share: 1,
+        }
+    }
+}
+
+/// One applied rebalance (for the metrics JSON and the bench report).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RebalanceEvent {
+    /// Global step at which the new allocation took effect.
+    pub step: usize,
+    pub old_scores: Vec<f64>,
+    pub new_scores: Vec<f64>,
+    pub old_allocation: Vec<usize>,
+    pub new_allocation: Vec<usize>,
+    /// Human-readable trigger ("score-drift 23.1% >= 5.0%").
+    pub reason: String,
+}
+
+impl RebalanceEvent {
+    pub fn to_json(&self) -> Json {
+        let nums = |v: &[f64]| Json::arr(v.iter().map(|x| Json::num(*x)).collect());
+        let ints = |v: &[usize]| Json::arr(v.iter().map(|x| Json::num(*x as f64)).collect());
+        Json::obj(vec![
+            ("step", Json::num(self.step as f64)),
+            ("old_scores", nums(&self.old_scores)),
+            ("new_scores", nums(&self.new_scores)),
+            ("old_allocation", ints(&self.old_allocation)),
+            ("new_allocation", ints(&self.new_allocation)),
+            ("reason", Json::str(self.reason.clone())),
+        ])
+    }
+}
+
+/// EMA-smoothed, guard-gated runtime rebalancer.
+#[derive(Debug, Clone)]
+pub struct AdaptiveController {
+    cfg: ControllerConfig,
+    world: usize,
+    global_batch: usize,
+    /// Largest per-device batch (compiled bucket cap).
+    cap: usize,
+    /// Per-rank EMA of observed per-sample compute seconds.
+    ema: Vec<f64>,
+    /// Step of each rank's latest observation (freshness tracking).
+    last_obs: Vec<Option<usize>>,
+    scores: Vec<f64>,
+    allocation: Vec<usize>,
+    last_rebalance: Option<usize>,
+    /// Set while a shift-capped rebalance left the allocation short of its
+    /// target: the next window resumes the move even without fresh drift.
+    pending_move: bool,
+    events: Vec<RebalanceEvent>,
+}
+
+impl AdaptiveController {
+    /// Start from the offline-benchmark scores; errors if `global_batch`
+    /// cannot fit `world` devices at `cap`.
+    pub fn new(
+        cfg: ControllerConfig,
+        initial_scores: &[f64],
+        global_batch: usize,
+        cap: usize,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(!initial_scores.is_empty(), "controller needs at least one rank");
+        anyhow::ensure!(
+            cfg.ema_alpha > 0.0 && cfg.ema_alpha <= 1.0,
+            "ema_alpha must be in (0, 1], got {}",
+            cfg.ema_alpha
+        );
+        let allocation =
+            Self::target_allocation(initial_scores, global_batch, cap, cfg.min_share)?;
+        Ok(Self {
+            world: initial_scores.len(),
+            global_batch,
+            cap,
+            ema: vec![0.0; initial_scores.len()],
+            last_obs: vec![None; initial_scores.len()],
+            scores: initial_scores.to_vec(),
+            allocation,
+            last_rebalance: None,
+            pending_move: false,
+            events: Vec::new(),
+            cfg,
+        })
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// The scores currently applied (updated only when a rebalance lands).
+    pub fn scores(&self) -> &[f64] {
+        &self.scores
+    }
+
+    /// The allocation currently applied.
+    pub fn allocation(&self) -> &[usize] {
+        &self.allocation
+    }
+
+    pub fn events(&self) -> &[RebalanceEvent] {
+        &self.events
+    }
+
+    pub fn take_events(&mut self) -> Vec<RebalanceEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Feed one per-sample compute-time observation for `rank` at `step`.
+    /// Non-finite or non-positive observations are dropped.
+    pub fn record(&mut self, rank: usize, step: usize, per_sample_s: f64) {
+        assert!(rank < self.world, "rank {rank} out of range");
+        if !per_sample_s.is_finite() || per_sample_s <= 0.0 {
+            return;
+        }
+        // A fresh observation after a long silence must not be blended
+        // into the stale history — reset the EMA instead, so stale data
+        // can never leak into a rescore through the smoothing.
+        let stale = match self.last_obs[rank] {
+            Some(last) => step.saturating_sub(last) > self.cfg.freshness_steps,
+            None => true,
+        };
+        let a = self.cfg.ema_alpha;
+        self.ema[rank] = if stale || self.ema[rank] == 0.0 {
+            per_sample_s
+        } else {
+            a * per_sample_s + (1.0 - a) * self.ema[rank]
+        };
+        self.last_obs[rank] = Some(step);
+    }
+
+    /// The ungated score→allocation map: proportional split, bucket-capped,
+    /// with every rank kept at `min_share` when the batch allows. Pure in
+    /// `scores` (permutation-equivariant), used by the property tests.
+    pub fn target_allocation(
+        scores: &[f64],
+        global_batch: usize,
+        cap: usize,
+        min_share: usize,
+    ) -> crate::Result<Vec<usize>> {
+        let mut alloc = cap_allocation(&proportional_allocation(scores, global_batch), cap)?;
+        let n = alloc.len();
+        if min_share > 0 && global_batch >= min_share * n {
+            // Raise starved ranks to min_share, taking from the largest
+            // shares. Terminates: while any rank is below min_share, some
+            // donor above it must exist (Σ = B ≥ n·min_share).
+            while let Some(lo) = (0..n).find(|&i| alloc[i] < min_share) {
+                let donor = (0..n)
+                    .filter(|&j| alloc[j] > min_share)
+                    .max_by(|&a, &b| alloc[a].cmp(&alloc[b]).then(b.cmp(&a)))
+                    .expect("donor exists while a rank is below min_share");
+                alloc[lo] += 1;
+                alloc[donor] -= 1;
+            }
+        }
+        Ok(alloc)
+    }
+
+    /// Evaluate the guards at `step`; apply and record a rebalance if they
+    /// all pass. Returns the event when one landed.
+    pub fn maybe_rebalance(&mut self, step: usize) -> crate::Result<Option<&RebalanceEvent>> {
+        // Guard 1: cooldown.
+        if let Some(last) = self.last_rebalance {
+            if step.saturating_sub(last) < self.cfg.cooldown_steps {
+                return Ok(None);
+            }
+        }
+        // Guard 2: freshness — every rank must have a recent observation.
+        // (The old inline adaptation let a rank's entry persist across
+        // windows forever, silently rescoring on stale data.)
+        for obs in &self.last_obs {
+            match obs {
+                Some(s) if step.saturating_sub(*s) <= self.cfg.freshness_steps => {}
+                _ => return Ok(None),
+            }
+        }
+        let new_scores = Profiler::scores_from_times(&self.ema);
+        // Guard 3: hysteresis on score drift — unless a shift-capped move
+        // is still pending, in which case we keep walking to its target.
+        let max_delta = self
+            .scores
+            .iter()
+            .zip(&new_scores)
+            .map(|(o, n)| (n - o).abs() / o.abs().max(1e-12))
+            .fold(0.0, f64::max);
+        let drifted = max_delta >= self.cfg.min_rel_delta;
+        if !drifted && !self.pending_move {
+            return Ok(None);
+        }
+        let target =
+            Self::target_allocation(&new_scores, self.global_batch, self.cap, self.cfg.min_share)?;
+        // Guard 4: bounded per-rank shift.
+        let new_alloc = clamp_shift(&self.allocation, &target, self.cfg.shift_cap, self.cap);
+        if new_alloc == self.allocation {
+            self.pending_move = false;
+            return Ok(None);
+        }
+        self.events.push(RebalanceEvent {
+            step,
+            old_scores: self.scores.clone(),
+            new_scores: new_scores.clone(),
+            old_allocation: self.allocation.clone(),
+            new_allocation: new_alloc.clone(),
+            reason: if drifted {
+                format!(
+                    "score-drift {:.1}% >= {:.1}%",
+                    max_delta * 100.0,
+                    self.cfg.min_rel_delta * 100.0
+                )
+            } else {
+                "resume shift-capped move".to_string()
+            },
+        });
+        self.pending_move = new_alloc != target;
+        self.scores = new_scores;
+        self.allocation = new_alloc;
+        self.last_rebalance = Some(step);
+        Ok(self.events.last())
+    }
+}
+
+/// Move `current` toward `target` with each rank's change bounded by
+/// `shift_cap` samples, preserving the total and the per-rank `cap`.
+///
+/// Feasibility: `current` itself lies inside every clamp window, so the
+/// deterministic repair loops can always restore the total.
+fn clamp_shift(current: &[usize], target: &[usize], shift_cap: usize, cap: usize) -> Vec<usize> {
+    if shift_cap == 0 {
+        return target.to_vec();
+    }
+    let lo: Vec<usize> = current.iter().map(|&c| c.saturating_sub(shift_cap)).collect();
+    let hi: Vec<usize> = current.iter().map(|&c| (c + shift_cap).min(cap)).collect();
+    let mut out: Vec<usize> = target
+        .iter()
+        .zip(lo.iter().zip(&hi))
+        .map(|(&t, (&l, &h))| t.clamp(l, h))
+        .collect();
+    let total: usize = current.iter().sum();
+    let mut sum: usize = out.iter().sum();
+    // Repair toward the target: give to the rank furthest below its
+    // target (ties → lowest index), take from the rank furthest above.
+    while sum < total {
+        let Some(i) = (0..out.len())
+            .filter(|&i| out[i] < hi[i])
+            .max_by_key(|&i| (target[i] as i64 - out[i] as i64, std::cmp::Reverse(i)))
+        else {
+            break;
+        };
+        out[i] += 1;
+        sum += 1;
+    }
+    while sum > total {
+        let Some(i) = (0..out.len())
+            .filter(|&i| out[i] > lo[i])
+            .max_by_key(|&i| (out[i] as i64 - target[i] as i64, std::cmp::Reverse(i)))
+        else {
+            break;
+        };
+        out[i] -= 1;
+        sum -= 1;
+    }
+    debug_assert_eq!(out.iter().sum::<usize>(), total);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_default;
+    use crate::util::Rng;
+
+    fn quick_cfg() -> ControllerConfig {
+        ControllerConfig {
+            ema_alpha: 1.0, // no smoothing: tests control the signal exactly
+            min_rel_delta: 0.05,
+            cooldown_steps: 10,
+            shift_cap: 0,
+            freshness_steps: 5,
+            min_share: 1,
+        }
+    }
+
+    /// Record one observation per rank at `step`.
+    fn observe(ctl: &mut AdaptiveController, step: usize, per_sample: &[f64]) {
+        for (r, &t) in per_sample.iter().enumerate() {
+            ctl.record(r, step, t);
+        }
+    }
+
+    #[test]
+    fn initial_allocation_is_proportional() {
+        let ctl = AdaptiveController::new(quick_cfg(), &[0.5, 1.0], 30, 128).unwrap();
+        assert_eq!(ctl.allocation(), &[10, 20]);
+        assert!(ctl.events().is_empty());
+    }
+
+    #[test]
+    fn rebalance_follows_measured_drift() {
+        let mut ctl = AdaptiveController::new(quick_cfg(), &[1.0, 1.0], 100, 128).unwrap();
+        assert_eq!(ctl.allocation(), &[50, 50]);
+        // Rank 0 measures 3x slower per sample.
+        observe(&mut ctl, 4, &[0.3e-3, 0.1e-3]);
+        let ev = ctl.maybe_rebalance(4).unwrap().cloned().expect("should rebalance");
+        assert_eq!(ev.new_allocation, vec![25, 75]);
+        assert_eq!(ev.old_allocation, vec![50, 50]);
+        assert_eq!(ctl.allocation(), &[25, 75]);
+        assert!((ctl.scores()[0] - 1.0 / 3.0).abs() < 1e-9, "{:?}", ctl.scores());
+        assert!(ev.reason.contains("score-drift"));
+    }
+
+    #[test]
+    fn cooldown_blocks_back_to_back_rebalances() {
+        let mut ctl = AdaptiveController::new(quick_cfg(), &[1.0, 1.0], 100, 128).unwrap();
+        observe(&mut ctl, 4, &[0.3e-3, 0.1e-3]);
+        assert!(ctl.maybe_rebalance(4).unwrap().is_some());
+        // Strong reverse drift immediately after: still inside cooldown.
+        observe(&mut ctl, 8, &[0.1e-3, 0.3e-3]);
+        assert!(ctl.maybe_rebalance(8).unwrap().is_none(), "cooldown must gate");
+        // After the cooldown it lands.
+        observe(&mut ctl, 14, &[0.1e-3, 0.3e-3]);
+        assert!(ctl.maybe_rebalance(14).unwrap().is_some());
+        assert_eq!(ctl.events().len(), 2);
+    }
+
+    #[test]
+    fn small_drift_is_hysteresis_filtered() {
+        let mut ctl = AdaptiveController::new(quick_cfg(), &[1.0, 1.0], 100, 128).unwrap();
+        // 2% drift < 5% threshold.
+        observe(&mut ctl, 4, &[0.102e-3, 0.1e-3]);
+        assert!(ctl.maybe_rebalance(4).unwrap().is_none());
+        assert_eq!(ctl.allocation(), &[50, 50]);
+    }
+
+    #[test]
+    fn shift_cap_bounds_each_rebalance() {
+        let cfg = ControllerConfig {
+            shift_cap: 8,
+            ..quick_cfg()
+        };
+        let mut ctl = AdaptiveController::new(cfg, &[1.0, 1.0], 100, 128).unwrap();
+        observe(&mut ctl, 4, &[0.5e-3, 0.1e-3]); // target would be [17, 83]
+        let ev = ctl.maybe_rebalance(4).unwrap().cloned().unwrap();
+        assert_eq!(ev.new_allocation, vec![42, 58], "move clamped to ±8");
+        assert_eq!(ev.new_allocation.iter().sum::<usize>(), 100);
+        // The clamped move resumes after the cooldown even though the
+        // applied scores already match the measurement (no fresh drift).
+        observe(&mut ctl, 14, &[0.5e-3, 0.1e-3]);
+        let ev2 = ctl.maybe_rebalance(14).unwrap().cloned().unwrap();
+        assert_eq!(ev2.new_allocation, vec![34, 66]);
+        assert!(ev2.reason.contains("resume"));
+        // Walks all the way to the proportional target [17, 83], then holds.
+        for w in 2..10 {
+            observe(&mut ctl, 4 + 10 * w, &[0.5e-3, 0.1e-3]);
+            ctl.maybe_rebalance(4 + 10 * w).unwrap();
+        }
+        assert_eq!(ctl.allocation(), &[17, 83]);
+        let settled = ctl.events().len();
+        observe(&mut ctl, 104, &[0.5e-3, 0.1e-3]);
+        assert!(ctl.maybe_rebalance(104).unwrap().is_none(), "must hold at target");
+        assert_eq!(ctl.events().len(), settled);
+    }
+
+    #[test]
+    fn stale_rank_blocks_rescoring_regression() {
+        // Regression for the stale-timing hole: the old inline adaptation
+        // kept per-rank entries forever, so a rank that skipped a window
+        // was rescored on stale data. The controller must refuse instead.
+        let mut ctl = AdaptiveController::new(quick_cfg(), &[1.0, 1.0], 100, 128).unwrap();
+        observe(&mut ctl, 2, &[0.1e-3, 0.1e-3]);
+        // Only rank 0 keeps reporting; rank 1's entry ages out
+        // (freshness_steps = 5).
+        ctl.record(0, 20, 0.4e-3);
+        assert!(
+            ctl.maybe_rebalance(20).unwrap().is_none(),
+            "stale rank-1 data must not be rescored"
+        );
+        assert_eq!(ctl.allocation(), &[50, 50]);
+        // Once rank 1 reports again, the same drift lands.
+        ctl.record(1, 24, 0.1e-3);
+        ctl.record(0, 24, 0.4e-3);
+        assert!(ctl.maybe_rebalance(24).unwrap().is_some());
+    }
+
+    #[test]
+    fn stale_history_is_reset_not_blended() {
+        // With real smoothing (α = 0.5), an observation arriving after a
+        // long silence must replace the stale EMA, not average with it —
+        // otherwise stale data would leak into the rescore through the
+        // smoothing even though the freshness guard passed.
+        let cfg = ControllerConfig {
+            ema_alpha: 0.5,
+            ..quick_cfg()
+        };
+        let mut ctl = AdaptiveController::new(cfg, &[1.0, 1.0], 100, 128).unwrap();
+        observe(&mut ctl, 2, &[0.1e-3, 0.1e-3]);
+        // 30 silent steps (> freshness 5), then both ranks report again:
+        // rank 0 now runs 4x slower.
+        observe(&mut ctl, 32, &[0.4e-3, 0.1e-3]);
+        let ev = ctl.maybe_rebalance(32).unwrap().cloned().expect("rebalance");
+        // Blending would give ema0 = 0.25e-3 (score 0.4); the reset gives
+        // ema0 = 0.4e-3 (score 0.25) — the allocation must reflect the
+        // fresh measurement alone.
+        assert_eq!(ev.new_allocation, vec![20, 80], "{:?}", ctl.scores());
+    }
+
+    #[test]
+    fn no_observations_never_rebalances() {
+        let mut ctl = AdaptiveController::new(quick_cfg(), &[0.7, 1.0], 100, 128).unwrap();
+        for step in 0..50 {
+            assert!(ctl.maybe_rebalance(step).unwrap().is_none());
+        }
+        assert!(ctl.events().is_empty());
+    }
+
+    #[test]
+    fn min_share_keeps_slow_rank_observable() {
+        let alloc = AdaptiveController::target_allocation(&[0.001, 1.0, 1.0], 90, 64, 1).unwrap();
+        assert_eq!(alloc.iter().sum::<usize>(), 90);
+        assert!(alloc[0] >= 1, "starved rank must keep one sample: {alloc:?}");
+    }
+
+    #[test]
+    fn clamp_shift_noop_and_exact_cases() {
+        assert_eq!(clamp_shift(&[50, 50], &[30, 70], 0, 128), vec![30, 70]);
+        assert_eq!(clamp_shift(&[50, 50], &[30, 70], 5, 128), vec![45, 55]);
+        assert_eq!(clamp_shift(&[50, 50], &[50, 50], 5, 128), vec![50, 50]);
+        // Cap binds the upward window.
+        assert_eq!(clamp_shift(&[120, 8], &[60, 68], 16, 128), vec![104, 24]);
+    }
+
+    // ------------------------------------------------------------------
+    // properties
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn prop_emitted_allocations_sum_and_respect_cap() {
+        check_default(
+            "controller-sum-cap",
+            |rng| {
+                let n = 2 + rng.below(6);
+                let batch = 32 + rng.below(480);
+                let cap = crate::util::cdiv(batch, n) + 1 + rng.below(96);
+                let scores: Vec<f64> = (0..n).map(|_| 0.1 + rng.next_f64()).collect();
+                let windows: Vec<Vec<f64>> = (0..6)
+                    .map(|_| (0..n).map(|_| 1e-4 * (0.2 + rng.next_f64())).collect())
+                    .collect();
+                let shift_cap = rng.below(3) * (4 + rng.below(28));
+                (scores, batch, cap, shift_cap, windows)
+            },
+            |(scores, batch, cap, shift_cap, windows)| {
+                let cfg = ControllerConfig {
+                    ema_alpha: 0.5,
+                    min_rel_delta: 0.02,
+                    cooldown_steps: 1,
+                    shift_cap: *shift_cap,
+                    freshness_steps: 10,
+                    min_share: 1,
+                };
+                let mut ctl = AdaptiveController::new(cfg, scores, *batch, *cap)
+                    .map_err(|e| e.to_string())?;
+                for (w, times) in windows.iter().enumerate() {
+                    let step = (w + 1) * 5;
+                    for (r, &t) in times.iter().enumerate() {
+                        ctl.record(r, step, t);
+                    }
+                    ctl.maybe_rebalance(step).map_err(|e| e.to_string())?;
+                    let alloc = ctl.allocation();
+                    if alloc.iter().sum::<usize>() != *batch {
+                        return Err(format!("sum {} != {batch}", alloc.iter().sum::<usize>()));
+                    }
+                    if alloc.iter().any(|&b| b > *cap) {
+                        return Err(format!("cap {cap} violated: {alloc:?}"));
+                    }
+                }
+                for ev in ctl.events() {
+                    let max_shift = ev
+                        .old_allocation
+                        .iter()
+                        .zip(&ev.new_allocation)
+                        .map(|(&o, &n)| o.abs_diff(n))
+                        .max()
+                        .unwrap_or(0);
+                    if *shift_cap > 0 && max_shift > *shift_cap {
+                        return Err(format!("shift {max_shift} > cap {shift_cap}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_target_allocation_is_permutation_equivariant() {
+        check_default(
+            "controller-permutation",
+            |rng| {
+                let n = 2 + rng.below(6);
+                let batch = 32 + rng.below(480);
+                let tight_cap = crate::util::cdiv(batch, n) + 1 + rng.below(96);
+                // Continuous random scores: exact remainder ties (the only
+                // source of order dependence in the proportional map) have
+                // measure zero.
+                let scores: Vec<f64> = (0..n).map(|_| 0.1 + rng.next_f64()).collect();
+                let mut perm: Vec<usize> = (0..n).collect();
+                let mut prng = Rng::new(rng.next_u64());
+                prng.shuffle(&mut perm);
+                (scores, batch, tight_cap, perm)
+            },
+            |(scores, batch, tight_cap, perm)| {
+                let permuted_scores: Vec<f64> = perm.iter().map(|&i| scores[i]).collect();
+                // Exact equivariance for the proportional map (cap and
+                // min_share inactive).
+                let base = AdaptiveController::target_allocation(scores, *batch, *batch, 0)
+                    .map_err(|e| e.to_string())?;
+                let permuted =
+                    AdaptiveController::target_allocation(&permuted_scores, *batch, *batch, 0)
+                        .map_err(|e| e.to_string())?;
+                let expect: Vec<usize> = perm.iter().map(|&i| base[i]).collect();
+                if permuted != expect {
+                    return Err(format!(
+                        "perm {perm:?}: got {permuted:?}, want {expect:?} (base {base:?})"
+                    ));
+                }
+                // Cap clamping and min_share repair break exact ties by
+                // rank index, so there the guarantee is multiset-level:
+                // the same shares get handed out, to equivalently-scored
+                // ranks.
+                let mut a =
+                    AdaptiveController::target_allocation(scores, *batch, *tight_cap, 1)
+                        .map_err(|e| e.to_string())?;
+                let mut b = AdaptiveController::target_allocation(
+                    &permuted_scores,
+                    *batch,
+                    *tight_cap,
+                    1,
+                )
+                .map_err(|e| e.to_string())?;
+                a.sort_unstable();
+                b.sort_unstable();
+                if a != b {
+                    return Err(format!("capped multisets differ: {a:?} vs {b:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

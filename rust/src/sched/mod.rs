@@ -17,13 +17,21 @@
 //!
 //! [`strategy::Strategy`] also provides the Fig-3 baselines: naive equal
 //! split (A) and a fixed wrong-way ratio (C).
+//!
+//! At runtime, [`controller::AdaptiveController`] closes the loop: it
+//! EMA-smooths measured per-rank step times and applies guarded
+//! rebalances (cooldown, hysteresis, shift cap, per-entry freshness) so
+//! the allocation tracks load drift without thrashing — the paper's
+//! "dynamically balances tasks based on real-time performance".
 
 pub mod allocation;
+pub mod controller;
 pub mod profiler;
 pub mod sampler;
 pub mod strategy;
 
 pub use allocation::{cap_allocation, proportional_allocation};
+pub use controller::{AdaptiveController, ControllerConfig, RebalanceEvent};
 pub use profiler::Profiler;
 pub use sampler::KaitianSampler;
 pub use strategy::Strategy;

@@ -6,6 +6,13 @@
 //! figure-ready training-time totals plus per-device utilization
 //! timelines. Real-mode spot checks (examples/) validate that the
 //! simulated orderings match reality on shortened runs.
+//!
+//! [`dynamic`] extends this to time-varying loads: per-step perturbed
+//! compute with the guarded rebalancing controller in the loop.
+
+pub mod dynamic;
+
+pub use dynamic::{simulate_dynamic, DynamicSimConfig, DynamicSimReport};
 
 use crate::device::{parse_cluster, DeviceSpec};
 use crate::group::GroupMode;

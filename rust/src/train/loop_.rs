@@ -7,11 +7,11 @@ use anyhow::Context;
 
 use crate::data::{image_batch, token_batch, SynthCifar, SynthCorpus};
 use crate::ddp::DdpEngine;
-use crate::device::{cluster_name, parse_cluster, DeviceSpec, SpeedModel};
+use crate::device::{cluster_name, parse_cluster, DeviceSpec, Scenario, SpeedModel};
 use crate::group::{build_cluster, ProcessGroup};
 use crate::metrics::{Accumulator, StepMetrics, TrainReport};
 use crate::runtime::{BatchData, Engine, ModelPrograms};
-use crate::sched::{KaitianSampler, Profiler};
+use crate::sched::{AdaptiveController, KaitianSampler, Profiler};
 use crate::Result;
 
 use super::options::TrainOptions;
@@ -96,11 +96,16 @@ impl TaskData {
 /// Shared mutable state between worker threads.
 struct Shared {
     scores: Mutex<Vec<f64>>,
+    /// The allocation currently in force (written by rank 0 after
+    /// profiling and at every applied rebalance).
+    allocation: Mutex<Vec<usize>>,
     /// Real-seconds per modeled-second (max across ranks), calibrated in
     /// the profiling phase; drives the model-paced throttle.
     pace: Mutex<f64>,
-    /// EWMA per-sample compute times published for online adaptation.
-    adapt_times: Mutex<Vec<f64>>,
+    /// Guarded runtime rebalancer (rank 0 initializes it after the
+    /// profiling phase when `online_adapt` is on; workers feed it
+    /// per-sample timings every step).
+    controller: Mutex<Option<AdaptiveController>>,
     step_losses: Mutex<Vec<f64>>,
     epoch_losses: Mutex<Vec<f64>>,
     epoch_accuracy: Mutex<Vec<f64>>,
@@ -109,12 +114,28 @@ struct Shared {
 
 /// Run a full training job; blocks until done.
 pub fn train(engine: Arc<Engine>, opts: &TrainOptions) -> Result<TrainReport> {
-    let devices = parse_cluster(&opts.cluster)?;
+    let mut devices = parse_cluster(&opts.cluster)?;
+    // Install runtime load perturbations (dynamic-load scenarios); the
+    // throttle consults each device's profile per step.
+    Scenario::parse(&opts.scenario)?.apply(&mut devices)?;
+    let devices = devices;
     let world = devices.len();
     let handles = build_cluster(&devices, opts.relay, opts.group_mode)?;
     let task = Arc::new(TaskData::build(&engine, opts)?);
     let speed_model = SpeedModel::paper_default();
 
+    anyhow::ensure!(
+        !opts.online_adapt || opts.adapt_every > 0,
+        "online_adapt requires adapt_every > 0"
+    );
+    // Validate controller knobs up front, on the coordinating thread:
+    // inside the workers only rank 0 constructs the controller, and a
+    // rank-0-only failure in front of a barrier would deadlock the rest.
+    anyhow::ensure!(
+        !opts.online_adapt || (opts.adapt_ema_alpha > 0.0 && opts.adapt_ema_alpha <= 1.0),
+        "adapt_ema_alpha must be in (0, 1], got {}",
+        opts.adapt_ema_alpha
+    );
     let sampler = KaitianSampler::new(opts.dataset_len, opts.global_batch, opts.seed);
     let steps_per_epoch = opts
         .steps_per_epoch
@@ -124,8 +145,9 @@ pub fn train(engine: Arc<Engine>, opts: &TrainOptions) -> Result<TrainReport> {
 
     let shared = Arc::new(Shared {
         scores: Mutex::new(vec![1.0; world]),
+        allocation: Mutex::new(Vec::new()),
         pace: Mutex::new(0.0),
-        adapt_times: Mutex::new(vec![0.0; world]),
+        controller: Mutex::new(None),
         step_losses: Mutex::new(Vec::new()),
         epoch_losses: Mutex::new(Vec::new()),
         epoch_accuracy: Mutex::new(Vec::new()),
@@ -166,17 +188,17 @@ pub fn train(engine: Arc<Engine>, opts: &TrainOptions) -> Result<TrainReport> {
     let wall_s = t_start.elapsed().as_secs_f64();
 
     let scores = shared.scores.lock().unwrap().clone();
-    // Report the allocation the workers actually used (bucket-capped).
-    let max_bucket = *engine
-        .manifest()
-        .program(&opts.preset)?
-        .buckets
-        .last()
-        .expect("no buckets");
-    let allocation = crate::sched::cap_allocation(
-        &opts.strategy.allocate(&scores, opts.global_batch),
-        max_bucket,
-    )?;
+    // Report the allocation actually in force at the end of the run
+    // (rank 0 keeps `shared.allocation` current through rebalances).
+    let allocation = shared.allocation.lock().unwrap().clone();
+    let rebalance_events = shared
+        .controller
+        .lock()
+        .unwrap()
+        .as_mut()
+        .map(|c| c.take_events())
+        .unwrap_or_default();
+    let utilization = TrainReport::utilization_from(&accs);
     let epoch_losses = shared.epoch_losses.lock().unwrap().clone();
     let epoch_accuracy = shared.epoch_accuracy.lock().unwrap().clone();
     let step_losses = shared.step_losses.lock().unwrap().clone();
@@ -195,6 +217,8 @@ pub fn train(engine: Arc<Engine>, opts: &TrainOptions) -> Result<TrainReport> {
         epoch_accuracy,
         step_losses,
         per_rank: accs,
+        rebalance_events,
+        utilization,
     })
 }
 
@@ -295,23 +319,45 @@ fn worker(
     }
     let scores = shared.scores.lock().unwrap().clone();
 
+    // --- allocation + controller hand-off --------------------------------
+    // Every rank validates feasibility on identical deterministic inputs
+    // (so an infeasible batch errors on all ranks instead of deadlocking
+    // a barrier), then rank 0 publishes the canonical state. Allocations
+    // are clamped to the largest compiled batch bucket, with excess
+    // redistributed to devices with headroom.
+    let max_bucket = *progs.buckets().last().expect("no buckets");
+    let alloc0 = crate::sched::cap_allocation(
+        &opts.strategy.allocate(&scores, opts.global_batch),
+        max_bucket,
+    )?;
+    // The controller only drives `Strategy::Adaptive`; other strategies
+    // keep their deliberate (equal / fixed) split.
+    let online_adapt =
+        opts.online_adapt && matches!(opts.strategy, crate::sched::Strategy::Adaptive);
+    if rank == 0 {
+        if online_adapt {
+            let ctl = AdaptiveController::new(
+                opts.controller_config(),
+                &scores,
+                opts.global_batch,
+                max_bucket,
+            )?;
+            *shared.allocation.lock().unwrap() = ctl.allocation().to_vec();
+            *shared.controller.lock().unwrap() = Some(ctl);
+        } else {
+            *shared.allocation.lock().unwrap() = alloc0;
+        }
+    }
+    shared.barrier.wait();
+
     // --- training loop ----------------------------------------------------
     let mut acc = Accumulator::default();
     let hyper_scale = 1.0 / opts.global_batch as f32;
-    let max_bucket = *progs.buckets().last().expect("no buckets");
     let mut scores = scores;
-    // EWMA of this rank's measured per-sample compute seconds (online
-    // adaptation signal; paper §V future work).
-    let mut ewma_per_sample = 0.0_f64;
+    let mut allocation = shared.allocation.lock().unwrap().clone();
     let mut global_step = 0_usize;
     for epoch in 0..opts.epochs {
         let lr = schedule.lr_at(epoch);
-        // Clamp to the largest compiled batch bucket (excess is
-        // redistributed to devices with headroom).
-        let mut allocation = crate::sched::cap_allocation(
-            &opts.strategy.allocate(&scores, opts.global_batch),
-            max_bucket,
-        )?;
         let mut epoch_loss_num = 0.0_f64;
         let mut epoch_loss_den = 0.0_f64;
 
@@ -337,9 +383,13 @@ fn worker(
             let measured = t0.elapsed().as_secs_f64();
             if opts.throttle && !my_indices.is_empty() {
                 // Stretch compute to the modeled device time for the
-                // *real* batch share (machine-independent heterogeneity).
-                let target =
-                    speed_model.step_time(device.dtype, my_indices.len()) * pace;
+                // *real* batch share (machine-independent heterogeneity),
+                // scaled by the rank's load perturbation at this step.
+                let target = speed_model.step_time_loaded(
+                    device,
+                    my_indices.len(),
+                    global_step,
+                ) * pace;
                 if target > measured {
                     std::thread::sleep(std::time::Duration::from_secs_f64(
                         target - measured,
@@ -347,17 +397,6 @@ fn worker(
                 }
             }
             m.compute_s = t0.elapsed().as_secs_f64();
-            if !my_indices.is_empty() {
-                // Normalize by the *bucket*, not the real share: padded
-                // samples cost real compute, so per-bucket-sample time is
-                // the device's true processing rate.
-                let per_sample = m.compute_s / m.bucket.max(1) as f64;
-                ewma_per_sample = if ewma_per_sample == 0.0 {
-                    per_sample
-                } else {
-                    0.5 * ewma_per_sample + 0.5 * per_sample
-                };
-            }
 
             // Gradient aggregation through the process group, pipelined:
             // every bucket's all-reduce is issued immediately (the KaiTian
@@ -402,23 +441,52 @@ fn worker(
             acc.add(&m);
             global_step += 1;
 
-            // --- online adaptation (paper §V future work) --------------
-            if opts.online_adapt && global_step % opts.adapt_every == 0 {
-                shared.adapt_times.lock().unwrap()[rank] = ewma_per_sample;
-                shared.barrier.wait();
-                if rank == 0 {
-                    let times = shared.adapt_times.lock().unwrap().clone();
-                    if times.iter().all(|&t| t > 0.0) {
-                        let new_scores = Profiler::scores_from_times(&times);
-                        shared.scores.lock().unwrap().copy_from_slice(&new_scores);
-                    }
+            // --- guarded online adaptation (paper §III-C dynamic
+            // balancing): every step feeds the controller a fresh
+            // per-sample timing; at each adapt boundary rank 0 lets the
+            // controller decide (cooldown / hysteresis / shift-cap /
+            // freshness guards) and publishes any new allocation.
+            if online_adapt {
+                if !my_indices.is_empty() {
+                    // Normalization must match what produced the time:
+                    // throttled compute is stretched to the *share*-based
+                    // model time, so divide by the real share (bucket
+                    // normalization would see phantom drift whenever two
+                    // ranks land in different buckets); unthrottled real
+                    // compute pays for the padded bucket, so per-bucket-
+                    // sample time is the true processing rate.
+                    let denom = if opts.throttle { m.batch } else { m.bucket };
+                    let per_sample = m.compute_s / denom.max(1) as f64;
+                    shared
+                        .controller
+                        .lock()
+                        .unwrap()
+                        .as_mut()
+                        .expect("controller initialized before the loop")
+                        .record(rank, global_step, per_sample);
                 }
-                shared.barrier.wait();
-                scores = shared.scores.lock().unwrap().clone();
-                allocation = crate::sched::cap_allocation(
-                    &opts.strategy.allocate(&scores, opts.global_batch),
-                    max_bucket,
-                )?;
+                if global_step % opts.adapt_every == 0 {
+                    shared.barrier.wait();
+                    if rank == 0 {
+                        let mut guard = shared.controller.lock().unwrap();
+                        let ctl = guard.as_mut().expect("controller");
+                        let rebalanced = ctl
+                            .maybe_rebalance(global_step)
+                            .expect("feasibility was validated at controller init")
+                            .is_some();
+                        if rebalanced {
+                            shared.scores.lock().unwrap().copy_from_slice(ctl.scores());
+                            shared
+                                .allocation
+                                .lock()
+                                .unwrap()
+                                .copy_from_slice(ctl.allocation());
+                        }
+                    }
+                    shared.barrier.wait();
+                    scores = shared.scores.lock().unwrap().clone();
+                    allocation = shared.allocation.lock().unwrap().clone();
+                }
             }
         }
 

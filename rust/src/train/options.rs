@@ -1,7 +1,7 @@
 //! Training-run configuration.
 
 use crate::group::{GroupMode, RelayKind};
-use crate::sched::Strategy;
+use crate::sched::{ControllerConfig, Strategy};
 
 /// Everything a training run needs (parsed from config JSON / CLI).
 #[derive(Debug, Clone)]
@@ -48,13 +48,29 @@ pub struct TrainOptions {
     pub bucket_bytes: usize,
     /// Print a progress line every N steps (0 = silent).
     pub log_every: usize,
-    /// Online load adaptation (paper §V "Future Work"): every
-    /// `adapt_every` steps, refresh the per-device scores from an EWMA of
-    /// measured per-sample compute times and re-balance the allocation.
-    /// Only meaningful with `Strategy::Adaptive`.
+    /// Online load adaptation (paper §III-C dynamic balancing): every
+    /// `adapt_every` steps the guarded `sched::AdaptiveController`
+    /// re-evaluates EMA-smoothed measured step times and may re-balance
+    /// the allocation. Only meaningful with `Strategy::Adaptive`.
     pub online_adapt: bool,
-    /// Re-balancing period in steps (when `online_adapt`).
+    /// Controller evaluation period in steps (when `online_adapt`).
     pub adapt_every: usize,
+    /// EMA weight of a new per-sample timing observation.
+    pub adapt_ema_alpha: f64,
+    /// Hysteresis: max relative score drift needed to rebalance.
+    pub adapt_min_rel_delta: f64,
+    /// Minimum steps between applied rebalances.
+    pub adapt_cooldown: usize,
+    /// Max per-rank allocation change per rebalance (samples; 0 = off).
+    pub adapt_shift_cap: usize,
+    /// Staleness bound for per-rank observations, in steps
+    /// (0 = derive `3 * adapt_every`).
+    pub adapt_freshness: usize,
+    /// Runtime load-perturbation scenario: "none", a named preset
+    /// (step-change | thermal-drift | contention | spikes), or a per-rank
+    /// spec like "rank0=step:40:2.5;rank1=drift:0.01:2.0"
+    /// (see `device::Scenario::parse`).
+    pub scenario: String,
     /// Save a checkpoint (params + momentum + scores) here when training
     /// completes; resume with `resume_from`.
     pub checkpoint: Option<String>,
@@ -89,6 +105,15 @@ impl Default for TrainOptions {
             log_every: 0,
             online_adapt: false,
             adapt_every: 10,
+            adapt_ema_alpha: 0.5,
+            // Above the ~5% systematic gap between offline probe scores
+            // and per-share measured scores (t0 amortization), so a
+            // steady cluster never rebalances on model mismatch alone.
+            adapt_min_rel_delta: 0.10,
+            adapt_cooldown: 10,
+            adapt_shift_cap: 32,
+            adapt_freshness: 0,
+            scenario: "none".into(),
             checkpoint: None,
             resume_from: None,
         }
@@ -96,6 +121,22 @@ impl Default for TrainOptions {
 }
 
 impl TrainOptions {
+    /// The rebalancing-controller guards for this run.
+    pub fn controller_config(&self) -> ControllerConfig {
+        ControllerConfig {
+            ema_alpha: self.adapt_ema_alpha,
+            min_rel_delta: self.adapt_min_rel_delta,
+            cooldown_steps: self.adapt_cooldown,
+            shift_cap: self.adapt_shift_cap,
+            freshness_steps: if self.adapt_freshness > 0 {
+                self.adapt_freshness
+            } else {
+                3 * self.adapt_every.max(1)
+            },
+            min_share: 1,
+        }
+    }
+
     /// A configuration sized for fast tests (small preset, few steps).
     pub fn quick_test(cluster: &str) -> Self {
         Self {
@@ -135,5 +176,21 @@ mod tests {
         let o = TrainOptions::quick_test("1G+1M");
         assert!(o.dataset_len <= 1024);
         assert_eq!(o.steps_per_epoch, Some(4));
+    }
+
+    #[test]
+    fn controller_config_derives_freshness() {
+        let o = TrainOptions {
+            adapt_every: 7,
+            ..Default::default()
+        };
+        let cfg = o.controller_config();
+        assert_eq!(cfg.freshness_steps, 21, "3x the adapt period by default");
+        assert_eq!(cfg.cooldown_steps, o.adapt_cooldown);
+        let o = TrainOptions {
+            adapt_freshness: 50,
+            ..Default::default()
+        };
+        assert_eq!(o.controller_config().freshness_steps, 50);
     }
 }

@@ -1,0 +1,247 @@
+//! Convergence suite for the dynamic load-adaptive rebalancing subsystem
+//! (paper §III-C): deterministic virtual-time scenarios driving the real
+//! controller. Pure rust — no artifacts needed. CI also re-runs this
+//! suite under `--release`, the profile the adaptive bench uses.
+
+use kaitian::device::{LoadProfile, Scenario};
+use kaitian::perfmodel::PerfModel;
+use kaitian::sched::{KaitianSampler, Strategy};
+use kaitian::simnet::{simulate_dynamic, DynamicSimConfig, DynamicSimReport};
+use kaitian::util::prop::check;
+use kaitian::util::Rng;
+
+const STEPS: usize = 160;
+const CHANGE_AT: usize = 40;
+
+fn step_change_scenario(factor: f64) -> Scenario {
+    Scenario::new(
+        "step-change",
+        vec![(
+            0,
+            LoadProfile::StepChange {
+                at_step: CHANGE_AT,
+                factor,
+            },
+        )],
+    )
+}
+
+fn run(scenario: Scenario, strategy: Strategy, online: bool) -> DynamicSimReport {
+    let mut cfg = DynamicSimConfig::paper_epoch("2G+2M", scenario, online);
+    cfg.strategy = strategy;
+    cfg.steps = STEPS;
+    simulate_dynamic(&PerfModel::paper_default(), &cfg).expect("simulation")
+}
+
+/// First step from which the imbalance stays below `bound` to the end.
+fn first_stable_step(r: &DynamicSimReport, bound: f64) -> Option<usize> {
+    let mut stable_from = None;
+    for (s, &imb) in r.imbalance.iter().enumerate() {
+        if imb < bound {
+            stable_from.get_or_insert(s);
+        } else {
+            stable_from = None;
+        }
+    }
+    stable_from
+}
+
+#[test]
+fn step_change_adaptive_reconverges_naive_stays_imbalanced() {
+    let adaptive = run(step_change_scenario(2.5), Strategy::Adaptive, true);
+    // Strategy A ("naive" equal split) never reacts.
+    let naive = run(step_change_scenario(2.5), Strategy::Equal, false);
+
+    // The perturbation bites: right after the change the adaptive run is
+    // imbalanced too.
+    assert!(
+        adaptive.imbalance[CHANGE_AT] > 0.30,
+        "step change must disturb the split: {:.3}",
+        adaptive.imbalance[CHANGE_AT]
+    );
+    // ... but the controller re-converges to < 10% step-time imbalance
+    // within N = 60 steps, and stays there.
+    let stable = first_stable_step(&adaptive, 0.10)
+        .expect("adaptive run must re-converge before the end");
+    assert!(
+        stable <= CHANGE_AT + 60,
+        "re-convergence took too long: stable from step {stable}"
+    );
+    assert!(adaptive.tail_imbalance(20) < 0.10);
+    assert!(!adaptive.events.is_empty());
+
+    // The naive split stays imbalanced from the change to the end.
+    assert!(naive.events.is_empty());
+    assert!(
+        naive.imbalance[CHANGE_AT..].iter().all(|&i| i > 0.25),
+        "naive equal split must stay imbalanced"
+    );
+    assert!(
+        adaptive.total_s < naive.total_s,
+        "adaptive {:.3}s vs naive {:.3}s",
+        adaptive.total_s,
+        naive.total_s
+    );
+}
+
+#[test]
+fn frozen_adaptive_split_also_stays_imbalanced_after_the_change() {
+    // The offline-benchmark split (pre-controller behavior) is good until
+    // the perturbation, then permanently bad — the gap the runtime
+    // controller closes.
+    let frozen = run(step_change_scenario(2.5), Strategy::Adaptive, false);
+    assert!(frozen.events.is_empty());
+    assert!(frozen.imbalance[CHANGE_AT - 1] < 0.10, "good before the change");
+    assert!(
+        frozen.imbalance[STEPS - 1] > 0.30,
+        "frozen split cannot recover: {:.3}",
+        frozen.imbalance[STEPS - 1]
+    );
+}
+
+#[test]
+fn cooldown_guard_spaces_rebalances() {
+    let scenario = Scenario::named("thermal-drift").unwrap();
+    let cfg = DynamicSimConfig::paper_epoch("2G+2M", scenario, true);
+    let r = simulate_dynamic(&PerfModel::paper_default(), &cfg).expect("simulation");
+    assert!(
+        r.events.len() >= 2,
+        "drift must keep triggering rebalances: {} events",
+        r.events.len()
+    );
+    for pair in r.events.windows(2) {
+        assert!(
+            pair[1].step - pair[0].step >= cfg.controller.cooldown_steps,
+            "rebalances at steps {} and {} violate the cooldown {}",
+            pair[0].step,
+            pair[1].step,
+            cfg.controller.cooldown_steps
+        );
+    }
+}
+
+#[test]
+fn shift_cap_guard_bounds_every_move() {
+    let mut cfg = DynamicSimConfig::paper_epoch("2G+2M", step_change_scenario(2.5), true);
+    cfg.steps = STEPS;
+    cfg.controller.shift_cap = 8;
+    let r = simulate_dynamic(&PerfModel::paper_default(), &cfg).expect("simulation");
+    assert!(r.events.len() >= 2, "capped moves need several rebalances");
+    for ev in &r.events {
+        assert_eq!(ev.new_allocation.iter().sum::<usize>(), cfg.global_batch);
+        assert!(ev.new_allocation.iter().all(|&b| b <= cfg.cap));
+        let max_shift = ev
+            .old_allocation
+            .iter()
+            .zip(&ev.new_allocation)
+            .map(|(&o, &n)| o.abs_diff(n))
+            .max()
+            .unwrap();
+        assert!(
+            max_shift <= 8,
+            "step {}: allocation jumped by {max_shift} > cap 8",
+            ev.step
+        );
+    }
+    // The capped walk still gets there.
+    assert!(r.tail_imbalance(20) < 0.15, "{}", r.tail_imbalance(20));
+}
+
+#[test]
+fn rebalance_frequency_is_bounded_even_under_noise() {
+    let cfg = DynamicSimConfig::paper_epoch("2G+2M", Scenario::named("spikes").unwrap(), true);
+    let r = simulate_dynamic(&PerfModel::paper_default(), &cfg).expect("simulation");
+    let bound = 1 + cfg.steps / cfg.controller.cooldown_steps.max(1);
+    assert!(
+        r.events.len() <= bound,
+        "{} rebalances exceed the cooldown-implied bound {bound}",
+        r.events.len()
+    );
+}
+
+// ---------------------------------------------------------------------
+// Sampler correctness across mid-epoch reallocation
+// ---------------------------------------------------------------------
+
+#[test]
+fn mid_epoch_reallocation_preserves_sampler_correctness() {
+    let s = KaitianSampler::new(2048, 64, 9);
+    let before = vec![16, 16, 16, 16];
+    let after = vec![4, 12, 20, 28]; // a rebalance landed between steps 5 and 6
+    let step5 = s.step_indices(0, 5, &before);
+    let step6 = s.step_indices(0, 6, &after);
+
+    for (step, alloc) in [(&step5, &before), (&step6, &after)] {
+        let all: Vec<usize> = step.iter().flatten().copied().collect();
+        assert_eq!(all.len(), 64, "slices must cover exactly the global batch");
+        let mut dedup = all.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 64, "slices within a step must be disjoint");
+        let shares: Vec<usize> = step.iter().map(Vec::len).collect();
+        assert_eq!(&shares, alloc, "each rank gets exactly its share");
+    }
+
+    // Across the allocation change the steps still touch disjoint data.
+    let mut union: Vec<usize> = step5
+        .iter()
+        .chain(step6.iter())
+        .flatten()
+        .copied()
+        .collect();
+    assert_eq!(union.len(), 128);
+    union.sort_unstable();
+    union.dedup();
+    assert_eq!(union.len(), 128, "steps must not overlap across a rebalance");
+}
+
+#[test]
+fn prop_reallocating_every_step_still_covers_the_epoch_exactly() {
+    // Random allocation changes at *every* step of an epoch: the union of
+    // all per-rank slices must be exactly the dataset, with no index
+    // repeated — mid-epoch rebalancing can never corrupt sampling.
+    fn random_alloc(rng: &mut Rng, world: usize, batch: usize) -> Vec<usize> {
+        let mut cuts: Vec<usize> = (0..world - 1).map(|_| rng.below(batch + 1)).collect();
+        cuts.sort_unstable();
+        let mut alloc = Vec::with_capacity(world);
+        let mut prev = 0;
+        for c in cuts {
+            alloc.push(c - prev);
+            prev = c;
+        }
+        alloc.push(batch - prev);
+        alloc
+    }
+
+    check(
+        "sampler-realloc-coverage",
+        24,
+        |rng| {
+            let world = 2 + rng.below(4);
+            let batch = 8 + rng.below(57);
+            let steps = 3 + rng.below(6);
+            let allocs: Vec<Vec<usize>> = (0..steps)
+                .map(|_| random_alloc(rng, world, batch))
+                .collect();
+            (batch, allocs, rng.next_u64())
+        },
+        |(batch, allocs, seed)| {
+            let dataset = batch * allocs.len();
+            let s = KaitianSampler::new(dataset, *batch, *seed);
+            let mut seen = Vec::with_capacity(dataset);
+            for (step, alloc) in allocs.iter().enumerate() {
+                let per_rank = s.step_indices(0, step, alloc);
+                let flat: Vec<usize> = per_rank.iter().flatten().copied().collect();
+                if flat.len() != *batch {
+                    return Err(format!("step {step}: covered {} != B {batch}", flat.len()));
+                }
+                seen.extend(flat);
+            }
+            seen.sort_unstable();
+            if seen != (0..dataset).collect::<Vec<_>>() {
+                return Err("union of all steps is not the exact dataset".into());
+            }
+            Ok(())
+        },
+    );
+}
