@@ -1,0 +1,172 @@
+//! Bench: old copy path vs pooled zero-copy data plane.
+//!
+//! The pre-refactor payload path allocated a fresh vector at every hop
+//! (serialize, frame read, staging). The pooled path allocates once and
+//! recycles; this bench quantifies the difference with the new
+//! `CommStats::alloc_bytes` counter — pools disabled reproduces the old
+//! allocation behavior, pools enabled is the new plane — across message
+//! sizes, over the in-proc mesh (vendor-class path) and a TCP loopback
+//! pair (host-relay class path).
+//!
+//! Acceptance gate (ISSUE 3): at >= 1 MiB messages the pooled path must
+//! allocate >= 25% fewer bytes per all-reduce; wall-clock is reported
+//! alongside (expected no worse, not asserted — CI timing jitter).
+//!
+//! Run: `cargo bench --bench dataplane [-- --quick]`
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use kaitian::collectives::{Communicator, ReduceOp};
+use kaitian::comm::buf::{BufPool, FloatPool};
+use kaitian::metrics::MarkdownTable;
+use kaitian::transport::{InprocMesh, TcpMesh};
+use kaitian::util::json::Json;
+
+fn set_pools(enabled: bool) {
+    BufPool::global().set_enabled(enabled);
+    FloatPool::global().set_enabled(enabled);
+}
+
+/// Mean (alloc bytes, pool hits, copies) per op per rank and straggler
+/// wall seconds per op for `iters` all-reduces of `elems` f32s.
+fn measure(comms: &[Communicator], elems: usize, iters: usize) -> (f64, f64, f64, f64) {
+    let results: Vec<(u64, u64, u64, f64)> = std::thread::scope(|s| {
+        let hs: Vec<_> = comms
+            .iter()
+            .map(|c| {
+                s.spawn(move || {
+                    let mut buf: Vec<f32> =
+                        (0..elems).map(|i| (i % 31) as f32 + c.rank() as f32).collect();
+                    for _ in 0..2 {
+                        // Warmup (fills the pools when they are enabled).
+                        c.all_reduce(&mut buf, ReduceOp::Sum).unwrap();
+                    }
+                    let t0 = std::time::Instant::now();
+                    let (mut alloc, mut hits, mut copies) = (0_u64, 0_u64, 0_u64);
+                    for _ in 0..iters {
+                        let st = c.all_reduce(&mut buf, ReduceOp::Sum).unwrap();
+                        alloc += st.alloc_bytes;
+                        hits += st.pool_hits;
+                        copies += st.copies;
+                    }
+                    (alloc, hits, copies, t0.elapsed().as_secs_f64())
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let n = (comms.len() * iters) as f64;
+    let alloc = results.iter().map(|r| r.0).sum::<u64>() as f64 / n;
+    let hits = results.iter().map(|r| r.1).sum::<u64>() as f64 / n;
+    let copies = results.iter().map(|r| r.2).sum::<u64>() as f64 / n;
+    let wall = results.iter().map(|r| r.3).fold(0.0, f64::max) / iters as f64;
+    (alloc, hits, copies, wall)
+}
+
+fn inproc_comms(world: usize) -> Vec<Communicator> {
+    InprocMesh::new(world)
+        .into_iter()
+        .map(|e| Communicator::new(Arc::new(e)))
+        .collect()
+}
+
+fn tcp_comms(world: usize) -> kaitian::Result<Vec<Communicator>> {
+    Ok(TcpMesh::loopback(world)?
+        .into_iter()
+        .map(|e| Communicator::new(Arc::new(e)))
+        .collect())
+}
+
+fn main() -> kaitian::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 4 } else { 12 };
+
+    let mut table = MarkdownTable::new(&[
+        "mesh",
+        "size",
+        "copy alloc/op",
+        "pooled alloc/op",
+        "alloc reduction",
+        "copy wall (s/op)",
+        "pooled wall (s/op)",
+    ]);
+    let mut json = BTreeMap::new();
+
+    // (label, world, elems). 1 MiB+ rows are the acceptance-gated ones.
+    let cases: [(&str, usize, usize); 4] = [
+        ("inproc4", 4, 16 << 10),  // 64 KiB
+        ("inproc4", 4, 256 << 10), // 1 MiB
+        ("inproc4", 4, 1 << 20),   // 4 MiB
+        ("tcp2", 2, 256 << 10),    // 1 MiB over real sockets
+    ];
+
+    for (mesh, world, elems) in cases {
+        let comms = if mesh == "tcp2" {
+            tcp_comms(world)?
+        } else {
+            inproc_comms(world)
+        };
+        set_pools(false);
+        let (copy_alloc, _, copy_copies, copy_wall) = measure(&comms, elems, iters);
+        set_pools(true);
+        let (pool_alloc, pool_hits, pool_copies, pool_wall) = measure(&comms, elems, iters);
+        let reduction = if copy_alloc > 0.0 {
+            1.0 - pool_alloc / copy_alloc
+        } else {
+            0.0
+        };
+        let bytes = elems * 4;
+        table.row(vec![
+            mesh.to_string(),
+            kaitian::util::fmt_bytes(bytes),
+            kaitian::util::fmt_bytes(copy_alloc as usize),
+            kaitian::util::fmt_bytes(pool_alloc as usize),
+            format!("{:.1}%", reduction * 100.0),
+            kaitian::util::fmt_secs(copy_wall),
+            kaitian::util::fmt_secs(pool_wall),
+        ]);
+        json.insert(
+            format!("{mesh}_{bytes}"),
+            Json::obj(vec![
+                ("mesh", Json::str(mesh.to_string())),
+                ("bytes", Json::num(bytes as f64)),
+                ("copy_alloc_bytes_per_op", Json::num(copy_alloc)),
+                ("pooled_alloc_bytes_per_op", Json::num(pool_alloc)),
+                ("alloc_reduction", Json::num(reduction)),
+                ("copy_wall_s_per_op", Json::num(copy_wall)),
+                ("pooled_wall_s_per_op", Json::num(pool_wall)),
+                ("pooled_pool_hits_per_op", Json::num(pool_hits)),
+                ("copy_copies_per_op", Json::num(copy_copies)),
+                ("pooled_copies_per_op", Json::num(pool_copies)),
+            ]),
+        );
+        // Acceptance gate: >= 25% fewer allocated bytes per all-reduce on
+        // the pooled path at >= 1 MiB.
+        if bytes >= 1 << 20 {
+            assert!(
+                reduction >= 0.25,
+                "{mesh} {bytes}B: pooled path must cut alloc_bytes by >= 25% \
+                 (copy {copy_alloc:.0} -> pooled {pool_alloc:.0}, {:.1}%)",
+                reduction * 100.0
+            );
+        }
+    }
+
+    let pool_stats = BufPool::global().stats();
+    json.insert(
+        "buf_pool".to_string(),
+        Json::obj(vec![
+            ("alloc_bytes", Json::num(pool_stats.alloc_bytes as f64)),
+            ("pool_hits", Json::num(pool_stats.pool_hits as f64)),
+            ("pool_misses", Json::num(pool_stats.pool_misses as f64)),
+            ("recycled", Json::num(pool_stats.recycled as f64)),
+        ]),
+    );
+
+    println!("== data plane: copy path (pools off) vs pooled zero-copy ==\n");
+    println!("{}", table.render());
+    let path = kaitian::metrics::write_report("results", "dataplane", json)?;
+    println!("wrote {path}");
+    Ok(())
+}

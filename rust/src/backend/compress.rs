@@ -17,6 +17,7 @@
 use std::time::Instant;
 
 use crate::collectives::{ring, tree, CommStats, Communicator, ReduceOp, WorkHandle};
+use crate::comm::buf::FloatPool;
 use crate::Result;
 
 use super::CollectiveBackend;
@@ -134,8 +135,50 @@ impl Fp16Relay {
     }
 }
 
+/// Decode the two f16 halves packed in each f32 lane and fold them into
+/// `buf` (`first` overwrites instead of folding); the tail padding lane
+/// half (odd `buf` lengths) is ignored. The lanes were byte-copied from
+/// the LE wire format, so the low half of a lane's bit pattern is the
+/// earlier f16 on every platform.
+fn fold_f16_lanes(op: ReduceOp, first: bool, buf: &mut [f32], lanes: &[f32]) {
+    for (i, lane) in lanes.iter().enumerate() {
+        let bits = lane.to_bits();
+        let halves = [(bits & 0xFFFF) as u16, (bits >> 16) as u16];
+        for (j, half) in halves.into_iter().enumerate() {
+            let idx = i * 2 + j;
+            if idx >= buf.len() {
+                return;
+            }
+            let v = f16_bits_to_f32(half);
+            buf[idx] = if first { v } else { op.apply(buf[idx], v) };
+        }
+    }
+}
+
+/// Compress `buf` into pooled f32 lanes (f16 pairs on the wire),
+/// packing the halves directly into the lane bits — one fused pass, no
+/// intermediate byte vector, no untracked allocation.
+fn stage_to_lanes(buf: &[f32], staging: &mut CommStats) -> Result<Vec<f32>> {
+    let n_lanes = buf.len().div_ceil(2);
+    let (mut lanes, hit) = FloatPool::global().take_tracked(n_lanes);
+    staging.note_take(n_lanes * 4, hit);
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        let lo = f32_to_f16_bits(buf[i * 2]) as u32;
+        let hi = match buf.get(i * 2 + 1) {
+            Some(&x) => f32_to_f16_bits(x) as u32,
+            None => 0, // tail padding half (odd lengths)
+        };
+        *lane = f32::from_bits(lo | (hi << 16));
+    }
+    if !buf.is_empty() {
+        staging.copies += 1; // fused f32→f16 compress + lane pack
+    }
+    Ok(lanes)
+}
+
 /// The fp16 all-reduce body shared by the blocking-tagged and async
-/// paths: compress, all-gather the halves as f32 lanes, local f32 fold.
+/// paths: compress, all-gather the halves as f32 lanes, local fold
+/// decoded straight out of the gathered lanes.
 fn fp16_all_reduce(
     t: &dyn crate::transport::Transport,
     world: usize,
@@ -144,10 +187,10 @@ fn fp16_all_reduce(
     tag: u64,
 ) -> Result<CommStats> {
     let t0 = Instant::now();
-    let compressed = compress_f16(buf);
+    let mut staging = CommStats::default();
     // All-gather at byte level through the f32 API: reinterpret the
     // f16 pairs as f32 lanes (content-agnostic transport).
-    let lanes = crate::transport::bytes_to_f32s(&pad4(&compressed))?;
+    let lanes = stage_to_lanes(buf, &mut staging)?;
     let t_stage1 = t0.elapsed().as_secs_f64();
 
     let t1 = Instant::now();
@@ -155,22 +198,19 @@ fn fp16_all_reduce(
     stats.seconds = t1.elapsed().as_secs_f64();
     stats.op = "all_reduce";
     let per = lanes.len();
+    FloatPool::global().put(lanes);
 
     let t2 = Instant::now();
-    // Local reduction across every rank's contribution.
-    let mut first = true;
+    // Local reduction across every rank's contribution — no per-rank
+    // byte round-trip, no intermediate vectors.
     for r in 0..world {
-        let bytes = crate::transport::f32s_to_bytes(&gathered[r * per..(r + 1) * per]);
-        let vals = decompress_f16(&bytes[..buf.len() * 2])?;
-        if first {
-            buf.copy_from_slice(&vals);
-            first = false;
-        } else {
-            op.fold(buf, &vals);
-        }
+        fold_f16_lanes(op, r == 0, buf, &gathered[r * per..(r + 1) * per]);
     }
-    stats.staged_bytes += 2 * (buf.len() * 2) as u64; // f16 staging both ways
-    stats.stage_seconds += t_stage1 + t2.elapsed().as_secs_f64();
+    FloatPool::global().put(gathered);
+    staging.staged_bytes = 2 * (buf.len() * 2) as u64; // f16 staging both ways
+    staging.stage_seconds = t_stage1 + t2.elapsed().as_secs_f64();
+    stats.merge(&staging);
+    stats.inflight_hw_bytes = t.inflight_high_water();
     Ok(stats)
 }
 
@@ -182,19 +222,20 @@ fn fp16_broadcast(
     tag: u64,
 ) -> Result<CommStats> {
     let t0 = Instant::now();
-    let compressed = compress_f16(buf);
-    let mut lanes = crate::transport::bytes_to_f32s(&pad4(&compressed))?;
+    let mut staging = CommStats::default();
+    let mut lanes = stage_to_lanes(buf, &mut staging)?;
     let t_stage = t0.elapsed().as_secs_f64();
     let t1 = Instant::now();
     let mut stats = tree::broadcast(t, &mut lanes, root, tag)?;
     stats.seconds = t1.elapsed().as_secs_f64();
     stats.op = "broadcast";
     let t2 = Instant::now();
-    let bytes = crate::transport::f32s_to_bytes(&lanes);
-    let vals = decompress_f16(&bytes[..buf.len() * 2])?;
-    buf.copy_from_slice(&vals);
-    stats.staged_bytes += 2 * (buf.len() * 2) as u64;
-    stats.stage_seconds += t_stage + t2.elapsed().as_secs_f64();
+    fold_f16_lanes(ReduceOp::Sum, true, buf, &lanes); // first=true: pure decode
+    FloatPool::global().put(lanes);
+    staging.staged_bytes = 2 * (buf.len() * 2) as u64;
+    staging.stage_seconds = t_stage + t2.elapsed().as_secs_f64();
+    stats.merge(&staging);
+    stats.inflight_hw_bytes = t.inflight_high_water();
     Ok(stats)
 }
 
@@ -252,15 +293,6 @@ impl CollectiveBackend for Fp16Relay {
             Ok((buf, stats))
         })
     }
-}
-
-/// Pad a byte buffer to a multiple of 4 so it maps onto f32 lanes.
-fn pad4(bytes: &[u8]) -> Vec<u8> {
-    let mut out = bytes.to_vec();
-    while out.len() % 4 != 0 {
-        out.push(0);
-    }
-    out
 }
 
 #[cfg(test)]

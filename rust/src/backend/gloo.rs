@@ -9,15 +9,18 @@
 //! 2. move it between hosts via the general-purpose library (Gloo/TCP),
 //! 3. copy from host RAM into the target accelerator memory (H2D).
 //!
-//! Here the staging copies are *real* buffer copies into a distinct host
-//! buffer (honest extra memory traffic, measured and reported via
-//! `CommStats::staged_bytes`/`stage_seconds`), and the host hop runs over
-//! whatever transport the communicator was built on (TCP for the honest
-//! syscall path, in-proc for unit tests).
+//! The staging copies are *real* buffer copies into a distinct host
+//! buffer — honest extra memory traffic, measured and reported via
+//! `CommStats::staged_bytes`/`stage_seconds`, counting only bytes a copy
+//! actually moved. Host buffers come from the [`FloatPool`] (allocated
+//! once, reused every sync), and the host hop runs over whatever
+//! transport the communicator was built on (TCP for the honest syscall
+//! path, in-proc for unit tests).
 
 use std::time::Instant;
 
 use crate::collectives::{ring, tree, CommStats, Communicator, ReduceOp, WorkHandle};
+use crate::comm::buf::FloatPool;
 use crate::Result;
 
 use super::CollectiveBackend;
@@ -32,17 +35,27 @@ impl GlooHostRelay {
         Self { comm }
     }
 
-    /// Simulated D2H: copy the device buffer into a fresh host buffer.
-    fn d2h(buf: &[f32]) -> (Vec<f32>, f64) {
+    /// Simulated D2H: copy the device buffer into a pooled host buffer.
+    fn d2h(buf: &[f32], stats: &mut CommStats) -> (Vec<f32>, f64) {
         let t0 = Instant::now();
-        let host = buf.to_vec();
+        let (mut host, hit) = FloatPool::global().take_tracked(buf.len());
+        host.copy_from_slice(buf);
+        stats.note_take(buf.len() * 4, hit);
+        if !buf.is_empty() {
+            stats.copies += 1;
+        }
         (host, t0.elapsed().as_secs_f64())
     }
 
-    /// Simulated H2D: copy the host buffer back into device memory.
-    fn h2d(host: &[f32], buf: &mut [f32]) -> f64 {
+    /// Simulated H2D: copy the host buffer back into device memory and
+    /// recycle the host buffer.
+    fn h2d(host: Vec<f32>, buf: &mut [f32], stats: &mut CommStats) -> f64 {
         let t0 = Instant::now();
-        buf.copy_from_slice(host);
+        buf.copy_from_slice(&host);
+        FloatPool::global().put(host);
+        if !buf.is_empty() {
+            stats.copies += 1;
+        }
         t0.elapsed().as_secs_f64()
     }
 }
@@ -55,14 +68,17 @@ fn relay_all_reduce(
     op: ReduceOp,
     tag: u64,
 ) -> Result<CommStats> {
-    let (mut host, t_d2h) = GlooHostRelay::d2h(buf);
+    let mut staging = CommStats::default();
+    let (mut host, t_d2h) = GlooHostRelay::d2h(buf, &mut staging);
     let t0 = Instant::now();
     let mut stats = ring::ring_all_reduce(t, &mut host, op, tag)?;
     stats.seconds = t0.elapsed().as_secs_f64();
     stats.op = "all_reduce";
-    let t_h2d = GlooHostRelay::h2d(&host, buf);
-    stats.staged_bytes += 2 * (buf.len() * 4) as u64;
-    stats.stage_seconds += t_d2h + t_h2d;
+    let t_h2d = GlooHostRelay::h2d(host, buf, &mut staging);
+    staging.staged_bytes = 2 * (buf.len() * 4) as u64;
+    staging.stage_seconds = t_d2h + t_h2d;
+    stats.merge(&staging);
+    stats.inflight_hw_bytes = t.inflight_high_water();
     Ok(stats)
 }
 
@@ -73,14 +89,17 @@ fn relay_broadcast(
     root: usize,
     tag: u64,
 ) -> Result<CommStats> {
-    let (mut host, t_d2h) = GlooHostRelay::d2h(buf);
+    let mut staging = CommStats::default();
+    let (mut host, t_d2h) = GlooHostRelay::d2h(buf, &mut staging);
     let t0 = Instant::now();
     let mut stats = tree::broadcast(t, &mut host, root, tag)?;
     stats.seconds = t0.elapsed().as_secs_f64();
     stats.op = "broadcast";
-    let t_h2d = GlooHostRelay::h2d(&host, buf);
-    stats.staged_bytes += 2 * (buf.len() * 4) as u64;
-    stats.stage_seconds += t_d2h + t_h2d;
+    let t_h2d = GlooHostRelay::h2d(host, buf, &mut staging);
+    staging.staged_bytes = 2 * (buf.len() * 4) as u64;
+    staging.stage_seconds = t_d2h + t_h2d;
+    stats.merge(&staging);
+    stats.inflight_hw_bytes = t.inflight_high_water();
     Ok(stats)
 }
 
@@ -110,14 +129,16 @@ impl CollectiveBackend for GlooHostRelay {
     }
 
     fn all_gather_tagged(&self, send: &[f32], tag: u64) -> Result<(Vec<f32>, CommStats)> {
-        let (host, t_d2h) = Self::d2h(send);
-        let (gathered_host, mut stats) = self.comm.all_gather_tagged(&host, tag)?;
-        // H2D of the gathered result.
-        let t0 = Instant::now();
-        let out = gathered_host.clone();
-        let t_h2d = t0.elapsed().as_secs_f64();
-        stats.staged_bytes += ((send.len() + out.len()) * 4) as u64;
-        stats.stage_seconds += t_d2h + t_h2d;
+        // D2H-stage the contribution; the gathered result goes straight
+        // back to the caller (no phantom H2D copy — staged_bytes counts
+        // real copies only).
+        let mut staging = CommStats::default();
+        let (host, t_d2h) = Self::d2h(send, &mut staging);
+        let (out, mut stats) = self.comm.all_gather_tagged(&host, tag)?;
+        FloatPool::global().put(host);
+        staging.staged_bytes = (send.len() * 4) as u64;
+        staging.stage_seconds = t_d2h;
+        stats.merge(&staging);
         Ok((out, stats))
     }
 
@@ -179,6 +200,7 @@ mod tests {
             // 2 stages x 4000 bytes.
             assert_eq!(st.staged_bytes, 8000);
             assert!(st.stage_seconds >= 0.0);
+            assert!(st.copies >= 2, "D2H + H2D are real copies");
         }
     }
 
@@ -197,7 +219,11 @@ mod tests {
                     s.spawn(move || {
                         let mut buf: Vec<f32> =
                             (0..5000).map(|i| (i + b.rank()) as f32).collect();
-                        b.all_reduce(&mut buf, ReduceOp::Sum).unwrap();
+                        let st = b.all_reduce(&mut buf, ReduceOp::Sum).unwrap();
+                        assert!(
+                            st.inflight_hw_bytes > 0,
+                            "TCP path must report the writer-queue gauge"
+                        );
                         buf
                     })
                 })

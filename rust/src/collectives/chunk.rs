@@ -1,0 +1,246 @@
+//! Chunked point-to-point framing inside one collective's tag.
+//!
+//! `Communicator::reserve_tag` hands every collective op a tag with the
+//! low [`CHUNK_TAG_BITS`] bits left free. A large payload streams over a
+//! link as multiple `<= chunk_bytes` frames, each under its own sub-tag
+//! drawn from a *per-directed-pair* sequential allocator ([`SubTags`]):
+//! sender and receiver walk identical segment sequences (SPMD), so their
+//! allocators stay aligned without any negotiation. Exhausting the
+//! namespace is a hard, symmetric error (checked before any traffic) —
+//! never a silent tag collision.
+//!
+//! Payload frames come from the global [`BufPool`] and are folded or
+//! copied straight out of the received [`Buf`] — the only copies on the
+//! whole path are the one serialization at the producer and (for
+//! placement ops) the one deserialization at the consumer.
+
+use crate::comm::buf::BufPool;
+use crate::transport::{f32s_from_bytes, fill_f32_bytes, Transport};
+use crate::Result;
+
+use super::ops::ReduceOp;
+use super::CommStats;
+
+/// Low tag bits reserved for chunk sub-tags (see
+/// `Communicator::reserve_tag`).
+pub const CHUNK_TAG_BITS: u32 = 16;
+
+/// Sub-tags available to one op on one directed link.
+pub const MAX_CHUNKS_PER_OP: u64 = 1 << CHUNK_TAG_BITS;
+
+/// Number of wire frames for a payload of `bytes` at `chunk_bytes`
+/// granularity (an empty payload still takes one frame). Frames stride
+/// by whole f32 elements, so the count is computed at element
+/// granularity too — a misaligned `chunk_bytes` rounds down to elements
+/// instead of silently dropping the tail.
+pub fn chunks_for(bytes: usize, chunk_bytes: usize) -> u64 {
+    let elems = bytes / 4;
+    let chunk_elems = (chunk_bytes / 4).max(1);
+    (elems.div_ceil(chunk_elems) as u64).max(1)
+}
+
+/// Hard guard on the chunk namespace: fails the op before any traffic
+/// when it would need `>= 65536` chunk sub-tags on one link (the
+/// documented limit — the last sub-tag value is kept in reserve so the
+/// guard and the spec agree). Callers compute `needed` from quantities
+/// every rank agrees on, so the error fires on all ranks symmetrically
+/// (no half-started collective, no deadlock).
+pub fn ensure_budget(needed: u64, what: &str) -> Result<()> {
+    if needed >= MAX_CHUNKS_PER_OP {
+        anyhow::bail!(
+            "{what} would need {needed} chunk sub-tags on one link but the tag \
+             namespace holds {MAX_CHUNKS_PER_OP}; raise KAITIAN_CHUNK_BYTES or \
+             shrink the message"
+        );
+    }
+    Ok(())
+}
+
+/// Sequential sub-tag allocator for one collective op on one directed
+/// link. Overflow is a hard error (backstop behind [`ensure_budget`]).
+pub struct SubTags {
+    base: u64,
+    next: u64,
+}
+
+impl SubTags {
+    pub fn new(tag: u64) -> Self {
+        Self { base: tag, next: 0 }
+    }
+
+    /// Reserve `n` consecutive sub-tags; returns the first full tag.
+    pub fn reserve(&mut self, n: u64) -> Result<u64> {
+        let start = self.next;
+        let end = start
+            .checked_add(n)
+            .ok_or_else(|| anyhow::anyhow!("chunk sub-tag counter overflow"))?;
+        if end > MAX_CHUNKS_PER_OP {
+            anyhow::bail!(
+                "collective exhausted its chunk tag namespace ({end} > \
+                 {MAX_CHUNKS_PER_OP} sub-tags on one link)"
+            );
+        }
+        self.next = end;
+        Ok(self.base | start)
+    }
+}
+
+/// Send `xs` to `peer` as chunked frames built in pooled buffers.
+pub fn send_f32s(
+    t: &dyn Transport,
+    peer: usize,
+    tags: &mut SubTags,
+    xs: &[f32],
+    chunk_bytes: usize,
+    stats: &mut CommStats,
+) -> Result<()> {
+    let n = chunks_for(xs.len() * 4, chunk_bytes);
+    let base = tags.reserve(n)?;
+    let chunk_elems = (chunk_bytes / 4).max(1);
+    for i in 0..n {
+        let lo = (i as usize * chunk_elems).min(xs.len());
+        let hi = (lo + chunk_elems).min(xs.len());
+        let part = &xs[lo..hi];
+        let (mut frame, hit) = BufPool::global().take_tracked(part.len() * 4);
+        fill_f32_bytes(frame.as_mut_slice(), part);
+        stats.note_take(part.len() * 4, hit);
+        if !part.is_empty() {
+            stats.copies += 1;
+        }
+        stats.bytes_sent += (part.len() * 4) as u64;
+        stats.messages += 1;
+        t.send(peer, base + i, frame.freeze())?;
+    }
+    Ok(())
+}
+
+/// Receive `dst.len()` elements from `peer`, folding each chunk into
+/// `dst` as it arrives — no reassembly buffer, no intermediate vector.
+pub fn recv_fold(
+    t: &dyn Transport,
+    peer: usize,
+    tags: &mut SubTags,
+    op: ReduceOp,
+    dst: &mut [f32],
+    chunk_bytes: usize,
+    stats: &mut CommStats,
+) -> Result<()> {
+    let n = chunks_for(dst.len() * 4, chunk_bytes);
+    let base = tags.reserve(n)?;
+    let chunk_elems = (chunk_bytes / 4).max(1);
+    for i in 0..n {
+        let data = t.recv(peer, base + i)?;
+        let lo = (i as usize * chunk_elems).min(dst.len());
+        let hi = (lo + chunk_elems).min(dst.len());
+        stats.bytes_recv += data.len() as u64;
+        op.fold_bytes(&mut dst[lo..hi], &data)?;
+    }
+    Ok(())
+}
+
+/// Receive `dst.len()` elements from `peer`, copying each chunk into
+/// place (the placement path of all-gather / broadcast).
+pub fn recv_copy(
+    t: &dyn Transport,
+    peer: usize,
+    tags: &mut SubTags,
+    dst: &mut [f32],
+    chunk_bytes: usize,
+    stats: &mut CommStats,
+) -> Result<()> {
+    let n = chunks_for(dst.len() * 4, chunk_bytes);
+    let base = tags.reserve(n)?;
+    let chunk_elems = (chunk_bytes / 4).max(1);
+    for i in 0..n {
+        let data = t.recv(peer, base + i)?;
+        let lo = (i as usize * chunk_elems).min(dst.len());
+        let hi = (lo + chunk_elems).min(dst.len());
+        stats.bytes_recv += data.len() as u64;
+        if hi > lo {
+            stats.copies += 1;
+        }
+        f32s_from_bytes(&mut dst[lo..hi], &data)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::InprocMesh;
+
+    #[test]
+    fn chunk_counts() {
+        assert_eq!(chunks_for(0, 1024), 1);
+        assert_eq!(chunks_for(1024, 1024), 1);
+        assert_eq!(chunks_for(1028, 1024), 2);
+        assert_eq!(chunks_for(10 << 20, 4), (10 << 20) / 4);
+        // Misaligned chunk sizes stride by whole elements: the frame
+        // count must match the element stride, never dropping the tail.
+        assert_eq!(chunks_for(12, 6), 3, "3 elems at 1-elem stride");
+        assert_eq!(chunks_for(40, 11), 5, "10 elems at 2-elem stride");
+    }
+
+    #[test]
+    fn subtags_sequential_and_bounded() {
+        let mut tags = SubTags::new(7 << CHUNK_TAG_BITS);
+        assert_eq!(tags.reserve(3).unwrap(), 7 << CHUNK_TAG_BITS);
+        assert_eq!(tags.reserve(2).unwrap(), (7 << CHUNK_TAG_BITS) | 3);
+        assert!(tags.reserve(MAX_CHUNKS_PER_OP).is_err());
+    }
+
+    #[test]
+    fn budget_guard_is_hard_error() {
+        assert!(ensure_budget(MAX_CHUNKS_PER_OP - 1, "test op").is_ok());
+        let err = ensure_budget(MAX_CHUNKS_PER_OP, "test op").unwrap_err();
+        assert!(err.to_string().contains("chunk sub-tags"), "{err}");
+    }
+
+    #[test]
+    fn chunked_roundtrip_fold_and_copy() {
+        let eps = InprocMesh::new(2);
+        let xs: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+        let tag = 1 << CHUNK_TAG_BITS;
+        std::thread::scope(|s| {
+            let xs_send = xs.clone();
+            let e0 = &eps[0];
+            s.spawn(move || {
+                let mut st = CommStats::default();
+                let mut tags = SubTags::new(tag);
+                // 128-byte chunks -> 32 frames per payload.
+                send_f32s(e0, 1, &mut tags, &xs_send, 128, &mut st).unwrap();
+                send_f32s(e0, 1, &mut tags, &xs_send, 128, &mut st).unwrap();
+                assert_eq!(st.messages, 64);
+                assert_eq!(st.bytes_sent, 8000);
+            });
+            let xs = &xs;
+            let e1 = &eps[1];
+            s.spawn(move || {
+                let mut st = CommStats::default();
+                let mut tags = SubTags::new(tag);
+                let mut acc = vec![1.0_f32; 1000];
+                recv_fold(e1, 0, &mut tags, ReduceOp::Sum, &mut acc, 128, &mut st).unwrap();
+                let mut placed = vec![0.0_f32; 1000];
+                recv_copy(e1, 0, &mut tags, &mut placed, 128, &mut st).unwrap();
+                for i in 0..1000 {
+                    assert_eq!(acc[i], 1.0 + xs[i]);
+                    assert_eq!(placed[i], xs[i]);
+                }
+                assert_eq!(st.bytes_recv, 8000);
+            });
+        });
+    }
+
+    #[test]
+    fn zero_length_payload_roundtrips() {
+        let eps = InprocMesh::new(2);
+        let mut st = CommStats::default();
+        let mut tags = SubTags::new(1 << CHUNK_TAG_BITS);
+        send_f32s(&eps[0], 1, &mut tags, &[], 4096, &mut st).unwrap();
+        assert_eq!(st.messages, 1);
+        assert_eq!(st.bytes_sent, 0);
+        let mut tags = SubTags::new(1 << CHUNK_TAG_BITS);
+        let mut dst: [f32; 0] = [];
+        recv_copy(&eps[1], 0, &mut tags, &mut dst, 4096, &mut st).unwrap();
+    }
+}

@@ -10,6 +10,7 @@
 //! (SPMD); tags are derived from a per-communicator operation counter that
 //! stays aligned across ranks by construction.
 
+pub mod chunk;
 pub mod ops;
 pub mod ring;
 pub mod tree;
@@ -22,6 +23,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
+use crate::comm::buf::Buf;
 use crate::transport::Transport;
 use crate::Result;
 
@@ -38,10 +40,22 @@ pub struct CommStats {
     /// Number of point-to-point messages sent.
     pub messages: u64,
     /// Bytes staged through host memory (device→host + host→device), only
-    /// non-zero on the Gloo host-relay path.
+    /// non-zero on the host-relay paths; counts real staging copies only.
     pub staged_bytes: u64,
     /// Seconds spent in D2H/H2D staging copies (host-relay path).
     pub stage_seconds: f64,
+    /// Payload bytes freshly allocated (pool misses) by this op — the
+    /// pooled data plane drives this toward zero once warm.
+    pub alloc_bytes: u64,
+    /// Buffer takes served from the pool free lists.
+    pub pool_hits: u64,
+    /// Payload memcpy events performed by this op (serialize at the
+    /// producer, place at the consumer, staging copies).
+    pub copies: u64,
+    /// High-water mark of transport writer-queue bytes in flight over
+    /// the endpoint's lifetime, sampled when the op completes (gauge,
+    /// merged by max; non-zero only on queued transports, i.e. TCP).
+    pub inflight_hw_bytes: u64,
 }
 
 impl CommStats {
@@ -57,6 +71,23 @@ impl CommStats {
         self.messages += other.messages;
         self.staged_bytes += other.staged_bytes;
         self.stage_seconds += other.stage_seconds;
+        self.alloc_bytes += other.alloc_bytes;
+        self.pool_hits += other.pool_hits;
+        self.copies += other.copies;
+        self.inflight_hw_bytes = self.inflight_hw_bytes.max(other.inflight_hw_bytes);
+    }
+
+    /// Account one pooled-buffer take of `bytes` (`hit` = served from a
+    /// free list; a miss is a fresh allocation).
+    pub(crate) fn note_take(&mut self, bytes: usize, hit: bool) {
+        if bytes == 0 {
+            return;
+        }
+        if hit {
+            self.pool_hits += 1;
+        } else {
+            self.alloc_bytes += bytes as u64;
+        }
     }
 }
 
@@ -98,9 +129,10 @@ impl Communicator {
     /// Reserve a fresh tag namespace for one collective op — always on the
     /// caller thread, in SPMD program order, so local counters agree
     /// across ranks even when the op itself executes later on a comm
-    /// thread. Low 16 bits left for chunks.
+    /// thread. The low [`chunk::CHUNK_TAG_BITS`] bits are left free for
+    /// chunk sub-tags.
     pub fn reserve_tag(&self) -> u64 {
-        (self.op_counter.fetch_add(1, Ordering::Relaxed) + 1) << 16
+        (self.op_counter.fetch_add(1, Ordering::Relaxed) + 1) << chunk::CHUNK_TAG_BITS
     }
 
     fn comm_thread(&self) -> &CommThread {
@@ -129,6 +161,7 @@ impl Communicator {
         let mut stats = ring::ring_all_reduce(self.transport.as_ref(), buf, op, tag)?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "all_reduce";
+        stats.inflight_hw_bytes = self.transport.inflight_high_water();
         Ok(stats)
     }
 
@@ -150,6 +183,7 @@ impl Communicator {
             let mut stats = ring::ring_all_reduce(t, &mut buf, op, tag)?;
             stats.seconds = t0.elapsed().as_secs_f64();
             stats.op = "all_reduce";
+            stats.inflight_hw_bytes = t.inflight_high_water();
             Ok((buf, stats))
         })
     }
@@ -161,6 +195,7 @@ impl Communicator {
         let mut stats = tree::broadcast(self.transport.as_ref(), buf, root, tag)?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "broadcast";
+        stats.inflight_hw_bytes = self.transport.inflight_high_water();
         Ok(stats)
     }
 
@@ -182,6 +217,7 @@ impl Communicator {
             let mut stats = tree::broadcast(t, &mut buf, root, tag)?;
             stats.seconds = t0.elapsed().as_secs_f64();
             stats.op = "broadcast";
+            stats.inflight_hw_bytes = t.inflight_high_water();
             Ok((buf, stats))
         })
     }
@@ -193,6 +229,7 @@ impl Communicator {
         let (out, mut stats) = ring::ring_all_gather(self.transport.as_ref(), send, tag)?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "all_gather";
+        stats.inflight_hw_bytes = self.transport.inflight_high_water();
         Ok((out, stats))
     }
 
@@ -210,6 +247,7 @@ impl Communicator {
         let mut stats = tree::reduce(self.transport.as_ref(), buf, op, root, tag)?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "reduce";
+        stats.inflight_hw_bytes = self.transport.inflight_high_water();
         Ok(stats)
     }
 
@@ -228,7 +266,7 @@ impl Communicator {
         while k < world {
             let to = (t.rank() + k) % world;
             let from = (t.rank() + world - k) % world;
-            t.send(to, tag | k as u64, vec![1])?;
+            t.send(to, tag | k as u64, Buf::copy_from_slice(&[1]))?;
             t.recv(from, tag | k as u64)?;
             stats.messages += 1;
             stats.bytes_sent += 1;
@@ -404,6 +442,8 @@ mod tests {
             assert!(st.bytes_sent >= 3900, "sent {}", st.bytes_sent);
             assert!(st.seconds >= 0.0);
             assert_eq!(st.op, "all_reduce");
+            assert!(st.copies > 0, "serialize/place copies must be counted");
+            assert_eq!(st.inflight_hw_bytes, 0, "inproc has no writer queue");
         }
     }
 
@@ -436,6 +476,24 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.op, "all_reduce", "first label wins");
         assert_eq!(a.bytes_sent, 15);
+
+        // Gauges merge by max, counters by sum.
+        let mut g = CommStats {
+            inflight_hw_bytes: 10,
+            pool_hits: 1,
+            ..Default::default()
+        };
+        g.merge(&CommStats {
+            inflight_hw_bytes: 7,
+            pool_hits: 2,
+            alloc_bytes: 5,
+            copies: 3,
+            ..Default::default()
+        });
+        assert_eq!(g.inflight_hw_bytes, 10);
+        assert_eq!(g.pool_hits, 3);
+        assert_eq!(g.alloc_bytes, 5);
+        assert_eq!(g.copies, 3);
 
         let mut empty = CommStats::default();
         empty.merge(&b);

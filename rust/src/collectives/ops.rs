@@ -32,6 +32,32 @@ impl ReduceOp {
         }
     }
 
+    /// Combine two scalars under this op.
+    #[inline]
+    pub fn apply(self, a: f32, b: f32) -> f32 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Max => a.max(b),
+            ReduceOp::Min => a.min(b),
+        }
+    }
+
+    /// Fold little-endian f32 wire bytes into `acc` — the zero-copy
+    /// receive path: parse-and-fold in one pass, no intermediate vector.
+    pub fn fold_bytes(self, acc: &mut [f32], bytes: &[u8]) -> crate::Result<()> {
+        if bytes.len() != acc.len() * 4 {
+            anyhow::bail!(
+                "fold got {} wire bytes for {} f32 elements",
+                bytes.len(),
+                acc.len()
+            );
+        }
+        for (a, c) in acc.iter_mut().zip(bytes.chunks_exact(4)) {
+            *a = self.apply(*a, f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(())
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             ReduceOp::Sum => "sum",
@@ -50,6 +76,21 @@ mod tests {
         let mut a = vec![1.0, 2.0];
         ReduceOp::Sum.fold(&mut a, &[10.0, 20.0]);
         assert_eq!(a, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn fold_bytes_matches_fold() {
+        let incoming = [10.0_f32, -3.5, 2.0];
+        let bytes = crate::transport::f32s_to_bytes(&incoming);
+        for op in [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min] {
+            let mut a = vec![1.0_f32, 2.0, 3.0];
+            let mut b = a.clone();
+            op.fold(&mut a, &incoming);
+            op.fold_bytes(&mut b, &bytes).unwrap();
+            assert_eq!(a, b, "{}", op.name());
+        }
+        let mut short = vec![0.0_f32; 2];
+        assert!(ReduceOp::Sum.fold_bytes(&mut short, &bytes).is_err());
     }
 
     #[test]

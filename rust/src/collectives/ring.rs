@@ -7,10 +7,20 @@
 //!
 //! Each rank sends `2·(w-1)/w · n` elements total, which is the
 //! bandwidth lower bound for all-reduce.
+//!
+//! Data plane: every segment goes out as `<= chunk_bytes` frames built
+//! in pooled buffers ([`chunk::send_f32s`]) and is folded or placed
+//! straight out of the received frame — the old per-hop
+//! `f32s_to_bytes` / `bytes_to_f32s` vector churn is gone. The
+//! `_chunked` variants take the chunk granularity explicitly (benches
+//! and tests); the plain entry points use the configured
+//! [`crate::comm::buf::chunk_bytes`].
 
-use crate::transport::{bytes_to_f32s, f32s_to_bytes, Transport};
+use crate::comm::buf::{chunk_bytes, FloatPool};
+use crate::transport::Transport;
 use crate::Result;
 
+use super::chunk::{self, SubTags};
 use super::ops::ReduceOp;
 use super::CommStats;
 
@@ -28,75 +38,125 @@ pub fn ring_all_reduce(
     op: ReduceOp,
     tag: u64,
 ) -> Result<CommStats> {
+    ring_all_reduce_chunked(t, buf, op, tag, chunk_bytes())
+}
+
+/// [`ring_all_reduce`] at an explicit chunk granularity.
+pub fn ring_all_reduce_chunked(
+    t: &dyn Transport,
+    buf: &mut [f32],
+    op: ReduceOp,
+    tag: u64,
+    chunk_bytes: usize,
+) -> Result<CommStats> {
     let (rank, w) = (t.rank(), t.world());
     let mut stats = CommStats::default();
     if w == 1 || buf.is_empty() {
         return Ok(stats);
     }
     let n = buf.len();
+    // Symmetric overflow guard (same bound on every rank, checked before
+    // any traffic): 2·(w-1) steps, each at most ceil(n/w) elements.
+    chunk::ensure_budget(
+        2 * (w as u64 - 1) * chunk::chunks_for(n.div_ceil(w) * 4, chunk_bytes),
+        "ring all-reduce",
+    )?;
     let next = (rank + 1) % w;
     let prev = (rank + w - 1) % w;
+    let mut send_tags = SubTags::new(tag);
+    let mut recv_tags = SubTags::new(tag);
 
     // Phase 1: reduce-scatter. At step k we send the segment we just
     // finished accumulating and fold the one arriving from prev.
     for k in 0..w - 1 {
         let (s0, s1) = segment(n, w, rank + w - k);
-        let payload = f32s_to_bytes(&buf[s0..s1]);
-        stats.bytes_sent += payload.len() as u64;
-        stats.messages += 1;
-        t.send(next, tag | k as u64, payload)?;
+        chunk::send_f32s(t, next, &mut send_tags, &buf[s0..s1], chunk_bytes, &mut stats)?;
 
         let (r0, r1) = segment(n, w, rank + w - k - 1);
-        let incoming = bytes_to_f32s(&t.recv(prev, tag | k as u64)?)?;
-        stats.bytes_recv += (incoming.len() * 4) as u64;
-        op.fold(&mut buf[r0..r1], &incoming);
+        chunk::recv_fold(
+            t,
+            prev,
+            &mut recv_tags,
+            op,
+            &mut buf[r0..r1],
+            chunk_bytes,
+            &mut stats,
+        )?;
     }
 
     // Phase 2: all-gather the reduced segments.
     for k in 0..w - 1 {
         let (s0, s1) = segment(n, w, rank + 1 + w - k);
-        let payload = f32s_to_bytes(&buf[s0..s1]);
-        stats.bytes_sent += payload.len() as u64;
-        stats.messages += 1;
-        t.send(next, tag | (64 + k) as u64, payload)?;
+        chunk::send_f32s(t, next, &mut send_tags, &buf[s0..s1], chunk_bytes, &mut stats)?;
 
         let (r0, r1) = segment(n, w, rank + w - k);
-        let incoming = bytes_to_f32s(&t.recv(prev, tag | (64 + k) as u64)?)?;
-        stats.bytes_recv += (incoming.len() * 4) as u64;
-        buf[r0..r1].copy_from_slice(&incoming);
+        chunk::recv_copy(
+            t,
+            prev,
+            &mut recv_tags,
+            &mut buf[r0..r1],
+            chunk_bytes,
+            &mut stats,
+        )?;
     }
     Ok(stats)
 }
 
 /// Ring all-gather of equal-length `send` buffers; returns concatenation
-/// in rank order.
-pub fn ring_all_gather(
+/// in rank order. The output vector comes from the [`FloatPool`] (its
+/// class capacity survives a later `FloatPool::put`).
+pub fn ring_all_gather(t: &dyn Transport, send: &[f32], tag: u64) -> Result<(Vec<f32>, CommStats)> {
+    ring_all_gather_chunked(t, send, tag, chunk_bytes())
+}
+
+/// [`ring_all_gather`] at an explicit chunk granularity.
+pub fn ring_all_gather_chunked(
     t: &dyn Transport,
     send: &[f32],
     tag: u64,
+    chunk_bytes: usize,
 ) -> Result<(Vec<f32>, CommStats)> {
     let (rank, w) = (t.rank(), t.world());
     let mut stats = CommStats::default();
-    let chunk = send.len();
-    let mut out = vec![0.0_f32; chunk * w];
-    out[rank * chunk..(rank + 1) * chunk].copy_from_slice(send);
-    if w == 1 || chunk == 0 {
+    let seg = send.len();
+    let (mut out, hit) = FloatPool::global().take_tracked(seg * w);
+    stats.note_take(seg * w * 4, hit);
+    out[rank * seg..(rank + 1) * seg].copy_from_slice(send);
+    if seg > 0 {
+        stats.copies += 1;
+    }
+    if w == 1 || seg == 0 {
         return Ok((out, stats));
     }
+    chunk::ensure_budget(
+        (w as u64 - 1) * chunk::chunks_for(seg * 4, chunk_bytes),
+        "ring all-gather",
+    )?;
     let next = (rank + 1) % w;
     let prev = (rank + w - 1) % w;
+    let mut send_tags = SubTags::new(tag);
+    let mut recv_tags = SubTags::new(tag);
     // At step k, pass along the chunk originally from (rank - k).
     for k in 0..w - 1 {
         let src = (rank + w - k) % w;
-        let payload = f32s_to_bytes(&out[src * chunk..(src + 1) * chunk]);
-        stats.bytes_sent += payload.len() as u64;
-        stats.messages += 1;
-        t.send(next, tag | k as u64, payload)?;
+        chunk::send_f32s(
+            t,
+            next,
+            &mut send_tags,
+            &out[src * seg..(src + 1) * seg],
+            chunk_bytes,
+            &mut stats,
+        )?;
 
         let dst = (rank + w - k - 1) % w;
-        let incoming = bytes_to_f32s(&t.recv(prev, tag | k as u64)?)?;
-        stats.bytes_recv += (incoming.len() * 4) as u64;
-        out[dst * chunk..(dst + 1) * chunk].copy_from_slice(&incoming);
+        chunk::recv_copy(
+            t,
+            prev,
+            &mut recv_tags,
+            &mut out[dst * seg..(dst + 1) * seg],
+            chunk_bytes,
+            &mut stats,
+        )?;
     }
     Ok((out, stats))
 }
@@ -146,6 +206,54 @@ mod tests {
                 assert_eq!(o, expect, "w={w} n={n}");
             }
         }
+    }
+
+    #[test]
+    fn chunked_matches_single_frame_bitwise() {
+        // Wire chunking is pure framing: it must not change reduction
+        // order, so results are bit-identical across chunk sizes.
+        let w = 3;
+        let n = 1001;
+        let run = |chunk: usize| -> Vec<Vec<f32>> {
+            let eps = InprocMesh::new(w);
+            std::thread::scope(|s| {
+                let hs: Vec<_> = eps
+                    .iter()
+                    .map(|e| {
+                        s.spawn(move || {
+                            let mut buf: Vec<f32> = (0..n)
+                                .map(|i| (i as f32 * 0.37 + e.rank() as f32) * 1.1e-3)
+                                .collect();
+                            ring_all_reduce_chunked(e, &mut buf, ReduceOp::Sum, 1 << 16, chunk)
+                                .unwrap();
+                            buf
+                        })
+                    })
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+        };
+        let whole = run(1 << 20);
+        for chunk in [64, 256, 4096] {
+            assert_eq!(run(chunk), whole, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn chunk_budget_overflow_is_symmetric_error() {
+        // 4-byte chunks on a buffer needing >= 65536 sub-tags per link:
+        // every rank fails up front, no traffic, no deadlock.
+        let eps = InprocMesh::new(2);
+        std::thread::scope(|s| {
+            for e in &eps {
+                s.spawn(move || {
+                    let mut buf = vec![0.0_f32; 70_000];
+                    let err = ring_all_reduce_chunked(e, &mut buf, ReduceOp::Sum, 1 << 16, 4)
+                        .unwrap_err();
+                    assert!(err.to_string().contains("chunk sub-tags"), "{err}");
+                });
+            }
+        });
     }
 
     #[test]

@@ -1,9 +1,16 @@
 //! Binomial-tree broadcast and reduce (latency-optimal for small payloads,
 //! log2(w) rounds).
+//!
+//! Payloads move as pooled chunked frames (see [`super::chunk`]): each
+//! parent↔child link carries one logical message per op, framed at the
+//! configured chunk granularity, folded or placed directly out of the
+//! received buffers.
 
-use crate::transport::{bytes_to_f32s, f32s_to_bytes, Transport};
+use crate::comm::buf::chunk_bytes;
+use crate::transport::Transport;
 use crate::Result;
 
+use super::chunk::{self, SubTags};
 use super::ops::ReduceOp;
 use super::CommStats;
 
@@ -20,32 +27,49 @@ fn unvrank(v: usize, root: usize, w: usize) -> usize {
 
 /// Binomial-tree broadcast of `buf` from `root`, in place.
 pub fn broadcast(t: &dyn Transport, buf: &mut [f32], root: usize, tag: u64) -> Result<CommStats> {
+    let chunk_bytes = chunk_bytes();
     let (rank, w) = (t.rank(), t.world());
     let mut stats = CommStats::default();
     if w == 1 {
         return Ok(stats);
     }
+    // One logical message per link; guard the per-link chunk namespace.
+    chunk::ensure_budget(chunk::chunks_for(buf.len() * 4, chunk_bytes), "broadcast")?;
     let v = vrank(rank, root, w);
 
     // Receive once from parent (if not root).
     if v != 0 {
         // Parent clears the lowest set bit of v.
         let parent = v & (v - 1);
-        let incoming = t.recv(unvrank(parent, root, w), tag)?;
-        let vals = bytes_to_f32s(&incoming)?;
-        stats.bytes_recv += (vals.len() * 4) as u64;
-        buf.copy_from_slice(&vals);
+        let mut tags = SubTags::new(tag);
+        chunk::recv_copy(
+            t,
+            unvrank(parent, root, w),
+            &mut tags,
+            buf,
+            chunk_bytes,
+            &mut stats,
+        )?;
     }
     // Forward to children: v + 2^k for k above v's lowest set bit.
-    let lowbit = if v == 0 { w.next_power_of_two() } else { v & v.wrapping_neg() };
+    let lowbit = if v == 0 {
+        w.next_power_of_two()
+    } else {
+        v & v.wrapping_neg()
+    };
     let mut k = 1;
     while k < lowbit && k < w.next_power_of_two() {
         let child = v + k;
         if child < w {
-            let payload = f32s_to_bytes(buf);
-            stats.bytes_sent += payload.len() as u64;
-            stats.messages += 1;
-            t.send(unvrank(child, root, w), tag, payload)?;
+            let mut tags = SubTags::new(tag);
+            chunk::send_f32s(
+                t,
+                unvrank(child, root, w),
+                &mut tags,
+                buf,
+                chunk_bytes,
+                &mut stats,
+            )?;
         }
         k <<= 1;
     }
@@ -61,34 +85,50 @@ pub fn reduce(
     root: usize,
     tag: u64,
 ) -> Result<CommStats> {
+    let chunk_bytes = chunk_bytes();
     let (rank, w) = (t.rank(), t.world());
     let mut stats = CommStats::default();
     if w == 1 {
         return Ok(stats);
     }
+    chunk::ensure_budget(chunk::chunks_for(buf.len() * 4, chunk_bytes), "reduce")?;
     let v = vrank(rank, root, w);
 
     // Mirror of broadcast: gather from children (low bits) then send to
     // parent once.
-    let lowbit = if v == 0 { w.next_power_of_two() } else { v & v.wrapping_neg() };
+    let lowbit = if v == 0 {
+        w.next_power_of_two()
+    } else {
+        v & v.wrapping_neg()
+    };
     let mut k = 1;
     while k < lowbit && k < w.next_power_of_two() {
         let child = v + k;
         if child < w {
-            let incoming = t.recv(unvrank(child, root, w), tag | k as u64)?;
-            let vals = bytes_to_f32s(&incoming)?;
-            stats.bytes_recv += (vals.len() * 4) as u64;
-            op.fold(buf, &vals);
+            let mut tags = SubTags::new(tag);
+            chunk::recv_fold(
+                t,
+                unvrank(child, root, w),
+                &mut tags,
+                op,
+                buf,
+                chunk_bytes,
+                &mut stats,
+            )?;
         }
         k <<= 1;
     }
     if v != 0 {
         let parent = v & (v - 1);
-        let kbit = (v ^ parent) as u64; // the bit that distinguishes us
-        let payload = f32s_to_bytes(buf);
-        stats.bytes_sent += payload.len() as u64;
-        stats.messages += 1;
-        t.send(unvrank(parent, root, w), tag | kbit, payload)?;
+        let mut tags = SubTags::new(tag);
+        chunk::send_f32s(
+            t,
+            unvrank(parent, root, w),
+            &mut tags,
+            buf,
+            chunk_bytes,
+            &mut stats,
+        )?;
     }
     Ok(stats)
 }

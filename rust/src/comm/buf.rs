@@ -1,0 +1,635 @@
+//! Pooled, reference-counted buffers — the allocation substrate of the
+//! data plane.
+//!
+//! Every hop of the old payload path (writer queue, frame read, mailbox
+//! push, ring chunk split, relay staging) allocated and memcpy'd a fresh
+//! `Vec<u8>`. Here a payload lives in a [`Buf`]: `Arc`-backed storage
+//! plus an offset/len window, so handing a message to a writer thread,
+//! parking it in a mailbox slot, or slicing a chunk out of it is a
+//! refcount bump — never a copy. Storage comes from a [`BufPool`]:
+//! sharded (per-thread shard affinity, HetCCL/sharded-slab style) and
+//! size-classed (powers of two), with hit/miss/alloc statistics so the
+//! copy-count reduction is observable in reports.
+//!
+//! [`FloatPool`] is the same idea for the `Vec<f32>` staging buffers the
+//! host relay and the DDP bucketizer churn through.
+
+use std::cell::Cell;
+use std::ops::Deref;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+
+/// Shards per size class: spreads free-list traffic across locks.
+const SHARDS_PER_CLASS: usize = 8;
+/// Free buffers kept per shard per class (bounds pooled memory).
+const MAX_FREE_PER_SHARD: usize = 8;
+
+/// Default streaming chunk granularity (overridable via
+/// `KAITIAN_CHUNK_BYTES` or [`set_chunk_bytes`]): 256 KiB keeps several
+/// chunks in flight for MiB-scale tensors without drowning small ops in
+/// per-message overhead.
+pub const DEFAULT_CHUNK_BYTES: usize = 256 << 10;
+
+static CHUNK_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+/// Round a requested chunk size to the granularity the data plane
+/// accepts: a multiple of 4 bytes, at least one f32.
+fn round_chunk(bytes: usize) -> usize {
+    (bytes.max(4) / 4) * 4
+}
+
+/// The data-plane chunk granularity in bytes (always a multiple of 4).
+pub fn chunk_bytes() -> usize {
+    let v = CHUNK_BYTES.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let v = std::env::var("KAITIAN_CHUNK_BYTES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(DEFAULT_CHUNK_BYTES);
+    let v = round_chunk(v);
+    CHUNK_BYTES.store(v, Ordering::Relaxed);
+    v
+}
+
+/// Override the chunk granularity (benches/tests). Rounded down to a
+/// multiple of 4, clamped to at least one f32. Must not change while
+/// collectives are in flight (ranks must agree on chunk counts), so
+/// callers in multi-test binaries serialize around it.
+pub fn set_chunk_bytes(bytes: usize) {
+    CHUNK_BYTES.store(round_chunk(bytes), Ordering::Relaxed);
+}
+
+/// Stable per-thread shard index (round-robin assignment on first use).
+fn shard_index() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    SHARD.with(|s| {
+        let v = s.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = NEXT.fetch_add(1, Ordering::Relaxed) % SHARDS_PER_CLASS;
+        s.set(v);
+        v
+    })
+}
+
+/// Counters exposed by both pools (fresh allocations vs. reuse).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Bytes freshly allocated from the system (misses + oversize).
+    pub alloc_bytes: u64,
+    /// Takes served from the free lists.
+    pub pool_hits: u64,
+    /// Takes that had to allocate.
+    pub pool_misses: u64,
+    /// Buffers returned to the free lists.
+    pub recycled: u64,
+}
+
+/// Sharded size-classed free lists over `Vec<T>` (the engine behind both
+/// [`BufPool`] and [`FloatPool`]). Classes are powers of two between
+/// `1 << min_shift` and `1 << max_shift` *elements*; larger requests
+/// fall through to plain allocation.
+struct PoolCore<T> {
+    /// `classes * SHARDS_PER_CLASS` free lists; vectors keep their stale
+    /// (initialized) contents so a take only writes the length delta —
+    /// callers fully overwrite what they take.
+    free: Vec<Mutex<Vec<Vec<T>>>>,
+    enabled: AtomicBool,
+    min_shift: u32,
+    max_shift: u32,
+    elem_bytes: u64,
+    alloc_bytes: AtomicU64,
+    pool_hits: AtomicU64,
+    pool_misses: AtomicU64,
+    recycled: AtomicU64,
+}
+
+impl<T: Clone + Default> PoolCore<T> {
+    fn new(min_shift: u32, max_shift: u32, elem_bytes: u64) -> Self {
+        let classes = (max_shift - min_shift + 1) as usize;
+        let free = (0..classes * SHARDS_PER_CLASS)
+            .map(|_| Mutex::new(Vec::new()))
+            .collect();
+        Self {
+            free,
+            enabled: AtomicBool::new(true),
+            min_shift,
+            max_shift,
+            elem_bytes,
+            alloc_bytes: AtomicU64::new(0),
+            pool_hits: AtomicU64::new(0),
+            pool_misses: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        }
+    }
+
+    /// Smallest class whose capacity fits `len` elements.
+    fn class_for(&self, len: usize) -> Option<usize> {
+        debug_assert!(len > 0);
+        let bits = usize::BITS - (len - 1).leading_zeros();
+        let shift = bits.max(self.min_shift);
+        if shift > self.max_shift {
+            None
+        } else {
+            Some((shift - self.min_shift) as usize)
+        }
+    }
+
+    /// Largest class whose capacity is at most `cap` elements (for
+    /// recycling foreign vectors without risking reallocation).
+    /// Capacities beyond the largest class are rejected — parking a
+    /// giant one-off buffer in the top class would retain its full
+    /// capacity forever and break the pool's memory bound.
+    fn class_for_cap(&self, cap: usize) -> Option<usize> {
+        if cap < (1_usize << self.min_shift) || cap > (1_usize << self.max_shift) {
+            return None;
+        }
+        let floor = (usize::BITS - 1 - cap.leading_zeros()).min(self.max_shift);
+        Some((floor - self.min_shift) as usize)
+    }
+
+    fn class_len(&self, class: usize) -> usize {
+        1_usize << (class as u32 + self.min_shift)
+    }
+
+    /// A vector of exactly `len` elements (default-initialized); `true`
+    /// when it was served from a free list.
+    fn take(&self, len: usize) -> (Vec<T>, bool) {
+        if len == 0 {
+            return (Vec::new(), true);
+        }
+        if self.enabled.load(Ordering::Relaxed) {
+            if let Some(class) = self.class_for(len) {
+                // Own shard first (fast path); on a miss, probe the
+                // sibling shards before falling through to allocation —
+                // producer/consumer thread splits (e.g. the TCP reader
+                // allocates, the collective thread frees) would
+                // otherwise never find their buffers again.
+                let base = class * SHARDS_PER_CLASS;
+                let start = shard_index();
+                for i in 0..SHARDS_PER_CLASS {
+                    let shard = &self.free[base + (start + i) % SHARDS_PER_CLASS];
+                    let reused = shard.lock().unwrap().pop();
+                    if let Some(mut v) = reused {
+                        self.pool_hits.fetch_add(1, Ordering::Relaxed);
+                        v.resize(len, T::default());
+                        return (v, true);
+                    }
+                }
+            }
+        }
+        self.pool_misses.fetch_add(1, Ordering::Relaxed);
+        let cap = match self.class_for(len) {
+            Some(class) if self.enabled.load(Ordering::Relaxed) => self.class_len(class),
+            _ => len,
+        };
+        self.alloc_bytes
+            .fetch_add(cap as u64 * self.elem_bytes, Ordering::Relaxed);
+        let mut v = Vec::with_capacity(cap);
+        v.resize(len, T::default());
+        (v, false)
+    }
+
+    /// Return a vector to the free lists (dropped when pooling is off,
+    /// the capacity is outside the class range, or the shard is full).
+    /// Contents are kept as-is — re-zeroing every recycled frame would
+    /// put a full memset back on the hot path the pool exists to remove.
+    fn put(&self, v: Vec<T>) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let Some(class) = self.class_for_cap(v.capacity()) else {
+            return;
+        };
+        let shard = &self.free[class * SHARDS_PER_CLASS + shard_index()];
+        let mut free = shard.lock().unwrap();
+        if free.len() < MAX_FREE_PER_SHARD {
+            free.push(v);
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+        if !on {
+            for shard in &self.free {
+                shard.lock().unwrap().clear();
+            }
+        }
+    }
+
+    fn stats(&self) -> PoolStats {
+        PoolStats {
+            alloc_bytes: self.alloc_bytes.load(Ordering::Relaxed),
+            pool_hits: self.pool_hits.load(Ordering::Relaxed),
+            pool_misses: self.pool_misses.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+        }
+    }
+
+    fn reset_stats(&self) {
+        self.alloc_bytes.store(0, Ordering::Relaxed);
+        self.pool_hits.store(0, Ordering::Relaxed);
+        self.pool_misses.store(0, Ordering::Relaxed);
+        self.recycled.store(0, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------
+// byte buffers
+// ---------------------------------------------------------------------
+
+/// Sharded size-classed pool of byte buffers (256 B .. 16 MiB classes).
+pub struct BufPool {
+    core: Arc<PoolCore<u8>>,
+}
+
+impl Default for BufPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufPool {
+    pub fn new() -> Self {
+        Self {
+            core: Arc::new(PoolCore::new(8, 24, 1)),
+        }
+    }
+
+    /// The process-wide pool the transports and collectives share.
+    pub fn global() -> &'static BufPool {
+        static POOL: OnceLock<BufPool> = OnceLock::new();
+        POOL.get_or_init(BufPool::new)
+    }
+
+    /// A writable buffer of exactly `len` bytes. Contents are
+    /// unspecified (recycled buffers keep stale data) — callers fully
+    /// overwrite before freezing.
+    pub fn take(&self, len: usize) -> BufMut {
+        self.take_tracked(len).0
+    }
+
+    /// Like [`BufPool::take`], also reporting whether the free list
+    /// served it (`true`) or it was freshly allocated — the per-op
+    /// `CommStats` accounting hook.
+    pub fn take_tracked(&self, len: usize) -> (BufMut, bool) {
+        let (data, hit) = self.core.take(len);
+        (
+            BufMut {
+                data,
+                pool: Arc::downgrade(&self.core),
+            },
+            hit,
+        )
+    }
+
+    /// Copy `bytes` into a pooled buffer and freeze it.
+    pub fn buf_from(&self, bytes: &[u8]) -> Buf {
+        let mut b = self.take(bytes.len());
+        b.as_mut_slice().copy_from_slice(bytes);
+        b.freeze()
+    }
+
+    /// Turn pooling on/off (off = every take is a fresh allocation and
+    /// every release a plain free — the pre-refactor copy path, kept for
+    /// the dataplane bench baseline).
+    pub fn set_enabled(&self, on: bool) {
+        self.core.set_enabled(on);
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.core.stats()
+    }
+
+    pub fn reset_stats(&self) {
+        self.core.reset_stats();
+    }
+}
+
+/// Backing storage of a frozen [`Buf`]; returns itself to its pool when
+/// the last reference drops.
+struct Storage {
+    data: Vec<u8>,
+    pool: Weak<PoolCore<u8>>,
+}
+
+impl Drop for Storage {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.upgrade() {
+            pool.put(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+/// A uniquely-owned writable buffer; [`BufMut::freeze`] turns it into a
+/// shareable [`Buf`].
+pub struct BufMut {
+    data: Vec<u8>,
+    pool: Weak<PoolCore<u8>>,
+}
+
+impl BufMut {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        &mut self.data
+    }
+
+    /// Freeze into an immutable, cheaply-cloneable [`Buf`].
+    pub fn freeze(self) -> Buf {
+        let len = self.data.len();
+        Buf {
+            storage: Arc::new(Storage {
+                data: self.data,
+                pool: self.pool,
+            }),
+            off: 0,
+            len,
+        }
+    }
+}
+
+/// An immutable, reference-counted view into pooled storage. Cloning or
+/// slicing is a refcount bump; the storage is recycled when the last
+/// view drops.
+#[derive(Clone)]
+pub struct Buf {
+    storage: Arc<Storage>,
+    off: usize,
+    len: usize,
+}
+
+impl Buf {
+    /// An empty buffer (no storage behind it worth pooling).
+    pub fn empty() -> Buf {
+        Buf::from_vec(Vec::new())
+    }
+
+    /// Wrap an existing vector (unpooled storage; freed normally).
+    pub fn from_vec(data: Vec<u8>) -> Buf {
+        let len = data.len();
+        Buf {
+            storage: Arc::new(Storage {
+                data,
+                pool: Weak::new(),
+            }),
+            off: 0,
+            len,
+        }
+    }
+
+    /// Copy `bytes` into the global pool.
+    pub fn copy_from_slice(bytes: &[u8]) -> Buf {
+        BufPool::global().buf_from(bytes)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// A zero-copy sub-view (`start..end` within this view).
+    pub fn slice(&self, start: usize, end: usize) -> Buf {
+        assert!(start <= end && end <= self.len, "slice out of bounds");
+        Buf {
+            storage: self.storage.clone(),
+            off: self.off + start,
+            len: end - start,
+        }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.storage.data[self.off..self.off + self.len]
+    }
+}
+
+impl Deref for Buf {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Buf {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Buf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Buf")
+            .field("off", &self.off)
+            .field("len", &self.len)
+            .finish()
+    }
+}
+
+impl PartialEq for Buf {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[u8]> for Buf {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<Vec<u8>> for Buf {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+// ---------------------------------------------------------------------
+// f32 staging buffers
+// ---------------------------------------------------------------------
+
+/// Pool of `Vec<f32>` staging buffers (64 elem .. 4 Mi elem classes —
+/// the same 256 B .. 16 MiB byte range as [`BufPool`]). Used by the host
+/// relay for D2H/H2D staging and by DDP for bucket hand-off buffers.
+pub struct FloatPool {
+    core: PoolCore<f32>,
+}
+
+impl Default for FloatPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FloatPool {
+    pub fn new() -> Self {
+        Self {
+            core: PoolCore::new(6, 22, 4),
+        }
+    }
+
+    pub fn global() -> &'static FloatPool {
+        static POOL: OnceLock<FloatPool> = OnceLock::new();
+        POOL.get_or_init(FloatPool::new)
+    }
+
+    /// A vector of exactly `len` elements; contents unspecified
+    /// (recycled vectors keep stale data) — callers overwrite it fully.
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        self.take_tracked(len).0
+    }
+
+    /// Like [`FloatPool::take`], also reporting free-list reuse.
+    pub fn take_tracked(&self, len: usize) -> (Vec<f32>, bool) {
+        self.core.take(len)
+    }
+
+    /// Return a vector for reuse.
+    pub fn put(&self, v: Vec<f32>) {
+        self.core.put(v);
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.core.set_enabled(on);
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.core.stats()
+    }
+
+    pub fn reset_stats(&self) {
+        self.core.reset_stats();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slices_are_zero_copy_views() {
+        let pool = BufPool::new();
+        let mut b = pool.take(8);
+        b.as_mut_slice().copy_from_slice(&[0, 1, 2, 3, 4, 5, 6, 7]);
+        let buf = b.freeze();
+        let mid = buf.slice(2, 6);
+        assert_eq!(mid.as_slice(), &[2, 3, 4, 5]);
+        let tail = mid.slice(2, 4);
+        assert_eq!(tail.as_slice(), &[4, 5]);
+        assert_eq!(buf.len(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_past_end_panics() {
+        let buf = Buf::from_vec(vec![1, 2, 3]);
+        let _ = buf.slice(1, 4);
+    }
+
+    #[test]
+    fn pool_recycles_storage() {
+        let pool = BufPool::new();
+        let (b, hit) = pool.take_tracked(1000);
+        assert!(!hit, "first take must miss");
+        drop(b.freeze()); // last ref -> recycled
+        let (b2, hit2) = pool.take_tracked(900);
+        assert!(hit2, "same class take must hit after recycle");
+        assert_eq!(b2.len(), 900);
+        let st = pool.stats();
+        assert_eq!(st.pool_hits, 1);
+        assert_eq!(st.pool_misses, 1);
+        assert_eq!(st.recycled, 1);
+        assert!(st.alloc_bytes >= 1000);
+    }
+
+    #[test]
+    fn storage_outlives_pool_clones() {
+        // A slice kept alive across other drops still reads valid data,
+        // and recycling happens only once (on the last drop).
+        let pool = BufPool::new();
+        let mut b = pool.take(16);
+        b.as_mut_slice()[0] = 42;
+        let buf = b.freeze();
+        let view = buf.slice(0, 1);
+        drop(buf);
+        assert_eq!(view.as_slice(), &[42]);
+        assert_eq!(pool.stats().recycled, 0, "view still holds storage");
+        drop(view);
+        assert_eq!(pool.stats().recycled, 1);
+    }
+
+    #[test]
+    fn disabled_pool_always_misses() {
+        let pool = BufPool::new();
+        pool.set_enabled(false);
+        drop(pool.take(512).freeze());
+        let (_, hit) = pool.take_tracked(512);
+        assert!(!hit);
+        assert_eq!(pool.stats().pool_hits, 0);
+        assert_eq!(pool.stats().recycled, 0);
+    }
+
+    #[test]
+    fn zero_len_take_is_free() {
+        let pool = BufPool::new();
+        let (b, hit) = pool.take_tracked(0);
+        assert!(hit);
+        assert!(b.is_empty());
+        assert_eq!(pool.stats().alloc_bytes, 0);
+        assert!(Buf::empty().is_empty());
+    }
+
+    #[test]
+    fn oversize_takes_fall_through() {
+        let pool = BufPool::new();
+        let (b, hit) = pool.take_tracked((16 << 20) + 1);
+        assert!(!hit);
+        drop(b.freeze());
+        // Too large for any class: not recycled.
+        assert_eq!(pool.stats().recycled, 0);
+    }
+
+    #[test]
+    fn float_pool_recycles_by_capacity() {
+        let pool = FloatPool::new();
+        let (v, hit) = pool.take_tracked(100);
+        assert!(!hit);
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().all(|&x| x == 0.0));
+        pool.put(v);
+        let (v2, hit2) = pool.take_tracked(128);
+        assert!(hit2, "128 elems fits the same 128-elem class");
+        assert_eq!(v2.len(), 128);
+        // A foreign vector with tiny capacity is dropped, not pooled.
+        pool.put(Vec::with_capacity(3));
+        assert_eq!(pool.stats().recycled, 1);
+    }
+
+    #[test]
+    fn chunk_rounding_is_f32_aligned() {
+        // The global setter is exercised by integration tests (which
+        // serialize); the rounding rule is pure and testable here.
+        assert_eq!(round_chunk(1000), 1000);
+        assert_eq!(round_chunk(1001), 1000);
+        assert_eq!(round_chunk(1), 4);
+        assert_eq!(round_chunk(0), 4);
+        assert_eq!(round_chunk(DEFAULT_CHUNK_BYTES), DEFAULT_CHUNK_BYTES);
+        assert_eq!(chunk_bytes() % 4, 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! The zero-copy data plane beneath the transports and collectives.
+//!
+//! * [`buf`] — reference-counted byte buffers ([`buf::Buf`]) backed by a
+//!   sharded, size-classed pool ([`buf::BufPool`]), plus the matching
+//!   f32 staging pool ([`buf::FloatPool`]). A payload is allocated once
+//!   at the producer and *sliced* — never copied — through the mailbox,
+//!   the wire framing and the collective algorithms.
+//! * [`split`] — disjoint mutable chunk views of one `Vec<f32>`, so the
+//!   KaiTian 3-stage pipeline can stream a large tensor through its
+//!   stage threads chunk by chunk without copying it apart.
+
+pub mod buf;
+pub mod split;
+
+pub use buf::{chunk_bytes, set_chunk_bytes, Buf, BufMut, BufPool, FloatPool, PoolStats};
+pub use split::{split_chunks, ChunkGroup, ChunkMut};

@@ -1,0 +1,178 @@
+//! Disjoint mutable chunk views of one `Vec<f32>`.
+//!
+//! The KaiTian 3-stage pipeline streams a bucket through its stage
+//! threads chunk by chunk: chunk *k* can be crossing the host relay
+//! while chunk *k+1* is still inside its vendor reduce. Each stage needs
+//! `&mut [f32]` access to its chunk from a different thread, so the
+//! bucket is split into non-overlapping [`ChunkMut`] views (the
+//! `split_at_mut` pattern, made `'static` by leaking the vector behind
+//! an `Arc` owner) and reassembled — same allocation, no copy — once
+//! every chunk has been dropped.
+
+use std::sync::Arc;
+
+/// Owner of the leaked vector; frees it if the group is never reclaimed
+/// (e.g. a pipeline error path dropped everything early).
+struct VecOwner {
+    ptr: *mut f32,
+    len: usize,
+    cap: usize,
+}
+
+// SAFETY: the owner only carries the raw parts; all access to the
+// elements goes through the disjoint `ChunkMut` views.
+unsafe impl Send for VecOwner {}
+unsafe impl Sync for VecOwner {}
+
+impl Drop for VecOwner {
+    fn drop(&mut self) {
+        // SAFETY: `split_chunks` forgot the original Vec, so these raw
+        // parts are exclusively ours; every `ChunkMut` holds an `Arc` to
+        // this owner, so none can be alive once Drop runs.
+        unsafe {
+            drop(Vec::from_raw_parts(self.ptr, self.len, self.cap));
+        }
+    }
+}
+
+/// Handle used to reassemble the vector after the chunks are done.
+pub struct ChunkGroup {
+    owner: Arc<VecOwner>,
+}
+
+impl std::fmt::Debug for ChunkGroup {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ChunkGroup")
+            .field("len", &self.owner.len)
+            .field("live_chunks", &(Arc::strong_count(&self.owner) - 1))
+            .finish()
+    }
+}
+
+impl ChunkGroup {
+    /// Reassemble the original `Vec<f32>` (same allocation, no copy).
+    /// Fails — handing the group back — while any [`ChunkMut`] is alive.
+    pub fn try_reclaim(self) -> Result<Vec<f32>, ChunkGroup> {
+        match Arc::try_unwrap(self.owner) {
+            Ok(owner) => {
+                // SAFETY: unique ownership proven by try_unwrap; forget
+                // the owner so its Drop cannot free the parts twice.
+                let v = unsafe { Vec::from_raw_parts(owner.ptr, owner.len, owner.cap) };
+                std::mem::forget(owner);
+                Ok(v)
+            }
+            Err(owner) => Err(ChunkGroup { owner }),
+        }
+    }
+}
+
+/// A sendable `&mut [f32]` view of one chunk of the split vector.
+pub struct ChunkMut {
+    ptr: *mut f32,
+    len: usize,
+    _owner: Arc<VecOwner>,
+}
+
+// SAFETY: chunks are constructed over non-overlapping ranges, so at most
+// one thread can touch any element through a ChunkMut; the Arc keeps the
+// backing allocation alive for as long as the view exists.
+unsafe impl Send for ChunkMut {}
+
+impl ChunkMut {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: disjointness + liveness per the struct invariant; `&mut
+        // self` prevents aliasing through this view.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+}
+
+/// Split `buf` into `<= chunk_elems`-sized disjoint mutable views.
+/// Returns the reassembly handle plus the chunks in offset order
+/// (empty chunk list for an empty `buf`).
+pub fn split_chunks(buf: Vec<f32>, chunk_elems: usize) -> (ChunkGroup, Vec<ChunkMut>) {
+    assert!(chunk_elems > 0, "chunk_elems must be positive");
+    let mut buf = std::mem::ManuallyDrop::new(buf);
+    let (ptr, len, cap) = (buf.as_mut_ptr(), buf.len(), buf.capacity());
+    let owner = Arc::new(VecOwner { ptr, len, cap });
+    let mut chunks = Vec::with_capacity(len.div_ceil(chunk_elems.max(1)));
+    let mut start = 0;
+    while start < len {
+        let n = chunk_elems.min(len - start);
+        chunks.push(ChunkMut {
+            // SAFETY: start + n <= len, so the view stays in bounds.
+            ptr: unsafe { ptr.add(start) },
+            len: n,
+            _owner: owner.clone(),
+        });
+        start += n;
+    }
+    (ChunkGroup { owner }, chunks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_partition_and_reclaim() {
+        let buf: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let (group, mut chunks) = split_chunks(buf, 4);
+        assert_eq!(
+            chunks.iter().map(|c| c.len()).collect::<Vec<_>>(),
+            vec![4, 4, 2]
+        );
+        for c in &mut chunks {
+            for x in c.as_mut_slice() {
+                *x += 100.0;
+            }
+        }
+        drop(chunks);
+        let back = group.try_reclaim().expect("all chunks dropped");
+        let expect: Vec<f32> = (0..10).map(|i| i as f32 + 100.0).collect();
+        assert_eq!(back, expect);
+    }
+
+    #[test]
+    fn reclaim_refused_while_chunk_alive() {
+        let (group, mut chunks) = split_chunks(vec![1.0, 2.0, 3.0], 2);
+        let last = chunks.pop().unwrap();
+        drop(chunks);
+        let group = group.try_reclaim().expect_err("one chunk still alive");
+        drop(last);
+        assert_eq!(group.try_reclaim().unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn concurrent_chunk_writes_from_threads() {
+        let buf = vec![0.0_f32; 1000];
+        let (group, chunks) = split_chunks(buf, 128);
+        std::thread::scope(|s| {
+            for (i, mut c) in chunks.into_iter().enumerate() {
+                s.spawn(move || {
+                    for x in c.as_mut_slice() {
+                        *x = i as f32;
+                    }
+                });
+            }
+        });
+        let back = group.try_reclaim().unwrap();
+        for (j, &x) in back.iter().enumerate() {
+            assert_eq!(x, (j / 128) as f32, "elem {j}");
+        }
+    }
+
+    #[test]
+    fn empty_vec_reclaims() {
+        let (group, chunks) = split_chunks(Vec::new(), 8);
+        assert!(chunks.is_empty());
+        assert!(group.try_reclaim().unwrap().is_empty());
+    }
+}

@@ -24,6 +24,7 @@ use std::ops::Range;
 use std::time::Instant;
 
 use crate::collectives::{ReduceOp, WorkHandle};
+use crate::comm::buf::FloatPool;
 use crate::group::{GroupCommReport, ProcessGroup};
 use crate::Result;
 
@@ -51,6 +52,15 @@ pub struct SyncReport {
     pub stage_seconds: f64,
     pub bytes: u64,
     pub staged_bytes: u64,
+    /// Payload bytes freshly allocated by the sync's collectives (pool
+    /// misses; near zero once the data-plane pools are warm).
+    pub alloc_bytes: u64,
+    /// Buffer takes served from the pool free lists.
+    pub pool_hits: u64,
+    /// Payload memcpy events inside the sync's collectives.
+    pub copies: u64,
+    /// High-water transport writer-queue bytes (gauge, max over buckets).
+    pub inflight_hw_bytes: u64,
 }
 
 impl SyncReport {
@@ -60,6 +70,13 @@ impl SyncReport {
         self.stage_seconds += r.inter.stage_seconds;
         self.bytes += r.total_bytes();
         self.staged_bytes += r.inter.staged_bytes;
+        self.alloc_bytes += r.intra.alloc_bytes + r.inter.alloc_bytes;
+        self.pool_hits += r.intra.pool_hits + r.inter.pool_hits;
+        self.copies += r.intra.copies + r.inter.copies;
+        self.inflight_hw_bytes = self
+            .inflight_hw_bytes
+            .max(r.intra.inflight_hw_bytes)
+            .max(r.inter.inflight_hw_bytes);
     }
 }
 
@@ -95,10 +112,16 @@ impl<'pg> DdpEngine<'pg> {
     /// Issue the bucketed all-reduce (SUM) of the flat gradient buffer.
     /// Every bucket goes out immediately; the process group pipelines
     /// them. Pair with [`DdpEngine::wait_grad_sync`].
+    ///
+    /// Bucket views are copied out of the flat buffer into pooled
+    /// hand-off vectors ([`FloatPool`]) — the one unavoidable copy of the
+    /// issue/wait model — and recycled on wait, so steady-state syncs
+    /// allocate nothing.
     pub fn issue_grad_sync(&self, grads: &[f32]) -> GradSync {
         let mut parts = Vec::new();
         for range in self.bucketizer.ranges(grads.len()) {
-            let buf = grads[range.clone()].to_vec();
+            let mut buf = FloatPool::global().take(range.len());
+            buf.copy_from_slice(&grads[range.clone()]);
             parts.push((range, self.pg.all_reduce_async(buf, ReduceOp::Sum)));
         }
         GradSync { parts }
@@ -107,13 +130,15 @@ impl<'pg> DdpEngine<'pg> {
     /// Wait for an issued gradient sync and copy the reduced buckets back
     /// into `grads` (the same buffer the sync was issued from). Only the
     /// time spent blocked *here* counts as exposed — comm that completed
-    /// while the caller was computing is overlap, not exposure.
+    /// while the caller was computing is overlap, not exposure. Hand-off
+    /// vectors go back to the [`FloatPool`] for the next sync.
     pub fn wait_grad_sync(&self, sync: GradSync, grads: &mut [f32]) -> Result<SyncReport> {
         let t_wait = Instant::now();
         let mut report = SyncReport::default();
         for (range, handle) in sync.parts {
             let (out, r) = handle.wait()?;
             grads[range].copy_from_slice(&out);
+            FloatPool::global().put(out);
             report.absorb(&r);
         }
         report.exposed_s = t_wait.elapsed().as_secs_f64();

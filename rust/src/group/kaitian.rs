@@ -1,5 +1,6 @@
 //! The KAITIAN meta process group: hybrid dispatch across vendor backends
-//! and the host relay, with a *pipelined* asynchronous data path.
+//! and the host relay, with a *pipelined*, *chunk-streamed* asynchronous
+//! data path.
 //!
 //! A heterogeneous all-reduce is a 3-stage pipeline (paper §III-B):
 //!
@@ -9,21 +10,29 @@
 //! stage C (bcast thread): vendor broadcast of the global result
 //! ```
 //!
-//! Each stage runs on its own ordered comm thread, so while bucket *k* is
-//! crossing the host relay (stage B, the slow hop), bucket *k+1* is
-//! already inside its vendor reduce (stage A) — the leaders' D2H→TCP→H2D
-//! relay latency is hidden behind intra-group work exactly like PyTorch
-//! DDP hides bucket all-reduces behind backward.
+//! Each stage runs on its own ordered comm thread, and a buffer larger
+//! than the configured `chunk_bytes` is split into disjoint chunk
+//! *slices* ([`crate::comm::split`]) that flow through the stages
+//! independently: while chunk *k* is crossing the host relay (stage B,
+//! the slow hop), chunk *k+1* is already inside its vendor reduce — so a
+//! single large tensor streams instead of moving stage-to-stage as one
+//! monolithic message. The chunks are views into the original
+//! allocation; the buffer is reassembled (same storage, no copy) when
+//! the last chunk completes.
 //!
 //! SPMD tag discipline: all tags are reserved on the *caller* thread at
 //! issue time (`reserve_tag`), in program order — identical on every rank
 //! — so stages may execute in any interleaving across threads without two
-//! ranks ever pairing different logical ops under one tag.
+//! ranks ever pairing different logical ops under one tag. Chunk counts
+//! are derived from the buffer length and the process-wide `chunk_bytes`,
+//! so they are identical across ranks too.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::backend::CollectiveBackend;
-use crate::collectives::{CommStats, CommThread, ReduceOp, WorkHandle};
+use crate::collectives::{CommQueue, CommStats, CommThread, ReduceOp, WorkHandle, WorkSender};
+use crate::comm::buf::chunk_bytes;
+use crate::comm::split::{split_chunks, ChunkGroup, ChunkMut};
 use crate::Result;
 
 use super::topology::Topology;
@@ -64,6 +73,140 @@ struct BcastPlan {
     tag_other_group: Option<u64>,
     /// The root's rank within its own vendor communicator.
     local_root: usize,
+}
+
+/// Pre-reserved tags for one chunk's pass through the 3-stage pipeline
+/// (built at issue time, SPMD order).
+struct ChunkTags {
+    tag_a: u64,
+    tag_b: Option<u64>,
+    tag_c: u64,
+}
+
+/// Shared completion state of one chunk-streamed hierarchical op.
+struct PipeInner {
+    group: Option<ChunkGroup>,
+    done: Option<WorkSender<(Vec<f32>, GroupCommReport)>>,
+    intra: CommStats,
+    inter: CommStats,
+    remaining: usize,
+}
+
+/// One chunk's pass through the 3-stage pipeline: the chunk slice, its
+/// pre-reserved tags, the backends, the downstream stage queues and the
+/// shared completion state. Each stage method runs on that stage's comm
+/// thread and hands `self` to the next queue.
+struct ChunkJob {
+    chunk: ChunkMut,
+    tags: ChunkTags,
+    op: ReduceOp,
+    rank: usize,
+    vendor: Arc<dyn CollectiveBackend>,
+    relay: Option<Arc<dyn CollectiveBackend>>,
+    inter_q: CommQueue,
+    bcast_q: CommQueue,
+    pipe: Arc<Mutex<PipeInner>>,
+}
+
+impl ChunkJob {
+    /// Stage A (intra thread): vendor all-reduce of this chunk inside
+    /// the homogeneous group, then hand off to the inter queue.
+    fn run_intra(mut self) {
+        let (op, tag) = (self.op, self.tags.tag_a);
+        let mut intra = CommStats::default();
+        match self.vendor.all_reduce_tagged(self.chunk.as_mut_slice(), op, tag) {
+            Err(e) => self.fail(e, "intra all_reduce"),
+            Ok(s) => {
+                intra.merge(&s);
+                let q = self.inter_q.clone();
+                q.submit(move || self.run_inter(intra));
+            }
+        }
+    }
+
+    /// Stage B (inter thread): leaders exchange partial aggregates over
+    /// the host relay; non-leaders pass straight through (their stage-C
+    /// recv blocks until the leader re-broadcasts).
+    fn run_inter(mut self, intra: CommStats) {
+        let op = self.op;
+        let mut inter = CommStats::default();
+        if let Some(relay) = self.relay.clone() {
+            let tag = self.tags.tag_b.expect("leaders reserve a relay tag");
+            match relay.all_reduce_tagged(self.chunk.as_mut_slice(), op, tag) {
+                Err(e) => return self.fail(e, "relay all_reduce"),
+                Ok(s) => inter.merge(&s),
+            }
+        }
+        let q = self.bcast_q.clone();
+        q.submit(move || self.run_bcast(intra, inter));
+    }
+
+    /// Stage C (bcast thread): the leader broadcasts the global result
+    /// back into its group (vendor path); terminal stage.
+    fn run_bcast(mut self, mut intra: CommStats, inter: CommStats) {
+        let tag = self.tags.tag_c;
+        match self.vendor.broadcast_tagged(self.chunk.as_mut_slice(), 0, tag) {
+            Err(e) => self.fail(e, "re-broadcast"),
+            Ok(s) => {
+                intra.merge(&s);
+                self.finish(Ok((intra, inter)));
+            }
+        }
+    }
+
+    fn fail(self, e: anyhow::Error, what: &str) {
+        let rank = self.rank;
+        self.finish(Err(e.context(format!("kaitian {what} rank {rank}"))));
+    }
+
+    /// Record this chunk's terminal outcome; the last chunk reassembles
+    /// the buffer (same allocation, no copy) and completes the handle.
+    /// The chunk view is dropped *before* the bookkeeping so the final
+    /// reclaim sees every view released.
+    fn finish(self, res: Result<(CommStats, CommStats)>) {
+        let ChunkJob {
+            chunk, rank, pipe, ..
+        } = self;
+        drop(chunk);
+        let mut st = pipe.lock().unwrap();
+        st.remaining -= 1;
+        match res {
+            Ok((ci, cx)) => {
+                st.intra.merge(&ci);
+                st.inter.merge(&cx);
+            }
+            Err(e) => {
+                // First failure completes the handle; later chunks only
+                // account down so the buffer still gets reclaimed/freed.
+                if let Some(done) = st.done.take() {
+                    done.send(Err(e));
+                }
+            }
+        }
+        if st.remaining > 0 {
+            return;
+        }
+        let group = st.group.take();
+        let done = st.done.take();
+        let intra = std::mem::take(&mut st.intra);
+        let inter = std::mem::take(&mut st.inter);
+        drop(st);
+        let buf = group.and_then(|g| g.try_reclaim().ok());
+        let Some(done) = done else { return };
+        match buf {
+            Some(buf) => done.send(Ok((
+                buf,
+                GroupCommReport {
+                    path: CommPath::Hierarchical,
+                    intra,
+                    inter,
+                },
+            ))),
+            None => done.send(Err(anyhow::anyhow!(
+                "kaitian rank {rank}: chunk pipeline failed to reclaim buffer"
+            ))),
+        }
+    }
 }
 
 /// Execute a hierarchical broadcast under a pre-reserved [`BcastPlan`].
@@ -139,6 +282,41 @@ impl ProcessGroupKaiTian {
         self.vendor.name()
     }
 
+    /// The pipeline's chunk granularity in f32 elements.
+    fn chunk_elems(&self) -> usize {
+        (chunk_bytes() / 4).max(1)
+    }
+
+    /// Reserve one chunk's stage tags in SPMD issue order.
+    fn reserve_chunk_tags(&self) -> ChunkTags {
+        ChunkTags {
+            tag_a: self.vendor.reserve_tag(),
+            tag_b: self.relay.as_ref().map(|r| r.reserve_tag()),
+            tag_c: self.vendor.reserve_tag(),
+        }
+    }
+
+    /// Run one chunk through the serial 3-step hierarchy in place (the
+    /// blocking path; also the per-chunk body the async pipeline runs
+    /// stage-by-stage). Chunking is identical on both paths, so they
+    /// stay bit-identical.
+    fn hetero_all_reduce_serial(
+        &self,
+        buf: &mut [f32],
+        op: ReduceOp,
+        tags: &ChunkTags,
+        intra: &mut CommStats,
+        inter: &mut CommStats,
+    ) -> Result<()> {
+        intra.merge(&self.vendor.all_reduce_tagged(buf, op, tags.tag_a)?);
+        if let Some(relay) = &self.relay {
+            let tag = tags.tag_b.expect("leaders reserve a relay tag");
+            inter.merge(&relay.all_reduce_tagged(buf, op, tag)?);
+        }
+        intra.merge(&self.vendor.broadcast_tagged(buf, 0, tags.tag_c)?);
+        Ok(())
+    }
+
     /// Build the tag plan for one hierarchical broadcast (issue-time, SPMD
     /// order). Each vendor communicator reserves exactly one tag — the
     /// branch its whole group takes — and leaders reserve one relay tag.
@@ -207,74 +385,46 @@ impl ProcessGroup for ProcessGroupKaiTian {
         }
 
         // Step 3: heterogeneous → hierarchical orchestration, pipelined
-        // across the three stage threads. Tags are reserved *here*, on the
-        // caller thread, in SPMD order.
-        let tag_a = self.vendor.reserve_tag();
-        let tag_b = self.relay.as_ref().map(|r| r.reserve_tag());
-        let tag_c = self.vendor.reserve_tag();
-
-        let vendor_a = self.vendor.clone();
-        let vendor_c = self.vendor.clone();
-        let relay = self.relay.clone();
-        let inter_q = self.inter.queue();
-        let bcast_q = self.bcast.queue();
+        // across the three stage threads; buffers larger than the chunk
+        // granularity stream through as disjoint chunk slices. Tags are
+        // reserved *here*, on the caller thread, in SPMD order (one tag
+        // set per chunk; chunk counts are identical on every rank).
+        let (group, chunks) = split_chunks(buf, self.chunk_elems());
+        if chunks.is_empty() {
+            // Empty buffer: nothing to communicate.
+            let buf = group.try_reclaim().unwrap_or_default();
+            return WorkHandle::ready(Ok((
+                buf,
+                GroupCommReport {
+                    path: CommPath::Hierarchical,
+                    intra: CommStats::default(),
+                    inter: CommStats::default(),
+                },
+            )));
+        }
         let (handle, done) = WorkHandle::pair();
+        let pipe = Arc::new(Mutex::new(PipeInner {
+            group: Some(group),
+            done: Some(done),
+            intra: CommStats::default(),
+            inter: CommStats::default(),
+            remaining: chunks.len(),
+        }));
 
-        // Stage A: aggregate within the homogeneous group via the vendor
-        // library (every member ends with the group partial sum; the
-        // leader, group-local rank 0, feeds it to the relay).
-        self.intra.submit(move || {
-            let mut buf = buf;
-            let mut intra = CommStats::default();
-            match vendor_a.all_reduce_tagged(&mut buf, op, tag_a) {
-                Err(e) => {
-                    done.send(Err(e.context(format!("kaitian intra all_reduce rank {rank}"))));
-                }
-                Ok(s) => {
-                    intra.merge(&s);
-                    // Stage B: leaders exchange partial aggregates over the
-                    // host relay; non-leaders pass straight through (their
-                    // stage-C recv blocks until the leader re-broadcasts).
-                    inter_q.submit(move || {
-                        let mut inter = CommStats::default();
-                        if let Some(relay) = &relay {
-                            let tag = tag_b.expect("leaders reserve a relay tag");
-                            match relay.all_reduce_tagged(&mut buf, op, tag) {
-                                Err(e) => {
-                                    done.send(Err(e.context(format!(
-                                        "kaitian relay all_reduce rank {rank}"
-                                    ))));
-                                    return;
-                                }
-                                Ok(s) => inter.merge(&s),
-                            }
-                        }
-                        // Stage C: leader broadcasts the global result back
-                        // into its group (vendor path).
-                        bcast_q.submit(move || {
-                            match vendor_c.broadcast_tagged(&mut buf, 0, tag_c) {
-                                Err(e) => {
-                                    done.send(Err(e.context(format!(
-                                        "kaitian re-broadcast rank {rank}"
-                                    ))));
-                                }
-                                Ok(s) => {
-                                    intra.merge(&s);
-                                    done.send(Ok((
-                                        buf,
-                                        GroupCommReport {
-                                            path: CommPath::Hierarchical,
-                                            intra,
-                                            inter,
-                                        },
-                                    )));
-                                }
-                            }
-                        });
-                    });
-                }
-            }
-        });
+        for chunk in chunks {
+            let job = ChunkJob {
+                chunk,
+                tags: self.reserve_chunk_tags(),
+                op,
+                rank,
+                vendor: self.vendor.clone(),
+                relay: self.relay.clone(),
+                inter_q: self.inter.queue(),
+                bcast_q: self.bcast.queue(),
+                pipe: pipe.clone(),
+            };
+            self.intra.submit(move || job.run_intra());
+        }
         handle
     }
 
@@ -301,7 +451,7 @@ impl ProcessGroup for ProcessGroupKaiTian {
         }
         // Hierarchical broadcast: tags reserved at issue time; the whole
         // 3-step sequence runs as one job (broadcasts are rare — params at
-        // start of training — so they don't need the bucket pipeline).
+        // start of training — so they don't need the chunk pipeline).
         let plan = self.plan_broadcast(root);
         let vendor = self.vendor.clone();
         let relay = self.relay.clone();
@@ -392,28 +542,31 @@ impl ProcessGroup for ProcessGroupKaiTian {
         Ok(())
     }
 
-    /// Inline blocking path (overrides the async-routed default): the
-    /// pre-refactor serial dispatch, kept honest for baselines — no
-    /// buffer copies, no thread hand-offs. Tags are still reserved in
-    /// caller program order, so mixing this with in-flight async ops is
-    /// safe.
+    /// Inline blocking path (overrides the async-routed default): serial
+    /// dispatch on the caller thread — no thread hand-offs. It walks the
+    /// *same* chunk boundaries as the async pipeline (same per-chunk ring
+    /// segmentation → same float associativity), so the two paths stay
+    /// bit-identical. Tags are still reserved in caller program order, so
+    /// mixing this with in-flight async ops is safe.
     fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<GroupCommReport> {
         if self.topo.is_homogeneous() {
             let tag = self.vendor.reserve_tag();
             let intra = self.vendor.all_reduce_tagged(buf, op, tag)?;
             return Ok(GroupCommReport::vendor(intra));
         }
-        let tag_a = self.vendor.reserve_tag();
-        let tag_b = self.relay.as_ref().map(|r| r.reserve_tag());
-        let tag_c = self.vendor.reserve_tag();
         let mut intra = CommStats::default();
         let mut inter = CommStats::default();
-        intra.merge(&self.vendor.all_reduce_tagged(buf, op, tag_a)?);
-        if let Some(relay) = &self.relay {
-            let tag = tag_b.expect("leaders reserve a relay tag");
-            inter.merge(&relay.all_reduce_tagged(buf, op, tag)?);
+        let chunk_elems = self.chunk_elems();
+        let mut start = 0;
+        loop {
+            let end = (start + chunk_elems).min(buf.len());
+            let tags = self.reserve_chunk_tags();
+            self.hetero_all_reduce_serial(&mut buf[start..end], op, &tags, &mut intra, &mut inter)?;
+            start = end;
+            if start >= buf.len() {
+                break;
+            }
         }
-        intra.merge(&self.vendor.broadcast_tagged(buf, 0, tag_c)?);
         Ok(GroupCommReport {
             path: CommPath::Hierarchical,
             intra,

@@ -30,6 +30,7 @@
 pub mod backend;
 pub mod bench;
 pub mod collectives;
+pub mod comm;
 pub mod config;
 pub mod data;
 pub mod ddp;

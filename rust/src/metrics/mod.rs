@@ -28,6 +28,13 @@ pub struct StepMetrics {
     pub update_s: f64,
     /// Bytes moved by this rank's collectives.
     pub comm_bytes: u64,
+    /// Payload bytes freshly allocated by the step's collectives (pool
+    /// misses; the pooled data plane drives this toward zero once warm).
+    pub alloc_bytes: u64,
+    /// Buffer takes served from the data-plane pool free lists.
+    pub pool_hits: u64,
+    /// Payload memcpy events inside the step's collectives.
+    pub copies: u64,
 }
 
 impl StepMetrics {
@@ -56,6 +63,9 @@ pub struct Accumulator {
     pub stage_s: f64,
     pub update_s: f64,
     pub comm_bytes: u64,
+    pub alloc_bytes: u64,
+    pub pool_hits: u64,
+    pub copies: u64,
     pub samples: usize,
 }
 
@@ -69,6 +79,9 @@ impl Accumulator {
         self.stage_s += m.stage_s;
         self.update_s += m.update_s;
         self.comm_bytes += m.comm_bytes;
+        self.alloc_bytes += m.alloc_bytes;
+        self.pool_hits += m.pool_hits;
+        self.copies += m.copies;
         self.samples += m.batch;
     }
 
@@ -101,6 +114,9 @@ impl Accumulator {
             ("stage_s", Json::num(self.stage_s)),
             ("update_s", Json::num(self.update_s)),
             ("comm_bytes", Json::num(self.comm_bytes as f64)),
+            ("alloc_bytes", Json::num(self.alloc_bytes as f64)),
+            ("pool_hits", Json::num(self.pool_hits as f64)),
+            ("copies", Json::num(self.copies as f64)),
             ("samples", Json::num(self.samples as f64)),
             ("throughput_sps", Json::num(self.throughput())),
         ])
@@ -285,6 +301,9 @@ mod tests {
             stage_s: 0.001,
             update_s: 0.01,
             comm_bytes: 1000,
+            alloc_bytes: 4096,
+            pool_hits: 2,
+            copies: 6,
         });
         acc.add(&StepMetrics {
             batch: 64,
@@ -296,9 +315,15 @@ mod tests {
             stage_s: 0.0,
             update_s: 0.01,
             comm_bytes: 1000,
+            alloc_bytes: 0,
+            pool_hits: 8,
+            copies: 6,
         });
         assert_eq!(acc.steps, 2);
         assert_eq!(acc.samples, 128);
+        assert_eq!(acc.alloc_bytes, 4096);
+        assert_eq!(acc.pool_hits, 10);
+        assert_eq!(acc.copies, 12);
         // total_s charges the exposed comm (0.035), not the busy sum (0.04).
         assert!((acc.total_s() - 0.255).abs() < 1e-12);
         assert!((acc.comm_exposed_s - 0.035).abs() < 1e-12);

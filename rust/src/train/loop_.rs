@@ -412,6 +412,9 @@ fn worker(
             m.comm_overlap_s = sync.overlapped_s;
             m.stage_s = sync.stage_seconds;
             m.comm_bytes = sync.bytes;
+            m.alloc_bytes = sync.alloc_bytes;
+            m.pool_hits = sync.pool_hits;
+            m.copies = sync.copies;
 
             // Fused optimizer update (grad_scale folds the 1/B average).
             let t2 = Instant::now();

@@ -1,8 +1,8 @@
 //! In-process transport: one mailbox per rank, senders push directly.
 //!
-//! This is the "vendor library" class of path in the simulation: a single
-//! memcpy hand-off between threads, no syscalls, no framing. The intra-
-//! group collectives of `NcclSim`/`CnclSim` run over this.
+//! This is the "vendor library" class of path in the simulation: a
+//! refcount hand-off between threads, no syscalls, no framing, no copy.
+//! The intra-group collectives of `NcclSim`/`CnclSim` run over this.
 
 use std::sync::Arc;
 
@@ -10,6 +10,7 @@ use anyhow::bail;
 
 use super::mailbox::{recv_timeout, Mailbox};
 use super::Transport;
+use crate::comm::buf::Buf;
 use crate::Result;
 
 /// Builder: create all endpoints of an in-process communicator at once.
@@ -53,7 +54,7 @@ impl Transport for InprocEndpoint {
         self.mailboxes.len()
     }
 
-    fn send(&self, peer: usize, tag: u64, data: Vec<u8>) -> Result<()> {
+    fn send(&self, peer: usize, tag: u64, data: Buf) -> Result<()> {
         if peer >= self.mailboxes.len() {
             bail!("send to rank {peer} but world is {}", self.mailboxes.len());
         }
@@ -61,7 +62,7 @@ impl Transport for InprocEndpoint {
         Ok(())
     }
 
-    fn recv(&self, peer: usize, tag: u64) -> Result<Vec<u8>> {
+    fn recv(&self, peer: usize, tag: u64) -> Result<Buf> {
         if peer >= self.mailboxes.len() {
             bail!("recv from rank {peer} but world is {}", self.mailboxes.len());
         }
@@ -84,9 +85,10 @@ mod tests {
         let e0 = eps.pop().unwrap();
         let h = std::thread::spawn(move || {
             let msg = e1.recv(0, 1).unwrap();
-            e1.send(0, 2, msg.iter().map(|b| b + 1).collect()).unwrap();
+            let bumped: Vec<u8> = msg.iter().map(|b| b + 1).collect();
+            e1.send(0, 2, Buf::from_vec(bumped)).unwrap();
         });
-        e0.send(1, 1, vec![10, 20]).unwrap();
+        e0.send(1, 1, Buf::copy_from_slice(&[10, 20])).unwrap();
         assert_eq!(e0.recv(1, 2).unwrap(), vec![11, 21]);
         h.join().unwrap();
     }
@@ -98,21 +100,33 @@ mod tests {
             assert_eq!(e.rank(), i);
             assert_eq!(e.world(), 4);
             assert_eq!(e.kind(), "inproc");
+            assert_eq!(e.inflight_high_water(), 0);
         }
     }
 
     #[test]
     fn out_of_range_peer_is_error() {
         let eps = InprocMesh::new(2);
-        assert!(eps[0].send(5, 0, vec![]).is_err());
+        assert!(eps[0].send(5, 0, Buf::empty()).is_err());
         assert!(eps[0].recv(5, 0).is_err());
     }
 
     #[test]
     fn self_send_works() {
         let eps = InprocMesh::new(1);
-        eps[0].send(0, 3, vec![7]).unwrap();
+        eps[0].send(0, 3, Buf::copy_from_slice(&[7])).unwrap();
         assert_eq!(eps[0].recv(0, 3).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn send_is_zero_copy_shared_storage() {
+        // Sending a slice of a frozen Buf moves a refcount, not bytes:
+        // the receiver observes the exact same backing storage window.
+        let eps = InprocMesh::new(2);
+        let payload = Buf::copy_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        eps[0].send(1, 1, payload.slice(2, 6)).unwrap();
+        let got = eps[1].recv(0, 1).unwrap();
+        assert_eq!(got, vec![3, 4, 5, 6]);
     }
 
     #[test]
@@ -122,7 +136,8 @@ mod tests {
             for e in &eps {
                 s.spawn(move || {
                     for p in 0..4 {
-                        e.send(p, 42, vec![e.rank() as u8]).unwrap();
+                        e.send(p, 42, Buf::copy_from_slice(&[e.rank() as u8]))
+                            .unwrap();
                     }
                     for p in 0..4 {
                         assert_eq!(e.recv(p, 42).unwrap(), vec![p as u8]);

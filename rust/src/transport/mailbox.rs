@@ -1,16 +1,27 @@
 //! Tag-matched message buffer shared by all transports.
 //!
-//! Incoming messages are queued under `(peer, tag)`; `recv` blocks on a
-//! condvar until a matching message arrives. This decouples send and recv
-//! ordering — exactly what collective algorithms need when every rank is
+//! Incoming messages are parked under `(peer, tag)`; `recv` blocks until
+//! a matching message arrives. This decouples send and recv ordering —
+//! exactly what collective algorithms need when every rank is
 //! simultaneously sending and receiving.
+//!
+//! Rebuilt for the zero-copy data plane: messages are [`Buf`]s (parking
+//! one is a refcount move, not a copy), and the single global
+//! `Mutex<HashMap>` + `notify_all` of the old design is replaced by
+//! sharded slot tables with one condvar *per (peer, tag) slot* — a push
+//! wakes only receivers of that slot, and concurrent (peer, tag) flows
+//! touch different locks. Slots are removed when drained (under the
+//! shard lock, so a racing push can never strand a message in an
+//! orphaned slot).
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::bail;
 
+use crate::comm::buf::Buf;
 use crate::Result;
 
 /// Default receive timeout: long enough for slow CI machines, short
@@ -30,66 +41,138 @@ pub fn recv_timeout() -> Duration {
     })
 }
 
-#[derive(Default)]
-struct Inner {
-    queues: HashMap<(usize, u64), VecDeque<Vec<u8>>>,
-    /// Set when the mesh is shutting down; wakes blocked receivers.
+/// Shard count: (peer, tag) flows spread across this many slot tables.
+const SHARDS: usize = 16;
+
+struct SlotState {
+    queue: VecDeque<Buf>,
     closed: bool,
 }
 
-/// One rank's incoming-message buffer.
-#[derive(Default)]
-pub struct Mailbox {
-    inner: Mutex<Inner>,
+/// One (peer, tag) flow: its queue plus a dedicated condvar so a push
+/// wakes only the receivers actually waiting for this flow.
+struct Slot {
+    state: Mutex<SlotState>,
     cv: Condvar,
+}
+
+impl Slot {
+    fn new(closed: bool) -> Self {
+        Self {
+            state: Mutex::new(SlotState {
+                queue: VecDeque::new(),
+                closed,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+#[derive(Default)]
+struct Shard {
+    slots: Mutex<HashMap<(usize, u64), Arc<Slot>>>,
+}
+
+/// One rank's incoming-message buffer.
+pub struct Mailbox {
+    shards: Vec<Shard>,
+    closed: AtomicBool,
+}
+
+impl Default for Mailbox {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[inline]
+fn shard_of(peer: usize, tag: u64) -> usize {
+    // Cheap avalanche over both keys; tags differ in high bits (op
+    // counter) and low bits (chunk index), so multiply-fold both.
+    let h = (peer as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(tag.wrapping_mul(0xD1B5_4A32_D192_ED03));
+    ((h >> 57) as usize) % SHARDS
 }
 
 impl Mailbox {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            shards: (0..SHARDS).map(|_| Shard::default()).collect(),
+            closed: AtomicBool::new(false),
+        }
     }
 
-    /// Deliver a message from `peer` under `tag`.
-    pub fn push(&self, peer: usize, tag: u64, data: Vec<u8>) {
-        let mut inner = self.inner.lock().unwrap();
-        inner.queues.entry((peer, tag)).or_default().push_back(data);
-        self.cv.notify_all();
+    /// Get-or-create the slot for `(peer, tag)`.
+    fn slot(&self, peer: usize, tag: u64) -> Arc<Slot> {
+        let shard = &self.shards[shard_of(peer, tag)];
+        let mut slots = shard.slots.lock().unwrap();
+        slots
+            .entry((peer, tag))
+            .or_insert_with(|| Arc::new(Slot::new(self.closed.load(Ordering::SeqCst))))
+            .clone()
+    }
+
+    /// Deliver a message from `peer` under `tag` (refcount move, no
+    /// copy). Wakes one receiver of exactly this flow.
+    pub fn push(&self, peer: usize, tag: u64, data: Buf) {
+        let shard = &self.shards[shard_of(peer, tag)];
+        let mut slots = shard.slots.lock().unwrap();
+        let slot = slots
+            .entry((peer, tag))
+            .or_insert_with(|| Arc::new(Slot::new(self.closed.load(Ordering::SeqCst))))
+            .clone();
+        // Push while still holding the shard lock: a concurrent `pop`
+        // that drained the slot removes it only under this lock, so the
+        // slot we just looked up is guaranteed to still be the live one.
+        let mut st = slot.state.lock().unwrap();
+        st.queue.push_back(data);
+        drop(st);
+        drop(slots);
+        slot.cv.notify_one();
     }
 
     /// Blocking, tag-matched receive with timeout.
     ///
-    /// Perf-pass P4: collective ring steps are latency-bound for small
-    /// messages, and a condvar sleep/wake costs ~10–20 µs per hop. We
-    /// first spin briefly (re-checking the queue) before parking — the
-    /// expected inter-arrival gap during an in-flight collective is well
-    /// under the spin budget.
-    pub fn pop(&self, peer: usize, tag: u64, timeout: Duration) -> Result<Vec<u8>> {
+    /// Perf-pass P4 (kept from the pre-shard design): collective ring
+    /// steps are latency-bound for small messages, and a condvar
+    /// sleep/wake costs ~10–20 µs per hop, so we spin briefly on the
+    /// slot before parking.
+    pub fn pop(&self, peer: usize, tag: u64, timeout: Duration) -> Result<Buf> {
+        let slot = self.slot(peer, tag);
+
         const SPIN_BUDGET: Duration = Duration::from_micros(40);
         let spin_start = Instant::now();
         while spin_start.elapsed() < SPIN_BUDGET {
             {
-                let mut inner = self.inner.lock().unwrap();
-                if let Some(q) = inner.queues.get_mut(&(peer, tag)) {
-                    if let Some(msg) = q.pop_front() {
-                        return Ok(msg);
+                let mut st = slot.state.lock().unwrap();
+                if let Some(msg) = st.queue.pop_front() {
+                    let drained = st.queue.is_empty();
+                    drop(st);
+                    if drained {
+                        self.try_remove(peer, tag, &slot);
                     }
+                    return Ok(msg);
                 }
-                if inner.closed {
-                    anyhow::bail!("mailbox closed while waiting for (peer={peer}, tag={tag})");
+                if st.closed {
+                    bail!("mailbox closed while waiting for (peer={peer}, tag={tag})");
                 }
             }
             std::hint::spin_loop();
         }
 
         let deadline = Instant::now() + timeout;
-        let mut inner = self.inner.lock().unwrap();
+        let mut st = slot.state.lock().unwrap();
         loop {
-            if let Some(q) = inner.queues.get_mut(&(peer, tag)) {
-                if let Some(msg) = q.pop_front() {
-                    return Ok(msg);
+            if let Some(msg) = st.queue.pop_front() {
+                let drained = st.queue.is_empty();
+                drop(st);
+                if drained {
+                    self.try_remove(peer, tag, &slot);
                 }
+                return Ok(msg);
             }
-            if inner.closed {
+            if st.closed {
                 bail!("mailbox closed while waiting for (peer={peer}, tag={tag})");
             }
             let now = Instant::now();
@@ -99,31 +182,58 @@ impl Mailbox {
                      likely a collective deadlock or a dead peer"
                 );
             }
-            let (guard, res) = self
-                .cv
-                .wait_timeout(inner, deadline - now)
-                .unwrap();
-            inner = guard;
-            if res.timed_out() {
-                // loop once more to re-check queue then fail
+            let (guard, _res) = slot.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Drop the slot from its shard if it is still drained and idle
+    /// (keeps long-running communicators from accumulating one empty
+    /// slot per retired tag). `ours` is the popper's own reference; a
+    /// slot is idle when the map holds the only *other* reference — any
+    /// concurrent waiter or pusher holds its own clone and keeps the
+    /// slot alive.
+    fn try_remove(&self, peer: usize, tag: u64, ours: &Arc<Slot>) {
+        let shard = &self.shards[shard_of(peer, tag)];
+        let mut slots = shard.slots.lock().unwrap();
+        let removable = match slots.get(&(peer, tag)) {
+            Some(current) => {
+                Arc::ptr_eq(current, ours)            // not replaced by a newer slot
+                    && Arc::strong_count(current) <= 2 // map + ours, no waiter/pusher
+                    && current.state.lock().unwrap().queue.is_empty() // not refilled
             }
+            None => false,
+        };
+        if removable {
+            slots.remove(&(peer, tag));
         }
     }
 
     /// Wake all blocked receivers with an error (mesh shutdown).
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
-        self.cv.notify_all();
+        self.closed.store(true, Ordering::SeqCst);
+        for shard in &self.shards {
+            let slots = shard.slots.lock().unwrap();
+            for slot in slots.values() {
+                slot.state.lock().unwrap().closed = true;
+                slot.cv.notify_all();
+            }
+        }
     }
 
     /// Number of queued (undelivered) messages — for tests/diagnostics.
     pub fn pending(&self) -> usize {
-        self.inner
-            .lock()
-            .unwrap()
-            .queues
-            .values()
-            .map(|q| q.len())
+        self.shards
+            .iter()
+            .map(|shard| {
+                shard
+                    .slots
+                    .lock()
+                    .unwrap()
+                    .values()
+                    .map(|slot| slot.state.lock().unwrap().queue.len())
+                    .sum::<usize>()
+            })
             .sum()
     }
 }
@@ -131,23 +241,27 @@ impl Mailbox {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
+
+    fn buf(bytes: &[u8]) -> Buf {
+        Buf::copy_from_slice(bytes)
+    }
 
     #[test]
     fn push_pop_fifo_per_tag() {
         let mb = Mailbox::new();
-        mb.push(0, 7, vec![1]);
-        mb.push(0, 7, vec![2]);
-        mb.push(0, 9, vec![3]);
+        mb.push(0, 7, buf(&[1]));
+        mb.push(0, 7, buf(&[2]));
+        mb.push(0, 9, buf(&[3]));
         assert_eq!(mb.pop(0, 7, RECV_TIMEOUT).unwrap(), vec![1]);
         assert_eq!(mb.pop(0, 9, RECV_TIMEOUT).unwrap(), vec![3]);
         assert_eq!(mb.pop(0, 7, RECV_TIMEOUT).unwrap(), vec![2]);
+        assert_eq!(mb.pending(), 0, "drained slots are removed");
     }
 
     #[test]
     fn tags_do_not_cross_match() {
         let mb = Mailbox::new();
-        mb.push(1, 5, vec![42]);
+        mb.push(1, 5, buf(&[42]));
         assert!(mb.pop(1, 6, Duration::from_millis(50)).is_err());
         assert_eq!(mb.pop(1, 5, RECV_TIMEOUT).unwrap(), vec![42]);
     }
@@ -158,7 +272,7 @@ mod tests {
         let mb2 = mb.clone();
         let h = std::thread::spawn(move || mb2.pop(3, 1, RECV_TIMEOUT).unwrap());
         std::thread::sleep(Duration::from_millis(20));
-        mb.push(3, 1, vec![9, 9]);
+        mb.push(3, 1, buf(&[9, 9]));
         assert_eq!(h.join().unwrap(), vec![9, 9]);
     }
 
@@ -177,5 +291,44 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         mb.close();
         assert!(h.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn close_then_pop_errors_without_waiting() {
+        let mb = Mailbox::new();
+        mb.close();
+        let t0 = Instant::now();
+        assert!(mb.pop(0, 1, Duration::from_secs(30)).is_err());
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn zero_length_messages_deliver() {
+        let mb = Mailbox::new();
+        mb.push(2, 4, Buf::empty());
+        assert!(mb.pop(2, 4, RECV_TIMEOUT).unwrap().is_empty());
+    }
+
+    #[test]
+    fn concurrent_flows_do_not_interfere() {
+        let mb = Arc::new(Mailbox::new());
+        std::thread::scope(|s| {
+            for tag in 0..8_u64 {
+                let mb = mb.clone();
+                s.spawn(move || {
+                    for i in 0..50_u8 {
+                        mb.push(tag as usize, tag, buf(&[i]));
+                    }
+                });
+                let mb = mb.clone();
+                s.spawn(move || {
+                    for i in 0..50_u8 {
+                        let got = mb.pop(tag as usize, tag, RECV_TIMEOUT).unwrap();
+                        assert_eq!(got, vec![i], "per-flow FIFO must hold");
+                    }
+                });
+            }
+        });
+        assert_eq!(mb.pending(), 0);
     }
 }

@@ -4,7 +4,8 @@
 //!
 //! * [`inproc`] — lock-based mailboxes between threads in one process.
 //!   Stands in for the on-device / intra-node DMA paths a vendor library
-//!   (NCCL/CNCL) would use: no syscalls, no serialization beyond one copy.
+//!   (NCCL/CNCL) would use: no syscalls, no serialization — a send is a
+//!   refcount move of the payload [`Buf`] into the peer's mailbox.
 //! * [`tcp`] — a full mesh of real TCP sockets (loopback or cross-host).
 //!   This is the Gloo-class host path: real kernel crossings, real
 //!   framing, honest overhead.
@@ -13,7 +14,9 @@
 //! concurrent operations (and pipeline chunks) from interleaving. Each
 //! endpoint owns a [`mailbox::Mailbox`] where incoming messages are
 //! buffered until the matching `recv` arrives, so send never blocks on the
-//! receiver being in the right state (the PyTorch/Gloo model).
+//! receiver being in the right state (the PyTorch/Gloo model) — except
+//! under the TCP writer's bytes-in-flight soft cap, which applies
+//! backpressure to a producer racing far ahead of a slow peer.
 
 pub mod inproc;
 pub mod mailbox;
@@ -22,6 +25,7 @@ pub mod tcp;
 pub use inproc::{InprocEndpoint, InprocMesh};
 pub use tcp::{TcpEndpoint, TcpMesh};
 
+use crate::comm::buf::Buf;
 use crate::Result;
 
 /// Point-to-point byte transport between the ranks of one communicator.
@@ -33,14 +37,22 @@ pub trait Transport: Send + Sync {
     fn world(&self) -> usize;
 
     /// Send `data` to `peer` under `tag`. Must not block on the peer
-    /// (buffered / queued sends).
-    fn send(&self, peer: usize, tag: u64, data: Vec<u8>) -> Result<()>;
+    /// being in a matching `recv` (buffered / queued sends); bounded
+    /// transports may briefly block for queue backpressure.
+    fn send(&self, peer: usize, tag: u64, data: Buf) -> Result<()>;
 
     /// Receive the next message from `peer` under `tag` (blocking).
-    fn recv(&self, peer: usize, tag: u64) -> Result<Vec<u8>>;
+    fn recv(&self, peer: usize, tag: u64) -> Result<Buf>;
 
     /// Human-readable transport kind (for metrics/reports).
     fn kind(&self) -> &'static str;
+
+    /// High-water mark of bytes queued-but-unwritten toward peers over
+    /// this endpoint's lifetime (non-zero only on transports with writer
+    /// queues, i.e. TCP).
+    fn inflight_high_water(&self) -> u64 {
+        0
+    }
 }
 
 /// Convert an f32 slice to little-endian bytes (one memcpy on LE targets;
@@ -48,20 +60,26 @@ pub trait Transport: Send + Sync {
 /// `extend_from_slice` loop cost ~1.1 ms/MiB; the memcpy is ~60 µs/MiB
 /// (see EXPERIMENTS.md §Perf).
 pub fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
-    let n = xs.len() * 4;
-    let mut out = vec![0_u8; n];
+    let mut out = vec![0_u8; xs.len() * 4];
+    fill_f32_bytes(&mut out, xs);
+    out
+}
+
+/// Serialize `xs` into `dst` as little-endian wire bytes (the allocation-
+/// free core of [`f32s_to_bytes`]; `dst.len()` must be `4 * xs.len()`).
+pub fn fill_f32_bytes(dst: &mut [u8], xs: &[f32]) {
+    assert_eq!(dst.len(), xs.len() * 4, "destination size mismatch");
     #[cfg(target_endian = "little")]
     // SAFETY: u8 has no alignment/validity requirements; the source spans
-    // exactly `n` initialized bytes; on little-endian targets the in-memory
-    // representation *is* the wire format.
+    // exactly `dst.len()` initialized bytes; on little-endian targets the
+    // in-memory representation *is* the wire format.
     unsafe {
-        std::ptr::copy_nonoverlapping(xs.as_ptr() as *const u8, out.as_mut_ptr(), n);
+        std::ptr::copy_nonoverlapping(xs.as_ptr() as *const u8, dst.as_mut_ptr(), dst.len());
     }
     #[cfg(target_endian = "big")]
     for (i, x) in xs.iter().enumerate() {
-        out[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+        dst[i * 4..i * 4 + 4].copy_from_slice(&x.to_le_bytes());
     }
-    out
 }
 
 /// Convert little-endian bytes back to f32s (one memcpy on LE targets).
@@ -69,19 +87,33 @@ pub fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
     if bytes.len() % 4 != 0 {
         anyhow::bail!("byte length {} not a multiple of 4", bytes.len());
     }
-    let n = bytes.len() / 4;
-    let mut out = vec![0.0_f32; n];
+    let mut out = vec![0.0_f32; bytes.len() / 4];
+    f32s_from_bytes(&mut out, bytes)?;
+    Ok(out)
+}
+
+/// Deserialize little-endian wire bytes into `dst` (the allocation-free
+/// core of [`bytes_to_f32s`]).
+pub fn f32s_from_bytes(dst: &mut [f32], bytes: &[u8]) -> Result<()> {
+    if bytes.len() != dst.len() * 4 {
+        anyhow::bail!(
+            "got {} wire bytes for {} f32 elements",
+            bytes.len(),
+            dst.len()
+        );
+    }
     #[cfg(target_endian = "little")]
-    // SAFETY: the destination Vec owns `n * 4` bytes of properly aligned
-    // f32 storage; every bit pattern is a valid f32.
+    // SAFETY: the destination slice owns `dst.len() * 4` bytes of properly
+    // aligned f32 storage; every bit pattern is a valid f32; u8 reads have
+    // no alignment requirement.
     unsafe {
-        std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, bytes.len());
+        std::ptr::copy_nonoverlapping(bytes.as_ptr(), dst.as_mut_ptr() as *mut u8, bytes.len());
     }
     #[cfg(target_endian = "big")]
-    for (i, c) in bytes.chunks_exact(4).enumerate() {
-        out[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    for (d, c) in dst.iter_mut().zip(bytes.chunks_exact(4)) {
+        *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -98,5 +130,18 @@ mod tests {
     #[test]
     fn bad_byte_len_rejected() {
         assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
+        let mut dst = [0.0_f32; 2];
+        assert!(f32s_from_bytes(&mut dst, &[0; 4]).is_err());
+    }
+
+    #[test]
+    fn in_place_fill_matches_allocating_path() {
+        let xs = vec![3.25_f32, -1.0, 1e-20];
+        let mut dst = vec![0_u8; 12];
+        fill_f32_bytes(&mut dst, &xs);
+        assert_eq!(dst, f32s_to_bytes(&xs));
+        let mut back = vec![0.0_f32; 3];
+        f32s_from_bytes(&mut back, &dst).unwrap();
+        assert_eq!(back, xs);
     }
 }

@@ -1,10 +1,18 @@
 //! TCP mesh transport: the host-staged (Gloo-class) path.
 //!
 //! A full mesh of real sockets. Each connection gets a writer thread
-//! (drains an unbounded queue, so `send` never blocks — avoiding the
-//! classic ring-collective head-of-line deadlock when both peers write
-//! simultaneously) and a reader thread (demuxes frames into the rank's
-//! [`Mailbox`]).
+//! (drains a queue, so `send` never blocks on the peer's recv state —
+//! avoiding the classic ring-collective head-of-line deadlock when both
+//! peers write simultaneously) and a reader thread (demuxes frames into
+//! pooled buffers in the rank's [`Mailbox`]).
+//!
+//! Zero-copy data plane: a queued frame is a [`Buf`] (refcount move into
+//! the writer), and the reader fills a [`BufPool`] buffer per frame, so
+//! steady-state traffic allocates nothing. The writer queue is *bounded*
+//! in bytes: a producer racing ahead of a slow peer blocks in `send`
+//! (soft cap — it still errors out after the recv timeout instead of
+//! deadlocking on a dead peer), and the endpoint exposes a
+//! bytes-in-flight high-water gauge for `CommStats`.
 //!
 //! Frame format (little-endian):
 //! `[tag: u64][len: u64][payload: len bytes]`
@@ -13,7 +21,7 @@
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -21,7 +29,100 @@ use anyhow::{bail, Context};
 
 use super::mailbox::{recv_timeout, Mailbox};
 use super::Transport;
+use crate::comm::buf::{Buf, BufPool};
 use crate::Result;
+
+/// Default bytes-in-flight soft cap per endpoint (all peers combined).
+/// Overridable via `KAITIAN_TCP_INFLIGHT_CAP` (`0` disables the cap).
+pub const DEFAULT_INFLIGHT_CAP: u64 = 64 << 20;
+
+/// The configured soft cap (`None` = unbounded, the pre-refactor
+/// behavior).
+fn inflight_cap() -> Option<u64> {
+    static CACHED: OnceLock<Option<u64>> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        match std::env::var("KAITIAN_TCP_INFLIGHT_CAP")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+        {
+            Some(0) => None,
+            Some(v) => Some(v),
+            None => Some(DEFAULT_INFLIGHT_CAP),
+        }
+    })
+}
+
+/// Bytes queued to writer threads but not yet written to a socket.
+/// `add` applies the soft-cap backpressure; writers call `sub` after the
+/// frame hits the wire (or `poison` when the link dies, so blocked
+/// senders fail fast instead of waiting out the cap).
+struct Inflight {
+    state: Mutex<InflightState>,
+    cv: Condvar,
+    cap: Option<u64>,
+    high_water: AtomicU64,
+}
+
+struct InflightState {
+    bytes: u64,
+    dead: bool,
+}
+
+impl Inflight {
+    fn new(cap: Option<u64>) -> Self {
+        Self {
+            state: Mutex::new(InflightState {
+                bytes: 0,
+                dead: false,
+            }),
+            cv: Condvar::new(),
+            cap,
+            high_water: AtomicU64::new(0),
+        }
+    }
+
+    /// Account `n` queued bytes, blocking while the cap is exceeded.
+    fn add(&self, n: u64) -> Result<()> {
+        let deadline = std::time::Instant::now() + recv_timeout();
+        let mut st = self.state.lock().unwrap();
+        if let Some(cap) = self.cap {
+            // Always admit at least one frame so an oversize frame can
+            // never wedge the queue.
+            while st.bytes > 0 && st.bytes + n > cap {
+                if st.dead {
+                    bail!("tcp link closed with {} bytes in flight", st.bytes);
+                }
+                let now = std::time::Instant::now();
+                if now >= deadline {
+                    bail!(
+                        "tcp send backpressure timeout: {} bytes in flight (cap {cap})",
+                        st.bytes
+                    );
+                }
+                let (guard, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+            }
+        }
+        if st.dead {
+            bail!("tcp link closed (writer thread gone)");
+        }
+        st.bytes += n;
+        self.high_water.fetch_max(st.bytes, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn sub(&self, n: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.bytes = st.bytes.saturating_sub(n);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn poison(&self) {
+        self.state.lock().unwrap().dead = true;
+        self.cv.notify_all();
+    }
+}
 
 /// Builder for a TCP mesh communicator.
 pub struct TcpMesh;
@@ -30,6 +131,13 @@ impl TcpMesh {
     /// Create an all-loopback mesh for `world` ranks in one process
     /// (used by tests and the single-host launcher). Returns endpoints.
     pub fn loopback(world: usize) -> Result<Vec<TcpEndpoint>> {
+        Self::loopback_with_cap(world, inflight_cap())
+    }
+
+    /// Loopback mesh with an explicit bytes-in-flight soft cap
+    /// (`None` = unbounded). Tests and benches use this to exercise
+    /// writer backpressure deterministically.
+    pub fn loopback_with_cap(world: usize, cap: Option<u64>) -> Result<Vec<TcpEndpoint>> {
         // Bind one listener per rank on an ephemeral port.
         let listeners: Vec<TcpListener> = (0..world)
             .map(|_| TcpListener::bind("127.0.0.1:0").context("bind loopback"))
@@ -45,7 +153,9 @@ impl TcpMesh {
             .enumerate()
             .map(|(rank, listener)| {
                 let addrs = addrs.clone();
-                std::thread::spawn(move || TcpEndpoint::connect(rank, &addrs, listener))
+                std::thread::spawn(move || {
+                    TcpEndpoint::connect_with_cap(rank, &addrs, listener, cap)
+                })
             })
             .collect();
         let mut eps: Vec<TcpEndpoint> = Vec::with_capacity(world);
@@ -58,7 +168,7 @@ impl TcpMesh {
 }
 
 enum WriterMsg {
-    Frame(u64, Vec<u8>),
+    Frame(u64, Buf),
     Shutdown,
 }
 
@@ -75,15 +185,27 @@ pub struct TcpEndpoint {
     links: Vec<Option<PeerLink>>,
     threads: Vec<JoinHandle<()>>,
     bytes_sent: Arc<AtomicU64>,
+    inflight: Arc<Inflight>,
 }
 
 impl TcpEndpoint {
     /// Establish the full mesh for `rank` given everyone's listen address.
     /// Dials every higher rank; accepts connections from every lower rank.
     pub fn connect(rank: usize, addrs: &[SocketAddr], listener: TcpListener) -> Result<Self> {
+        Self::connect_with_cap(rank, addrs, listener, inflight_cap())
+    }
+
+    /// [`TcpEndpoint::connect`] with an explicit writer-queue soft cap.
+    pub fn connect_with_cap(
+        rank: usize,
+        addrs: &[SocketAddr],
+        listener: TcpListener,
+        cap: Option<u64>,
+    ) -> Result<Self> {
         let world = addrs.len();
         let mailbox = Arc::new(Mailbox::new());
         let bytes_sent = Arc::new(AtomicU64::new(0));
+        let inflight = Arc::new(Inflight::new(cap));
         let mut streams: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
 
         // Dial higher ranks (retry briefly: the peer may not be listening
@@ -131,8 +253,9 @@ impl TcpEndpoint {
                     let (tx, rx) = mpsc::channel::<WriterMsg>();
                     let write_half = stream.try_clone().context("clone for writer")?;
                     let sent = bytes_sent.clone();
+                    let infl = inflight.clone();
                     threads.push(std::thread::spawn(move || {
-                        writer_loop(write_half, rx, sent);
+                        writer_loop(write_half, rx, sent, infl);
                     }));
                     let mb = mailbox.clone();
                     threads.push(std::thread::spawn(move || {
@@ -150,6 +273,7 @@ impl TcpEndpoint {
             links,
             threads,
             bytes_sent,
+            inflight,
         })
     }
 
@@ -159,30 +283,37 @@ impl TcpEndpoint {
     }
 }
 
-fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<WriterMsg>, sent: Arc<AtomicU64>) {
+fn writer_loop(
+    stream: TcpStream,
+    rx: mpsc::Receiver<WriterMsg>,
+    sent: Arc<AtomicU64>,
+    inflight: Arc<Inflight>,
+) {
     let mut w = BufWriter::new(stream);
     while let Ok(msg) = rx.recv() {
         match msg {
             WriterMsg::Frame(tag, data) => {
-                if w.write_all(&tag.to_le_bytes()).is_err() {
+                let n = data.len() as u64;
+                let ok = w.write_all(&tag.to_le_bytes()).is_ok()
+                    && w.write_all(&n.to_le_bytes()).is_ok()
+                    && w.write_all(&data).is_ok()
+                    // Flush eagerly: collectives are latency-sensitive
+                    // and message-oriented.
+                    && w.flush().is_ok();
+                if !ok {
+                    inflight.poison();
                     return;
                 }
-                if w.write_all(&(data.len() as u64).to_le_bytes()).is_err() {
-                    return;
-                }
-                if w.write_all(&data).is_err() {
-                    return;
-                }
-                // Flush eagerly: collectives are latency-sensitive and
-                // message-oriented.
-                if w.flush().is_err() {
-                    return;
-                }
-                sent.fetch_add(data.len() as u64, Ordering::Relaxed);
+                sent.fetch_add(n, Ordering::Relaxed);
+                inflight.sub(n);
             }
-            WriterMsg::Shutdown => return,
+            WriterMsg::Shutdown => {
+                inflight.poison();
+                return;
+            }
         }
     }
+    inflight.poison();
 }
 
 fn reader_loop(stream: TcpStream, peer: usize, mailbox: Arc<Mailbox>) {
@@ -197,12 +328,14 @@ fn reader_loop(stream: TcpStream, peer: usize, mailbox: Arc<Mailbox>) {
         }
         let tag = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
         let len = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
-        let mut data = vec![0_u8; len];
-        if r.read_exact(&mut data).is_err() {
+        // Frame lands in a pooled buffer: steady-state reads allocate
+        // nothing once the pool is warm.
+        let mut data = BufPool::global().take(len);
+        if r.read_exact(data.as_mut_slice()).is_err() {
             mailbox.close();
             return;
         }
-        mailbox.push(peer, tag, data);
+        mailbox.push(peer, tag, data.freeze());
     }
 }
 
@@ -215,7 +348,7 @@ impl Transport for TcpEndpoint {
         self.world
     }
 
-    fn send(&self, peer: usize, tag: u64, data: Vec<u8>) -> Result<()> {
+    fn send(&self, peer: usize, tag: u64, data: Buf) -> Result<()> {
         if peer == self.rank {
             // Loop back locally; no socket for self.
             self.mailbox.push(peer, tag, data);
@@ -226,18 +359,23 @@ impl Transport for TcpEndpoint {
             .get(peer)
             .and_then(|l| l.as_ref())
             .ok_or_else(|| anyhow::anyhow!("no link to rank {peer}"))?;
+        self.inflight.add(data.len() as u64)?;
         link.queue
             .send(WriterMsg::Frame(tag, data))
             .map_err(|_| anyhow::anyhow!("writer thread for rank {peer} is gone"))?;
         Ok(())
     }
 
-    fn recv(&self, peer: usize, tag: u64) -> Result<Vec<u8>> {
+    fn recv(&self, peer: usize, tag: u64) -> Result<Buf> {
         self.mailbox.pop(peer, tag, recv_timeout())
     }
 
     fn kind(&self) -> &'static str {
         "tcp"
+    }
+
+    fn inflight_high_water(&self) -> u64 {
+        self.inflight.high_water.load(Ordering::Relaxed)
     }
 }
 
@@ -267,7 +405,7 @@ mod tests {
             let msg = e1.recv(0, 1).unwrap();
             e1.send(0, 2, msg).unwrap();
         });
-        e0.send(1, 1, vec![1, 2, 3]).unwrap();
+        e0.send(1, 1, Buf::copy_from_slice(&[1, 2, 3])).unwrap();
         assert_eq!(e0.recv(1, 2).unwrap(), vec![1, 2, 3]);
         h.join().unwrap();
     }
@@ -279,7 +417,8 @@ mod tests {
             for e in &eps {
                 s.spawn(move || {
                     for p in 0..4 {
-                        e.send(p, 9, vec![e.rank() as u8; 3]).unwrap();
+                        e.send(p, 9, Buf::copy_from_slice(&[e.rank() as u8; 3]))
+                            .unwrap();
                     }
                     for p in 0..4 {
                         assert_eq!(e.recv(p, 9).unwrap(), vec![p as u8; 3]);
@@ -294,7 +433,7 @@ mod tests {
         // Both ranks send 4 MiB simultaneously — queued writers must
         // prevent the write-write deadlock.
         let eps = TcpMesh::loopback(2).unwrap();
-        let big = vec![0xAB_u8; 4 << 20];
+        let big = Buf::from_vec(vec![0xAB_u8; 4 << 20]);
         std::thread::scope(|s| {
             for e in &eps {
                 let big = big.clone();
@@ -311,8 +450,23 @@ mod tests {
     #[test]
     fn bytes_sent_accounting() {
         let eps = TcpMesh::loopback(2).unwrap();
-        eps[0].send(1, 1, vec![0; 1000]).unwrap();
+        eps[0].send(1, 1, Buf::from_vec(vec![0; 1000])).unwrap();
         let _ = eps[1].recv(0, 1).unwrap();
         assert!(eps[0].bytes_sent() >= 1000);
+    }
+
+    #[test]
+    fn inflight_gauge_rises_with_traffic() {
+        let eps = TcpMesh::loopback(2).unwrap();
+        for _ in 0..4 {
+            eps[0].send(1, 7, Buf::from_vec(vec![0; 10_000])).unwrap();
+        }
+        for _ in 0..4 {
+            let _ = eps[1].recv(0, 7).unwrap();
+        }
+        assert!(
+            eps[0].inflight_high_water() >= 10_000,
+            "at least one frame must have been observed in flight"
+        );
     }
 }

@@ -1,0 +1,171 @@
+//! Multi-chunk streaming through the KaiTian 3-stage pipeline (ISSUE 3
+//! tentpole): with `chunk_bytes` forced small, every bucket splits into
+//! many chunk slices that flow through the vendor-reduce / host-relay /
+//! re-broadcast stage threads independently. The pipelined path must
+//! stay bit-identical to the serial blocking path (which walks the same
+//! chunk boundaries), and many in-flight chunked ops must never misalign
+//! tags across ranks.
+//!
+//! `chunk_bytes` is process-global, so these tests serialize on a lock
+//! and restore the default via an RAII guard (panic-safe).
+
+use std::sync::{Mutex, MutexGuard};
+
+use kaitian::collectives::ReduceOp;
+use kaitian::comm::buf::{set_chunk_bytes, DEFAULT_CHUNK_BYTES};
+use kaitian::ddp::DdpEngine;
+use kaitian::device::parse_cluster;
+use kaitian::group::{build_cluster, ClusterHandles, GroupMode, RelayKind};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Hold the serialization lock with a small chunk size; restore the
+/// default on drop (even on panic).
+struct ChunkOverride {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl ChunkOverride {
+    fn new(bytes: usize) -> Self {
+        let lock = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+        set_chunk_bytes(bytes);
+        Self { _lock: lock }
+    }
+}
+
+impl Drop for ChunkOverride {
+    fn drop(&mut self) {
+        set_chunk_bytes(DEFAULT_CHUNK_BYTES);
+    }
+}
+
+fn grads_for(rank: usize, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| ((i % 97) as f32 - 48.0) * 0.0625 * (rank as f32 + 1.0) + i as f32 * 1e-4)
+        .collect()
+}
+
+fn run_sync(handles: &ClusterHandles, n: usize, bucket: usize, pipelined: bool) -> Vec<Vec<f32>> {
+    std::thread::scope(|s| {
+        let hs: Vec<_> = handles
+            .groups
+            .iter()
+            .map(|g| {
+                s.spawn(move || {
+                    let ddp = DdpEngine::new(g.as_ref(), bucket);
+                    let mut grads = grads_for(g.rank(), n);
+                    let rep = if pipelined {
+                        ddp.all_reduce_grads(&mut grads).unwrap()
+                    } else {
+                        ddp.all_reduce_grads_blocking(&mut grads).unwrap()
+                    };
+                    assert!(rep.buckets >= 1);
+                    grads
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[test]
+fn chunked_pipeline_bit_identical_to_blocking() {
+    // 1 KiB chunks, 16 KiB buckets: 16 chunk slices stream per bucket.
+    let _chunks = ChunkOverride::new(1 << 10);
+    for spec in ["1G+2M", "2G+2M"] {
+        let devices = parse_cluster(spec).unwrap();
+        let n = 30_000;
+        let bucket = 16 << 10;
+        let blocking = {
+            let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+            run_sync(&handles, n, bucket, false)
+        };
+        let pipelined = {
+            let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+            run_sync(&handles, n, bucket, true)
+        };
+        assert_eq!(
+            blocking, pipelined,
+            "{spec}: chunk-streamed sync must be bit-identical to blocking"
+        );
+        for r in 1..pipelined.len() {
+            assert_eq!(pipelined[0], pipelined[r], "{spec}: replica divergence");
+        }
+    }
+}
+
+#[test]
+fn chunked_sync_sums_exactly() {
+    // Integer-valued gradients: exact expected sums independent of
+    // chunking/association order.
+    let _chunks = ChunkOverride::new(512);
+    let devices = parse_cluster("1G+2M").unwrap();
+    let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+    let n = 10_000;
+    let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let hs: Vec<_> = handles
+            .groups
+            .iter()
+            .map(|g| {
+                s.spawn(move || {
+                    let ddp = DdpEngine::new(g.as_ref(), 8 << 10);
+                    let mut grads: Vec<f32> =
+                        (0..n).map(|i| (i % 17) as f32 * (g.rank() + 1) as f32).collect();
+                    let rep = ddp.all_reduce_grads(&mut grads).unwrap();
+                    assert!(rep.buckets > 1);
+                    grads
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let expect: Vec<f32> = (0..n).map(|i| (i % 17) as f32 * 6.0).collect();
+    for o in out {
+        assert_eq!(o, expect);
+    }
+}
+
+#[test]
+fn many_inflight_chunked_ops_stay_aligned() {
+    // Several chunked all-reduces in flight, waited newest-first: chunk
+    // tags are reserved per chunk at issue time, so interleavings across
+    // the stage threads must never pair mismatched chunks.
+    let _chunks = ChunkOverride::new(256);
+    let devices = parse_cluster("1G+2M").unwrap();
+    let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+    let world = devices.len();
+    const OPS: usize = 8;
+    let n = 1000; // 256-byte chunks -> ~16 chunks per op
+    let out: Vec<Vec<Vec<f32>>> = std::thread::scope(|s| {
+        let hs: Vec<_> = handles
+            .groups
+            .iter()
+            .map(|g| {
+                s.spawn(move || {
+                    let mut issued = Vec::new();
+                    for k in 0..OPS {
+                        let buf: Vec<f32> =
+                            (0..n).map(|i| (k * 100 + i % 50) as f32 + g.rank() as f32).collect();
+                        issued.push(g.all_reduce_async(buf, ReduceOp::Sum));
+                    }
+                    let mut results = vec![Vec::new(); OPS];
+                    for k in (0..OPS).rev() {
+                        let (buf, _) = issued.pop().unwrap().wait().unwrap();
+                        results[k] = buf;
+                    }
+                    results
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let rank_sum: f32 = (0..world).map(|r| r as f32).sum();
+    for per_rank in &out {
+        for (k, buf) in per_rank.iter().enumerate() {
+            let expect: Vec<f32> = (0..n)
+                .map(|i| world as f32 * (k * 100 + i % 50) as f32 + rank_sum)
+                .collect();
+            assert_eq!(buf, &expect, "op {k} misaligned");
+        }
+    }
+}
