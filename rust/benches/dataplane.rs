@@ -14,6 +14,12 @@
 //!
 //! Run: `cargo bench --bench dataplane [-- --quick]`
 
+//! Also measured here: the specialized `ReduceOp::Sum` wire-fold loop
+//! (`fold_bytes`) against the pre-specialization per-element `apply`
+//! dispatch (`fold_bytes_via_apply`) — the fold is the single hottest
+//! loop of gradient aggregation, so its win lands in
+//! `results/dataplane.json` next to the allocation numbers.
+
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -151,6 +157,47 @@ fn main() -> kaitian::Result<()> {
                 reduction * 100.0
             );
         }
+    }
+
+    // --- specialized Sum wire-fold vs generic per-element apply ------
+    // One 4 MiB accumulator folded repeatedly from wire bytes; the
+    // specialized loop must not be slower than the dispatching baseline
+    // (in practice it vectorizes and wins; only report, don't gate on
+    // CI timing).
+    {
+        let n = 1 << 20; // 4 MiB of f32
+        let fold_iters = if quick { 10 } else { 40 };
+        let incoming: Vec<f32> = (0..n).map(|i| (i % 97) as f32 * 0.25).collect();
+        let wire = kaitian::transport::f32s_to_bytes(&incoming);
+        let mut acc = vec![1.0_f32; n];
+        let t0 = std::time::Instant::now();
+        for _ in 0..fold_iters {
+            ReduceOp::Sum.fold_bytes_via_apply(&mut acc, &wire).unwrap();
+        }
+        let generic_s = t0.elapsed().as_secs_f64() / fold_iters as f64;
+        std::hint::black_box(&acc);
+        let mut acc2 = vec![1.0_f32; n];
+        let t1 = std::time::Instant::now();
+        for _ in 0..fold_iters {
+            ReduceOp::Sum.fold_bytes(&mut acc2, &wire).unwrap();
+        }
+        let specialized_s = t1.elapsed().as_secs_f64() / fold_iters as f64;
+        std::hint::black_box(&acc2);
+        let speedup = generic_s / specialized_s.max(1e-12);
+        println!(
+            "fold_sum (4 MiB): generic {}/op, specialized {}/op ({speedup:.2}x)\n",
+            kaitian::util::fmt_secs(generic_s),
+            kaitian::util::fmt_secs(specialized_s),
+        );
+        json.insert(
+            "fold_sum".to_string(),
+            Json::obj(vec![
+                ("bytes", Json::num((n * 4) as f64)),
+                ("generic_apply_s_per_op", Json::num(generic_s)),
+                ("specialized_s_per_op", Json::num(specialized_s)),
+                ("speedup", Json::num(speedup)),
+            ]),
+        );
     }
 
     let pool_stats = BufPool::global().stats();

@@ -1,0 +1,124 @@
+//! Bench: sharded (ZeRO-1-style) vs all-reduce gradient sync.
+//!
+//! The sharded mode replaces the bucketed all-reduce with one
+//! reduce-scatter (each rank owns 1/world of the reduced flat gradient)
+//! plus an all-gather of the updated parameter shards. Per sync that is
+//! `(w-1)/w·n` up + `(w-1)/w·n` down versus the all-reduce's
+//! `2(w-1)/w·n` — byte-neutral on a flat topology and within
+//! `1 + 1/world` of the all-reduce on the hierarchical one (the leaders'
+//! padded block exchange costs the extra sliver).
+//!
+//! Acceptance gate (ISSUE 4): cluster-total sharded bytes per step must
+//! be ≤ `(1 + 1/world) ×` the all-reduce path's. Wall-clock is reported
+//! alongside (not asserted — CI jitter).
+//!
+//! Run: `cargo bench --bench sharded_ddp [-- --quick]`
+
+use std::collections::BTreeMap;
+
+use kaitian::ddp::DdpEngine;
+use kaitian::device::parse_cluster;
+use kaitian::group::{build_cluster, GroupMode, RelayKind};
+use kaitian::metrics::MarkdownTable;
+use kaitian::util::json::Json;
+
+/// Per-step (cluster-total bytes, straggler wall seconds) for one mode.
+fn measure(spec: &str, n: usize, iters: usize, sharded: bool) -> kaitian::Result<(u64, f64)> {
+    let devices = parse_cluster(spec)?;
+    let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian)?;
+    let per_rank: Vec<(u64, f64)> = std::thread::scope(|s| {
+        let hs: Vec<_> = handles
+            .groups
+            .iter()
+            .map(|g| {
+                s.spawn(move || {
+                    let ddp = DdpEngine::new(g.as_ref(), 25 << 20);
+                    let mut grads: Vec<f32> =
+                        (0..n).map(|i| (i % 31) as f32 * 0.5 + g.rank() as f32).collect();
+                    let mut params = vec![0.0_f32; n];
+                    // Warmup (pools + routes).
+                    ddp.all_reduce_grads(&mut grads).unwrap();
+                    let t0 = std::time::Instant::now();
+                    let mut bytes = 0_u64;
+                    for _ in 0..iters {
+                        if sharded {
+                            let sync = ddp.issue_sharded_grad_sync(&grads);
+                            let rep = ddp.wait_sharded_grad_sync(sync, &mut grads).unwrap();
+                            bytes += rep.bytes;
+                            let gather = ddp.all_gather_shards(&mut params).unwrap();
+                            bytes += gather.bytes;
+                        } else {
+                            let rep = ddp.all_reduce_grads(&mut grads).unwrap();
+                            bytes += rep.bytes;
+                        }
+                    }
+                    (bytes, t0.elapsed().as_secs_f64())
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let total: u64 = per_rank.iter().map(|r| r.0).sum();
+    let wall = per_rank.iter().map(|r| r.1).fold(0.0, f64::max);
+    Ok((total / iters as u64, wall / iters as f64))
+}
+
+fn main() -> kaitian::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 3 } else { 8 };
+    let n = if quick { 1 << 18 } else { 1 << 20 }; // 1 MiB / 4 MiB flat grads
+
+    let mut table = MarkdownTable::new(&[
+        "cluster",
+        "grads",
+        "allreduce bytes/step",
+        "sharded bytes/step",
+        "ratio",
+        "gate (1 + 1/w)",
+        "allreduce wall",
+        "sharded wall",
+    ]);
+    let mut json = BTreeMap::new();
+
+    for spec in ["2G+2M", "4M"] {
+        let world = parse_cluster(spec)?.len();
+        let (ar_bytes, ar_wall) = measure(spec, n, iters, false)?;
+        let (sh_bytes, sh_wall) = measure(spec, n, iters, true)?;
+        let ratio = sh_bytes as f64 / ar_bytes.max(1) as f64;
+        let gate = 1.0 + 1.0 / world as f64;
+        table.row(vec![
+            spec.to_string(),
+            kaitian::util::fmt_bytes(n * 4),
+            kaitian::util::fmt_bytes(ar_bytes as usize),
+            kaitian::util::fmt_bytes(sh_bytes as usize),
+            format!("{ratio:.3}"),
+            format!("{gate:.3}"),
+            kaitian::util::fmt_secs(ar_wall),
+            kaitian::util::fmt_secs(sh_wall),
+        ]);
+        json.insert(
+            spec.to_string(),
+            Json::obj(vec![
+                ("cluster", Json::str(spec.to_string())),
+                ("grad_bytes", Json::num((n * 4) as f64)),
+                ("allreduce_bytes_per_step", Json::num(ar_bytes as f64)),
+                ("sharded_bytes_per_step", Json::num(sh_bytes as f64)),
+                ("ratio", Json::num(ratio)),
+                ("gate", Json::num(gate)),
+                ("allreduce_wall_s", Json::num(ar_wall)),
+                ("sharded_wall_s", Json::num(sh_wall)),
+            ]),
+        );
+        assert!(
+            ratio <= gate,
+            "{spec}: sharded sync moved {ratio:.3}x the all-reduce bytes \
+             (gate {gate:.3}x): {sh_bytes} vs {ar_bytes}"
+        );
+    }
+
+    println!("== sharded (ZeRO-1) vs all-reduce gradient sync ==\n");
+    println!("{}", table.render());
+    let path = kaitian::metrics::write_report("results", "sharded_ddp", json)?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -4,101 +4,38 @@
 //!
 //! Gradients tolerate half precision during aggregation (standard practice
 //! in NCCL fp16 all-reduce). [`Fp16Relay`] halves the bytes crossing the
-//! host hop: buffers are converted f32→f16 before staging and the
-//! reduction runs as all-gather(f16) + local f32 summation, which for the
-//! small leader counts of the hierarchical design (one leader per vendor
-//! group, i.e. 2–3 ranks) also has *lower* per-message latency than a
-//! ring.
+//! host hop for f32 payloads by staging them as genuine
+//! [`DType::F16`] [`CommTensor`]s — the data plane moves 2-byte
+//! elements natively (no lane packing, no byte-level hacks) — and the
+//! reduction runs as all-gather(f16) + local f32 summation, which for
+//! the small leader counts of the hierarchical design (one leader per
+//! vendor group, i.e. 2–3 ranks) also has *lower* per-message latency
+//! than a ring.
 //!
-//! The f16 conversion is implemented from scratch (no `half` crate in the
-//! vendored set): IEEE 754 binary16 with round-to-nearest-even, handling
-//! subnormals/inf/NaN.
+//! Non-f32 payloads (already-narrow f16/bf16/u8, exact i32) pass through
+//! the plain host relay uncompressed — recompressing them would either
+//! gain nothing or corrupt integer semantics.
+//!
+//! The scalar f16 codec (IEEE 754 binary16, round-to-nearest-even,
+//! subnormals/inf/NaN) lives in [`crate::comm::tensor`] next to
+//! [`DType`]; it is re-exported here for compatibility.
 
 use std::time::Instant;
 
-use crate::collectives::{ring, tree, CommStats, Communicator, ReduceOp, WorkHandle};
-use crate::comm::buf::FloatPool;
+use crate::collectives::{ring, CommStats, Communicator, ReduceOp, WorkHandle};
+use crate::comm::buf::{chunk_bytes, BufPool};
+use crate::comm::tensor::{CommTensor, DType};
+use crate::transport::Transport;
 use crate::Result;
 
+pub use crate::comm::tensor::{f16_bits_to_f32, f32_to_f16_bits};
+
+use super::gloo::{
+    relay_all_gather_t, relay_all_reduce_t, relay_all_to_all_async, relay_all_to_all_t,
+    relay_broadcast_t, relay_gather_t, relay_recv_tagged, relay_reduce_scatter_async,
+    relay_reduce_scatter_t, relay_reduce_t, relay_send_tagged,
+};
 use super::CollectiveBackend;
-
-// ---------------------------------------------------------------------
-// scalar f32 <-> f16 conversion
-// ---------------------------------------------------------------------
-
-/// f32 -> IEEE binary16 bits, round-to-nearest-even.
-pub fn f32_to_f16_bits(x: f32) -> u16 {
-    let bits = x.to_bits();
-    let sign = ((bits >> 16) & 0x8000) as u16;
-    let exp = ((bits >> 23) & 0xFF) as i32;
-    let mant = bits & 0x7F_FFFF;
-
-    if exp == 0xFF {
-        // Inf / NaN.
-        let m = if mant != 0 { 0x0200 } else { 0 };
-        return sign | 0x7C00 | m;
-    }
-    // Re-bias: f32 exp-127, f16 exp-15.
-    let unbiased = exp - 127;
-    if unbiased > 15 {
-        return sign | 0x7C00; // overflow -> inf
-    }
-    if unbiased >= -14 {
-        // Normal f16.
-        let half_exp = ((unbiased + 15) as u16) << 10;
-        let half_mant = (mant >> 13) as u16;
-        let round_bits = mant & 0x1FFF;
-        let mut out = sign | half_exp | half_mant;
-        // round to nearest even
-        if round_bits > 0x1000 || (round_bits == 0x1000 && (half_mant & 1) == 1) {
-            out = out.wrapping_add(1);
-        }
-        return out;
-    }
-    if unbiased >= -24 {
-        // Subnormal f16.
-        // f16 subnormal = mant16 × 2⁻²⁴; value = full_mant × 2^(unbiased−23)
-        // ⇒ mant16 = full_mant >> (−unbiased − 1).
-        let full_mant = mant | 0x80_0000;
-        let shift = (-unbiased - 1) as u32;
-        let half_mant = (full_mant >> shift) as u16;
-        let rem = full_mant & ((1 << shift) - 1);
-        let half = 1_u32 << (shift - 1);
-        let mut out = sign | half_mant;
-        if rem > half || (rem == half && (half_mant & 1) == 1) {
-            out = out.wrapping_add(1);
-        }
-        return out;
-    }
-    sign // underflow -> signed zero
-}
-
-/// IEEE binary16 bits -> f32.
-pub fn f16_bits_to_f32(h: u16) -> f32 {
-    let sign = ((h as u32) & 0x8000) << 16;
-    let exp = ((h >> 10) & 0x1F) as u32;
-    let mant = (h & 0x3FF) as u32;
-    let bits = match (exp, mant) {
-        (0, 0) => sign,
-        (0, m) => {
-            // Subnormal: normalize.
-            let mut e = -1_i32;
-            let mut m = m;
-            while m & 0x400 == 0 {
-                m <<= 1;
-                e -= 1;
-            }
-            m &= 0x3FF;
-            // k shifts happened (e = −1−k); value = 1.m × 2^(−14−k)
-            // ⇒ unbiased exponent = e − 13, biased = e + 114.
-            sign | (((e + 114) as u32) << 23) | (m << 13)
-        }
-        (0x1F, 0) => sign | 0x7F80_0000,
-        (0x1F, m) => sign | 0x7F80_0000 | (m << 13),
-        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
-    };
-    f32::from_bits(bits)
-}
 
 /// Compress a slice to f16 wire bytes.
 pub fn compress_f16(xs: &[f32]) -> Vec<u8> {
@@ -120,11 +57,7 @@ pub fn decompress_f16(bytes: &[u8]) -> Result<Vec<f32>> {
         .collect())
 }
 
-// ---------------------------------------------------------------------
-// the compressed relay backend
-// ---------------------------------------------------------------------
-
-/// Host relay with fp16 compression on the wire.
+/// Host relay with fp16 compression on the wire for f32 payloads.
 pub struct Fp16Relay {
     comm: Communicator,
 }
@@ -135,104 +68,98 @@ impl Fp16Relay {
     }
 }
 
-/// Decode the two f16 halves packed in each f32 lane and fold them into
-/// `buf` (`first` overwrites instead of folding); the tail padding lane
-/// half (odd `buf` lengths) is ignored. The lanes were byte-copied from
-/// the LE wire format, so the low half of a lane's bit pattern is the
-/// earlier f16 on every platform.
-fn fold_f16_lanes(op: ReduceOp, first: bool, buf: &mut [f32], lanes: &[f32]) {
-    for (i, lane) in lanes.iter().enumerate() {
-        let bits = lane.to_bits();
-        let halves = [(bits & 0xFFFF) as u16, (bits >> 16) as u16];
-        for (j, half) in halves.into_iter().enumerate() {
-            let idx = i * 2 + j;
-            if idx >= buf.len() {
-                return;
-            }
-            let v = f16_bits_to_f32(half);
-            buf[idx] = if first { v } else { op.apply(buf[idx], v) };
-        }
+/// Stage an f32 wire buffer as a [`DType::F16`] tensor (pooled storage;
+/// one fused decode-cast-encode pass, tracked as a staging copy).
+fn stage_f16(wire_f32: &[u8], staging: &mut CommStats) -> Result<CommTensor> {
+    let n = wire_f32.len() / 4;
+    let (mut half, hit) = BufPool::global().take_vec(n * 2);
+    staging.note_take(n * 2, hit);
+    for i in 0..n {
+        let x = DType::F32.decode_f32(wire_f32, i);
+        DType::F16.encode_f32(&mut half, i, x);
     }
-}
-
-/// Compress `buf` into pooled f32 lanes (f16 pairs on the wire),
-/// packing the halves directly into the lane bits — one fused pass, no
-/// intermediate byte vector, no untracked allocation.
-fn stage_to_lanes(buf: &[f32], staging: &mut CommStats) -> Result<Vec<f32>> {
-    let n_lanes = buf.len().div_ceil(2);
-    let (mut lanes, hit) = FloatPool::global().take_tracked(n_lanes);
-    staging.note_take(n_lanes * 4, hit);
-    for (i, lane) in lanes.iter_mut().enumerate() {
-        let lo = f32_to_f16_bits(buf[i * 2]) as u32;
-        let hi = match buf.get(i * 2 + 1) {
-            Some(&x) => f32_to_f16_bits(x) as u32,
-            None => 0, // tail padding half (odd lengths)
-        };
-        *lane = f32::from_bits(lo | (hi << 16));
+    if n > 0 {
+        staging.copies += 1;
     }
-    if !buf.is_empty() {
-        staging.copies += 1; // fused f32→f16 compress + lane pack
-    }
-    Ok(lanes)
+    CommTensor::from_wire(DType::F16, half)
 }
 
 /// The fp16 all-reduce body shared by the blocking-tagged and async
-/// paths: compress, all-gather the halves as f32 lanes, local fold
-/// decoded straight out of the gathered lanes.
+/// paths: cast to a `DType::F16` tensor, all-gather the f16 halves
+/// through the dtype-native data plane, fold every rank's contribution
+/// locally in f32.
 fn fp16_all_reduce(
-    t: &dyn crate::transport::Transport,
+    t: &dyn Transport,
     world: usize,
-    buf: &mut [f32],
+    wire: &mut [u8],
     op: ReduceOp,
     tag: u64,
 ) -> Result<CommStats> {
     let t0 = Instant::now();
     let mut staging = CommStats::default();
-    // All-gather at byte level through the f32 API: reinterpret the
-    // f16 pairs as f32 lanes (content-agnostic transport).
-    let lanes = stage_to_lanes(buf, &mut staging)?;
+    let staged = stage_f16(wire, &mut staging)?;
     let t_stage1 = t0.elapsed().as_secs_f64();
 
     let t1 = Instant::now();
-    let (gathered, mut stats) = ring::ring_all_gather(t, &lanes, tag)?;
+    let mut stats = CommStats::default();
+    let half = staged.as_bytes();
+    let (mut gathered, hit) = BufPool::global().take_vec(half.len() * world);
+    stats.note_take(half.len() * world, hit);
+    ring::ring_all_gather_into_t(t, 2, half, &mut gathered, tag, chunk_bytes(), &mut stats)?;
     stats.seconds = t1.elapsed().as_secs_f64();
     stats.op = "all_reduce";
-    let per = lanes.len();
-    FloatPool::global().put(lanes);
 
     let t2 = Instant::now();
-    // Local reduction across every rank's contribution — no per-rank
-    // byte round-trip, no intermediate vectors.
+    // Local reduction across every rank's f16 contribution, decoded
+    // straight out of the gathered wire bytes into the f32 buffer.
+    let n = wire.len() / 4;
     for r in 0..world {
-        fold_f16_lanes(op, r == 0, buf, &gathered[r * per..(r + 1) * per]);
+        let block = &gathered[r * n * 2..(r + 1) * n * 2];
+        for i in 0..n {
+            let v = DType::F16.decode_f32(block, i);
+            let out = if r == 0 {
+                v
+            } else {
+                op.apply(DType::F32.decode_f32(wire, i), v)
+            };
+            DType::F32.encode_f32(wire, i, out);
+        }
     }
-    FloatPool::global().put(gathered);
-    staging.staged_bytes = 2 * (buf.len() * 2) as u64; // f16 staging both ways
+    BufPool::global().put_vec(gathered);
+    BufPool::global().put_vec(staged.into_wire());
+    staging.staged_bytes = 2 * (n * 2) as u64; // f16 staging both ways
     staging.stage_seconds = t_stage1 + t2.elapsed().as_secs_f64();
     stats.merge(&staging);
     stats.inflight_hw_bytes = t.inflight_high_water();
     Ok(stats)
 }
 
-/// The fp16 broadcast body (see [`fp16_all_reduce`]).
+/// The fp16 broadcast body (see [`fp16_all_reduce`]): cast, tree-cast
+/// the f16 tensor, decode back.
 fn fp16_broadcast(
-    t: &dyn crate::transport::Transport,
-    buf: &mut [f32],
+    t: &dyn Transport,
+    wire: &mut [u8],
     root: usize,
     tag: u64,
 ) -> Result<CommStats> {
     let t0 = Instant::now();
     let mut staging = CommStats::default();
-    let mut lanes = stage_to_lanes(buf, &mut staging)?;
+    let mut staged = stage_f16(wire, &mut staging)?;
     let t_stage = t0.elapsed().as_secs_f64();
     let t1 = Instant::now();
-    let mut stats = tree::broadcast(t, &mut lanes, root, tag)?;
+    let mut stats =
+        crate::collectives::tree::broadcast_t(t, 2, staged.as_bytes_mut(), root, tag)?;
     stats.seconds = t1.elapsed().as_secs_f64();
     stats.op = "broadcast";
     let t2 = Instant::now();
-    fold_f16_lanes(ReduceOp::Sum, true, buf, &lanes); // first=true: pure decode
-    FloatPool::global().put(lanes);
-    staging.staged_bytes = 2 * (buf.len() * 2) as u64;
+    let n = wire.len() / 4;
+    let half = staged.as_bytes();
+    for i in 0..n {
+        let v = DType::F16.decode_f32(half, i);
+        DType::F32.encode_f32(wire, i, v);
+    }
+    BufPool::global().put_vec(staged.into_wire());
+    staging.staged_bytes = 2 * (n * 2) as u64;
     staging.stage_seconds = t_stage + t2.elapsed().as_secs_f64();
     stats.merge(&staging);
     stats.inflight_hw_bytes = t.inflight_high_water();
@@ -256,42 +183,149 @@ impl CollectiveBackend for Fp16Relay {
         self.comm.reserve_tag()
     }
 
-    fn all_reduce_tagged(&self, buf: &mut [f32], op: ReduceOp, tag: u64) -> Result<CommStats> {
-        fp16_all_reduce(self.comm.transport(), self.world(), buf, op, tag)
-    }
-
-    fn broadcast_tagged(&self, buf: &mut [f32], root: usize, tag: u64) -> Result<CommStats> {
-        fp16_broadcast(self.comm.transport(), buf, root, tag)
-    }
-
-    fn all_gather_tagged(&self, send: &[f32], tag: u64) -> Result<(Vec<f32>, CommStats)> {
-        // Metadata-sized; compression not worth the error. Pass through.
-        self.comm.all_gather_tagged(send, tag)
-    }
-
     fn barrier(&self) -> Result<CommStats> {
         self.comm.barrier()
     }
 
-    fn all_reduce_async(
+    fn all_reduce_tagged_t(
         &self,
-        mut buf: Vec<f32>,
+        dtype: DType,
+        wire: &mut [u8],
         op: ReduceOp,
-    ) -> WorkHandle<(Vec<f32>, CommStats)> {
+        tag: u64,
+    ) -> Result<CommStats> {
+        if dtype == DType::F32 {
+            fp16_all_reduce(self.comm.transport(), self.world(), wire, op, tag)
+        } else {
+            relay_all_reduce_t(self.comm.transport(), dtype, wire, op, tag)
+        }
+    }
+
+    fn broadcast_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        root: usize,
+        tag: u64,
+    ) -> Result<CommStats> {
+        if dtype == DType::F32 {
+            fp16_broadcast(self.comm.transport(), wire, root, tag)
+        } else {
+            relay_broadcast_t(self.comm.transport(), dtype, wire, root, tag)
+        }
+    }
+
+    fn reduce_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        op: ReduceOp,
+        root: usize,
+        tag: u64,
+    ) -> Result<CommStats> {
+        relay_reduce_t(self.comm.transport(), dtype, wire, op, root, tag)
+    }
+
+    fn all_gather_tagged_t(
+        &self,
+        dtype: DType,
+        send: &[u8],
+        tag: u64,
+    ) -> Result<(Vec<u8>, CommStats)> {
+        // Metadata-sized; compression not worth the error. Plain relay.
+        relay_all_gather_t(self.comm.transport(), dtype, send, tag)
+    }
+
+    fn reduce_scatter_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        op: ReduceOp,
+        tag: u64,
+    ) -> Result<CommStats> {
+        // Fold precision matters for reduce-scatter shards; stay exact.
+        relay_reduce_scatter_t(self.comm.transport(), dtype, wire, op, tag)
+    }
+
+    fn all_to_all_tagged_t(
+        &self,
+        dtype: DType,
+        send: &[u8],
+        tag: u64,
+    ) -> Result<(Vec<u8>, CommStats)> {
+        relay_all_to_all_t(self.comm.transport(), dtype, send, tag)
+    }
+
+    fn gather_tagged_t(
+        &self,
+        dtype: DType,
+        send: &[u8],
+        root: usize,
+        tag: u64,
+    ) -> Result<(Option<Vec<u8>>, CommStats)> {
+        relay_gather_t(self.comm.transport(), dtype, send, root, tag)
+    }
+
+    fn send_tagged(&self, peer: usize, tag: u64, dtype: DType, wire: &[u8]) -> Result<CommStats> {
+        // Same honest host-staging cost model as the uncompressed relay.
+        relay_send_tagged(&self.comm, peer, tag, dtype, wire)
+    }
+
+    fn recv_tagged(
+        &self,
+        peer: usize,
+        tag: u64,
+        dtype: DType,
+        wire: &mut [u8],
+    ) -> Result<CommStats> {
+        relay_recv_tagged(&self.comm, peer, tag, dtype, wire)
+    }
+
+    fn all_reduce_async_t(
+        &self,
+        mut tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, CommStats)> {
         let tag = self.comm.reserve_tag();
         let world = self.world();
         self.comm.run_async(move |t| {
-            let stats = fp16_all_reduce(t, world, &mut buf, op, tag)?;
-            Ok((buf, stats))
+            let dtype = tensor.dtype();
+            let stats = if dtype == DType::F32 {
+                fp16_all_reduce(t, world, tensor.as_bytes_mut(), op, tag)?
+            } else {
+                relay_all_reduce_t(t, dtype, tensor.as_bytes_mut(), op, tag)?
+            };
+            Ok((tensor, stats))
         })
     }
 
-    fn broadcast_async(&self, mut buf: Vec<f32>, root: usize) -> WorkHandle<(Vec<f32>, CommStats)> {
+    fn broadcast_async_t(
+        &self,
+        mut tensor: CommTensor,
+        root: usize,
+    ) -> WorkHandle<(CommTensor, CommStats)> {
         let tag = self.comm.reserve_tag();
         self.comm.run_async(move |t| {
-            let stats = fp16_broadcast(t, &mut buf, root, tag)?;
-            Ok((buf, stats))
+            let dtype = tensor.dtype();
+            let stats = if dtype == DType::F32 {
+                fp16_broadcast(t, tensor.as_bytes_mut(), root, tag)?
+            } else {
+                relay_broadcast_t(t, dtype, tensor.as_bytes_mut(), root, tag)?
+            };
+            Ok((tensor, stats))
         })
+    }
+
+    fn reduce_scatter_async_t(
+        &self,
+        tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, CommStats)> {
+        relay_reduce_scatter_async(&self.comm, tensor, op)
+    }
+
+    fn all_to_all_async_t(&self, tensor: CommTensor) -> WorkHandle<(CommTensor, CommStats)> {
+        relay_all_to_all_async(&self.comm, tensor)
     }
 }
 
@@ -339,7 +373,7 @@ mod tests {
             .into_iter()
             .map(|e| Fp16Relay::new(Communicator::new(Arc::new(e))))
             .collect();
-        let n = 1001; // odd length exercises padding
+        let n = 1001; // odd length exercises uneven chunking
         let out: Vec<Vec<f32>> = std::thread::scope(|s| {
             let hs: Vec<_> = relays
                 .iter()
@@ -347,7 +381,9 @@ mod tests {
                     s.spawn(move || {
                         let mut buf: Vec<f32> =
                             (0..n).map(|i| (i as f32 * 0.01 + b.rank() as f32) * 0.1).collect();
-                        b.all_reduce(&mut buf, ReduceOp::Sum).unwrap();
+                        let st = b.all_reduce(&mut buf, ReduceOp::Sum).unwrap();
+                        // f16 staging both ways: 2 * 2 bytes per element.
+                        assert_eq!(st.staged_bytes, 4 * n as u64);
                         buf
                     })
                 })
@@ -381,6 +417,29 @@ mod tests {
                     let mut buf = if b.rank() == 0 { vec![1.5; 7] } else { vec![0.0; 7] };
                     b.broadcast(&mut buf, 0).unwrap();
                     assert_eq!(buf, vec![1.5; 7]); // 1.5 is f16-exact
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn non_f32_payloads_bypass_compression() {
+        // An i32 all-reduce through the fp16 relay must stay exact even
+        // for values outside f16 range.
+        let eps = InprocMesh::new(2);
+        let relays: Vec<Fp16Relay> = eps
+            .into_iter()
+            .map(|e| Fp16Relay::new(Communicator::new(Arc::new(e))))
+            .collect();
+        std::thread::scope(|s| {
+            for b in &relays {
+                s.spawn(move || {
+                    let xs = vec![1_000_003.0_f32, -7.0];
+                    let mut t = CommTensor::from_f32(DType::I32, &xs);
+                    let tag = b.reserve_tag();
+                    b.all_reduce_tagged_t(DType::I32, t.as_bytes_mut(), ReduceOp::Sum, tag)
+                        .unwrap();
+                    assert_eq!(t.to_f32(), vec![2_000_006.0, -14.0]);
                 });
             }
         });

@@ -12,18 +12,282 @@
 //! The staging copies are *real* buffer copies into a distinct host
 //! buffer — honest extra memory traffic, measured and reported via
 //! `CommStats::staged_bytes`/`stage_seconds`, counting only bytes a copy
-//! actually moved. Host buffers come from the [`FloatPool`] (allocated
-//! once, reused every sync), and the host hop runs over whatever
-//! transport the communicator was built on (TCP for the honest syscall
-//! path, in-proc for unit tests).
+//! actually moved. Staging is dtype-agnostic (byte-level, pooled via
+//! [`BufPool`]): an f16 payload stages half the bytes of an f32 one —
+//! the honest cost model quantized payloads exist to exploit. The relay
+//! bodies are free functions over `&dyn Transport` so the blocking,
+//! async and [`super::Fp16Relay`]-fallback paths share one
+//! implementation.
 
 use std::time::Instant;
 
-use crate::collectives::{ring, tree, CommStats, Communicator, ReduceOp, WorkHandle};
-use crate::comm::buf::FloatPool;
+use crate::collectives::{
+    op_all_to_all, op_gather, ring, tree, CommStats, Communicator, ReduceOp, WorkHandle,
+};
+use crate::comm::buf::{chunk_bytes, BufPool};
+use crate::comm::tensor::{CommTensor, DType};
+use crate::transport::Transport;
 use crate::Result;
 
 use super::CollectiveBackend;
+
+/// Simulated D2H: copy the device bytes into a pooled host buffer.
+fn d2h(wire: &[u8], stats: &mut CommStats) -> (Vec<u8>, f64) {
+    let t0 = Instant::now();
+    let (mut host, hit) = BufPool::global().take_vec(wire.len());
+    host.copy_from_slice(wire);
+    stats.note_take(wire.len(), hit);
+    if !wire.is_empty() {
+        stats.copies += 1;
+    }
+    (host, t0.elapsed().as_secs_f64())
+}
+
+/// Simulated H2D: copy the host buffer back into device memory and
+/// recycle the host buffer.
+fn h2d(host: Vec<u8>, wire: &mut [u8], stats: &mut CommStats) -> f64 {
+    let t0 = Instant::now();
+    wire.copy_from_slice(&host);
+    BufPool::global().put_vec(host);
+    if !wire.is_empty() {
+        stats.copies += 1;
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// The 3-step relay all-reduce body (D2H, ring over `t`, H2D).
+pub(crate) fn relay_all_reduce_t(
+    t: &dyn Transport,
+    dtype: DType,
+    wire: &mut [u8],
+    op: ReduceOp,
+    tag: u64,
+) -> Result<CommStats> {
+    let mut staging = CommStats::default();
+    let (mut host, t_d2h) = d2h(wire, &mut staging);
+    let t0 = Instant::now();
+    let mut stats = ring::ring_all_reduce_t(t, dtype, &mut host, op, tag, chunk_bytes())?;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    stats.op = "all_reduce";
+    let t_h2d = h2d(host, wire, &mut staging);
+    staging.staged_bytes = 2 * wire.len() as u64;
+    staging.stage_seconds = t_d2h + t_h2d;
+    stats.merge(&staging);
+    stats.inflight_hw_bytes = t.inflight_high_water();
+    Ok(stats)
+}
+
+/// The 3-step relay broadcast body (see [`relay_all_reduce_t`]).
+pub(crate) fn relay_broadcast_t(
+    t: &dyn Transport,
+    dtype: DType,
+    wire: &mut [u8],
+    root: usize,
+    tag: u64,
+) -> Result<CommStats> {
+    let mut staging = CommStats::default();
+    let (mut host, t_d2h) = d2h(wire, &mut staging);
+    let t0 = Instant::now();
+    let mut stats = tree::broadcast_t(t, dtype.size_bytes(), &mut host, root, tag)?;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    stats.op = "broadcast";
+    let t_h2d = h2d(host, wire, &mut staging);
+    staging.staged_bytes = 2 * wire.len() as u64;
+    staging.stage_seconds = t_d2h + t_h2d;
+    stats.merge(&staging);
+    stats.inflight_hw_bytes = t.inflight_high_water();
+    Ok(stats)
+}
+
+/// The 3-step relay tree-reduce body.
+pub(crate) fn relay_reduce_t(
+    t: &dyn Transport,
+    dtype: DType,
+    wire: &mut [u8],
+    op: ReduceOp,
+    root: usize,
+    tag: u64,
+) -> Result<CommStats> {
+    let mut staging = CommStats::default();
+    let (mut host, t_d2h) = d2h(wire, &mut staging);
+    let t0 = Instant::now();
+    let mut stats = tree::reduce_t(t, dtype, &mut host, op, root, tag)?;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    stats.op = "reduce";
+    let t_h2d = h2d(host, wire, &mut staging);
+    staging.staged_bytes = 2 * wire.len() as u64;
+    staging.stage_seconds = t_d2h + t_h2d;
+    stats.merge(&staging);
+    stats.inflight_hw_bytes = t.inflight_high_water();
+    Ok(stats)
+}
+
+/// The 3-step relay reduce-scatter body (full buffer staged both ways;
+/// the in-place contract matches the vendor path's).
+pub(crate) fn relay_reduce_scatter_t(
+    t: &dyn Transport,
+    dtype: DType,
+    wire: &mut [u8],
+    op: ReduceOp,
+    tag: u64,
+) -> Result<CommStats> {
+    let mut staging = CommStats::default();
+    let (mut host, t_d2h) = d2h(wire, &mut staging);
+    let t0 = Instant::now();
+    let mut stats = ring::ring_reduce_scatter_t(t, dtype, &mut host, op, tag, chunk_bytes())?;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    stats.op = "reduce_scatter";
+    let t_h2d = h2d(host, wire, &mut staging);
+    staging.staged_bytes = 2 * wire.len() as u64;
+    staging.stage_seconds = t_d2h + t_h2d;
+    stats.merge(&staging);
+    stats.inflight_hw_bytes = t.inflight_high_water();
+    Ok(stats)
+}
+
+/// Relay all-gather body: D2H-stage the contribution; the gathered
+/// result goes straight back to the caller (no phantom H2D copy —
+/// `staged_bytes` counts real copies only).
+pub(crate) fn relay_all_gather_t(
+    t: &dyn Transport,
+    dtype: DType,
+    send: &[u8],
+    tag: u64,
+) -> Result<(Vec<u8>, CommStats)> {
+    let mut staging = CommStats::default();
+    let (host, t_d2h) = d2h(send, &mut staging);
+    let t0 = Instant::now();
+    let mut stats = CommStats::default();
+    let (mut out, hit) = BufPool::global().take_vec(send.len() * t.world());
+    stats.note_take(send.len() * t.world(), hit);
+    let es = dtype.size_bytes();
+    ring::ring_all_gather_into_t(t, es, &host, &mut out, tag, chunk_bytes(), &mut stats)?;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    stats.op = "all_gather";
+    BufPool::global().put_vec(host);
+    staging.staged_bytes = send.len() as u64;
+    staging.stage_seconds = t_d2h;
+    stats.merge(&staging);
+    stats.inflight_hw_bytes = t.inflight_high_water();
+    Ok((out, stats))
+}
+
+/// Relay all-to-all body (contribution staged D2H only, like all-gather).
+pub(crate) fn relay_all_to_all_t(
+    t: &dyn Transport,
+    dtype: DType,
+    send: &[u8],
+    tag: u64,
+) -> Result<(Vec<u8>, CommStats)> {
+    let mut staging = CommStats::default();
+    let (host, t_d2h) = d2h(send, &mut staging);
+    let t0 = Instant::now();
+    let (out, mut stats) = op_all_to_all(t, dtype, &host, tag, chunk_bytes())?;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    stats.op = "all_to_all";
+    BufPool::global().put_vec(host);
+    staging.staged_bytes = send.len() as u64;
+    staging.stage_seconds = t_d2h;
+    stats.merge(&staging);
+    stats.inflight_hw_bytes = t.inflight_high_water();
+    Ok((out, stats))
+}
+
+/// Relay gather body (contribution staged D2H only).
+pub(crate) fn relay_gather_t(
+    t: &dyn Transport,
+    dtype: DType,
+    send: &[u8],
+    root: usize,
+    tag: u64,
+) -> Result<(Option<Vec<u8>>, CommStats)> {
+    let mut staging = CommStats::default();
+    let (host, t_d2h) = d2h(send, &mut staging);
+    let t0 = Instant::now();
+    let (out, mut stats) = op_gather(t, dtype, &host, root, tag, chunk_bytes())?;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    stats.op = "gather";
+    BufPool::global().put_vec(host);
+    staging.staged_bytes = send.len() as u64;
+    staging.stage_seconds = t_d2h;
+    stats.merge(&staging);
+    stats.inflight_hw_bytes = t.inflight_high_water();
+    Ok((out, stats))
+}
+
+/// Issue a host-staged relay reduce-scatter on the communicator's comm
+/// thread; the handle yields this rank's reduced shard (shared by
+/// [`GlooHostRelay`] and [`super::Fp16Relay`]).
+pub(crate) fn relay_reduce_scatter_async(
+    comm: &Communicator,
+    mut tensor: CommTensor,
+    op: ReduceOp,
+) -> WorkHandle<(CommTensor, CommStats)> {
+    let tag = comm.reserve_tag();
+    let (rank, world) = (comm.rank(), comm.world());
+    comm.run_async(move |t| {
+        let dtype = tensor.dtype();
+        let stats = relay_reduce_scatter_t(t, dtype, tensor.as_bytes_mut(), op, tag)?;
+        let (s0, s1) = ring::segment(tensor.len(), world, rank);
+        let shard = tensor.slice(s0, s1)?;
+        tensor.recycle();
+        Ok((shard, stats))
+    })
+}
+
+/// Issue a host-staged relay all-to-all on the communicator's comm
+/// thread (shared by the relay backends).
+pub(crate) fn relay_all_to_all_async(
+    comm: &Communicator,
+    tensor: CommTensor,
+) -> WorkHandle<(CommTensor, CommStats)> {
+    let tag = comm.reserve_tag();
+    comm.run_async(move |t| {
+        let dtype = tensor.dtype();
+        let (out, stats) = relay_all_to_all_t(t, dtype, tensor.as_bytes(), tag)?;
+        tensor.recycle();
+        Ok((CommTensor::from_wire(dtype, out)?, stats))
+    })
+}
+
+/// Host-staged relay point-to-point send: D2H-stage the payload, then
+/// the host hop (shared by [`GlooHostRelay`] and [`super::Fp16Relay`]).
+pub(crate) fn relay_send_tagged(
+    comm: &Communicator,
+    peer: usize,
+    tag: u64,
+    dtype: DType,
+    wire: &[u8],
+) -> Result<CommStats> {
+    let mut staging = CommStats::default();
+    let (host, t_d2h) = d2h(wire, &mut staging);
+    let mut stats = comm.send_tagged(peer, tag, dtype, &host)?;
+    BufPool::global().put_vec(host);
+    staging.staged_bytes = wire.len() as u64;
+    staging.stage_seconds = t_d2h;
+    stats.merge(&staging);
+    Ok(stats)
+}
+
+/// Host-staged relay point-to-point receive: host hop into a pooled
+/// buffer, then H2D-stage into device memory.
+pub(crate) fn relay_recv_tagged(
+    comm: &Communicator,
+    peer: usize,
+    tag: u64,
+    dtype: DType,
+    wire: &mut [u8],
+) -> Result<CommStats> {
+    let mut staging = CommStats::default();
+    let (mut host, hit) = BufPool::global().take_vec(wire.len());
+    staging.note_take(wire.len(), hit);
+    let mut stats = comm.recv_tagged(peer, tag, dtype, &mut host)?;
+    let t_h2d = h2d(host, wire, &mut staging);
+    staging.staged_bytes = wire.len() as u64;
+    staging.stage_seconds = t_h2d;
+    stats.merge(&staging);
+    Ok(stats)
+}
 
 /// Host-staged general-purpose backend (the pink path in Fig. 1).
 pub struct GlooHostRelay {
@@ -34,73 +298,6 @@ impl GlooHostRelay {
     pub fn new(comm: Communicator) -> Self {
         Self { comm }
     }
-
-    /// Simulated D2H: copy the device buffer into a pooled host buffer.
-    fn d2h(buf: &[f32], stats: &mut CommStats) -> (Vec<f32>, f64) {
-        let t0 = Instant::now();
-        let (mut host, hit) = FloatPool::global().take_tracked(buf.len());
-        host.copy_from_slice(buf);
-        stats.note_take(buf.len() * 4, hit);
-        if !buf.is_empty() {
-            stats.copies += 1;
-        }
-        (host, t0.elapsed().as_secs_f64())
-    }
-
-    /// Simulated H2D: copy the host buffer back into device memory and
-    /// recycle the host buffer.
-    fn h2d(host: Vec<f32>, buf: &mut [f32], stats: &mut CommStats) -> f64 {
-        let t0 = Instant::now();
-        buf.copy_from_slice(&host);
-        FloatPool::global().put(host);
-        if !buf.is_empty() {
-            stats.copies += 1;
-        }
-        t0.elapsed().as_secs_f64()
-    }
-}
-
-/// The 3-step relay all-reduce body, shared by the blocking-tagged and
-/// async paths: D2H stage, ring all-reduce over `t`, H2D stage.
-fn relay_all_reduce(
-    t: &dyn crate::transport::Transport,
-    buf: &mut [f32],
-    op: ReduceOp,
-    tag: u64,
-) -> Result<CommStats> {
-    let mut staging = CommStats::default();
-    let (mut host, t_d2h) = GlooHostRelay::d2h(buf, &mut staging);
-    let t0 = Instant::now();
-    let mut stats = ring::ring_all_reduce(t, &mut host, op, tag)?;
-    stats.seconds = t0.elapsed().as_secs_f64();
-    stats.op = "all_reduce";
-    let t_h2d = GlooHostRelay::h2d(host, buf, &mut staging);
-    staging.staged_bytes = 2 * (buf.len() * 4) as u64;
-    staging.stage_seconds = t_d2h + t_h2d;
-    stats.merge(&staging);
-    stats.inflight_hw_bytes = t.inflight_high_water();
-    Ok(stats)
-}
-
-/// The 3-step relay broadcast body (see [`relay_all_reduce`]).
-fn relay_broadcast(
-    t: &dyn crate::transport::Transport,
-    buf: &mut [f32],
-    root: usize,
-    tag: u64,
-) -> Result<CommStats> {
-    let mut staging = CommStats::default();
-    let (mut host, t_d2h) = GlooHostRelay::d2h(buf, &mut staging);
-    let t0 = Instant::now();
-    let mut stats = tree::broadcast(t, &mut host, root, tag)?;
-    stats.seconds = t0.elapsed().as_secs_f64();
-    stats.op = "broadcast";
-    let t_h2d = GlooHostRelay::h2d(host, buf, &mut staging);
-    staging.staged_bytes = 2 * (buf.len() * 4) as u64;
-    staging.stage_seconds = t_d2h + t_h2d;
-    stats.merge(&staging);
-    stats.inflight_hw_bytes = t.inflight_high_water();
-    Ok(stats)
 }
 
 impl CollectiveBackend for GlooHostRelay {
@@ -120,52 +317,131 @@ impl CollectiveBackend for GlooHostRelay {
         self.comm.reserve_tag()
     }
 
-    fn all_reduce_tagged(&self, buf: &mut [f32], op: ReduceOp, tag: u64) -> Result<CommStats> {
-        relay_all_reduce(self.comm.transport(), buf, op, tag)
-    }
-
-    fn broadcast_tagged(&self, buf: &mut [f32], root: usize, tag: u64) -> Result<CommStats> {
-        relay_broadcast(self.comm.transport(), buf, root, tag)
-    }
-
-    fn all_gather_tagged(&self, send: &[f32], tag: u64) -> Result<(Vec<f32>, CommStats)> {
-        // D2H-stage the contribution; the gathered result goes straight
-        // back to the caller (no phantom H2D copy — staged_bytes counts
-        // real copies only).
-        let mut staging = CommStats::default();
-        let (host, t_d2h) = Self::d2h(send, &mut staging);
-        let (out, mut stats) = self.comm.all_gather_tagged(&host, tag)?;
-        FloatPool::global().put(host);
-        staging.staged_bytes = (send.len() * 4) as u64;
-        staging.stage_seconds = t_d2h;
-        stats.merge(&staging);
-        Ok((out, stats))
-    }
-
     fn barrier(&self) -> Result<CommStats> {
         self.comm.barrier()
     }
 
-    fn all_reduce_async(
+    fn all_reduce_tagged_t(
         &self,
-        mut buf: Vec<f32>,
+        dtype: DType,
+        wire: &mut [u8],
         op: ReduceOp,
-    ) -> WorkHandle<(Vec<f32>, CommStats)> {
+        tag: u64,
+    ) -> Result<CommStats> {
+        relay_all_reduce_t(self.comm.transport(), dtype, wire, op, tag)
+    }
+
+    fn broadcast_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        root: usize,
+        tag: u64,
+    ) -> Result<CommStats> {
+        relay_broadcast_t(self.comm.transport(), dtype, wire, root, tag)
+    }
+
+    fn reduce_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        op: ReduceOp,
+        root: usize,
+        tag: u64,
+    ) -> Result<CommStats> {
+        relay_reduce_t(self.comm.transport(), dtype, wire, op, root, tag)
+    }
+
+    fn all_gather_tagged_t(
+        &self,
+        dtype: DType,
+        send: &[u8],
+        tag: u64,
+    ) -> Result<(Vec<u8>, CommStats)> {
+        relay_all_gather_t(self.comm.transport(), dtype, send, tag)
+    }
+
+    fn reduce_scatter_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        op: ReduceOp,
+        tag: u64,
+    ) -> Result<CommStats> {
+        relay_reduce_scatter_t(self.comm.transport(), dtype, wire, op, tag)
+    }
+
+    fn all_to_all_tagged_t(
+        &self,
+        dtype: DType,
+        send: &[u8],
+        tag: u64,
+    ) -> Result<(Vec<u8>, CommStats)> {
+        relay_all_to_all_t(self.comm.transport(), dtype, send, tag)
+    }
+
+    fn gather_tagged_t(
+        &self,
+        dtype: DType,
+        send: &[u8],
+        root: usize,
+        tag: u64,
+    ) -> Result<(Option<Vec<u8>>, CommStats)> {
+        relay_gather_t(self.comm.transport(), dtype, send, root, tag)
+    }
+
+    fn send_tagged(&self, peer: usize, tag: u64, dtype: DType, wire: &[u8]) -> Result<CommStats> {
+        relay_send_tagged(&self.comm, peer, tag, dtype, wire)
+    }
+
+    fn recv_tagged(
+        &self,
+        peer: usize,
+        tag: u64,
+        dtype: DType,
+        wire: &mut [u8],
+    ) -> Result<CommStats> {
+        relay_recv_tagged(&self.comm, peer, tag, dtype, wire)
+    }
+
+    fn all_reduce_async_t(
+        &self,
+        mut tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, CommStats)> {
         // The staging copies run on the comm thread: overlapping them
         // with the caller's compute is the point of the async path.
         let tag = self.comm.reserve_tag();
         self.comm.run_async(move |t| {
-            let stats = relay_all_reduce(t, &mut buf, op, tag)?;
-            Ok((buf, stats))
+            let dtype = tensor.dtype();
+            let stats = relay_all_reduce_t(t, dtype, tensor.as_bytes_mut(), op, tag)?;
+            Ok((tensor, stats))
         })
     }
 
-    fn broadcast_async(&self, mut buf: Vec<f32>, root: usize) -> WorkHandle<(Vec<f32>, CommStats)> {
+    fn broadcast_async_t(
+        &self,
+        mut tensor: CommTensor,
+        root: usize,
+    ) -> WorkHandle<(CommTensor, CommStats)> {
         let tag = self.comm.reserve_tag();
         self.comm.run_async(move |t| {
-            let stats = relay_broadcast(t, &mut buf, root, tag)?;
-            Ok((buf, stats))
+            let dtype = tensor.dtype();
+            let stats = relay_broadcast_t(t, dtype, tensor.as_bytes_mut(), root, tag)?;
+            Ok((tensor, stats))
         })
+    }
+
+    fn reduce_scatter_async_t(
+        &self,
+        tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, CommStats)> {
+        relay_reduce_scatter_async(&self.comm, tensor, op)
+    }
+
+    fn all_to_all_async_t(&self, tensor: CommTensor) -> WorkHandle<(CommTensor, CommStats)> {
+        relay_all_to_all_async(&self.comm, tensor)
     }
 }
 
@@ -201,6 +477,38 @@ mod tests {
             assert_eq!(st.staged_bytes, 8000);
             assert!(st.stage_seconds >= 0.0);
             assert!(st.copies >= 2, "D2H + H2D are real copies");
+        }
+    }
+
+    #[test]
+    fn dtyped_staging_counts_dtype_bytes() {
+        // An f16 payload stages half the bytes an f32 one does — the
+        // honest cost model for quantized relays.
+        let eps = InprocMesh::new(2);
+        let relays: Vec<GlooHostRelay> = eps
+            .into_iter()
+            .map(|e| GlooHostRelay::new(Communicator::new(Arc::new(e))))
+            .collect();
+        let stats: Vec<CommStats> = std::thread::scope(|s| {
+            let hs: Vec<_> = relays
+                .iter()
+                .map(|b| {
+                    s.spawn(move || {
+                        let xs = vec![1.0_f32; 1000];
+                        let mut t = CommTensor::from_f32(DType::F16, &xs);
+                        let tag = b.reserve_tag();
+                        let st = b
+                            .all_reduce_tagged_t(DType::F16, t.as_bytes_mut(), ReduceOp::Sum, tag)
+                            .unwrap();
+                        assert_eq!(t.to_f32(), vec![2.0; 1000]);
+                        st
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for st in stats {
+            assert_eq!(st.staged_bytes, 4000, "2 stages x 2000 f16 bytes");
         }
     }
 

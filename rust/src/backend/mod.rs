@@ -10,6 +10,13 @@
 //!
 //! Both implement [`CollectiveBackend`], the interface
 //! `group::ProcessGroupKaiTian` dispatches to.
+//!
+//! The trait's *required* surface is dtype-generic: every verb moves
+//! little-endian wire bytes tagged with a [`DType`] (blocking-tagged
+//! forms) or a [`CommTensor`] (async forms). The f32 methods the seed
+//! API exposed are provided wrappers over the typed core — `Vec<f32>` /
+//! `&mut [f32]` callers keep compiling and pay no copies (the wire view
+//! of an f32 slice is an in-place reinterpretation on LE targets).
 
 pub mod compress;
 pub mod gloo;
@@ -20,6 +27,7 @@ pub use gloo::GlooHostRelay;
 pub use vendor::{VendorKind, VendorSim};
 
 use crate::collectives::{CommStats, ReduceOp, WorkHandle};
+use crate::comm::tensor::{with_f32_wire, with_f32_wire_ref, CommTensor, DType};
 use crate::Result;
 
 /// The collective interface KAITIAN dispatches to (one instance per rank
@@ -28,12 +36,17 @@ use crate::Result;
 /// Every collective exists in three forms:
 /// * blocking untagged (`all_reduce`, …) — provided methods that reserve a
 ///   tag and run inline; the seed API, unchanged for callers;
-/// * blocking *tagged* (`all_reduce_tagged`, …) — the tag was reserved by
-///   the caller (via [`CollectiveBackend::reserve_tag`]) at issue time, so
-///   the op may execute on any thread, in any order relative to other
-///   in-flight ops, without breaking SPMD tag alignment;
-/// * async (`all_reduce_async`, …) — issue now on an ordered comm thread,
-///   `wait()` the returned [`WorkHandle`] later.
+/// * blocking *tagged* (`all_reduce_tagged_t`, …) — the tag was reserved
+///   by the caller (via [`CollectiveBackend::reserve_tag`]) at issue
+///   time, so the op may execute on any thread, in any order relative to
+///   other in-flight ops, without breaking SPMD tag alignment;
+/// * async (`all_reduce_async_t`, …) — issue now on an ordered comm
+///   thread, `wait()` the returned [`WorkHandle`] later.
+///
+/// Point-to-point `send_tagged`/`recv_tagged` take a *full* transport
+/// tag (see `collectives::chunk::ptp_tag`) instead of a reserved one:
+/// p2p ops involve only two ranks, so the SPMD op counter cannot line
+/// them up — the caller's explicit tag does.
 pub trait CollectiveBackend: Send + Sync {
     /// Backend identity for metrics ("nccl-sim", "cncl-sim", "gloo-relay").
     fn name(&self) -> &'static str;
@@ -48,24 +61,143 @@ pub trait CollectiveBackend: Send + Sync {
     /// happen in SPMD program order on the caller thread).
     fn reserve_tag(&self) -> u64;
 
-    /// In-place all-reduce under a caller-reserved tag.
-    fn all_reduce_tagged(&self, buf: &mut [f32], op: ReduceOp, tag: u64) -> Result<CommStats>;
-
-    /// In-place broadcast from `root` under a caller-reserved tag.
-    fn broadcast_tagged(&self, buf: &mut [f32], root: usize, tag: u64) -> Result<CommStats>;
-
-    /// Gather equal-length buffers under a caller-reserved tag;
-    /// concatenation in rank order.
-    fn all_gather_tagged(&self, send: &[f32], tag: u64) -> Result<(Vec<f32>, CommStats)>;
-
     /// Rendezvous of all ranks in the communicator.
     fn barrier(&self) -> Result<CommStats>;
 
-    /// Issue an all-reduce on the backend's comm thread.
-    fn all_reduce_async(&self, buf: Vec<f32>, op: ReduceOp) -> WorkHandle<(Vec<f32>, CommStats)>;
+    // -- dtype-generic blocking-tagged core ---------------------------
 
-    /// Issue a broadcast on the backend's comm thread.
-    fn broadcast_async(&self, buf: Vec<f32>, root: usize) -> WorkHandle<(Vec<f32>, CommStats)>;
+    /// In-place all-reduce of wire bytes under a caller-reserved tag.
+    fn all_reduce_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        op: ReduceOp,
+        tag: u64,
+    ) -> Result<CommStats>;
+
+    /// In-place broadcast from `root` under a caller-reserved tag.
+    fn broadcast_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        root: usize,
+        tag: u64,
+    ) -> Result<CommStats>;
+
+    /// Reduce to `root` under a caller-reserved tag (non-root buffers
+    /// end as partial-sum scratch).
+    fn reduce_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        op: ReduceOp,
+        root: usize,
+        tag: u64,
+    ) -> Result<CommStats>;
+
+    /// All-gather under a caller-reserved tag; output is
+    /// `world × send.len()` wire bytes in rank order.
+    fn all_gather_tagged_t(
+        &self,
+        dtype: DType,
+        send: &[u8],
+        tag: u64,
+    ) -> Result<(Vec<u8>, CommStats)>;
+
+    /// In-place reduce-scatter under a caller-reserved tag: afterwards
+    /// this rank's `collectives::ring::segment(len, world, rank)` holds
+    /// the fully reduced values (rest is scratch).
+    fn reduce_scatter_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        op: ReduceOp,
+        tag: u64,
+    ) -> Result<CommStats>;
+
+    /// All-to-all under a caller-reserved tag (`send` = `world` equal
+    /// segments; output segment `j` is rank `j`'s segment `rank`).
+    fn all_to_all_tagged_t(
+        &self,
+        dtype: DType,
+        send: &[u8],
+        tag: u64,
+    ) -> Result<(Vec<u8>, CommStats)>;
+
+    /// Gather to `root` under a caller-reserved tag
+    /// (`Some(concatenation)` at root, `None` elsewhere).
+    fn gather_tagged_t(
+        &self,
+        dtype: DType,
+        send: &[u8],
+        root: usize,
+        tag: u64,
+    ) -> Result<(Option<Vec<u8>>, CommStats)>;
+
+    /// Point-to-point chunked send under an explicit full tag.
+    fn send_tagged(&self, peer: usize, tag: u64, dtype: DType, wire: &[u8])
+        -> Result<CommStats>;
+
+    /// Point-to-point chunked receive into `wire` under an explicit full
+    /// tag.
+    fn recv_tagged(
+        &self,
+        peer: usize,
+        tag: u64,
+        dtype: DType,
+        wire: &mut [u8],
+    ) -> Result<CommStats>;
+
+    // -- dtype-generic async core -------------------------------------
+
+    /// Issue an all-reduce of a [`CommTensor`] on the backend's comm
+    /// thread.
+    fn all_reduce_async_t(
+        &self,
+        tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, CommStats)>;
+
+    /// Issue a broadcast of a [`CommTensor`].
+    fn broadcast_async_t(
+        &self,
+        tensor: CommTensor,
+        root: usize,
+    ) -> WorkHandle<(CommTensor, CommStats)>;
+
+    /// Issue a reduce-scatter; the handle yields this rank's reduced
+    /// shard.
+    fn reduce_scatter_async_t(
+        &self,
+        tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, CommStats)>;
+
+    /// Issue an all-to-all; the handle yields the regrouped tensor.
+    fn all_to_all_async_t(&self, tensor: CommTensor) -> WorkHandle<(CommTensor, CommStats)>;
+
+    // -- provided f32 convenience wrappers (the seed API) -------------
+
+    /// In-place all-reduce under a caller-reserved tag (f32 wrapper).
+    fn all_reduce_tagged(&self, buf: &mut [f32], op: ReduceOp, tag: u64) -> Result<CommStats> {
+        with_f32_wire(buf, |w| self.all_reduce_tagged_t(DType::F32, w, op, tag))
+    }
+
+    /// In-place broadcast from `root` under a caller-reserved tag (f32
+    /// wrapper).
+    fn broadcast_tagged(&self, buf: &mut [f32], root: usize, tag: u64) -> Result<CommStats> {
+        with_f32_wire(buf, |w| self.broadcast_tagged_t(DType::F32, w, root, tag))
+    }
+
+    /// Gather equal-length buffers under a caller-reserved tag (f32
+    /// wrapper); concatenation in rank order.
+    fn all_gather_tagged(&self, send: &[f32], tag: u64) -> Result<(Vec<f32>, CommStats)> {
+        let (wire, stats) =
+            with_f32_wire_ref(send, |w| self.all_gather_tagged_t(DType::F32, w, tag))?;
+        let out = crate::transport::bytes_to_f32s(&wire)?;
+        crate::comm::buf::BufPool::global().put_vec(wire);
+        Ok((out, stats))
+    }
 
     /// In-place all-reduce (blocking).
     fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<CommStats> {
@@ -84,12 +216,24 @@ pub trait CollectiveBackend: Send + Sync {
         let tag = self.reserve_tag();
         self.all_gather_tagged(send, tag)
     }
+
+    /// Issue an all-reduce of an f32 buffer on the backend's comm thread.
+    fn all_reduce_async(&self, buf: Vec<f32>, op: ReduceOp) -> WorkHandle<(Vec<f32>, CommStats)> {
+        self.all_reduce_async_t(CommTensor::from_vec(buf), op)
+            .and_then(|(t, s)| Ok((t.into_vec()?, s)))
+    }
+
+    /// Issue a broadcast of an f32 buffer on the backend's comm thread.
+    fn broadcast_async(&self, buf: Vec<f32>, root: usize) -> WorkHandle<(Vec<f32>, CommStats)> {
+        self.broadcast_async_t(CommTensor::from_vec(buf), root)
+            .and_then(|(t, s)| Ok((t.into_vec()?, s)))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collectives::Communicator;
+    use crate::collectives::{chunk, ring, Communicator};
     use crate::transport::InprocMesh;
     use std::sync::Arc;
 
@@ -184,6 +328,94 @@ mod tests {
         for o in &out {
             assert_eq!(o, &vec![2.5; 3]);
         }
+        // reduce_scatter: each rank's shard holds the global sum of its
+        // own segment (n = 2 elements per rank keeps values f16-exact).
+        let n = 2 * world;
+        let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let hs: Vec<_> = backends
+                .iter()
+                .map(|b| {
+                    s.spawn(move || {
+                        let init: Vec<f32> = (0..n).map(|i| (i % 8) as f32).collect();
+                        let t = CommTensor::from_vec(init);
+                        let (shard, _) =
+                            b.reduce_scatter_async_t(t, ReduceOp::Sum).wait().unwrap();
+                        shard.to_f32()
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (r, shard) in out.iter().enumerate() {
+            let (s0, s1) = ring::segment(n, world, r);
+            let expect: Vec<f32> =
+                (s0..s1).map(|i| (i % 8) as f32 * world as f32).collect();
+            assert_eq!(shard, &expect, "rank {r} shard");
+        }
+        // all_to_all: output segment j = rank j's input segment i.
+        let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let hs: Vec<_> = backends
+                .iter()
+                .map(|b| {
+                    s.spawn(move || {
+                        let send: Vec<f32> =
+                            (0..world).map(|j| (b.rank() * 10 + j) as f32).collect();
+                        let t = CommTensor::from_vec(send);
+                        let (out, _) = b.all_to_all_async_t(t).wait().unwrap();
+                        out.to_f32()
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (i, o) in out.iter().enumerate() {
+            let expect: Vec<f32> = (0..world).map(|j| (j * 10 + i) as f32).collect();
+            assert_eq!(o, &expect, "rank {i} all_to_all");
+        }
+        // gather to root 0 + point-to-point ring exchange.
+        let out: Vec<(Option<Vec<f32>>, f32)> = std::thread::scope(|s| {
+            let hs: Vec<_> = backends
+                .iter()
+                .map(|b| {
+                    s.spawn(move || {
+                        let tag = b.reserve_tag();
+                        let send = CommTensor::from_vec(vec![b.rank() as f32]);
+                        let (gathered, _) = b
+                            .gather_tagged_t(DType::F32, send.as_bytes(), 0, tag)
+                            .unwrap();
+                        let gathered = gathered
+                            .map(|w| crate::transport::bytes_to_f32s(&w).unwrap());
+                        // p2p: send to next, recv from prev.
+                        let w = b.world();
+                        let me = b.rank();
+                        let payload = CommTensor::from_vec(vec![me as f32 + 0.5]);
+                        b.send_tagged(
+                            (me + 1) % w,
+                            chunk::ptp_tag(9),
+                            DType::F32,
+                            payload.as_bytes(),
+                        )
+                        .unwrap();
+                        let mut got = vec![0_u8; 4];
+                        b.recv_tagged((me + w - 1) % w, chunk::ptp_tag(9), DType::F32, &mut got)
+                            .unwrap();
+                        let got = crate::transport::bytes_to_f32s(&got).unwrap()[0];
+                        (gathered, got)
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (r, (gathered, got)) in out.iter().enumerate() {
+            if r == 0 {
+                let expect: Vec<f32> = (0..world).map(|x| x as f32).collect();
+                assert_eq!(gathered.as_deref(), Some(expect.as_slice()));
+            } else {
+                assert!(gathered.is_none(), "non-root rank {r} gets no gather output");
+            }
+            let prev = (r + world - 1) % world;
+            assert_eq!(*got, prev as f32 + 0.5, "p2p ring at rank {r}");
+        }
         // barrier
         std::thread::scope(|s| {
             for b in &backends {
@@ -222,7 +454,8 @@ mod tests {
 
     #[test]
     fn fp16_backend_conformance() {
-        // The conformance values (small integers, 2.5) are f16-exact.
+        // The conformance values (small integers, 2.5, rank + 0.5) are
+        // f16-exact.
         let eps = InprocMesh::new(3);
         let backends: Vec<Box<dyn CollectiveBackend>> = eps
             .into_iter()

@@ -9,6 +9,7 @@
 //! (enforced by construction + tests).
 
 use crate::collectives::{CommStats, Communicator, ReduceOp, WorkHandle};
+use crate::comm::tensor::{CommTensor, DType};
 use crate::device::DeviceType;
 use crate::Result;
 
@@ -80,6 +81,125 @@ impl CollectiveBackend for VendorSim {
         self.comm.reserve_tag()
     }
 
+    fn barrier(&self) -> Result<CommStats> {
+        self.comm.barrier()
+    }
+
+    fn all_reduce_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        op: ReduceOp,
+        tag: u64,
+    ) -> Result<CommStats> {
+        self.comm.all_reduce_tagged_t(dtype, wire, op, tag)
+    }
+
+    fn broadcast_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        root: usize,
+        tag: u64,
+    ) -> Result<CommStats> {
+        self.comm.broadcast_tagged_t(dtype, wire, root, tag)
+    }
+
+    fn reduce_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        op: ReduceOp,
+        root: usize,
+        tag: u64,
+    ) -> Result<CommStats> {
+        self.comm.reduce_tagged_t(dtype, wire, op, root, tag)
+    }
+
+    fn all_gather_tagged_t(
+        &self,
+        dtype: DType,
+        send: &[u8],
+        tag: u64,
+    ) -> Result<(Vec<u8>, CommStats)> {
+        self.comm.all_gather_tagged_t(dtype, send, tag)
+    }
+
+    fn reduce_scatter_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        op: ReduceOp,
+        tag: u64,
+    ) -> Result<CommStats> {
+        self.comm.reduce_scatter_tagged_t(dtype, wire, op, tag)
+    }
+
+    fn all_to_all_tagged_t(
+        &self,
+        dtype: DType,
+        send: &[u8],
+        tag: u64,
+    ) -> Result<(Vec<u8>, CommStats)> {
+        self.comm.all_to_all_tagged_t(dtype, send, tag)
+    }
+
+    fn gather_tagged_t(
+        &self,
+        dtype: DType,
+        send: &[u8],
+        root: usize,
+        tag: u64,
+    ) -> Result<(Option<Vec<u8>>, CommStats)> {
+        self.comm.gather_tagged_t(dtype, send, root, tag)
+    }
+
+    fn send_tagged(&self, peer: usize, tag: u64, dtype: DType, wire: &[u8]) -> Result<CommStats> {
+        self.comm.send_tagged(peer, tag, dtype, wire)
+    }
+
+    fn recv_tagged(
+        &self,
+        peer: usize,
+        tag: u64,
+        dtype: DType,
+        wire: &mut [u8],
+    ) -> Result<CommStats> {
+        self.comm.recv_tagged(peer, tag, dtype, wire)
+    }
+
+    fn all_reduce_async_t(
+        &self,
+        tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, CommStats)> {
+        self.comm.all_reduce_async_t(tensor, op)
+    }
+
+    fn broadcast_async_t(
+        &self,
+        tensor: CommTensor,
+        root: usize,
+    ) -> WorkHandle<(CommTensor, CommStats)> {
+        self.comm.broadcast_async_t(tensor, root)
+    }
+
+    fn reduce_scatter_async_t(
+        &self,
+        tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, CommStats)> {
+        self.comm.reduce_scatter_async_t(tensor, op)
+    }
+
+    fn all_to_all_async_t(&self, tensor: CommTensor) -> WorkHandle<(CommTensor, CommStats)> {
+        self.comm.all_to_all_async_t(tensor)
+    }
+
+    // f32 fast-path overrides: keep the native-accumulator ring bodies
+    // (specialized fold directly into `&mut [f32]`) for the gradient
+    // hot path instead of the generic wire-byte fold.
+
     fn all_reduce_tagged(&self, buf: &mut [f32], op: ReduceOp, tag: u64) -> Result<CommStats> {
         self.comm.all_reduce_tagged(buf, op, tag)
     }
@@ -90,10 +210,6 @@ impl CollectiveBackend for VendorSim {
 
     fn all_gather_tagged(&self, send: &[f32], tag: u64) -> Result<(Vec<f32>, CommStats)> {
         self.comm.all_gather_tagged(send, tag)
-    }
-
-    fn barrier(&self) -> Result<CommStats> {
-        self.comm.barrier()
     }
 
     fn all_reduce_async(&self, buf: Vec<f32>, op: ReduceOp) -> WorkHandle<(Vec<f32>, CommStats)> {
@@ -143,6 +259,41 @@ mod tests {
         });
         for o in out {
             assert_eq!(o, vec![3.0; 4]);
+        }
+    }
+
+    #[test]
+    fn generic_f32_path_matches_native_fast_path() {
+        // The wire-byte fold and the native-accumulator fold must be
+        // bit-identical (same op order, same arithmetic).
+        let eps = InprocMesh::new(3);
+        let sims: Vec<VendorSim> = eps
+            .into_iter()
+            .map(|e| VendorSim::new(VendorKind::Nccl, Communicator::new(Arc::new(e))))
+            .collect();
+        let out: Vec<(Vec<f32>, Vec<f32>)> = std::thread::scope(|s| {
+            let hs: Vec<_> = sims
+                .iter()
+                .map(|b| {
+                    s.spawn(move || {
+                        let init: Vec<f32> =
+                            (0..513)
+                                .map(|i| (i as f32 * 0.371 + b.rank() as f32) * 1.3e-3)
+                                .collect();
+                        let mut fast = init.clone();
+                        b.all_reduce(&mut fast, ReduceOp::Sum).unwrap();
+                        let tag = b.reserve_tag();
+                        let mut generic = crate::transport::f32s_to_bytes(&init);
+                        b.all_reduce_tagged_t(DType::F32, &mut generic, ReduceOp::Sum, tag)
+                            .unwrap();
+                        (fast, crate::transport::bytes_to_f32s(&generic).unwrap())
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (fast, generic) in out {
+            assert_eq!(fast, generic);
         }
     }
 }

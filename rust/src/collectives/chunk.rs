@@ -13,9 +13,15 @@
 //! copied straight out of the received [`Buf`] — the only copies on the
 //! whole path are the one serialization at the producer and (for
 //! placement ops) the one deserialization at the consumer.
+//!
+//! The framing is dtype-generic: frames stride by whole elements of the
+//! payload's [`DType`] (`send_wire` / `recv_fold_wire` / `recv_place_wire`
+//! over wire bytes); the `_f32s` entry points are the f32 fast-path
+//! wrappers the seed API used.
 
 use crate::comm::buf::BufPool;
-use crate::transport::{f32s_from_bytes, fill_f32_bytes, Transport};
+use crate::comm::tensor::{with_f32_wire, with_f32_wire_ref, DType};
+use crate::transport::Transport;
 use crate::Result;
 
 use super::ops::ReduceOp;
@@ -28,15 +34,34 @@ pub const CHUNK_TAG_BITS: u32 = 16;
 /// Sub-tags available to one op on one directed link.
 pub const MAX_CHUNKS_PER_OP: u64 = 1 << CHUNK_TAG_BITS;
 
-/// Number of wire frames for a payload of `bytes` at `chunk_bytes`
-/// granularity (an empty payload still takes one frame). Frames stride
-/// by whole f32 elements, so the count is computed at element
-/// granularity too — a misaligned `chunk_bytes` rounds down to elements
-/// instead of silently dropping the tail.
+/// High-bit namespace for point-to-point verbs: user tags live here,
+/// disjoint from the collective op counter (which grows from 1) by the
+/// set top bit. The low [`CHUNK_TAG_BITS`] bits still carry chunk
+/// sub-tags.
+pub const PTP_TAG_BASE: u64 = 1 << 62;
+
+/// Full transport tag for a user-facing point-to-point `tag`.
+pub fn ptp_tag(user: u32) -> u64 {
+    PTP_TAG_BASE | ((user as u64) << CHUNK_TAG_BITS)
+}
+
+/// Elements per wire frame for a dtype of `elem_bytes` at `chunk_bytes`
+/// granularity (at least one element; misaligned `chunk_bytes` rounds
+/// down to whole elements instead of splitting one).
+pub fn chunk_elems(elem_bytes: usize, chunk_bytes: usize) -> usize {
+    (chunk_bytes / elem_bytes.max(1)).max(1)
+}
+
+/// Number of wire frames for a payload of `elems` elements at a stride
+/// of `chunk_elems` (an empty payload still takes one frame).
+pub fn chunks_for_elems(elems: usize, chunk_elems: usize) -> u64 {
+    (elems.div_ceil(chunk_elems.max(1)) as u64).max(1)
+}
+
+/// Number of wire frames for an f32 payload of `bytes` at `chunk_bytes`
+/// granularity (the seed-era helper, kept for the f32 call sites).
 pub fn chunks_for(bytes: usize, chunk_bytes: usize) -> u64 {
-    let elems = bytes / 4;
-    let chunk_elems = (chunk_bytes / 4).max(1);
-    (elems.div_ceil(chunk_elems) as u64).max(1)
+    chunks_for_elems(bytes / 4, chunk_elems(4, chunk_bytes))
 }
 
 /// Hard guard on the chunk namespace: fails the op before any traffic
@@ -85,7 +110,103 @@ impl SubTags {
     }
 }
 
-/// Send `xs` to `peer` as chunked frames built in pooled buffers.
+/// Send `wire` (bytes of whole `elem_bytes` elements) to `peer` as
+/// chunked frames built in pooled buffers.
+pub fn send_wire(
+    t: &dyn Transport,
+    peer: usize,
+    tags: &mut SubTags,
+    wire: &[u8],
+    elem_bytes: usize,
+    chunk_bytes: usize,
+    stats: &mut CommStats,
+) -> Result<()> {
+    let elems = wire.len() / elem_bytes.max(1);
+    let stride = chunk_elems(elem_bytes, chunk_bytes);
+    let n = chunks_for_elems(elems, stride);
+    let base = tags.reserve(n)?;
+    for i in 0..n {
+        let lo = ((i as usize * stride).min(elems)) * elem_bytes;
+        let hi = (((i as usize + 1) * stride).min(elems)) * elem_bytes;
+        let part = &wire[lo..hi];
+        let (mut frame, hit) = BufPool::global().take_tracked(part.len());
+        frame.as_mut_slice().copy_from_slice(part);
+        stats.note_take(part.len(), hit);
+        if !part.is_empty() {
+            stats.copies += 1;
+        }
+        stats.bytes_sent += part.len() as u64;
+        stats.messages += 1;
+        t.send(peer, base + i, frame.freeze())?;
+    }
+    Ok(())
+}
+
+/// Receive `dst.len()` wire bytes from `peer`, folding each chunk into
+/// `dst` per `dtype` as it arrives — no reassembly buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn recv_fold_wire(
+    t: &dyn Transport,
+    peer: usize,
+    tags: &mut SubTags,
+    op: ReduceOp,
+    dtype: DType,
+    dst: &mut [u8],
+    chunk_bytes: usize,
+    stats: &mut CommStats,
+) -> Result<()> {
+    let es = dtype.size_bytes();
+    let elems = dst.len() / es;
+    let stride = chunk_elems(es, chunk_bytes);
+    let n = chunks_for_elems(elems, stride);
+    let base = tags.reserve(n)?;
+    for i in 0..n {
+        let data = t.recv(peer, base + i)?;
+        let lo = ((i as usize * stride).min(elems)) * es;
+        let hi = (((i as usize + 1) * stride).min(elems)) * es;
+        stats.bytes_recv += data.len() as u64;
+        op.fold_wire(dtype, &mut dst[lo..hi], &data)?;
+    }
+    Ok(())
+}
+
+/// Receive `dst.len()` wire bytes from `peer`, copying each chunk into
+/// place (the placement path of all-gather / broadcast / scatter).
+pub fn recv_place_wire(
+    t: &dyn Transport,
+    peer: usize,
+    tags: &mut SubTags,
+    dst: &mut [u8],
+    elem_bytes: usize,
+    chunk_bytes: usize,
+    stats: &mut CommStats,
+) -> Result<()> {
+    let es = elem_bytes.max(1);
+    let elems = dst.len() / es;
+    let stride = chunk_elems(es, chunk_bytes);
+    let n = chunks_for_elems(elems, stride);
+    let base = tags.reserve(n)?;
+    for i in 0..n {
+        let data = t.recv(peer, base + i)?;
+        let lo = ((i as usize * stride).min(elems)) * es;
+        let hi = (((i as usize + 1) * stride).min(elems)) * es;
+        if data.len() != hi - lo {
+            anyhow::bail!(
+                "chunk {i} from rank {peer}: got {} wire bytes, expected {}",
+                data.len(),
+                hi - lo
+            );
+        }
+        stats.bytes_recv += data.len() as u64;
+        if hi > lo {
+            stats.copies += 1;
+        }
+        dst[lo..hi].copy_from_slice(&data);
+    }
+    Ok(())
+}
+
+/// Send `xs` to `peer` as chunked frames (f32 fast-path wrapper).
 pub fn send_f32s(
     t: &dyn Transport,
     peer: usize,
@@ -94,28 +215,12 @@ pub fn send_f32s(
     chunk_bytes: usize,
     stats: &mut CommStats,
 ) -> Result<()> {
-    let n = chunks_for(xs.len() * 4, chunk_bytes);
-    let base = tags.reserve(n)?;
-    let chunk_elems = (chunk_bytes / 4).max(1);
-    for i in 0..n {
-        let lo = (i as usize * chunk_elems).min(xs.len());
-        let hi = (lo + chunk_elems).min(xs.len());
-        let part = &xs[lo..hi];
-        let (mut frame, hit) = BufPool::global().take_tracked(part.len() * 4);
-        fill_f32_bytes(frame.as_mut_slice(), part);
-        stats.note_take(part.len() * 4, hit);
-        if !part.is_empty() {
-            stats.copies += 1;
-        }
-        stats.bytes_sent += (part.len() * 4) as u64;
-        stats.messages += 1;
-        t.send(peer, base + i, frame.freeze())?;
-    }
-    Ok(())
+    with_f32_wire_ref(xs, |wire| send_wire(t, peer, tags, wire, 4, chunk_bytes, stats))
 }
 
 /// Receive `dst.len()` elements from `peer`, folding each chunk into
-/// `dst` as it arrives — no reassembly buffer, no intermediate vector.
+/// `dst` as it arrives (f32 fast path: native accumulator, specialized
+/// `Sum` loop).
 pub fn recv_fold(
     t: &dyn Transport,
     peer: usize,
@@ -125,13 +230,13 @@ pub fn recv_fold(
     chunk_bytes: usize,
     stats: &mut CommStats,
 ) -> Result<()> {
-    let n = chunks_for(dst.len() * 4, chunk_bytes);
+    let stride = chunk_elems(4, chunk_bytes);
+    let n = chunks_for_elems(dst.len(), stride);
     let base = tags.reserve(n)?;
-    let chunk_elems = (chunk_bytes / 4).max(1);
     for i in 0..n {
         let data = t.recv(peer, base + i)?;
-        let lo = (i as usize * chunk_elems).min(dst.len());
-        let hi = (lo + chunk_elems).min(dst.len());
+        let lo = (i as usize * stride).min(dst.len());
+        let hi = (lo + stride).min(dst.len());
         stats.bytes_recv += data.len() as u64;
         op.fold_bytes(&mut dst[lo..hi], &data)?;
     }
@@ -139,7 +244,7 @@ pub fn recv_fold(
 }
 
 /// Receive `dst.len()` elements from `peer`, copying each chunk into
-/// place (the placement path of all-gather / broadcast).
+/// place (f32 wrapper).
 pub fn recv_copy(
     t: &dyn Transport,
     peer: usize,
@@ -148,20 +253,9 @@ pub fn recv_copy(
     chunk_bytes: usize,
     stats: &mut CommStats,
 ) -> Result<()> {
-    let n = chunks_for(dst.len() * 4, chunk_bytes);
-    let base = tags.reserve(n)?;
-    let chunk_elems = (chunk_bytes / 4).max(1);
-    for i in 0..n {
-        let data = t.recv(peer, base + i)?;
-        let lo = (i as usize * chunk_elems).min(dst.len());
-        let hi = (lo + chunk_elems).min(dst.len());
-        stats.bytes_recv += data.len() as u64;
-        if hi > lo {
-            stats.copies += 1;
-        }
-        f32s_from_bytes(&mut dst[lo..hi], &data)?;
-    }
-    Ok(())
+    with_f32_wire(dst, |wire| {
+        recv_place_wire(t, peer, tags, wire, 4, chunk_bytes, stats)
+    })
 }
 
 #[cfg(test)]
@@ -179,6 +273,22 @@ mod tests {
         // count must match the element stride, never dropping the tail.
         assert_eq!(chunks_for(12, 6), 3, "3 elems at 1-elem stride");
         assert_eq!(chunks_for(40, 11), 5, "10 elems at 2-elem stride");
+        // Dtype-generic strides.
+        assert_eq!(chunk_elems(2, 1024), 512, "f16 stride");
+        assert_eq!(chunk_elems(1, 1024), 1024, "u8 stride");
+        assert_eq!(chunk_elems(4, 2), 1, "stride is at least one element");
+        assert_eq!(chunks_for_elems(1000, 512), 2);
+        assert_eq!(chunks_for_elems(0, 512), 1);
+    }
+
+    #[test]
+    fn ptp_tags_disjoint_from_collective_tags() {
+        // Collective tags are (counter+1) << CHUNK_TAG_BITS; p2p tags
+        // carry the top bit.
+        let collective = 12345_u64 << CHUNK_TAG_BITS;
+        assert_eq!(ptp_tag(0) & collective, 0);
+        assert!(ptp_tag(7) > collective);
+        assert_eq!(ptp_tag(7) & (MAX_CHUNKS_PER_OP - 1), 0, "low bits free for chunks");
     }
 
     #[test]
@@ -229,6 +339,39 @@ mod tests {
                 assert_eq!(st.bytes_recv, 8000);
             });
         });
+    }
+
+    #[test]
+    fn dtype_wire_roundtrip_f16_and_u8() {
+        use crate::comm::tensor::CommTensor;
+        let eps = InprocMesh::new(2);
+        let tag = 1 << CHUNK_TAG_BITS;
+        for dtype in [DType::F16, DType::U8, DType::I32, DType::Bf16] {
+            let xs: Vec<f32> = (0..300).map(|i| (i % 120) as f32).collect();
+            let t_send = CommTensor::from_f32(dtype, &xs);
+            let expect = t_send.as_bytes().to_vec();
+            std::thread::scope(|s| {
+                let e0 = &eps[0];
+                let wire = t_send.as_bytes();
+                s.spawn(move || {
+                    let mut st = CommStats::default();
+                    let mut tags = SubTags::new(tag);
+                    send_wire(e0, 1, &mut tags, wire, dtype.size_bytes(), 64, &mut st)
+                        .unwrap();
+                    assert_eq!(st.bytes_sent as usize, wire.len());
+                });
+                let e1 = &eps[1];
+                let expect = &expect;
+                s.spawn(move || {
+                    let mut st = CommStats::default();
+                    let mut tags = SubTags::new(tag);
+                    let mut dst = vec![0_u8; expect.len()];
+                    recv_place_wire(e1, 0, &mut tags, &mut dst, dtype.size_bytes(), 64, &mut st)
+                        .unwrap();
+                    assert_eq!(&dst, expect, "{}", dtype.name());
+                });
+            });
+        }
     }
 
     #[test]

@@ -23,7 +23,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
-use crate::comm::buf::Buf;
+use crate::comm::buf::{chunk_bytes, Buf, BufPool};
+use crate::comm::tensor::{CommTensor, DType};
 use crate::transport::Transport;
 use crate::Result;
 
@@ -89,6 +90,120 @@ impl CommStats {
             self.alloc_bytes += bytes as u64;
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// dtype-generic collective bodies over a bare transport
+// ---------------------------------------------------------------------
+// Free functions so the blocking-tagged and async paths (which only hold
+// `&dyn Transport` inside the comm-thread closure) share one body.
+
+/// Pairwise all-to-all: `send` is `world` equal segments in rank order;
+/// the output's segment `j` is rank `j`'s segment `rank`.
+pub(crate) fn op_all_to_all(
+    t: &dyn Transport,
+    dtype: DType,
+    send: &[u8],
+    tag: u64,
+    chunk_bytes: usize,
+) -> Result<(Vec<u8>, CommStats)> {
+    let (rank, w) = (t.rank(), t.world());
+    let es = dtype.size_bytes();
+    let elems = send.len() / es;
+    anyhow::ensure!(
+        elems % w == 0,
+        "all_to_all needs a multiple of world ({w}) elements, got {elems}"
+    );
+    let mut stats = CommStats::default();
+    let seg_b = (elems / w) * es;
+    let (mut out, hit) = BufPool::global().take_vec(send.len());
+    stats.note_take(send.len(), hit);
+    let stride = chunk::chunk_elems(es, chunk_bytes);
+    chunk::ensure_budget(
+        chunk::chunks_for_elems(elems / w, stride),
+        "all-to-all",
+    )?;
+    // Own segment moves locally.
+    out[rank * seg_b..(rank + 1) * seg_b]
+        .copy_from_slice(&send[rank * seg_b..(rank + 1) * seg_b]);
+    if seg_b > 0 {
+        stats.copies += 1;
+    }
+    // Exchange with every peer; sub-tag allocators are per directed
+    // pair, so each peer gets a fresh sequence under the same op tag.
+    for off in 1..w {
+        let to = (rank + off) % w;
+        let mut stags = chunk::SubTags::new(tag);
+        chunk::send_wire(
+            t,
+            to,
+            &mut stags,
+            &send[to * seg_b..(to + 1) * seg_b],
+            es,
+            chunk_bytes,
+            &mut stats,
+        )?;
+        let from = (rank + w - off) % w;
+        let mut rtags = chunk::SubTags::new(tag);
+        chunk::recv_place_wire(
+            t,
+            from,
+            &mut rtags,
+            &mut out[from * seg_b..(from + 1) * seg_b],
+            es,
+            chunk_bytes,
+            &mut stats,
+        )?;
+    }
+    Ok((out, stats))
+}
+
+/// Gather equal-length contributions to `root` only: returns
+/// `Some(concatenation in rank order)` at the root, `None` elsewhere.
+pub(crate) fn op_gather(
+    t: &dyn Transport,
+    dtype: DType,
+    send: &[u8],
+    root: usize,
+    tag: u64,
+    chunk_bytes: usize,
+) -> Result<(Option<Vec<u8>>, CommStats)> {
+    let (rank, w) = (t.rank(), t.world());
+    let es = dtype.size_bytes();
+    let mut stats = CommStats::default();
+    let stride = chunk::chunk_elems(es, chunk_bytes);
+    chunk::ensure_budget(
+        chunk::chunks_for_elems(send.len() / es, stride),
+        "gather",
+    )?;
+    if rank != root {
+        let mut tags = chunk::SubTags::new(tag);
+        chunk::send_wire(t, root, &mut tags, send, es, chunk_bytes, &mut stats)?;
+        return Ok((None, stats));
+    }
+    let seg_b = send.len();
+    let (mut out, hit) = BufPool::global().take_vec(seg_b * w);
+    stats.note_take(seg_b * w, hit);
+    out[root * seg_b..(root + 1) * seg_b].copy_from_slice(send);
+    if seg_b > 0 {
+        stats.copies += 1;
+    }
+    for r in 0..w {
+        if r == root {
+            continue;
+        }
+        let mut tags = chunk::SubTags::new(tag);
+        chunk::recv_place_wire(
+            t,
+            r,
+            &mut tags,
+            &mut out[r * seg_b..(r + 1) * seg_b],
+            es,
+            chunk_bytes,
+            &mut stats,
+        )?;
+    }
+    Ok((Some(out), stats))
 }
 
 /// A communicator: a transport endpoint + operation counter + (lazily
@@ -249,6 +364,298 @@ impl Communicator {
         stats.op = "reduce";
         stats.inflight_hw_bytes = self.transport.inflight_high_water();
         Ok(stats)
+    }
+
+    // -----------------------------------------------------------------
+    // dtype-generic verbs (wire-byte views + CommTensor endpoints)
+    // -----------------------------------------------------------------
+
+    /// In-place dtype-generic all-reduce under a caller-reserved tag.
+    pub fn all_reduce_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        op: ReduceOp,
+        tag: u64,
+    ) -> Result<CommStats> {
+        let t0 = Instant::now();
+        let mut stats =
+            ring::ring_all_reduce_t(self.transport.as_ref(), dtype, wire, op, tag, chunk_bytes())?;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        stats.op = "all_reduce";
+        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        Ok(stats)
+    }
+
+    /// In-place dtype-generic broadcast under a caller-reserved tag.
+    pub fn broadcast_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        root: usize,
+        tag: u64,
+    ) -> Result<CommStats> {
+        let t0 = Instant::now();
+        let es = dtype.size_bytes();
+        let mut stats = tree::broadcast_t(self.transport.as_ref(), es, wire, root, tag)?;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        stats.op = "broadcast";
+        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        Ok(stats)
+    }
+
+    /// Dtype-generic tree reduce to `root` under a caller-reserved tag
+    /// (non-root buffers end as partial-sum scratch).
+    pub fn reduce_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        op: ReduceOp,
+        root: usize,
+        tag: u64,
+    ) -> Result<CommStats> {
+        let t0 = Instant::now();
+        let mut stats = tree::reduce_t(self.transport.as_ref(), dtype, wire, op, root, tag)?;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        stats.op = "reduce";
+        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        Ok(stats)
+    }
+
+    /// Dtype-generic all-gather under a caller-reserved tag; the output
+    /// is `world × send.len()` wire bytes in rank order (pooled vector —
+    /// return it with `BufPool::put_vec` when done).
+    pub fn all_gather_tagged_t(
+        &self,
+        dtype: DType,
+        send: &[u8],
+        tag: u64,
+    ) -> Result<(Vec<u8>, CommStats)> {
+        let t0 = Instant::now();
+        let mut stats = CommStats::default();
+        let (mut out, hit) = BufPool::global().take_vec(send.len() * self.world());
+        stats.note_take(send.len() * self.world(), hit);
+        ring::ring_all_gather_into_t(
+            self.transport.as_ref(),
+            dtype.size_bytes(),
+            send,
+            &mut out,
+            tag,
+            chunk_bytes(),
+            &mut stats,
+        )?;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        stats.op = "all_gather";
+        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        Ok((out, stats))
+    }
+
+    /// Dtype-generic in-place ring reduce-scatter under a caller-reserved
+    /// tag: afterwards this rank's `ring::segment(n, world, rank)` holds
+    /// the fully reduced values (rest of the buffer is scratch).
+    pub fn reduce_scatter_tagged_t(
+        &self,
+        dtype: DType,
+        wire: &mut [u8],
+        op: ReduceOp,
+        tag: u64,
+    ) -> Result<CommStats> {
+        let t0 = Instant::now();
+        let mut stats = ring::ring_reduce_scatter_t(
+            self.transport.as_ref(),
+            dtype,
+            wire,
+            op,
+            tag,
+            chunk_bytes(),
+        )?;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        stats.op = "reduce_scatter";
+        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        Ok(stats)
+    }
+
+    /// Dtype-generic pairwise all-to-all under a caller-reserved tag
+    /// (`send` = `world` equal segments; output segment `j` is rank
+    /// `j`'s segment `rank`; pooled output vector).
+    pub fn all_to_all_tagged_t(
+        &self,
+        dtype: DType,
+        send: &[u8],
+        tag: u64,
+    ) -> Result<(Vec<u8>, CommStats)> {
+        let t0 = Instant::now();
+        let (out, mut stats) =
+            op_all_to_all(self.transport.as_ref(), dtype, send, tag, chunk_bytes())?;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        stats.op = "all_to_all";
+        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        Ok((out, stats))
+    }
+
+    /// Dtype-generic gather to `root` under a caller-reserved tag
+    /// (`Some(concatenation)` at root, `None` elsewhere).
+    pub fn gather_tagged_t(
+        &self,
+        dtype: DType,
+        send: &[u8],
+        root: usize,
+        tag: u64,
+    ) -> Result<(Option<Vec<u8>>, CommStats)> {
+        let t0 = Instant::now();
+        let (out, mut stats) =
+            op_gather(self.transport.as_ref(), dtype, send, root, tag, chunk_bytes())?;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        stats.op = "gather";
+        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        Ok((out, stats))
+    }
+
+    /// Point-to-point chunked send of wire bytes under an explicit full
+    /// tag (see `chunk::ptp_tag` for the user-tag namespace). Matching
+    /// is FIFO per `(sender, tag)` stream, so both sides must agree on
+    /// lengths and ordering — the SPMD discipline for p2p.
+    pub fn send_tagged(
+        &self,
+        peer: usize,
+        tag: u64,
+        dtype: DType,
+        wire: &[u8],
+    ) -> Result<CommStats> {
+        let t0 = Instant::now();
+        let es = dtype.size_bytes();
+        let mut stats = CommStats::default();
+        let stride = chunk::chunk_elems(es, chunk_bytes());
+        chunk::ensure_budget(chunk::chunks_for_elems(wire.len() / es, stride), "send")?;
+        let mut tags = chunk::SubTags::new(tag);
+        chunk::send_wire(
+            self.transport.as_ref(),
+            peer,
+            &mut tags,
+            wire,
+            es,
+            chunk_bytes(),
+            &mut stats,
+        )?;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        stats.op = "send";
+        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        Ok(stats)
+    }
+
+    /// Point-to-point chunked receive into `wire` (whose length fixes
+    /// the expected message size) under an explicit full tag.
+    pub fn recv_tagged(
+        &self,
+        peer: usize,
+        tag: u64,
+        dtype: DType,
+        wire: &mut [u8],
+    ) -> Result<CommStats> {
+        let t0 = Instant::now();
+        let es = dtype.size_bytes();
+        let mut stats = CommStats::default();
+        let stride = chunk::chunk_elems(es, chunk_bytes());
+        chunk::ensure_budget(chunk::chunks_for_elems(wire.len() / es, stride), "recv")?;
+        let mut tags = chunk::SubTags::new(tag);
+        chunk::recv_place_wire(
+            self.transport.as_ref(),
+            peer,
+            &mut tags,
+            wire,
+            es,
+            chunk_bytes(),
+            &mut stats,
+        )?;
+        stats.seconds = t0.elapsed().as_secs_f64();
+        stats.op = "recv";
+        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        Ok(stats)
+    }
+
+    /// Issue a dtype-generic all-reduce of a [`CommTensor`].
+    pub fn all_reduce_async_t(
+        &self,
+        mut tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, CommStats)> {
+        let tag = self.reserve_tag();
+        self.run_async(move |t| {
+            let t0 = Instant::now();
+            let dtype = tensor.dtype();
+            let mut stats =
+                ring::ring_all_reduce_t(t, dtype, tensor.as_bytes_mut(), op, tag, chunk_bytes())?;
+            stats.seconds = t0.elapsed().as_secs_f64();
+            stats.op = "all_reduce";
+            stats.inflight_hw_bytes = t.inflight_high_water();
+            Ok((tensor, stats))
+        })
+    }
+
+    /// Issue a dtype-generic broadcast of a [`CommTensor`].
+    pub fn broadcast_async_t(
+        &self,
+        mut tensor: CommTensor,
+        root: usize,
+    ) -> WorkHandle<(CommTensor, CommStats)> {
+        let tag = self.reserve_tag();
+        self.run_async(move |t| {
+            let t0 = Instant::now();
+            let es = tensor.dtype().size_bytes();
+            let mut stats = tree::broadcast_t(t, es, tensor.as_bytes_mut(), root, tag)?;
+            stats.seconds = t0.elapsed().as_secs_f64();
+            stats.op = "broadcast";
+            stats.inflight_hw_bytes = t.inflight_high_water();
+            Ok((tensor, stats))
+        })
+    }
+
+    /// Issue a dtype-generic reduce-scatter; the handle yields this
+    /// rank's reduced shard (`ring::segment(len, world, rank)` elements).
+    pub fn reduce_scatter_async_t(
+        &self,
+        mut tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, CommStats)> {
+        let tag = self.reserve_tag();
+        let (rank, world) = (self.rank(), self.world());
+        self.run_async(move |t| {
+            let t0 = Instant::now();
+            let dtype = tensor.dtype();
+            let mut stats = ring::ring_reduce_scatter_t(
+                t,
+                dtype,
+                tensor.as_bytes_mut(),
+                op,
+                tag,
+                chunk_bytes(),
+            )?;
+            let (s0, s1) = ring::segment(tensor.len(), world, rank);
+            let shard = tensor.slice(s0, s1)?;
+            tensor.recycle();
+            stats.seconds = t0.elapsed().as_secs_f64();
+            stats.op = "reduce_scatter";
+            stats.inflight_hw_bytes = t.inflight_high_water();
+            Ok((shard, stats))
+        })
+    }
+
+    /// Issue a dtype-generic all-to-all; the handle yields the
+    /// full-size regrouped tensor.
+    pub fn all_to_all_async_t(&self, tensor: CommTensor) -> WorkHandle<(CommTensor, CommStats)> {
+        let tag = self.reserve_tag();
+        self.run_async(move |t| {
+            let t0 = Instant::now();
+            let dtype = tensor.dtype();
+            let (out, mut stats) =
+                op_all_to_all(t, dtype, tensor.as_bytes(), tag, chunk_bytes())?;
+            tensor.recycle();
+            let out = CommTensor::from_wire(dtype, out)?;
+            stats.seconds = t0.elapsed().as_secs_f64();
+            stats.op = "all_to_all";
+            stats.inflight_hw_bytes = t.inflight_high_water();
+            Ok((out, stats))
+        })
     }
 
     /// Dissemination barrier.

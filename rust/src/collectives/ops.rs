@@ -1,4 +1,23 @@
-//! Reduction operators for collectives.
+//! Reduction operators for collectives, with per-dtype elementwise
+//! folds over wire-format buffers.
+//!
+//! Two fold families:
+//! * [`ReduceOp::fold`] / [`ReduceOp::fold_bytes`] — the f32 fast path
+//!   the ring/tree algorithms use for `DType::F32` payloads (native
+//!   accumulator, wire-bytes incoming). The `Sum` wire-fold is
+//!   specialized into a dedicated loop (no per-element operator
+//!   dispatch) — it is the single hottest loop of gradient
+//!   aggregation, covered by `benches/dataplane.rs`.
+//! * [`ReduceOp::fold_wire`] — the dtype-generic path: both sides are
+//!   little-endian wire bytes tagged with a [`DType`]. Floating dtypes
+//!   (f16/bf16) decode → apply in f32 → re-encode per element; integer
+//!   dtypes reduce natively (wrapping addition, so the result is
+//!   independent of fold order — chunking and path choice can never
+//!   change an integer sum).
+
+use crate::comm::tensor::{
+    bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits, DType,
+};
 
 /// Elementwise reduction applied across ranks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,9 +61,64 @@ impl ReduceOp {
         }
     }
 
+    /// Combine two i32 under this op (wrapping sum: associative and
+    /// commutative, so chunk/path order can never change the result).
+    #[inline]
+    pub fn apply_i32(self, a: i32, b: i32) -> i32 {
+        match self {
+            ReduceOp::Sum => a.wrapping_add(b),
+            ReduceOp::Max => a.max(b),
+            ReduceOp::Min => a.min(b),
+        }
+    }
+
+    /// Combine two u8 under this op (wrapping sum, same rationale).
+    #[inline]
+    pub fn apply_u8(self, a: u8, b: u8) -> u8 {
+        match self {
+            ReduceOp::Sum => a.wrapping_add(b),
+            ReduceOp::Max => a.max(b),
+            ReduceOp::Min => a.min(b),
+        }
+    }
+
     /// Fold little-endian f32 wire bytes into `acc` — the zero-copy
     /// receive path: parse-and-fold in one pass, no intermediate vector.
+    /// The operator match is hoisted out of the loop; `Sum` gets its own
+    /// straight-line add loop (the gradient-aggregation hot path).
     pub fn fold_bytes(self, acc: &mut [f32], bytes: &[u8]) -> crate::Result<()> {
+        if bytes.len() != acc.len() * 4 {
+            anyhow::bail!(
+                "fold got {} wire bytes for {} f32 elements",
+                bytes.len(),
+                acc.len()
+            );
+        }
+        match self {
+            ReduceOp::Sum => {
+                for (a, c) in acc.iter_mut().zip(bytes.chunks_exact(4)) {
+                    *a += f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+            }
+            ReduceOp::Max => {
+                for (a, c) in acc.iter_mut().zip(bytes.chunks_exact(4)) {
+                    *a = a.max(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+            }
+            ReduceOp::Min => {
+                for (a, c) in acc.iter_mut().zip(bytes.chunks_exact(4)) {
+                    *a = a.min(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The pre-specialization wire fold (per-element `apply` dispatch).
+    /// Kept only as the baseline `benches/dataplane.rs` measures the
+    /// specialized [`ReduceOp::fold_bytes`] against.
+    #[doc(hidden)]
+    pub fn fold_bytes_via_apply(self, acc: &mut [f32], bytes: &[u8]) -> crate::Result<()> {
         if bytes.len() != acc.len() * 4 {
             anyhow::bail!(
                 "fold got {} wire bytes for {} f32 elements",
@@ -54,6 +128,81 @@ impl ReduceOp {
         }
         for (a, c) in acc.iter_mut().zip(bytes.chunks_exact(4)) {
             *a = self.apply(*a, f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(())
+    }
+
+    /// Dtype-generic wire fold: `acc` and `incoming` are little-endian
+    /// wire buffers of the same `dtype` and element count; each element
+    /// of `incoming` is folded into `acc` in place.
+    pub fn fold_wire(self, dtype: DType, acc: &mut [u8], incoming: &[u8]) -> crate::Result<()> {
+        let es = dtype.size_bytes();
+        if incoming.len() != acc.len() || acc.len() % es != 0 {
+            anyhow::bail!(
+                "fold_wire({}) got {} incoming bytes for {} accumulator bytes \
+                 ({} B/elem)",
+                dtype.name(),
+                incoming.len(),
+                acc.len(),
+                es
+            );
+        }
+        match dtype {
+            DType::F32 => {
+                // Native accumulator view would need alignment; decode/
+                // encode per element keeps it valid for any byte buffer.
+                match self {
+                    ReduceOp::Sum => {
+                        // Specialized hot loop (see `fold_bytes`).
+                        for (a, b) in acc.chunks_exact_mut(4).zip(incoming.chunks_exact(4)) {
+                            let v = f32::from_le_bytes([a[0], a[1], a[2], a[3]])
+                                + f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                            a.copy_from_slice(&v.to_le_bytes());
+                        }
+                    }
+                    _ => {
+                        for (a, b) in acc.chunks_exact_mut(4).zip(incoming.chunks_exact(4)) {
+                            let v = self.apply(
+                                f32::from_le_bytes([a[0], a[1], a[2], a[3]]),
+                                f32::from_le_bytes([b[0], b[1], b[2], b[3]]),
+                            );
+                            a.copy_from_slice(&v.to_le_bytes());
+                        }
+                    }
+                }
+            }
+            DType::F16 => {
+                for (a, b) in acc.chunks_exact_mut(2).zip(incoming.chunks_exact(2)) {
+                    let v = self.apply(
+                        f16_bits_to_f32(u16::from_le_bytes([a[0], a[1]])),
+                        f16_bits_to_f32(u16::from_le_bytes([b[0], b[1]])),
+                    );
+                    a.copy_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+                }
+            }
+            DType::Bf16 => {
+                for (a, b) in acc.chunks_exact_mut(2).zip(incoming.chunks_exact(2)) {
+                    let v = self.apply(
+                        bf16_bits_to_f32(u16::from_le_bytes([a[0], a[1]])),
+                        bf16_bits_to_f32(u16::from_le_bytes([b[0], b[1]])),
+                    );
+                    a.copy_from_slice(&f32_to_bf16_bits(v).to_le_bytes());
+                }
+            }
+            DType::I32 => {
+                for (a, b) in acc.chunks_exact_mut(4).zip(incoming.chunks_exact(4)) {
+                    let v = self.apply_i32(
+                        i32::from_le_bytes([a[0], a[1], a[2], a[3]]),
+                        i32::from_le_bytes([b[0], b[1], b[2], b[3]]),
+                    );
+                    a.copy_from_slice(&v.to_le_bytes());
+                }
+            }
+            DType::U8 => {
+                for (a, b) in acc.iter_mut().zip(incoming) {
+                    *a = self.apply_u8(*a, *b);
+                }
+            }
         }
         Ok(())
     }
@@ -70,6 +219,7 @@ impl ReduceOp {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::tensor::CommTensor;
 
     #[test]
     fn fold_sum() {
@@ -85,12 +235,16 @@ mod tests {
         for op in [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min] {
             let mut a = vec![1.0_f32, 2.0, 3.0];
             let mut b = a.clone();
+            let mut c = a.clone();
             op.fold(&mut a, &incoming);
             op.fold_bytes(&mut b, &bytes).unwrap();
+            op.fold_bytes_via_apply(&mut c, &bytes).unwrap();
             assert_eq!(a, b, "{}", op.name());
+            assert_eq!(a, c, "{} (apply baseline)", op.name());
         }
         let mut short = vec![0.0_f32; 2];
         assert!(ReduceOp::Sum.fold_bytes(&mut short, &bytes).is_err());
+        assert!(ReduceOp::Sum.fold_bytes_via_apply(&mut short, &bytes).is_err());
     }
 
     #[test]
@@ -100,5 +254,74 @@ mod tests {
         assert_eq!(a, vec![3.0, 5.0]);
         ReduceOp::Min.fold(&mut a, &[2.0, -1.0]);
         assert_eq!(a, vec![2.0, -1.0]);
+    }
+
+    #[test]
+    fn fold_wire_f32_matches_f32_fast_path() {
+        let incoming = [0.5_f32, -2.0, 7.25, 0.0];
+        let wire_in = crate::transport::f32s_to_bytes(&incoming);
+        for op in [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min] {
+            let mut fast = vec![1.0_f32, 2.0, -3.0, 4.0];
+            let mut generic = crate::transport::f32s_to_bytes(&fast);
+            op.fold_bytes(&mut fast, &wire_in).unwrap();
+            op.fold_wire(DType::F32, &mut generic, &wire_in).unwrap();
+            assert_eq!(
+                crate::transport::bytes_to_f32s(&generic).unwrap(),
+                fast,
+                "{}",
+                op.name()
+            );
+        }
+    }
+
+    #[test]
+    fn fold_wire_float16_dtypes() {
+        // Values exactly representable in f16 and bf16.
+        let a = [1.0_f32, -2.0, 0.5, 4.0];
+        let b = [2.0_f32, 3.0, 0.25, -1.0];
+        for dtype in [DType::F16, DType::Bf16] {
+            let mut acc = CommTensor::from_f32(dtype, &a);
+            let inc = CommTensor::from_f32(dtype, &b);
+            ReduceOp::Sum
+                .fold_wire(dtype, acc.as_bytes_mut(), inc.as_bytes())
+                .unwrap();
+            assert_eq!(acc.to_f32(), vec![3.0, 1.0, 0.75, 3.0], "{}", dtype.name());
+            let mut acc = CommTensor::from_f32(dtype, &a);
+            ReduceOp::Max
+                .fold_wire(dtype, acc.as_bytes_mut(), inc.as_bytes())
+                .unwrap();
+            assert_eq!(acc.to_f32(), vec![2.0, 3.0, 0.5, 4.0], "{}", dtype.name());
+        }
+    }
+
+    #[test]
+    fn fold_wire_integer_dtypes() {
+        let mut acc = CommTensor::from_f32(DType::I32, &[1.0, -5.0, 100.0]);
+        let inc = CommTensor::from_f32(DType::I32, &[10.0, 3.0, -100.0]);
+        ReduceOp::Sum
+            .fold_wire(DType::I32, acc.as_bytes_mut(), inc.as_bytes())
+            .unwrap();
+        assert_eq!(acc.to_f32(), vec![11.0, -2.0, 0.0]);
+        ReduceOp::Min
+            .fold_wire(DType::I32, acc.as_bytes_mut(), inc.as_bytes())
+            .unwrap();
+        assert_eq!(acc.to_f32(), vec![10.0, -2.0, -100.0]);
+
+        let mut acc = CommTensor::from_f32(DType::U8, &[200.0, 1.0]);
+        let inc = CommTensor::from_f32(DType::U8, &[100.0, 2.0]);
+        ReduceOp::Sum
+            .fold_wire(DType::U8, acc.as_bytes_mut(), inc.as_bytes())
+            .unwrap();
+        // Wrapping: 200 + 100 = 44 (mod 256) — deterministic under any
+        // fold order, which is the property the data plane needs.
+        assert_eq!(acc.to_f32(), vec![44.0, 3.0]);
+    }
+
+    #[test]
+    fn fold_wire_length_mismatch_is_error() {
+        let mut acc = vec![0_u8; 8];
+        assert!(ReduceOp::Sum.fold_wire(DType::F32, &mut acc, &[0; 4]).is_err());
+        let mut odd = vec![0_u8; 3];
+        assert!(ReduceOp::Sum.fold_wire(DType::F16, &mut odd, &[0; 3]).is_err());
     }
 }

@@ -17,6 +17,7 @@
 //! [`crate::comm::buf::chunk_bytes`].
 
 use crate::comm::buf::{chunk_bytes, FloatPool};
+use crate::comm::tensor::DType;
 use crate::transport::Transport;
 use crate::Result;
 
@@ -25,10 +26,19 @@ use super::ops::ReduceOp;
 use super::CommStats;
 
 /// Split `n` into `w` contiguous segments; returns (start, end) of `s`.
+/// This is the canonical segmentation every sharded verb agrees on
+/// (ring phases, `reduce_scatter` shard ownership, sharded DDP).
 #[inline]
-fn segment(n: usize, w: usize, s: usize) -> (usize, usize) {
+pub fn segment(n: usize, w: usize, s: usize) -> (usize, usize) {
     let s = s % w;
     (s * n / w, (s + 1) * n / w)
+}
+
+/// Length in elements of rank `s`'s segment of an `n`-element buffer.
+#[inline]
+pub fn segment_len(n: usize, w: usize, s: usize) -> usize {
+    let (a, b) = segment(n, w, s);
+    b - a
 }
 
 /// In-place ring all-reduce of `buf` across all ranks of `t`.
@@ -100,6 +110,209 @@ pub fn ring_all_reduce_chunked(
         )?;
     }
     Ok(stats)
+}
+
+/// Dtype-generic in-place ring all-reduce over wire bytes (same
+/// structure as [`ring_all_reduce`], element-granular segments).
+pub fn ring_all_reduce_t(
+    t: &dyn Transport,
+    dtype: DType,
+    wire: &mut [u8],
+    op: ReduceOp,
+    tag: u64,
+    chunk_bytes: usize,
+) -> Result<CommStats> {
+    let (rank, w) = (t.rank(), t.world());
+    let mut stats = CommStats::default();
+    if w == 1 || wire.is_empty() {
+        return Ok(stats);
+    }
+    let es = dtype.size_bytes();
+    let n = wire.len() / es;
+    let stride = chunk::chunk_elems(es, chunk_bytes);
+    chunk::ensure_budget(
+        2 * (w as u64 - 1) * chunk::chunks_for_elems(n.div_ceil(w), stride),
+        "ring all-reduce",
+    )?;
+    let next = (rank + 1) % w;
+    let prev = (rank + w - 1) % w;
+    let mut send_tags = SubTags::new(tag);
+    let mut recv_tags = SubTags::new(tag);
+
+    // Phase 1: reduce-scatter.
+    for k in 0..w - 1 {
+        let (s0, s1) = segment(n, w, rank + w - k);
+        chunk::send_wire(
+            t,
+            next,
+            &mut send_tags,
+            &wire[s0 * es..s1 * es],
+            es,
+            chunk_bytes,
+            &mut stats,
+        )?;
+
+        let (r0, r1) = segment(n, w, rank + w - k - 1);
+        chunk::recv_fold_wire(
+            t,
+            prev,
+            &mut recv_tags,
+            op,
+            dtype,
+            &mut wire[r0 * es..r1 * es],
+            chunk_bytes,
+            &mut stats,
+        )?;
+    }
+
+    // Phase 2: all-gather the reduced segments.
+    for k in 0..w - 1 {
+        let (s0, s1) = segment(n, w, rank + 1 + w - k);
+        chunk::send_wire(
+            t,
+            next,
+            &mut send_tags,
+            &wire[s0 * es..s1 * es],
+            es,
+            chunk_bytes,
+            &mut stats,
+        )?;
+
+        let (r0, r1) = segment(n, w, rank + w - k);
+        chunk::recv_place_wire(
+            t,
+            prev,
+            &mut recv_tags,
+            &mut wire[r0 * es..r1 * es],
+            es,
+            chunk_bytes,
+            &mut stats,
+        )?;
+    }
+    Ok(stats)
+}
+
+/// Dtype-generic in-place ring reduce-scatter: after it returns, rank
+/// `r`'s *own* segment (`segment(n, w, r)`, elements) holds the fully
+/// reduced values; the rest of the buffer is partial-sum scratch. This
+/// is phase 1 of the ring all-reduce with the segment labels shifted so
+/// ownership lands on `segment(r)` instead of `segment(r+1)` — each
+/// rank sends `(w-1)/w · n` elements, half the all-reduce's traffic.
+pub fn ring_reduce_scatter_t(
+    t: &dyn Transport,
+    dtype: DType,
+    wire: &mut [u8],
+    op: ReduceOp,
+    tag: u64,
+    chunk_bytes: usize,
+) -> Result<CommStats> {
+    let (rank, w) = (t.rank(), t.world());
+    let mut stats = CommStats::default();
+    if w == 1 || wire.is_empty() {
+        return Ok(stats);
+    }
+    let es = dtype.size_bytes();
+    let n = wire.len() / es;
+    let stride = chunk::chunk_elems(es, chunk_bytes);
+    chunk::ensure_budget(
+        (w as u64 - 1) * chunk::chunks_for_elems(n.div_ceil(w), stride),
+        "ring reduce-scatter",
+    )?;
+    let next = (rank + 1) % w;
+    let prev = (rank + w - 1) % w;
+    let mut send_tags = SubTags::new(tag);
+    let mut recv_tags = SubTags::new(tag);
+    for k in 0..w - 1 {
+        // Shifted labels relative to ring_all_reduce phase 1 (s -> s-1):
+        // the final fold at step w-2 lands on segment(rank).
+        let (s0, s1) = segment(n, w, rank + 2 * w - k - 1);
+        chunk::send_wire(
+            t,
+            next,
+            &mut send_tags,
+            &wire[s0 * es..s1 * es],
+            es,
+            chunk_bytes,
+            &mut stats,
+        )?;
+
+        let (r0, r1) = segment(n, w, rank + 2 * w - k - 2);
+        chunk::recv_fold_wire(
+            t,
+            prev,
+            &mut recv_tags,
+            op,
+            dtype,
+            &mut wire[r0 * es..r1 * es],
+            chunk_bytes,
+            &mut stats,
+        )?;
+    }
+    Ok(stats)
+}
+
+/// Dtype-generic ring all-gather into a caller-provided output buffer:
+/// `out.len()` must be `world * send.len()` wire bytes; rank `r`'s
+/// contribution lands at byte offset `r * send.len()`.
+pub fn ring_all_gather_into_t(
+    t: &dyn Transport,
+    elem_bytes: usize,
+    send: &[u8],
+    out: &mut [u8],
+    tag: u64,
+    chunk_bytes: usize,
+    stats: &mut CommStats,
+) -> Result<()> {
+    let (rank, w) = (t.rank(), t.world());
+    let seg = send.len();
+    anyhow::ensure!(
+        out.len() == seg * w,
+        "all-gather output is {} bytes for {} ranks × {} bytes",
+        out.len(),
+        w,
+        seg
+    );
+    out[rank * seg..(rank + 1) * seg].copy_from_slice(send);
+    if seg > 0 {
+        stats.copies += 1;
+    }
+    if w == 1 || seg == 0 {
+        return Ok(());
+    }
+    let stride = chunk::chunk_elems(elem_bytes, chunk_bytes);
+    chunk::ensure_budget(
+        (w as u64 - 1) * chunk::chunks_for_elems(seg / elem_bytes.max(1), stride),
+        "ring all-gather",
+    )?;
+    let next = (rank + 1) % w;
+    let prev = (rank + w - 1) % w;
+    let mut send_tags = SubTags::new(tag);
+    let mut recv_tags = SubTags::new(tag);
+    // At step k, pass along the block originally from (rank - k).
+    for k in 0..w - 1 {
+        let src = (rank + w - k) % w;
+        chunk::send_wire(
+            t,
+            next,
+            &mut send_tags,
+            &out[src * seg..(src + 1) * seg],
+            elem_bytes,
+            chunk_bytes,
+            stats,
+        )?;
+
+        let dst = (rank + w - k - 1) % w;
+        chunk::recv_place_wire(
+            t,
+            prev,
+            &mut recv_tags,
+            &mut out[dst * seg..(dst + 1) * seg],
+            elem_bytes,
+            chunk_bytes,
+            stats,
+        )?;
+    }
+    Ok(())
 }
 
 /// Ring all-gather of equal-length `send` buffers; returns concatenation

@@ -7,6 +7,7 @@
 //! received buffers.
 
 use crate::comm::buf::chunk_bytes;
+use crate::comm::tensor::DType;
 use crate::transport::Transport;
 use crate::Result;
 
@@ -126,6 +127,124 @@ pub fn reduce(
             unvrank(parent, root, w),
             &mut tags,
             buf,
+            chunk_bytes,
+            &mut stats,
+        )?;
+    }
+    Ok(stats)
+}
+
+/// Dtype-generic binomial-tree broadcast over wire bytes (same
+/// structure as [`broadcast`]).
+pub fn broadcast_t(
+    t: &dyn Transport,
+    elem_bytes: usize,
+    wire: &mut [u8],
+    root: usize,
+    tag: u64,
+) -> Result<CommStats> {
+    let chunk_bytes = chunk_bytes();
+    let (rank, w) = (t.rank(), t.world());
+    let mut stats = CommStats::default();
+    if w == 1 {
+        return Ok(stats);
+    }
+    let elems = wire.len() / elem_bytes.max(1);
+    let stride = chunk::chunk_elems(elem_bytes, chunk_bytes);
+    chunk::ensure_budget(chunk::chunks_for_elems(elems, stride), "broadcast")?;
+    let v = vrank(rank, root, w);
+
+    if v != 0 {
+        let parent = v & (v - 1);
+        let mut tags = SubTags::new(tag);
+        chunk::recv_place_wire(
+            t,
+            unvrank(parent, root, w),
+            &mut tags,
+            wire,
+            elem_bytes,
+            chunk_bytes,
+            &mut stats,
+        )?;
+    }
+    let lowbit = if v == 0 {
+        w.next_power_of_two()
+    } else {
+        v & v.wrapping_neg()
+    };
+    let mut k = 1;
+    while k < lowbit && k < w.next_power_of_two() {
+        let child = v + k;
+        if child < w {
+            let mut tags = SubTags::new(tag);
+            chunk::send_wire(
+                t,
+                unvrank(child, root, w),
+                &mut tags,
+                wire,
+                elem_bytes,
+                chunk_bytes,
+                &mut stats,
+            )?;
+        }
+        k <<= 1;
+    }
+    Ok(stats)
+}
+
+/// Dtype-generic binomial-tree reduce into `root`'s buffer (non-root
+/// buffers end as partial-sum scratch, like [`reduce`]).
+pub fn reduce_t(
+    t: &dyn Transport,
+    dtype: DType,
+    wire: &mut [u8],
+    op: ReduceOp,
+    root: usize,
+    tag: u64,
+) -> Result<CommStats> {
+    let chunk_bytes = chunk_bytes();
+    let (rank, w) = (t.rank(), t.world());
+    let mut stats = CommStats::default();
+    if w == 1 {
+        return Ok(stats);
+    }
+    let es = dtype.size_bytes();
+    let stride = chunk::chunk_elems(es, chunk_bytes);
+    chunk::ensure_budget(chunk::chunks_for_elems(wire.len() / es, stride), "reduce")?;
+    let v = vrank(rank, root, w);
+
+    let lowbit = if v == 0 {
+        w.next_power_of_two()
+    } else {
+        v & v.wrapping_neg()
+    };
+    let mut k = 1;
+    while k < lowbit && k < w.next_power_of_two() {
+        let child = v + k;
+        if child < w {
+            let mut tags = SubTags::new(tag);
+            chunk::recv_fold_wire(
+                t,
+                unvrank(child, root, w),
+                &mut tags,
+                op,
+                dtype,
+                wire,
+                chunk_bytes,
+                &mut stats,
+            )?;
+        }
+        k <<= 1;
+    }
+    if v != 0 {
+        let parent = v & (v - 1);
+        let mut tags = SubTags::new(tag);
+        chunk::send_wire(
+            t,
+            unvrank(parent, root, w),
+            &mut tags,
+            wire,
+            es,
             chunk_bytes,
             &mut stats,
         )?;

@@ -156,6 +156,17 @@ impl<T: Send + 'static> WorkHandle<T> {
             inner: Box::new(move || (self.inner)().map(f)),
         }
     }
+
+    /// Fallible transform of the result (lazy; runs inside `wait`) — for
+    /// conversions that can reject, e.g. `CommTensor::into_vec`.
+    pub fn and_then<U: Send + 'static>(
+        self,
+        f: impl FnOnce(T) -> Result<U> + Send + 'static,
+    ) -> WorkHandle<U> {
+        WorkHandle {
+            inner: Box::new(move || (self.inner)().and_then(f)),
+        }
+    }
 }
 
 /// Completion side of a [`WorkHandle`]: the executing comm thread sends

@@ -39,15 +39,14 @@ fn round_chunk(bytes: usize) -> usize {
 }
 
 /// The data-plane chunk granularity in bytes (always a multiple of 4).
+/// A malformed `KAITIAN_CHUNK_BYTES` falls back to the default with a
+/// one-time stderr warning (never silently).
 pub fn chunk_bytes() -> usize {
     let v = CHUNK_BYTES.load(Ordering::Relaxed);
     if v != 0 {
         return v;
     }
-    let v = std::env::var("KAITIAN_CHUNK_BYTES")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .unwrap_or(DEFAULT_CHUNK_BYTES);
+    let v = crate::util::env_or_warn("KAITIAN_CHUNK_BYTES", DEFAULT_CHUNK_BYTES);
     let v = round_chunk(v);
     CHUNK_BYTES.store(v, Ordering::Relaxed);
     v
@@ -288,6 +287,19 @@ impl BufPool {
             },
             hit,
         )
+    }
+
+    /// A raw pooled byte vector of exactly `len` (contents unspecified —
+    /// callers overwrite fully); `true` when served from a free list.
+    /// The dtype-generic collectives assemble their outputs in these;
+    /// return them with [`BufPool::put_vec`].
+    pub fn take_vec(&self, len: usize) -> (Vec<u8>, bool) {
+        self.core.take(len)
+    }
+
+    /// Return a vector from [`BufPool::take_vec`] for reuse.
+    pub fn put_vec(&self, v: Vec<u8>) {
+        self.core.put(v);
     }
 
     /// Copy `bytes` into a pooled buffer and freeze it.

@@ -8,9 +8,14 @@
 //! * [`split`] — disjoint mutable chunk views of one `Vec<f32>`, so the
 //!   KaiTian 3-stage pipeline can stream a large tensor through its
 //!   stage threads chunk by chunk without copying it apart.
+//! * [`tensor`] — the dtype-tagged [`tensor::CommTensor`] payloads the
+//!   collective API moves (length-checked wire-format views with
+//!   zero-copy `Vec<f32>` endpoints), plus the f16/bf16 scalar codecs.
 
 pub mod buf;
 pub mod split;
+pub mod tensor;
 
 pub use buf::{chunk_bytes, set_chunk_bytes, Buf, BufMut, BufPool, FloatPool, PoolStats};
 pub use split::{split_chunks, ChunkGroup, ChunkMut};
+pub use tensor::{with_f32_wire, with_f32_wire_ref, CommTensor, DType};

@@ -1,0 +1,615 @@
+//! `CommTensor` — the dtype-tagged payload currency of the collective
+//! API (paper §III-A: the unified abstraction layer routes *any* payload
+//! type over *any* path).
+//!
+//! A [`CommTensor`] is a length-checked, dtype-tagged view over flat
+//! storage in **little-endian wire format** (the format the transports
+//! move): element count × [`DType::size_bytes`] bytes. Storage comes in
+//! three forms so the common paths stay zero-copy:
+//!
+//! * `F32` — an owned `Vec<f32>` (native storage; on little-endian
+//!   targets native *is* the wire format). [`CommTensor::from_vec`] /
+//!   [`CommTensor::into_vec`] move the vector without copying — the
+//!   train loop's gradient buffers enter and leave the collective API
+//!   for free.
+//! * `Bytes` — owned wire bytes for any dtype (what the collective
+//!   algorithms fold into in place).
+//! * `View` — a zero-copy read-only view over a data-plane
+//!   [`Buf`] ([`CommTensor::from_buf`]); promoted to owned bytes on
+//!   first mutation (copy-on-write).
+//!
+//! The per-dtype elementwise reduction lives in
+//! [`crate::collectives::ops::ReduceOp::fold_wire`]; the scalar codecs
+//! (f16/bf16 with round-to-nearest-even, i32/u8 little-endian) live
+//! here, next to the dtype they define.
+
+use crate::comm::buf::Buf;
+use crate::Result;
+
+// ---------------------------------------------------------------------
+// scalar codecs
+// ---------------------------------------------------------------------
+
+/// f32 -> IEEE binary16 bits, round-to-nearest-even (handles
+/// subnormals/inf/NaN; no `half` crate in the vendored set).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN.
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | m;
+    }
+    // Re-bias: f32 exp-127, f16 exp-15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal f16.
+        let half_exp = ((unbiased + 15) as u16) << 10;
+        let half_mant = (mant >> 13) as u16;
+        let round_bits = mant & 0x1FFF;
+        let mut out = sign | half_exp | half_mant;
+        // round to nearest even
+        if round_bits > 0x1000 || (round_bits == 0x1000 && (half_mant & 1) == 1) {
+            out = out.wrapping_add(1);
+        }
+        return out;
+    }
+    if unbiased >= -24 {
+        // Subnormal f16.
+        // f16 subnormal = mant16 × 2⁻²⁴; value = full_mant × 2^(unbiased−23)
+        // ⇒ mant16 = full_mant >> (−unbiased − 1).
+        let full_mant = mant | 0x80_0000;
+        let shift = (-unbiased - 1) as u32;
+        let half_mant = (full_mant >> shift) as u16;
+        let rem = full_mant & ((1 << shift) - 1);
+        let half = 1_u32 << (shift - 1);
+        let mut out = sign | half_mant;
+        if rem > half || (rem == half && (half_mant & 1) == 1) {
+            out = out.wrapping_add(1);
+        }
+        return out;
+    }
+    sign // underflow -> signed zero
+}
+
+/// IEEE binary16 bits -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign,
+        (0, m) => {
+            // Subnormal: normalize.
+            let mut e = -1_i32;
+            let mut m = m;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3FF;
+            // k shifts happened (e = −1−k); value = 1.m × 2^(−14−k)
+            // ⇒ unbiased exponent = e − 13, biased = e + 114.
+            sign | (((e + 114) as u32) << 23) | (m << 13)
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13),
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 -> bfloat16 bits (truncated-exponent format), round-to-nearest-even.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Keep it a NaN after truncation (quiet bit forced on).
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // RNE via the carry trick: add half-ULP (+1 when the kept LSB is set).
+    let lsb = (bits >> 16) & 1;
+    ((bits.wrapping_add(0x7FFF + lsb)) >> 16) as u16
+}
+
+/// bfloat16 bits -> f32 (exact: bf16 is a truncated f32).
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+// ---------------------------------------------------------------------
+// DType
+// ---------------------------------------------------------------------
+
+/// Element type of a [`CommTensor`] payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// IEEE binary32 — the training dtype.
+    F32,
+    /// IEEE binary16 — compressed gradients / quantized activations.
+    F16,
+    /// bfloat16 — truncated-f32 mixed precision.
+    Bf16,
+    /// 32-bit signed integers — counters, indices, token ids.
+    I32,
+    /// Unsigned bytes — quantized payloads (Embodied-runtime style).
+    U8,
+}
+
+impl DType {
+    /// Bytes per element on the wire.
+    pub const fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 | DType::Bf16 => 2,
+            DType::U8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::Bf16 => "bf16",
+            DType::I32 => "i32",
+            DType::U8 => "u8",
+        }
+    }
+
+    /// Every supported dtype (test matrices iterate this).
+    pub const ALL: [DType; 5] = [DType::F32, DType::F16, DType::Bf16, DType::I32, DType::U8];
+
+    /// Decode element `i` of `wire` to f32 (lossless for every dtype but
+    /// large-magnitude I32). Debug/test/cast convenience — the reduction
+    /// hot path uses dtype-native arithmetic in `ops::fold_wire` instead.
+    pub fn decode_f32(self, wire: &[u8], i: usize) -> f32 {
+        let es = self.size_bytes();
+        let b = &wire[i * es..(i + 1) * es];
+        match self {
+            DType::F32 => f32::from_le_bytes([b[0], b[1], b[2], b[3]]),
+            DType::F16 => f16_bits_to_f32(u16::from_le_bytes([b[0], b[1]])),
+            DType::Bf16 => bf16_bits_to_f32(u16::from_le_bytes([b[0], b[1]])),
+            DType::I32 => i32::from_le_bytes([b[0], b[1], b[2], b[3]]) as f32,
+            DType::U8 => b[0] as f32,
+        }
+    }
+
+    /// Encode `x` into element `i` of `wire` (saturating casts for the
+    /// integer dtypes).
+    pub fn encode_f32(self, wire: &mut [u8], i: usize, x: f32) {
+        let es = self.size_bytes();
+        let b = &mut wire[i * es..(i + 1) * es];
+        match self {
+            DType::F32 => b.copy_from_slice(&x.to_le_bytes()),
+            DType::F16 => b.copy_from_slice(&f32_to_f16_bits(x).to_le_bytes()),
+            DType::Bf16 => b.copy_from_slice(&f32_to_bf16_bits(x).to_le_bytes()),
+            DType::I32 => b.copy_from_slice(&(x as i32).to_le_bytes()),
+            DType::U8 => b[0] = x as u8,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// f32 slice <-> wire helpers
+// ---------------------------------------------------------------------
+
+/// Run `f` over the little-endian wire view of `xs`, in place. On LE
+/// targets this is a pointer reinterpretation (zero-copy — the whole
+/// point of keeping `DType::F32` storage native); on BE it round-trips
+/// through a serialization buffer.
+pub fn with_f32_wire<R>(xs: &mut [f32], f: impl FnOnce(&mut [u8]) -> R) -> R {
+    if cfg!(target_endian = "little") {
+        // SAFETY: u8 has no alignment requirement; the byte view spans
+        // exactly the f32 slice's initialized storage; every byte
+        // pattern written back is a valid f32; on LE the in-memory
+        // representation *is* the wire format.
+        let wire = unsafe {
+            std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut u8, xs.len() * 4)
+        };
+        f(wire)
+    } else {
+        let mut wire = vec![0_u8; xs.len() * 4];
+        crate::transport::fill_f32_bytes(&mut wire, xs);
+        let r = f(&mut wire);
+        crate::transport::f32s_from_bytes(xs, &wire).expect("length preserved");
+        r
+    }
+}
+
+/// Read-only variant of [`with_f32_wire`].
+pub fn with_f32_wire_ref<R>(xs: &[f32], f: impl FnOnce(&[u8]) -> R) -> R {
+    if cfg!(target_endian = "little") {
+        // SAFETY: see `with_f32_wire`; shared borrow, read-only.
+        let wire =
+            unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) };
+        f(wire)
+    } else {
+        f(&crate::transport::f32s_to_bytes(xs))
+    }
+}
+
+// ---------------------------------------------------------------------
+// CommTensor
+// ---------------------------------------------------------------------
+
+enum Storage {
+    /// Native f32 vector (dtype is always `F32`). Invariant: this
+    /// variant exists only on little-endian targets, where the native
+    /// representation *is* the wire format — [`CommTensor::from_vec`]
+    /// serializes eagerly on BE, so byte views never need a branch.
+    F32(Vec<f32>),
+    /// Owned little-endian wire bytes, any dtype.
+    Bytes(Vec<u8>),
+    /// Zero-copy read-only view over a data-plane [`Buf`]; promoted to
+    /// `Bytes` (one copy) on first mutable access.
+    View(Buf),
+}
+
+/// A dtype-tagged, length-checked flat tensor — what every collective
+/// verb takes and returns.
+pub struct CommTensor {
+    dtype: DType,
+    len: usize,
+    storage: Storage,
+}
+
+impl CommTensor {
+    /// Wrap an f32 vector without copying (dtype `F32`; zero-copy on
+    /// little-endian targets, one serialization on BE).
+    pub fn from_vec(v: Vec<f32>) -> Self {
+        if cfg!(target_endian = "big") {
+            let wire = crate::transport::f32s_to_bytes(&v);
+            return Self {
+                dtype: DType::F32,
+                len: v.len(),
+                storage: Storage::Bytes(wire),
+            };
+        }
+        Self {
+            dtype: DType::F32,
+            len: v.len(),
+            storage: Storage::F32(v),
+        }
+    }
+
+    /// Recover the f32 vector. Zero-copy when the tensor kept native f32
+    /// storage (the round-trip case); decodes wire bytes otherwise.
+    /// Errors on non-F32 dtypes — casting is explicit via [`Self::to_f32`].
+    pub fn into_vec(self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            anyhow::bail!(
+                "into_vec on a {} tensor; cast explicitly with to_f32()",
+                self.dtype.name()
+            );
+        }
+        match self.storage {
+            Storage::F32(v) => Ok(v),
+            Storage::Bytes(b) => crate::transport::bytes_to_f32s(&b),
+            Storage::View(b) => crate::transport::bytes_to_f32s(&b),
+        }
+    }
+
+    /// A zero-initialized tensor of `len` elements.
+    pub fn zeros(dtype: DType, len: usize) -> Self {
+        Self {
+            dtype,
+            len,
+            storage: Storage::Bytes(vec![0_u8; len * dtype.size_bytes()]),
+        }
+    }
+
+    /// Wrap owned wire bytes; fails unless the length is a whole number
+    /// of `dtype` elements.
+    pub fn from_wire(dtype: DType, bytes: Vec<u8>) -> Result<Self> {
+        if bytes.len() % dtype.size_bytes() != 0 {
+            anyhow::bail!(
+                "{} wire bytes is not a whole number of {} elements ({} B each)",
+                bytes.len(),
+                dtype.name(),
+                dtype.size_bytes()
+            );
+        }
+        Ok(Self {
+            dtype,
+            len: bytes.len() / dtype.size_bytes(),
+            storage: Storage::Bytes(bytes),
+        })
+    }
+
+    /// Zero-copy view over a data-plane [`Buf`] (length-checked); the
+    /// buffer is copied only if the tensor is later mutated.
+    pub fn from_buf(dtype: DType, buf: Buf) -> Result<Self> {
+        if buf.len() % dtype.size_bytes() != 0 {
+            anyhow::bail!(
+                "Buf of {} bytes is not a whole number of {} elements",
+                buf.len(),
+                dtype.name()
+            );
+        }
+        Ok(Self {
+            dtype,
+            len: buf.len() / dtype.size_bytes(),
+            storage: Storage::View(buf),
+        })
+    }
+
+    /// Encode an f32 slice into `dtype` (the explicit lossy-cast
+    /// entrypoint — what [`crate::backend::Fp16Relay`] stages with).
+    pub fn from_f32(dtype: DType, xs: &[f32]) -> Self {
+        if dtype == DType::F32 {
+            return Self::from_vec(xs.to_vec());
+        }
+        let mut wire = vec![0_u8; xs.len() * dtype.size_bytes()];
+        for (i, &x) in xs.iter().enumerate() {
+            dtype.encode_f32(&mut wire, i, x);
+        }
+        Self {
+            dtype,
+            len: xs.len(),
+            storage: Storage::Bytes(wire),
+        }
+    }
+
+    /// Decode every element to f32 (always a copy).
+    pub fn to_f32(&self) -> Vec<f32> {
+        let wire = self.as_bytes();
+        (0..self.len).map(|i| self.dtype.decode_f32(wire, i)).collect()
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.len * self.dtype.size_bytes()
+    }
+
+    /// The little-endian wire view.
+    pub fn as_bytes(&self) -> &[u8] {
+        match &self.storage {
+            // SAFETY: see `with_f32_wire_ref`; the F32 variant only
+            // exists on LE targets (enforced in `from_vec`).
+            Storage::F32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+            Storage::Bytes(b) => b,
+            Storage::View(b) => b.as_slice(),
+        }
+    }
+
+    /// Mutable wire view (collectives fold into this in place). A `View`
+    /// is promoted to owned bytes first (copy-on-write).
+    pub fn as_bytes_mut(&mut self) -> &mut [u8] {
+        if matches!(&self.storage, Storage::View(_)) {
+            let owned = self.as_bytes().to_vec();
+            self.storage = Storage::Bytes(owned);
+        }
+        match &mut self.storage {
+            // SAFETY: see `with_f32_wire`; LE-only variant.
+            Storage::F32(v) => unsafe {
+                std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, v.len() * 4)
+            },
+            Storage::Bytes(b) => b,
+            Storage::View(_) => unreachable!("views were promoted above"),
+        }
+    }
+
+    /// Freeze into a data-plane [`Buf`] (zero-copy for owned bytes and
+    /// views; native f32 storage pays one serialization — a `Vec<f32>`
+    /// cannot be re-tagged as `Vec<u8>`, the allocator layouts differ).
+    pub fn freeze(self) -> Buf {
+        match self.storage {
+            Storage::F32(v) => Buf::from_vec(crate::transport::f32s_to_bytes(&v)),
+            Storage::Bytes(b) => Buf::from_vec(b),
+            Storage::View(b) => b,
+        }
+    }
+
+    /// Consume the tensor and take its wire bytes (zero-copy for owned
+    /// bytes; serializes f32 storage, copies views). Lets callers hand a
+    /// pooled staging vector back to `BufPool::put_vec` when the tensor
+    /// was built over one.
+    pub fn into_wire(self) -> Vec<u8> {
+        match self.storage {
+            Storage::F32(v) => crate::transport::f32s_to_bytes(&v),
+            Storage::Bytes(b) => b,
+            Storage::View(b) => b.as_slice().to_vec(),
+        }
+    }
+
+    /// Consume the tensor and return its storage to the global pools
+    /// (f32 vectors to the [`crate::comm::buf::FloatPool`], owned byte
+    /// buffers to the [`crate::comm::buf::BufPool`]). Collectives that
+    /// consume an input tensor and emit a different output (e.g.
+    /// reduce-scatter's shard) call this so pooled hand-off buffers keep
+    /// cycling instead of falling out of the data plane.
+    pub fn recycle(self) {
+        match self.storage {
+            Storage::F32(v) => crate::comm::buf::FloatPool::global().put(v),
+            Storage::Bytes(b) => crate::comm::buf::BufPool::global().put_vec(b),
+            Storage::View(_) => {}
+        }
+    }
+
+    /// A new tensor holding elements `start..end` (copy of the range).
+    pub fn slice(&self, start: usize, end: usize) -> Result<CommTensor> {
+        anyhow::ensure!(
+            start <= end && end <= self.len,
+            "slice {start}..{end} out of bounds for {} elements",
+            self.len
+        );
+        let es = self.dtype.size_bytes();
+        let bytes = self.as_bytes()[start * es..end * es].to_vec();
+        CommTensor::from_wire(self.dtype, bytes)
+    }
+
+    /// Cast to another dtype through f32 (lossy for narrow targets).
+    pub fn cast(&self, dtype: DType) -> CommTensor {
+        if dtype == self.dtype {
+            return CommTensor {
+                dtype: self.dtype,
+                len: self.len,
+                storage: Storage::Bytes(self.as_bytes().to_vec()),
+            };
+        }
+        CommTensor::from_f32(dtype, &self.to_f32())
+    }
+}
+
+impl Clone for CommTensor {
+    fn clone(&self) -> Self {
+        let storage = match &self.storage {
+            Storage::F32(v) => Storage::F32(v.clone()),
+            Storage::Bytes(b) => Storage::Bytes(b.clone()),
+            Storage::View(b) => Storage::View(b.clone()),
+        };
+        Self {
+            dtype: self.dtype,
+            len: self.len,
+            storage,
+        }
+    }
+}
+
+impl std::fmt::Debug for CommTensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CommTensor")
+            .field("dtype", &self.dtype.name())
+            .field("len", &self.len)
+            .finish()
+    }
+}
+
+impl PartialEq for CommTensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.dtype == other.dtype && self.as_bytes() == other.as_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_roundtrip_exact_for_representable() {
+        for x in [0.0_f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_and_rounding() {
+        for x in [0.0_f32, 1.0, -2.5, 1e20, -1e-20, 3.140625] {
+            let back = bf16_bits_to_f32(f32_to_bf16_bits(x));
+            let rel = ((back - x) / x.abs().max(1e-30)).abs();
+            assert!(rel < 1e-2, "{x} -> {back}");
+        }
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::INFINITY)).is_infinite());
+        // Values with <= 8 mantissa bits survive exactly.
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(1.5)), 1.5);
+    }
+
+    #[test]
+    fn from_vec_into_vec_roundtrip_is_exact() {
+        let xs = vec![1.5_f32, -2.25, 0.0, f32::MAX, f32::MIN_POSITIVE];
+        let t = CommTensor::from_vec(xs.clone());
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.byte_len(), 20);
+        assert_eq!(t.into_vec().unwrap(), xs);
+    }
+
+    #[test]
+    fn wire_length_checked() {
+        assert!(CommTensor::from_wire(DType::F32, vec![0; 6]).is_err());
+        assert!(CommTensor::from_wire(DType::F16, vec![0; 6]).is_ok());
+        assert!(CommTensor::from_wire(DType::U8, vec![0; 3]).is_ok());
+        let buf = Buf::from_vec(vec![0; 10]);
+        assert!(CommTensor::from_buf(DType::I32, buf.clone()).is_err());
+        assert!(CommTensor::from_buf(DType::F16, buf).is_ok());
+    }
+
+    #[test]
+    fn buf_view_is_copy_on_write() {
+        let buf = Buf::from_vec(vec![1, 0, 2, 0]);
+        let mut t = CommTensor::from_buf(DType::F16, buf.clone()).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.as_bytes(), buf.as_slice());
+        t.as_bytes_mut()[0] = 9;
+        assert_eq!(t.as_bytes()[0], 9);
+        assert_eq!(buf.as_slice()[0], 1, "the shared Buf is untouched");
+    }
+
+    #[test]
+    fn encode_decode_every_dtype() {
+        let xs = [0.0_f32, 1.0, -2.0, 100.0];
+        for dtype in DType::ALL {
+            let t = CommTensor::from_f32(dtype, &xs);
+            assert_eq!(t.len(), xs.len());
+            assert_eq!(t.byte_len(), xs.len() * dtype.size_bytes());
+            let back = t.to_f32();
+            for (i, (&a, &b)) in xs.iter().zip(&back).enumerate() {
+                if dtype == DType::U8 {
+                    // u8 saturates negatives to 0 via the `as` cast.
+                    let expect = if a < 0.0 { 0.0 } else { a };
+                    assert_eq!(b, expect, "{} elem {i}", dtype.name());
+                } else {
+                    assert_eq!(b, a, "{} elem {i} (exactly representable)", dtype.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn into_vec_rejects_non_f32() {
+        let t = CommTensor::from_f32(DType::F16, &[1.0, 2.0]);
+        assert!(t.into_vec().is_err());
+    }
+
+    #[test]
+    fn slice_and_cast() {
+        let t = CommTensor::from_vec(vec![1.0, 2.0, 3.0, 4.0]);
+        let s = t.slice(1, 3).unwrap();
+        assert_eq!(s.to_f32(), vec![2.0, 3.0]);
+        assert!(t.slice(2, 5).is_err());
+        let h = t.cast(DType::F16);
+        assert_eq!(h.dtype(), DType::F16);
+        assert_eq!(h.to_f32(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn wire_helpers_roundtrip() {
+        let mut xs = vec![1.0_f32, -2.5, 3.25];
+        let wire_copy = with_f32_wire_ref(&xs, |w| w.to_vec());
+        assert_eq!(wire_copy, crate::transport::f32s_to_bytes(&xs));
+        with_f32_wire(&mut xs, |w| {
+            // Overwrite the first element with 7.0 in wire form.
+            w[0..4].copy_from_slice(&7.0_f32.to_le_bytes());
+        });
+        assert_eq!(xs, vec![7.0, -2.5, 3.25]);
+    }
+
+    #[test]
+    fn zeros_and_freeze() {
+        let t = CommTensor::zeros(DType::I32, 3);
+        assert_eq!(t.byte_len(), 12);
+        assert_eq!(t.to_f32(), vec![0.0; 3]);
+        let buf = t.freeze();
+        assert_eq!(buf.len(), 12);
+    }
+}

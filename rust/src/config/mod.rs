@@ -78,6 +78,9 @@ fn apply_json(o: &mut TrainOptions, v: &Json) -> Result<()> {
     if let Some(x) = v.get("bucket_bytes").and_then(Json::as_usize) {
         o.bucket_bytes = x;
     }
+    if let Some(x) = v.get("grad_sync").and_then(Json::as_str) {
+        o.grad_sync = crate::ddp::GradSyncMode::parse(x)?;
+    }
     if let Some(x) = v.get("log_every").and_then(Json::as_usize) {
         o.log_every = x;
     }
@@ -131,6 +134,7 @@ pub fn apply_cli_overrides(o: &mut TrainOptions, args: &Args) -> Result<()> {
         "lr_decay_epochs",
         "seed",
         "bucket_bytes",
+        "grad_sync",
         "log_every",
         "adapt_every",
         "adapt_ema_alpha",
@@ -223,6 +227,24 @@ mod tests {
     #[test]
     fn bad_strategy_in_json_is_error() {
         assert!(train_options_from_json(r#"{"strategy": "bogus"}"#).is_err());
+    }
+
+    #[test]
+    fn grad_sync_mode_parses() {
+        use crate::ddp::GradSyncMode;
+        let o = train_options_from_json(r#"{"grad_sync": "sharded"}"#).unwrap();
+        assert_eq!(o.grad_sync, GradSyncMode::Sharded);
+        assert!(train_options_from_json(r#"{"grad_sync": "bogus"}"#).is_err());
+
+        let args = Args::parse_from(vec![
+            "train".into(),
+            "--grad_sync".into(),
+            "sharded".into(),
+        ]);
+        let mut o = TrainOptions::default();
+        assert_eq!(o.grad_sync, GradSyncMode::AllReduce, "default is all-reduce");
+        apply_cli_overrides(&mut o, &args).unwrap();
+        assert_eq!(o.grad_sync, GradSyncMode::Sharded);
     }
 
     #[test]

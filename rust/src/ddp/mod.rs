@@ -14,7 +14,14 @@
 //!   bucket's all-reduce immediately (the KaiTian group pipelines the
 //!   vendor reduce / host-relay hop / re-broadcast stages across buckets)
 //!   and [`DdpEngine::wait_grad_sync`] only blocks right before the
-//!   optimizer update — the PyTorch-DDP overlap model.
+//!   optimizer update — the PyTorch-DDP overlap model,
+//! * sharded gradient sync ([`GradSyncMode::Sharded`], ZeRO-1 style):
+//!   one `reduce_scatter` gives each rank the fully reduced `1/world`
+//!   shard of the flat gradient; the rank updates only its parameter and
+//!   momentum shard, then [`DdpEngine::all_gather_shards`] reassembles
+//!   the updated parameters — moving `(w-1)/w·n` up and `(w-1)/w·n`
+//!   down instead of the all-reduce's `2(w-1)/w·n` per sync
+//!   (`benches/sharded_ddp.rs` gates the byte parity).
 
 pub mod bucket;
 
@@ -23,10 +30,39 @@ pub use bucket::Bucketizer;
 use std::ops::Range;
 use std::time::Instant;
 
-use crate::collectives::{ReduceOp, WorkHandle};
+use crate::collectives::{ring, ReduceOp, WorkHandle};
 use crate::comm::buf::FloatPool;
+use crate::comm::tensor::CommTensor;
 use crate::group::{GroupCommReport, ProcessGroup};
 use crate::Result;
+
+/// How the flat gradient is aggregated each step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradSyncMode {
+    /// Bucketed all-reduce; every rank updates the full parameter vector
+    /// (the PyTorch-DDP default).
+    AllReduce,
+    /// ZeRO-1-style: reduce-scatter the flat gradient, update only this
+    /// rank's shard, all-gather the updated parameter shards.
+    Sharded,
+}
+
+impl GradSyncMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "allreduce" | "all-reduce" | "all_reduce" => Ok(GradSyncMode::AllReduce),
+            "sharded" => Ok(GradSyncMode::Sharded),
+            _ => anyhow::bail!("unknown grad_sync mode {s:?} (allreduce|sharded)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GradSyncMode::AllReduce => "allreduce",
+            GradSyncMode::Sharded => "sharded",
+        }
+    }
+}
 
 /// Per-rank DDP engine.
 pub struct DdpEngine<'pg> {
@@ -91,6 +127,13 @@ impl GradSync {
     }
 }
 
+/// In-flight sharded gradient sync: one issued reduce-scatter of the
+/// whole flat gradient.
+pub struct ShardedSync {
+    handle: WorkHandle<(CommTensor, GroupCommReport)>,
+    n: usize,
+}
+
 impl<'pg> DdpEngine<'pg> {
     pub fn new(pg: &'pg dyn ProcessGroup, bucket_bytes: usize) -> Self {
         Self {
@@ -122,7 +165,7 @@ impl<'pg> DdpEngine<'pg> {
         for range in self.bucketizer.ranges(grads.len()) {
             let mut buf = FloatPool::global().take(range.len());
             buf.copy_from_slice(&grads[range.clone()]);
-            parts.push((range, self.pg.all_reduce_async(buf, ReduceOp::Sum)));
+            parts.push((range, self.pg.all_reduce_vec_async(buf, ReduceOp::Sum)));
         }
         GradSync { parts }
     }
@@ -167,6 +210,85 @@ impl<'pg> DdpEngine<'pg> {
         Ok(report)
     }
 
+    /// This rank's shard of an `n`-element flat buffer under the
+    /// canonical segmentation every sharded verb uses
+    /// (`collectives::ring::segment`).
+    pub fn shard_range(&self, n: usize) -> Range<usize> {
+        let (s0, s1) = ring::segment(n, self.pg.world(), self.pg.rank());
+        s0..s1
+    }
+
+    /// Issue the sharded gradient sync: one reduce-scatter (SUM) of the
+    /// whole flat gradient — each rank will own the fully reduced
+    /// `1/world` shard. Pair with [`DdpEngine::wait_sharded_grad_sync`].
+    pub fn issue_sharded_grad_sync(&self, grads: &[f32]) -> ShardedSync {
+        let mut buf = FloatPool::global().take(grads.len());
+        buf.copy_from_slice(grads);
+        ShardedSync {
+            handle: self
+                .pg
+                .reduce_scatter_async(CommTensor::from_vec(buf), ReduceOp::Sum),
+            n: grads.len(),
+        }
+    }
+
+    /// Wait for an issued sharded sync and place the reduced shard into
+    /// `grads[shard_range]` (the rest of `grads` keeps stale local
+    /// values — callers in sharded mode only read their shard).
+    pub fn wait_sharded_grad_sync(
+        &self,
+        sync: ShardedSync,
+        grads: &mut [f32],
+    ) -> Result<SyncReport> {
+        let t_wait = Instant::now();
+        let mut report = SyncReport::default();
+        let (shard, r) = sync.handle.wait()?;
+        let range = self.shard_range(sync.n);
+        let out = shard.into_vec()?;
+        anyhow::ensure!(
+            out.len() == range.len(),
+            "reduce_scatter returned {} elements for a {}-element shard",
+            out.len(),
+            range.len()
+        );
+        grads[range].copy_from_slice(&out);
+        report.absorb(&r);
+        report.exposed_s = t_wait.elapsed().as_secs_f64();
+        report.overlapped_s = (report.seconds - report.exposed_s).max(0.0);
+        Ok(report)
+    }
+
+    /// All-gather per-rank shards of `buf` in place: each rank
+    /// contributes its (zero-padded to the equal ceiling length)
+    /// `shard_range` of `buf`; afterwards every rank holds the full
+    /// assembled buffer. The reassembly step of the sharded optimizer
+    /// update (ZeRO-1's parameter all-gather).
+    pub fn all_gather_shards(&self, buf: &mut [f32]) -> Result<SyncReport> {
+        let t0 = Instant::now();
+        let n = buf.len();
+        let world = self.pg.world();
+        let pad = n.div_ceil(world.max(1));
+        let range = self.shard_range(n);
+        let mut send = FloatPool::global().take(pad);
+        send[..range.len()].copy_from_slice(&buf[range.clone()]);
+        for x in send[range.len()..].iter_mut() {
+            *x = 0.0;
+        }
+        let send_t = CommTensor::from_vec(send);
+        let (out, r) = self.pg.all_gather(&send_t)?;
+        send_t.recycle();
+        let out = out.into_vec()?;
+        for rk in 0..world {
+            let (s0, s1) = ring::segment(n, world, rk);
+            buf[s0..s1].copy_from_slice(&out[rk * pad..rk * pad + (s1 - s0)]);
+        }
+        FloatPool::global().put(out);
+        let mut report = SyncReport::default();
+        report.absorb(&r);
+        report.exposed_s = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
     /// All-reduce a small metrics vector (loss_sum, correct, sample_count)
     /// in one un-bucketed op.
     pub fn all_reduce_metrics(&self, metrics: &mut [f32]) -> Result<GroupCommReport> {
@@ -179,7 +301,7 @@ impl<'pg> DdpEngine<'pg> {
         &self,
         metrics: Vec<f32>,
     ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
-        self.pg.all_reduce_async(metrics, ReduceOp::Sum)
+        self.pg.all_reduce_vec_async(metrics, ReduceOp::Sum)
     }
 }
 
@@ -313,6 +435,56 @@ mod tests {
         for o in out {
             assert_eq!(o, vec![3.25; 100]);
         }
+    }
+
+    #[test]
+    fn sharded_sync_matches_allreduce_on_shard() {
+        // Integer-valued gradients make float sums order-independent, so
+        // the reduce-scatter shard must equal the all-reduce result
+        // exactly on this rank's segment.
+        let devices = parse_cluster("1G+2M").unwrap();
+        let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+        let n = 1003; // not divisible by world: uneven shards
+        let out: Vec<bool> = std::thread::scope(|s| {
+            let hs: Vec<_> = handles
+                .groups
+                .iter()
+                .map(|g| {
+                    s.spawn(move || {
+                        let ddp = DdpEngine::new(g.as_ref(), 4096);
+                        let init: Vec<f32> =
+                            (0..n).map(|i| ((i % 17) * (g.rank() + 1)) as f32).collect();
+                        let mut reduced = init.clone();
+                        ddp.all_reduce_grads(&mut reduced).unwrap();
+                        let mut sharded = init.clone();
+                        let sync = ddp.issue_sharded_grad_sync(&sharded);
+                        let rep = ddp.wait_sharded_grad_sync(sync, &mut sharded).unwrap();
+                        assert!(rep.bytes > 0, "sharded sync moves bytes");
+                        let range = ddp.shard_range(n);
+                        assert_eq!(sharded[range.clone()], reduced[range]);
+
+                        // Reassembly: each rank contributes a marker in
+                        // its shard; the gather must rebuild the full
+                        // buffer on every rank.
+                        let mut buf = vec![0.0_f32; n];
+                        let my = ddp.shard_range(n);
+                        for (j, x) in buf[my].iter_mut().enumerate() {
+                            *x = (g.rank() * 10_000 + j) as f32;
+                        }
+                        ddp.all_gather_shards(&mut buf).unwrap();
+                        for rk in 0..g.world() {
+                            let (s0, s1) = crate::collectives::ring::segment(n, g.world(), rk);
+                            for (j, &x) in buf[s0..s1].iter().enumerate() {
+                                assert_eq!(x, (rk * 10_000 + j) as f32, "rank {rk} elem {j}");
+                            }
+                        }
+                        true
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(out.len(), 3);
     }
 
     #[test]

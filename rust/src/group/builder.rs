@@ -344,7 +344,7 @@ mod tests {
                         s.spawn(move || {
                             let r = g.rank() as f32;
                             let send = vec![r * 10.0, r * 10.0 + 1.0];
-                            g.all_gather(&send).unwrap().0
+                            g.all_gather_f32(&send).unwrap().0
                         })
                     })
                     .collect();
@@ -369,7 +369,7 @@ mod tests {
                     .groups
                     .iter()
                     .map(|g| {
-                        s.spawn(move || g.all_gather(&[g.rank() as f32]).unwrap().0)
+                        s.spawn(move || g.all_gather_f32(&[g.rank() as f32]).unwrap().0)
                     })
                     .collect();
                 hs.into_iter().map(|h| h.join().unwrap()).collect()

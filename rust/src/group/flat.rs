@@ -8,7 +8,8 @@
 //! quantify the value of vendor-path dispatch.
 
 use crate::backend::CollectiveBackend;
-use crate::collectives::{CommStats, ReduceOp, WorkHandle};
+use crate::collectives::{chunk, CommStats, ReduceOp, WorkHandle};
+use crate::comm::tensor::{CommTensor, DType};
 use crate::Result;
 
 use super::{CommPath, GroupCommReport, ProcessGroup};
@@ -45,34 +46,90 @@ impl ProcessGroup for ProcessGroupFlatGloo {
         self.relay.world()
     }
 
+    fn barrier(&self) -> Result<()> {
+        self.relay.barrier()?;
+        Ok(())
+    }
+
     fn all_reduce_async(
         &self,
-        buf: Vec<f32>,
+        tensor: CommTensor,
         op: ReduceOp,
-    ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
+    ) -> WorkHandle<(CommTensor, GroupCommReport)> {
         self.relay
-            .all_reduce_async(buf, op)
-            .map(|(buf, inter)| (buf, relay_report(inter)))
+            .all_reduce_async_t(tensor, op)
+            .map(|(t, inter)| (t, relay_report(inter)))
     }
 
     fn broadcast_async(
         &self,
-        buf: Vec<f32>,
+        tensor: CommTensor,
         root: usize,
-    ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
+    ) -> WorkHandle<(CommTensor, GroupCommReport)> {
         self.relay
-            .broadcast_async(buf, root)
-            .map(|(buf, inter)| (buf, relay_report(inter)))
+            .broadcast_async_t(tensor, root)
+            .map(|(t, inter)| (t, relay_report(inter)))
     }
 
-    fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, GroupCommReport)> {
-        let (out, inter) = self.relay.all_gather(send)?;
+    fn reduce_scatter_async(
+        &self,
+        tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, GroupCommReport)> {
+        self.relay
+            .reduce_scatter_async_t(tensor, op)
+            .map(|(t, inter)| (t, relay_report(inter)))
+    }
+
+    fn all_to_all_async(&self, tensor: CommTensor) -> WorkHandle<(CommTensor, GroupCommReport)> {
+        self.relay
+            .all_to_all_async_t(tensor)
+            .map(|(t, inter)| (t, relay_report(inter)))
+    }
+
+    fn all_gather(&self, send: &CommTensor) -> Result<(CommTensor, GroupCommReport)> {
+        let tag = self.relay.reserve_tag();
+        let (wire, inter) = self
+            .relay
+            .all_gather_tagged_t(send.dtype(), send.as_bytes(), tag)?;
+        Ok((CommTensor::from_wire(send.dtype(), wire)?, relay_report(inter)))
+    }
+
+    fn gather(
+        &self,
+        send: &CommTensor,
+        root: usize,
+    ) -> Result<(Option<CommTensor>, GroupCommReport)> {
+        let tag = self.relay.reserve_tag();
+        let (wire, inter) = self
+            .relay
+            .gather_tagged_t(send.dtype(), send.as_bytes(), root, tag)?;
+        let out = match wire {
+            Some(w) => Some(CommTensor::from_wire(send.dtype(), w)?),
+            None => None,
+        };
         Ok((out, relay_report(inter)))
     }
 
-    fn barrier(&self) -> Result<()> {
-        self.relay.barrier()?;
-        Ok(())
+    fn send(&self, tensor: &CommTensor, to: usize, tag: u32) -> Result<GroupCommReport> {
+        let s = self
+            .relay
+            .send_tagged(to, chunk::ptp_tag(tag), tensor.dtype(), tensor.as_bytes())?;
+        Ok(relay_report(s))
+    }
+
+    fn recv(
+        &self,
+        dtype: DType,
+        len: usize,
+        from: usize,
+        tag: u32,
+    ) -> Result<(CommTensor, GroupCommReport)> {
+        let mut out = CommTensor::zeros(dtype, len);
+        let s = self
+            .relay
+            .recv_tagged(from, chunk::ptp_tag(tag), dtype, out.as_bytes_mut())?;
+        Ok((out, relay_report(s)))
     }
 
     /// Inline blocking path (no async round-trip): the honest baseline.
@@ -82,5 +139,10 @@ impl ProcessGroup for ProcessGroupFlatGloo {
 
     fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<GroupCommReport> {
         Ok(relay_report(self.relay.broadcast(buf, root)?))
+    }
+
+    fn all_gather_f32(&self, send: &[f32]) -> Result<(Vec<f32>, GroupCommReport)> {
+        let (out, inter) = self.relay.all_gather(send)?;
+        Ok((out, relay_report(inter)))
     }
 }

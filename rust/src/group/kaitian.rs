@@ -10,15 +10,30 @@
 //! stage C (bcast thread): vendor broadcast of the global result
 //! ```
 //!
-//! Each stage runs on its own ordered comm thread, and a buffer larger
-//! than the configured `chunk_bytes` is split into disjoint chunk
+//! Each stage runs on its own ordered comm thread, and an f32 buffer
+//! larger than the configured `chunk_bytes` is split into disjoint chunk
 //! *slices* ([`crate::comm::split`]) that flow through the stages
 //! independently: while chunk *k* is crossing the host relay (stage B,
-//! the slow hop), chunk *k+1* is already inside its vendor reduce — so a
-//! single large tensor streams instead of moving stage-to-stage as one
-//! monolithic message. The chunks are views into the original
-//! allocation; the buffer is reassembled (same storage, no copy) when
-//! the last chunk completes.
+//! the slow hop), chunk *k+1* is already inside its vendor reduce.
+//! Non-f32 tensors run the same hierarchy serially chunk-by-chunk on the
+//! intra thread (identical chunk boundaries → identical arithmetic to
+//! the blocking path).
+//!
+//! The dtype-generic verbs dispatch the same way:
+//!
+//! * `reduce_scatter` — vendor tree-reduce to the group leader → leaders
+//!   all-reduce over the relay → leader scatters each member its global
+//!   segment (cheaper than all-reduce: members upload once, download
+//!   only their shard);
+//! * `all_to_all` — members upload full inputs to their leader → leaders
+//!   exchange exactly the cross-group segments over the relay → leaders
+//!   deliver each member its regrouped output;
+//! * `gather` — vendor gather to each leader → leaders forward their
+//!   group blocks to the root's leader → root's leader hands the
+//!   assembled buffer to the root;
+//! * `send`/`recv` — vendor path within a homogeneous group, host-relay
+//!   staging (the all-ranks control communicator) across groups — the
+//!   paper's point that cross-vendor traffic *must* cross host memory.
 //!
 //! SPMD tag discipline: all tags are reserved on the *caller* thread at
 //! issue time (`reserve_tag`), in program order — identical on every rank
@@ -27,12 +42,16 @@
 //! are derived from the buffer length and the process-wide `chunk_bytes`,
 //! so they are identical across ranks too.
 
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use crate::backend::CollectiveBackend;
-use crate::collectives::{CommQueue, CommStats, CommThread, ReduceOp, WorkHandle, WorkSender};
-use crate::comm::buf::chunk_bytes;
+use crate::collectives::{
+    chunk, ring, CommQueue, CommStats, CommThread, ReduceOp, WorkHandle, WorkSender,
+};
+use crate::comm::buf::{chunk_bytes, BufPool};
 use crate::comm::split::{split_chunks, ChunkGroup, ChunkMut};
+use crate::comm::tensor::{CommTensor, DType};
 use crate::Result;
 
 use super::topology::Topology;
@@ -45,8 +64,8 @@ use super::{CommPath, GroupCommReport, ProcessGroup};
 ///   device group (NCCL-sim or CNCL-sim),
 /// * `relay` — the leaders-only Gloo host-relay communicator (present only
 ///   on group leaders),
-/// * `control` — an all-ranks communicator for barriers/metadata (the
-///   control plane, not the gradient data path).
+/// * `control` — an all-ranks communicator for barriers/metadata and
+///   cross-group point-to-point traffic (host-staged by construction).
 pub struct ProcessGroupKaiTian {
     topo: Arc<Topology>,
     rank: usize,
@@ -209,11 +228,13 @@ impl ChunkJob {
     }
 }
 
-/// Execute a hierarchical broadcast under a pre-reserved [`BcastPlan`].
-fn run_hetero_broadcast(
+/// Execute a hierarchical broadcast of wire bytes under a pre-reserved
+/// [`BcastPlan`].
+fn run_hetero_broadcast_t(
     vendor: &dyn CollectiveBackend,
     relay: Option<&dyn CollectiveBackend>,
-    buf: &mut [f32],
+    dtype: DType,
+    wire: &mut [u8],
     plan: &BcastPlan,
 ) -> Result<(CommStats, CommStats)> {
     let mut intra = CommStats::default();
@@ -221,18 +242,49 @@ fn run_hetero_broadcast(
     // 1. Within the root's group: vendor-broadcast from root to the group
     //    (so the leader definitely has the data).
     if let Some(tag) = plan.tag_root_group {
-        intra.merge(&vendor.broadcast_tagged(buf, plan.local_root, tag)?);
+        intra.merge(&vendor.broadcast_tagged_t(dtype, wire, plan.local_root, tag)?);
     }
     // 2. Leaders: relay-broadcast from the root group's leader.
     if let Some(relay) = relay {
         let tag = plan.tag_relay.expect("leaders reserve a relay tag");
-        inter.merge(&relay.broadcast_tagged(buf, plan.relay_root, tag)?);
+        inter.merge(&relay.broadcast_tagged_t(dtype, wire, plan.relay_root, tag)?);
     }
     // 3. Non-root groups: leader vendor-broadcasts to its group.
     if let Some(tag) = plan.tag_other_group {
-        intra.merge(&vendor.broadcast_tagged(buf, 0, tag)?);
+        intra.merge(&vendor.broadcast_tagged_t(dtype, wire, 0, tag)?);
     }
     Ok((intra, inter))
+}
+
+/// Run one serial 3-step hierarchical all-reduce over wire bytes (the
+/// per-chunk body for non-f32 tensors; same structure as the f32 path).
+#[allow(clippy::too_many_arguments)]
+fn hetero_all_reduce_serial_t(
+    vendor: &dyn CollectiveBackend,
+    relay: Option<&dyn CollectiveBackend>,
+    dtype: DType,
+    wire: &mut [u8],
+    op: ReduceOp,
+    tags: &ChunkTags,
+    intra: &mut CommStats,
+    inter: &mut CommStats,
+) -> Result<()> {
+    intra.merge(&vendor.all_reduce_tagged_t(dtype, wire, op, tags.tag_a)?);
+    if let Some(relay) = relay {
+        let tag = tags.tag_b.expect("leaders reserve a relay tag");
+        inter.merge(&relay.all_reduce_tagged_t(dtype, wire, op, tag)?);
+    }
+    intra.merge(&vendor.broadcast_tagged_t(dtype, wire, 0, tags.tag_c)?);
+    Ok(())
+}
+
+/// Pre-reserved tags for one hierarchical sharded verb (reduce-scatter /
+/// all-to-all / gather): an "up" vendor op, an optional relay hop, a
+/// "down" vendor op.
+struct ShardTags {
+    tag_up: u64,
+    tag_relay: Option<u64>,
+    tag_down: u64,
 }
 
 impl ProcessGroupKaiTian {
@@ -282,9 +334,9 @@ impl ProcessGroupKaiTian {
         self.vendor.name()
     }
 
-    /// The pipeline's chunk granularity in f32 elements.
-    fn chunk_elems(&self) -> usize {
-        (chunk_bytes() / 4).max(1)
+    /// The pipeline's chunk granularity in elements of `es` bytes.
+    fn chunk_elems(&self, es: usize) -> usize {
+        (chunk_bytes() / es.max(1)).max(1)
     }
 
     /// Reserve one chunk's stage tags in SPMD issue order.
@@ -293,6 +345,16 @@ impl ProcessGroupKaiTian {
             tag_a: self.vendor.reserve_tag(),
             tag_b: self.relay.as_ref().map(|r| r.reserve_tag()),
             tag_c: self.vendor.reserve_tag(),
+        }
+    }
+
+    /// Reserve the up/relay/down tags of one sharded hierarchical verb in
+    /// SPMD issue order.
+    fn reserve_shard_tags(&self) -> ShardTags {
+        ShardTags {
+            tag_up: self.vendor.reserve_tag(),
+            tag_relay: self.relay.as_ref().map(|r| r.reserve_tag()),
+            tag_down: self.vendor.reserve_tag(),
         }
     }
 
@@ -346,50 +408,15 @@ impl ProcessGroupKaiTian {
             local_root: self.topo.local_rank(root),
         }
     }
-}
 
-impl ProcessGroup for ProcessGroupKaiTian {
-    fn name(&self) -> &'static str {
-        "kaitian"
-    }
-
-    fn rank(&self) -> usize {
-        self.rank
-    }
-
-    fn world(&self) -> usize {
-        self.topo.world()
-    }
-
-    fn all_reduce_async(
+    /// The f32 chunk-streamed 3-stage pipeline (hetero all-reduce).
+    fn hetero_all_reduce_pipeline(
         &self,
         buf: Vec<f32>,
         op: ReduceOp,
     ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
         let rank = self.rank;
-        // Step 1: analyze the participating processes' device types.
-        if self.topo.is_homogeneous() {
-            // Step 2: homogeneous → vendor library only (single stage).
-            let tag = self.vendor.reserve_tag();
-            let vendor = self.vendor.clone();
-            let (handle, done) = WorkHandle::pair();
-            self.intra.submit(move || {
-                let mut buf = buf;
-                let res = match vendor.all_reduce_tagged(&mut buf, op, tag) {
-                    Ok(s) => Ok((buf, GroupCommReport::vendor(s))),
-                    Err(e) => Err(e.context(format!("kaitian vendor all_reduce rank {rank}"))),
-                };
-                done.send(res);
-            });
-            return handle;
-        }
-
-        // Step 3: heterogeneous → hierarchical orchestration, pipelined
-        // across the three stage threads; buffers larger than the chunk
-        // granularity stream through as disjoint chunk slices. Tags are
-        // reserved *here*, on the caller thread, in SPMD order (one tag
-        // set per chunk; chunk counts are identical on every rank).
-        let (group, chunks) = split_chunks(buf, self.chunk_elems());
+        let (group, chunks) = split_chunks(buf, self.chunk_elems(4));
         if chunks.is_empty() {
             // Empty buffer: nothing to communicate.
             let buf = group.try_reclaim().unwrap_or_default();
@@ -428,11 +455,360 @@ impl ProcessGroup for ProcessGroupKaiTian {
         handle
     }
 
+    /// Non-f32 hetero all-reduce: the same chunk-by-chunk hierarchy run
+    /// serially as one async job (identical chunk boundaries to the
+    /// blocking path → bitwise parity).
+    fn hetero_all_reduce_bytes_async(
+        &self,
+        tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, GroupCommReport)> {
+        let rank = self.rank;
+        let es = tensor.dtype().size_bytes();
+        let n = tensor.len();
+        let stride = self.chunk_elems(es);
+        let nchunks = n.div_ceil(stride).max(1);
+        let tag_sets: Vec<ChunkTags> = (0..nchunks).map(|_| self.reserve_chunk_tags()).collect();
+        let vendor = self.vendor.clone();
+        let relay = self.relay.clone();
+        let (handle, done) = WorkHandle::pair();
+        self.intra.submit(move || {
+            let mut tensor = tensor;
+            let mut run = || -> Result<(CommStats, CommStats)> {
+                let dtype = tensor.dtype();
+                let wire = tensor.as_bytes_mut();
+                let mut intra = CommStats::default();
+                let mut inter = CommStats::default();
+                for (i, tags) in tag_sets.iter().enumerate() {
+                    let lo = (i * stride).min(n) * es;
+                    let hi = ((i + 1) * stride).min(n) * es;
+                    hetero_all_reduce_serial_t(
+                        vendor.as_ref(),
+                        relay.as_deref(),
+                        dtype,
+                        &mut wire[lo..hi],
+                        op,
+                        tags,
+                        &mut intra,
+                        &mut inter,
+                    )?;
+                }
+                Ok((intra, inter))
+            };
+            let outcome = run();
+            let res = match outcome {
+                Ok((intra, inter)) => Ok((
+                    tensor,
+                    GroupCommReport {
+                        path: CommPath::Hierarchical,
+                        intra,
+                        inter,
+                    },
+                )),
+                Err(e) => Err(e.context(format!("kaitian dtyped all_reduce rank {rank}"))),
+            };
+            done.send(res);
+        });
+        handle
+    }
+
+    /// Hetero reduce-scatter body (runs on the intra comm thread):
+    /// vendor tree-reduce → leaders relay all-reduce → leader scatters
+    /// each member its global segment.
+    #[allow(clippy::too_many_arguments)]
+    fn hetero_reduce_scatter_body(
+        topo: &Topology,
+        rank: usize,
+        vendor: &dyn CollectiveBackend,
+        relay: Option<&dyn CollectiveBackend>,
+        mut tensor: CommTensor,
+        op: ReduceOp,
+        tags: &ShardTags,
+    ) -> Result<(CommTensor, GroupCommReport)> {
+        let dtype = tensor.dtype();
+        let es = dtype.size_bytes();
+        let n = tensor.len();
+        let world = topo.world();
+        let mut intra = CommStats::default();
+        let mut inter = CommStats::default();
+        {
+            let wire = tensor.as_bytes_mut();
+            // 1. Group-local tree reduce into the leader (local rank 0).
+            intra.merge(&vendor.reduce_tagged_t(dtype, wire, op, 0, tags.tag_up)?);
+            // 2. Leaders combine group aggregates over the host relay.
+            if let Some(relay) = relay {
+                let tag = tags.tag_relay.expect("leaders reserve a relay tag");
+                inter.merge(&relay.all_reduce_tagged_t(dtype, wire, op, tag)?);
+            }
+        }
+        // 3. Scatter: the leader sends each member its global segment.
+        let members = topo.group_of(rank);
+        let shard = if topo.is_leader(rank) {
+            {
+                let wire = tensor.as_bytes();
+                for (local, &gr) in members.iter().enumerate() {
+                    if gr == rank {
+                        continue;
+                    }
+                    let (s0, s1) = ring::segment(n, world, gr);
+                    intra.merge(&vendor.send_tagged(
+                        local,
+                        tags.tag_down,
+                        dtype,
+                        &wire[s0 * es..s1 * es],
+                    )?);
+                }
+            }
+            let (s0, s1) = ring::segment(n, world, rank);
+            tensor.slice(s0, s1)?
+        } else {
+            let (s0, s1) = ring::segment(n, world, rank);
+            let mut shard = CommTensor::zeros(dtype, s1 - s0);
+            intra.merge(&vendor.recv_tagged(0, tags.tag_down, dtype, shard.as_bytes_mut())?);
+            shard
+        };
+        tensor.recycle();
+        Ok((
+            shard,
+            GroupCommReport {
+                path: CommPath::Hierarchical,
+                intra,
+                inter,
+            },
+        ))
+    }
+
+    /// Hetero all-to-all body (runs on the intra comm thread): members
+    /// upload full inputs to their leader; leaders exchange exactly the
+    /// cross-group segments over the relay; leaders deliver each member
+    /// its regrouped output.
+    fn hetero_all_to_all_body(
+        topo: &Topology,
+        rank: usize,
+        vendor: &dyn CollectiveBackend,
+        relay: Option<&dyn CollectiveBackend>,
+        tensor: CommTensor,
+        tags: &ShardTags,
+    ) -> Result<(CommTensor, GroupCommReport)> {
+        let dtype = tensor.dtype();
+        let es = dtype.size_bytes();
+        let n = tensor.len();
+        let world = topo.world();
+        anyhow::ensure!(
+            n % world == 0,
+            "all_to_all needs a multiple of world ({world}) elements, got {n}"
+        );
+        let seg_b = (n / world) * es;
+        let mut intra = CommStats::default();
+        let mut inter = CommStats::default();
+        let members: Vec<usize> = topo.group_of(rank).to_vec();
+        let g = members.len();
+
+        if !topo.is_leader(rank) {
+            // Member: upload the whole input, download the regrouped
+            // output (leader is vendor-local rank 0).
+            intra.merge(&vendor.send_tagged(0, tags.tag_up, dtype, tensor.as_bytes())?);
+            tensor.recycle();
+            let mut out = CommTensor::zeros(dtype, n);
+            intra.merge(&vendor.recv_tagged(0, tags.tag_down, dtype, out.as_bytes_mut())?);
+            return Ok((
+                out,
+                GroupCommReport {
+                    path: CommPath::Hierarchical,
+                    intra,
+                    inter,
+                },
+            ));
+        }
+
+        // Leader: collect every member's full input (pooled staging —
+        // this is the data plane's job, so takes/recycles are tracked).
+        let mut inputs: BTreeMap<usize, Vec<u8>> = BTreeMap::new();
+        {
+            let (mut own, hit) = BufPool::global().take_vec(n * es);
+            intra.note_take(n * es, hit);
+            own.copy_from_slice(tensor.as_bytes());
+            if n > 0 {
+                intra.copies += 1;
+            }
+            inputs.insert(rank, own);
+        }
+        tensor.recycle();
+        for (local, &gr) in members.iter().enumerate() {
+            if gr == rank {
+                continue;
+            }
+            let (mut buf, hit) = BufPool::global().take_vec(n * es);
+            intra.note_take(n * es, hit);
+            intra.merge(&vendor.recv_tagged(local, tags.tag_up, dtype, &mut buf)?);
+            inputs.insert(gr, buf);
+        }
+
+        // Exchange cross-group blocks between leaders. The block A→B is,
+        // for each source member a of A (ascending) × destination member
+        // b of B (ascending), a's input segment b — exactly the data B's
+        // members need from A, nothing more.
+        let leaders = topo.leaders();
+        let mut blocks_in: BTreeMap<usize, Vec<u8>> = BTreeMap::new();
+        if let Some(relay) = relay {
+            let tag = tags.tag_relay.expect("leaders reserve a relay tag");
+            for (rb, &lb) in leaders.iter().enumerate() {
+                if lb == rank {
+                    continue;
+                }
+                let dst_members = topo.group_of(lb);
+                let (mut block, hit) =
+                    BufPool::global().take_vec(g * dst_members.len() * seg_b);
+                inter.note_take(block.len(), hit);
+                let mut off = 0;
+                for &a in &members {
+                    let input = &inputs[&a];
+                    for &b in dst_members {
+                        let (s0, s1) = ring::segment(n, world, b);
+                        block[off..off + seg_b].copy_from_slice(&input[s0 * es..s1 * es]);
+                        off += seg_b;
+                    }
+                }
+                inter.merge(&relay.send_tagged(rb, tag, dtype, &block)?);
+                BufPool::global().put_vec(block);
+            }
+            for (rb, &lb) in leaders.iter().enumerate() {
+                if lb == rank {
+                    continue;
+                }
+                let src_members = topo.group_of(lb).len();
+                let (mut block, hit) = BufPool::global().take_vec(src_members * g * seg_b);
+                inter.note_take(block.len(), hit);
+                inter.merge(&relay.recv_tagged(rb, tag, dtype, &mut block)?);
+                blocks_in.insert(rb, block);
+            }
+        }
+
+        // Assemble each member's output: out_b segment r = rank r's input
+        // segment b.
+        let my_index_of: BTreeMap<usize, usize> =
+            members.iter().enumerate().map(|(i, &m)| (m, i)).collect();
+        let mut my_out: Option<CommTensor> = None;
+        for &gb in &members {
+            let bi = my_index_of[&gb];
+            let (mut out_wire, hit) = BufPool::global().take_vec(n * es);
+            intra.note_take(n * es, hit);
+            for r in 0..world {
+                let dst = &mut out_wire[r * seg_b..(r + 1) * seg_b];
+                let src_leader = topo.leader_of(r);
+                if src_leader == rank {
+                    // Source rank is in my group: read its input directly.
+                    let input = &inputs[&r];
+                    let (s0, s1) = ring::segment(n, world, gb);
+                    dst.copy_from_slice(&input[s0 * es..s1 * es]);
+                } else {
+                    // Source came in the block from r's leader.
+                    let rb = topo.relay_rank(src_leader).expect("leader in relay");
+                    let block = &blocks_in[&rb];
+                    let src_local = topo.local_rank(r);
+                    let off = (src_local * g + bi) * seg_b;
+                    dst.copy_from_slice(&block[off..off + seg_b]);
+                }
+            }
+            if gb == rank {
+                // This one buffer leaves the pool inside the output
+                // tensor; everything else is recycled below.
+                my_out = Some(CommTensor::from_wire(dtype, out_wire)?);
+            } else {
+                let local = topo.local_rank(gb);
+                intra.merge(&vendor.send_tagged(local, tags.tag_down, dtype, &out_wire)?);
+                BufPool::global().put_vec(out_wire);
+            }
+        }
+        for block in blocks_in.into_values() {
+            BufPool::global().put_vec(block);
+        }
+        for input in inputs.into_values() {
+            BufPool::global().put_vec(input);
+        }
+        Ok((
+            my_out.expect("leader is one of its group's members"),
+            GroupCommReport {
+                path: CommPath::Hierarchical,
+                intra,
+                inter,
+            },
+        ))
+    }
+}
+
+impl ProcessGroup for ProcessGroupKaiTian {
+    fn name(&self) -> &'static str {
+        "kaitian"
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.topo.world()
+    }
+
+    fn barrier(&self) -> Result<()> {
+        self.control.barrier()?;
+        Ok(())
+    }
+
+    fn all_reduce_async(
+        &self,
+        tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, GroupCommReport)> {
+        let rank = self.rank;
+        // Step 1: analyze the participating processes' device types.
+        if self.topo.is_homogeneous() {
+            // Step 2: homogeneous → vendor library only (single stage).
+            let tag = self.vendor.reserve_tag();
+            let vendor = self.vendor.clone();
+            let (handle, done) = WorkHandle::pair();
+            self.intra.submit(move || {
+                let run = move || -> Result<(CommTensor, GroupCommReport)> {
+                    if tensor.dtype() == DType::F32 {
+                        // f32 fast path: native accumulator ring.
+                        let mut buf = tensor.into_vec()?;
+                        let s = vendor.all_reduce_tagged(&mut buf, op, tag)?;
+                        Ok((CommTensor::from_vec(buf), GroupCommReport::vendor(s)))
+                    } else {
+                        let mut tensor = tensor;
+                        let dtype = tensor.dtype();
+                        let s =
+                            vendor.all_reduce_tagged_t(dtype, tensor.as_bytes_mut(), op, tag)?;
+                        Ok((tensor, GroupCommReport::vendor(s)))
+                    }
+                };
+                done.send(
+                    run().map_err(|e| e.context(format!("kaitian vendor all_reduce rank {rank}"))),
+                );
+            });
+            return handle;
+        }
+
+        // Step 3: heterogeneous → hierarchical orchestration. f32 tensors
+        // stream through the pipelined 3-stage chunk path; other dtypes
+        // run the identical chunk walk serially on the intra thread.
+        if tensor.dtype() == DType::F32 {
+            match tensor.into_vec() {
+                Ok(buf) => self
+                    .hetero_all_reduce_pipeline(buf, op)
+                    .map(|(buf, report)| (CommTensor::from_vec(buf), report)),
+                Err(e) => WorkHandle::ready(Err(e)),
+            }
+        } else {
+            self.hetero_all_reduce_bytes_async(tensor, op)
+        }
+    }
+
     fn broadcast_async(
         &self,
-        buf: Vec<f32>,
+        tensor: CommTensor,
         root: usize,
-    ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
+    ) -> WorkHandle<(CommTensor, GroupCommReport)> {
         let rank = self.rank;
         if self.topo.is_homogeneous() {
             let local_root = self.topo.local_rank(root);
@@ -440,12 +816,16 @@ impl ProcessGroup for ProcessGroupKaiTian {
             let vendor = self.vendor.clone();
             let (handle, done) = WorkHandle::pair();
             self.intra.submit(move || {
-                let mut buf = buf;
-                let res = match vendor.broadcast_tagged(&mut buf, local_root, tag) {
-                    Ok(s) => Ok((buf, GroupCommReport::vendor(s))),
-                    Err(e) => Err(e.context(format!("kaitian vendor broadcast rank {rank}"))),
+                let run = move || -> Result<(CommTensor, GroupCommReport)> {
+                    let mut tensor = tensor;
+                    let dtype = tensor.dtype();
+                    let s =
+                        vendor.broadcast_tagged_t(dtype, tensor.as_bytes_mut(), local_root, tag)?;
+                    Ok((tensor, GroupCommReport::vendor(s)))
                 };
-                done.send(res);
+                done.send(
+                    run().map_err(|e| e.context(format!("kaitian vendor broadcast rank {rank}"))),
+                );
             });
             return handle;
         }
@@ -457,34 +837,103 @@ impl ProcessGroup for ProcessGroupKaiTian {
         let relay = self.relay.clone();
         let (handle, done) = WorkHandle::pair();
         self.intra.submit(move || {
-            let mut buf = buf;
-            let res = run_hetero_broadcast(vendor.as_ref(), relay.as_deref(), &mut buf, &plan);
-            let res = match res {
-                Ok((intra, inter)) => Ok((
-                    buf,
+            let run = move || -> Result<(CommTensor, GroupCommReport)> {
+                let mut tensor = tensor;
+                let dtype = tensor.dtype();
+                let (intra, inter) = run_hetero_broadcast_t(
+                    vendor.as_ref(),
+                    relay.as_deref(),
+                    dtype,
+                    tensor.as_bytes_mut(),
+                    &plan,
+                )?;
+                Ok((
+                    tensor,
                     GroupCommReport {
                         path: CommPath::Hierarchical,
                         intra,
                         inter,
                     },
-                )),
-                Err(e) => Err(e.context(format!("kaitian broadcast rank {rank}"))),
+                ))
             };
+            done.send(run().map_err(|e| e.context(format!("kaitian broadcast rank {rank}"))));
+        });
+        handle
+    }
+
+    fn reduce_scatter_async(
+        &self,
+        tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, GroupCommReport)> {
+        let rank = self.rank;
+        if self.topo.is_homogeneous() {
+            return self
+                .vendor
+                .reduce_scatter_async_t(tensor, op)
+                .map(|(t, s)| (t, GroupCommReport::vendor(s)));
+        }
+        let tags = self.reserve_shard_tags();
+        let topo = self.topo.clone();
+        let vendor = self.vendor.clone();
+        let relay = self.relay.clone();
+        let (handle, done) = WorkHandle::pair();
+        self.intra.submit(move || {
+            let res = Self::hetero_reduce_scatter_body(
+                &topo,
+                rank,
+                vendor.as_ref(),
+                relay.as_deref(),
+                tensor,
+                op,
+                &tags,
+            )
+            .map_err(|e| e.context(format!("kaitian reduce_scatter rank {rank}")));
             done.send(res);
         });
         handle
     }
 
-    fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, GroupCommReport)> {
+    fn all_to_all_async(&self, tensor: CommTensor) -> WorkHandle<(CommTensor, GroupCommReport)> {
+        let rank = self.rank;
+        if self.topo.is_homogeneous() {
+            return self
+                .vendor
+                .all_to_all_async_t(tensor)
+                .map(|(t, s)| (t, GroupCommReport::vendor(s)));
+        }
+        let tags = self.reserve_shard_tags();
+        let topo = self.topo.clone();
+        let vendor = self.vendor.clone();
+        let relay = self.relay.clone();
+        let (handle, done) = WorkHandle::pair();
+        self.intra.submit(move || {
+            let res = Self::hetero_all_to_all_body(
+                &topo,
+                rank,
+                vendor.as_ref(),
+                relay.as_deref(),
+                tensor,
+                &tags,
+            )
+            .map_err(|e| e.context(format!("kaitian all_to_all rank {rank}")));
+            done.send(res);
+        });
+        handle
+    }
+
+    fn all_gather(&self, send: &CommTensor) -> Result<(CommTensor, GroupCommReport)> {
+        let dtype = send.dtype();
+        let es = dtype.size_bytes();
         if self.topo.is_homogeneous() {
             let tag = self.vendor.reserve_tag();
-            let (out, s) = self.vendor.all_gather_tagged(send, tag)?;
-            return Ok((out, GroupCommReport::vendor(s)));
+            let (out, s) = self.vendor.all_gather_tagged_t(dtype, send.as_bytes(), tag)?;
+            return Ok((CommTensor::from_wire(dtype, out)?, GroupCommReport::vendor(s)));
         }
         // Hierarchical all-gather: intra-group gather → leaders exchange
         // (padded) group blocks over the relay → leader broadcasts the
         // reassembled global buffer into its group.
-        let chunk = send.len();
+        let chunk_b = send.len() * es;
         let world = self.topo.world();
         let maxg = self
             .topo
@@ -501,34 +950,44 @@ impl ProcessGroup for ProcessGroupKaiTian {
         let tag_bcast = self.vendor.reserve_tag();
 
         // 1. Gather this group's contributions (group-local rank order).
-        let (group_block, s1) = self.vendor.all_gather_tagged(send, tag_gather)?;
+        let (group_block, s1) = self
+            .vendor
+            .all_gather_tagged_t(dtype, send.as_bytes(), tag_gather)?;
         intra.merge(&s1);
 
         // 2. Leaders all-gather the group blocks (padded to the largest
         //    group so contributions are equal-length), then scatter them
-        //    into global-rank positions.
-        let mut global = vec![0.0_f32; world * chunk];
+        //    into global-rank positions. Intermediate pooled buffers go
+        //    back to the pool once their bytes are placed.
+        let mut global = vec![0_u8; world * chunk_b];
         if let Some(relay) = &self.relay {
             let mut padded = group_block;
-            padded.resize(maxg * chunk, 0.0);
-            let (blocks, s2) =
-                relay.all_gather_tagged(&padded, tag_relay.expect("leaders reserve a relay tag"))?;
+            padded.resize(maxg * chunk_b, 0);
+            let (blocks, s2) = relay.all_gather_tagged_t(
+                dtype,
+                &padded,
+                tag_relay.expect("leaders reserve a relay tag"),
+            )?;
             inter.merge(&s2);
             for (gi, members) in self.topo.groups().values().enumerate() {
                 for (p, &r) in members.iter().enumerate() {
-                    let src = gi * maxg * chunk + p * chunk;
-                    global[r * chunk..(r + 1) * chunk]
-                        .copy_from_slice(&blocks[src..src + chunk]);
+                    let src = gi * maxg * chunk_b + p * chunk_b;
+                    global[r * chunk_b..(r + 1) * chunk_b]
+                        .copy_from_slice(&blocks[src..src + chunk_b]);
                 }
             }
+            BufPool::global().put_vec(blocks);
+            BufPool::global().put_vec(padded);
+        } else {
+            BufPool::global().put_vec(group_block);
         }
 
         // 3. Leader broadcasts the assembled buffer into its group.
-        let s3 = self.vendor.broadcast_tagged(&mut global, 0, tag_bcast)?;
+        let s3 = self.vendor.broadcast_tagged_t(dtype, &mut global, 0, tag_bcast)?;
         intra.merge(&s3);
 
         Ok((
-            global,
+            CommTensor::from_wire(dtype, global)?,
             GroupCommReport {
                 path: CommPath::Hierarchical,
                 intra,
@@ -537,9 +996,181 @@ impl ProcessGroup for ProcessGroupKaiTian {
         ))
     }
 
-    fn barrier(&self) -> Result<()> {
-        self.control.barrier()?;
-        Ok(())
+    fn gather(
+        &self,
+        send: &CommTensor,
+        root: usize,
+    ) -> Result<(Option<CommTensor>, GroupCommReport)> {
+        let dtype = send.dtype();
+        if self.topo.is_homogeneous() {
+            let tag = self.vendor.reserve_tag();
+            let (out, s) = self
+                .vendor
+                .gather_tagged_t(dtype, send.as_bytes(), self.topo.local_rank(root), tag)?;
+            let out = match out {
+                Some(w) => Some(CommTensor::from_wire(dtype, w)?),
+                None => None,
+            };
+            return Ok((out, GroupCommReport::vendor(s)));
+        }
+        let es = dtype.size_bytes();
+        let seg_b = send.len() * es;
+        let world = self.topo.world();
+        let root_leader = self.topo.leader_of(root);
+        let in_root_group = self.topo.group_of(self.rank) == self.topo.group_of(root);
+        let mut intra = CommStats::default();
+        let mut inter = CommStats::default();
+        // Tag reservation (SPMD per communicator): every rank reserves the
+        // vendor "up" tag; leaders reserve a relay tag; the root's group
+        // reserves a "down" tag (unused when the root is its own leader).
+        let tag_up = self.vendor.reserve_tag();
+        let tag_relay = self.relay.as_ref().map(|r| r.reserve_tag());
+        let tag_down = if in_root_group {
+            Some(self.vendor.reserve_tag())
+        } else {
+            None
+        };
+
+        // 1. Group-local gather into each leader.
+        let (group_block, s1) = self
+            .vendor
+            .gather_tagged_t(dtype, send.as_bytes(), 0, tag_up)?;
+        intra.merge(&s1);
+
+        // 2. Leaders forward group blocks to the root's leader, which
+        //    assembles the global buffer in global rank order.
+        let mut assembled: Option<Vec<u8>> = None;
+        if let Some(relay) = &self.relay {
+            let tag = tag_relay.expect("leaders reserve a relay tag");
+            let my_block = group_block.expect("gather root 0 is the leader");
+            if self.rank == root_leader {
+                // Assemble: my own group's block is copied straight into
+                // place; other groups' blocks arrive over the relay into
+                // a pooled scratch buffer.
+                let mut global = vec![0_u8; world * seg_b];
+                for members in self.topo.groups().values() {
+                    let leader = members[0];
+                    if leader == self.rank {
+                        for (p, &r) in members.iter().enumerate() {
+                            global[r * seg_b..(r + 1) * seg_b]
+                                .copy_from_slice(&my_block[p * seg_b..(p + 1) * seg_b]);
+                        }
+                    } else {
+                        let rb = self.topo.relay_rank(leader).expect("leader in relay");
+                        let (mut buf, hit) =
+                            BufPool::global().take_vec(members.len() * seg_b);
+                        inter.note_take(buf.len(), hit);
+                        inter.merge(&relay.recv_tagged(rb, tag, dtype, &mut buf)?);
+                        for (p, &r) in members.iter().enumerate() {
+                            global[r * seg_b..(r + 1) * seg_b]
+                                .copy_from_slice(&buf[p * seg_b..(p + 1) * seg_b]);
+                        }
+                        BufPool::global().put_vec(buf);
+                    }
+                }
+                assembled = Some(global);
+            } else {
+                let rb = self.topo.relay_rank(root_leader).expect("leader in relay");
+                inter.merge(&relay.send_tagged(rb, tag, dtype, &my_block)?);
+            }
+            BufPool::global().put_vec(my_block);
+        }
+
+        // 3. Hand the assembled buffer to the root (vendor p2p within the
+        //    root's group when the root is not its group's leader).
+        let out = if self.rank == root {
+            if root == root_leader {
+                assembled
+            } else {
+                let tag = tag_down.expect("root's group reserves a down tag");
+                let mut buf = vec![0_u8; world * seg_b];
+                intra.merge(&self.vendor.recv_tagged(0, tag, dtype, &mut buf)?);
+                Some(buf)
+            }
+        } else {
+            if self.rank == root_leader && root != root_leader {
+                let tag = tag_down.expect("root's group reserves a down tag");
+                let buf = assembled.take().expect("root leader assembled the buffer");
+                intra.merge(&self.vendor.send_tagged(
+                    self.topo.local_rank(root),
+                    tag,
+                    dtype,
+                    &buf,
+                )?);
+            }
+            None
+        };
+        let out = match out {
+            Some(w) => Some(CommTensor::from_wire(dtype, w)?),
+            None => None,
+        };
+        Ok((
+            out,
+            GroupCommReport {
+                path: CommPath::Hierarchical,
+                intra,
+                inter,
+            },
+        ))
+    }
+
+    fn send(&self, tensor: &CommTensor, to: usize, tag: u32) -> Result<GroupCommReport> {
+        anyhow::ensure!(to != self.rank, "p2p send to self (rank {to})");
+        let full = chunk::ptp_tag(tag);
+        if self.topo.group_of(self.rank).contains(&to) {
+            // Same vendor group: the DMA-class path.
+            let s = self.vendor.send_tagged(
+                self.topo.local_rank(to),
+                full,
+                tensor.dtype(),
+                tensor.as_bytes(),
+            )?;
+            Ok(GroupCommReport::vendor(s))
+        } else {
+            // Cross-vendor: must cross host memory (paper §III-A) — the
+            // all-ranks host-relay control communicator stages it.
+            let s = self
+                .control
+                .send_tagged(to, full, tensor.dtype(), tensor.as_bytes())?;
+            Ok(GroupCommReport {
+                path: CommPath::HostRelay,
+                intra: CommStats::default(),
+                inter: s,
+            })
+        }
+    }
+
+    fn recv(
+        &self,
+        dtype: DType,
+        len: usize,
+        from: usize,
+        tag: u32,
+    ) -> Result<(CommTensor, GroupCommReport)> {
+        anyhow::ensure!(from != self.rank, "p2p recv from self (rank {from})");
+        let full = chunk::ptp_tag(tag);
+        let mut out = CommTensor::zeros(dtype, len);
+        if self.topo.group_of(self.rank).contains(&from) {
+            let s = self.vendor.recv_tagged(
+                self.topo.local_rank(from),
+                full,
+                dtype,
+                out.as_bytes_mut(),
+            )?;
+            Ok((out, GroupCommReport::vendor(s)))
+        } else {
+            let s = self
+                .control
+                .recv_tagged(from, full, dtype, out.as_bytes_mut())?;
+            Ok((
+                out,
+                GroupCommReport {
+                    path: CommPath::HostRelay,
+                    intra: CommStats::default(),
+                    inter: s,
+                },
+            ))
+        }
     }
 
     /// Inline blocking path (overrides the async-routed default): serial
@@ -556,7 +1187,7 @@ impl ProcessGroup for ProcessGroupKaiTian {
         }
         let mut intra = CommStats::default();
         let mut inter = CommStats::default();
-        let chunk_elems = self.chunk_elems();
+        let chunk_elems = self.chunk_elems(4);
         let mut start = 0;
         loop {
             let end = (start + chunk_elems).min(buf.len());
@@ -584,8 +1215,15 @@ impl ProcessGroup for ProcessGroupKaiTian {
             return Ok(GroupCommReport::vendor(intra));
         }
         let plan = self.plan_broadcast(root);
-        let (intra, inter) =
-            run_hetero_broadcast(self.vendor.as_ref(), self.relay.as_deref(), buf, &plan)?;
+        let (intra, inter) = crate::comm::tensor::with_f32_wire(buf, |wire| {
+            run_hetero_broadcast_t(
+                self.vendor.as_ref(),
+                self.relay.as_deref(),
+                DType::F32,
+                wire,
+                &plan,
+            )
+        })?;
         Ok(GroupCommReport {
             path: CommPath::Hierarchical,
             intra,

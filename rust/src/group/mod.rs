@@ -15,6 +15,28 @@
 //! backend with *no* KAITIAN dispatch layer. [`flat::ProcessGroupFlatGloo`]
 //! is the ablation baseline that sends *everything* through the host relay
 //! (what you'd get without the hybrid architecture).
+//!
+//! # The `CommTensor` API
+//!
+//! Every verb moves dtype-tagged [`CommTensor`]s (see the README's "API"
+//! section for the verb × dtype matrix and its mapping onto Fig. 1
+//! paths). `Vec<f32>` enters and leaves the API without copying:
+//!
+//! ```
+//! use kaitian::comm::{CommTensor, DType};
+//!
+//! let grads = vec![1.0_f32, 2.5, -3.0];
+//! let t = CommTensor::from_vec(grads);      // zero-copy in
+//! assert_eq!(t.dtype(), DType::F32);
+//! assert_eq!((t.len(), t.byte_len()), (3, 12));
+//!
+//! let half = t.cast(DType::F16);            // explicit (lossy) cast
+//! assert_eq!(half.byte_len(), 6);           // half the wire bytes
+//! assert_eq!(half.to_f32(), vec![1.0, 2.5, -3.0]); // f16-exact values
+//!
+//! let back = t.into_vec().unwrap();         // zero-copy out
+//! assert_eq!(back, vec![1.0, 2.5, -3.0]);
+//! ```
 
 pub mod builder;
 pub mod flat;
@@ -28,6 +50,7 @@ pub use native::ProcessGroupNative;
 pub use topology::Topology;
 
 use crate::collectives::{CommStats, ReduceOp, WorkHandle};
+use crate::comm::tensor::{CommTensor, DType};
 use crate::Result;
 
 /// Which path a collective took (for metrics + routing invariants).
@@ -72,15 +95,25 @@ impl GroupCommReport {
 /// The interface DDP trains against — implemented by KaiTian, Native and
 /// FlatGloo groups.
 ///
-/// The primary API is *asynchronous*, modeled on PyTorch's
-/// `ProcessGroup::allreduce → Work`: `*_async` issues the collective on a
-/// per-rank comm thread (tags are reserved at issue time, in SPMD program
-/// order, so in-flight ops never misalign across ranks) and the returned
-/// [`WorkHandle`] yields the buffer plus a [`GroupCommReport`] on `wait()`.
-/// The blocking methods default to async-issue-then-wait; implementations
-/// override them with inline serial execution (no copies or thread
-/// hand-offs). Both paths reserve tags in caller program order, so they
-/// can be mixed freely without breaking SPMD alignment.
+/// The primary API is *asynchronous* and dtype-generic, modeled on
+/// PyTorch's `ProcessGroup::allreduce → Work`: the `*_async` verbs take
+/// and return [`CommTensor`]s, issue on a per-rank comm thread (tags are
+/// reserved at issue time, in SPMD program order, so in-flight ops never
+/// misalign across ranks), and the returned [`WorkHandle`] yields the
+/// tensor plus a [`GroupCommReport`] on `wait()`.
+///
+/// Verbs: `all_reduce`, `broadcast`, `all_gather`, `reduce_scatter`,
+/// `all_to_all`, `gather` (to root), and point-to-point `send`/`recv`
+/// (explicit user tags — p2p involves two ranks only, so the SPMD op
+/// counter cannot line it up; per-pair streams are FIFO).
+///
+/// The `Vec<f32>`/`&mut [f32]` methods are thin wrappers over the typed
+/// core (zero-copy via `CommTensor::from_vec`/`into_vec`), kept so the
+/// train loop and the seed-era call sites migrate mechanically.
+/// Implementations may override the blocking wrappers with inline serial
+/// execution (no copies or thread hand-offs); both paths reserve tags in
+/// caller program order, so they can be mixed freely without breaking
+/// SPMD alignment.
 pub trait ProcessGroup: Send + Sync {
     /// Implementation name for reports.
     fn name(&self) -> &'static str;
@@ -89,37 +122,144 @@ pub trait ProcessGroup: Send + Sync {
 
     fn world(&self) -> usize;
 
-    /// Issue a global all-reduce; `wait()` returns the reduced buffer.
+    /// Barrier across all ranks.
+    fn barrier(&self) -> Result<()>;
+
+    // -- typed async core ---------------------------------------------
+
+    /// Issue a global all-reduce; `wait()` returns the reduced tensor.
     fn all_reduce_async(
         &self,
-        buf: Vec<f32>,
+        tensor: CommTensor,
         op: ReduceOp,
-    ) -> WorkHandle<(Vec<f32>, GroupCommReport)>;
+    ) -> WorkHandle<(CommTensor, GroupCommReport)>;
 
     /// Issue a global broadcast from global rank `root`.
     fn broadcast_async(
         &self,
-        buf: Vec<f32>,
+        tensor: CommTensor,
         root: usize,
-    ) -> WorkHandle<(Vec<f32>, GroupCommReport)>;
+    ) -> WorkHandle<(CommTensor, GroupCommReport)>;
+
+    /// Issue a global reduce-scatter; `wait()` returns this rank's
+    /// reduced shard (`collectives::ring::segment(len, world, rank)`
+    /// elements of the input).
+    fn reduce_scatter_async(
+        &self,
+        tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, GroupCommReport)>;
+
+    /// Issue a global all-to-all (`tensor` = `world` equal segments in
+    /// global rank order; the output's segment `j` is rank `j`'s
+    /// segment `rank`).
+    fn all_to_all_async(&self, tensor: CommTensor) -> WorkHandle<(CommTensor, GroupCommReport)>;
+
+    // -- typed blocking core ------------------------------------------
 
     /// Gather equal-length per-rank contributions; returns the
     /// concatenation in *global* rank order.
-    fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, GroupCommReport)>;
+    fn all_gather(&self, send: &CommTensor) -> Result<(CommTensor, GroupCommReport)>;
 
-    /// Barrier across all ranks.
-    fn barrier(&self) -> Result<()>;
+    /// Gather equal-length contributions to `root` only:
+    /// `Some(concatenation in global rank order)` at the root, `None`
+    /// elsewhere.
+    fn gather(
+        &self,
+        send: &CommTensor,
+        root: usize,
+    ) -> Result<(Option<CommTensor>, GroupCommReport)>;
+
+    /// Point-to-point send to global rank `to` under a user tag.
+    fn send(&self, tensor: &CommTensor, to: usize, tag: u32) -> Result<GroupCommReport>;
+
+    /// Point-to-point receive of `len` `dtype` elements from global rank
+    /// `from` under a user tag.
+    fn recv(
+        &self,
+        dtype: DType,
+        len: usize,
+        from: usize,
+        tag: u32,
+    ) -> Result<(CommTensor, GroupCommReport)>;
+
+    // -- provided blocking typed wrappers -----------------------------
+
+    /// Blocking dtype-generic all-reduce (issue + wait).
+    fn all_reduce_t(
+        &self,
+        tensor: CommTensor,
+        op: ReduceOp,
+    ) -> Result<(CommTensor, GroupCommReport)> {
+        self.all_reduce_async(tensor, op).wait()
+    }
+
+    /// Blocking dtype-generic broadcast (issue + wait).
+    fn broadcast_t(
+        &self,
+        tensor: CommTensor,
+        root: usize,
+    ) -> Result<(CommTensor, GroupCommReport)> {
+        self.broadcast_async(tensor, root).wait()
+    }
+
+    /// Blocking reduce-scatter (issue + wait); returns this rank's shard.
+    fn reduce_scatter(
+        &self,
+        tensor: CommTensor,
+        op: ReduceOp,
+    ) -> Result<(CommTensor, GroupCommReport)> {
+        self.reduce_scatter_async(tensor, op).wait()
+    }
+
+    /// Blocking all-to-all (issue + wait).
+    fn all_to_all(&self, tensor: CommTensor) -> Result<(CommTensor, GroupCommReport)> {
+        self.all_to_all_async(tensor).wait()
+    }
+
+    // -- provided f32 convenience wrappers ----------------------------
+
+    /// Issue an all-reduce of an f32 buffer (zero-copy wrap/unwrap).
+    fn all_reduce_vec_async(
+        &self,
+        buf: Vec<f32>,
+        op: ReduceOp,
+    ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
+        self.all_reduce_async(CommTensor::from_vec(buf), op)
+            .and_then(|(t, r)| Ok((t.into_vec()?, r)))
+    }
+
+    /// Issue a broadcast of an f32 buffer (zero-copy wrap/unwrap).
+    fn broadcast_vec_async(
+        &self,
+        buf: Vec<f32>,
+        root: usize,
+    ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
+        self.broadcast_async(CommTensor::from_vec(buf), root)
+            .and_then(|(t, r)| Ok((t.into_vec()?, r)))
+    }
+
+    /// Gather equal-length f32 contributions; concatenation in global
+    /// rank order. The gathered wire buffer (often pooled by the
+    /// underlying communicator) is recycled after decoding.
+    fn all_gather_f32(&self, send: &[f32]) -> Result<(Vec<f32>, GroupCommReport)> {
+        let (out, report) = self.all_gather(&CommTensor::from_vec(send.to_vec()))?;
+        let wire = out.into_wire();
+        let vals = crate::transport::bytes_to_f32s(&wire)?;
+        crate::comm::buf::BufPool::global().put_vec(wire);
+        Ok((vals, report))
+    }
 
     /// Global in-place all-reduce across all ranks (blocking).
     fn all_reduce(&self, buf: &mut [f32], op: ReduceOp) -> Result<GroupCommReport> {
-        let (out, report) = self.all_reduce_async(buf.to_vec(), op).wait()?;
+        let (out, report) = self.all_reduce_vec_async(buf.to_vec(), op).wait()?;
         buf.copy_from_slice(&out);
         Ok(report)
     }
 
     /// Global broadcast from global rank `root` (blocking).
     fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<GroupCommReport> {
-        let (out, report) = self.broadcast_async(buf.to_vec(), root).wait()?;
+        let (out, report) = self.broadcast_vec_async(buf.to_vec(), root).wait()?;
         buf.copy_from_slice(&out);
         Ok(report)
     }

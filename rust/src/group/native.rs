@@ -7,7 +7,8 @@
 //! GPUs, 4.3% on MLUs).
 
 use crate::backend::CollectiveBackend;
-use crate::collectives::{ReduceOp, WorkHandle};
+use crate::collectives::{chunk, ReduceOp, WorkHandle};
+use crate::comm::tensor::{CommTensor, DType};
 use crate::Result;
 
 use super::{GroupCommReport, ProcessGroup};
@@ -40,34 +41,93 @@ impl ProcessGroup for ProcessGroupNative {
         self.backend.world()
     }
 
+    fn barrier(&self) -> Result<()> {
+        self.backend.barrier()?;
+        Ok(())
+    }
+
     fn all_reduce_async(
         &self,
-        buf: Vec<f32>,
+        tensor: CommTensor,
         op: ReduceOp,
-    ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
+    ) -> WorkHandle<(CommTensor, GroupCommReport)> {
         self.backend
-            .all_reduce_async(buf, op)
-            .map(|(buf, s)| (buf, GroupCommReport::vendor(s)))
+            .all_reduce_async_t(tensor, op)
+            .map(|(t, s)| (t, GroupCommReport::vendor(s)))
     }
 
     fn broadcast_async(
         &self,
-        buf: Vec<f32>,
+        tensor: CommTensor,
         root: usize,
-    ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
+    ) -> WorkHandle<(CommTensor, GroupCommReport)> {
         self.backend
-            .broadcast_async(buf, root)
-            .map(|(buf, s)| (buf, GroupCommReport::vendor(s)))
+            .broadcast_async_t(tensor, root)
+            .map(|(t, s)| (t, GroupCommReport::vendor(s)))
     }
 
-    fn all_gather(&self, send: &[f32]) -> Result<(Vec<f32>, GroupCommReport)> {
-        let (out, s) = self.backend.all_gather(send)?;
+    fn reduce_scatter_async(
+        &self,
+        tensor: CommTensor,
+        op: ReduceOp,
+    ) -> WorkHandle<(CommTensor, GroupCommReport)> {
+        self.backend
+            .reduce_scatter_async_t(tensor, op)
+            .map(|(t, s)| (t, GroupCommReport::vendor(s)))
+    }
+
+    fn all_to_all_async(&self, tensor: CommTensor) -> WorkHandle<(CommTensor, GroupCommReport)> {
+        self.backend
+            .all_to_all_async_t(tensor)
+            .map(|(t, s)| (t, GroupCommReport::vendor(s)))
+    }
+
+    fn all_gather(&self, send: &CommTensor) -> Result<(CommTensor, GroupCommReport)> {
+        let tag = self.backend.reserve_tag();
+        let (wire, s) = self
+            .backend
+            .all_gather_tagged_t(send.dtype(), send.as_bytes(), tag)?;
+        Ok((
+            CommTensor::from_wire(send.dtype(), wire)?,
+            GroupCommReport::vendor(s),
+        ))
+    }
+
+    fn gather(
+        &self,
+        send: &CommTensor,
+        root: usize,
+    ) -> Result<(Option<CommTensor>, GroupCommReport)> {
+        let tag = self.backend.reserve_tag();
+        let (wire, s) = self
+            .backend
+            .gather_tagged_t(send.dtype(), send.as_bytes(), root, tag)?;
+        let out = match wire {
+            Some(w) => Some(CommTensor::from_wire(send.dtype(), w)?),
+            None => None,
+        };
         Ok((out, GroupCommReport::vendor(s)))
     }
 
-    fn barrier(&self) -> Result<()> {
-        self.backend.barrier()?;
-        Ok(())
+    fn send(&self, tensor: &CommTensor, to: usize, tag: u32) -> Result<GroupCommReport> {
+        let s = self
+            .backend
+            .send_tagged(to, chunk::ptp_tag(tag), tensor.dtype(), tensor.as_bytes())?;
+        Ok(GroupCommReport::vendor(s))
+    }
+
+    fn recv(
+        &self,
+        dtype: DType,
+        len: usize,
+        from: usize,
+        tag: u32,
+    ) -> Result<(CommTensor, GroupCommReport)> {
+        let mut out = CommTensor::zeros(dtype, len);
+        let s = self
+            .backend
+            .recv_tagged(from, chunk::ptp_tag(tag), dtype, out.as_bytes_mut())?;
+        Ok((out, GroupCommReport::vendor(s)))
     }
 
     /// Inline blocking path (no async round-trip): the honest baseline.
@@ -77,5 +137,10 @@ impl ProcessGroup for ProcessGroupNative {
 
     fn broadcast(&self, buf: &mut [f32], root: usize) -> Result<GroupCommReport> {
         Ok(GroupCommReport::vendor(self.backend.broadcast(buf, root)?))
+    }
+
+    fn all_gather_f32(&self, send: &[f32]) -> Result<(Vec<f32>, GroupCommReport)> {
+        let (out, s) = self.backend.all_gather(send)?;
+        Ok((out, GroupCommReport::vendor(s)))
     }
 }

@@ -55,11 +55,12 @@ fn artifacts_dir(args: &Args) -> String {
 fn cmd_train(args: &Args) -> Result<()> {
     let opts = load_train_options(args)?;
     eprintln!(
-        "[kaitian] training {} on {} (mode={:?}, strategy={}, B={})",
+        "[kaitian] training {} on {} (mode={:?}, strategy={}, grad_sync={}, B={})",
         opts.preset,
         opts.cluster,
         opts.group_mode,
         opts.strategy.name(),
+        opts.grad_sync.name(),
         opts.global_batch
     );
     let engine = Arc::new(Engine::load(artifacts_dir(args))?);

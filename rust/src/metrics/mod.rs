@@ -38,6 +38,20 @@ pub struct StepMetrics {
 }
 
 impl StepMetrics {
+    /// Fold one sync's communication outcome into this step (called once
+    /// per all-reduce sync, twice in sharded mode: reduce-scatter +
+    /// parameter all-gather).
+    pub fn absorb_sync(&mut self, sync: &crate::ddp::SyncReport) {
+        self.comm_s += sync.seconds;
+        self.comm_exposed_s += sync.exposed_s;
+        self.comm_overlap_s += sync.overlapped_s;
+        self.stage_s += sync.stage_seconds;
+        self.comm_bytes += sync.bytes;
+        self.alloc_bytes += sync.alloc_bytes;
+        self.pool_hits += sync.pool_hits;
+        self.copies += sync.copies;
+    }
+
     /// Critical-path seconds of the step. Charges the *exposed* comm time
     /// when the pipelined sync reported one (busy `comm_s` double-counts
     /// stages that ran concurrently); falls back to `comm_s` for legacy
@@ -131,6 +145,8 @@ pub struct TrainReport {
     pub cluster: String,
     pub group_mode: String,
     pub strategy: String,
+    /// Gradient aggregation mode ("allreduce" or "sharded").
+    pub grad_sync: String,
     pub scores: Vec<f64>,
     pub allocation: Vec<usize>,
     pub epochs: usize,
@@ -172,6 +188,7 @@ impl TrainReport {
             ("cluster", Json::str(self.cluster.clone())),
             ("group_mode", Json::str(self.group_mode.clone())),
             ("strategy", Json::str(self.strategy.clone())),
+            ("grad_sync", Json::str(self.grad_sync.clone())),
             (
                 "scores",
                 Json::arr(self.scores.iter().map(|s| Json::num(*s)).collect()),

@@ -6,7 +6,7 @@ use std::time::Instant;
 use anyhow::Context;
 
 use crate::data::{image_batch, token_batch, SynthCifar, SynthCorpus};
-use crate::ddp::DdpEngine;
+use crate::ddp::{DdpEngine, GradSyncMode};
 use crate::device::{cluster_name, parse_cluster, DeviceSpec, Scenario, SpeedModel};
 use crate::group::{build_cluster, ProcessGroup};
 use crate::metrics::{Accumulator, StepMetrics, TrainReport};
@@ -207,6 +207,7 @@ pub fn train(engine: Arc<Engine>, opts: &TrainOptions) -> Result<TrainReport> {
         cluster: cluster_name(&devices),
         group_mode: format!("{:?}", opts.group_mode).to_lowercase(),
         strategy: opts.strategy.name().to_string(),
+        grad_sync: opts.grad_sync.name().to_string(),
         scores,
         allocation,
         epochs: opts.epochs,
@@ -398,33 +399,59 @@ fn worker(
             }
             m.compute_s = t0.elapsed().as_secs_f64();
 
-            // Gradient aggregation through the process group, pipelined:
-            // every bucket's all-reduce is issued immediately (the KaiTian
-            // group overlaps the leaders' host-relay hop of bucket k with
-            // the vendor reduce of bucket k+1), the small metrics
-            // all-reduce rides alongside, and we only wait() right before
-            // the optimizer update.
-            let grad_sync = ddp.issue_grad_sync(&grads);
-            let metrics_work = ddp.all_reduce_metrics_async(vec![loss_sum, 0.0, 0.0]);
-            let sync = ddp.wait_grad_sync(grad_sync, &mut grads)?;
-            m.comm_s = sync.seconds;
-            m.comm_exposed_s = sync.exposed_s;
-            m.comm_overlap_s = sync.overlapped_s;
-            m.stage_s = sync.stage_seconds;
-            m.comm_bytes = sync.bytes;
-            m.alloc_bytes = sync.alloc_bytes;
-            m.pool_hits = sync.pool_hits;
-            m.copies = sync.copies;
+            // Gradient aggregation through the process group; the small
+            // metrics all-reduce rides alongside in both modes.
+            let metrics_work = match opts.grad_sync {
+                GradSyncMode::AllReduce => {
+                    // Pipelined bucketed all-reduce: every bucket is
+                    // issued immediately (the KaiTian group overlaps the
+                    // leaders' host-relay hop of bucket k with the vendor
+                    // reduce of bucket k+1); wait() right before the
+                    // optimizer update.
+                    let grad_sync = ddp.issue_grad_sync(&grads);
+                    let metrics_work =
+                        ddp.all_reduce_metrics_async(vec![loss_sum, 0.0, 0.0]);
+                    let sync = ddp.wait_grad_sync(grad_sync, &mut grads)?;
+                    m.absorb_sync(&sync);
 
-            // Fused optimizer update (grad_scale folds the 1/B average).
-            let t2 = Instant::now();
-            progs.apply_update(
-                &mut params,
-                &mut momentum,
-                &grads,
-                [lr, opts.momentum, opts.weight_decay, hyper_scale],
-            )?;
-            m.update_s = t2.elapsed().as_secs_f64();
+                    // Fused optimizer update over the full parameter
+                    // vector (grad_scale folds the 1/B average).
+                    let t2 = Instant::now();
+                    progs.apply_update(
+                        &mut params,
+                        &mut momentum,
+                        &grads,
+                        [lr, opts.momentum, opts.weight_decay, hyper_scale],
+                    )?;
+                    m.update_s = t2.elapsed().as_secs_f64();
+                    metrics_work
+                }
+                GradSyncMode::Sharded => {
+                    // ZeRO-1-style: reduce-scatter gives this rank the
+                    // fully reduced 1/world gradient shard; update only
+                    // that shard of params+momentum, then all-gather the
+                    // updated parameter shards.
+                    let grad_sync = ddp.issue_sharded_grad_sync(&grads);
+                    let metrics_work =
+                        ddp.all_reduce_metrics_async(vec![loss_sum, 0.0, 0.0]);
+                    let sync = ddp.wait_sharded_grad_sync(grad_sync, &mut grads)?;
+                    m.absorb_sync(&sync);
+
+                    let t2 = Instant::now();
+                    let range = ddp.shard_range(n_params);
+                    sgd_update_shard(
+                        &mut params[range.clone()],
+                        &mut momentum[range.clone()],
+                        &grads[range],
+                        [lr, opts.momentum, opts.weight_decay, hyper_scale],
+                    );
+                    m.update_s = t2.elapsed().as_secs_f64();
+
+                    let gather = ddp.all_gather_shards(&mut params)?;
+                    m.absorb_sync(&gather);
+                    metrics_work
+                }
+            };
 
             // Global train-loss logging (the metrics op was issued before
             // the gradient wait; collect it after the update).
@@ -515,6 +542,14 @@ fn worker(
         }
     }
 
+    // --- sharded mode: reassemble the full momentum ----------------------
+    // Each rank only updated its own momentum shard; gathering the shards
+    // (zeros elsewhere were never touched) reconstructs the full vector so
+    // checkpoints stay mode-agnostic. SPMD: every rank participates.
+    if opts.grad_sync == GradSyncMode::Sharded {
+        ddp.all_gather_shards(&mut momentum)?;
+    }
+
     // --- checkpoint (rank 0 owns the write; replicas are identical) ------
     if let (0, Some(path)) = (rank, &opts.checkpoint) {
         super::checkpoint::Checkpoint {
@@ -541,6 +576,31 @@ fn worker(
     }
 
     Ok(acc)
+}
+
+/// Elementwise SGD-with-momentum update over one parameter shard —
+/// exactly the fused L1 kernel's semantics
+/// (`python/compile/kernels/sgd.py`):
+///
+/// ```text
+/// g' = grad * grad_scale + weight_decay * p
+/// v' = momentum * v + g'
+/// p' = p - lr * v'
+/// ```
+///
+/// The sharded gradient-sync mode updates only this rank's segment with
+/// this, then all-gathers the updated parameter shards; the fused kernel
+/// is compiled for the full parameter length and cannot run on a slice.
+fn sgd_update_shard(params: &mut [f32], momentum: &mut [f32], grads: &[f32], hyper: [f32; 4]) {
+    let [lr, mu, wd, gs] = hyper;
+    debug_assert_eq!(params.len(), momentum.len());
+    debug_assert_eq!(params.len(), grads.len());
+    for i in 0..params.len() {
+        let g = grads[i] * gs + wd * params[i];
+        let v = mu * momentum[i] + g;
+        params[i] -= lr * v;
+        momentum[i] = v;
+    }
 }
 
 /// Distributed evaluation: strided shard per rank, metrics all-reduced.

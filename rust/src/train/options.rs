@@ -1,5 +1,6 @@
 //! Training-run configuration.
 
+use crate::ddp::GradSyncMode;
 use crate::group::{GroupMode, RelayKind};
 use crate::sched::{ControllerConfig, Strategy};
 
@@ -46,6 +47,10 @@ pub struct TrainOptions {
     pub profile: bool,
     /// DDP gradient bucket size in bytes.
     pub bucket_bytes: usize,
+    /// Gradient aggregation mode: bucketed all-reduce (default) or the
+    /// ZeRO-1-style sharded reduce-scatter + parameter all-gather
+    /// (`--grad_sync={allreduce,sharded}`).
+    pub grad_sync: GradSyncMode,
     /// Print a progress line every N steps (0 = silent).
     pub log_every: usize,
     /// Online load adaptation (paper §III-C dynamic balancing): every
@@ -102,6 +107,7 @@ impl Default for TrainOptions {
             pace_slowdown: 4.0,
             profile: true,
             bucket_bytes: 25 << 20, // PyTorch DDP default bucket
+            grad_sync: GradSyncMode::AllReduce,
             log_every: 0,
             online_adapt: false,
             adapt_every: 10,

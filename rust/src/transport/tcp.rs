@@ -37,17 +37,14 @@ use crate::Result;
 pub const DEFAULT_INFLIGHT_CAP: u64 = 64 << 20;
 
 /// The configured soft cap (`None` = unbounded, the pre-refactor
-/// behavior).
+/// behavior). A malformed `KAITIAN_TCP_INFLIGHT_CAP` falls back to the
+/// default with a one-time stderr warning (never silently).
 fn inflight_cap() -> Option<u64> {
     static CACHED: OnceLock<Option<u64>> = OnceLock::new();
     *CACHED.get_or_init(|| {
-        match std::env::var("KAITIAN_TCP_INFLIGHT_CAP")
-            .ok()
-            .and_then(|v| v.parse::<u64>().ok())
-        {
-            Some(0) => None,
-            Some(v) => Some(v),
-            None => Some(DEFAULT_INFLIGHT_CAP),
+        match crate::util::env_or_warn("KAITIAN_TCP_INFLIGHT_CAP", DEFAULT_INFLIGHT_CAP) {
+            0 => None,
+            v => Some(v),
         }
     })
 }

@@ -1,0 +1,82 @@
+//! Environment-variable parsing with loud rejection of garbage values.
+//!
+//! Tunables like `KAITIAN_CHUNK_BYTES` used to fall back to their
+//! defaults *silently* when the value failed to parse — a typo'd
+//! override (`KAITIAN_CHUNK_BYTES=256k`) ran the default configuration
+//! while the operator believed the override was in force. The parser
+//! here warns exactly once per lookup, naming the variable and the
+//! rejected value.
+
+use std::str::FromStr;
+
+/// Interpret `raw` (the value of `var`, if set) as a `T`:
+/// * unset → `default`, silently;
+/// * parseable → the parsed value;
+/// * garbage → `default`, with one `eprintln!` warning naming the
+///   variable and the rejected value.
+///
+/// The raw value is passed in (rather than read here) so unit tests can
+/// exercise the rejection path without racing on the process
+/// environment.
+pub fn parse_or_warn<T: FromStr + Copy>(var: &str, raw: Option<&str>, default: T) -> T {
+    match raw {
+        None => default,
+        Some(s) => match s.trim().parse::<T>() {
+            Ok(v) => v,
+            Err(_) => {
+                eprintln!(
+                    "[kaitian] warning: ignoring {var}={s:?} (not a valid value); \
+                     using the default"
+                );
+                default
+            }
+        },
+    }
+}
+
+/// [`parse_or_warn`] over the live process environment.
+pub fn env_or_warn<T: FromStr + Copy>(var: &str, default: T) -> T {
+    let raw = std::env::var(var).ok();
+    parse_or_warn(var, raw.as_deref(), default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_is_silent_default() {
+        assert_eq!(parse_or_warn::<usize>("KAITIAN_CHUNK_BYTES", None, 7), 7);
+        assert_eq!(parse_or_warn::<u64>("KAITIAN_TCP_INFLIGHT_CAP", None, 9), 9);
+    }
+
+    #[test]
+    fn valid_values_parse() {
+        assert_eq!(
+            parse_or_warn("KAITIAN_CHUNK_BYTES", Some("65536"), 0_usize),
+            65536
+        );
+        assert_eq!(
+            parse_or_warn("KAITIAN_TCP_INFLIGHT_CAP", Some(" 42 "), 0_u64),
+            42,
+            "surrounding whitespace is tolerated"
+        );
+    }
+
+    #[test]
+    fn garbage_warns_and_falls_back() {
+        // The warning itself goes to stderr; the observable contract is
+        // that the default comes back instead of a silent zero/panic.
+        for bad in ["256k", "-1", "1.5", "", "lots"] {
+            assert_eq!(
+                parse_or_warn("KAITIAN_CHUNK_BYTES", Some(bad), 1234_usize),
+                1234,
+                "{bad:?} must fall back to the default"
+            );
+        }
+        assert_eq!(
+            parse_or_warn("KAITIAN_TCP_INFLIGHT_CAP", Some("64MB"), 77_u64),
+            77
+        );
+    }
+}

@@ -1,10 +1,13 @@
-//! Small shared utilities: deterministic PRNG, timing, formatting.
+//! Small shared utilities: deterministic PRNG, timing, formatting,
+//! env-var parsing.
 
+pub mod env;
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod timer;
 
+pub use env::{env_or_warn, parse_or_warn};
 pub use rng::Rng;
 pub use timer::{ScopedTimer, Stopwatch};
 

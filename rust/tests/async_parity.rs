@@ -104,7 +104,7 @@ fn many_concurrent_work_handles_stay_aligned() {
                         // Distinct payload per op and per rank.
                         let buf: Vec<f32> =
                             (0..64).map(|i| (k * 1000 + i) as f32 + g.rank() as f32).collect();
-                        issued.push(g.all_reduce_async(buf, ReduceOp::Sum));
+                        issued.push(g.all_reduce_vec_async(buf, ReduceOp::Sum));
                     }
                     let mut results = vec![Vec::new(); OPS];
                     for k in (0..OPS).rev() {
@@ -145,12 +145,12 @@ fn interleaved_all_reduce_and_broadcast_handles() {
             .iter()
             .map(|g| {
                 s.spawn(move || {
-                    let a = g.all_reduce_async(vec![(g.rank() + 1) as f32; 32], ReduceOp::Sum);
-                    let b = g.broadcast_async(
+                    let a = g.all_reduce_vec_async(vec![(g.rank() + 1) as f32; 32], ReduceOp::Sum);
+                    let b = g.broadcast_vec_async(
                         if g.rank() == 2 { vec![5.0; 8] } else { vec![0.0; 8] },
                         2,
                     );
-                    let c = g.all_reduce_async(vec![2.0; 16], ReduceOp::Max);
+                    let c = g.all_reduce_vec_async(vec![2.0; 16], ReduceOp::Max);
                     // Wait in a different order than issued.
                     let (cv, _) = c.wait().unwrap();
                     let (av, _) = a.wait().unwrap();
@@ -179,7 +179,7 @@ fn group_all_gather_matches_communicator_semantics() {
             .map(|g| {
                 s.spawn(move || {
                     let send = vec![g.rank() as f32; 3];
-                    let (out, report) = g.all_gather(&send).unwrap();
+                    let (out, report) = g.all_gather_f32(&send).unwrap();
                     assert!(report.total_bytes() > 0);
                     out
                 })

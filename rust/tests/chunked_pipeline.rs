@@ -146,7 +146,7 @@ fn many_inflight_chunked_ops_stay_aligned() {
                     for k in 0..OPS {
                         let buf: Vec<f32> =
                             (0..n).map(|i| (k * 100 + i % 50) as f32 + g.rank() as f32).collect();
-                        issued.push(g.all_reduce_async(buf, ReduceOp::Sum));
+                        issued.push(g.all_reduce_vec_async(buf, ReduceOp::Sum));
                     }
                     let mut results = vec![Vec::new(); OPS];
                     for k in (0..OPS).rev() {

@@ -1,0 +1,377 @@
+//! The verb × dtype × path acceptance matrix (ISSUE 4).
+//!
+//! Every collective verb (`all_reduce`, `broadcast`, `all_gather`,
+//! `reduce_scatter`, `all_to_all`, `gather`, `send`/`recv`) must
+//! round-trip for every [`DType`] over every routing path:
+//!
+//! * **Vendor** — homogeneous KaiTian cluster ("4G"): vendor library only;
+//! * **Hierarchical** — heterogeneous KaiTian cluster ("2G+2M"): vendor
+//!   intra-group + leaders over the host relay;
+//! * **HostRelay** — FlatGloo over "2G+2M": everything staged through
+//!   host memory.
+//!
+//! For verbs with both forms, the async and blocking paths must agree
+//! *bit-identically* (same chunking → same arithmetic). Values are small
+//! integers: exactly representable in every dtype (including f16/u8), so
+//! expected results are exact regardless of fold order.
+
+use kaitian::collectives::{ring, ReduceOp};
+use kaitian::comm::{CommTensor, DType};
+use kaitian::device::parse_cluster;
+use kaitian::group::{build_cluster, CommPath, GroupMode, ProcessGroup, RelayKind};
+
+/// (cluster spec, group mode, expected routing path) per matrix column.
+fn paths() -> Vec<(&'static str, GroupMode, CommPath)> {
+    vec![
+        ("4G", GroupMode::Kaitian, CommPath::Vendor),
+        ("2G+2M", GroupMode::Kaitian, CommPath::Hierarchical),
+        ("2G+2M", GroupMode::FlatGloo, CommPath::HostRelay),
+    ]
+}
+
+/// Rank-dependent small-integer payload (exact in every dtype; sums over
+/// 4 ranks stay < 64, inside u8/f16 exact range).
+fn values(rank: usize, n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i + 2 * rank) % 13) as f32).collect()
+}
+
+/// Run `f` on every rank of a fresh cluster; returns per-rank results.
+fn on_cluster<T: Send>(
+    spec: &str,
+    mode: GroupMode,
+    f: impl Fn(&dyn ProcessGroup) -> T + Sync,
+) -> Vec<T> {
+    let devices = parse_cluster(spec).unwrap();
+    let handles = build_cluster(&devices, RelayKind::Inproc, mode).unwrap();
+    std::thread::scope(|s| {
+        let hs: Vec<_> = handles
+            .groups
+            .iter()
+            .map(|g| {
+                let f = &f;
+                s.spawn(move || f(g.as_ref()))
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[test]
+fn all_reduce_matrix() {
+    let n = 97;
+    for (spec, mode, path) in paths() {
+        for dtype in DType::ALL {
+            let out = on_cluster(spec, mode, |g| {
+                let init = CommTensor::from_f32(dtype, &values(g.rank(), n));
+                let (blocking, rb) = g.all_reduce_t(init.clone(), ReduceOp::Sum).unwrap();
+                let (issued, ra) = g.all_reduce_async(init, ReduceOp::Sum).wait().unwrap();
+                assert_eq!(rb.path, path, "{spec} {mode:?} {}", dtype.name());
+                assert_eq!(ra.path, path);
+                assert!(rb.total_bytes() > 0 || g.world() == 1);
+                (blocking, issued, g.world(), g.rank())
+            });
+            let world = out[0].2;
+            for (blocking, issued, _, rank) in &out {
+                assert_eq!(
+                    blocking,
+                    issued,
+                    "async/blocking parity {spec} {mode:?} {} rank {rank}",
+                    dtype.name()
+                );
+                let got = blocking.to_f32();
+                for i in 0..n {
+                    let expect: f32 =
+                        (0..world).map(|r| ((i + 2 * r) % 13) as f32).sum();
+                    assert_eq!(
+                        got[i],
+                        expect,
+                        "{spec} {mode:?} {} elem {i}",
+                        dtype.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn broadcast_matrix() {
+    let n = 33;
+    let root = 1;
+    for (spec, mode, path) in paths() {
+        for dtype in DType::ALL {
+            let out = on_cluster(spec, mode, |g| {
+                let init = if g.rank() == root {
+                    CommTensor::from_f32(dtype, &values(7, n))
+                } else {
+                    CommTensor::zeros(dtype, n)
+                };
+                let (blocking, rb) = g.broadcast_t(init.clone(), root).unwrap();
+                let (issued, _) = g.broadcast_async(init, root).wait().unwrap();
+                assert_eq!(rb.path, path);
+                (blocking, issued)
+            });
+            let expect = CommTensor::from_f32(dtype, &values(7, n));
+            for (blocking, issued) in &out {
+                assert_eq!(blocking, issued, "{spec} {mode:?} {}", dtype.name());
+                assert_eq!(
+                    blocking.as_bytes(),
+                    expect.as_bytes(),
+                    "{spec} {mode:?} {}",
+                    dtype.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_gather_matrix() {
+    let n = 5;
+    for (spec, mode, path) in paths() {
+        for dtype in DType::ALL {
+            let out = on_cluster(spec, mode, |g| {
+                let send = CommTensor::from_f32(dtype, &values(g.rank(), n));
+                let (a, ra) = g.all_gather(&send).unwrap();
+                let (b, _) = g.all_gather(&send).unwrap();
+                assert_eq!(ra.path, path);
+                (a, b, g.world())
+            });
+            let world = out[0].2;
+            let expect: Vec<f32> = (0..world).flat_map(|r| values(r, n)).collect();
+            let expect = CommTensor::from_f32(dtype, &expect);
+            for (a, b, _) in &out {
+                assert_eq!(a, b, "deterministic {spec} {mode:?} {}", dtype.name());
+                assert_eq!(a.as_bytes(), expect.as_bytes(), "{spec} {mode:?} {}", dtype.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn reduce_scatter_matrix() {
+    let n = 103; // uneven segments across 4 ranks
+    for (spec, mode, path) in paths() {
+        for dtype in DType::ALL {
+            let out = on_cluster(spec, mode, |g| {
+                let init = CommTensor::from_f32(dtype, &values(g.rank(), n));
+                let (blocking, rb) = g.reduce_scatter(init.clone(), ReduceOp::Sum).unwrap();
+                let (issued, _) = g.reduce_scatter_async(init, ReduceOp::Sum).wait().unwrap();
+                assert_eq!(rb.path, path);
+                (blocking, issued, g.world(), g.rank())
+            });
+            let world = out[0].2;
+            for (blocking, issued, _, rank) in &out {
+                assert_eq!(blocking, issued, "{spec} {mode:?} {}", dtype.name());
+                let (s0, s1) = ring::segment(n, world, *rank);
+                assert_eq!(blocking.len(), s1 - s0, "shard length rank {rank}");
+                let got = blocking.to_f32();
+                for (j, i) in (s0..s1).enumerate() {
+                    let expect: f32 =
+                        (0..world).map(|r| ((i + 2 * r) % 13) as f32).sum();
+                    assert_eq!(
+                        got[j],
+                        expect,
+                        "{spec} {mode:?} {} rank {rank} elem {i}",
+                        dtype.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_to_all_matrix() {
+    for (spec, mode, path) in paths() {
+        for dtype in DType::ALL {
+            let out = on_cluster(spec, mode, |g| {
+                let w = g.world();
+                let n = w * 3;
+                // Segment j of rank r carries marker (r, j).
+                let send: Vec<f32> = (0..n)
+                    .map(|i| ((g.rank() * w + i / 3) % 13) as f32)
+                    .collect();
+                let send = CommTensor::from_f32(dtype, &send);
+                let (blocking, rb) = g.all_to_all(send.clone()).unwrap();
+                let (issued, _) = g.all_to_all_async(send).wait().unwrap();
+                assert_eq!(rb.path, path);
+                (blocking, issued, w, g.rank())
+            });
+            for (blocking, issued, w, rank) in &out {
+                assert_eq!(blocking, issued, "{spec} {mode:?} {}", dtype.name());
+                let got = blocking.to_f32();
+                for j in 0..*w {
+                    // Output segment j came from rank j's segment `rank`.
+                    let expect = ((j * w + rank) % 13) as f32;
+                    for k in 0..3 {
+                        assert_eq!(
+                            got[j * 3 + k],
+                            expect,
+                            "{spec} {mode:?} {} out-seg {j}",
+                            dtype.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gather_matrix() {
+    let n = 4;
+    for (spec, mode, path) in paths() {
+        // Exercise a leader root (0) and, on the heterogeneous clusters,
+        // a non-leader root (3 is the second rank of the MLU group).
+        for root in [0_usize, 3] {
+            for dtype in DType::ALL {
+                let out = on_cluster(spec, mode, |g| {
+                    let send = CommTensor::from_f32(dtype, &values(g.rank(), n));
+                    let (a, ra) = g.gather(&send, root).unwrap();
+                    let (b, _) = g.gather(&send, root).unwrap();
+                    assert_eq!(ra.path, path);
+                    (a, b, g.world(), g.rank())
+                });
+                let world = out[0].2;
+                let expect: Vec<f32> = (0..world).flat_map(|r| values(r, n)).collect();
+                let expect = CommTensor::from_f32(dtype, &expect);
+                for (a, b, _, rank) in &out {
+                    assert_eq!(a, b, "deterministic {spec} {mode:?} {}", dtype.name());
+                    if *rank == root {
+                        let a = a.as_ref().expect("root receives the gather");
+                        assert_eq!(
+                            a.as_bytes(),
+                            expect.as_bytes(),
+                            "{spec} {mode:?} {} root {root}",
+                            dtype.name()
+                        );
+                    } else {
+                        assert!(a.is_none(), "non-root rank {rank} gets None");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn point_to_point_matrix() {
+    let n = 19;
+    for (spec, mode, _path) in paths() {
+        for (di, dtype) in DType::ALL.iter().enumerate() {
+            let dtype = *dtype;
+            let out = on_cluster(spec, mode, |g| {
+                let w = g.world();
+                let me = g.rank();
+                // Ring exchange: send to next, receive from prev.
+                let payload = CommTensor::from_f32(dtype, &values(me, n));
+                g.send(&payload, (me + 1) % w, di as u32).unwrap();
+                let (got, report) = g
+                    .recv(dtype, n, (me + w - 1) % w, di as u32)
+                    .unwrap();
+                // Routing invariant: cross-group p2p must not be Vendor.
+                let prev = (me + w - 1) % w;
+                (got, report.path, me, prev)
+            });
+            for (got, rpath, me, prev) in &out {
+                let expect = CommTensor::from_f32(dtype, &values(*prev, n));
+                assert_eq!(
+                    got.as_bytes(),
+                    expect.as_bytes(),
+                    "{spec} {mode:?} {} rank {me}",
+                    dtype.name()
+                );
+                assert!(
+                    matches!(rpath, CommPath::Vendor | CommPath::HostRelay),
+                    "p2p reports a concrete path"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn min_max_parity_through_hierarchical_and_host_relay() {
+    // Satellite: Min/Max were only exercised end-to-end under Sum before;
+    // drive both through the Hierarchical and HostRelay paths and check
+    // exact extrema (and async/blocking agreement).
+    let n = 257;
+    for (spec, mode, path) in [
+        ("2G+2M", GroupMode::Kaitian, CommPath::Hierarchical),
+        ("2G+2M", GroupMode::FlatGloo, CommPath::HostRelay),
+    ] {
+        for op in [ReduceOp::Min, ReduceOp::Max] {
+            let out = on_cluster(spec, mode, |g| {
+                let init: Vec<f32> = (0..n)
+                    .map(|i| (i as f32) * if g.rank() % 2 == 0 { 1.0 } else { -1.0 }
+                        + g.rank() as f32)
+                    .collect();
+                let mut blocking = init.clone();
+                let rb = g.all_reduce(&mut blocking, op).unwrap();
+                assert_eq!(rb.path, path);
+                let (issued, _) = g
+                    .all_reduce_async(CommTensor::from_vec(init), op)
+                    .wait()
+                    .unwrap();
+                (blocking, issued.into_vec().unwrap(), g.world())
+            });
+            let world = out[0].2;
+            for (blocking, issued, _) in &out {
+                assert_eq!(blocking, issued, "{mode:?} {}", op.name());
+                for i in 0..n {
+                    let per_rank: Vec<f32> = (0..world)
+                        .map(|r| (i as f32) * if r % 2 == 0 { 1.0 } else { -1.0 } + r as f32)
+                        .collect();
+                    let expect = match op {
+                        ReduceOp::Max => per_rank.iter().cloned().fold(f32::MIN, f32::max),
+                        _ => per_rank.iter().cloned().fold(f32::MAX, f32::min),
+                    };
+                    assert_eq!(blocking[i], expect, "{mode:?} {} elem {i}", op.name());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn min_max_dtyped_through_both_paths() {
+    // Min/Max parity for the narrow dtypes too (f16/bf16/i32/u8 folds are
+    // dtype-native).
+    let n = 64;
+    for (spec, mode, _path) in [
+        ("2G+2M", GroupMode::Kaitian, CommPath::Hierarchical),
+        ("2G+2M", GroupMode::FlatGloo, CommPath::HostRelay),
+    ] {
+        for dtype in [DType::F16, DType::Bf16, DType::I32, DType::U8] {
+            for op in [ReduceOp::Min, ReduceOp::Max] {
+                let out = on_cluster(spec, mode, |g| {
+                    let init = CommTensor::from_f32(dtype, &values(g.rank(), n));
+                    let (blocking, _) = g.all_reduce_t(init.clone(), op).unwrap();
+                    let (issued, _) = g.all_reduce_async(init, op).wait().unwrap();
+                    (blocking, issued, g.world())
+                });
+                let world = out[0].2;
+                for (blocking, issued, _) in &out {
+                    assert_eq!(blocking, issued, "{mode:?} {} {}", dtype.name(), op.name());
+                    let got = blocking.to_f32();
+                    for i in 0..n {
+                        let per_rank: Vec<f32> =
+                            (0..world).map(|r| ((i + 2 * r) % 13) as f32).collect();
+                        let expect = match op {
+                            ReduceOp::Max => per_rank.iter().cloned().fold(f32::MIN, f32::max),
+                            _ => per_rank.iter().cloned().fold(f32::MAX, f32::min),
+                        };
+                        assert_eq!(
+                            got[i],
+                            expect,
+                            "{mode:?} {} {} elem {i}",
+                            dtype.name(),
+                            op.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

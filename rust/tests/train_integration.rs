@@ -245,3 +245,38 @@ fn checkpoint_save_and_resume() {
     let _ = first;
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn sharded_grad_sync_matches_allreduce_losses() {
+    // ISSUE 4 acceptance: ZeRO-1-style sharded gradient sync
+    // (reduce-scatter + shard update + parameter all-gather) must track
+    // the all-reduce run's losses to <= 1e-5 over 20 steps. The two modes
+    // compute the same mathematical update; the only differences are
+    // float fold order and the shard-local optimizer arithmetic.
+    let Some(engine) = engine() else { return };
+    let mut base = TrainOptions::quick_test("2G+2M");
+    base.epochs = 4;
+    base.steps_per_epoch = Some(5); // 20 steps total
+    base.eval_batches = 0;
+    let allreduce = train(engine.clone(), &base).unwrap();
+    assert_eq!(allreduce.grad_sync, "allreduce");
+
+    let mut sh = base.clone();
+    sh.grad_sync = kaitian::ddp::GradSyncMode::Sharded;
+    let sharded = train(engine, &sh).unwrap();
+    assert_eq!(sharded.grad_sync, "sharded");
+
+    assert_eq!(allreduce.step_losses.len(), 20);
+    assert_eq!(sharded.step_losses.len(), 20);
+    for (i, (a, b)) in allreduce
+        .step_losses
+        .iter()
+        .zip(&sharded.step_losses)
+        .enumerate()
+    {
+        assert!(
+            (a - b).abs() <= 1e-5,
+            "step {i}: sharded loss diverged: {a} vs {b}"
+        );
+    }
+}
