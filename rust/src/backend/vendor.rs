@@ -85,6 +85,10 @@ impl CollectiveBackend for VendorSim {
         self.comm.barrier()
     }
 
+    fn all_reduce_algo(&self, dtype: DType, elems: usize) -> &'static str {
+        self.comm.select_all_reduce(dtype, elems)
+    }
+
     fn all_reduce_tagged_t(
         &self,
         dtype: DType,

@@ -1,0 +1,1057 @@
+//! Size-adaptive collective algorithm engine.
+//!
+//! The data plane used to run exactly one all-reduce algorithm — the
+//! chunked ring — at every message size, even though ring's 2(w−1)
+//! rounds are latency-pessimal for the small control-plane and
+//! gradient-tail messages that dominate embodied-AI workloads. This
+//! module adds the two classic alternatives and a runtime selector:
+//!
+//! * **recursive doubling** — ⌈log2 w⌉ full-buffer exchange rounds;
+//!   latency-optimal, bandwidth-pessimal (best for small payloads);
+//! * **halving-doubling** — recursive-halving reduce-scatter followed by
+//!   recursive-doubling all-gather; bandwidth-optimal like ring but with
+//!   2·log2 w rounds instead of 2(w−1) (best for large payloads on
+//!   latency-heavy links);
+//! * **tree** — binomial reduce + binomial broadcast (kept mostly as an
+//!   explicit override; the α–β model rarely prefers it);
+//! * **ring** — the existing chunk-streamed ring, unchanged.
+//!
+//! Selection is per `(verb, dtype, payload bytes, world size)` against
+//! the [`AlphaBeta`] α–β cost model (`perfmodel::comm`). Each
+//! communicator owns an [`AlgoEngine`] whose tuning table is seeded
+//! *once* by a live-transport microprobe — a handful of small and large
+//! ping-pong rounds measuring per-message latency and bandwidth — and
+//! the probed values are then **agreed** across ranks with one ring
+//! all-reduce, so every rank derives the identical table and therefore
+//! the identical selection (the SPMD requirement; see
+//! `tests/algo_dispatch.rs`). `KAITIAN_ALGO` forces a fixed algorithm
+//! (`ring|doubling|halving-doubling|tree`) or `adaptive` (the default).
+//!
+//! **Eager path:** payloads of at most [`eager_bytes`] (default 4 KiB,
+//! `KAITIAN_EAGER_BYTES`, `0` disables) skip the pooled-frame chunk loop
+//! entirely inside the doubling/halving bodies — one inline frame per
+//! hop, no `BufPool` round-trip (see `chunk::send_eager`). Non-power-
+//! of-two worlds are handled with the standard fold-in/copy-out phases:
+//! the first `2(w−p)` ranks pair up so `p = 2^⌊log2 w⌋` ranks run the
+//! power-of-two core.
+//!
+//! Both new algorithms fold with `mine = op(mine, incoming)` on every
+//! rank; IEEE addition (and min/max, and the wrapping integer folds) is
+//! commutative, so partner pairs compute bit-identical values and all
+//! ranks finish with bit-identical buffers — replica divergence is
+//! structurally impossible, same as ring.
+
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::comm::buf::Buf;
+use crate::comm::tensor::{with_f32_wire, DType};
+use crate::perfmodel::comm::{prev_power_of_two, AlphaBeta};
+use crate::transport::Transport;
+use crate::Result;
+
+use super::chunk::{self, SubTags};
+use super::ops::ReduceOp;
+use super::ring;
+use super::tree;
+use super::CommStats;
+
+/// Default eager (small-message) threshold in payload bytes.
+pub const DEFAULT_EAGER_BYTES: usize = 4096;
+
+/// An all-reduce algorithm family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// Chunk-streamed ring (bandwidth-optimal, 2(w−1) rounds).
+    Ring,
+    /// Recursive doubling (latency-optimal, ⌈log2 w⌉ rounds).
+    Doubling,
+    /// Recursive halving reduce-scatter + doubling all-gather.
+    HalvingDoubling,
+    /// Binomial reduce + binomial broadcast.
+    Tree,
+}
+
+impl Algo {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Ring => "ring",
+            Algo::Doubling => "doubling",
+            Algo::HalvingDoubling => "halving-doubling",
+            Algo::Tree => "tree",
+        }
+    }
+
+    /// Metrics label for one op: the algorithm name, suffixed when the
+    /// payload rode the eager single-frame path.
+    pub fn label(self, eager: bool) -> &'static str {
+        match (self, eager) {
+            (Algo::Ring, _) => "ring",
+            (Algo::Tree, _) => "tree",
+            (Algo::Doubling, false) => "doubling",
+            (Algo::Doubling, true) => "doubling+eager",
+            (Algo::HalvingDoubling, false) => "halving-doubling",
+            (Algo::HalvingDoubling, true) => "halving-doubling+eager",
+        }
+    }
+}
+
+/// Selection policy: adapt per op via the α–β model, or force one
+/// algorithm everywhere (`KAITIAN_ALGO`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlgoPolicy {
+    Adaptive,
+    Fixed(Algo),
+}
+
+impl std::str::FromStr for AlgoPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.trim() {
+            "adaptive" | "auto" => Ok(AlgoPolicy::Adaptive),
+            "ring" => Ok(AlgoPolicy::Fixed(Algo::Ring)),
+            "doubling" | "recursive-doubling" => Ok(AlgoPolicy::Fixed(Algo::Doubling)),
+            "halving" | "halving-doubling" => Ok(AlgoPolicy::Fixed(Algo::HalvingDoubling)),
+            "tree" => Ok(AlgoPolicy::Fixed(Algo::Tree)),
+            other => anyhow::bail!(
+                "unknown algorithm {other:?} (adaptive|ring|doubling|halving-doubling|tree)"
+            ),
+        }
+    }
+}
+
+fn encode_policy(p: AlgoPolicy) -> u8 {
+    match p {
+        AlgoPolicy::Adaptive => 1,
+        AlgoPolicy::Fixed(Algo::Ring) => 2,
+        AlgoPolicy::Fixed(Algo::Doubling) => 3,
+        AlgoPolicy::Fixed(Algo::HalvingDoubling) => 4,
+        AlgoPolicy::Fixed(Algo::Tree) => 5,
+    }
+}
+
+fn decode_policy(v: u8) -> AlgoPolicy {
+    match v {
+        2 => AlgoPolicy::Fixed(Algo::Ring),
+        3 => AlgoPolicy::Fixed(Algo::Doubling),
+        4 => AlgoPolicy::Fixed(Algo::HalvingDoubling),
+        5 => AlgoPolicy::Fixed(Algo::Tree),
+        _ => AlgoPolicy::Adaptive,
+    }
+}
+
+/// `0` = defer to `KAITIAN_ALGO` (read once); anything else is a
+/// programmatic override (`set_policy`, used by config/benches/tests).
+static POLICY_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// The process-wide selection policy. A malformed `KAITIAN_ALGO` falls
+/// back to `adaptive` with a one-time stderr warning (never silently).
+pub fn policy() -> AlgoPolicy {
+    let v = POLICY_OVERRIDE.load(Ordering::Relaxed);
+    if v != 0 {
+        return decode_policy(v);
+    }
+    static ENV: OnceLock<AlgoPolicy> = OnceLock::new();
+    *ENV.get_or_init(|| crate::util::env_or_warn("KAITIAN_ALGO", AlgoPolicy::Adaptive))
+}
+
+/// Force the selection policy programmatically (overrides the env var).
+/// Engines latch the policy at construction, so this affects
+/// communicators built *afterward* — already-built communicators keep
+/// their policy, which is what keeps in-flight SPMD ranks aligned even
+/// if another thread changes the global concurrently.
+pub fn set_policy(p: AlgoPolicy) {
+    POLICY_OVERRIDE.store(encode_policy(p), Ordering::Relaxed);
+}
+
+/// Parse-and-set helper for config plumbing (`--algo`).
+pub fn set_policy_str(s: &str) -> Result<()> {
+    set_policy(s.parse()?);
+    Ok(())
+}
+
+/// `usize::MAX` = unresolved (read `KAITIAN_EAGER_BYTES` on first use).
+static EAGER_BYTES: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// The eager (small-message) threshold in payload bytes; `0` disables
+/// the eager path and DDP bucket coalescing.
+pub fn eager_bytes() -> usize {
+    let v = EAGER_BYTES.load(Ordering::Relaxed);
+    if v != usize::MAX {
+        return v;
+    }
+    let v = crate::util::env_or_warn("KAITIAN_EAGER_BYTES", DEFAULT_EAGER_BYTES);
+    EAGER_BYTES.store(v, Ordering::Relaxed);
+    v
+}
+
+/// Override the eager threshold (benches/tests; same in-flight caveat as
+/// [`set_policy`]).
+pub fn set_eager_bytes(bytes: usize) {
+    EAGER_BYTES.store(bytes, Ordering::Relaxed);
+}
+
+/// Does a payload of `bytes` ride the eager single-frame path?
+pub fn is_eager(bytes: usize) -> bool {
+    let e = eager_bytes();
+    e > 0 && bytes > 0 && bytes <= e
+}
+
+/// Pure selection function: argmin of the α–β cost over the four
+/// families (fixed iteration order, strict `<` — deterministic for
+/// identical inputs, which is what keeps SPMD ranks aligned).
+pub fn choose_with(ab: AlphaBeta, policy: AlgoPolicy, bytes: usize, world: usize) -> Algo {
+    if let AlgoPolicy::Fixed(a) = policy {
+        return a;
+    }
+    if world <= 1 || bytes == 0 {
+        return Algo::Ring;
+    }
+    let candidates = [
+        (Algo::Ring, ab.ring_all_reduce_s(bytes, world)),
+        (Algo::Doubling, ab.doubling_all_reduce_s(bytes, world)),
+        (
+            Algo::HalvingDoubling,
+            ab.halving_doubling_all_reduce_s(bytes, world),
+        ),
+        (Algo::Tree, ab.tree_all_reduce_s(bytes, world)),
+    ];
+    let mut best = candidates[0];
+    for c in &candidates[1..] {
+        if c.1 < best.1 {
+            best = *c;
+        }
+    }
+    best.0
+}
+
+// ---------------------------------------------------------------------
+// microprobe
+// ---------------------------------------------------------------------
+
+/// Tag namespace for probe traffic: disjoint from collective tags
+/// (op-counter namespace, growing from `1 << 16`) and p2p tags
+/// (`1 << 62`) by the dedicated bit 61.
+const PROBE_TAG: u64 = 1 << 61;
+/// Tag of the post-probe agreement all-reduce (low 16 bits free for its
+/// chunk sub-tags; bit 32 keeps it clear of the ping-pong tags).
+const PROBE_AGREE_TAG: u64 = PROBE_TAG | (1 << 32);
+const PROBE_SMALL_ROUNDS: u64 = 6;
+const PROBE_BIG_ROUNDS: u64 = 3;
+const PROBE_BIG_BYTES: usize = 256 << 10;
+
+/// One ping-pong round with the ring neighbors under `base`/`base|1`:
+/// returns the round-trip seconds observed by this rank.
+fn probe_round(t: &dyn Transport, payload: &[u8], base: u64) -> Result<f64> {
+    let (rank, w) = (t.rank(), t.world());
+    let next = (rank + 1) % w;
+    let prev = (rank + w - 1) % w;
+    let t0 = Instant::now();
+    t.send(next, base, Buf::copy_from_slice(payload))?;
+    let ping = t.recv(prev, base)?;
+    t.send(prev, base | 1, ping)?;
+    t.recv(next, base | 1)?;
+    Ok(t0.elapsed().as_secs_f64())
+}
+
+/// One-shot α–β microprobe over the live transport. Every rank measures
+/// ping-pong round trips with its ring neighbor (min over rounds, the
+/// robust latency estimator), then one ring all-reduce averages
+/// `[α, 1/β]` across ranks — the reduced bytes are identical on every
+/// rank, so the derived tuning table (and with it every later
+/// algorithm selection) is identical too.
+pub fn microprobe(t: &dyn Transport) -> Result<AlphaBeta> {
+    let w = t.world();
+    if w <= 1 {
+        return Ok(AlphaBeta::for_transport_kind(t.kind()));
+    }
+    let small = [0_u8; 16];
+    let mut best_small = f64::MAX;
+    for k in 0..PROBE_SMALL_ROUNDS {
+        let rtt = probe_round(t, &small, PROBE_TAG | (4 * k))?;
+        if k >= 2 {
+            // First rounds warm pools, sockets and branch predictors.
+            best_small = best_small.min(rtt);
+        }
+    }
+    let big = vec![0_u8; PROBE_BIG_BYTES];
+    let mut best_big = f64::MAX;
+    for k in 0..PROBE_BIG_ROUNDS {
+        let rtt = probe_round(t, &big, PROBE_TAG | 0x1000 | (4 * k))?;
+        if k >= 1 {
+            best_big = best_big.min(rtt);
+        }
+    }
+    // A round trip crosses two hops; the large round pays ~2α + 2n/β.
+    let alpha = best_small / 2.0;
+    let one_way_big = (best_big / 2.0 - alpha).max(1e-9);
+    let bw = PROBE_BIG_BYTES as f64 / one_way_big;
+
+    // Agreement: average the per-rank estimates with a deterministic
+    // ring all-reduce (all ranks end with bit-identical sums).
+    let mut vals = [alpha as f32, (1.0 / bw) as f32];
+    ring::ring_all_reduce_chunked(t, &mut vals, ReduceOp::Sum, PROBE_AGREE_TAG, 1 << 20)?;
+    let alpha_mean = vals[0] as f64 / w as f64;
+    let inv_bw_mean = (vals[1] as f64 / w as f64).max(1e-13);
+    Ok(AlphaBeta {
+        alpha_s: alpha_mean,
+        bw_bps: 1.0 / inv_bw_mean,
+    }
+    .clamped())
+}
+
+/// Per-communicator selection engine: policy + lazily seeded tuning
+/// table. One instance per [`super::Communicator`]; the vendor mesh,
+/// the leader relay and the control plane each carry their own, so
+/// `ProcessGroupKaiTian` picks per *stage* independently (an inproc
+/// vendor link and the TCP relay land on different tables).
+///
+/// The policy is **latched at construction** (from [`policy`]): a later
+/// `set_policy` cannot desynchronize the ranks of an already-built
+/// communicator mid-op.
+#[derive(Debug)]
+pub struct AlgoEngine {
+    policy: AlgoPolicy,
+    tuning: OnceLock<AlphaBeta>,
+}
+
+impl Default for AlgoEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AlgoEngine {
+    pub fn new() -> Self {
+        Self::with_policy(policy())
+    }
+
+    /// Engine with an explicit policy (benches/tests).
+    pub fn with_policy(policy: AlgoPolicy) -> Self {
+        Self {
+            policy,
+            tuning: OnceLock::new(),
+        }
+    }
+
+    /// The policy this engine latched at construction.
+    pub fn policy(&self) -> AlgoPolicy {
+        self.policy
+    }
+
+    /// Ensure the tuning table is seeded, probing `t` if needed — the
+    /// communicator wrappers call this *outside* their timed region so
+    /// the one-shot probe is never charged to the first op's latency
+    /// stats. No-op under a fixed policy or on singleton worlds (probe
+    /// traffic is out-of-band: it does not appear in any op's
+    /// `CommStats` byte counters by design).
+    pub fn warm(&self, t: &dyn Transport) {
+        if matches!(self.policy, AlgoPolicy::Adaptive) && t.world() > 1 {
+            let _ = self.tuning(t);
+        }
+    }
+
+    /// Seed the tuning table directly (tests / offline calibration);
+    /// a no-op if the table is already seeded.
+    pub fn seed_tuning(&self, ab: AlphaBeta) {
+        let _ = self.tuning.set(ab);
+    }
+
+    /// The cached tuning table, microprobing `t` on first use. A failed
+    /// probe (dead peer, timeout) falls back to the paper-calibrated
+    /// defaults for the transport kind — loudly, never silently.
+    pub fn tuning(&self, t: &dyn Transport) -> AlphaBeta {
+        *self.tuning.get_or_init(|| match microprobe(t) {
+            Ok(ab) => ab,
+            Err(e) => {
+                eprintln!(
+                    "[kaitian] warning: algorithm microprobe failed ({e}); \
+                     using {} defaults",
+                    t.kind()
+                );
+                AlphaBeta::for_transport_kind(t.kind())
+            }
+        })
+    }
+
+    /// Pick the all-reduce algorithm for a payload of `bytes` wire bytes
+    /// on `t`. `dtype` is part of the selection key for forward
+    /// compatibility (the α–β costs are byte-denominated, so it does not
+    /// influence the current table).
+    pub fn choose_all_reduce(&self, t: &dyn Transport, _dtype: DType, bytes: usize) -> Algo {
+        if let AlgoPolicy::Fixed(a) = self.policy {
+            return a;
+        }
+        if t.world() <= 1 || bytes == 0 {
+            return Algo::Ring;
+        }
+        choose_with(self.tuning(t), self.policy, bytes, t.world())
+    }
+}
+
+// ---------------------------------------------------------------------
+// message helpers: chunked frames or one eager inline frame
+// ---------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn send_part(
+    t: &dyn Transport,
+    peer: usize,
+    tags: &mut SubTags,
+    wire: &[u8],
+    es: usize,
+    chunk_bytes: usize,
+    eager: bool,
+    stats: &mut CommStats,
+) -> Result<()> {
+    if eager {
+        chunk::send_eager(t, peer, tags, wire, stats)
+    } else {
+        chunk::send_wire(t, peer, tags, wire, es, chunk_bytes, stats)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn recv_fold_part(
+    t: &dyn Transport,
+    peer: usize,
+    tags: &mut SubTags,
+    op: ReduceOp,
+    dtype: DType,
+    dst: &mut [u8],
+    chunk_bytes: usize,
+    eager: bool,
+    stats: &mut CommStats,
+) -> Result<()> {
+    if eager {
+        chunk::recv_eager_fold(t, peer, tags, op, dtype, dst, stats)
+    } else {
+        chunk::recv_fold_wire(t, peer, tags, op, dtype, dst, chunk_bytes, stats)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn recv_place_part(
+    t: &dyn Transport,
+    peer: usize,
+    tags: &mut SubTags,
+    dst: &mut [u8],
+    es: usize,
+    chunk_bytes: usize,
+    eager: bool,
+    stats: &mut CommStats,
+) -> Result<()> {
+    if eager {
+        chunk::recv_eager_place(t, peer, tags, dst, stats)
+    } else {
+        chunk::recv_place_wire(t, peer, tags, dst, es, chunk_bytes, stats)
+    }
+}
+
+/// Per-(peer, direction) sub-tag allocators for one op. Halving-doubling
+/// revisits the same partner in both phases, so allocators must persist
+/// across the whole op; sender and receiver walk identical SPMD message
+/// sequences per directed link, keeping them aligned without
+/// negotiation (the same discipline as `chunk::SubTags`).
+struct PairTags {
+    tag: u64,
+    send: Vec<Option<SubTags>>,
+    recv: Vec<Option<SubTags>>,
+}
+
+impl PairTags {
+    fn new(tag: u64, world: usize) -> Self {
+        Self {
+            tag,
+            send: (0..world).map(|_| None).collect(),
+            recv: (0..world).map(|_| None).collect(),
+        }
+    }
+
+    fn send_tags(&mut self, peer: usize) -> &mut SubTags {
+        let tag = self.tag;
+        self.send[peer].get_or_insert_with(|| SubTags::new(tag))
+    }
+
+    fn recv_tags(&mut self, peer: usize) -> &mut SubTags {
+        let tag = self.tag;
+        self.recv[peer].get_or_insert_with(|| SubTags::new(tag))
+    }
+}
+
+/// Global rank of virtual rank `v` in the power-of-two core: with
+/// `r = w - p` remainder ranks, the first `2r` global ranks pair up
+/// (evens fold into odds and sit out, so virtual ranks `< r` are the
+/// odd globals) and global ranks `>= 2r` map down by `r`.
+/// `fold_in_remainder` computes the forward mapping.
+fn unvrank(v: usize, r: usize) -> usize {
+    if v < r {
+        2 * v + 1
+    } else {
+        v + r
+    }
+}
+
+/// Pre-phase of the non-power-of-two reduction: evens among the first
+/// `2r` ranks contribute their buffer to their odd neighbor. Returns
+/// this rank's virtual rank in the power-of-two core (`None` = passive
+/// until the post-phase).
+#[allow(clippy::too_many_arguments)]
+fn fold_in_remainder(
+    t: &dyn Transport,
+    r: usize,
+    tags: &mut PairTags,
+    op: ReduceOp,
+    dtype: DType,
+    wire: &mut [u8],
+    chunk_bytes: usize,
+    eager: bool,
+    stats: &mut CommStats,
+) -> Result<Option<usize>> {
+    let rank = t.rank();
+    if rank >= 2 * r {
+        return Ok(Some(rank - r));
+    }
+    let es = dtype.size_bytes();
+    if rank % 2 == 0 {
+        send_part(
+            t,
+            rank + 1,
+            tags.send_tags(rank + 1),
+            wire,
+            es,
+            chunk_bytes,
+            eager,
+            stats,
+        )?;
+        Ok(None)
+    } else {
+        recv_fold_part(
+            t,
+            rank - 1,
+            tags.recv_tags(rank - 1),
+            op,
+            dtype,
+            wire,
+            chunk_bytes,
+            eager,
+            stats,
+        )?;
+        Ok(Some(rank / 2))
+    }
+}
+
+/// Post-phase of the non-power-of-two reduction: odds hand the final
+/// buffer back to their even neighbor.
+#[allow(clippy::too_many_arguments)]
+fn copy_out_remainder(
+    t: &dyn Transport,
+    r: usize,
+    tags: &mut PairTags,
+    es: usize,
+    wire: &mut [u8],
+    chunk_bytes: usize,
+    eager: bool,
+    stats: &mut CommStats,
+) -> Result<()> {
+    let rank = t.rank();
+    if rank >= 2 * r {
+        return Ok(());
+    }
+    if rank % 2 == 0 {
+        recv_place_part(
+            t,
+            rank + 1,
+            tags.recv_tags(rank + 1),
+            wire,
+            es,
+            chunk_bytes,
+            eager,
+            stats,
+        )
+    } else {
+        send_part(
+            t,
+            rank - 1,
+            tags.send_tags(rank - 1),
+            wire,
+            es,
+            chunk_bytes,
+            eager,
+            stats,
+        )
+    }
+}
+
+/// Recursive-doubling all-reduce over wire bytes: ⌈log2 p⌉ full-buffer
+/// exchange-and-fold rounds (partner `v ^ 2^k`), wrapped in the
+/// non-power-of-two fold-in/copy-out phases. Latency-optimal; every
+/// rank finishes with bit-identical bytes (commutative folds).
+pub fn doubling_all_reduce_t(
+    t: &dyn Transport,
+    dtype: DType,
+    wire: &mut [u8],
+    op: ReduceOp,
+    tag: u64,
+    chunk_bytes: usize,
+) -> Result<CommStats> {
+    let w = t.world();
+    let mut stats = CommStats::default();
+    if w == 1 || wire.is_empty() {
+        return Ok(stats);
+    }
+    let es = dtype.size_bytes();
+    let n = wire.len() / es;
+    let cb = chunk::fit_chunk_bytes(chunk_bytes, es, n, 1, "recursive-doubling all-reduce");
+    let eager = is_eager(wire.len());
+    let p = prev_power_of_two(w);
+    let r = w - p;
+    let mut tags = PairTags::new(tag, w);
+
+    let vr = fold_in_remainder(t, r, &mut tags, op, dtype, wire, cb, eager, &mut stats)?;
+    if let Some(v) = vr {
+        let mut mask = 1;
+        while mask < p {
+            let peer = unvrank(v ^ mask, r);
+            send_part(t, peer, tags.send_tags(peer), wire, es, cb, eager, &mut stats)?;
+            recv_fold_part(
+                t,
+                peer,
+                tags.recv_tags(peer),
+                op,
+                dtype,
+                wire,
+                cb,
+                eager,
+                &mut stats,
+            )?;
+            mask <<= 1;
+        }
+    }
+    copy_out_remainder(t, r, &mut tags, es, wire, cb, eager, &mut stats)?;
+    Ok(stats)
+}
+
+/// Halving-doubling all-reduce over wire bytes: recursive-halving
+/// reduce-scatter (each round exchanges and folds half of the shrinking
+/// window) followed by the mirror-image recursive-doubling all-gather,
+/// wrapped in the non-power-of-two fold-in/copy-out phases. Bandwidth-
+/// optimal (2·(p−1)/p·n bytes per rank) in 2·log2 p rounds.
+pub fn halving_doubling_all_reduce_t(
+    t: &dyn Transport,
+    dtype: DType,
+    wire: &mut [u8],
+    op: ReduceOp,
+    tag: u64,
+    chunk_bytes: usize,
+) -> Result<CommStats> {
+    let w = t.world();
+    let mut stats = CommStats::default();
+    if w == 1 || wire.is_empty() {
+        return Ok(stats);
+    }
+    let es = dtype.size_bytes();
+    let n = wire.len() / es;
+    let cb = chunk::fit_chunk_bytes(chunk_bytes, es, n, 2, "halving-doubling all-reduce");
+    let eager = is_eager(wire.len());
+    let p = prev_power_of_two(w);
+    let r = w - p;
+    let mut tags = PairTags::new(tag, w);
+
+    let vr = fold_in_remainder(t, r, &mut tags, op, dtype, wire, cb, eager, &mut stats)?;
+    if let Some(v) = vr {
+        // Phase 1: recursive-halving reduce-scatter. Partner pairs hold
+        // the identical window (their vranks differ only in the current
+        // bit), so both compute the same midpoint; the low-bit side
+        // keeps the low half. Each round's geometry is recorded so the
+        // gather phase can walk it in reverse.
+        let (mut lo, mut hi) = (0_usize, n);
+        let mut rounds: Vec<(usize, usize, usize, bool, usize)> = Vec::new();
+        let mut mask = p >> 1;
+        while mask >= 1 {
+            let peer = unvrank(v ^ mask, r);
+            let mid = lo + (hi - lo) / 2;
+            let keep_low = v & mask == 0;
+            if keep_low {
+                send_part(
+                    t,
+                    peer,
+                    tags.send_tags(peer),
+                    &wire[mid * es..hi * es],
+                    es,
+                    cb,
+                    eager,
+                    &mut stats,
+                )?;
+                recv_fold_part(
+                    t,
+                    peer,
+                    tags.recv_tags(peer),
+                    op,
+                    dtype,
+                    &mut wire[lo * es..mid * es],
+                    cb,
+                    eager,
+                    &mut stats,
+                )?;
+            } else {
+                send_part(
+                    t,
+                    peer,
+                    tags.send_tags(peer),
+                    &wire[lo * es..mid * es],
+                    es,
+                    cb,
+                    eager,
+                    &mut stats,
+                )?;
+                recv_fold_part(
+                    t,
+                    peer,
+                    tags.recv_tags(peer),
+                    op,
+                    dtype,
+                    &mut wire[mid * es..hi * es],
+                    cb,
+                    eager,
+                    &mut stats,
+                )?;
+            }
+            rounds.push((lo, hi, mid, keep_low, peer));
+            if keep_low {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+            mask >>= 1;
+        }
+        // Phase 2: recursive-doubling all-gather, reversing the rounds.
+        // At reversed round i this rank owns its fully reduced half of
+        // that round's window; the partner owns the other half.
+        for &(lo_i, hi_i, mid, keep_low, peer) in rounds.iter().rev() {
+            if keep_low {
+                send_part(
+                    t,
+                    peer,
+                    tags.send_tags(peer),
+                    &wire[lo_i * es..mid * es],
+                    es,
+                    cb,
+                    eager,
+                    &mut stats,
+                )?;
+                recv_place_part(
+                    t,
+                    peer,
+                    tags.recv_tags(peer),
+                    &mut wire[mid * es..hi_i * es],
+                    es,
+                    cb,
+                    eager,
+                    &mut stats,
+                )?;
+            } else {
+                send_part(
+                    t,
+                    peer,
+                    tags.send_tags(peer),
+                    &wire[mid * es..hi_i * es],
+                    es,
+                    cb,
+                    eager,
+                    &mut stats,
+                )?;
+                recv_place_part(
+                    t,
+                    peer,
+                    tags.recv_tags(peer),
+                    &mut wire[lo_i * es..mid * es],
+                    es,
+                    cb,
+                    eager,
+                    &mut stats,
+                )?;
+            }
+        }
+    }
+    copy_out_remainder(t, r, &mut tags, es, wire, cb, eager, &mut stats)?;
+    Ok(stats)
+}
+
+/// Tree all-reduce over wire bytes: binomial reduce into rank 0 followed
+/// by binomial broadcast. Each directed link carries one logical message
+/// per phase in opposite directions, so the two phases share one tag
+/// without sub-tag collisions.
+pub fn tree_all_reduce_t(
+    t: &dyn Transport,
+    dtype: DType,
+    wire: &mut [u8],
+    op: ReduceOp,
+    tag: u64,
+    chunk_bytes: usize,
+) -> Result<CommStats> {
+    let mut stats = tree::reduce_t_chunked(t, dtype, wire, op, 0, tag, chunk_bytes)?;
+    stats.merge(&tree::broadcast_t_chunked(
+        t,
+        dtype.size_bytes(),
+        wire,
+        0,
+        tag,
+        chunk_bytes,
+    )?);
+    Ok(stats)
+}
+
+/// Dispatch one dtype-generic all-reduce through the selected algorithm
+/// and stamp the per-algorithm label into the stats.
+pub fn all_reduce_dispatch_t(
+    engine: &AlgoEngine,
+    t: &dyn Transport,
+    dtype: DType,
+    wire: &mut [u8],
+    op: ReduceOp,
+    tag: u64,
+    chunk_bytes: usize,
+) -> Result<CommStats> {
+    let algo = engine.choose_all_reduce(t, dtype, wire.len());
+    let mut stats = match algo {
+        Algo::Ring => ring::ring_all_reduce_t(t, dtype, wire, op, tag, chunk_bytes)?,
+        Algo::Doubling => doubling_all_reduce_t(t, dtype, wire, op, tag, chunk_bytes)?,
+        Algo::HalvingDoubling => {
+            halving_doubling_all_reduce_t(t, dtype, wire, op, tag, chunk_bytes)?
+        }
+        Algo::Tree => tree_all_reduce_t(t, dtype, wire, op, tag, chunk_bytes)?,
+    };
+    let eager = is_eager(wire.len()) && matches!(algo, Algo::Doubling | Algo::HalvingDoubling);
+    stats.algo = algo.label(eager);
+    Ok(stats)
+}
+
+/// Dispatch one f32 all-reduce: ring keeps its native-accumulator fast
+/// path; the other families run the wire-byte bodies in place (bitwise
+/// identical to the generic path — the fold loops are shared).
+pub fn all_reduce_dispatch_f32(
+    engine: &AlgoEngine,
+    t: &dyn Transport,
+    buf: &mut [f32],
+    op: ReduceOp,
+    tag: u64,
+    chunk_bytes: usize,
+) -> Result<CommStats> {
+    let bytes = buf.len() * 4;
+    let algo = engine.choose_all_reduce(t, DType::F32, bytes);
+    let mut stats = match algo {
+        Algo::Ring => ring::ring_all_reduce_chunked(t, buf, op, tag, chunk_bytes)?,
+        Algo::Doubling => with_f32_wire(buf, |wire| {
+            doubling_all_reduce_t(t, DType::F32, wire, op, tag, chunk_bytes)
+        })?,
+        Algo::HalvingDoubling => with_f32_wire(buf, |wire| {
+            halving_doubling_all_reduce_t(t, DType::F32, wire, op, tag, chunk_bytes)
+        })?,
+        Algo::Tree => with_f32_wire(buf, |wire| {
+            tree_all_reduce_t(t, DType::F32, wire, op, tag, chunk_bytes)
+        })?,
+    };
+    let eager = is_eager(bytes) && matches!(algo, Algo::Doubling | Algo::HalvingDoubling);
+    stats.algo = algo.label(eager);
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::InprocMesh;
+
+    type AlgoFn = fn(&dyn Transport, DType, &mut [u8], ReduceOp, u64, usize) -> Result<CommStats>;
+
+    /// Run `f` on every rank of a fresh inproc mesh; returns per-rank
+    /// reduced f32 buffers.
+    fn run_all_ranks(w: usize, n: usize, chunk: usize, f: AlgoFn) -> Vec<Vec<f32>> {
+        let eps = InprocMesh::new(w);
+        std::thread::scope(|s| {
+            let hs: Vec<_> = eps
+                .iter()
+                .map(|e| {
+                    s.spawn(move || {
+                        let mut buf: Vec<f32> =
+                            (0..n).map(|i| ((i % 13) * (e.rank() + 1)) as f32).collect();
+                        with_f32_wire(&mut buf, |wire| {
+                            f(e, DType::F32, wire, ReduceOp::Sum, 7 << 16, chunk)
+                        })
+                        .unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn doubling_sums_across_worlds() {
+        for w in [1_usize, 2, 3, 4, 5, 7, 8] {
+            for n in [1_usize, 10, 257] {
+                let out = run_all_ranks(w, n, 1 << 16, doubling_all_reduce_t);
+                let scale: f32 = (1..=w).map(|r| r as f32).sum();
+                let expect: Vec<f32> = (0..n).map(|i| (i % 13) as f32 * scale).collect();
+                for o in &out {
+                    assert_eq!(o, &expect, "w={w} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn halving_doubling_sums_across_worlds() {
+        for w in [1_usize, 2, 3, 4, 5, 6, 7, 8] {
+            for n in [1_usize, 2, 10, 257, 1000] {
+                let out = run_all_ranks(w, n, 1 << 16, halving_doubling_all_reduce_t);
+                let scale: f32 = (1..=w).map(|r| r as f32).sum();
+                let expect: Vec<f32> = (0..n).map(|i| (i % 13) as f32 * scale).collect();
+                for o in &out {
+                    assert_eq!(o, &expect, "w={w} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tree_sums_across_worlds() {
+        for w in [2_usize, 3, 5, 8] {
+            let out = run_all_ranks(w, 33, 1 << 16, tree_all_reduce_t);
+            let scale: f32 = (1..=w).map(|r| r as f32).sum();
+            let expect: Vec<f32> = (0..33).map(|i| (i % 13) as f32 * scale).collect();
+            for o in &out {
+                assert_eq!(o, &expect, "w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_framing_matches_single_frame() {
+        // Chunk framing is pure transport framing for the new bodies
+        // too: results must be bit-identical across chunk sizes. The
+        // payload sits above the default eager threshold so the chunked
+        // branch (not the single-inline-frame branch) is exercised.
+        let n = 2499; // 9996 bytes > DEFAULT_EAGER_BYTES
+        for f in [
+            doubling_all_reduce_t as AlgoFn,
+            halving_doubling_all_reduce_t as AlgoFn,
+        ] {
+            let whole = run_all_ranks(5, n, 1 << 20, f);
+            for chunk in [64, 256, 4096] {
+                assert_eq!(run_all_ranks(5, n, chunk, f), whole, "chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn min_max_and_integer_ops() {
+        use crate::comm::tensor::CommTensor;
+        for (w, op) in [(3_usize, ReduceOp::Max), (4, ReduceOp::Min)] {
+            let eps = InprocMesh::new(w);
+            let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+                let hs: Vec<_> = eps
+                    .iter()
+                    .map(|e| {
+                        s.spawn(move || {
+                            let mut t =
+                                CommTensor::from_f32(DType::I32, &[e.rank() as f32, -(e.rank() as f32)]);
+                            doubling_all_reduce_t(
+                                e,
+                                DType::I32,
+                                t.as_bytes_mut(),
+                                op,
+                                7 << 16,
+                                1 << 16,
+                            )
+                            .unwrap();
+                            t.to_f32()
+                        })
+                    })
+                    .collect();
+                hs.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let expect = match op {
+                ReduceOp::Max => vec![(w - 1) as f32, 0.0],
+                _ => vec![0.0, -((w - 1) as f32)],
+            };
+            for o in &out {
+                assert_eq!(o, &expect, "w={w} {op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn selection_is_size_monotone() {
+        // With the TCP-class table: tiny payloads pick a log-depth
+        // family, huge payloads a bandwidth-optimal one.
+        let ab = AlphaBeta::for_transport_kind("tcp");
+        let small = choose_with(ab, AlgoPolicy::Adaptive, 256, 4);
+        assert!(
+            matches!(small, Algo::Doubling | Algo::HalvingDoubling | Algo::Tree),
+            "small pick {small:?} must be log-depth"
+        );
+        let big = choose_with(ab, AlgoPolicy::Adaptive, 64 << 20, 4);
+        assert!(
+            matches!(big, Algo::Ring | Algo::HalvingDoubling),
+            "big pick {big:?} must be bandwidth-optimal"
+        );
+        // Forced policy wins regardless of size.
+        assert_eq!(
+            choose_with(ab, AlgoPolicy::Fixed(Algo::Tree), 64 << 20, 4),
+            Algo::Tree
+        );
+        // Degenerate shapes fall back to ring.
+        assert_eq!(choose_with(ab, AlgoPolicy::Adaptive, 0, 4), Algo::Ring);
+        assert_eq!(choose_with(ab, AlgoPolicy::Adaptive, 1024, 1), Algo::Ring);
+    }
+
+    #[test]
+    fn policy_parses() {
+        assert_eq!("adaptive".parse::<AlgoPolicy>().unwrap(), AlgoPolicy::Adaptive);
+        assert_eq!(
+            "ring".parse::<AlgoPolicy>().unwrap(),
+            AlgoPolicy::Fixed(Algo::Ring)
+        );
+        assert_eq!(
+            "doubling".parse::<AlgoPolicy>().unwrap(),
+            AlgoPolicy::Fixed(Algo::Doubling)
+        );
+        assert_eq!(
+            "halving-doubling".parse::<AlgoPolicy>().unwrap(),
+            AlgoPolicy::Fixed(Algo::HalvingDoubling)
+        );
+        assert_eq!(
+            "tree".parse::<AlgoPolicy>().unwrap(),
+            AlgoPolicy::Fixed(Algo::Tree)
+        );
+        assert!("bogus".parse::<AlgoPolicy>().is_err());
+    }
+
+    #[test]
+    fn labels_cover_eager() {
+        assert_eq!(Algo::Doubling.label(true), "doubling+eager");
+        assert_eq!(Algo::Doubling.label(false), "doubling");
+        assert_eq!(Algo::Ring.label(true), "ring");
+        assert_eq!(Algo::HalvingDoubling.label(true), "halving-doubling+eager");
+    }
+
+    #[test]
+    fn microprobe_seeds_identical_tables() {
+        let eps = InprocMesh::new(3);
+        let tables: Vec<AlphaBeta> = std::thread::scope(|s| {
+            let hs: Vec<_> = eps
+                .iter()
+                .map(|e| s.spawn(move || microprobe(e).unwrap()))
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for t in &tables[1..] {
+            assert_eq!(t, &tables[0], "agreement step must align all ranks");
+        }
+        assert!(tables[0].alpha_s > 0.0 && tables[0].bw_bps > 0.0);
+    }
+}

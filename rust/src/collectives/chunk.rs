@@ -5,9 +5,12 @@
 //! link as multiple `<= chunk_bytes` frames, each under its own sub-tag
 //! drawn from a *per-directed-pair* sequential allocator ([`SubTags`]):
 //! sender and receiver walk identical segment sequences (SPMD), so their
-//! allocators stay aligned without any negotiation. Exhausting the
-//! namespace is a hard, symmetric error (checked before any traffic) —
-//! never a silent tag collision.
+//! allocators stay aligned without any negotiation. An op that would
+//! exhaust the namespace auto-grows its effective chunk size
+//! ([`fit_chunk_bytes`]) — deterministically, from SPMD-agreed
+//! quantities, with a loud warning — so large payloads never fail and
+//! tags never silently collide ([`SubTags::reserve`] stays the hard
+//! backstop).
 //!
 //! Payload frames come from the global [`BufPool`] and are folded or
 //! copied straight out of the received [`Buf`] — the only copies on the
@@ -64,25 +67,133 @@ pub fn chunks_for(bytes: usize, chunk_bytes: usize) -> u64 {
     chunks_for_elems(bytes / 4, chunk_elems(4, chunk_bytes))
 }
 
-/// Hard guard on the chunk namespace: fails the op before any traffic
-/// when it would need `>= 65536` chunk sub-tags on one link (the
-/// documented limit — the last sub-tag value is kept in reserve so the
-/// guard and the spec agree). Callers compute `needed` from quantities
-/// every rank agrees on, so the error fires on all ranks symmetrically
-/// (no half-started collective, no deadlock).
-pub fn ensure_budget(needed: u64, what: &str) -> Result<()> {
-    if needed >= MAX_CHUNKS_PER_OP {
-        anyhow::bail!(
-            "{what} would need {needed} chunk sub-tags on one link but the tag \
-             namespace holds {MAX_CHUNKS_PER_OP}; raise KAITIAN_CHUNK_BYTES or \
-             shrink the message"
+/// Effective chunk granularity for one op: grows `chunk_bytes` when the
+/// op would otherwise exhaust the 16-bit sub-tag namespace on its
+/// busiest directed link, instead of failing the collective (the old
+/// hard `MAX_CHUNKS_PER_OP` error). `total_elems` is the worst-case
+/// element count streamed over one directed link across the whole op and
+/// `messages` the number of logical messages on that link (each message
+/// rounds its chunk count up by at most one frame). Both are derived
+/// from SPMD-agreed quantities, so every rank grows to the identical
+/// granularity — sender and receiver framing stays aligned.
+///
+/// The grow path warns on stderr (`parse_or_warn`-style: loud, never
+/// silent) because the operator's configured granularity is not being
+/// honored — once per op label, so a long training run does not flood
+/// stderr with one line per step per rank.
+pub fn fit_chunk_bytes(
+    chunk_bytes: usize,
+    elem_bytes: usize,
+    total_elems: usize,
+    messages: u64,
+    what: &str,
+) -> usize {
+    let es = elem_bytes.max(1);
+    let stride = chunk_elems(es, chunk_bytes);
+    let worst = (total_elems as u64).div_ceil(stride as u64) + messages;
+    if worst < MAX_CHUNKS_PER_OP {
+        return chunk_bytes;
+    }
+    if messages + 1 >= MAX_CHUNKS_PER_OP {
+        // Even one frame per message overflows (worlds beyond the tag
+        // namespace); leave the configured size — `SubTags::reserve`
+        // reports the hard error symmetrically.
+        return chunk_bytes;
+    }
+    let budget = (MAX_CHUNKS_PER_OP - 1 - messages) as usize;
+    let grown_stride = total_elems.div_ceil(budget).max(1);
+    let grown = grown_stride * es;
+    static WARNED: std::sync::OnceLock<std::sync::Mutex<std::collections::BTreeSet<String>>> =
+        std::sync::OnceLock::new();
+    let warned = WARNED.get_or_init(Default::default);
+    if warned.lock().unwrap().insert(what.to_string()) {
+        eprintln!(
+            "[kaitian] warning: {what} needs {worst} chunk sub-tags on one link at \
+             {chunk_bytes}-byte chunks (namespace holds {MAX_CHUNKS_PER_OP}); \
+             auto-growing this op's chunk size to {grown} bytes (warned once per op kind)"
         );
     }
+    grown
+}
+
+// ---------------------------------------------------------------------
+// eager (small-message) fast path
+// ---------------------------------------------------------------------
+// Payloads at or below `algo::eager_bytes` skip the pooled-frame chunk
+// loop entirely: one inline frame under the next sub-tag, no BufPool
+// round-trip, no per-chunk accounting. Sender and receiver take the
+// eager branch from the same SPMD-agreed payload length, so framing
+// stays aligned by construction.
+
+/// Send `wire` to `peer` as one inline frame (the eager path).
+pub fn send_eager(
+    t: &dyn Transport,
+    peer: usize,
+    tags: &mut SubTags,
+    wire: &[u8],
+    stats: &mut CommStats,
+) -> Result<()> {
+    let tag = tags.reserve(1)?;
+    stats.bytes_sent += wire.len() as u64;
+    stats.messages += 1;
+    if !wire.is_empty() {
+        stats.copies += 1;
+    }
+    t.send(peer, tag, crate::comm::buf::Buf::copy_from_slice(wire))
+}
+
+/// Receive one inline frame from `peer` and fold it into `dst`.
+pub fn recv_eager_fold(
+    t: &dyn Transport,
+    peer: usize,
+    tags: &mut SubTags,
+    op: ReduceOp,
+    dtype: DType,
+    dst: &mut [u8],
+    stats: &mut CommStats,
+) -> Result<()> {
+    let tag = tags.reserve(1)?;
+    let data = t.recv(peer, tag)?;
+    if data.len() != dst.len() {
+        anyhow::bail!(
+            "eager frame from rank {peer}: got {} wire bytes, expected {}",
+            data.len(),
+            dst.len()
+        );
+    }
+    stats.bytes_recv += data.len() as u64;
+    op.fold_wire(dtype, dst, &data)
+}
+
+/// Receive one inline frame from `peer` into `dst` (placement path).
+pub fn recv_eager_place(
+    t: &dyn Transport,
+    peer: usize,
+    tags: &mut SubTags,
+    dst: &mut [u8],
+    stats: &mut CommStats,
+) -> Result<()> {
+    let tag = tags.reserve(1)?;
+    let data = t.recv(peer, tag)?;
+    if data.len() != dst.len() {
+        anyhow::bail!(
+            "eager frame from rank {peer}: got {} wire bytes, expected {}",
+            data.len(),
+            dst.len()
+        );
+    }
+    stats.bytes_recv += data.len() as u64;
+    if !dst.is_empty() {
+        stats.copies += 1;
+    }
+    dst.copy_from_slice(&data);
     Ok(())
 }
 
 /// Sequential sub-tag allocator for one collective op on one directed
-/// link. Overflow is a hard error (backstop behind [`ensure_budget`]).
+/// link. Overflow is a hard error — the backstop behind the
+/// [`fit_chunk_bytes`] auto-grow (which keeps well-formed ops inside
+/// the namespace in the first place).
 pub struct SubTags {
     base: u64,
     next: u64,
@@ -300,10 +411,68 @@ mod tests {
     }
 
     #[test]
-    fn budget_guard_is_hard_error() {
-        assert!(ensure_budget(MAX_CHUNKS_PER_OP - 1, "test op").is_ok());
-        let err = ensure_budget(MAX_CHUNKS_PER_OP, "test op").unwrap_err();
-        assert!(err.to_string().contains("chunk sub-tags"), "{err}");
+    fn fit_chunk_bytes_grows_only_on_overflow() {
+        // Comfortable ops keep the configured granularity untouched.
+        assert_eq!(fit_chunk_bytes(1024, 4, 100_000, 2, "test"), 1024);
+        // 70k elements at 1-elem stride overflows the namespace: the
+        // effective size must grow so the op fits.
+        let grown = fit_chunk_bytes(4, 4, 70_000, 2, "test");
+        assert!(grown > 4, "must grow: {grown}");
+        let stride = chunk_elems(4, grown);
+        assert!(
+            (70_000_u64.div_ceil(stride as u64)) + 2 < MAX_CHUNKS_PER_OP,
+            "grown size must fit the namespace"
+        );
+        // Growth is deterministic (SPMD: all ranks compute the same).
+        assert_eq!(grown, fit_chunk_bytes(4, 4, 70_000, 2, "test"));
+    }
+
+    #[test]
+    fn eager_roundtrip_fold_and_place() {
+        use crate::comm::tensor::CommTensor;
+        let eps = InprocMesh::new(2);
+        let tag = 5 << CHUNK_TAG_BITS;
+        let xs: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let t_send = CommTensor::from_f32(DType::F32, &xs);
+        std::thread::scope(|s| {
+            let e0 = &eps[0];
+            let wire = t_send.as_bytes();
+            s.spawn(move || {
+                let mut st = CommStats::default();
+                let mut tags = SubTags::new(tag);
+                send_eager(e0, 1, &mut tags, wire, &mut st).unwrap();
+                send_eager(e0, 1, &mut tags, wire, &mut st).unwrap();
+                assert_eq!(st.messages, 2);
+                assert_eq!(st.bytes_sent, 512);
+                assert_eq!(st.alloc_bytes, 0, "eager frames bypass the pool");
+            });
+            let e1 = &eps[1];
+            let xs = &xs;
+            s.spawn(move || {
+                let mut st = CommStats::default();
+                let mut tags = SubTags::new(tag);
+                let mut acc = CommTensor::from_f32(DType::F32, &[1.0; 64]);
+                recv_eager_fold(
+                    e1,
+                    0,
+                    &mut tags,
+                    ReduceOp::Sum,
+                    DType::F32,
+                    acc.as_bytes_mut(),
+                    &mut st,
+                )
+                .unwrap();
+                let mut placed = CommTensor::zeros(DType::F32, 64);
+                recv_eager_place(e1, 0, &mut tags, placed.as_bytes_mut(), &mut st).unwrap();
+                let acc = acc.to_f32();
+                let placed = placed.to_f32();
+                for i in 0..64 {
+                    assert_eq!(acc[i], 1.0 + xs[i]);
+                    assert_eq!(placed[i], xs[i]);
+                }
+                assert_eq!(st.bytes_recv, 512);
+            });
+        });
     }
 
     #[test]

@@ -3,19 +3,26 @@
 //! This is the algorithm substrate beneath the simulated vendor libraries
 //! (`backend::NcclSim` / `backend::CnclSim`) and the host-relay path
 //! (`backend::GlooHostRelay`): bandwidth-optimal ring all-reduce
-//! (reduce-scatter + all-gather), binomial-tree broadcast, ring
-//! all-gather, and a dissemination barrier.
+//! (reduce-scatter + all-gather), latency-optimal recursive-doubling
+//! and halving-doubling all-reduce ([`algo`]), binomial-tree broadcast,
+//! ring all-gather, and a dissemination barrier. All-reduce picks its
+//! algorithm per payload size via the communicator's [`AlgoEngine`]
+//! (α–β cost model seeded by a live microprobe; `KAITIAN_ALGO`
+//! overrides), and payloads at or below `KAITIAN_EAGER_BYTES` ride an
+//! eager single-frame path with no pooled-frame chunking.
 //!
 //! Every rank of a communicator must call the same sequence of collectives
 //! (SPMD); tags are derived from a per-communicator operation counter that
 //! stays aligned across ranks by construction.
 
+pub mod algo;
 pub mod chunk;
 pub mod ops;
 pub mod ring;
 pub mod tree;
 pub mod work;
 
+pub use algo::{Algo, AlgoEngine, AlgoPolicy};
 pub use ops::ReduceOp;
 pub use work::{CommQueue, CommThread, WorkHandle, WorkSender};
 
@@ -32,6 +39,11 @@ use crate::Result;
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct CommStats {
     pub op: &'static str,
+    /// Which algorithm served the op (`"ring"`, `"doubling"`,
+    /// `"doubling+eager"`, `"halving-doubling"`, `"tree"`, …) — stamped
+    /// by the size-adaptive dispatcher so the per-op choice is visible
+    /// all the way up into report JSON.
+    pub algo: &'static str,
     /// Payload bytes this rank pushed to the transport.
     pub bytes_sent: u64,
     /// Payload bytes this rank received.
@@ -65,6 +77,9 @@ impl CommStats {
         // non-empty label instead of silently dropping it.
         if self.op.is_empty() {
             self.op = other.op;
+        }
+        if self.algo.is_empty() {
+            self.algo = other.algo;
         }
         self.bytes_sent += other.bytes_sent;
         self.bytes_recv += other.bytes_recv;
@@ -118,11 +133,9 @@ pub(crate) fn op_all_to_all(
     let seg_b = (elems / w) * es;
     let (mut out, hit) = BufPool::global().take_vec(send.len());
     stats.note_take(send.len(), hit);
-    let stride = chunk::chunk_elems(es, chunk_bytes);
-    chunk::ensure_budget(
-        chunk::chunks_for_elems(elems / w, stride),
-        "all-to-all",
-    )?;
+    // One message per directed pair; grow the chunk size instead of
+    // failing when the segment would exhaust the sub-tag namespace.
+    let chunk_bytes = chunk::fit_chunk_bytes(chunk_bytes, es, elems / w, 1, "all-to-all");
     // Own segment moves locally.
     out[rank * seg_b..(rank + 1) * seg_b]
         .copy_from_slice(&send[rank * seg_b..(rank + 1) * seg_b]);
@@ -171,11 +184,7 @@ pub(crate) fn op_gather(
     let (rank, w) = (t.rank(), t.world());
     let es = dtype.size_bytes();
     let mut stats = CommStats::default();
-    let stride = chunk::chunk_elems(es, chunk_bytes);
-    chunk::ensure_budget(
-        chunk::chunks_for_elems(send.len() / es, stride),
-        "gather",
-    )?;
+    let chunk_bytes = chunk::fit_chunk_bytes(chunk_bytes, es, send.len() / es, 1, "gather");
     if rank != root {
         let mut tags = chunk::SubTags::new(tag);
         chunk::send_wire(t, root, &mut tags, send, es, chunk_bytes, &mut stats)?;
@@ -207,11 +216,14 @@ pub(crate) fn op_gather(
 }
 
 /// A communicator: a transport endpoint + operation counter + (lazily
-/// spawned) comm thread for issued async collectives.
+/// spawned) comm thread for issued async collectives + the
+/// size-adaptive algorithm engine ([`AlgoEngine`]) whose tuning table
+/// is microprobed over this communicator's live transport on first use.
 pub struct Communicator {
     transport: Arc<dyn Transport>,
     op_counter: AtomicU64,
     comm_thread: OnceLock<CommThread>,
+    engine: Arc<AlgoEngine>,
 }
 
 impl Communicator {
@@ -220,7 +232,27 @@ impl Communicator {
             transport,
             op_counter: AtomicU64::new(0),
             comm_thread: OnceLock::new(),
+            engine: Arc::new(AlgoEngine::new()),
         }
+    }
+
+    /// This communicator's algorithm-selection engine (shared with the
+    /// async closures and the relay backends that wrap this
+    /// communicator).
+    pub fn engine(&self) -> &Arc<AlgoEngine> {
+        &self.engine
+    }
+
+    /// The metrics label of the all-reduce algorithm this communicator
+    /// would select for an `elems`-element `dtype` payload (triggers the
+    /// one-shot microprobe on first use — call it SPMD, like a
+    /// collective).
+    pub fn select_all_reduce(&self, dtype: DType, elems: usize) -> &'static str {
+        let bytes = elems * dtype.size_bytes();
+        let a = self
+            .engine
+            .choose_all_reduce(self.transport.as_ref(), dtype, bytes);
+        a.label(algo::is_eager(bytes) && matches!(a, Algo::Doubling | Algo::HalvingDoubling))
     }
 
     pub fn rank(&self) -> usize {
@@ -269,11 +301,23 @@ impl Communicator {
         handle
     }
 
-    /// Sum/max/min-reduce `buf` across all ranks, in place (ring), under a
-    /// caller-reserved tag.
+    /// Sum/max/min-reduce `buf` across all ranks, in place, under a
+    /// caller-reserved tag. The algorithm (ring / recursive doubling /
+    /// halving-doubling / tree) is picked per payload size by the
+    /// communicator's [`AlgoEngine`].
     pub fn all_reduce_tagged(&self, buf: &mut [f32], op: ReduceOp, tag: u64) -> Result<CommStats> {
+        // One-shot microprobe (if still unseeded) runs before the timer
+        // so the first op's latency stats stay honest.
+        self.engine.warm(self.transport.as_ref());
         let t0 = Instant::now();
-        let mut stats = ring::ring_all_reduce(self.transport.as_ref(), buf, op, tag)?;
+        let mut stats = algo::all_reduce_dispatch_f32(
+            &self.engine,
+            self.transport.as_ref(),
+            buf,
+            op,
+            tag,
+            chunk_bytes(),
+        )?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "all_reduce";
         stats.inflight_hw_bytes = self.transport.inflight_high_water();
@@ -293,9 +337,12 @@ impl Communicator {
         op: ReduceOp,
     ) -> WorkHandle<(Vec<f32>, CommStats)> {
         let tag = self.reserve_tag();
+        let engine = self.engine.clone();
         self.run_async(move |t| {
+            engine.warm(t);
             let t0 = Instant::now();
-            let mut stats = ring::ring_all_reduce(t, &mut buf, op, tag)?;
+            let mut stats =
+                algo::all_reduce_dispatch_f32(&engine, t, &mut buf, op, tag, chunk_bytes())?;
             stats.seconds = t0.elapsed().as_secs_f64();
             stats.op = "all_reduce";
             stats.inflight_hw_bytes = t.inflight_high_water();
@@ -370,7 +417,8 @@ impl Communicator {
     // dtype-generic verbs (wire-byte views + CommTensor endpoints)
     // -----------------------------------------------------------------
 
-    /// In-place dtype-generic all-reduce under a caller-reserved tag.
+    /// In-place dtype-generic all-reduce under a caller-reserved tag
+    /// (size-adaptive algorithm dispatch, like the f32 path).
     pub fn all_reduce_tagged_t(
         &self,
         dtype: DType,
@@ -378,9 +426,17 @@ impl Communicator {
         op: ReduceOp,
         tag: u64,
     ) -> Result<CommStats> {
+        self.engine.warm(self.transport.as_ref());
         let t0 = Instant::now();
-        let mut stats =
-            ring::ring_all_reduce_t(self.transport.as_ref(), dtype, wire, op, tag, chunk_bytes())?;
+        let mut stats = algo::all_reduce_dispatch_t(
+            &self.engine,
+            self.transport.as_ref(),
+            dtype,
+            wire,
+            op,
+            tag,
+            chunk_bytes(),
+        )?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "all_reduce";
         stats.inflight_hw_bytes = self.transport.inflight_high_water();
@@ -525,8 +581,7 @@ impl Communicator {
         let t0 = Instant::now();
         let es = dtype.size_bytes();
         let mut stats = CommStats::default();
-        let stride = chunk::chunk_elems(es, chunk_bytes());
-        chunk::ensure_budget(chunk::chunks_for_elems(wire.len() / es, stride), "send")?;
+        let cb = chunk::fit_chunk_bytes(chunk_bytes(), es, wire.len() / es, 1, "send");
         let mut tags = chunk::SubTags::new(tag);
         chunk::send_wire(
             self.transport.as_ref(),
@@ -534,7 +589,7 @@ impl Communicator {
             &mut tags,
             wire,
             es,
-            chunk_bytes(),
+            cb,
             &mut stats,
         )?;
         stats.seconds = t0.elapsed().as_secs_f64();
@@ -555,8 +610,7 @@ impl Communicator {
         let t0 = Instant::now();
         let es = dtype.size_bytes();
         let mut stats = CommStats::default();
-        let stride = chunk::chunk_elems(es, chunk_bytes());
-        chunk::ensure_budget(chunk::chunks_for_elems(wire.len() / es, stride), "recv")?;
+        let cb = chunk::fit_chunk_bytes(chunk_bytes(), es, wire.len() / es, 1, "recv");
         let mut tags = chunk::SubTags::new(tag);
         chunk::recv_place_wire(
             self.transport.as_ref(),
@@ -564,7 +618,7 @@ impl Communicator {
             &mut tags,
             wire,
             es,
-            chunk_bytes(),
+            cb,
             &mut stats,
         )?;
         stats.seconds = t0.elapsed().as_secs_f64();
@@ -580,11 +634,20 @@ impl Communicator {
         op: ReduceOp,
     ) -> WorkHandle<(CommTensor, CommStats)> {
         let tag = self.reserve_tag();
+        let engine = self.engine.clone();
         self.run_async(move |t| {
+            engine.warm(t);
             let t0 = Instant::now();
             let dtype = tensor.dtype();
-            let mut stats =
-                ring::ring_all_reduce_t(t, dtype, tensor.as_bytes_mut(), op, tag, chunk_bytes())?;
+            let mut stats = algo::all_reduce_dispatch_t(
+                &engine,
+                t,
+                dtype,
+                tensor.as_bytes_mut(),
+                op,
+                tag,
+                chunk_bytes(),
+            )?;
             stats.seconds = t0.elapsed().as_secs_f64();
             stats.op = "all_reduce";
             stats.inflight_hw_bytes = t.inflight_high_water();
@@ -845,10 +908,12 @@ mod tests {
             hs.into_iter().map(|h| h.join().unwrap()).collect()
         });
         for st in stats {
-            // ring: 2*(w-1)/w * 4000 bytes ≈ 4000 for w=2
+            // Every family moves ~4000 bytes per rank at w=2 (ring:
+            // 2*(w-1)/w*n; doubling: one full-buffer exchange).
             assert!(st.bytes_sent >= 3900, "sent {}", st.bytes_sent);
             assert!(st.seconds >= 0.0);
             assert_eq!(st.op, "all_reduce");
+            assert!(!st.algo.is_empty(), "dispatcher must stamp the algorithm");
             assert!(st.copies > 0, "serialize/place copies must be counted");
             assert_eq!(st.inflight_hw_bytes, 0, "inproc has no writer queue");
         }
@@ -872,16 +937,19 @@ mod tests {
     fn merge_keeps_op_label() {
         let mut a = CommStats {
             op: "all_reduce",
+            algo: "doubling",
             bytes_sent: 10,
             ..Default::default()
         };
         let b = CommStats {
             op: "broadcast",
+            algo: "ring",
             bytes_sent: 5,
             ..Default::default()
         };
         a.merge(&b);
         assert_eq!(a.op, "all_reduce", "first label wins");
+        assert_eq!(a.algo, "doubling", "first algorithm label wins");
         assert_eq!(a.bytes_sent, 15);
 
         // Gauges merge by max, counters by sum.

@@ -65,12 +65,16 @@ pub fn ring_all_reduce_chunked(
         return Ok(stats);
     }
     let n = buf.len();
-    // Symmetric overflow guard (same bound on every rank, checked before
-    // any traffic): 2·(w-1) steps, each at most ceil(n/w) elements.
-    chunk::ensure_budget(
-        2 * (w as u64 - 1) * chunk::chunks_for(n.div_ceil(w) * 4, chunk_bytes),
+    // Symmetric namespace guard (same bound on every rank, computed
+    // before any traffic): 2·(w-1) steps, each at most ceil(n/w)
+    // elements — auto-grows the chunk size instead of failing.
+    let chunk_bytes = chunk::fit_chunk_bytes(
+        chunk_bytes,
+        4,
+        2 * (w - 1) * n.div_ceil(w),
+        2 * (w as u64 - 1),
         "ring all-reduce",
-    )?;
+    );
     let next = (rank + 1) % w;
     let prev = (rank + w - 1) % w;
     let mut send_tags = SubTags::new(tag);
@@ -129,11 +133,13 @@ pub fn ring_all_reduce_t(
     }
     let es = dtype.size_bytes();
     let n = wire.len() / es;
-    let stride = chunk::chunk_elems(es, chunk_bytes);
-    chunk::ensure_budget(
-        2 * (w as u64 - 1) * chunk::chunks_for_elems(n.div_ceil(w), stride),
+    let chunk_bytes = chunk::fit_chunk_bytes(
+        chunk_bytes,
+        es,
+        2 * (w - 1) * n.div_ceil(w),
+        2 * (w as u64 - 1),
         "ring all-reduce",
-    )?;
+    );
     let next = (rank + 1) % w;
     let prev = (rank + w - 1) % w;
     let mut send_tags = SubTags::new(tag);
@@ -213,11 +219,13 @@ pub fn ring_reduce_scatter_t(
     }
     let es = dtype.size_bytes();
     let n = wire.len() / es;
-    let stride = chunk::chunk_elems(es, chunk_bytes);
-    chunk::ensure_budget(
-        (w as u64 - 1) * chunk::chunks_for_elems(n.div_ceil(w), stride),
+    let chunk_bytes = chunk::fit_chunk_bytes(
+        chunk_bytes,
+        es,
+        (w - 1) * n.div_ceil(w),
+        w as u64 - 1,
         "ring reduce-scatter",
-    )?;
+    );
     let next = (rank + 1) % w;
     let prev = (rank + w - 1) % w;
     let mut send_tags = SubTags::new(tag);
@@ -279,11 +287,13 @@ pub fn ring_all_gather_into_t(
     if w == 1 || seg == 0 {
         return Ok(());
     }
-    let stride = chunk::chunk_elems(elem_bytes, chunk_bytes);
-    chunk::ensure_budget(
-        (w as u64 - 1) * chunk::chunks_for_elems(seg / elem_bytes.max(1), stride),
+    let chunk_bytes = chunk::fit_chunk_bytes(
+        chunk_bytes,
+        elem_bytes,
+        (w - 1) * (seg / elem_bytes.max(1)),
+        w as u64 - 1,
         "ring all-gather",
-    )?;
+    );
     let next = (rank + 1) % w;
     let prev = (rank + w - 1) % w;
     let mut send_tags = SubTags::new(tag);
@@ -341,10 +351,13 @@ pub fn ring_all_gather_chunked(
     if w == 1 || seg == 0 {
         return Ok((out, stats));
     }
-    chunk::ensure_budget(
-        (w as u64 - 1) * chunk::chunks_for(seg * 4, chunk_bytes),
+    let chunk_bytes = chunk::fit_chunk_bytes(
+        chunk_bytes,
+        4,
+        (w - 1) * seg,
+        w as u64 - 1,
         "ring all-gather",
-    )?;
+    );
     let next = (rank + 1) % w;
     let prev = (rank + w - 1) % w;
     let mut send_tags = SubTags::new(tag);
@@ -453,20 +466,31 @@ mod tests {
     }
 
     #[test]
-    fn chunk_budget_overflow_is_symmetric_error() {
+    fn chunk_budget_overflow_auto_grows() {
         // 4-byte chunks on a buffer needing >= 65536 sub-tags per link:
-        // every rank fails up front, no traffic, no deadlock.
+        // instead of the old hard error, every rank grows the effective
+        // chunk size identically (SPMD) and the collective completes
+        // with the right sums.
         let eps = InprocMesh::new(2);
-        std::thread::scope(|s| {
-            for e in &eps {
-                s.spawn(move || {
-                    let mut buf = vec![0.0_f32; 70_000];
-                    let err = ring_all_reduce_chunked(e, &mut buf, ReduceOp::Sum, 1 << 16, 4)
-                        .unwrap_err();
-                    assert!(err.to_string().contains("chunk sub-tags"), "{err}");
-                });
-            }
+        let n = 70_000;
+        let out: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let hs: Vec<_> = eps
+                .iter()
+                .map(|e| {
+                    s.spawn(move || {
+                        let mut buf: Vec<f32> =
+                            (0..n).map(|i| ((i % 5) * (e.rank() + 1)) as f32).collect();
+                        ring_all_reduce_chunked(e, &mut buf, ReduceOp::Sum, 1 << 16, 4).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
         });
+        let expect: Vec<f32> = (0..n).map(|i| ((i % 5) * 3) as f32).collect();
+        for o in out {
+            assert_eq!(o, expect);
+        }
     }
 
     #[test]

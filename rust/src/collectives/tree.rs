@@ -34,8 +34,9 @@ pub fn broadcast(t: &dyn Transport, buf: &mut [f32], root: usize, tag: u64) -> R
     if w == 1 {
         return Ok(stats);
     }
-    // One logical message per link; guard the per-link chunk namespace.
-    chunk::ensure_budget(chunk::chunks_for(buf.len() * 4, chunk_bytes), "broadcast")?;
+    // One logical message per link; grow the chunk size if the payload
+    // would exhaust the per-link chunk namespace.
+    let chunk_bytes = chunk::fit_chunk_bytes(chunk_bytes, 4, buf.len(), 1, "broadcast");
     let v = vrank(rank, root, w);
 
     // Receive once from parent (if not root).
@@ -92,7 +93,7 @@ pub fn reduce(
     if w == 1 {
         return Ok(stats);
     }
-    chunk::ensure_budget(chunk::chunks_for(buf.len() * 4, chunk_bytes), "reduce")?;
+    let chunk_bytes = chunk::fit_chunk_bytes(chunk_bytes, 4, buf.len(), 1, "reduce");
     let v = vrank(rank, root, w);
 
     // Mirror of broadcast: gather from children (low bits) then send to
@@ -135,7 +136,7 @@ pub fn reduce(
 }
 
 /// Dtype-generic binomial-tree broadcast over wire bytes (same
-/// structure as [`broadcast`]).
+/// structure as [`broadcast`]), at the configured chunk granularity.
 pub fn broadcast_t(
     t: &dyn Transport,
     elem_bytes: usize,
@@ -143,15 +144,25 @@ pub fn broadcast_t(
     root: usize,
     tag: u64,
 ) -> Result<CommStats> {
-    let chunk_bytes = chunk_bytes();
+    broadcast_t_chunked(t, elem_bytes, wire, root, tag, chunk_bytes())
+}
+
+/// [`broadcast_t`] at an explicit chunk granularity.
+pub fn broadcast_t_chunked(
+    t: &dyn Transport,
+    elem_bytes: usize,
+    wire: &mut [u8],
+    root: usize,
+    tag: u64,
+    chunk_bytes: usize,
+) -> Result<CommStats> {
     let (rank, w) = (t.rank(), t.world());
     let mut stats = CommStats::default();
     if w == 1 {
         return Ok(stats);
     }
     let elems = wire.len() / elem_bytes.max(1);
-    let stride = chunk::chunk_elems(elem_bytes, chunk_bytes);
-    chunk::ensure_budget(chunk::chunks_for_elems(elems, stride), "broadcast")?;
+    let chunk_bytes = chunk::fit_chunk_bytes(chunk_bytes, elem_bytes, elems, 1, "broadcast");
     let v = vrank(rank, root, w);
 
     if v != 0 {
@@ -193,7 +204,8 @@ pub fn broadcast_t(
 }
 
 /// Dtype-generic binomial-tree reduce into `root`'s buffer (non-root
-/// buffers end as partial-sum scratch, like [`reduce`]).
+/// buffers end as partial-sum scratch, like [`reduce`]), at the
+/// configured chunk granularity.
 pub fn reduce_t(
     t: &dyn Transport,
     dtype: DType,
@@ -202,15 +214,27 @@ pub fn reduce_t(
     root: usize,
     tag: u64,
 ) -> Result<CommStats> {
-    let chunk_bytes = chunk_bytes();
+    reduce_t_chunked(t, dtype, wire, op, root, tag, chunk_bytes())
+}
+
+/// [`reduce_t`] at an explicit chunk granularity.
+#[allow(clippy::too_many_arguments)]
+pub fn reduce_t_chunked(
+    t: &dyn Transport,
+    dtype: DType,
+    wire: &mut [u8],
+    op: ReduceOp,
+    root: usize,
+    tag: u64,
+    chunk_bytes: usize,
+) -> Result<CommStats> {
     let (rank, w) = (t.rank(), t.world());
     let mut stats = CommStats::default();
     if w == 1 {
         return Ok(stats);
     }
     let es = dtype.size_bytes();
-    let stride = chunk::chunk_elems(es, chunk_bytes);
-    chunk::ensure_budget(chunk::chunks_for_elems(wire.len() / es, stride), "reduce")?;
+    let chunk_bytes = chunk::fit_chunk_bytes(chunk_bytes, es, wire.len() / es, 1, "reduce");
     let v = vrank(rank, root, w);
 
     let lowbit = if v == 0 {

@@ -81,6 +81,12 @@ fn apply_json(o: &mut TrainOptions, v: &Json) -> Result<()> {
     if let Some(x) = v.get("grad_sync").and_then(Json::as_str) {
         o.grad_sync = crate::ddp::GradSyncMode::parse(x)?;
     }
+    if let Some(x) = v.get("algo").and_then(Json::as_str) {
+        // Validate eagerly (same policy parser the runtime uses) so a
+        // typo'd algorithm name fails at config load, not mid-run.
+        x.parse::<crate::collectives::AlgoPolicy>()?;
+        o.algo = x.to_string();
+    }
     if let Some(x) = v.get("log_every").and_then(Json::as_usize) {
         o.log_every = x;
     }
@@ -135,6 +141,7 @@ pub fn apply_cli_overrides(o: &mut TrainOptions, args: &Args) -> Result<()> {
         "seed",
         "bucket_bytes",
         "grad_sync",
+        "algo",
         "log_every",
         "adapt_every",
         "adapt_ema_alpha",
@@ -181,6 +188,18 @@ pub fn load_train_options(args: &Args) -> Result<TrainOptions> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn algo_knob_parses_and_rejects_garbage() {
+        let o = train_options_from_json(r#"{"algo": "doubling"}"#).unwrap();
+        assert_eq!(o.algo, "doubling");
+        assert_eq!(TrainOptions::default().algo, "adaptive");
+        assert!(train_options_from_json(r#"{"algo": "bogus"}"#).is_err());
+        let mut o = TrainOptions::default();
+        let args = Args::parse_from(vec!["train".into(), "--algo".into(), "ring".into()]);
+        apply_cli_overrides(&mut o, &args).unwrap();
+        assert_eq!(o.algo, "ring");
+    }
 
     #[test]
     fn json_config_overrides_defaults() {

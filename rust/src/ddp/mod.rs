@@ -27,10 +27,11 @@ pub mod bucket;
 
 pub use bucket::Bucketizer;
 
+use std::collections::BTreeMap;
 use std::ops::Range;
 use std::time::Instant;
 
-use crate::collectives::{ring, ReduceOp, WorkHandle};
+use crate::collectives::{algo, ring, ReduceOp, WorkHandle};
 use crate::comm::buf::FloatPool;
 use crate::comm::tensor::CommTensor;
 use crate::group::{GroupCommReport, ProcessGroup};
@@ -97,6 +98,11 @@ pub struct SyncReport {
     pub copies: u64,
     /// High-water transport writer-queue bytes (gauge, max over buckets).
     pub inflight_hw_bytes: u64,
+    /// Count of collective stages served per algorithm label
+    /// (`"ring"`, `"doubling+eager"`, …) — the size-adaptive engine's
+    /// choices, surfaced through `StepMetrics`/`Accumulator` into the
+    /// report JSON.
+    pub algo_ops: BTreeMap<&'static str, u64>,
 }
 
 impl SyncReport {
@@ -113,6 +119,11 @@ impl SyncReport {
             .inflight_hw_bytes
             .max(r.intra.inflight_hw_bytes)
             .max(r.inter.inflight_hw_bytes);
+        for label in [r.intra.algo, r.inter.algo] {
+            if !label.is_empty() {
+                *self.algo_ops.entry(label).or_default() += 1;
+            }
+        }
     }
 }
 
@@ -152,9 +163,37 @@ impl<'pg> DdpEngine<'pg> {
         self.pg.broadcast(params, 0)
     }
 
+    /// The bucket ranges one gradient sync actually issues: the
+    /// bucketizer's fixed-size ranges, with runs of consecutive
+    /// sub-threshold buckets coalesced into one flat fused collective of
+    /// at most `eager_bytes` — gradient-tail fragments ride the
+    /// small-message fast path as a single op instead of several tiny
+    /// ones. Both the pipelined and blocking sync paths use these
+    /// ranges, so they stay bit-identical.
+    pub fn sync_ranges(&self, n: usize) -> Vec<Range<usize>> {
+        let eager = algo::eager_bytes();
+        let mut out: Vec<Range<usize>> = Vec::new();
+        let mut last_fusable = false;
+        for r in self.bucketizer.ranges(n) {
+            let small = eager > 0 && r.len() * 4 < eager;
+            if small && last_fusable {
+                let last = out.last_mut().expect("fusable run is non-empty");
+                if (last.len() + r.len()) * 4 <= eager {
+                    last.end = r.end;
+                    continue;
+                }
+            }
+            last_fusable = small;
+            out.push(r);
+        }
+        out
+    }
+
     /// Issue the bucketed all-reduce (SUM) of the flat gradient buffer.
     /// Every bucket goes out immediately; the process group pipelines
-    /// them. Pair with [`DdpEngine::wait_grad_sync`].
+    /// them. Sub-threshold buckets are coalesced first (see
+    /// [`DdpEngine::sync_ranges`]). Pair with
+    /// [`DdpEngine::wait_grad_sync`].
     ///
     /// Bucket views are copied out of the flat buffer into pooled
     /// hand-off vectors ([`FloatPool`]) — the one unavoidable copy of the
@@ -162,7 +201,7 @@ impl<'pg> DdpEngine<'pg> {
     /// allocate nothing.
     pub fn issue_grad_sync(&self, grads: &[f32]) -> GradSync {
         let mut parts = Vec::new();
-        for range in self.bucketizer.ranges(grads.len()) {
+        for range in self.sync_ranges(grads.len()) {
             let mut buf = FloatPool::global().take(range.len());
             buf.copy_from_slice(&grads[range.clone()]);
             parts.push((range, self.pg.all_reduce_vec_async(buf, ReduceOp::Sum)));
@@ -202,7 +241,7 @@ impl<'pg> DdpEngine<'pg> {
     pub fn all_reduce_grads_blocking(&self, grads: &mut [f32]) -> Result<SyncReport> {
         let t0 = Instant::now();
         let mut report = SyncReport::default();
-        for range in self.bucketizer.ranges(grads.len()) {
+        for range in self.sync_ranges(grads.len()) {
             let r = self.pg.all_reduce(&mut grads[range], ReduceOp::Sum)?;
             report.absorb(&r);
         }
@@ -485,6 +524,55 @@ mod tests {
             hs.into_iter().map(|h| h.join().unwrap()).collect()
         });
         assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn sub_threshold_buckets_coalesce() {
+        let devices = parse_cluster("1G+1M").unwrap();
+        let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+        // 1 KiB buckets sit under the default 4 KiB eager threshold and
+        // fuse in groups of four (4 x 1 KiB = the threshold).
+        let ddp = DdpEngine::new(handles.groups[0].as_ref(), 1024);
+        let n = 3 * 1024; // 12 KiB of f32 grads -> 12 raw buckets
+        assert_eq!(
+            ddp.sync_ranges(n),
+            vec![0..1024, 1024..2048, 2048..3072],
+            "sub-threshold buckets fuse up to the eager size"
+        );
+        // Threshold-sized buckets (exactly eager bytes) must NOT fuse —
+        // the rule is strictly-below, so default-configured tests and
+        // benches keep their bucket structure.
+        let ddp4k = DdpEngine::new(handles.groups[0].as_ref(), 4096);
+        assert_eq!(ddp4k.sync_ranges(n), ddp4k.bucketizer.ranges(n));
+        // A small tail after a full bucket stays a separate range (the
+        // preceding bucket is not fusable).
+        assert_eq!(ddp4k.sync_ranges(1100), vec![0..1024, 1024..1100]);
+    }
+
+    #[test]
+    fn sync_report_carries_algo_labels() {
+        let devices = parse_cluster("1G+1M").unwrap();
+        let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+        let reports: Vec<SyncReport> = std::thread::scope(|s| {
+            let hs: Vec<_> = handles
+                .groups
+                .iter()
+                .map(|g| {
+                    s.spawn(move || {
+                        let ddp = DdpEngine::new(g.as_ref(), 1 << 20);
+                        let mut grads = vec![1.0_f32; 512];
+                        ddp.all_reduce_grads(&mut grads).unwrap()
+                    })
+                })
+                .collect();
+            hs.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in reports {
+            assert!(
+                !r.algo_ops.is_empty(),
+                "sync must record which algorithms served it"
+            );
+        }
     }
 
     #[test]

@@ -789,9 +789,21 @@ impl ProcessGroup for ProcessGroupKaiTian {
             return handle;
         }
 
-        // Step 3: heterogeneous → hierarchical orchestration. f32 tensors
-        // stream through the pipelined 3-stage chunk path; other dtypes
-        // run the identical chunk walk serially on the intra thread.
+        // Step 3: heterogeneous → hierarchical orchestration. Payloads
+        // at or below the eager threshold skip the 3-thread chunk
+        // pipeline (whose cross-thread hand-offs would dominate at
+        // control-plane sizes) and run the identical single-chunk
+        // hierarchy as one serial job — same chunk boundaries and tag
+        // sequence, so bitwise parity with the pipelined and blocking
+        // paths is preserved. Each stage still selects its own
+        // algorithm: the vendor and relay backends carry independent
+        // AlgoEngines tuned to their transports.
+        if crate::collectives::algo::is_eager(tensor.byte_len()) {
+            return self.hetero_all_reduce_bytes_async(tensor, op);
+        }
+        // f32 tensors stream through the pipelined 3-stage chunk path;
+        // other dtypes run the identical chunk walk serially on the
+        // intra thread.
         if tensor.dtype() == DType::F32 {
             match tensor.into_vec() {
                 Ok(buf) => self

@@ -35,6 +35,9 @@ pub struct StepMetrics {
     pub pool_hits: u64,
     /// Payload memcpy events inside the step's collectives.
     pub copies: u64,
+    /// Collective stages served per algorithm label (`"ring"`,
+    /// `"doubling+eager"`, …) — the size-adaptive engine's choices.
+    pub algo_ops: BTreeMap<&'static str, u64>,
 }
 
 impl StepMetrics {
@@ -50,6 +53,9 @@ impl StepMetrics {
         self.alloc_bytes += sync.alloc_bytes;
         self.pool_hits += sync.pool_hits;
         self.copies += sync.copies;
+        for (&label, &count) in &sync.algo_ops {
+            *self.algo_ops.entry(label).or_default() += count;
+        }
     }
 
     /// Critical-path seconds of the step. Charges the *exposed* comm time
@@ -81,6 +87,8 @@ pub struct Accumulator {
     pub pool_hits: u64,
     pub copies: u64,
     pub samples: usize,
+    /// Collective stages served per algorithm label across all steps.
+    pub algo_ops: BTreeMap<&'static str, u64>,
 }
 
 impl Accumulator {
@@ -97,6 +105,9 @@ impl Accumulator {
         self.pool_hits += m.pool_hits;
         self.copies += m.copies;
         self.samples += m.batch;
+        for (&label, &count) in &m.algo_ops {
+            *self.algo_ops.entry(label).or_default() += count;
+        }
     }
 
     /// Critical-path seconds (see [`StepMetrics::total_s`]): exposed comm
@@ -119,6 +130,12 @@ impl Accumulator {
     }
 
     pub fn to_json(&self) -> Json {
+        let algo_ops = Json::Obj(
+            self.algo_ops
+                .iter()
+                .map(|(&label, &count)| (label.to_string(), Json::num(count as f64)))
+                .collect(),
+        );
         Json::obj(vec![
             ("steps", Json::num(self.steps as f64)),
             ("compute_s", Json::num(self.compute_s)),
@@ -133,6 +150,7 @@ impl Accumulator {
             ("copies", Json::num(self.copies as f64)),
             ("samples", Json::num(self.samples as f64)),
             ("throughput_sps", Json::num(self.throughput())),
+            ("algo_ops", algo_ops),
         ])
     }
 }
@@ -321,6 +339,7 @@ mod tests {
             alloc_bytes: 4096,
             pool_hits: 2,
             copies: 6,
+            algo_ops: BTreeMap::from([("ring", 3_u64), ("doubling+eager", 1)]),
         });
         acc.add(&StepMetrics {
             batch: 64,
@@ -335,12 +354,22 @@ mod tests {
             alloc_bytes: 0,
             pool_hits: 8,
             copies: 6,
+            algo_ops: BTreeMap::from([("ring", 2_u64)]),
         });
         assert_eq!(acc.steps, 2);
         assert_eq!(acc.samples, 128);
         assert_eq!(acc.alloc_bytes, 4096);
         assert_eq!(acc.pool_hits, 10);
         assert_eq!(acc.copies, 12);
+        assert_eq!(acc.algo_ops.get("ring"), Some(&5));
+        assert_eq!(acc.algo_ops.get("doubling+eager"), Some(&1));
+        let json = Json::parse(&acc.to_json().to_string()).unwrap();
+        let algo_ops = json.get("algo_ops").expect("algo_ops in report JSON");
+        assert_eq!(
+            algo_ops.get("ring").and_then(Json::as_f64),
+            Some(5.0),
+            "per-algorithm op counts must survive the JSON round trip"
+        );
         // total_s charges the exposed comm (0.035), not the busy sum (0.04).
         assert!((acc.total_s() - 0.255).abs() < 1e-12);
         assert!((acc.comm_exposed_s - 0.035).abs() < 1e-12);

@@ -109,6 +109,120 @@ impl Default for CommModel {
     }
 }
 
+/// A single link's alpha–beta parameters — the model the runtime
+/// algorithm selector (`collectives::algo`) consults per op.
+///
+/// `CommModel` above is the *calibrated testbed* model (paper anchors);
+/// `AlphaBeta` is the *generic* per-communicator instance of the same
+/// α + n/β cost form, seeded either from those defaults (by transport
+/// kind) or from a live microprobe at group build time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AlphaBeta {
+    /// Per-message latency in seconds (the α term).
+    pub alpha_s: f64,
+    /// Effective link bandwidth in bytes/second (the β term).
+    pub bw_bps: f64,
+}
+
+impl AlphaBeta {
+    /// Paper-calibrated defaults for a transport kind: the TCP-class
+    /// host path gets the Gloo-hop parameters, everything else the
+    /// vendor (PCIe-class) ring-step parameters.
+    pub fn for_transport_kind(kind: &str) -> Self {
+        let m = CommModel::paper_default();
+        if kind == "tcp" {
+            Self {
+                alpha_s: m.host_alpha,
+                bw_bps: m.host_bw,
+            }
+        } else {
+            Self {
+                alpha_s: m.nccl_alpha,
+                bw_bps: m.vendor_bw,
+            }
+        }
+    }
+
+    /// Clamp probed values into a sane range (a microprobe on a noisy
+    /// host can return near-zero or negative deltas).
+    pub fn clamped(self) -> Self {
+        Self {
+            alpha_s: self.alpha_s.clamp(1e-9, 1.0),
+            bw_bps: self.bw_bps.clamp(1e6, 1e13),
+        }
+    }
+
+    fn log2_rounds(world: usize) -> f64 {
+        (world as f64).log2().ceil()
+    }
+
+    /// Extra cost of folding the non-power-of-two remainder ranks in
+    /// (pre-phase) and copying the result back out (post-phase): two
+    /// full-buffer messages when `world` is not a power of two.
+    fn non_pow2_extra(&self, bytes: usize, world: usize) -> f64 {
+        if world.is_power_of_two() {
+            0.0
+        } else {
+            2.0 * (self.alpha_s + bytes as f64 / self.bw_bps)
+        }
+    }
+
+    /// Ring all-reduce: 2(w−1) steps of (n/w)/β + α — bandwidth-optimal,
+    /// latency-pessimal.
+    pub fn ring_all_reduce_s(&self, bytes: usize, world: usize) -> f64 {
+        if world <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let seg = bytes as f64 / world as f64;
+        2.0 * (world - 1) as f64 * (seg / self.bw_bps + self.alpha_s)
+    }
+
+    /// Recursive-doubling all-reduce: ⌈log2 p⌉ full-buffer exchanges
+    /// (p = largest power of two ≤ w) plus the non-power-of-two fold —
+    /// latency-optimal, bandwidth-pessimal.
+    pub fn doubling_all_reduce_s(&self, bytes: usize, world: usize) -> f64 {
+        if world <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let p = prev_power_of_two(world);
+        Self::log2_rounds(p) * (self.alpha_s + bytes as f64 / self.bw_bps)
+            + self.non_pow2_extra(bytes, world)
+    }
+
+    /// Halving-doubling all-reduce (recursive-halving reduce-scatter +
+    /// recursive-doubling all-gather): 2·log2 p rounds moving
+    /// 2·(p−1)/p·n bytes total — bandwidth-optimal with log latency.
+    pub fn halving_doubling_all_reduce_s(&self, bytes: usize, world: usize) -> f64 {
+        if world <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let p = prev_power_of_two(world) as f64;
+        2.0 * Self::log2_rounds(p as usize) * self.alpha_s
+            + 2.0 * (p - 1.0) / p * bytes as f64 / self.bw_bps
+            + self.non_pow2_extra(bytes, world)
+    }
+
+    /// Tree all-reduce (binomial reduce to root + binomial broadcast):
+    /// 2·⌈log2 w⌉ full-buffer rounds.
+    pub fn tree_all_reduce_s(&self, bytes: usize, world: usize) -> f64 {
+        if world <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        2.0 * Self::log2_rounds(world) * (self.alpha_s + bytes as f64 / self.bw_bps)
+    }
+}
+
+/// Largest power of two ≤ `n` (n ≥ 1).
+pub fn prev_power_of_two(n: usize) -> usize {
+    debug_assert!(n >= 1);
+    let np = n.next_power_of_two();
+    if np == n {
+        n
+    } else {
+        np / 2
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,6 +266,60 @@ mod tests {
             relay > 2.0 * vendor,
             "relay {relay} should dwarf vendor {vendor}"
         );
+    }
+
+    #[test]
+    fn prev_power_of_two_values() {
+        for (n, p) in [(1, 1), (2, 2), (3, 2), (4, 4), (5, 4), (7, 4), (8, 8), (9, 8)] {
+            assert_eq!(prev_power_of_two(n), p, "n={n}");
+        }
+    }
+
+    #[test]
+    fn alpha_beta_small_messages_prefer_doubling() {
+        // At control-plane sizes the latency term dominates: doubling's
+        // log2 w rounds must beat ring's 2(w-1).
+        let ab = AlphaBeta::for_transport_kind("tcp");
+        for w in [2, 3, 4, 8] {
+            let n = 1 << 10;
+            assert!(
+                ab.doubling_all_reduce_s(n, w) < ab.ring_all_reduce_s(n, w),
+                "w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn alpha_beta_large_messages_prefer_bandwidth_optimal() {
+        // At gradient-bucket sizes the bandwidth term dominates: the
+        // bandwidth-optimal families must beat full-buffer doubling for
+        // worlds above 2 (at w=2 doubling degenerates to the same bytes
+        // with fewer rounds, so it legitimately wins there).
+        let ab = AlphaBeta::for_transport_kind("tcp");
+        for w in [4_usize, 8] {
+            let n = 64 << 20;
+            let doubling = ab.doubling_all_reduce_s(n, w);
+            assert!(ab.ring_all_reduce_s(n, w) < doubling, "w={w} ring");
+            assert!(
+                ab.halving_doubling_all_reduce_s(n, w) < doubling,
+                "w={w} halving-doubling"
+            );
+        }
+    }
+
+    #[test]
+    fn alpha_beta_zero_cases() {
+        let ab = AlphaBeta::for_transport_kind("inproc");
+        assert_eq!(ab.ring_all_reduce_s(0, 4), 0.0);
+        assert_eq!(ab.doubling_all_reduce_s(1024, 1), 0.0);
+        assert_eq!(ab.halving_doubling_all_reduce_s(0, 1), 0.0);
+        assert_eq!(ab.tree_all_reduce_s(1024, 1), 0.0);
+        let clamped = AlphaBeta {
+            alpha_s: -1.0,
+            bw_bps: 0.0,
+        }
+        .clamped();
+        assert!(clamped.alpha_s > 0.0 && clamped.bw_bps > 0.0);
     }
 
     #[test]

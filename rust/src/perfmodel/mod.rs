@@ -20,7 +20,7 @@
 
 pub mod comm;
 
-pub use comm::CommModel;
+pub use comm::{AlphaBeta, CommModel};
 
 use crate::device::{DeviceSpec, SpeedModel};
 use crate::group::GroupMode;

@@ -114,6 +114,10 @@ struct Shared {
 
 /// Run a full training job; blocks until done.
 pub fn train(engine: Arc<Engine>, opts: &TrainOptions) -> Result<TrainReport> {
+    // Install the collective-algorithm policy before any communicator
+    // issues traffic (`--algo` / config `algo`; `adaptive` is the
+    // size-adaptive default).
+    crate::collectives::algo::set_policy_str(&opts.algo)?;
     let mut devices = parse_cluster(&opts.cluster)?;
     // Install runtime load perturbations (dynamic-load scenarios); the
     // throttle consults each device's profile per step.

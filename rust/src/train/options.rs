@@ -51,6 +51,12 @@ pub struct TrainOptions {
     /// ZeRO-1-style sharded reduce-scatter + parameter all-gather
     /// (`--grad_sync={allreduce,sharded}`).
     pub grad_sync: GradSyncMode,
+    /// Collective algorithm policy
+    /// (`--algo={adaptive,ring,doubling,halving-doubling,tree}`):
+    /// `adaptive` (default) picks per message size via the α–β engine;
+    /// anything else forces one algorithm everywhere (same effect as
+    /// `KAITIAN_ALGO`).
+    pub algo: String,
     /// Print a progress line every N steps (0 = silent).
     pub log_every: usize,
     /// Online load adaptation (paper §III-C dynamic balancing): every
@@ -108,6 +114,7 @@ impl Default for TrainOptions {
             profile: true,
             bucket_bytes: 25 << 20, // PyTorch DDP default bucket
             grad_sync: GradSyncMode::AllReduce,
+            algo: "adaptive".into(),
             log_every: 0,
             online_adapt: false,
             adapt_every: 10,
