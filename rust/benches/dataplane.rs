@@ -19,13 +19,22 @@
 //! dispatch (`fold_bytes_via_apply`) — the fold is the single hottest
 //! loop of gradient aggregation, so its win lands in
 //! `results/dataplane.json` next to the allocation numbers.
+//!
+//! Many-flows contention section (ISSUE 6): thousands of concurrent
+//! (peer, tag) flows hammered by 8–64 threads through one shared
+//! mailbox, comparing the lock-free slab mailbox against a faithful
+//! in-file copy of the pre-ISSUE-6 mutex-sharded design. Gate: the slab
+//! mailbox must deliver >= 1.3x the mutex baseline's throughput at
+//! 32 threads x >= 1k flows.
 
-use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use kaitian::collectives::{Communicator, ReduceOp};
-use kaitian::comm::buf::{BufPool, FloatPool};
+use kaitian::comm::buf::{Buf, BufPool, FloatPool};
 use kaitian::metrics::MarkdownTable;
+use kaitian::transport::mailbox::Mailbox;
 use kaitian::transport::{InprocMesh, TcpMesh};
 use kaitian::util::json::Json;
 
@@ -68,6 +77,199 @@ fn measure(comms: &[Communicator], elems: usize, iters: usize) -> (f64, f64, f64
     let copies = results.iter().map(|r| r.2).sum::<u64>() as f64 / n;
     let wall = results.iter().map(|r| r.3).fold(0.0, f64::max) / iters as f64;
     (alloc, hits, copies, wall)
+}
+
+/// The minimal surface both mailbox generations share, so one driver can
+/// time them against each other.
+trait FlowMailbox: Sync {
+    fn push(&self, peer: usize, tag: u64, data: Buf);
+    fn pop(&self, peer: usize, tag: u64, timeout: Duration) -> kaitian::Result<Buf>;
+}
+
+impl FlowMailbox for Mailbox {
+    fn push(&self, peer: usize, tag: u64, data: Buf) {
+        Mailbox::push(self, peer, tag, data)
+    }
+    fn pop(&self, peer: usize, tag: u64, timeout: Duration) -> kaitian::Result<Buf> {
+        Mailbox::pop(self, peer, tag, timeout)
+    }
+}
+
+/// Faithful copy of the pre-ISSUE-6 mailbox hot path: sharded
+/// `Mutex<HashMap>` flow tables with a mutex + condvar per flow, the
+/// shard lock held across every push, a mutex acquisition on every pop
+/// spin, and drained flows removed under the shard lock. This is the
+/// baseline the lock-free slab mailbox is gated against.
+struct MutexMailbox {
+    shards: Vec<Mutex<HashMap<(usize, u64), Arc<MutexSlot>>>>,
+}
+
+struct MutexSlot {
+    queue: Mutex<VecDeque<Buf>>,
+    cv: Condvar,
+}
+
+impl MutexMailbox {
+    const SHARDS: usize = 16;
+
+    fn new() -> Self {
+        Self {
+            shards: (0..Self::SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn shard_of(peer: usize, tag: u64) -> usize {
+        // Same avalanche the real mailbox uses, so the comparison is
+        // shard-for-shard fair.
+        let h = (peer as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(tag.wrapping_mul(0xD1B5_4A32_D192_ED03));
+        ((h >> 57) as usize) % Self::SHARDS
+    }
+
+    fn slot(&self, peer: usize, tag: u64) -> Arc<MutexSlot> {
+        let mut slots = self.shards[Self::shard_of(peer, tag)].lock().unwrap();
+        slots
+            .entry((peer, tag))
+            .or_insert_with(|| {
+                Arc::new(MutexSlot {
+                    queue: Mutex::new(VecDeque::new()),
+                    cv: Condvar::new(),
+                })
+            })
+            .clone()
+    }
+
+    fn try_remove(&self, peer: usize, tag: u64, ours: &Arc<MutexSlot>) {
+        let mut slots = self.shards[Self::shard_of(peer, tag)].lock().unwrap();
+        let removable = match slots.get(&(peer, tag)) {
+            Some(cur) => {
+                Arc::ptr_eq(cur, ours)
+                    && Arc::strong_count(cur) <= 2
+                    && cur.queue.lock().unwrap().is_empty()
+            }
+            None => false,
+        };
+        if removable {
+            slots.remove(&(peer, tag));
+        }
+    }
+}
+
+impl FlowMailbox for MutexMailbox {
+    fn push(&self, peer: usize, tag: u64, data: Buf) {
+        let shard = &self.shards[Self::shard_of(peer, tag)];
+        let mut slots = shard.lock().unwrap();
+        let slot = slots
+            .entry((peer, tag))
+            .or_insert_with(|| {
+                Arc::new(MutexSlot {
+                    queue: Mutex::new(VecDeque::new()),
+                    cv: Condvar::new(),
+                })
+            })
+            .clone();
+        slot.queue.lock().unwrap().push_back(data);
+        drop(slots);
+        slot.cv.notify_one();
+    }
+
+    fn pop(&self, peer: usize, tag: u64, timeout: Duration) -> kaitian::Result<Buf> {
+        let slot = self.slot(peer, tag);
+        const SPIN_BUDGET: Duration = Duration::from_micros(40);
+        let spin_start = Instant::now();
+        while spin_start.elapsed() < SPIN_BUDGET {
+            let mut q = slot.queue.lock().unwrap();
+            if let Some(msg) = q.pop_front() {
+                let drained = q.is_empty();
+                drop(q);
+                if drained {
+                    self.try_remove(peer, tag, &slot);
+                }
+                return Ok(msg);
+            }
+            drop(q);
+            std::hint::spin_loop();
+        }
+        let deadline = Instant::now() + timeout;
+        let mut q = slot.queue.lock().unwrap();
+        loop {
+            if let Some(msg) = q.pop_front() {
+                let drained = q.is_empty();
+                drop(q);
+                if drained {
+                    self.try_remove(peer, tag, &slot);
+                }
+                return Ok(msg);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                anyhow::bail!("mutex mailbox recv timeout (peer={peer}, tag={tag})");
+            }
+            let (guard, _) = slot.cv.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+}
+
+/// One many-flows trial. `threads` workers, each simultaneously a
+/// producer and a consumer, hammer one shared mailbox carrying `flows`
+/// distinct (peer, tag) flows: thread `c` consumes flows with
+/// `f % threads == c` (their producer — and wire `peer` — is thread
+/// `(c + 1) % threads`). Per round every thread pushes all the flows it
+/// produces, *then* pops all the flows it consumes; pushes never block,
+/// so the schedule is deadlock-free under any interleaving. Payloads are
+/// 16 bytes carrying a send timestamp for the push→pop latency tail.
+/// Returns (msgs_per_s, p99_us).
+fn many_flows_trial(
+    mb: &dyn FlowMailbox,
+    threads: usize,
+    flows: usize,
+    rounds: usize,
+) -> (f64, f64) {
+    let epoch = Instant::now();
+    let barrier = Barrier::new(threads);
+    let results: Vec<(Vec<u64>, f64)> = std::thread::scope(|s| {
+        let hs: Vec<_> = (0..threads)
+            .map(|me| {
+                let barrier = &barrier;
+                s.spawn(move || {
+                    let produce: Vec<u64> = (0..flows as u64)
+                        .filter(|f| (*f as usize) % threads == (me + threads - 1) % threads)
+                        .collect();
+                    let consume: Vec<u64> = (0..flows as u64)
+                        .filter(|f| (*f as usize) % threads == me)
+                        .collect();
+                    let my_peer = (me + 1) % threads;
+                    let mut lats = Vec::with_capacity(consume.len() * rounds);
+                    barrier.wait();
+                    let t0 = Instant::now();
+                    for _ in 0..rounds {
+                        for &f in &produce {
+                            let ns = epoch.elapsed().as_nanos() as u64;
+                            let mut payload = [0_u8; 16];
+                            payload[..8].copy_from_slice(&ns.to_le_bytes());
+                            mb.push(me, f, Buf::copy_from_slice(&payload));
+                        }
+                        for &f in &consume {
+                            let msg = mb
+                                .pop(my_peer, f, Duration::from_secs(30))
+                                .expect("many-flows pop");
+                            let sent = u64::from_le_bytes(msg[..8].try_into().unwrap());
+                            lats.push((epoch.elapsed().as_nanos() as u64).saturating_sub(sent));
+                        }
+                    }
+                    (lats, t0.elapsed().as_secs_f64())
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = results.iter().map(|r| r.1).fold(0.0, f64::max);
+    let mut lats: Vec<u64> = results.into_iter().flat_map(|r| r.0).collect();
+    lats.sort_unstable();
+    let p99 = lats[(lats.len() * 99 / 100).min(lats.len() - 1)] as f64 / 1000.0;
+    ((flows * rounds) as f64 / wall.max(1e-9), p99)
 }
 
 fn inproc_comms(world: usize) -> Vec<Communicator> {
@@ -198,6 +400,78 @@ fn main() -> kaitian::Result<()> {
                 ("speedup", Json::num(speedup)),
             ]),
         );
+    }
+
+    // --- many flows: lock-free slab mailbox vs mutex-sharded baseline
+    // (ISSUE 6 tentpole gate) -----------------------------------------
+    {
+        let mut mf_table = MarkdownTable::new(&[
+            "threads",
+            "flows",
+            "mutex msg/s",
+            "slab msg/s",
+            "speedup",
+            "mutex p99",
+            "slab p99",
+        ]);
+        let cases: &[(usize, usize)] = if quick {
+            &[(8, 1024), (32, 2048)]
+        } else {
+            &[(8, 1024), (16, 2048), (32, 2048), (64, 8192)]
+        };
+        // Best-of-N trials: contention benches are the noisiest kind on
+        // shared CI runners, and the gate below is a hard assert.
+        let trials = 2;
+        for &(threads, flows) in cases {
+            let msg_budget = if quick { 8_192 } else { 49_152 };
+            let rounds = (msg_budget / flows).max(4);
+            let (mut mutex_tp, mut mutex_p99) = (0.0_f64, f64::INFINITY);
+            let (mut slab_tp, mut slab_p99) = (0.0_f64, f64::INFINITY);
+            for _ in 0..trials {
+                let mb = MutexMailbox::new();
+                let (tp, p99) = many_flows_trial(&mb, threads, flows, rounds);
+                mutex_tp = mutex_tp.max(tp);
+                mutex_p99 = mutex_p99.min(p99);
+                let mb = Mailbox::new();
+                let (tp, p99) = many_flows_trial(&mb, threads, flows, rounds);
+                slab_tp = slab_tp.max(tp);
+                slab_p99 = slab_p99.min(p99);
+            }
+            let speedup = slab_tp / mutex_tp.max(1e-9);
+            mf_table.row(vec![
+                threads.to_string(),
+                flows.to_string(),
+                format!("{:.2}M", mutex_tp / 1e6),
+                format!("{:.2}M", slab_tp / 1e6),
+                format!("{speedup:.2}x"),
+                format!("{mutex_p99:.1} us"),
+                format!("{slab_p99:.1} us"),
+            ]);
+            json.insert(
+                format!("many_flows_t{threads}_f{flows}"),
+                Json::obj(vec![
+                    ("threads", Json::num(threads as f64)),
+                    ("flows", Json::num(flows as f64)),
+                    ("mutex_msgs_per_s", Json::num(mutex_tp)),
+                    ("slab_msgs_per_s", Json::num(slab_tp)),
+                    ("speedup", Json::num(speedup)),
+                    ("mutex_p99_us", Json::num(mutex_p99)),
+                    ("slab_p99_us", Json::num(slab_p99)),
+                ]),
+            );
+            // Acceptance gate (ISSUE 6): the slab mailbox must beat the
+            // mutex baseline by >= 30% at 32 threads x >= 1k flows.
+            if threads == 32 && flows >= 1024 {
+                assert!(
+                    speedup >= 1.3,
+                    "many-flows t{threads} f{flows}: slab mailbox must deliver >= 1.3x the \
+                     mutex baseline (mutex {mutex_tp:.0} msg/s -> slab {slab_tp:.0} msg/s, \
+                     {speedup:.2}x)"
+                );
+            }
+        }
+        println!("== many flows: mutex-sharded mailbox vs lock-free slab ==\n");
+        println!("{}", mf_table.render());
     }
 
     let pool_stats = BufPool::global().stats();

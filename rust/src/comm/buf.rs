@@ -14,12 +14,13 @@
 //! [`FloatPool`] is the same idea for the `Vec<f32>` staging buffers the
 //! host relay and the DDP bucketizer churn through.
 
-use std::cell::Cell;
 use std::ops::Deref;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::sync::{Arc, OnceLock, Weak};
 
-/// Shards per size class: spreads free-list traffic across locks.
+use crate::comm::slab::{thread_shard, TaggedStack};
+
+/// Shards per size class: spreads free-list traffic across stacks.
 const SHARDS_PER_CLASS: usize = 8;
 /// Free buffers kept per shard per class (bounds pooled memory).
 const MAX_FREE_PER_SHARD: usize = 8;
@@ -60,21 +61,10 @@ pub fn set_chunk_bytes(bytes: usize) {
     CHUNK_BYTES.store(round_chunk(bytes), Ordering::Relaxed);
 }
 
-/// Stable per-thread shard index (round-robin assignment on first use).
+/// Stable per-thread shard index (round-robin assignment on first use,
+/// shared with the slab arenas so affinity lines up across structures).
 fn shard_index() -> usize {
-    static NEXT: AtomicUsize = AtomicUsize::new(0);
-    thread_local! {
-        static SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
-    }
-    SHARD.with(|s| {
-        let v = s.get();
-        if v != usize::MAX {
-            return v;
-        }
-        let v = NEXT.fetch_add(1, Ordering::Relaxed) % SHARDS_PER_CLASS;
-        s.set(v);
-        v
-    })
+    thread_shard(SHARDS_PER_CLASS)
 }
 
 /// Counters exposed by both pools (fresh allocations vs. reuse).
@@ -95,10 +85,12 @@ pub struct PoolStats {
 /// `1 << min_shift` and `1 << max_shift` *elements*; larger requests
 /// fall through to plain allocation.
 struct PoolCore<T> {
-    /// `classes * SHARDS_PER_CLASS` free lists; vectors keep their stale
-    /// (initialized) contents so a take only writes the length delta —
-    /// callers fully overwrite what they take.
-    free: Vec<Mutex<Vec<Vec<T>>>>,
+    /// `classes * SHARDS_PER_CLASS` free lists — lock-free tagged
+    /// Treiber stacks (ISSUE 6), each bounded at [`MAX_FREE_PER_SHARD`]
+    /// by construction. Vectors keep their stale (initialized) contents
+    /// so a take only writes the length delta — callers fully overwrite
+    /// what they take.
+    free: Vec<TaggedStack<Vec<T>>>,
     enabled: AtomicBool,
     min_shift: u32,
     max_shift: u32,
@@ -113,7 +105,7 @@ impl<T: Clone + Default> PoolCore<T> {
     fn new(min_shift: u32, max_shift: u32, elem_bytes: u64) -> Self {
         let classes = (max_shift - min_shift + 1) as usize;
         let free = (0..classes * SHARDS_PER_CLASS)
-            .map(|_| Mutex::new(Vec::new()))
+            .map(|_| TaggedStack::new(MAX_FREE_PER_SHARD))
             .collect();
         Self {
             free,
@@ -169,13 +161,13 @@ impl<T: Clone + Default> PoolCore<T> {
                 // sibling shards before falling through to allocation —
                 // producer/consumer thread splits (e.g. the TCP reader
                 // allocates, the collective thread frees) would
-                // otherwise never find their buffers again.
+                // otherwise never find their buffers again. Each probe
+                // is one lock-free stack pop.
                 let base = class * SHARDS_PER_CLASS;
                 let start = shard_index();
                 for i in 0..SHARDS_PER_CLASS {
                     let shard = &self.free[base + (start + i) % SHARDS_PER_CLASS];
-                    let reused = shard.lock().unwrap().pop();
-                    if let Some(mut v) = reused {
+                    if let Some(mut v) = shard.pop() {
                         self.pool_hits.fetch_add(1, Ordering::Relaxed);
                         v.resize(len, T::default());
                         return (v, true);
@@ -207,9 +199,9 @@ impl<T: Clone + Default> PoolCore<T> {
             return;
         };
         let shard = &self.free[class * SHARDS_PER_CLASS + shard_index()];
-        let mut free = shard.lock().unwrap();
-        if free.len() < MAX_FREE_PER_SHARD {
-            free.push(v);
+        // The stack's fixed capacity *is* the MAX_FREE_PER_SHARD bound:
+        // a push into a full shard hands the vector back and we drop it.
+        if shard.push(v).is_ok() {
             self.recycled.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -218,7 +210,7 @@ impl<T: Clone + Default> PoolCore<T> {
         self.enabled.store(on, Ordering::Relaxed);
         if !on {
             for shard in &self.free {
-                shard.lock().unwrap().clear();
+                while shard.pop().is_some() {}
             }
         }
     }

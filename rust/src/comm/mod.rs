@@ -5,6 +5,10 @@
 //!   f32 staging pool ([`buf::FloatPool`]). A payload is allocated once
 //!   at the producer and *sliced* — never copied — through the mailbox,
 //!   the wire framing and the collective algorithms.
+//! * [`slab`] — the lock-free slab primitives beneath the hot paths: a
+//!   generation-tagged slot arena with sharded atomic free lists, an
+//!   MPMC queue over arena nodes, and the fixed-capacity tagged Treiber
+//!   stacks that back the pool free lists.
 //! * [`split`] — disjoint mutable chunk views of one `Vec<f32>`, so the
 //!   KaiTian 3-stage pipeline can stream a large tensor through its
 //!   stage threads chunk by chunk without copying it apart.
@@ -13,6 +17,7 @@
 //!   zero-copy `Vec<f32>` endpoints), plus the f16/bf16 scalar codecs.
 
 pub mod buf;
+pub mod slab;
 pub mod split;
 pub mod tensor;
 

@@ -1,0 +1,762 @@
+//! Lock-free slab primitives for the data-plane hot paths.
+//!
+//! Three building blocks, shared by the mailbox, the buffer pools and
+//! the comm-thread completion queue (ROADMAP open item 2 — the
+//! `sharded-slab` idiom):
+//!
+//! * [`Arena`] — a grow-only segmented slot store with sharded atomic
+//!   free lists (per-thread shard affinity via [`thread_shard`]) and a
+//!   per-slot **generation counter**. Slot storage is never freed while
+//!   the arena lives, so a stale index dereference reads *old* data,
+//!   never unmapped memory; the generation tag in every published
+//!   reference ([`pack`]) makes stale references detectable and defeats
+//!   ABA on every compare-and-swap.
+//! * [`Queue`] — a Michael–Scott MPMC FIFO whose nodes live in an
+//!   `Arena<Node<V>>`. Retired nodes go back to the arena free lists,
+//!   so a long-lived queue allocates only up to its high-water mark.
+//! * [`TaggedStack`] — a fixed-capacity Treiber stack with versioned
+//!   heads (push/pop are single CAS loops, no locks), used for the
+//!   `BufPool`/`FloatPool` per-shard free lists.
+//!
+//! Memory-reclamation model: nothing here uses hazard pointers or
+//! epochs. Instead, slots are only *recycled* (never deallocated), and
+//! every protocol is written so that a value cell is read or written
+//! only while the reader/writer holds exclusive ownership of the slot —
+//! ownership is handed over through tagged CAS operations that fail if
+//! the slot was recycled underneath (generation mismatch).
+
+use std::cell::{Cell, UnsafeCell};
+use std::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, Ordering};
+
+/// Sentinel index meaning "no slot" in packed references and free lists.
+pub const NIL: u32 = u32::MAX;
+
+/// Pack a (generation, index) pair into one 64-bit tagged reference.
+#[inline]
+pub fn pack(gen: u32, idx: u32) -> u64 {
+    ((gen as u64) << 32) | idx as u64
+}
+
+/// The generation tag of a packed reference.
+#[inline]
+pub fn ref_gen(r: u64) -> u32 {
+    (r >> 32) as u32
+}
+
+/// The slot index of a packed reference ([`NIL`] when absent).
+#[inline]
+pub fn ref_idx(r: u64) -> u32 {
+    r as u32
+}
+
+/// Stable per-thread shard index in `0..shards` (round-robin assignment
+/// on first use). All slab consumers share one thread-local counter, so
+/// a thread lands on the same shard of every sharded structure — the
+/// "shard affinity" that keeps free-list traffic thread-local.
+pub fn thread_shard(shards: usize) -> usize {
+    static NEXT: AtomicU32 = AtomicU32::new(0);
+    thread_local! {
+        static SEED: Cell<u32> = const { Cell::new(u32::MAX) };
+    }
+    SEED.with(|s| {
+        let mut v = s.get();
+        if v == u32::MAX {
+            v = NEXT.fetch_add(1, Ordering::Relaxed);
+            s.set(v);
+        }
+        v as usize % shards.max(1)
+    })
+}
+
+// ---------------------------------------------------------------------
+// generation-tagged arena
+// ---------------------------------------------------------------------
+
+/// log2 of the first segment's slot count (segment `i` holds
+/// `64 << i` slots, so capacity doubles per segment like `Vec` growth
+/// but without ever moving existing slots).
+const SEG0_BITS: u32 = 6;
+/// Number of doubling segments: total capacity ≈ 67 M slots.
+const MAX_SEGS: usize = 20;
+/// Free-list shards (matches the pool shard count so a thread's
+/// affinity index is meaningful for both).
+const FREE_SHARDS: usize = 8;
+
+/// Segment index holding slot `idx`.
+#[inline]
+fn seg_of(idx: u32) -> usize {
+    let bucket = (idx >> SEG0_BITS) + 1;
+    (u32::BITS - 1 - bucket.leading_zeros()) as usize
+}
+
+/// First slot index of segment `s`.
+#[inline]
+fn seg_base(s: usize) -> u32 {
+    (((1_u64 << s) - 1) << SEG0_BITS) as u32
+}
+
+/// Slot count of segment `s`.
+#[inline]
+fn seg_len(s: usize) -> usize {
+    64_usize << s
+}
+
+/// Cache-line padded atomic free-list head (one per shard) so shards do
+/// not false-share.
+#[repr(align(64))]
+struct PaddedHead(AtomicU64);
+
+/// One slot of an [`Arena`]: the caller's item plus the generation
+/// counter and the free-list link.
+pub struct ArenaSlot<T> {
+    gen: AtomicU32,
+    free_next: AtomicU32,
+    /// The caller's payload. Reinitialized by the caller after every
+    /// [`Arena::alloc`] (slots are recycled, not zeroed).
+    pub item: T,
+}
+
+impl<T: Default> Default for ArenaSlot<T> {
+    fn default() -> Self {
+        Self {
+            gen: AtomicU32::new(0),
+            free_next: AtomicU32::new(NIL),
+            item: T::default(),
+        }
+    }
+}
+
+impl<T> ArenaSlot<T> {
+    /// Current generation of this slot. A tagged reference is valid only
+    /// while its [`ref_gen`] equals this value; [`Arena::retire`] bumps
+    /// it, invalidating every outstanding reference at once.
+    #[inline]
+    pub fn generation(&self) -> u32 {
+        self.gen.load(Ordering::Acquire)
+    }
+}
+
+/// Grow-only segmented slot store with sharded lock-free free lists and
+/// per-slot generation counters.
+///
+/// `alloc` pops a recycled slot from the caller's affine free-list shard
+/// (probing siblings on a miss) or bump-allocates a fresh slot; `retire`
+/// bumps the slot's generation and pushes it back. Slot storage is
+/// stable for the arena's lifetime — an index never dangles, and the
+/// generation tag tells the live incarnation from a stale one.
+pub struct Arena<T> {
+    segs: [AtomicPtr<ArenaSlot<T>>; MAX_SEGS],
+    fresh: AtomicU32,
+    free: [PaddedHead; FREE_SHARDS],
+}
+
+// SAFETY: the raw segment pointers are owned by the arena (allocated in
+// `ensure_segment`, freed only in `Drop`); shared access to the slots
+// goes through `&ArenaSlot<T>`, so the usual bounds apply.
+unsafe impl<T: Send + Sync> Send for Arena<T> {}
+unsafe impl<T: Send + Sync> Sync for Arena<T> {}
+
+impl<T: Default> Default for Arena<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Default> Arena<T> {
+    /// An empty arena (no segments allocated yet).
+    pub fn new() -> Self {
+        Self {
+            segs: std::array::from_fn(|_| AtomicPtr::new(std::ptr::null_mut())),
+            fresh: AtomicU32::new(0),
+            free: std::array::from_fn(|_| PaddedHead(AtomicU64::new(pack(0, NIL)))),
+        }
+    }
+
+    /// Total slot capacity across all segments.
+    fn capacity() -> usize {
+        ((1_usize << MAX_SEGS) - 1) << SEG0_BITS
+    }
+
+    /// Allocate a slot index: own free shard first, then siblings, then
+    /// a fresh bump-allocated slot. The returned slot's `item` holds
+    /// whatever its previous incarnation left — callers reinitialize.
+    pub fn alloc(&self) -> u32 {
+        let start = thread_shard(FREE_SHARDS);
+        for i in 0..FREE_SHARDS {
+            if let Some(idx) = self.free_pop((start + i) % FREE_SHARDS) {
+                return idx;
+            }
+        }
+        let idx = self.fresh.fetch_add(1, Ordering::Relaxed);
+        assert!((idx as usize) < Self::capacity(), "slab arena exhausted");
+        self.ensure_segment(seg_of(idx));
+        idx
+    }
+
+    /// Recycle a slot: bump its generation (invalidating every tagged
+    /// reference to the old incarnation) and push it on the caller's
+    /// affine free-list shard.
+    ///
+    /// The caller must hold exclusive ownership of the slot (it came
+    /// from `alloc` and no other thread can still win a tagged CAS that
+    /// hands the old incarnation over).
+    pub fn retire(&self, idx: u32) {
+        let slot = self.slot(idx);
+        slot.gen.fetch_add(1, Ordering::Release);
+        let head = &self.free[thread_shard(FREE_SHARDS)].0;
+        let mut h = head.load(Ordering::Relaxed);
+        loop {
+            slot.free_next.store(ref_idx(h), Ordering::Relaxed);
+            let next = pack(ref_gen(h).wrapping_add(1), idx);
+            match head.compare_exchange_weak(h, next, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return,
+                Err(cur) => h = cur,
+            }
+        }
+    }
+
+    /// The slot at `idx`. Panics (debug) if the segment was never
+    /// allocated — indices must come from [`Arena::alloc`].
+    #[inline]
+    pub fn slot(&self, idx: u32) -> &ArenaSlot<T> {
+        let s = seg_of(idx);
+        let ptr = self.segs[s].load(Ordering::Acquire);
+        debug_assert!(!ptr.is_null(), "slot index {idx} outside allocated segments");
+        // SAFETY: segments are allocated with `seg_len(s)` slots before
+        // any index inside them is handed out, and are freed only when
+        // the arena drops (which borrows &mut self, excluding readers).
+        unsafe { &*ptr.add((idx - seg_base(s)) as usize) }
+    }
+
+    /// Pop a recycled index off free shard `shard` (versioned-head
+    /// Treiber pop; the version tag defeats ABA on the head).
+    fn free_pop(&self, shard: usize) -> Option<u32> {
+        let head = &self.free[shard].0;
+        let mut h = head.load(Ordering::Acquire);
+        loop {
+            let idx = ref_idx(h);
+            if idx == NIL {
+                return None;
+            }
+            let next = self.slot(idx).free_next.load(Ordering::Acquire);
+            let repl = pack(ref_gen(h).wrapping_add(1), next);
+            match head.compare_exchange_weak(h, repl, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return Some(idx),
+                Err(cur) => h = cur,
+            }
+        }
+    }
+
+    /// Allocate segment `s` if it does not exist yet (racing allocators
+    /// may both build it; the CAS loser frees its copy).
+    fn ensure_segment(&self, s: usize) {
+        if !self.segs[s].load(Ordering::Acquire).is_null() {
+            return;
+        }
+        let len = seg_len(s);
+        let boxed: Box<[ArenaSlot<T>]> = (0..len).map(|_| ArenaSlot::default()).collect();
+        let ptr = Box::into_raw(boxed) as *mut ArenaSlot<T>;
+        if self
+            .segs[s]
+            .compare_exchange(
+                std::ptr::null_mut(),
+                ptr,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_err()
+        {
+            // SAFETY: we just leaked this exact allocation via
+            // `Box::into_raw` and nobody else has seen it.
+            unsafe {
+                drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(ptr, len)));
+            }
+        }
+    }
+}
+
+impl<T> Drop for Arena<T> {
+    fn drop(&mut self) {
+        for s in 0..MAX_SEGS {
+            let ptr = *self.segs[s].get_mut();
+            if !ptr.is_null() {
+                // SAFETY: the pointer came from `Box::into_raw` of a
+                // `Box<[ArenaSlot<T>]>` with exactly `seg_len(s)` slots.
+                unsafe {
+                    drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(
+                        ptr,
+                        seg_len(s),
+                    )));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// MPMC queue over arena nodes
+// ---------------------------------------------------------------------
+
+/// One queue node: the intrusive link plus the value cell and the
+/// two-claim retirement counter. Lives inside an `Arena<Node<V>>`.
+pub struct Node<V> {
+    /// `pack(target_gen, target_idx)` when linked to a successor, or
+    /// `pack(own_gen, NIL)` while this node is the tail — carrying the
+    /// owner's generation in the NIL marker makes a stale enqueuer's
+    /// link CAS fail instead of splicing into a recycled node's queue.
+    next: AtomicU64,
+    /// Retirement claims: a node is recycled after both the popper that
+    /// took its value (made it the dummy) and the popper that advanced
+    /// the head past it have released it. Initial dummies start with the
+    /// taker's claim pre-counted (they carry no value).
+    claims: AtomicU32,
+    value: UnsafeCell<Option<V>>,
+}
+
+impl<V> Default for Node<V> {
+    fn default() -> Self {
+        Self {
+            next: AtomicU64::new(pack(0, NIL)),
+            claims: AtomicU32::new(0),
+            value: UnsafeCell::new(None),
+        }
+    }
+}
+
+// SAFETY: the value cell is accessed only under the queue's exclusive
+// hand-over protocol (see `Queue::push`/`Queue::pop`), which transfers
+// the value between threads — hence `V: Send` suffices.
+unsafe impl<V: Send> Send for Node<V> {}
+unsafe impl<V: Send> Sync for Node<V> {}
+
+/// Michael–Scott MPMC FIFO over [`Arena`] nodes: lock-free push and
+/// pop, tagged head/tail (no ABA), nodes recycled through the arena.
+///
+/// The queue itself is just two words, so it embeds cheaply in per-flow
+/// slots; many queues can share one node arena.
+pub struct Queue {
+    head: AtomicU64,
+    tail: AtomicU64,
+}
+
+impl Default for Queue {
+    /// An uninitialized queue (head/tail are [`NIL`]); call
+    /// [`Queue::init`] before pushing or popping.
+    fn default() -> Self {
+        Self {
+            head: AtomicU64::new(pack(0, NIL)),
+            tail: AtomicU64::new(pack(0, NIL)),
+        }
+    }
+}
+
+impl Queue {
+    /// Initialize (or re-initialize after [`Queue::teardown`]) with a
+    /// fresh dummy node. Callers must have exclusive access.
+    pub fn init<V: Send>(&self, arena: &Arena<Node<V>>) {
+        let idx = arena.alloc();
+        let slot = arena.slot(idx);
+        let gen = slot.generation();
+        slot.item.next.store(pack(gen, NIL), Ordering::Relaxed);
+        // Dummies carry no value: pre-count the taker's claim.
+        slot.item.claims.store(1, Ordering::Relaxed);
+        self.head.store(pack(gen, idx), Ordering::Relaxed);
+        self.tail.store(pack(gen, idx), Ordering::Release);
+    }
+
+    /// Enqueue `value` (lock-free; two CAS operations uncontended).
+    pub fn push<V: Send>(&self, arena: &Arena<Node<V>>, value: V) {
+        let nidx = arena.alloc();
+        let nslot = arena.slot(nidx);
+        let ngen = nslot.generation();
+        nslot.item.claims.store(0, Ordering::Relaxed);
+        // SAFETY: `alloc` grants exclusive ownership of the node until
+        // the link CAS below publishes it.
+        unsafe { *nslot.item.value.get() = Some(value) };
+        nslot.item.next.store(pack(ngen, NIL), Ordering::Release);
+        let nref = pack(ngen, nidx);
+        loop {
+            let t = self.tail.load(Ordering::Acquire);
+            let tidx = ref_idx(t);
+            let tslot = arena.slot(tidx);
+            let tnext = tslot.item.next.load(Ordering::Acquire);
+            if self.tail.load(Ordering::Acquire) != t {
+                continue; // tail moved (or node recycled) under us
+            }
+            if ref_idx(tnext) == NIL {
+                if ref_gen(tnext) != ref_gen(t) {
+                    continue; // stale incarnation of the tail node
+                }
+                // The expected value carries the tail node's generation,
+                // so this CAS fails if the node was recycled.
+                if tslot
+                    .item
+                    .next
+                    .compare_exchange(tnext, nref, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+                {
+                    let _ = self
+                        .tail
+                        .compare_exchange(t, nref, Ordering::AcqRel, Ordering::Relaxed);
+                    return;
+                }
+            } else {
+                // Help a lagging pusher swing the tail forward.
+                let _ = self
+                    .tail
+                    .compare_exchange(t, tnext, Ordering::AcqRel, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Dequeue the oldest value, or `None` when empty (lock-free).
+    pub fn pop<V: Send>(&self, arena: &Arena<Node<V>>) -> Option<V> {
+        loop {
+            let h = self.head.load(Ordering::Acquire);
+            let t = self.tail.load(Ordering::Acquire);
+            let hidx = ref_idx(h);
+            if hidx == NIL {
+                return None; // never initialized
+            }
+            let next = arena.slot(hidx).item.next.load(Ordering::Acquire);
+            if self.head.load(Ordering::Acquire) != h {
+                continue; // head moved (or dummy recycled) under us
+            }
+            if ref_idx(next) == NIL {
+                return None;
+            }
+            if h == t {
+                // Tail lags behind a linked node: help it forward so the
+                // head never overtakes the tail.
+                let _ = self
+                    .tail
+                    .compare_exchange(t, next, Ordering::AcqRel, Ordering::Relaxed);
+            }
+            if self
+                .head
+                .compare_exchange(h, next, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                let nidx = ref_idx(next);
+                // SAFETY: winning the head CAS made `next` the dummy and
+                // hands us exclusive ownership of its value; the node
+                // cannot be recycled before both claims are released,
+                // and ours is still outstanding.
+                let v = unsafe { (*arena.slot(nidx).item.value.get()).take() };
+                debug_assert!(v.is_some(), "queue node lost its value");
+                Self::release(arena, nidx); // taker's claim on the new dummy
+                Self::release(arena, hidx); // passer's claim on the old dummy
+                return v;
+            }
+        }
+    }
+
+    /// Release one retirement claim; the second release recycles the
+    /// node into the arena.
+    fn release<V: Send>(arena: &Arena<Node<V>>, idx: u32) {
+        if arena.slot(idx).item.claims.fetch_add(1, Ordering::AcqRel) == 1 {
+            arena.retire(idx);
+        }
+    }
+
+    /// Drain remaining values (dropping them) and retire every node
+    /// including the dummy, returning the queue to its uninitialized
+    /// state. Callers must have exclusive access (no concurrent
+    /// push/pop) — the mailbox guarantees this via its pin protocol.
+    pub fn teardown<V: Send>(&self, arena: &Arena<Node<V>>) {
+        while self.pop(arena).is_some() {}
+        let h = self.head.load(Ordering::Acquire);
+        let hidx = ref_idx(h);
+        if hidx != NIL {
+            Self::release(arena, hidx); // final dummy: value already taken
+            self.head.store(pack(0, NIL), Ordering::Relaxed);
+            self.tail.store(pack(0, NIL), Ordering::Relaxed);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// fixed-capacity tagged Treiber stack
+// ---------------------------------------------------------------------
+
+struct StackSlot<T> {
+    next: AtomicU32,
+    value: UnsafeCell<Option<T>>,
+}
+
+/// Fixed-capacity lock-free LIFO: a Treiber stack over preallocated
+/// slots, with **versioned heads** (`version << 32 | index`) so head
+/// CASes are ABA-safe without deferred reclamation. `push` fails (hands
+/// the value back) when full — exactly the bounded-free-list semantics
+/// the buffer pools need.
+pub struct TaggedStack<T> {
+    slots: Box<[StackSlot<T>]>,
+    full: AtomicU64,
+    vacant: AtomicU64,
+}
+
+// SAFETY: a slot's value cell is written only between popping the slot
+// off the vacant list and pushing it on the full list (and read only in
+// the mirror-image hand-over) — the tagged CAS transfers exclusive
+// ownership, moving the value between threads.
+unsafe impl<T: Send> Send for TaggedStack<T> {}
+unsafe impl<T: Send> Sync for TaggedStack<T> {}
+
+impl<T> TaggedStack<T> {
+    /// A stack holding at most `capacity` values (capacity ≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1 && capacity < NIL as usize);
+        let slots: Box<[StackSlot<T>]> = (0..capacity)
+            .map(|i| StackSlot {
+                next: AtomicU32::new(if i + 1 < capacity { i as u32 + 1 } else { NIL }),
+                value: UnsafeCell::new(None),
+            })
+            .collect();
+        Self {
+            slots,
+            full: AtomicU64::new(pack(0, NIL)),
+            vacant: AtomicU64::new(pack(0, 0)),
+        }
+    }
+
+    fn pop_from(&self, head: &AtomicU64) -> Option<u32> {
+        let mut h = head.load(Ordering::Acquire);
+        loop {
+            let idx = ref_idx(h);
+            if idx == NIL {
+                return None;
+            }
+            let next = self.slots[idx as usize].next.load(Ordering::Acquire);
+            let repl = pack(ref_gen(h).wrapping_add(1), next);
+            match head.compare_exchange_weak(h, repl, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return Some(idx),
+                Err(cur) => h = cur,
+            }
+        }
+    }
+
+    fn push_to(&self, head: &AtomicU64, idx: u32) {
+        let mut h = head.load(Ordering::Relaxed);
+        loop {
+            self.slots[idx as usize].next.store(ref_idx(h), Ordering::Relaxed);
+            let repl = pack(ref_gen(h).wrapping_add(1), idx);
+            match head.compare_exchange_weak(h, repl, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return,
+                Err(cur) => h = cur,
+            }
+        }
+    }
+
+    /// Push a value; `Err(value)` hands it back when the stack is full.
+    pub fn push(&self, value: T) -> Result<(), T> {
+        match self.pop_from(&self.vacant) {
+            Some(idx) => {
+                // SAFETY: popping `idx` off the vacant list grants
+                // exclusive ownership of the value cell until the
+                // `push_to` below publishes it on the full list.
+                unsafe { *self.slots[idx as usize].value.get() = Some(value) };
+                self.push_to(&self.full, idx);
+                Ok(())
+            }
+            None => Err(value),
+        }
+    }
+
+    /// Pop the most recently pushed value, or `None` when empty.
+    pub fn pop(&self) -> Option<T> {
+        let idx = self.pop_from(&self.full)?;
+        // SAFETY: popping off the full list grants exclusive ownership;
+        // the pusher's value write happened-before its full-list CAS.
+        let v = unsafe { (*self.slots[idx as usize].value.get()).take() };
+        debug_assert!(v.is_some(), "full-list slot lost its value");
+        self.push_to(&self.vacant, idx);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn tagged_refs_roundtrip() {
+        let r = pack(7, 42);
+        assert_eq!(ref_gen(r), 7);
+        assert_eq!(ref_idx(r), 42);
+        assert_eq!(ref_idx(pack(u32::MAX, NIL)), NIL);
+    }
+
+    #[test]
+    fn segment_math_is_consistent() {
+        // Every index maps into a segment whose [base, base+len) range
+        // contains it, and bases tile the index space without gaps.
+        let mut expect_base = 0_u32;
+        for s in 0..12 {
+            assert_eq!(seg_base(s), expect_base);
+            expect_base += seg_len(s) as u32;
+        }
+        for idx in [0_u32, 1, 63, 64, 65, 191, 192, 200_000] {
+            let s = seg_of(idx);
+            assert!(seg_base(s) <= idx);
+            assert!((idx as u64) < seg_base(s) as u64 + seg_len(s) as u64, "idx {idx} seg {s}");
+        }
+    }
+
+    #[test]
+    fn arena_alloc_retire_bumps_generation() {
+        let a: Arena<AtomicU32> = Arena::new();
+        let i = a.alloc();
+        let g0 = a.slot(i).generation();
+        a.retire(i);
+        let j = a.alloc();
+        assert_eq!(j, i, "retired slot is reused first");
+        assert_eq!(a.slot(j).generation(), g0 + 1, "retire bumps the generation");
+    }
+
+    #[test]
+    fn arena_grows_past_first_segment() {
+        let a: Arena<AtomicU32> = Arena::new();
+        let n = 500_u32; // spans segments 0..3
+        let idxs: Vec<u32> = (0..n).map(|_| a.alloc()).collect();
+        for (k, &i) in idxs.iter().enumerate() {
+            a.slot(i).item.store(k as u32, Ordering::Relaxed);
+        }
+        for (k, &i) in idxs.iter().enumerate() {
+            assert_eq!(a.slot(i).item.load(Ordering::Relaxed), k as u32);
+        }
+    }
+
+    #[test]
+    fn queue_fifo_single_thread() {
+        let arena: Arena<Node<u64>> = Arena::new();
+        let q = Queue::default();
+        q.init(&arena);
+        assert!(q.pop(&arena).is_none());
+        for v in 0..100_u64 {
+            q.push(&arena, v);
+        }
+        for v in 0..100_u64 {
+            assert_eq!(q.pop(&arena), Some(v));
+        }
+        assert!(q.pop(&arena).is_none());
+        q.teardown(&arena);
+    }
+
+    #[test]
+    fn queue_nodes_recycle_through_arena() {
+        let arena: Arena<Node<u64>> = Arena::new();
+        let q = Queue::default();
+        q.init(&arena);
+        // Steady-state ping-pong must not grow the arena beyond a few
+        // nodes (dummy + one value + recycling slack).
+        for v in 0..10_000_u64 {
+            q.push(&arena, v);
+            assert_eq!(q.pop(&arena), Some(v));
+        }
+        assert!(
+            arena.fresh.load(Ordering::Relaxed) < 16,
+            "nodes must be recycled, not leaked: {}",
+            arena.fresh.load(Ordering::Relaxed)
+        );
+        q.teardown(&arena);
+    }
+
+    #[test]
+    fn queue_concurrent_mpmc_delivers_everything() {
+        const PRODUCERS: usize = 4;
+        const CONSUMERS: usize = 4;
+        const PER: usize = 5_000;
+        let arena: Arc<Arena<Node<u64>>> = Arc::new(Arena::new());
+        let q = Arc::new(Queue::default());
+        q.init(&arena);
+        let got = Arc::new(AtomicUsize::new(0));
+        let sum = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for p in 0..PRODUCERS {
+                let (arena, q) = (arena.clone(), q.clone());
+                s.spawn(move || {
+                    for i in 0..PER {
+                        q.push(&arena, (p * PER + i) as u64);
+                    }
+                });
+            }
+            for _ in 0..CONSUMERS {
+                let (arena, q) = (arena.clone(), q.clone());
+                let (got, sum) = (got.clone(), sum.clone());
+                s.spawn(move || loop {
+                    if let Some(v) = q.pop(&arena) {
+                        sum.fetch_add(v, Ordering::Relaxed);
+                        if got.fetch_add(1, Ordering::Relaxed) + 1 == PRODUCERS * PER {
+                            return;
+                        }
+                    } else if got.load(Ordering::Relaxed) >= PRODUCERS * PER {
+                        return;
+                    } else {
+                        std::hint::spin_loop();
+                    }
+                });
+            }
+        });
+        let n = (PRODUCERS * PER) as u64;
+        assert_eq!(got.load(Ordering::Relaxed), PRODUCERS * PER);
+        assert_eq!(sum.load(Ordering::Relaxed), n * (n - 1) / 2, "every value exactly once");
+    }
+
+    #[test]
+    fn queue_values_drop_on_teardown() {
+        let arena: Arena<Node<Arc<()>>> = Arena::new();
+        let q = Queue::default();
+        q.init(&arena);
+        let token = Arc::new(());
+        for _ in 0..5 {
+            q.push(&arena, token.clone());
+        }
+        assert_eq!(Arc::strong_count(&token), 6);
+        q.teardown(&arena);
+        assert_eq!(Arc::strong_count(&token), 1, "teardown drops queued values");
+    }
+
+    #[test]
+    fn tagged_stack_lifo_and_capacity_bound() {
+        let st: TaggedStack<u32> = TaggedStack::new(2);
+        assert!(st.pop().is_none());
+        assert!(st.push(1).is_ok());
+        assert!(st.push(2).is_ok());
+        assert_eq!(st.push(3), Err(3), "full stack hands the value back");
+        assert_eq!(st.pop(), Some(2));
+        assert_eq!(st.pop(), Some(1));
+        assert!(st.pop().is_none());
+    }
+
+    #[test]
+    fn tagged_stack_concurrent_push_pop() {
+        const THREADS: usize = 8;
+        const ROUNDS: usize = 20_000;
+        let st: Arc<TaggedStack<usize>> = Arc::new(TaggedStack::new(4));
+        let popped = Arc::new(AtomicUsize::new(0));
+        let dropped = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let st = st.clone();
+                let (popped, dropped) = (popped.clone(), dropped.clone());
+                s.spawn(move || {
+                    for i in 0..ROUNDS {
+                        if (t + i) % 2 == 0 {
+                            if st.push(i).is_err() {
+                                dropped.fetch_add(1, Ordering::Relaxed);
+                            }
+                        } else if st.pop().is_some() {
+                            popped.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        let pushes_kept = THREADS * ROUNDS / 2 - dropped.load(Ordering::Relaxed);
+        let left = std::iter::from_fn(|| st.pop()).count();
+        let total = popped.load(Ordering::Relaxed) + left;
+        assert_eq!(total, pushes_kept, "no value lost or duplicated");
+    }
+}

@@ -1,8 +1,10 @@
 //! In-process transport: one mailbox per rank, senders push directly.
 //!
 //! This is the "vendor library" class of path in the simulation: a
-//! refcount hand-off between threads, no syscalls, no framing, no copy.
-//! The intra-group collectives of `NcclSim`/`CnclSim` run over this.
+//! refcount hand-off between threads, no syscalls, no framing, no copy —
+//! and since ISSUE 6 no locks either: `send` is a lock-free push into
+//! the peer's slab-backed [`Mailbox`]. The intra-group collectives of
+//! `NcclSim`/`CnclSim` run over this.
 
 use std::sync::Arc;
 

@@ -2,7 +2,8 @@
 //!
 //! Two implementations of the same [`Transport`] trait:
 //!
-//! * [`inproc`] — lock-based mailboxes between threads in one process.
+//! * [`inproc`] — lock-free sharded mailboxes between threads in one
+//!   process (see [`mailbox`] and [`crate::comm::slab`]).
 //!   Stands in for the on-device / intra-node DMA paths a vendor library
 //!   (NCCL/CNCL) would use: no syscalls, no serialization — a send is a
 //!   refcount move of the payload [`Buf`] into the peer's mailbox.

@@ -20,7 +20,7 @@
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -53,25 +53,29 @@ fn inflight_cap() -> Option<u64> {
 /// `add` applies the soft-cap backpressure; writers call `sub` after the
 /// frame hits the wire (or `poison` when the link dies, so blocked
 /// senders fail fast instead of waiting out the cap).
+///
+/// Lock-free on the send path (ISSUE 6): admission is a CAS on the byte
+/// counter, and the mutex/condvar pair exists only for parking a sender
+/// that is actually over the cap — writers signal it only when the
+/// `waiters` gauge says someone is parked.
 struct Inflight {
-    state: Mutex<InflightState>,
+    bytes: AtomicU64,
+    dead: AtomicBool,
+    /// Senders currently parked (or about to park) on `cv`.
+    waiters: AtomicU32,
+    park: Mutex<()>,
     cv: Condvar,
     cap: Option<u64>,
     high_water: AtomicU64,
 }
 
-struct InflightState {
-    bytes: u64,
-    dead: bool,
-}
-
 impl Inflight {
     fn new(cap: Option<u64>) -> Self {
         Self {
-            state: Mutex::new(InflightState {
-                bytes: 0,
-                dead: false,
-            }),
+            bytes: AtomicU64::new(0),
+            dead: AtomicBool::new(false),
+            waiters: AtomicU32::new(0),
+            park: Mutex::new(()),
             cv: Condvar::new(),
             cap,
             high_water: AtomicU64::new(0),
@@ -80,43 +84,73 @@ impl Inflight {
 
     /// Account `n` queued bytes, blocking while the cap is exceeded.
     fn add(&self, n: u64) -> Result<()> {
-        let deadline = std::time::Instant::now() + recv_timeout();
-        let mut st = self.state.lock().unwrap();
-        if let Some(cap) = self.cap {
-            // Always admit at least one frame so an oversize frame can
-            // never wedge the queue.
-            while st.bytes > 0 && st.bytes + n > cap {
-                if st.dead {
-                    bail!("tcp link closed with {} bytes in flight", st.bytes);
-                }
-                let now = std::time::Instant::now();
-                if now >= deadline {
-                    bail!(
-                        "tcp send backpressure timeout: {} bytes in flight (cap {cap})",
-                        st.bytes
-                    );
-                }
-                let (guard, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
-                st = guard;
-            }
-        }
-        if st.dead {
+        if self.dead.load(Ordering::SeqCst) {
             bail!("tcp link closed (writer thread gone)");
         }
-        st.bytes += n;
-        self.high_water.fetch_max(st.bytes, Ordering::Relaxed);
-        Ok(())
+        let Some(cap) = self.cap else {
+            // Uncapped: one relaxed add, no admission control.
+            let now = self.bytes.fetch_add(n, Ordering::Relaxed) + n;
+            self.high_water.fetch_max(now, Ordering::Relaxed);
+            return Ok(());
+        };
+        let deadline = std::time::Instant::now() + recv_timeout();
+        let mut cur = self.bytes.load(Ordering::Relaxed);
+        loop {
+            // Always admit at least one frame so an oversize frame can
+            // never wedge the queue.
+            if cur == 0 || cur + n <= cap {
+                match self.bytes.compare_exchange_weak(
+                    cur,
+                    cur + n,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        self.high_water.fetch_max(cur + n, Ordering::Relaxed);
+                        return Ok(());
+                    }
+                    Err(c) => {
+                        cur = c;
+                        continue;
+                    }
+                }
+            }
+            if self.dead.load(Ordering::SeqCst) {
+                bail!("tcp link closed with {cur} bytes in flight");
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                bail!("tcp send backpressure timeout: {cur} bytes in flight (cap {cap})");
+            }
+            // Over the cap: park until a writer drains bytes. This is
+            // the only path that touches the mutex.
+            self.waiters.fetch_add(1, Ordering::SeqCst);
+            let guard = self.park.lock().unwrap();
+            cur = self.bytes.load(Ordering::SeqCst);
+            if cur != 0 && cur + n > cap && !self.dead.load(Ordering::SeqCst) {
+                let (g, _) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+                drop(g);
+            } else {
+                drop(guard);
+            }
+            self.waiters.fetch_sub(1, Ordering::SeqCst);
+            cur = self.bytes.load(Ordering::Relaxed);
+        }
     }
 
     fn sub(&self, n: u64) {
-        let mut st = self.state.lock().unwrap();
-        st.bytes = st.bytes.saturating_sub(n);
-        drop(st);
-        self.cv.notify_all();
+        self.bytes.fetch_sub(n, Ordering::SeqCst);
+        if self.waiters.load(Ordering::SeqCst) > 0 {
+            // Empty critical section: orders the wake after a parking
+            // sender's "re-check then wait".
+            drop(self.park.lock().unwrap());
+            self.cv.notify_all();
+        }
     }
 
     fn poison(&self) {
-        self.state.lock().unwrap().dead = true;
+        self.dead.store(true, Ordering::SeqCst);
+        drop(self.park.lock().unwrap());
         self.cv.notify_all();
     }
 }

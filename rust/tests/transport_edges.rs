@@ -3,12 +3,19 @@
 //! concurrent same-tag chunk interleaving, shutdown waking blocked
 //! receivers, and TCP writer-queue backpressure — over both the in-proc
 //! and loopback-TCP transports.
+//!
+//! Plus the lock-free slab mailbox stress suite (ISSUE 6 satellites):
+//! racing push/pop/close across shards, generation-tag slot reuse under
+//! one-shot tag churn (the ABA hammer), drained-entry reclamation after
+//! racing traffic quiesces, and zero-length payloads mixed into
+//! contended streams.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use kaitian::comm::buf::Buf;
+use kaitian::transport::mailbox::Mailbox;
 use kaitian::transport::{InprocMesh, TcpMesh, Transport};
 
 /// Both transports behind one trait object, for shared test bodies.
@@ -159,6 +166,176 @@ fn tcp_writer_cap_bounds_inflight_bytes() {
     let hw = eps[0].inflight_high_water();
     assert!(hw > 0, "gauge must have observed traffic");
     assert!(hw <= CAP, "high-water {hw} exceeds the {CAP} soft cap");
+}
+
+#[test]
+fn mailbox_stress_racing_push_pop_keeps_per_flow_fifo() {
+    // 8 threads, each both a producer and a consumer, share one mailbox:
+    // thread c consumes flows with f % THREADS == c, pushed by thread
+    // (c + 1) % THREADS. Every 5th payload is zero-length, so empty Bufs
+    // ride the same contended path. Per-(peer, tag) FIFO must hold for
+    // every flow under the full cross-thread race.
+    const THREADS: usize = 8;
+    const FLOWS: usize = 256; // spans every shard
+    const MSGS: usize = 60;
+    let mb = Mailbox::new();
+    std::thread::scope(|s| {
+        for me in 0..THREADS {
+            let mb = &mb;
+            s.spawn(move || {
+                let produce: Vec<u64> = (0..FLOWS as u64)
+                    .filter(|f| (*f as usize) % THREADS == (me + THREADS - 1) % THREADS)
+                    .collect();
+                let consume: Vec<u64> = (0..FLOWS as u64)
+                    .filter(|f| (*f as usize) % THREADS == me)
+                    .collect();
+                let my_peer = (me + 1) % THREADS;
+                for seq in 0..MSGS {
+                    for &f in &produce {
+                        let payload = if seq % 5 == 4 {
+                            Buf::empty()
+                        } else {
+                            let mut b = [0_u8; 8];
+                            b[..4].copy_from_slice(&(f as u32).to_le_bytes());
+                            b[4..].copy_from_slice(&(seq as u32).to_le_bytes());
+                            Buf::copy_from_slice(&b)
+                        };
+                        mb.push(me, f, payload);
+                    }
+                    for &f in &consume {
+                        let got = mb.pop(my_peer, f, Duration::from_secs(30)).unwrap();
+                        if seq % 5 == 4 {
+                            assert!(got.is_empty(), "flow {f} seq {seq}: expected empty");
+                        } else {
+                            let fv = u32::from_le_bytes(got.as_slice()[..4].try_into().unwrap());
+                            let sv = u32::from_le_bytes(got.as_slice()[4..].try_into().unwrap());
+                            assert_eq!((fv, sv), (f as u32, seq as u32), "FIFO broken on flow {f}");
+                        }
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(mb.pending(), 0, "all messages popped, gauge must be exact at quiescence");
+}
+
+#[test]
+fn mailbox_stress_one_shot_tags_recycle_slots_under_races() {
+    // The ABA hammer: 8 threads burn through 1500 one-shot tags each —
+    // every iteration creates a flow, drains it, and reclaims its slot,
+    // so arena slots and table entries are recycled thousands of times
+    // while other threads race in the same shards. Generation tags must
+    // keep every pop matched to its own flow. Each flow is touched by
+    // exactly one thread, so reclamation is deterministic: at the end no
+    // live flow may remain.
+    const THREADS: usize = 8;
+    const ITERS: usize = 1500;
+    let mb = Mailbox::new();
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let mb = &mb;
+            s.spawn(move || {
+                for i in 0..ITERS {
+                    let tag = (t * ITERS + i) as u64;
+                    mb.push(t, tag, Buf::copy_from_slice(&(i as u32).to_le_bytes()));
+                    let got = mb.pop(t, tag, Duration::from_secs(30)).unwrap();
+                    let v = u32::from_le_bytes(got.as_slice().try_into().unwrap());
+                    assert_eq!(v, i as u32, "cross-flow leak via a recycled slot");
+                }
+            });
+        }
+    });
+    assert_eq!(mb.pending(), 0);
+    assert_eq!(
+        mb.live_flows(),
+        0,
+        "single-toucher one-shot flows must all be reclaimed"
+    );
+}
+
+#[test]
+fn mailbox_stress_close_races_with_pushers_and_wakes_waiters() {
+    // Receivers parked on flows that never get a message, pushers
+    // hammering unrelated flows, and close() landing in the middle:
+    // every parked waiter must wake with the "closed" error, never hang.
+    let mb = Mailbox::new();
+    std::thread::scope(|s| {
+        let mut waiters = Vec::new();
+        for i in 0..12_u64 {
+            let mb = &mb;
+            let wait = Duration::from_secs(30);
+            waiters.push(s.spawn(move || mb.pop(3, 5000 + i, wait).unwrap_err()));
+        }
+        for t in 0..4_usize {
+            let mb = &mb;
+            s.spawn(move || {
+                for i in 0..500_u64 {
+                    mb.push(t, i % 64, Buf::empty());
+                }
+            });
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        mb.close();
+        for w in waiters {
+            let err = w.join().unwrap();
+            assert!(err.to_string().contains("closed"), "{err}");
+        }
+    });
+}
+
+#[test]
+fn mailbox_stress_shared_flows_reclaim_after_quiesce() {
+    // MPMC per flow: 6 pusher threads each push 50 messages into every
+    // one of 48 flows while 6 popper threads race to drain them (poppers
+    // contend on the same flows, exercising concurrent pop + the
+    // REMOVING/rollback reclamation path). Racing reclamation may
+    // legitimately leave drained entries live, so after quiescing we
+    // drive one sequential push+pop through each flow — that pass must
+    // reclaim everything.
+    const THREADS: usize = 6;
+    const FLOWS: u64 = 48;
+    const PER_FLOW: usize = 50;
+    let mb = Mailbox::new();
+    let popped = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let mb = &mb;
+            s.spawn(move || {
+                for seq in 0..PER_FLOW {
+                    for f in 0..FLOWS {
+                        let payload = if (seq + f as usize) % 2 == 0 {
+                            Buf::empty()
+                        } else {
+                            Buf::copy_from_slice(&[t as u8])
+                        };
+                        mb.push(9, f, payload);
+                    }
+                }
+            });
+        }
+        for _ in 0..THREADS {
+            let mb = &mb;
+            let popped = &popped;
+            s.spawn(move || {
+                for _ in 0..PER_FLOW {
+                    for f in 0..FLOWS {
+                        mb.pop(9, f, Duration::from_secs(30)).unwrap();
+                        popped.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(popped.load(Ordering::Relaxed), THREADS * FLOWS as usize * PER_FLOW);
+    assert_eq!(mb.pending(), 0, "push/pop counts balance, gauge must read zero");
+    // Sequential reclamation pass: one message through each flow drains
+    // it with a single pin holder, which must retire the entry.
+    for f in 0..FLOWS {
+        mb.push(9, f, Buf::empty());
+        mb.pop(9, f, Duration::from_secs(30)).unwrap();
+    }
+    assert_eq!(mb.live_flows(), 0, "drained flows must be reclaimed once quiescent");
+    assert_eq!(mb.pending(), 0);
 }
 
 #[test]
