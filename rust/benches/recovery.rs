@@ -1,0 +1,169 @@
+//! Bench: what a mid-training rank death costs, measured and modeled.
+//!
+//! Two numbers for the same lifecycle (death → detection → epoch-fenced
+//! regroup → checkpoint resume):
+//!
+//! * **measured** — the real elastic runtime ([`kaitian::train::elastic`])
+//!   on an in-process `1G+2M` cluster: rank 1 dies mid-segment, the
+//!   heartbeat monitor detects the expired lease, survivors regroup and
+//!   resume, and the rank rejoins one segment later. Wall-clock
+//!   [`RecoveryTiming`](kaitian::train::RecoveryTiming) phases.
+//! * **modeled** — the virtual-time elastic simulator at paper scale
+//!   (`2G+2M`, one CIFAR-10-shaped epoch): detection + regroup +
+//!   checkpoint replay priced per the calibrated [`PerfModel`].
+//!
+//! Writes `results/recovery.json` and asserts the headline claims:
+//! detection is heartbeat-bound (not recv-timeout-bound), training
+//! converges across the shrink/regrow, and the modeled overhead of a
+//! death stays a small fraction of the epoch.
+//!
+//! Run: `cargo bench --bench recovery`
+
+use std::collections::BTreeMap;
+
+use kaitian::device::FaultPlan;
+use kaitian::metrics::MarkdownTable;
+use kaitian::perfmodel::PerfModel;
+use kaitian::simnet::{simulate_elastic, ElasticSimConfig};
+use kaitian::train::{train_elastic, ElasticConfig, FaultSpec};
+use kaitian::util::json::Json;
+
+fn main() -> kaitian::Result<()> {
+    // Keep blocked collectives test-sized; detection must beat this by a
+    // wide margin (it is heartbeat-bound, not recv-timeout-bound).
+    std::env::set_var("KAITIAN_RECV_TIMEOUT_MS", "500");
+
+    let mut json = BTreeMap::new();
+
+    // ---- Measured: in-process elastic run with death + rejoin. ----
+    let mut cfg = ElasticConfig::quick("1G+2M");
+    cfg.fault = Some(FaultSpec {
+        rank: 1,
+        at_step: 9,
+        rejoin_after_segments: 1,
+    });
+    let report = train_elastic(&cfg)?;
+    std::fs::remove_file(&cfg.ckpt_path).ok();
+    let rec = report
+        .recovery
+        .clone()
+        .expect("the injected death must be recovered from");
+
+    let detection_bound = cfg.heartbeat.timeout.as_secs_f64() * 2.0 + 0.5;
+    assert!(
+        rec.detection_s <= detection_bound,
+        "detection {:.3}s exceeds the heartbeat bound {detection_bound:.3}s",
+        rec.detection_s
+    );
+    assert!(report.rejoined, "the dead rank must rejoin");
+    assert_eq!(
+        (report.initial_world, report.final_world),
+        (3, 3),
+        "rejoin must restore the world"
+    );
+    assert!(
+        report.final_loss < report.losses[0] * 0.5,
+        "training must converge across shrink/regrow: {} -> {}",
+        report.losses[0],
+        report.final_loss
+    );
+
+    let mut measured = MarkdownTable::new(&["phase", "seconds"]);
+    measured.row(vec!["detection".into(), format!("{:.4}", rec.detection_s)]);
+    measured.row(vec!["regroup".into(), format!("{:.4}", rec.regroup_s)]);
+    measured.row(vec!["resume".into(), format!("{:.4}", rec.resume_s)]);
+    measured.row(vec!["total".into(), format!("{:.4}", rec.total_s)]);
+    json.insert(
+        "measured".to_string(),
+        Json::obj(vec![
+            ("cluster", Json::str(cfg.cluster.clone())),
+            ("dead_rank", Json::num(rec.dead_rank as f64)),
+            ("detection_s", Json::num(rec.detection_s)),
+            ("regroup_s", Json::num(rec.regroup_s)),
+            ("resume_s", Json::num(rec.resume_s)),
+            ("total_s", Json::num(rec.total_s)),
+            ("replayed_steps", Json::num(rec.replayed_steps as f64)),
+            ("heartbeat_timeout_s", Json::num(cfg.heartbeat.timeout.as_secs_f64())),
+            ("rejoined", Json::Bool(report.rejoined)),
+            ("final_epoch", Json::num(report.final_epoch as f64)),
+            ("initial_world", Json::num(report.initial_world as f64)),
+            ("final_world", Json::num(report.final_world as f64)),
+            ("final_loss", Json::num(report.final_loss)),
+        ]),
+    );
+
+    // ---- Modeled: paper-scale epoch with the same death + rejoin. ----
+    let model = PerfModel::paper_default();
+    let sim_cfg = ElasticSimConfig::paper_epoch(
+        "2G+2M",
+        FaultPlan::parse("death:1@47,rejoin:1@90")?,
+    );
+    let sim = simulate_elastic(&model, &sim_cfg)?;
+    assert_eq!(sim.final_world, 4, "modeled rejoin must restore the world");
+    assert_eq!(sim.recoveries.len(), 1);
+    // Death at step 47 replays the 7 steps since the step-40 checkpoint.
+    assert_eq!(sim.recoveries[0].replayed_steps, 7);
+    assert!(
+        sim.overhead_s() > 0.0 && sim.overhead_s() < sim.fault_free_s,
+        "one death+rejoin must cost extra, but less than re-running the \
+         whole epoch: overhead {:.3}s of {:.3}s fault-free",
+        sim.overhead_s(),
+        sim.fault_free_s
+    );
+
+    let mut modeled = MarkdownTable::new(&[
+        "at step",
+        "detection (s)",
+        "regroup (s)",
+        "replay (s)",
+        "replayed",
+        "total (s)",
+    ]);
+    for r in &sim.recoveries {
+        modeled.row(vec![
+            format!("{}", r.at_step),
+            format!("{:.4}", r.detection_s),
+            format!("{:.4}", r.regroup_s),
+            format!("{:.4}", r.replay_s),
+            format!("{}", r.replayed_steps),
+            format!("{:.4}", r.total_s),
+        ]);
+    }
+    json.insert(
+        "modeled".to_string(),
+        Json::obj(vec![
+            ("cluster", Json::str(sim.cluster.clone())),
+            ("total_s", Json::num(sim.total_s)),
+            ("fault_free_s", Json::num(sim.fault_free_s)),
+            ("overhead_s", Json::num(sim.overhead_s())),
+            ("final_world", Json::num(sim.final_world as f64)),
+            (
+                "recoveries",
+                Json::arr(
+                    sim.recoveries
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("at_step", Json::num(r.at_step as f64)),
+                                ("dead_rank", Json::num(r.dead_rank as f64)),
+                                ("detection_s", Json::num(r.detection_s)),
+                                ("regroup_s", Json::num(r.regroup_s)),
+                                ("replay_s", Json::num(r.replay_s)),
+                                ("replayed_steps", Json::num(r.replayed_steps as f64)),
+                                ("total_s", Json::num(r.total_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    );
+
+    println!("== recovery after rank death: measured (1G+2M, in-process) ==\n");
+    println!("{}", measured.render());
+    println!("== recovery after rank death: modeled (2G+2M, paper epoch) ==\n");
+    println!("{}", modeled.render());
+    let path = kaitian::metrics::write_report("results", "recovery", json)?;
+    println!("wrote {path}");
+    Ok(())
+}

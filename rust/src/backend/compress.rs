@@ -200,6 +200,18 @@ impl CollectiveBackend for Fp16Relay {
         }
     }
 
+    fn abort_peer(&self, peer: usize) {
+        self.comm.fail_peer(peer);
+    }
+
+    fn abort(&self) {
+        self.comm.abort();
+    }
+
+    fn set_epoch(&self, epoch: u64) {
+        self.comm.set_epoch(epoch);
+    }
+
     fn all_reduce_tagged_t(
         &self,
         dtype: DType,

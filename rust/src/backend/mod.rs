@@ -74,6 +74,25 @@ pub trait CollectiveBackend: Send + Sync {
         "ring"
     }
 
+    // -- failure / membership (elastic runtime) -----------------------
+
+    /// Mark one peer (a rank *of this backend's communicator*) failed:
+    /// receives from it error promptly with "peer N lost" instead of
+    /// blocking, while other peers' flows keep working. Default no-op
+    /// for backends without failure tracking.
+    fn abort_peer(&self, _peer: usize) {}
+
+    /// Abort every blocked and future receive on this backend — the
+    /// group is being torn down after a rank death. Collectives in
+    /// flight (blocking or issued [`WorkHandle`]s) resolve with errors,
+    /// never hang. Default no-op.
+    fn abort(&self) {}
+
+    /// Advance the membership epoch on the underlying transport so
+    /// frames from dead group generations are fenced at the mailbox.
+    /// Default no-op.
+    fn set_epoch(&self, _epoch: u64) {}
+
     // -- dtype-generic blocking-tagged core ---------------------------
 
     /// In-place all-reduce of wire bytes under a caller-reserved tag.

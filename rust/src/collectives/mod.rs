@@ -273,6 +273,32 @@ impl Communicator {
         self.transport.as_ref()
     }
 
+    /// Mark `peer` failed on the underlying transport: receives from it
+    /// error with "peer N lost" while other peers' traffic continues.
+    pub fn fail_peer(&self, peer: usize) {
+        self.transport.fail_peer(peer);
+    }
+
+    /// Abort every blocked and future receive on this communicator
+    /// (elastic teardown after a rank death). Issued-but-unfinished
+    /// [`WorkHandle`]s resolve with errors, never hang: their closures
+    /// run to an error against the closed transport, and a comm thread
+    /// that dies first surfaces as the handle's dropped-sender error.
+    pub fn abort(&self) {
+        self.transport.abort();
+    }
+
+    /// Advance the membership epoch on the underlying transport (stale
+    /// frames fenced at the mailbox; see `Mailbox::push_epoch`).
+    pub fn set_epoch(&self, epoch: u64) {
+        self.transport.set_epoch(epoch);
+    }
+
+    /// Current membership epoch of the underlying transport.
+    pub fn epoch(&self) -> u64 {
+        self.transport.epoch()
+    }
+
     /// Reserve a fresh tag namespace for one collective op — always on the
     /// caller thread, in SPMD program order, so local counters agree
     /// across ranks even when the op itself executes later on a comm

@@ -15,6 +15,14 @@
 //! the mailbox flows (ISSUE 6): `submit` is lock-free and signals the
 //! worker's condvar only when it is actually parked, and the worker
 //! spins/pops without any mutex while jobs are flowing.
+//!
+//! Abort propagation (ISSUE 7): a group abort closes the transports, so
+//! an issued job's collective body errors out promptly and the error
+//! flows through the [`WorkSender`] into `wait()`. Chained stages
+//! ([`WorkHandle::map`]/[`and_then`](WorkHandle::and_then)) short-
+//! circuit on the first error, and a comm thread that dies before
+//! completing a handle surfaces as the dropped-sender error — an
+//! aborted handle always resolves, it never hangs.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -276,6 +284,35 @@ mod tests {
     fn map_transforms_result() {
         let h = WorkHandle::ready(Ok(21_u32)).map(|v| v * 2);
         assert_eq!(h.wait().unwrap(), 42);
+    }
+
+    #[test]
+    fn abort_errors_propagate_through_chained_stages() {
+        // An abort error sent by the executing stage must short-circuit
+        // the whole map/and_then chain (the downstream closures never
+        // run) and surface unchanged from wait() — the pattern the
+        // 3-stage KaiTian pipeline relies on when a group is aborted.
+        let t = CommThread::spawn("test-abort");
+        let (handle, done) = WorkHandle::<u32>::pair();
+        t.submit(move || done.send(Err(anyhow::anyhow!("peer 3 lost mid-collective"))));
+        let downstream_ran = Arc::new(AtomicUsize::new(0));
+        let (d1, d2) = (downstream_ran.clone(), downstream_ran.clone());
+        let chained = handle
+            .map(move |v| {
+                d1.fetch_add(1, Ordering::SeqCst);
+                v + 1
+            })
+            .and_then(move |v| {
+                d2.fetch_add(1, Ordering::SeqCst);
+                Ok(v * 2)
+            });
+        let err = chained.wait().unwrap_err();
+        assert!(err.to_string().contains("peer 3 lost"), "{err}");
+        assert_eq!(
+            downstream_ran.load(Ordering::SeqCst),
+            0,
+            "stages after the failed one must not run"
+        );
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod perturb;
 pub mod speed;
 
 pub use memory::MemoryTracker;
-pub use perturb::{LoadProfile, Scenario};
+pub use perturb::{FaultEvent, FaultPlan, LoadProfile, Scenario};
 pub use speed::SpeedModel;
 
 use std::fmt;

@@ -286,6 +286,115 @@ impl Scenario {
     }
 }
 
+/// One scheduled membership event in a fault plan (ISSUE 7): ranks die
+/// and rejoin at fixed virtual steps. Unlike [`LoadProfile`]s, which
+/// slow a device, fault events *remove* it — the elastic runtime and the
+/// virtual-time simulator both consume these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// `rank` dies (stops heartbeating and participating) at `at_step`.
+    Death { rank: usize, at_step: usize },
+    /// `rank` rejoins at the first segment boundary `>= at_step`,
+    /// recovering its state from the checkpoint.
+    Rejoin { rank: usize, at_step: usize },
+}
+
+impl FaultEvent {
+    pub fn rank(&self) -> usize {
+        match self {
+            FaultEvent::Death { rank, .. } | FaultEvent::Rejoin { rank, .. } => *rank,
+        }
+    }
+
+    pub fn at_step(&self) -> usize {
+        match self {
+            FaultEvent::Death { at_step, .. } | FaultEvent::Rejoin { at_step, .. } => *at_step,
+        }
+    }
+}
+
+/// A deterministic schedule of rank deaths/rejoins over virtual steps,
+/// e.g. `"death:1@40,rejoin:1@120"`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// No faults.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by_key(|e| (e.at_step(), e.rank()));
+        Self { events }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// All events, sorted by `(at_step, rank)`.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// The events scheduled exactly at `step`.
+    pub fn events_at(&self, step: usize) -> impl Iterator<Item = &FaultEvent> {
+        self.events.iter().filter(move |e| e.at_step() == step)
+    }
+
+    /// Parse `kind:RANK@STEP` items joined by `,`:
+    /// `"death:1@40"`, `"death:0@10,rejoin:0@60"`, `"none"`/`""`.
+    pub fn parse(text: &str) -> crate::Result<FaultPlan> {
+        let text = text.trim();
+        if text.is_empty() || text == "none" {
+            return Ok(FaultPlan::none());
+        }
+        let mut events = Vec::new();
+        for part in text.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (kind, rest) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("fault event {part:?}: expected kind:RANK@STEP"))?;
+            let (rank_str, step_str) = rest
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault event {part:?}: expected kind:RANK@STEP"))?;
+            let rank: usize = rank_str
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault event {part:?}: bad rank"))?;
+            let at_step: usize = step_str
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault event {part:?}: bad step"))?;
+            events.push(match kind.trim() {
+                "death" => FaultEvent::Death { rank, at_step },
+                "rejoin" => FaultEvent::Rejoin { rank, at_step },
+                other => anyhow::bail!("unknown fault event kind {other:?} (death|rejoin)"),
+            });
+        }
+        // A rejoin must follow a death of the same rank.
+        for e in &events {
+            if let FaultEvent::Rejoin { rank, at_step } = e {
+                let died_before = events.iter().any(|d| {
+                    matches!(d, FaultEvent::Death { rank: r, at_step: s }
+                             if r == rank && s < at_step)
+                });
+                anyhow::ensure!(
+                    died_before,
+                    "fault plan {text:?}: rank {rank} rejoins at {at_step} without dying first"
+                );
+            }
+        }
+        Ok(FaultPlan::new(events))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -409,6 +518,27 @@ mod tests {
         assert_eq!(devices[1].load.factor_at(50), 1.0);
         assert!(Scenario::named("bogus").is_err());
         assert!(Scenario::none().is_none());
+    }
+
+    #[test]
+    fn fault_plan_parses_and_orders_events() {
+        assert!(FaultPlan::parse("none").unwrap().is_none());
+        assert!(FaultPlan::parse("").unwrap().is_none());
+        let plan = FaultPlan::parse("rejoin:1@120, death:1@40").unwrap_err();
+        assert!(plan.to_string().contains("without dying first"), "{plan}");
+        let plan = FaultPlan::parse("death:1@40,rejoin:1@120").unwrap();
+        assert_eq!(
+            plan.events(),
+            &[
+                FaultEvent::Death { rank: 1, at_step: 40 },
+                FaultEvent::Rejoin { rank: 1, at_step: 120 },
+            ]
+        );
+        assert_eq!(plan.events_at(40).count(), 1);
+        assert_eq!(plan.events_at(41).count(), 0);
+        assert!(FaultPlan::parse("death:x@40").is_err());
+        assert!(FaultPlan::parse("explode:1@40").is_err());
+        assert!(FaultPlan::parse("death:1:40").is_err());
     }
 
     #[test]

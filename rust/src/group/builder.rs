@@ -87,6 +87,27 @@ pub struct ClusterHandles {
     pub groups: Vec<Box<dyn ProcessGroup>>,
 }
 
+impl ClusterHandles {
+    /// Mark `global_rank` failed on every rank's group: receives from
+    /// it error with "peer N lost" while healthy flows keep working.
+    /// The elastic supervisor calls this first (failure *attribution*),
+    /// then [`abort`](Self::abort) (prompt teardown of survivors that
+    /// are only transitively blocked on the dead rank).
+    pub fn abort_peer(&self, global_rank: usize) {
+        for g in &self.groups {
+            g.abort_peer(global_rank);
+        }
+    }
+
+    /// Abort all ranks' groups: every blocked and future receive
+    /// errors, so worker threads unwind promptly for re-formation.
+    pub fn abort(&self) {
+        for g in &self.groups {
+            g.abort();
+        }
+    }
+}
+
 fn relay_endpoints(kind: RelayKind, world: usize) -> Result<Vec<Arc<dyn Transport>>> {
     Ok(match kind {
         RelayKind::Inproc | RelayKind::InprocFp16 => InprocMesh::new(world)

@@ -51,6 +51,19 @@ impl ProcessGroup for ProcessGroupFlatGloo {
         Ok(())
     }
 
+    fn abort_peer(&self, global_rank: usize) {
+        // Flat group: global rank == relay rank.
+        self.relay.abort_peer(global_rank);
+    }
+
+    fn abort(&self) {
+        self.relay.abort();
+    }
+
+    fn set_epoch(&self, epoch: u64) {
+        self.relay.set_epoch(epoch);
+    }
+
     fn all_reduce_async(
         &self,
         tensor: CommTensor,

@@ -755,6 +755,41 @@ impl ProcessGroup for ProcessGroupKaiTian {
         Ok(())
     }
 
+    fn abort_peer(&self, global_rank: usize) {
+        // Control mesh addresses all ranks 1:1 with global rank.
+        self.control.abort_peer(global_rank);
+        // Vendor mesh: only if the dead rank is in our homogeneous
+        // group (its vendor-local rank differs from the global one).
+        if self.topo.group_of(self.rank).contains(&global_rank) {
+            self.vendor.abort_peer(self.topo.local_rank(global_rank));
+        }
+        // Relay mesh: the dead rank participates only if it leads a
+        // group; fail its relay-local rank on our leader endpoint.
+        if let (Some(relay), Some(rr)) = (self.relay.as_ref(), self.topo.relay_rank(global_rank)) {
+            relay.abort_peer(rr);
+        }
+    }
+
+    fn abort(&self) {
+        // Tear down all three planes; a rank blocked on a transitively
+        // stalled collective (waiting on a survivor that waits on the
+        // dead rank) only unblocks through this full abort — the
+        // per-peer abort alone cannot reach it.
+        self.vendor.abort();
+        if let Some(relay) = self.relay.as_ref() {
+            relay.abort();
+        }
+        self.control.abort();
+    }
+
+    fn set_epoch(&self, epoch: u64) {
+        self.vendor.set_epoch(epoch);
+        if let Some(relay) = self.relay.as_ref() {
+            relay.set_epoch(epoch);
+        }
+        self.control.set_epoch(epoch);
+    }
+
     fn all_reduce_async(
         &self,
         tensor: CommTensor,

@@ -125,6 +125,27 @@ pub trait ProcessGroup: Send + Sync {
     /// Barrier across all ranks.
     fn barrier(&self) -> Result<()>;
 
+    // -- failure / membership (elastic runtime) -----------------------
+
+    /// Mark one *global* rank failed: every constituent communicator
+    /// that talks to it directly fails just that peer, so receives from
+    /// it error with "peer N lost" while unrelated traffic continues.
+    /// Default no-op for groups without failure tracking.
+    fn abort_peer(&self, _global_rank: usize) {}
+
+    /// Tear the group down: every blocked and future receive errors,
+    /// including collectives already issued as [`WorkHandle`]s (their
+    /// closures run against the closed transports and resolve with
+    /// errors — abort never leaves a handle hanging). Used by the
+    /// elastic runtime before re-forming the group under a new epoch.
+    /// Default no-op.
+    fn abort(&self) {}
+
+    /// Advance the membership epoch on every constituent communicator:
+    /// frames stamped from older epochs are dropped at the mailboxes
+    /// instead of delivered into the re-formed group. Default no-op.
+    fn set_epoch(&self, _epoch: u64) {}
+
     // -- typed async core ---------------------------------------------
 
     /// Issue a global all-reduce; `wait()` returns the reduced tensor.

@@ -46,6 +46,19 @@ impl ProcessGroup for ProcessGroupNative {
         Ok(())
     }
 
+    fn abort_peer(&self, global_rank: usize) {
+        // Homogeneous group: global rank == backend rank.
+        self.backend.abort_peer(global_rank);
+    }
+
+    fn abort(&self) {
+        self.backend.abort();
+    }
+
+    fn set_epoch(&self, epoch: u64) {
+        self.backend.set_epoch(epoch);
+    }
+
     fn all_reduce_async(
         &self,
         tensor: CommTensor,

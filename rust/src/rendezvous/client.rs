@@ -97,6 +97,24 @@ impl RendezvousClient {
         }
     }
 
+    /// (Re-)register `key` as a heartbeat lease expiring `ttl_ms` from
+    /// now. The elastic membership layer calls this periodically; a rank
+    /// that stops renewing is considered dead once the TTL lapses.
+    pub fn lease(&mut self, key: &str, ttl_ms: u64) -> Result<()> {
+        match self.call(Command::Lease(key.into(), ttl_ms))? {
+            Reply::Ok => Ok(()),
+            r => bail!("unexpected LEASE reply {r:?}"),
+        }
+    }
+
+    /// List the unexpired lease keys starting with `prefix`, sorted.
+    pub fn alive(&mut self, prefix: &str) -> Result<Vec<String>> {
+        match self.call(Command::Alive(prefix.into()))? {
+            Reply::Value(v) => Ok(v.split_whitespace().map(str::to_string).collect()),
+            r => bail!("unexpected ALIVE reply {r:?}"),
+        }
+    }
+
     /// Counting barrier: returns when `n` participants have arrived at
     /// `name`. Use a fresh name per round (e.g. suffix a step counter).
     pub fn barrier(&mut self, name: &str, n: u64, timeout: Duration) -> Result<()> {

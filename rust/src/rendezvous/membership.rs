@@ -1,0 +1,302 @@
+//! Elastic group membership over the rendezvous control plane.
+//!
+//! Each live rank holds a heartbeat lease `hb:{job}:{rank}` on the
+//! rendezvous server, renewed from a background thread every
+//! [`MembershipConfig::interval`] with a TTL of
+//! [`MembershipConfig::timeout`]. A rank that crashes (or is
+//! [`kill`](Membership::kill)ed in tests) stops renewing and drops out
+//! of [`alive_ranks`] once the TTL lapses — that is the failure
+//! *detection* primitive of the elastic runtime.
+//!
+//! Group re-formation is fenced by a monotonically increasing **epoch**
+//! stored under `epoch:{job}`. Any survivor that observes a membership
+//! change calls [`bump_epoch`] with the epoch it observed; the bump is
+//! idempotent (exactly one caller per observed epoch wins the
+//! `INCR epoch-bump:{job}:{observed}` race and performs the `SET`), so
+//! concurrent detectors agree on the successor epoch. Transports stamp
+//! outgoing frames with the epoch (see
+//! [`crate::transport::Transport::set_epoch`]); mailboxes drop frames
+//! from epochs below their fence, so a zombie rank from a dead epoch
+//! cannot corrupt the re-formed group's collectives.
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Context;
+
+use super::RendezvousClient;
+use crate::Result;
+
+/// Heartbeat cadence knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct MembershipConfig {
+    /// How often the background thread renews the lease.
+    pub interval: Duration,
+    /// Lease TTL: a rank is declared dead `timeout` after its last
+    /// renewal. Keep `timeout >= 3 * interval` so one delayed renewal
+    /// (scheduler hiccup, GC-less but not jitter-less) is not a false
+    /// positive.
+    pub timeout: Duration,
+}
+
+impl Default for MembershipConfig {
+    fn default() -> Self {
+        Self {
+            interval: Duration::from_millis(50),
+            timeout: Duration::from_millis(300),
+        }
+    }
+}
+
+/// Lease key for `rank` in `job`.
+pub fn lease_key(job: &str, rank: usize) -> String {
+    format!("hb:{job}:{rank}")
+}
+
+fn lease_prefix(job: &str) -> String {
+    format!("hb:{job}:")
+}
+
+fn epoch_key(job: &str) -> String {
+    format!("epoch:{job}")
+}
+
+/// One rank's live membership: a registered lease plus the heartbeat
+/// thread renewing it. Dropping (or [`leave`](Membership::leave)-ing)
+/// deregisters; [`kill`](Membership::kill) simulates a crash by
+/// stopping renewals *without* deleting the lease, so the rank dies at
+/// TTL expiry exactly like a real process death.
+pub struct Membership {
+    key: String,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    heartbeat: Option<JoinHandle<()>>,
+    /// `kill()`ed memberships must not DEL their key on drop — the whole
+    /// point is to let the lease expire.
+    killed: AtomicBool,
+}
+
+impl Membership {
+    /// Register `rank`'s lease (synchronously — once this returns the
+    /// rank is visible in [`alive_ranks`]) and start the heartbeat.
+    pub fn join(
+        addr: SocketAddr,
+        job: &str,
+        rank: usize,
+        cfg: MembershipConfig,
+    ) -> Result<Self> {
+        let key = lease_key(job, rank);
+        let ttl_ms = cfg.timeout.as_millis() as u64;
+        let mut client = RendezvousClient::connect_retry(addr, 50, Duration::from_millis(20))
+            .context("membership join: connect to rendezvous")?;
+        client.lease(&key, ttl_ms)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let key2 = key.clone();
+        let heartbeat = std::thread::Builder::new()
+            .name(format!("kaitian-hb-{rank}"))
+            .spawn(move || {
+                let mut client = client;
+                while !stop2.load(Ordering::SeqCst) {
+                    // Sleep in small chunks so kill()/leave() take effect
+                    // within ~5ms instead of a full interval.
+                    let deadline = std::time::Instant::now() + cfg.interval;
+                    while std::time::Instant::now() < deadline {
+                        if stop2.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(5).min(cfg.interval));
+                    }
+                    if client.lease(&key2, ttl_ms).is_err() {
+                        // Control plane unreachable: reconnect and retry
+                        // next tick; until then the lease keeps aging.
+                        if let Ok(c) =
+                            RendezvousClient::connect_retry(addr, 3, Duration::from_millis(10))
+                        {
+                            client = c;
+                        }
+                    }
+                }
+            })
+            .expect("spawn heartbeat thread");
+        Ok(Self {
+            key,
+            addr,
+            stop,
+            heartbeat: Some(heartbeat),
+            killed: AtomicBool::new(false),
+        })
+    }
+
+    /// Simulate a crash: stop renewing, leave the lease to expire. After
+    /// [`MembershipConfig::timeout`] the rank disappears from
+    /// [`alive_ranks`], exactly as if the process had died.
+    pub fn kill(&self) {
+        self.killed.store(true, Ordering::SeqCst);
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Graceful leave: stop the heartbeat and delete the lease so peers
+    /// see the departure immediately (no TTL wait).
+    pub fn leave(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.heartbeat.take() {
+            let _ = h.join();
+        }
+        if !self.killed.load(Ordering::SeqCst) {
+            if let Ok(mut c) = RendezvousClient::connect(self.addr) {
+                let _ = c.del(&self.key);
+            }
+        }
+    }
+}
+
+impl Drop for Membership {
+    fn drop(&mut self) {
+        self.leave();
+    }
+}
+
+/// The sorted ranks currently holding unexpired leases in `job`.
+pub fn alive_ranks(client: &mut RendezvousClient, job: &str) -> Result<Vec<usize>> {
+    let prefix = lease_prefix(job);
+    let mut ranks: Vec<usize> = client
+        .alive(&prefix)?
+        .iter()
+        .filter_map(|k| k.strip_prefix(&prefix)?.parse().ok())
+        .collect();
+    ranks.sort_unstable();
+    Ok(ranks)
+}
+
+/// The job's current membership epoch (0 if never bumped).
+pub fn current_epoch(client: &mut RendezvousClient, job: &str) -> Result<u64> {
+    Ok(client
+        .get(&epoch_key(job))?
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0))
+}
+
+/// Advance the epoch past `observed`, idempotently: every survivor that
+/// detected the same failure calls this with the same `observed` value;
+/// exactly one wins the `INCR` race and performs the `SET`, the rest
+/// wait until the new epoch is visible. Returns the new epoch
+/// (`>= observed + 1` — higher if further failures raced ahead).
+pub fn bump_epoch(client: &mut RendezvousClient, job: &str, observed: u64) -> Result<u64> {
+    if client.incr(&format!("epoch-bump:{job}:{observed}"))? == 1 {
+        client.set(&epoch_key(job), &(observed + 1).to_string())?;
+        return Ok(observed + 1);
+    }
+    // A peer won the race: poll until its SET lands.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let now = current_epoch(client, job)?;
+        if now > observed {
+            return Ok(now);
+        }
+        if std::time::Instant::now() >= deadline {
+            anyhow::bail!("bump_epoch: winner of bump race for epoch {observed} never SET");
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rendezvous::RendezvousServer;
+
+    fn fast_cfg() -> MembershipConfig {
+        MembershipConfig {
+            interval: Duration::from_millis(20),
+            timeout: Duration::from_millis(120),
+        }
+    }
+
+    #[test]
+    fn heartbeats_keep_rank_alive_past_many_ttls() {
+        let server = RendezvousServer::spawn("127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let m = Membership::join(addr, "j", 0, fast_cfg()).unwrap();
+        let mut c = RendezvousClient::connect(addr).unwrap();
+        assert_eq!(alive_ranks(&mut c, "j").unwrap(), vec![0]);
+        // Several TTLs later the heartbeat has kept the lease fresh.
+        std::thread::sleep(Duration::from_millis(400));
+        assert_eq!(alive_ranks(&mut c, "j").unwrap(), vec![0]);
+        drop(m);
+        server.shutdown();
+    }
+
+    #[test]
+    fn killed_rank_expires_within_timeout() {
+        let server = RendezvousServer::spawn("127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let cfg = fast_cfg();
+        let m0 = Membership::join(addr, "j", 0, cfg).unwrap();
+        let m1 = Membership::join(addr, "j", 1, cfg).unwrap();
+        let mut c = RendezvousClient::connect(addr).unwrap();
+        assert_eq!(alive_ranks(&mut c, "j").unwrap(), vec![0, 1]);
+        let t0 = std::time::Instant::now();
+        m1.kill();
+        // Poll until rank 1 drops out; must happen within ~timeout plus
+        // one renewal interval of slack.
+        let detected = loop {
+            if alive_ranks(&mut c, "j").unwrap() == vec![0] {
+                break t0.elapsed();
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(3),
+                "dead rank never expired"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        assert!(
+            detected <= cfg.timeout + 2 * cfg.interval + Duration::from_millis(50),
+            "detection took {detected:?}, timeout was {:?}",
+            cfg.timeout
+        );
+        drop(m0);
+        drop(m1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn graceful_leave_is_immediate() {
+        let server = RendezvousServer::spawn("127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let mut m = Membership::join(addr, "j", 3, fast_cfg()).unwrap();
+        let mut c = RendezvousClient::connect(addr).unwrap();
+        assert_eq!(alive_ranks(&mut c, "j").unwrap(), vec![3]);
+        m.leave();
+        // No TTL wait: the lease was DELeted.
+        assert_eq!(alive_ranks(&mut c, "j").unwrap(), Vec::<usize>::new());
+        server.shutdown();
+    }
+
+    #[test]
+    fn epoch_bump_is_idempotent_across_racing_survivors() {
+        let server = RendezvousServer::spawn("127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        let mut c = RendezvousClient::connect(addr).unwrap();
+        assert_eq!(current_epoch(&mut c, "j").unwrap(), 0);
+        // Four survivors observe epoch 0 dead and race to bump it.
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut c = RendezvousClient::connect(addr).unwrap();
+                    bump_epoch(&mut c, "j", 0).unwrap()
+                })
+            })
+            .collect();
+        for h in hs {
+            assert_eq!(h.join().unwrap(), 1, "all racers agree on the successor");
+        }
+        assert_eq!(current_epoch(&mut c, "j").unwrap(), 1);
+        // A later, distinct failure advances further.
+        assert_eq!(bump_epoch(&mut c, "j", 1).unwrap(), 2);
+        server.shutdown();
+    }
+}

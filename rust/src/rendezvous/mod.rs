@@ -13,12 +13,19 @@
 //!
 //! Protocol ([`protocol`]): single-line text commands, length-prefixed
 //! values — trivially debuggable with `nc`.
+//!
+//! Elastic membership ([`membership`], ISSUE 7): heartbeat leases
+//! (`LEASE`/`ALIVE`) detect rank death within a configurable TTL, and a
+//! server-side epoch counter fences traffic from dead group
+//! generations during re-formation.
 
 pub mod client;
+pub mod membership;
 pub mod protocol;
 pub mod server;
 
 pub use client::RendezvousClient;
+pub use membership::{Membership, MembershipConfig};
 pub use server::RendezvousServer;
 
 #[cfg(test)]

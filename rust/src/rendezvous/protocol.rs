@@ -8,12 +8,20 @@
 //! DEL <key>
 //! INCR <key>
 //! WAIT <key> <n> <timeout-ms>
+//! LEASE <key> <ttl-ms>
+//! ALIVE <prefix>
 //! ```
 //! Replies (server → client):
 //! ```text
 //! PONG | OK | NIL | INT <n> | VALUE <len>\n<bytes> | ERR <message>
 //! ```
 //! Values are length-prefixed so they can contain spaces/newlines.
+//!
+//! `LEASE`/`ALIVE` are the heartbeat primitives of the elastic
+//! membership layer (see [`crate::rendezvous::membership`]): `LEASE`
+//! (re-)registers `key` with a TTL, `ALIVE` returns the
+//! space-separated, sorted set of unexpired lease keys under `prefix`.
+//! A rank that stops renewing its lease is *dead* after the TTL.
 
 use std::io::{BufRead, Write};
 
@@ -34,7 +42,16 @@ pub enum Command {
         n: u64,
         timeout_ms: u64,
     },
+    /// (Re-)register `key` as a lease that expires `ttl_ms` from now.
+    Lease(String, u64),
+    /// List unexpired lease keys beginning with the given prefix.
+    Alive(String),
 }
+
+/// Largest `SET` value (and therefore `VALUE` reply) the protocol
+/// accepts: the length field comes off the wire, so it must be bounded
+/// before it sizes an allocation (same hardening as the TCP frame cap).
+pub const MAX_VALUE_BYTES: usize = 1 << 20;
 
 /// Server reply.
 #[derive(Debug, Clone, PartialEq)]
@@ -65,6 +82,9 @@ pub fn read_command(r: &mut impl BufRead) -> Result<Option<Command>> {
                 .ok_or_else(|| anyhow!("SET needs value length"))?
                 .parse()
                 .context("SET length")?;
+            if len > MAX_VALUE_BYTES {
+                bail!("SET value length {len} exceeds cap {MAX_VALUE_BYTES}");
+            }
             let mut buf = vec![0_u8; len + 1]; // + trailing '\n'
             r.read_exact(&mut buf)?;
             buf.pop();
@@ -81,6 +101,18 @@ pub fn read_command(r: &mut impl BufRead) -> Result<Option<Command>> {
             let timeout_ms = nums.next().ok_or_else(|| anyhow!("WAIT timeout"))?.parse()?;
             Command::Wait { key, n, timeout_ms }
         }
+        "LEASE" => {
+            let key = parts.next().ok_or_else(|| anyhow!("LEASE needs key"))?.to_string();
+            let ttl_ms: u64 = parts
+                .next()
+                .ok_or_else(|| anyhow!("LEASE needs ttl-ms"))?
+                .parse()
+                .context("LEASE ttl")?;
+            Command::Lease(key, ttl_ms)
+        }
+        "ALIVE" => Command::Alive(
+            parts.next().ok_or_else(|| anyhow!("ALIVE needs prefix"))?.to_string(),
+        ),
         other => bail!("unknown command {other:?}"),
     };
     Ok(Some(cmd))
@@ -99,6 +131,8 @@ pub fn write_command(w: &mut impl Write, cmd: &Command) -> Result<()> {
         Command::Del(k) => writeln!(w, "DEL {k}")?,
         Command::Incr(k) => writeln!(w, "INCR {k}")?,
         Command::Wait { key, n, timeout_ms } => writeln!(w, "WAIT {key} {n} {timeout_ms}")?,
+        Command::Lease(k, ttl_ms) => writeln!(w, "LEASE {k} {ttl_ms}")?,
+        Command::Alive(prefix) => writeln!(w, "ALIVE {prefix}")?,
     }
     w.flush()?;
     Ok(())
@@ -182,6 +216,16 @@ mod tests {
             n: 4,
             timeout_ms: 5000,
         });
+        roundtrip_cmd(Command::Lease("hb:job:3".into(), 1500));
+        roundtrip_cmd(Command::Alive("hb:job:".into()));
+    }
+
+    #[test]
+    fn oversized_set_value_is_rejected() {
+        let hdr = format!("SET k {}\n", MAX_VALUE_BYTES + 1);
+        let mut r = BufReader::new(hdr.as_bytes());
+        let err = read_command(&mut r).unwrap_err();
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
     }
 
     #[test]

@@ -1,10 +1,19 @@
-//! Rendezvous server: thread-per-connection TCP KV store with barriers.
+//! Rendezvous server: thread-per-connection TCP KV store with barriers
+//! and heartbeat leases.
+//!
+//! Hardening (ISSUE 7, satellite 3): the control plane must outlive any
+//! single misbehaving client. Handlers never `.unwrap()` the shared
+//! state lock — a handler thread that panicked while holding it would
+//! poison the mutex and cascade a panic into *every* later request —
+//! and the accept path degrades to logging instead of `.expect()`ing.
+//! Malformed commands get an `ERR` reply and the connection is dropped;
+//! the server keeps serving everyone else.
 
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::Context;
@@ -17,12 +26,27 @@ struct State {
     kv: HashMap<String, String>,
     counters: HashMap<String, i64>,
     barriers: HashMap<String, u64>,
+    /// Heartbeat leases: key → expiry instant. Expired entries are
+    /// purged lazily on `ALIVE`/`LEASE` (no reaper thread needed — a
+    /// stale entry past its expiry is already "dead" to every reader).
+    leases: HashMap<String, Instant>,
 }
 
 struct Shared {
     state: Mutex<State>,
     barrier_cv: Condvar,
     running: AtomicBool,
+}
+
+impl Shared {
+    /// Poison-tolerant lock: a client handler that panicked while
+    /// holding the mutex must not take the control plane down with it.
+    /// The KV/counter/barrier/lease maps stay structurally valid under
+    /// every partial handler execution, so continuing with the inner
+    /// guard is sound.
+    fn state(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
 }
 
 /// A running rendezvous server (background accept loop).
@@ -45,9 +69,10 @@ impl RendezvousServer {
         let shared2 = shared.clone();
         let accept_thread = std::thread::spawn(move || {
             // Nonblocking-ish accept loop: poll `running` between accepts.
-            listener
-                .set_nonblocking(true)
-                .expect("set_nonblocking on listener");
+            if let Err(e) = listener.set_nonblocking(true) {
+                eprintln!("kaitian: rendezvous listener set_nonblocking failed: {e}");
+                return;
+            }
             while shared2.running.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
@@ -96,37 +121,70 @@ impl Drop for RendezvousServer {
 fn serve_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
-    while let Some(cmd) = read_command(&mut reader).unwrap_or(None) {
-        let reply = handle(&shared, cmd);
-        write_reply(&mut writer, &reply)?;
+    loop {
+        match read_command(&mut reader) {
+            Ok(Some(cmd)) => {
+                let reply = handle(&shared, cmd);
+                write_reply(&mut writer, &reply)?;
+            }
+            Ok(None) => return Ok(()), // clean EOF
+            Err(e) => {
+                // Malformed traffic: tell this client what went wrong
+                // and drop only its connection — the shared state and
+                // every other client are untouched.
+                let _ = write_reply(&mut writer, &Reply::Err(format!("bad command: {e}")));
+                return Ok(());
+            }
+        }
     }
-    Ok(())
 }
 
 fn handle(shared: &Shared, cmd: Command) -> Reply {
     match cmd {
         Command::Ping => Reply::Pong,
         Command::Set(k, v) => {
-            shared.state.lock().unwrap().kv.insert(k, v);
+            shared.state().kv.insert(k, v);
             Reply::Ok
         }
-        Command::Get(k) => match shared.state.lock().unwrap().kv.get(&k) {
+        Command::Get(k) => match shared.state().kv.get(&k) {
             Some(v) => Reply::Value(v.clone()),
             None => Reply::Nil,
         },
         Command::Del(k) => {
-            shared.state.lock().unwrap().kv.remove(&k);
+            let mut st = shared.state();
+            st.kv.remove(&k);
+            // Graceful leave: deleting a lease key deregisters the
+            // member immediately instead of waiting out the TTL.
+            st.leases.remove(&k);
             Reply::Ok
         }
         Command::Incr(k) => {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = shared.state();
             let c = st.counters.entry(k).or_insert(0);
             *c += 1;
             Reply::Int(*c)
         }
+        Command::Lease(k, ttl_ms) => {
+            let expiry = Instant::now() + Duration::from_millis(ttl_ms);
+            shared.state().leases.insert(k, expiry);
+            Reply::Ok
+        }
+        Command::Alive(prefix) => {
+            let mut st = shared.state();
+            let now = Instant::now();
+            st.leases.retain(|_, expiry| *expiry > now);
+            let mut keys: Vec<&str> = st
+                .leases
+                .keys()
+                .filter(|k| k.starts_with(&prefix))
+                .map(String::as_str)
+                .collect();
+            keys.sort_unstable();
+            Reply::Value(keys.join(" "))
+        }
         Command::Wait { key, n, timeout_ms } => {
             let deadline = Instant::now() + Duration::from_millis(timeout_ms);
-            let mut st = shared.state.lock().unwrap();
+            let mut st = shared.state();
             *st.barriers.entry(key.clone()).or_insert(0) += 1;
             shared.barrier_cv.notify_all();
             loop {
@@ -144,11 +202,10 @@ fn handle(shared: &Shared, cmd: Command) -> Reply {
                         "barrier {key:?} timeout: {arrived}/{n} arrived"
                     ));
                 }
-                let (guard, _) = shared
-                    .barrier_cv
-                    .wait_timeout(st, deadline - now)
-                    .unwrap();
-                st = guard;
+                st = match shared.barrier_cv.wait_timeout(st, deadline - now) {
+                    Ok((guard, _)) => guard,
+                    Err(e) => e.into_inner().0,
+                };
             }
         }
     }
@@ -186,6 +243,47 @@ mod tests {
         let mut b = RendezvousClient::connect(addr).unwrap();
         a.set("shared", "from-a").unwrap();
         assert_eq!(b.get("shared").unwrap().as_deref(), Some("from-a"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn leases_expire_and_renew() {
+        let server = RendezvousServer::spawn("127.0.0.1:0").unwrap();
+        let mut c = RendezvousClient::connect(server.addr()).unwrap();
+        c.lease("hb:j:0", 10_000).unwrap();
+        c.lease("hb:j:1", 40).unwrap();
+        c.lease("other:x", 10_000).unwrap();
+        assert_eq!(c.alive("hb:j:").unwrap(), vec!["hb:j:0", "hb:j:1"]);
+        std::thread::sleep(Duration::from_millis(120));
+        // Rank 1 stopped renewing: its lease is gone after the TTL.
+        assert_eq!(c.alive("hb:j:").unwrap(), vec!["hb:j:0"]);
+        // A renewal resurrects it.
+        c.lease("hb:j:1", 10_000).unwrap();
+        assert_eq!(c.alive("hb:j:").unwrap(), vec!["hb:j:0", "hb:j:1"]);
+        // Graceful leave: DEL drops the lease immediately.
+        c.del("hb:j:0").unwrap();
+        assert_eq!(c.alive("hb:j:").unwrap(), vec!["hb:j:1"]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_client_does_not_kill_the_server() {
+        use std::io::{Read, Write};
+        let server = RendezvousServer::spawn("127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        // A raw client sends garbage, then an absurd SET length.
+        for attack in ["BOGUS nonsense\n", &format!("SET k {}\n", usize::MAX)] {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(attack.as_bytes()).unwrap();
+            // Server replies ERR (or just closes); it must not bring
+            // the whole control plane down either way.
+            let mut buf = [0_u8; 256];
+            let _ = s.read(&mut buf);
+        }
+        // Healthy clients still work after both attacks.
+        let mut c = RendezvousClient::connect(addr).unwrap();
+        c.set("still", "alive").unwrap();
+        assert_eq!(c.get("still").unwrap().as_deref(), Some("alive"));
         server.shutdown();
     }
 }

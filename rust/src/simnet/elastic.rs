@@ -1,0 +1,295 @@
+//! Virtual-time elastic simulation: what a rank death costs end to end.
+//!
+//! The real elastic runtime ([`crate::train::elastic`]) measures
+//! recovery in wall-clock on a small in-process cluster; this module
+//! prices the same lifecycle in virtual time at paper scale, so the
+//! recovery bench can report both a *measured* and a *modeled* number:
+//!
+//! ```text
+//! death at step s
+//!   + heartbeat_timeout_s        (detection: the lease must expire)
+//!   + regroup_s                  (abort, epoch bump, cluster rebuild)
+//!   + replayed · new_step_s      (re-execute steps since the last
+//!                                 segment checkpoint, on the shrunk
+//!                                 world with a re-sliced allocation)
+//! ```
+//!
+//! Deaths and rejoins come from a [`FaultPlan`]
+//! (`"death:1@40,rejoin:1@120"`); rejoins land at the first segment
+//! boundary at or after their scheduled step, mirroring the runtime's
+//! checkpoint-boundary rejoin.
+
+use crate::device::{parse_cluster, DeviceSpec, FaultEvent, FaultPlan};
+use crate::group::GroupMode;
+use crate::perfmodel::PerfModel;
+use crate::sched::{cap_allocation, proportional_allocation};
+use crate::Result;
+
+/// An elastic virtual-time experiment.
+#[derive(Debug, Clone)]
+pub struct ElasticSimConfig {
+    pub cluster: String,
+    pub global_batch: usize,
+    /// Gradient bytes per step.
+    pub grad_bytes: usize,
+    /// Optimizer steps to complete (replays are extra work on top).
+    pub steps: usize,
+    /// Largest per-device batch (compiled bucket cap).
+    pub cap: usize,
+    /// Checkpoint cadence: a failure replays at most this many steps.
+    pub segment_steps: usize,
+    /// Modeled failure-detection latency (the heartbeat lease TTL).
+    pub heartbeat_timeout_s: f64,
+    /// Modeled re-formation cost (abort + epoch bump + rebuild), per
+    /// membership change.
+    pub regroup_s: f64,
+    pub plan: FaultPlan,
+}
+
+impl ElasticSimConfig {
+    /// One paper-shaped epoch (CIFAR-10 @ B=256, 195 steps) with
+    /// 20-step checkpoint segments and a 300 ms heartbeat timeout.
+    pub fn paper_epoch(cluster: &str, plan: FaultPlan) -> Self {
+        Self {
+            cluster: cluster.into(),
+            global_batch: 256,
+            grad_bytes: 933_544,
+            steps: 195,
+            cap: 256,
+            segment_steps: 20,
+            heartbeat_timeout_s: 0.3,
+            regroup_s: 0.05,
+            plan,
+        }
+    }
+}
+
+/// One modeled recovery (death → resumed training).
+#[derive(Debug, Clone)]
+pub struct SimRecovery {
+    pub at_step: usize,
+    pub dead_rank: usize,
+    pub detection_s: f64,
+    pub regroup_s: f64,
+    /// Cost of re-executing the steps lost since the last checkpoint.
+    pub replay_s: f64,
+    pub replayed_steps: usize,
+    pub total_s: f64,
+}
+
+/// Elastic simulation outcome.
+#[derive(Debug, Clone)]
+pub struct ElasticSimReport {
+    pub cluster: String,
+    /// Total modeled time including every recovery.
+    pub total_s: f64,
+    /// The same run with no faults (for the overhead delta).
+    pub fault_free_s: f64,
+    pub recoveries: Vec<SimRecovery>,
+    pub initial_world: usize,
+    pub final_world: usize,
+}
+
+impl ElasticSimReport {
+    /// Extra time attributable to the fault plan.
+    pub fn overhead_s(&self) -> f64 {
+        self.total_s - self.fault_free_s
+    }
+}
+
+/// Price one step for the live membership: straggler compute over the
+/// score-proportional allocation, plus the comm cost of the (possibly
+/// shrunk) group structure. Returns `(step_seconds, allocation)`.
+fn price_membership(
+    model: &PerfModel,
+    live: &[DeviceSpec],
+    global_batch: usize,
+    cap: usize,
+    grad_bytes: usize,
+) -> Result<(f64, Vec<usize>)> {
+    let scores = model.scores(live);
+    let allocation = cap_allocation(&proportional_allocation(&scores, global_batch), cap)?;
+    let straggler = live
+        .iter()
+        .zip(&allocation)
+        .map(|(d, &b)| {
+            if b == 0 {
+                0.0
+            } else {
+                model.speed.step_time(d.dtype, b)
+            }
+        })
+        .fold(0.0, f64::max);
+    let comm = model.step_cost_with_alloc(live, &allocation, grad_bytes, GroupMode::Kaitian);
+    Ok((straggler + comm.intra_s + comm.inter_s + comm.dispatch_s, allocation))
+}
+
+/// Re-rank a live subset densely, preserving device types.
+fn live_devices(all: &[DeviceSpec], alive: &[bool]) -> Vec<DeviceSpec> {
+    all.iter()
+        .zip(alive)
+        .filter(|(_, &a)| a)
+        .enumerate()
+        .map(|(new_rank, (d, _))| DeviceSpec::new(new_rank, d.dtype))
+        .collect()
+}
+
+/// Run one elastic virtual-time experiment.
+pub fn simulate_elastic(model: &PerfModel, cfg: &ElasticSimConfig) -> Result<ElasticSimReport> {
+    anyhow::ensure!(cfg.segment_steps > 0, "segment_steps must be positive");
+    let all = parse_cluster(&cfg.cluster)?;
+    let world = all.len();
+    for e in cfg.plan.events() {
+        anyhow::ensure!(
+            e.rank() < world,
+            "fault plan addresses rank {} in a {world}-rank cluster",
+            e.rank()
+        );
+    }
+
+    let mut alive = vec![true; world];
+    let (mut step_s, _) =
+        price_membership(model, &all, cfg.global_batch, cfg.cap, cfg.grad_bytes)?;
+    let fault_free_s = step_s * cfg.steps as f64;
+
+    let mut total_s = 0.0;
+    let mut recoveries = Vec::new();
+    let mut last_ckpt = 0_usize;
+    let mut pending_rejoins: Vec<FaultEvent> = Vec::new();
+
+    for step in 0..cfg.steps {
+        // Segment boundary: checkpoint, and land any due rejoins.
+        if step % cfg.segment_steps == 0 {
+            last_ckpt = step;
+            let due: Vec<FaultEvent> = pending_rejoins
+                .iter()
+                .filter(|e| e.at_step() <= step)
+                .copied()
+                .collect();
+            if !due.is_empty() {
+                pending_rejoins.retain(|e| e.at_step() > step);
+                for e in due {
+                    alive[e.rank()] = true;
+                }
+                total_s += cfg.regroup_s;
+                let (s, _) = price_membership(
+                    model,
+                    &live_devices(&all, &alive),
+                    cfg.global_batch,
+                    cfg.cap,
+                    cfg.grad_bytes,
+                )?;
+                step_s = s;
+            }
+        }
+        for e in cfg.plan.events_at(step) {
+            match e {
+                FaultEvent::Death { rank, .. } => {
+                    anyhow::ensure!(alive[*rank], "rank {rank} died twice");
+                    alive[*rank] = false;
+                    anyhow::ensure!(
+                        alive.iter().any(|&a| a),
+                        "fault plan kills the whole cluster"
+                    );
+                    let (new_step_s, _) = price_membership(
+                        model,
+                        &live_devices(&all, &alive),
+                        cfg.global_batch,
+                        cfg.cap,
+                        cfg.grad_bytes,
+                    )?;
+                    let replayed = step - last_ckpt;
+                    let replay_s = new_step_s * replayed as f64;
+                    let recovery_total = cfg.heartbeat_timeout_s + cfg.regroup_s + replay_s;
+                    recoveries.push(SimRecovery {
+                        at_step: step,
+                        dead_rank: *rank,
+                        detection_s: cfg.heartbeat_timeout_s,
+                        regroup_s: cfg.regroup_s,
+                        replay_s,
+                        replayed_steps: replayed,
+                        total_s: recovery_total,
+                    });
+                    total_s += recovery_total;
+                    step_s = new_step_s;
+                }
+                FaultEvent::Rejoin { .. } => pending_rejoins.push(*e),
+            }
+        }
+        total_s += step_s;
+    }
+
+    Ok(ElasticSimReport {
+        cluster: cfg.cluster.clone(),
+        total_s,
+        fault_free_s,
+        recoveries,
+        initial_world: world,
+        final_world: alive.iter().filter(|&&a| a).count(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_free_plan_matches_baseline() {
+        let m = PerfModel::paper_default();
+        let r = simulate_elastic(&m, &ElasticSimConfig::paper_epoch("2G+2M", FaultPlan::none()))
+            .unwrap();
+        assert!(r.recoveries.is_empty());
+        assert!((r.total_s - r.fault_free_s).abs() < 1e-9);
+        assert_eq!((r.initial_world, r.final_world), (4, 4));
+    }
+
+    #[test]
+    fn death_costs_detection_regroup_and_replay() {
+        let m = PerfModel::paper_default();
+        let cfg =
+            ElasticSimConfig::paper_epoch("2G+2M", FaultPlan::parse("death:1@47").unwrap());
+        let r = simulate_elastic(&m, &cfg).unwrap();
+        assert_eq!(r.recoveries.len(), 1);
+        let rec = &r.recoveries[0];
+        // 47 is 7 steps past the step-40 checkpoint.
+        assert_eq!(rec.replayed_steps, 7);
+        assert!((rec.detection_s - cfg.heartbeat_timeout_s).abs() < 1e-12);
+        assert_eq!(r.final_world, 3);
+        // The shrunk world also runs remaining steps slower, so the
+        // overhead exceeds the bare recovery cost.
+        assert!(r.overhead_s() >= rec.total_s - 1e-9, "{}", r.overhead_s());
+    }
+
+    #[test]
+    fn death_at_checkpoint_replays_nothing() {
+        let m = PerfModel::paper_default();
+        let cfg =
+            ElasticSimConfig::paper_epoch("2G+2M", FaultPlan::parse("death:0@40").unwrap());
+        let r = simulate_elastic(&m, &cfg).unwrap();
+        assert_eq!(r.recoveries[0].replayed_steps, 0);
+        assert!((r.recoveries[0].replay_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejoin_lands_at_a_segment_boundary_and_restores_world() {
+        let m = PerfModel::paper_default();
+        let cfg = ElasticSimConfig::paper_epoch(
+            "2G+2M",
+            FaultPlan::parse("death:1@47,rejoin:1@90").unwrap(),
+        );
+        let r = simulate_elastic(&m, &cfg).unwrap();
+        assert_eq!(r.final_world, 4, "rejoin must restore the world");
+        // A death-then-rejoin run still costs more than fault-free.
+        assert!(r.overhead_s() > 0.0);
+    }
+
+    #[test]
+    fn whole_cluster_death_is_rejected() {
+        let m = PerfModel::paper_default();
+        let cfg = ElasticSimConfig::paper_epoch(
+            "1G+1M",
+            FaultPlan::parse("death:0@10,death:1@20").unwrap(),
+        );
+        assert!(simulate_elastic(&m, &cfg).is_err());
+    }
+}

@@ -9,10 +9,14 @@
 //!
 //! [`dynamic`] extends this to time-varying loads: per-step perturbed
 //! compute with the guarded rebalancing controller in the loop.
+//! [`elastic`] extends it to membership changes: rank deaths and
+//! rejoins priced as detection + regroup + checkpoint replay.
 
 pub mod dynamic;
+pub mod elastic;
 
 pub use dynamic::{simulate_dynamic, DynamicSimConfig, DynamicSimReport};
+pub use elastic::{simulate_elastic, ElasticSimConfig, ElasticSimReport, SimRecovery};
 
 use crate::device::{parse_cluster, DeviceSpec};
 use crate::group::GroupMode;

@@ -16,11 +16,13 @@
 //! end of training).
 
 pub mod checkpoint;
+pub mod elastic;
 pub mod loop_;
 pub mod options;
 pub mod schedule;
 
 pub use checkpoint::Checkpoint;
+pub use elastic::{train_elastic, ElasticConfig, ElasticReport, FaultSpec, RecoveryTiming};
 pub use loop_::train;
 pub use options::TrainOptions;
 pub use schedule::LrSchedule;

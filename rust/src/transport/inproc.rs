@@ -6,6 +6,7 @@
 //! the peer's slab-backed [`Mailbox`]. The intra-group collectives of
 //! `NcclSim`/`CnclSim` run over this.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::bail;
@@ -26,6 +27,7 @@ impl InprocMesh {
             .map(|rank| InprocEndpoint {
                 rank,
                 mailboxes: mailboxes.clone(),
+                epoch: AtomicU64::new(0),
             })
             .collect()
     }
@@ -36,6 +38,9 @@ pub struct InprocEndpoint {
     rank: usize,
     /// All ranks' mailboxes; `send(j, ..)` pushes into `mailboxes[j]`.
     mailboxes: Vec<Arc<Mailbox>>,
+    /// This endpoint's membership epoch stamp: sends carry it, and the
+    /// receiving mailbox drops stamps older than its own fence.
+    epoch: AtomicU64,
 }
 
 impl InprocEndpoint {
@@ -60,7 +65,13 @@ impl Transport for InprocEndpoint {
         if peer >= self.mailboxes.len() {
             bail!("send to rank {peer} but world is {}", self.mailboxes.len());
         }
-        self.mailboxes[peer].push(self.rank, tag, data);
+        let stamp = self.epoch.load(Ordering::SeqCst);
+        if !self.mailboxes[peer].push_epoch(self.rank, tag, data, stamp) {
+            bail!(
+                "send to rank {peer} dropped by epoch fence \
+                 (our epoch {stamp} is stale — this rank was removed from the group)"
+            );
+        }
         Ok(())
     }
 
@@ -73,6 +84,25 @@ impl Transport for InprocEndpoint {
 
     fn kind(&self) -> &'static str {
         "inproc"
+    }
+
+    fn fail_peer(&self, peer: usize) {
+        if peer < self.mailboxes.len() {
+            self.mailboxes[self.rank].close_peer(peer);
+        }
+    }
+
+    fn abort(&self) {
+        self.mailboxes[self.rank].close();
+    }
+
+    fn set_epoch(&self, epoch: u64) {
+        self.epoch.fetch_max(epoch, Ordering::SeqCst);
+        self.mailboxes[self.rank].set_epoch(epoch);
+    }
+
+    fn epoch(&self) -> u64 {
+        self.mailboxes[self.rank].epoch()
     }
 }
 
@@ -129,6 +159,32 @@ mod tests {
         eps[0].send(1, 1, payload.slice(2, 6)).unwrap();
         let got = eps[1].recv(0, 1).unwrap();
         assert_eq!(got, vec![3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn fail_peer_spares_other_flows() {
+        let eps = InprocMesh::new(3);
+        eps[1].send(0, 1, Buf::copy_from_slice(&[7])).unwrap();
+        eps[0].fail_peer(2);
+        // Traffic from rank 1 still flows after rank 2 is marked dead.
+        assert_eq!(eps[0].recv(1, 1).unwrap(), vec![7]);
+        let err = eps[0].recv(2, 1).unwrap_err();
+        assert!(err.to_string().contains("peer 2 lost"), "got: {err}");
+    }
+
+    #[test]
+    fn epoch_fence_drops_stale_senders() {
+        let eps = InprocMesh::new(2);
+        // Rank 1 is fenced out: rank 0 (and the mailboxes) move to epoch 1.
+        eps[0].set_epoch(1);
+        assert_eq!(eps[0].epoch(), 1);
+        // A stale rank-1 send into rank 0 is refused, loudly.
+        let err = eps[1].send(0, 5, Buf::copy_from_slice(&[1])).unwrap_err();
+        assert!(err.to_string().contains("epoch fence"), "got: {err}");
+        // Current-epoch traffic is unaffected.
+        eps[1].set_epoch(1);
+        eps[1].send(0, 5, Buf::copy_from_slice(&[2])).unwrap();
+        assert_eq!(eps[0].recv(1, 5).unwrap(), vec![2]);
     }
 
     #[test]

@@ -37,6 +37,24 @@
 //! revert to EMPTY, which keeps probe chains stable without locks;
 //! inserts reuse them, so the table occupancy tracks *peak concurrent*
 //! flows, not cumulative tag count.
+//!
+//! # Failure semantics (ISSUE 7)
+//!
+//! Two failure scopes, deliberately distinct:
+//!
+//! * [`Mailbox::close`] — the whole mailbox is going away (mesh
+//!   shutdown or a collective abort). Every blocked receiver errors.
+//! * [`Mailbox::close_peer`] — exactly one peer died. Only receivers
+//!   waiting on that peer's flows error (with a distinct
+//!   `"peer N lost"` message); traffic from every other peer keeps
+//!   flowing. Messages the dead peer queued *before* dying remain
+//!   deliverable, matching `close`'s drain-first contract.
+//!
+//! Epoch fencing: the membership layer bumps the mailbox epoch
+//! ([`Mailbox::set_epoch`]) when the group re-forms after a failure.
+//! [`Mailbox::push_epoch`] drops frames stamped with an older epoch at
+//! the door (counted by [`Mailbox::stale_dropped`]) — a straggling
+//! frame from a dead generation is never delivered into the new one.
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -67,6 +85,10 @@ pub fn recv_timeout() -> Duration {
 
 /// Shard count: (peer, tag) flows spread across this many entry tables.
 const SHARDS: usize = 16;
+/// Words in the dead-peer bitmap: covers ranks 0..1024 with one atomic
+/// load on the pop path. Worlds beyond that fall back to whole-mailbox
+/// close on peer failure (see [`Mailbox::close_peer`]).
+const DEAD_WORDS: usize = 16;
 /// Entries per shard (power of two). Bounds *concurrent* flows per
 /// shard; tombstoned entries are reused by later flows.
 const FLOWS_PER_SHARD: usize = 2048;
@@ -189,6 +211,15 @@ pub struct Mailbox {
     /// in the mailbox, so fast-path tests can assert it stayed at zero.
     park_locks: AtomicU64,
     closed: AtomicBool,
+    /// Dead-peer bitmap: bit `p` set means peer `p`'s flows fail with
+    /// "peer p lost" instead of blocking. One relaxed-cost atomic load
+    /// on the pop wait path; never consulted on the data-ready path.
+    dead: [AtomicU64; DEAD_WORDS],
+    /// Current membership epoch (monotonic). Frames stamped with an
+    /// older epoch are refused by [`Mailbox::push_epoch`].
+    epoch: AtomicU64,
+    /// Frames dropped by epoch fencing — observability gauge.
+    stale_dropped: AtomicU64,
 }
 
 impl Default for Mailbox {
@@ -220,6 +251,9 @@ impl Mailbox {
             pending: AtomicU64::new(0),
             park_locks: AtomicU64::new(0),
             closed: AtomicBool::new(false),
+            dead: std::array::from_fn(|_| AtomicU64::new(0)),
+            epoch: AtomicU64::new(0),
+            stale_dropped: AtomicU64::new(0),
         }
     }
 
@@ -418,6 +452,37 @@ impl Mailbox {
         self.unpin(pin, false);
     }
 
+    /// Epoch-fenced [`push`](Self::push): deliver only if `epoch` is
+    /// current. A frame stamped with an older membership epoch is from
+    /// a dead group generation — drop it (returns `false`, counted in
+    /// [`stale_dropped`](Self::stale_dropped)) instead of letting it
+    /// tag-match a collective of the re-formed group.
+    pub fn push_epoch(&self, peer: usize, tag: u64, data: Buf, epoch: u64) -> bool {
+        if epoch < self.epoch.load(Ordering::SeqCst) {
+            self.stale_dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        self.push(peer, tag, data);
+        true
+    }
+
+    /// Advance the membership epoch (monotonic; lower values are
+    /// ignored). Subsequent [`push_epoch`](Self::push_epoch) calls with
+    /// an older stamp are dropped.
+    pub fn set_epoch(&self, epoch: u64) {
+        self.epoch.fetch_max(epoch, Ordering::SeqCst);
+    }
+
+    /// The current membership epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Frames refused by epoch fencing since creation.
+    pub fn stale_dropped(&self) -> u64 {
+        self.stale_dropped.load(Ordering::Relaxed)
+    }
+
     /// Dequeue one message if the flow is non-empty. The empty check is
     /// two atomic loads — a spinning receiver does not touch any cache
     /// line the pusher CASes until a message is actually present.
@@ -453,6 +518,9 @@ impl Mailbox {
             if let Some(msg) = self.try_take(flow) {
                 return Ok(msg);
             }
+            if self.peer_dead(peer) {
+                bail!("peer {peer} lost while waiting for tag {tag} (rank failed or disconnected)");
+            }
             if self.closed.load(Ordering::SeqCst) {
                 bail!("mailbox closed while waiting for (peer={peer}, tag={tag})");
             }
@@ -469,6 +537,11 @@ impl Mailbox {
         let res = loop {
             if let Some(msg) = self.try_take(flow) {
                 break Ok(msg);
+            }
+            if self.peer_dead(peer) {
+                break Err(anyhow!(
+                    "peer {peer} lost while waiting for tag {tag} (rank failed or disconnected)"
+                ));
             }
             if self.closed.load(Ordering::SeqCst) {
                 break Err(anyhow!(
@@ -494,6 +567,40 @@ impl Mailbox {
     /// Queued messages remain deliverable.
     pub fn close(&self) {
         self.closed.store(true, Ordering::SeqCst);
+        self.wake_flows(None);
+    }
+
+    /// Fail exactly one peer: receivers blocked (or about to block) on
+    /// any of `peer`'s flows error with `"peer N lost"`, while flows
+    /// from every other peer are untouched. Messages `peer` queued
+    /// before dying remain deliverable (drain-first, like [`close`]).
+    ///
+    /// Ranks beyond the bitmap (≥ `DEAD_WORDS * 64`) degrade to a full
+    /// [`close`](Self::close) — safe, just not selective.
+    pub fn close_peer(&self, peer: usize) {
+        let (word, bit) = (peer / 64, peer % 64);
+        if word >= DEAD_WORDS {
+            self.close();
+            return;
+        }
+        self.dead[word].fetch_or(1 << bit, Ordering::SeqCst);
+        self.wake_flows(Some(peer));
+    }
+
+    /// Has [`close_peer`](Self::close_peer) been called for `peer`?
+    pub fn peer_dead(&self, peer: usize) -> bool {
+        let (word, bit) = (peer / 64, peer % 64);
+        if word >= DEAD_WORDS {
+            return self.closed.load(Ordering::SeqCst);
+        }
+        self.dead[word].load(Ordering::SeqCst) & (1 << bit) != 0
+    }
+
+    /// Wake parked receivers so they re-check `closed` / the dead-peer
+    /// bitmap. `only_peer` filters which flows are signaled; a spurious
+    /// wake of an unrelated flow would be harmless, a missed wake would
+    /// not, so the peer filter is read under the pin.
+    fn wake_flows(&self, only_peer: Option<usize>) {
         for shard in self.shards.iter() {
             for e in shard.entries.iter() {
                 let mut s = e.state.load(Ordering::Acquire);
@@ -511,11 +618,17 @@ impl Mailbox {
                         Ordering::Acquire,
                     ) {
                         Ok(_) => {
-                            let idx = ref_idx(e.slot.load(Ordering::Acquire));
-                            let flow = &self.slots.slot(idx).item;
-                            self.park_locks.fetch_add(1, Ordering::Relaxed);
-                            drop(flow.park.lock().unwrap());
-                            flow.cv.notify_all();
+                            let matches = match only_peer {
+                                Some(p) => e.peer.load(Ordering::Relaxed) == p as u64,
+                                None => true,
+                            };
+                            if matches {
+                                let idx = ref_idx(e.slot.load(Ordering::Acquire));
+                                let flow = &self.slots.slot(idx).item;
+                                self.park_locks.fetch_add(1, Ordering::Relaxed);
+                                drop(flow.park.lock().unwrap());
+                                flow.cv.notify_all();
+                            }
                             e.state.fetch_sub(PIN_ONE, Ordering::Release);
                             break;
                         }
@@ -690,6 +803,66 @@ mod tests {
             assert_eq!(mb.pending(), 0);
             assert_eq!(mb.live_flows(), 0, "drained flows must be tombstoned");
         }
+    }
+
+    #[test]
+    fn close_peer_fails_only_that_peers_flows() {
+        let mb = Arc::new(Mailbox::new());
+        let mb2 = mb.clone();
+        // A receiver parked on the doomed peer...
+        let doomed = std::thread::spawn(move || mb2.pop(1, 7, Duration::from_secs(30)));
+        // ...and one parked on a healthy peer.
+        let mb3 = mb.clone();
+        let healthy = std::thread::spawn(move || mb3.pop(2, 7, Duration::from_secs(30)));
+        std::thread::sleep(Duration::from_millis(30));
+        mb.close_peer(1);
+        let err = doomed.join().unwrap().unwrap_err();
+        assert!(
+            err.to_string().contains("peer 1 lost"),
+            "distinct per-peer error, got: {err}"
+        );
+        // The healthy flow is still live: a push delivers normally.
+        mb.push(2, 7, buf(&[5]));
+        assert_eq!(healthy.join().unwrap().unwrap(), vec![5]);
+        assert!(mb.peer_dead(1));
+        assert!(!mb.peer_dead(2));
+    }
+
+    #[test]
+    fn close_peer_then_pop_errors_fast_but_drains_queued() {
+        let mb = Mailbox::new();
+        mb.push(3, 9, buf(&[1]));
+        mb.close_peer(3);
+        // Queued messages from the dead peer remain deliverable...
+        assert_eq!(mb.pop(3, 9, Duration::from_secs(30)).unwrap(), vec![1]);
+        // ...then the flow fails promptly instead of timing out.
+        let t0 = Instant::now();
+        let err = mb.pop(3, 9, Duration::from_secs(30)).unwrap_err();
+        assert!(err.to_string().contains("peer 3 lost"));
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        // Unrelated peers are unaffected.
+        mb.push(0, 9, buf(&[2]));
+        assert_eq!(mb.pop(0, 9, RECV_TIMEOUT).unwrap(), vec![2]);
+    }
+
+    #[test]
+    fn epoch_fencing_drops_stale_pushes() {
+        let mb = Mailbox::new();
+        assert_eq!(mb.epoch(), 0);
+        assert!(mb.push_epoch(0, 1, buf(&[1]), 0), "current epoch delivers");
+        mb.set_epoch(2);
+        assert_eq!(mb.epoch(), 2);
+        assert!(!mb.push_epoch(0, 1, buf(&[9]), 1), "stale epoch dropped");
+        assert!(!mb.push_epoch(0, 1, buf(&[9]), 0), "stale epoch dropped");
+        assert!(mb.push_epoch(0, 1, buf(&[2]), 2), "new epoch delivers");
+        assert_eq!(mb.stale_dropped(), 2);
+        // Only the epoch-0 (pre-fence) and epoch-2 frames arrive.
+        assert_eq!(mb.pop(0, 1, RECV_TIMEOUT).unwrap(), vec![1]);
+        assert_eq!(mb.pop(0, 1, RECV_TIMEOUT).unwrap(), vec![2]);
+        assert_eq!(mb.pending(), 0);
+        // set_epoch is monotonic: lower values are ignored.
+        mb.set_epoch(1);
+        assert_eq!(mb.epoch(), 2);
     }
 
     #[test]

@@ -54,6 +54,28 @@ pub trait Transport: Send + Sync {
     fn inflight_high_water(&self) -> u64 {
         0
     }
+
+    /// Mark `peer` as failed: receives from it error promptly with a
+    /// "peer N lost" message while every other peer's traffic keeps
+    /// flowing. Idempotent; default is a no-op for transports without
+    /// failure tracking.
+    fn fail_peer(&self, _peer: usize) {}
+
+    /// Abort every blocked and future receive on this endpoint (used by
+    /// the elastic runtime to tear a group down after a rank death).
+    /// Default is a no-op.
+    fn abort(&self) {}
+
+    /// Advance the membership epoch: frames stamped with an older epoch
+    /// are dropped at this endpoint's mailbox instead of delivered, and
+    /// outgoing frames (on framed transports) carry the new stamp.
+    /// Default is a no-op for transports that do not fence.
+    fn set_epoch(&self, _epoch: u64) {}
+
+    /// Current membership epoch of this endpoint (0 if unfenced).
+    fn epoch(&self) -> u64 {
+        0
+    }
 }
 
 /// Convert an f32 slice to little-endian bytes (one memcpy on LE targets;

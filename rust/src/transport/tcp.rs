@@ -15,8 +15,19 @@
 //! bytes-in-flight high-water gauge for `CommStats`.
 //!
 //! Frame format (little-endian):
-//! `[tag: u64][len: u64][payload: len bytes]`
-//! The sender's rank is exchanged once at connection setup.
+//! `[tag: u64][epoch: u64][len: u64][payload: len bytes]`
+//! The sender's rank is exchanged once at connection setup. The epoch
+//! stamp is the sender's membership epoch at write time; the receiving
+//! mailbox drops frames stamped older than its own fence (see
+//! [`Mailbox::push_epoch`]), so traffic from a dead group generation
+//! can never tag-match a collective of the re-formed group.
+//!
+//! Failure containment (ISSUE 7): a broken link fails *only* that
+//! peer's flows ([`Mailbox::close_peer`] — receivers get a distinct
+//! "peer N lost" error), and the wire length field is validated against
+//! `KAITIAN_MAX_FRAME_BYTES` before it reaches the buffer pool, so a
+//! corrupt or hostile header is a peer failure, not a near-unbounded
+//! allocation.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -43,6 +54,23 @@ fn inflight_cap() -> Option<u64> {
     static CACHED: OnceLock<Option<u64>> = OnceLock::new();
     *CACHED.get_or_init(|| {
         match crate::util::env_or_warn("KAITIAN_TCP_INFLIGHT_CAP", DEFAULT_INFLIGHT_CAP) {
+            0 => None,
+            v => Some(v),
+        }
+    })
+}
+
+/// Largest frame payload a reader will accept. A wire length above this
+/// is treated as a corrupt header / hostile peer: the link is failed
+/// (per-peer, not whole-mailbox) instead of handing the attacker-chosen
+/// length to the buffer pool. Overridable via `KAITIAN_MAX_FRAME_BYTES`
+/// (`0` disables the check).
+pub const DEFAULT_MAX_FRAME_BYTES: u64 = 256 << 20;
+
+fn max_frame_bytes() -> Option<u64> {
+    static CACHED: OnceLock<Option<u64>> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        match crate::util::env_or_warn("KAITIAN_MAX_FRAME_BYTES", DEFAULT_MAX_FRAME_BYTES) {
             0 => None,
             v => Some(v),
         }
@@ -217,6 +245,9 @@ pub struct TcpEndpoint {
     threads: Vec<JoinHandle<()>>,
     bytes_sent: Arc<AtomicU64>,
     inflight: Arc<Inflight>,
+    /// Membership epoch stamped on outgoing frames (shared with the
+    /// writer threads, read per frame at write time).
+    epoch: Arc<AtomicU64>,
 }
 
 impl TcpEndpoint {
@@ -237,6 +268,7 @@ impl TcpEndpoint {
         let mailbox = Arc::new(Mailbox::new());
         let bytes_sent = Arc::new(AtomicU64::new(0));
         let inflight = Arc::new(Inflight::new(cap));
+        let epoch = Arc::new(AtomicU64::new(0));
         let mut streams: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
 
         // Dial higher ranks (retry briefly: the peer may not be listening
@@ -285,8 +317,9 @@ impl TcpEndpoint {
                     let write_half = stream.try_clone().context("clone for writer")?;
                     let sent = bytes_sent.clone();
                     let infl = inflight.clone();
+                    let ep = epoch.clone();
                     threads.push(std::thread::spawn(move || {
-                        writer_loop(write_half, rx, sent, infl);
+                        writer_loop(write_half, rx, sent, infl, ep);
                     }));
                     let mb = mailbox.clone();
                     threads.push(std::thread::spawn(move || {
@@ -305,12 +338,18 @@ impl TcpEndpoint {
             threads,
             bytes_sent,
             inflight,
+            epoch,
         })
     }
 
     /// Total payload bytes pushed to the wire by this endpoint.
     pub fn bytes_sent(&self) -> u64 {
         self.bytes_sent.load(Ordering::Relaxed)
+    }
+
+    /// Frames this endpoint's mailbox refused by epoch fencing.
+    pub fn stale_dropped(&self) -> u64 {
+        self.mailbox.stale_dropped()
     }
 }
 
@@ -319,6 +358,7 @@ fn writer_loop(
     rx: mpsc::Receiver<WriterMsg>,
     sent: Arc<AtomicU64>,
     inflight: Arc<Inflight>,
+    epoch: Arc<AtomicU64>,
 ) {
     let mut w = BufWriter::new(stream);
     loop {
@@ -331,8 +371,7 @@ fn writer_loop(
             Ok(m) => m,
             Err(mpsc::TryRecvError::Empty) => {
                 if w.flush().is_err() {
-                    inflight.poison();
-                    return;
+                    break;
                 }
                 match rx.recv() {
                     Ok(m) => m,
@@ -344,47 +383,64 @@ fn writer_loop(
         match msg {
             WriterMsg::Frame(tag, data) => {
                 let n = data.len() as u64;
+                let ep = epoch.load(Ordering::SeqCst);
                 let ok = w.write_all(&tag.to_le_bytes()).is_ok()
+                    && w.write_all(&ep.to_le_bytes()).is_ok()
                     && w.write_all(&n.to_le_bytes()).is_ok()
                     && w.write_all(&data).is_ok();
                 if !ok {
-                    inflight.poison();
-                    return;
+                    break;
                 }
                 sent.fetch_add(n, Ordering::Relaxed);
                 inflight.sub(n);
             }
-            WriterMsg::Shutdown => {
-                let _ = w.flush();
-                inflight.poison();
-                return;
-            }
+            WriterMsg::Shutdown => break,
         }
     }
     let _ = w.flush();
     inflight.poison();
+    // Kernel-level shutdown (affects every duplicated fd of this
+    // socket): the peer's reader sees EOF *promptly* and fails just
+    // this link, instead of discovering the death via recv timeout.
+    let _ = w.get_ref().shutdown(std::net::Shutdown::Both);
 }
 
 fn reader_loop(stream: TcpStream, peer: usize, mailbox: Arc<Mailbox>) {
     let mut r = BufReader::new(stream);
     loop {
-        let mut hdr = [0_u8; 16];
+        let mut hdr = [0_u8; 24];
         if r.read_exact(&mut hdr).is_err() {
-            // Peer closed: wake any blocked receivers so they error out
-            // instead of hanging.
-            mailbox.close();
+            // Peer closed: fail *only* this peer's flows — receivers on
+            // it error out with "peer N lost" while traffic from every
+            // other rank keeps flowing.
+            mailbox.close_peer(peer);
             return;
         }
         let tag = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
-        let len = u64::from_le_bytes(hdr[8..16].try_into().unwrap()) as usize;
+        let epoch = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+        let len = u64::from_le_bytes(hdr[16..24].try_into().unwrap());
+        // A corrupt or hostile header must not reach the allocator: a
+        // length past the cap is a peer failure, handled like a hangup.
+        if let Some(cap) = max_frame_bytes() {
+            if len > cap {
+                eprintln!(
+                    "kaitian: tcp frame from peer {peer} claims {len} bytes \
+                     (cap {cap}, KAITIAN_MAX_FRAME_BYTES) — failing peer"
+                );
+                mailbox.close_peer(peer);
+                return;
+            }
+        }
         // Frame lands in a pooled buffer: steady-state reads allocate
         // nothing once the pool is warm.
-        let mut data = BufPool::global().take(len);
+        let mut data = BufPool::global().take(len as usize);
         if r.read_exact(data.as_mut_slice()).is_err() {
-            mailbox.close();
+            mailbox.close_peer(peer);
             return;
         }
-        mailbox.push(peer, tag, data.freeze());
+        // Epoch fence: frames stamped from a dead group generation are
+        // dropped here, never delivered into the re-formed group.
+        mailbox.push_epoch(peer, tag, data.freeze(), epoch);
     }
 }
 
@@ -425,6 +481,23 @@ impl Transport for TcpEndpoint {
 
     fn inflight_high_water(&self) -> u64 {
         self.inflight.high_water.load(Ordering::Relaxed)
+    }
+
+    fn fail_peer(&self, peer: usize) {
+        self.mailbox.close_peer(peer);
+    }
+
+    fn abort(&self) {
+        self.mailbox.close();
+    }
+
+    fn set_epoch(&self, epoch: u64) {
+        self.epoch.fetch_max(epoch, Ordering::SeqCst);
+        self.mailbox.set_epoch(epoch);
+    }
+
+    fn epoch(&self) -> u64 {
+        self.mailbox.epoch()
     }
 }
 
@@ -526,6 +599,49 @@ mod tests {
         for k in 0..200_u8 {
             assert_eq!(eps[1].recv(0, 100 + k as u64).unwrap(), vec![k; 100]);
         }
+    }
+
+    #[test]
+    fn peer_disconnect_fails_only_that_peer() {
+        // Rank 2 dies; the 0↔1 pair must keep exchanging traffic and
+        // only receives *from rank 2* may error, with the per-peer
+        // message (satellite 1: no more whole-mailbox close on one
+        // peer's hangup).
+        let mut eps = TcpMesh::loopback(3).unwrap();
+        let e2 = eps.pop().unwrap();
+        drop(e2);
+        // Give the reader threads a moment to observe the hangup.
+        std::thread::sleep(Duration::from_millis(100));
+        let (e0, e1) = (&eps[0], &eps[1]);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                e1.send(0, 5, Buf::copy_from_slice(&[1, 2])).unwrap();
+                assert_eq!(e1.recv(0, 6).unwrap(), vec![3, 4]);
+            });
+            e0.send(1, 6, Buf::copy_from_slice(&[3, 4])).unwrap();
+            assert_eq!(e0.recv(1, 5).unwrap(), vec![1, 2]);
+        });
+        let err = e0.recv(2, 99).unwrap_err();
+        assert!(err.to_string().contains("peer 2 lost"), "got: {err}");
+    }
+
+    #[test]
+    fn stale_epoch_frames_are_fenced() {
+        let eps = TcpMesh::loopback(2).unwrap();
+        // Rank 1 moves to epoch 2; rank 0 still stamps epoch 0.
+        eps[1].set_epoch(2);
+        eps[0].send(1, 7, Buf::copy_from_slice(&[9])).unwrap();
+        // The frame arrives but is dropped at rank 1's mailbox.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while eps[1].stale_dropped() == 0 {
+            assert!(std::time::Instant::now() < deadline, "fence never tripped");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Once rank 0 joins the new epoch its frames deliver again.
+        eps[0].set_epoch(2);
+        eps[0].send(1, 7, Buf::copy_from_slice(&[1])).unwrap();
+        assert_eq!(eps[1].recv(0, 7).unwrap(), vec![1]);
+        assert_eq!(eps[1].stale_dropped(), 1);
     }
 
     #[test]

@@ -9,9 +9,12 @@ use std::time::Duration;
 
 use kaitian::backend::{CollectiveBackend, GlooHostRelay, VendorKind, VendorSim};
 use kaitian::collectives::{Communicator, ReduceOp};
+use kaitian::comm::buf::Buf;
 use kaitian::device::MemoryTracker;
 use kaitian::rendezvous::{RendezvousClient, RendezvousServer};
-use kaitian::transport::{InprocMesh, TcpMesh};
+use kaitian::train::{train_elastic, ElasticConfig, FaultSpec};
+use kaitian::transport::mailbox::Mailbox;
+use kaitian::transport::{InprocMesh, TcpEndpoint, TcpMesh, Transport};
 use std::sync::Arc;
 
 fn set_short_timeout() {
@@ -48,7 +51,7 @@ fn tcp_peer_disconnect_unblocks_receivers() {
     let err = relay.all_reduce(&mut buf, ReduceOp::Sum).unwrap_err();
     let msg = err.to_string();
     assert!(
-        msg.contains("closed") || msg.contains("timeout"),
+        msg.contains("peer 1 lost") || msg.contains("closed") || msg.contains("timeout"),
         "unexpected error: {msg}"
     );
 }
@@ -90,6 +93,161 @@ fn simulated_oom_fails_allocation_not_process() {
     assert_eq!(vram.used(), 6 << 30);
     vram.free(6 << 30);
     assert_eq!(vram.used(), 0);
+}
+
+#[test]
+fn close_peer_races_with_concurrent_pushers() {
+    // close_peer(0) racing against pushers and parked receivers on both
+    // peers: peer 1's flows must be completely untouched (every pop
+    // succeeds), while peer-0 pops either deliver (drain-first) or fail
+    // with the per-peer error — never "mailbox closed", never a hang.
+    set_short_timeout();
+    const TAGS: u64 = 50;
+    for _round in 0..10 {
+        let mb = Arc::new(Mailbox::new());
+        std::thread::scope(|s| {
+            for peer in 0..2_usize {
+                let mb = mb.clone();
+                s.spawn(move || {
+                    for tag in 0..TAGS {
+                        mb.push(peer, tag, Buf::copy_from_slice(&[peer as u8]));
+                    }
+                });
+            }
+            let closer = mb.clone();
+            s.spawn(move || closer.close_peer(0));
+            let healthy = mb.clone();
+            s.spawn(move || {
+                for tag in 0..TAGS {
+                    let got = healthy.pop(1, tag, Duration::from_secs(10)).unwrap();
+                    assert_eq!(got, vec![1_u8]);
+                }
+            });
+            let failed = mb.clone();
+            s.spawn(move || {
+                for tag in 0..TAGS {
+                    match failed.pop(0, tag, Duration::from_secs(10)) {
+                        Ok(got) => assert_eq!(got, vec![0_u8]),
+                        Err(e) => {
+                            assert!(e.to_string().contains("peer 0 lost"), "{e}")
+                        }
+                    }
+                }
+            });
+        });
+        assert!(mb.peer_dead(0));
+        assert!(!mb.peer_dead(1));
+    }
+}
+
+#[test]
+fn oversized_wire_length_fails_peer_not_allocator() {
+    // A hostile/corrupt frame header claiming u64::MAX payload bytes
+    // must fail that link (per-peer, promptly) instead of reaching the
+    // buffer pool as a near-unbounded allocation.
+    set_short_timeout();
+    use std::io::{Read as _, Write as _};
+    use std::net::TcpListener;
+    let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addrs = vec![l0.local_addr().unwrap(), l1.local_addr().unwrap()];
+    // "Rank 1" is a raw socket, not a TcpEndpoint: it accepts rank 0's
+    // dial, reads the 8-byte rank announcement, then sends a poisoned
+    // 24-byte header ([tag][epoch][len]) and holds the socket open so
+    // EOF cannot be what unblocks the victim.
+    let attacker = std::thread::spawn(move || {
+        let (mut s, _) = l1.accept().unwrap();
+        let mut id = [0_u8; 8];
+        s.read_exact(&mut id).unwrap();
+        assert_eq!(u64::from_le_bytes(id), 0, "victim announces rank 0");
+        let mut hdr = Vec::with_capacity(24);
+        hdr.extend_from_slice(&7_u64.to_le_bytes());
+        hdr.extend_from_slice(&0_u64.to_le_bytes());
+        hdr.extend_from_slice(&u64::MAX.to_le_bytes());
+        s.write_all(&hdr).unwrap();
+        s.flush().unwrap();
+        s
+    });
+    let e0 = TcpEndpoint::connect(0, &addrs, l0).unwrap();
+    let _open_socket = attacker.join().unwrap();
+    let t0 = std::time::Instant::now();
+    let err = e0.recv(1, 7).unwrap_err();
+    assert!(err.to_string().contains("peer 1 lost"), "{err}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "poisoned header must fail fast"
+    );
+}
+
+#[test]
+fn mid_training_rank_death_recovers() {
+    // The tentpole lifecycle end to end: rank 1 dies mid-segment, the
+    // heartbeat monitor detects the expired lease, survivors abort,
+    // bump the epoch, regroup as a 2-rank world, resume from the
+    // last segment checkpoint, and still converge.
+    set_short_timeout();
+    let mut cfg = ElasticConfig::quick("1G+2M");
+    cfg.fault = Some(FaultSpec {
+        rank: 1,
+        at_step: 9,
+        rejoin_after_segments: 0,
+    });
+    let report = train_elastic(&cfg).unwrap();
+    let rec = report
+        .recovery
+        .as_ref()
+        .expect("rank death must be detected and recovered from");
+    assert_eq!(rec.dead_rank, 1);
+    // Died at step 9; the last checkpoint was the step-6 boundary.
+    assert_eq!(rec.replayed_steps, 3);
+    // Detection is heartbeat-bound: the lease TTL plus polling slack
+    // (generous for loaded CI machines, still far under a recv stall).
+    let bound = cfg.heartbeat.timeout.as_secs_f64() * 2.0 + 0.5;
+    assert!(
+        rec.detection_s <= bound,
+        "detection took {:.3}s (bound {bound:.3}s)",
+        rec.detection_s
+    );
+    assert!(rec.total_s >= rec.detection_s);
+    assert_eq!((report.initial_world, report.final_world), (3, 2));
+    assert_eq!(report.final_epoch, 1, "one epoch bump per shrink");
+    assert!(!report.rejoined);
+    assert_eq!(report.steps_completed, cfg.total_steps);
+    assert!(
+        report.final_loss < report.losses[0] * 0.5,
+        "survivors must still converge: {} -> {}",
+        report.losses[0],
+        report.final_loss
+    );
+    std::fs::remove_file(&cfg.ckpt_path).ok();
+}
+
+#[test]
+fn rejoin_resumes_from_checkpoint() {
+    // Shrink then grow: rank 2 dies, recovers as a 2-rank world, and
+    // rejoins at the next segment boundary from the checkpoint — under
+    // a second epoch bump so stale traffic stays fenced.
+    set_short_timeout();
+    let mut cfg = ElasticConfig::quick("1G+2M");
+    cfg.fault = Some(FaultSpec {
+        rank: 2,
+        at_step: 8,
+        rejoin_after_segments: 1,
+    });
+    let report = train_elastic(&cfg).unwrap();
+    assert!(report.rejoined, "rank 2 must rejoin after one segment");
+    assert_eq!((report.initial_world, report.final_world), (3, 3));
+    assert_eq!(report.final_epoch, 2, "one bump for shrink, one for grow");
+    let rec = report.recovery.as_ref().expect("the death was recovered");
+    assert_eq!(rec.dead_rank, 2);
+    assert_eq!(report.steps_completed, cfg.total_steps);
+    assert!(
+        report.final_loss < report.losses[0] * 0.5,
+        "shrink/regrow must not break convergence: {} -> {}",
+        report.losses[0],
+        report.final_loss
+    );
+    std::fs::remove_file(&cfg.ckpt_path).ok();
 }
 
 #[test]
