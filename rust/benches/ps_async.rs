@@ -1,0 +1,234 @@
+//! Bench: bounded-staleness parameter-server sync vs synchronous
+//! all-reduce under runtime perturbations (the straggler-tax headline).
+//!
+//! Virtual-time section — one paper-shaped epoch (B=256, 195 steps) on
+//! the 2G+2M cluster per scenario, four contenders:
+//!
+//! * **allreduce-equal** — naive equal split, synchronous all-reduce
+//!   (the plain straggler tax);
+//! * **allreduce-frozen** — KAITIAN's offline split, frozen, synchronous;
+//! * **allreduce+controller** — the guarded runtime rebalancer,
+//!   synchronous (the previous headline);
+//! * **ps_async(K)** — leader-hosted parameter server with the
+//!   staleness gate, push-rate-fed controller in the loop.
+//!
+//! Asserts the acceptance gates: under the step-change and thermal-drift
+//! scenarios `ps_async` reaches the epoch's effective-sample target
+//! ≥ 15% faster than the equal-split all-reduce baseline, beats the
+//! synchronous controller run outright, and never observes a version lag
+//! above K. A staleness sweep (K ∈ {0, 1, 2, 4}) rides along in the
+//! report.
+//!
+//! Real-mode section (requires artifacts; skipped gracefully without):
+//! `K = 0` must bitwise-match synchronous sharded SGD, and `K = 4` must
+//! stay within 1e-3 of the `K = 0` loss after 20 steps.
+//!
+//! Writes `results/ps_async.json`. Run: `cargo bench --bench ps_async`
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use kaitian::ddp::GradSyncMode;
+use kaitian::device::Scenario;
+use kaitian::metrics::MarkdownTable;
+use kaitian::perfmodel::PerfModel;
+use kaitian::runtime::Engine;
+use kaitian::sched::Strategy;
+use kaitian::simnet::{
+    simulate_dynamic, simulate_ps, DynamicSimConfig, PsSimConfig, PsSimReport,
+};
+use kaitian::train::{train, Checkpoint, TrainOptions};
+use kaitian::util::json::Json;
+
+const CLUSTER: &str = "2G+2M";
+const SCENARIOS: [&str; 4] = ["step-change", "thermal-drift", "contention", "spikes"];
+/// Scenarios whose ≥15% time-to-target win is an acceptance criterion.
+const HEADLINE: [&str; 2] = ["step-change", "thermal-drift"];
+/// The headline staleness window.
+const K: usize = 2;
+const SWEEP: [usize; 4] = [0, 1, 2, 4];
+
+fn run_sync(model: &PerfModel, scenario: &Scenario, strategy: Strategy, online: bool) -> f64 {
+    let mut cfg = DynamicSimConfig::paper_epoch(CLUSTER, scenario.clone(), online);
+    cfg.strategy = strategy;
+    simulate_dynamic(model, &cfg).expect("sync simulation").total_s
+}
+
+fn ps_json(r: &PsSimReport) -> Json {
+    Json::obj(vec![
+        ("staleness", Json::num(r.staleness as f64)),
+        ("time_to_target_s", Json::num(r.time_to_target_s)),
+        ("versions_run", Json::num(r.versions_run as f64)),
+        ("max_lag", Json::num(r.max_lag as f64)),
+        ("mean_lag", Json::num(r.mean_lag)),
+        (
+            "wait_s",
+            Json::arr(r.wait_s.iter().map(|w| Json::num(*w)).collect()),
+        ),
+        (
+            "ahead_s",
+            Json::arr(r.ahead_s.iter().map(|a| Json::num(*a)).collect()),
+        ),
+        ("rebalance_count", Json::num(r.events.len() as f64)),
+        (
+            "final_allocation",
+            Json::arr(
+                r.final_allocation
+                    .iter()
+                    .map(|b| Json::num(*b as f64))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Real-mode parity on a shortened run (needs compiled artifacts).
+fn real_mode_parity() -> Json {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("real-mode parity: SKIP (no artifacts — run `make artifacts-quick`)");
+        return Json::str("skipped: no artifacts");
+    }
+    let engine = Arc::new(Engine::load(dir).expect("engine load"));
+    let ckpt = |name: &str| {
+        std::env::temp_dir()
+            .join(format!("kaitian_ps_bench_{}_{name}.ckpt", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    };
+    let mk = |sync: GradSyncMode, k: usize, path: &str| {
+        let mut opts = TrainOptions::quick_test("1G+1M");
+        opts.epochs = 1;
+        opts.dataset_len = 512;
+        opts.steps_per_epoch = Some(20);
+        opts.eval_batches = 0;
+        opts.grad_sync = sync;
+        opts.staleness = k;
+        opts.ps_shards = 0;
+        opts.checkpoint = Some(path.into());
+        opts
+    };
+
+    let (p0, p4, psh) = (ckpt("k0"), ckpt("k4"), ckpt("sharded"));
+    let k0 = train(engine.clone(), &mk(GradSyncMode::PsAsync, 0, &p0)).expect("ps K=0");
+    let k4 = train(engine.clone(), &mk(GradSyncMode::PsAsync, 4, &p4)).expect("ps K=4");
+    train(engine, &mk(GradSyncMode::Sharded, 0, &psh)).expect("sharded");
+
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    let ck0 = Checkpoint::load(&p0).expect("K=0 checkpoint");
+    let ck4 = Checkpoint::load(&p4).expect("K=4 checkpoint");
+    let cksh = Checkpoint::load(&psh).expect("sharded checkpoint");
+    let k0_bitwise =
+        bits(&ck0.params) == bits(&cksh.params) && bits(&ck0.momentum) == bits(&cksh.momentum);
+    assert!(
+        k0_bitwise,
+        "K=0 ps_async must be bitwise-identical to synchronous sharded SGD"
+    );
+    let loss_delta = (k4.final_loss().unwrap() - k0.final_loss().unwrap()).abs();
+    assert!(
+        loss_delta <= 1e-3,
+        "K=4 loss drifts {loss_delta:.6} (> 1e-3) from K=0 after 20 steps"
+    );
+    let param_drift = ck4
+        .params
+        .iter()
+        .zip(&cksh.params)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0_f32, f32::max);
+    for p in [&p0, &p4, &psh] {
+        let _ = std::fs::remove_file(p);
+    }
+    println!(
+        "real-mode parity: K=0 bitwise OK, K=4 loss delta {loss_delta:.2e}, \
+         param drift {param_drift:.2e}"
+    );
+    Json::obj(vec![
+        ("k0_bitwise_vs_sharded", Json::Bool(true)),
+        ("k4_loss_delta", Json::num(loss_delta)),
+        ("k4_param_drift", Json::num(param_drift as f64)),
+        ("steps", Json::num(20.0)),
+    ])
+}
+
+fn main() -> kaitian::Result<()> {
+    let model = PerfModel::paper_default();
+    let mut table = MarkdownTable::new(&[
+        "scenario",
+        "allreduce-equal (s)",
+        "allreduce-frozen (s)",
+        "allreduce+ctl (s)",
+        "ps_async K=2 (s)",
+        "win vs equal",
+        "max lag",
+        "versions",
+    ]);
+    let mut json = BTreeMap::new();
+
+    for name in SCENARIOS {
+        let scenario = Scenario::named(name)?;
+        let equal = run_sync(&model, &scenario, Strategy::Equal, false);
+        let frozen = run_sync(&model, &scenario, Strategy::Adaptive, false);
+        let ctl = run_sync(&model, &scenario, Strategy::Adaptive, true);
+        let ps = simulate_ps(&model, &PsSimConfig::paper_epoch(CLUSTER, scenario.clone(), K))?;
+
+        // Staleness sweep: the whole window stays priced in the report.
+        let mut sweep = Vec::new();
+        for k in SWEEP {
+            let r = simulate_ps(&model, &PsSimConfig::paper_epoch(CLUSTER, scenario.clone(), k))?;
+            assert!(
+                r.max_lag <= k as u64,
+                "{name}: K={k} observed lag {} above the window",
+                r.max_lag
+            );
+            sweep.push(ps_json(&r));
+        }
+
+        let win = 1.0 - ps.time_to_target_s / equal;
+        table.row(vec![
+            name.to_string(),
+            format!("{equal:.3}"),
+            format!("{frozen:.3}"),
+            format!("{ctl:.3}"),
+            format!("{:.3}", ps.time_to_target_s),
+            format!("{:.1}%", win * 100.0),
+            format!("{}", ps.max_lag),
+            format!("{}", ps.versions_run),
+        ]);
+        json.insert(
+            name.to_string(),
+            Json::obj(vec![
+                ("cluster", Json::str(CLUSTER)),
+                ("allreduce_equal_s", Json::num(equal)),
+                ("allreduce_frozen_s", Json::num(frozen)),
+                ("allreduce_controller_s", Json::num(ctl)),
+                ("ps_async", ps_json(&ps)),
+                ("win_vs_equal", Json::num(win)),
+                ("staleness_sweep", Json::arr(sweep)),
+            ]),
+        );
+
+        if HEADLINE.contains(&name) {
+            assert!(
+                win >= 0.15,
+                "{name}: ps_async must beat the equal-split all-reduce by >= 15%, \
+                 got {:.1}%",
+                win * 100.0
+            );
+            assert!(
+                ps.time_to_target_s < ctl,
+                "{name}: ps_async ({:.3}s) must beat the synchronous controller \
+                 run ({ctl:.3}s) — the staleness window and comm overlap are its \
+                 whole point",
+                ps.time_to_target_s
+            );
+        }
+    }
+
+    json.insert("real_mode_parity".to_string(), real_mode_parity());
+
+    println!("== bounded-staleness ps_async vs synchronous all-reduce ({CLUSTER}) ==\n");
+    println!("{}", table.render());
+    let path = kaitian::metrics::write_report("results", "ps_async", json)?;
+    println!("wrote {path}");
+    Ok(())
+}

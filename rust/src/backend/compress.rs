@@ -134,7 +134,7 @@ fn fp16_all_reduce(
     staging.staged_bytes = 2 * (n * 2) as u64; // f16 staging both ways
     staging.stage_seconds = t_stage1 + t2.elapsed().as_secs_f64();
     stats.merge(&staging);
-    stats.inflight_hw_bytes = t.inflight_high_water();
+    stats.stamp_transport_gauges(t);
     Ok(stats)
 }
 
@@ -166,7 +166,7 @@ fn fp16_broadcast(
     staging.staged_bytes = 2 * (n * 2) as u64;
     staging.stage_seconds = t_stage + t2.elapsed().as_secs_f64();
     stats.merge(&staging);
-    stats.inflight_hw_bytes = t.inflight_high_water();
+    stats.stamp_transport_gauges(t);
     Ok(stats)
 }
 

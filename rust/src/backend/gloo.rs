@@ -81,7 +81,7 @@ pub(crate) fn relay_all_reduce_t(
     staging.staged_bytes = 2 * wire.len() as u64;
     staging.stage_seconds = t_d2h + t_h2d;
     stats.merge(&staging);
-    stats.inflight_hw_bytes = t.inflight_high_water();
+    stats.stamp_transport_gauges(t);
     Ok(stats)
 }
 
@@ -103,7 +103,7 @@ pub(crate) fn relay_broadcast_t(
     staging.staged_bytes = 2 * wire.len() as u64;
     staging.stage_seconds = t_d2h + t_h2d;
     stats.merge(&staging);
-    stats.inflight_hw_bytes = t.inflight_high_water();
+    stats.stamp_transport_gauges(t);
     Ok(stats)
 }
 
@@ -126,7 +126,7 @@ pub(crate) fn relay_reduce_t(
     staging.staged_bytes = 2 * wire.len() as u64;
     staging.stage_seconds = t_d2h + t_h2d;
     stats.merge(&staging);
-    stats.inflight_hw_bytes = t.inflight_high_water();
+    stats.stamp_transport_gauges(t);
     Ok(stats)
 }
 
@@ -149,7 +149,7 @@ pub(crate) fn relay_reduce_scatter_t(
     staging.staged_bytes = 2 * wire.len() as u64;
     staging.stage_seconds = t_d2h + t_h2d;
     stats.merge(&staging);
-    stats.inflight_hw_bytes = t.inflight_high_water();
+    stats.stamp_transport_gauges(t);
     Ok(stats)
 }
 
@@ -176,7 +176,7 @@ pub(crate) fn relay_all_gather_t(
     staging.staged_bytes = send.len() as u64;
     staging.stage_seconds = t_d2h;
     stats.merge(&staging);
-    stats.inflight_hw_bytes = t.inflight_high_water();
+    stats.stamp_transport_gauges(t);
     Ok((out, stats))
 }
 
@@ -197,7 +197,7 @@ pub(crate) fn relay_all_to_all_t(
     staging.staged_bytes = send.len() as u64;
     staging.stage_seconds = t_d2h;
     stats.merge(&staging);
-    stats.inflight_hw_bytes = t.inflight_high_water();
+    stats.stamp_transport_gauges(t);
     Ok((out, stats))
 }
 
@@ -219,7 +219,7 @@ pub(crate) fn relay_gather_t(
     staging.staged_bytes = send.len() as u64;
     staging.stage_seconds = t_d2h;
     stats.merge(&staging);
-    stats.inflight_hw_bytes = t.inflight_high_water();
+    stats.stamp_transport_gauges(t);
     Ok((out, stats))
 }
 

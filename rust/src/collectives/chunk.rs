@@ -103,10 +103,7 @@ pub fn fit_chunk_bytes(
     let budget = (MAX_CHUNKS_PER_OP - 1 - messages) as usize;
     let grown_stride = total_elems.div_ceil(budget).max(1);
     let grown = grown_stride * es;
-    static WARNED: std::sync::OnceLock<std::sync::Mutex<std::collections::BTreeSet<String>>> =
-        std::sync::OnceLock::new();
-    let warned = WARNED.get_or_init(Default::default);
-    if warned.lock().unwrap().insert(what.to_string()) {
+    if warn_once(what) {
         eprintln!(
             "[kaitian] warning: {what} needs {worst} chunk sub-tags on one link at \
              {chunk_bytes}-byte chunks (namespace holds {MAX_CHUNKS_PER_OP}); \
@@ -114,6 +111,33 @@ pub fn fit_chunk_bytes(
         );
     }
     grown
+}
+
+/// Slots in the once-per-key warning table. Op-kind labels are a small
+/// closed set ("all-to-all", "gather", "send", …), so 64 hashed slots
+/// are effectively collision-free.
+const WARN_SLOTS: usize = 64;
+
+/// Lock-free once-per-key gate for the auto-grow warning (the
+/// `comm::slab` idiom: CAS-claimed atomic slots instead of the former
+/// `Mutex<BTreeSet<String>>`). Returns `true` exactly once per distinct
+/// key; a hash collision between two distinct keys merely suppresses
+/// the second key's warning, which is acceptable for a diagnostics
+/// rate-limit and unobservable for the handful of op kinds that exist.
+fn warn_once(what: &str) -> bool {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static WARNED: [AtomicU64; WARN_SLOTS] = [const { AtomicU64::new(0) }; WARN_SLOTS];
+    // FNV-1a over the key; force the stored stamp non-zero so 0 can
+    // mean "slot empty".
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in what.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let stamp = h | 1;
+    WARNED[(h as usize) % WARN_SLOTS]
+        .compare_exchange(0, stamp, Ordering::AcqRel, Ordering::Acquire)
+        .is_ok()
 }
 
 // ---------------------------------------------------------------------
@@ -425,6 +449,33 @@ mod tests {
         );
         // Growth is deterministic (SPMD: all ranks compute the same).
         assert_eq!(grown, fit_chunk_bytes(4, 4, 70_000, 2, "test"));
+    }
+
+    #[test]
+    fn warn_once_claims_exactly_once_under_contention() {
+        // Eight threads race one key: exactly one CAS claim wins, no
+        // locks taken (TSan covers this module in the nightly pass).
+        let wins = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let wins = &wins;
+                s.spawn(move || {
+                    if warn_once("warn-once-contended-key") {
+                        wins.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(wins.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert!(
+            !warn_once("warn-once-contended-key"),
+            "a claimed key never fires again"
+        );
+        // Fresh keys still claim (hash collisions can only suppress).
+        assert!(
+            (0..100).any(|i| warn_once(&format!("warn-once-distinct-{i}"))),
+            "an unused key must still claim a slot"
+        );
     }
 
     #[test]

@@ -69,6 +69,10 @@ pub struct CommStats {
     /// the endpoint's lifetime, sampled when the op completes (gauge,
     /// merged by max; non-zero only on queued transports, i.e. TCP).
     pub inflight_hw_bytes: u64,
+    /// Messages culled by the mailbox's staleness fence (epoch-stale
+    /// frames dropped instead of delivered) over the endpoint's
+    /// lifetime, sampled when the op completes (gauge, merged by max).
+    pub stale_dropped: u64,
 }
 
 impl CommStats {
@@ -91,6 +95,15 @@ impl CommStats {
         self.pool_hits += other.pool_hits;
         self.copies += other.copies;
         self.inflight_hw_bytes = self.inflight_hw_bytes.max(other.inflight_hw_bytes);
+        self.stale_dropped = self.stale_dropped.max(other.stale_dropped);
+    }
+
+    /// Stamp the transport-lifetime gauges (writer-queue high-water
+    /// bytes, mailbox stale-drop count) onto this op's stats — called
+    /// once per collective when it completes.
+    pub(crate) fn stamp_transport_gauges(&mut self, t: &dyn Transport) {
+        self.inflight_hw_bytes = t.inflight_high_water();
+        self.stale_dropped = t.stale_dropped();
     }
 
     /// Account one pooled-buffer take of `bytes` (`hit` = served from a
@@ -346,7 +359,7 @@ impl Communicator {
         )?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "all_reduce";
-        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        stats.stamp_transport_gauges(self.transport.as_ref());
         Ok(stats)
     }
 
@@ -371,7 +384,7 @@ impl Communicator {
                 algo::all_reduce_dispatch_f32(&engine, t, &mut buf, op, tag, chunk_bytes())?;
             stats.seconds = t0.elapsed().as_secs_f64();
             stats.op = "all_reduce";
-            stats.inflight_hw_bytes = t.inflight_high_water();
+            stats.stamp_transport_gauges(t);
             Ok((buf, stats))
         })
     }
@@ -383,7 +396,7 @@ impl Communicator {
         let mut stats = tree::broadcast(self.transport.as_ref(), buf, root, tag)?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "broadcast";
-        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        stats.stamp_transport_gauges(self.transport.as_ref());
         Ok(stats)
     }
 
@@ -405,7 +418,7 @@ impl Communicator {
             let mut stats = tree::broadcast(t, &mut buf, root, tag)?;
             stats.seconds = t0.elapsed().as_secs_f64();
             stats.op = "broadcast";
-            stats.inflight_hw_bytes = t.inflight_high_water();
+            stats.stamp_transport_gauges(t);
             Ok((buf, stats))
         })
     }
@@ -417,7 +430,7 @@ impl Communicator {
         let (out, mut stats) = ring::ring_all_gather(self.transport.as_ref(), send, tag)?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "all_gather";
-        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        stats.stamp_transport_gauges(self.transport.as_ref());
         Ok((out, stats))
     }
 
@@ -435,7 +448,7 @@ impl Communicator {
         let mut stats = tree::reduce(self.transport.as_ref(), buf, op, root, tag)?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "reduce";
-        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        stats.stamp_transport_gauges(self.transport.as_ref());
         Ok(stats)
     }
 
@@ -465,7 +478,7 @@ impl Communicator {
         )?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "all_reduce";
-        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        stats.stamp_transport_gauges(self.transport.as_ref());
         Ok(stats)
     }
 
@@ -482,7 +495,7 @@ impl Communicator {
         let mut stats = tree::broadcast_t(self.transport.as_ref(), es, wire, root, tag)?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "broadcast";
-        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        stats.stamp_transport_gauges(self.transport.as_ref());
         Ok(stats)
     }
 
@@ -500,7 +513,7 @@ impl Communicator {
         let mut stats = tree::reduce_t(self.transport.as_ref(), dtype, wire, op, root, tag)?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "reduce";
-        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        stats.stamp_transport_gauges(self.transport.as_ref());
         Ok(stats)
     }
 
@@ -528,7 +541,7 @@ impl Communicator {
         )?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "all_gather";
-        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        stats.stamp_transport_gauges(self.transport.as_ref());
         Ok((out, stats))
     }
 
@@ -553,7 +566,7 @@ impl Communicator {
         )?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "reduce_scatter";
-        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        stats.stamp_transport_gauges(self.transport.as_ref());
         Ok(stats)
     }
 
@@ -571,7 +584,7 @@ impl Communicator {
             op_all_to_all(self.transport.as_ref(), dtype, send, tag, chunk_bytes())?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "all_to_all";
-        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        stats.stamp_transport_gauges(self.transport.as_ref());
         Ok((out, stats))
     }
 
@@ -589,7 +602,7 @@ impl Communicator {
             op_gather(self.transport.as_ref(), dtype, send, root, tag, chunk_bytes())?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "gather";
-        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        stats.stamp_transport_gauges(self.transport.as_ref());
         Ok((out, stats))
     }
 
@@ -620,7 +633,7 @@ impl Communicator {
         )?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "send";
-        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        stats.stamp_transport_gauges(self.transport.as_ref());
         Ok(stats)
     }
 
@@ -649,7 +662,7 @@ impl Communicator {
         )?;
         stats.seconds = t0.elapsed().as_secs_f64();
         stats.op = "recv";
-        stats.inflight_hw_bytes = self.transport.inflight_high_water();
+        stats.stamp_transport_gauges(self.transport.as_ref());
         Ok(stats)
     }
 
@@ -676,7 +689,7 @@ impl Communicator {
             )?;
             stats.seconds = t0.elapsed().as_secs_f64();
             stats.op = "all_reduce";
-            stats.inflight_hw_bytes = t.inflight_high_water();
+            stats.stamp_transport_gauges(t);
             Ok((tensor, stats))
         })
     }
@@ -694,7 +707,7 @@ impl Communicator {
             let mut stats = tree::broadcast_t(t, es, tensor.as_bytes_mut(), root, tag)?;
             stats.seconds = t0.elapsed().as_secs_f64();
             stats.op = "broadcast";
-            stats.inflight_hw_bytes = t.inflight_high_water();
+            stats.stamp_transport_gauges(t);
             Ok((tensor, stats))
         })
     }
@@ -724,7 +737,7 @@ impl Communicator {
             tensor.recycle();
             stats.seconds = t0.elapsed().as_secs_f64();
             stats.op = "reduce_scatter";
-            stats.inflight_hw_bytes = t.inflight_high_water();
+            stats.stamp_transport_gauges(t);
             Ok((shard, stats))
         })
     }
@@ -742,7 +755,7 @@ impl Communicator {
             let out = CommTensor::from_wire(dtype, out)?;
             stats.seconds = t0.elapsed().as_secs_f64();
             stats.op = "all_to_all";
-            stats.inflight_hw_bytes = t.inflight_high_water();
+            stats.stamp_transport_gauges(t);
             Ok((out, stats))
         })
     }
@@ -982,6 +995,7 @@ mod tests {
         let mut g = CommStats {
             inflight_hw_bytes: 10,
             pool_hits: 1,
+            stale_dropped: 2,
             ..Default::default()
         };
         g.merge(&CommStats {
@@ -989,9 +1003,11 @@ mod tests {
             pool_hits: 2,
             alloc_bytes: 5,
             copies: 3,
+            stale_dropped: 4,
             ..Default::default()
         });
         assert_eq!(g.inflight_hw_bytes, 10);
+        assert_eq!(g.stale_dropped, 4, "stale-drop gauge merges by max");
         assert_eq!(g.pool_hits, 3);
         assert_eq!(g.alloc_bytes, 5);
         assert_eq!(g.copies, 3);

@@ -81,6 +81,12 @@ fn apply_json(o: &mut TrainOptions, v: &Json) -> Result<()> {
     if let Some(x) = v.get("grad_sync").and_then(Json::as_str) {
         o.grad_sync = crate::ddp::GradSyncMode::parse(x)?;
     }
+    if let Some(x) = v.get("staleness").and_then(Json::as_usize) {
+        o.staleness = x;
+    }
+    if let Some(x) = v.get("ps_shards").and_then(Json::as_usize) {
+        o.ps_shards = x;
+    }
     if let Some(x) = v.get("algo").and_then(Json::as_str) {
         // Validate eagerly (same policy parser the runtime uses) so a
         // typo'd algorithm name fails at config load, not mid-run.
@@ -141,6 +147,8 @@ pub fn apply_cli_overrides(o: &mut TrainOptions, args: &Args) -> Result<()> {
         "seed",
         "bucket_bytes",
         "grad_sync",
+        "staleness",
+        "ps_shards",
         "algo",
         "log_every",
         "adapt_every",
@@ -264,6 +272,34 @@ mod tests {
         assert_eq!(o.grad_sync, GradSyncMode::AllReduce, "default is all-reduce");
         apply_cli_overrides(&mut o, &args).unwrap();
         assert_eq!(o.grad_sync, GradSyncMode::Sharded);
+    }
+
+    #[test]
+    fn ps_async_knobs_parse() {
+        use crate::ddp::GradSyncMode;
+        let o = train_options_from_json(
+            r#"{"grad_sync": "ps_async", "staleness": 4, "ps_shards": 2}"#,
+        )
+        .unwrap();
+        assert_eq!(o.grad_sync, GradSyncMode::PsAsync);
+        assert_eq!(o.staleness, 4);
+        assert_eq!(o.ps_shards, 2);
+
+        // The CLI routes the same knobs (numeric values stay bare).
+        let args = Args::parse_from(vec![
+            "train".into(),
+            "--grad_sync".into(),
+            "ps_async".into(),
+            "--staleness".into(),
+            "0".into(),
+            "--ps_shards".into(),
+            "3".into(),
+        ]);
+        let mut o = TrainOptions::default();
+        apply_cli_overrides(&mut o, &args).unwrap();
+        assert_eq!(o.grad_sync, GradSyncMode::PsAsync);
+        assert_eq!(o.staleness, 0);
+        assert_eq!(o.ps_shards, 3);
     }
 
     #[test]

@@ -33,8 +33,9 @@ use std::time::Instant;
 
 use crate::collectives::{algo, ring, ReduceOp, WorkHandle};
 use crate::comm::buf::FloatPool;
-use crate::comm::tensor::CommTensor;
+use crate::comm::tensor::{CommTensor, DType};
 use crate::group::{GroupCommReport, ProcessGroup};
+use crate::ps::{self, PsHub, PsPullStats};
 use crate::Result;
 
 /// How the flat gradient is aggregated each step.
@@ -46,6 +47,11 @@ pub enum GradSyncMode {
     /// ZeRO-1-style: reduce-scatter the flat gradient, update only this
     /// rank's shard, all-gather the updated parameter shards.
     Sharded,
+    /// Bounded-staleness asynchronous parameter server ([`crate::ps`]):
+    /// push gradient sums to leader-hosted shards at backward, overlap
+    /// the pull of updated params with the next forward, run at most
+    /// `K` versions ahead of the slowest rank.
+    PsAsync,
 }
 
 impl GradSyncMode {
@@ -53,7 +59,8 @@ impl GradSyncMode {
         match s {
             "allreduce" | "all-reduce" | "all_reduce" => Ok(GradSyncMode::AllReduce),
             "sharded" => Ok(GradSyncMode::Sharded),
-            _ => anyhow::bail!("unknown grad_sync mode {s:?} (allreduce|sharded)"),
+            "ps_async" | "ps-async" | "ps" => Ok(GradSyncMode::PsAsync),
+            _ => anyhow::bail!("unknown grad_sync mode {s:?} (allreduce|sharded|ps_async)"),
         }
     }
 
@@ -61,6 +68,7 @@ impl GradSyncMode {
         match self {
             GradSyncMode::AllReduce => "allreduce",
             GradSyncMode::Sharded => "sharded",
+            GradSyncMode::PsAsync => "ps_async",
         }
     }
 }
@@ -98,6 +106,10 @@ pub struct SyncReport {
     pub copies: u64,
     /// High-water transport writer-queue bytes (gauge, max over buckets).
     pub inflight_hw_bytes: u64,
+    /// Mailbox frames dropped by epoch fencing (gauge, max over buckets;
+    /// non-zero means a stale-epoch peer's traffic was silently
+    /// discarded — surfaced so drops are observable in the report JSON).
+    pub stale_dropped: u64,
     /// Count of collective stages served per algorithm label
     /// (`"ring"`, `"doubling+eager"`, …) — the size-adaptive engine's
     /// choices, surfaced through `StepMetrics`/`Accumulator` into the
@@ -119,6 +131,10 @@ impl SyncReport {
             .inflight_hw_bytes
             .max(r.intra.inflight_hw_bytes)
             .max(r.inter.inflight_hw_bytes);
+        self.stale_dropped = self
+            .stale_dropped
+            .max(r.intra.stale_dropped)
+            .max(r.inter.stale_dropped);
         for label in [r.intra.algo, r.inter.algo] {
             if !label.is_empty() {
                 *self.algo_ops.entry(label).or_default() += 1;
@@ -341,6 +357,134 @@ impl<'pg> DdpEngine<'pg> {
         metrics: Vec<f32>,
     ) -> WorkHandle<(Vec<f32>, GroupCommReport)> {
         self.pg.all_reduce_vec_async(metrics, ReduceOp::Sum)
+    }
+
+    // --- ps_async client path (issue push at backward, complete the ---
+    // --- pull at the top of the next step) ----------------------------
+
+    /// Push this step's gradient sums to every shard and issue the pull
+    /// of the updated params: remote shards get a PUSH frame plus a CTRL
+    /// (`PULL`, or `PULL_FINAL` when `last`) over the `ps` tag
+    /// namespace; co-hosted shards accumulate directly into the hub.
+    /// The reply is *not* received here — [`DdpEngine::ps_install`]
+    /// completes it at the top of the next step, overlapping the server
+    /// round-trip (and any staleness gating) with the next forward.
+    pub fn ps_push(
+        &self,
+        hub: &PsHub,
+        grads: &[f32],
+        version: u64,
+        last: bool,
+    ) -> Result<SyncReport> {
+        let t0 = Instant::now();
+        let rank = self.pg.rank();
+        let plan = hub.plan();
+        let mut report = SyncReport::default();
+        for shard in 0..plan.num_shards() {
+            let owned = plan.gather(shard, grads);
+            let host = plan.host(shard);
+            if host == rank {
+                hub.push(shard, rank, version, owned)?;
+            } else {
+                let push = CommTensor::from_vec(ps::encode_push(version, &owned));
+                report.absorb(&self.pg.send(&push, host, ps::req_tag(shard))?);
+                push.recycle();
+                let verb = if last { ps::VERB_PULL_FINAL } else { ps::VERB_PULL };
+                let ctrl = CommTensor::from_vec(ps::encode_ctrl(verb, version));
+                report.absorb(&self.pg.send(&ctrl, host, ps::req_tag(shard))?);
+                ctrl.recycle();
+            }
+        }
+        report.exposed_s = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    /// Complete the pull issued by the previous step's
+    /// [`DdpEngine::ps_push`] and install the updated params: remote
+    /// shards block in `recv` until the host's staleness gate released
+    /// the reply (the deferred recv parks on the mailbox); co-hosted
+    /// shards block on the hub's gate directly. Returns the comm report
+    /// plus the aggregated gate stats (wait seconds, version lag, the
+    /// piggybacked per-worker version vector).
+    pub fn ps_install(
+        &self,
+        hub: &PsHub,
+        params: &mut [f32],
+        version: u64,
+    ) -> Result<(SyncReport, PsPullStats)> {
+        let t0 = Instant::now();
+        let rank = self.pg.rank();
+        let plan = hub.plan();
+        let workers = self.pg.world();
+        let mut report = SyncReport::default();
+        let mut agg = PsPullStats::default();
+        for shard in 0..plan.num_shards() {
+            let host = plan.host(shard);
+            if host == rank {
+                let (owned, stats) = hub.pull(shard, version)?;
+                plan.scatter(shard, &owned, params);
+                agg.fold(&stats);
+            } else {
+                let elems = plan.shard_elems(shard);
+                let t1 = Instant::now();
+                let (reply, r) =
+                    self.pg
+                        .recv(DType::F32, 1 + workers + elems, host, ps::rep_tag(shard))?;
+                let wait_s = t1.elapsed().as_secs_f64();
+                report.absorb(&r);
+                let reply = reply.into_vec()?;
+                let min_pushed = reply[0] as i64;
+                plan.scatter(shard, &reply[1 + workers..], params);
+                agg.fold(&PsPullStats {
+                    wait_s,
+                    lag: (version as i64 - min_pushed).max(0) as u64,
+                    versions: reply[1..1 + workers].iter().map(|&v| v as i64).collect(),
+                    // The server applied at least every version all
+                    // workers pushed (conservative lower bound).
+                    applied: min_pushed,
+                });
+            }
+        }
+        report.exposed_s = t0.elapsed().as_secs_f64();
+        Ok((report, agg))
+    }
+
+    /// Complete the `PULL_FINAL` replies and install the authoritative
+    /// final `(params, momentum)` from every shard — the ps-mode
+    /// equivalent of the sharded mode's momentum all-gather, run once
+    /// after the last step so checkpoints stay mode-agnostic and every
+    /// rank ends bit-identical.
+    pub fn ps_finish(
+        &self,
+        hub: &PsHub,
+        params: &mut [f32],
+        momentum: &mut [f32],
+        last_version: u64,
+    ) -> Result<SyncReport> {
+        let t0 = Instant::now();
+        let rank = self.pg.rank();
+        let plan = hub.plan();
+        let workers = self.pg.world();
+        let mut report = SyncReport::default();
+        for shard in 0..plan.num_shards() {
+            let host = plan.host(shard);
+            let elems = plan.shard_elems(shard);
+            if host == rank {
+                let (p, m) = hub.pull_final(shard, last_version)?;
+                plan.scatter(shard, &p, params);
+                plan.scatter(shard, &m, momentum);
+            } else {
+                let len = 1 + workers + 2 * elems;
+                let (reply, r) = self.pg.recv(DType::F32, len, host, ps::rep_tag(shard))?;
+                report.absorb(&r);
+                let reply = reply.into_vec()?;
+                let p0 = 1 + workers;
+                plan.scatter(shard, &reply[p0..p0 + elems], params);
+                plan.scatter(shard, &reply[p0 + elems..], momentum);
+            }
+        }
+        report.exposed_s = t0.elapsed().as_secs_f64();
+        Ok(report)
     }
 }
 

@@ -42,8 +42,10 @@
 //! are derived from the buffer length and the process-wide `chunk_bytes`,
 //! so they are identical across ranks too.
 
+use std::cell::UnsafeCell;
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use crate::backend::CollectiveBackend;
 use crate::collectives::{
@@ -102,13 +104,53 @@ struct ChunkTags {
     tag_c: u64,
 }
 
-/// Shared completion state of one chunk-streamed hierarchical op.
-struct PipeInner {
-    group: Option<ChunkGroup>,
-    done: Option<WorkSender<(Vec<f32>, GroupCommReport)>>,
-    intra: CommStats,
-    inter: CommStats,
-    remaining: usize,
+/// Shared completion state of one chunk-streamed hierarchical op —
+/// lock-free, in the `comm::slab` idiom (CAS hand-offs around
+/// `UnsafeCell`s instead of the former `Mutex<PipeInner>`): each chunk's
+/// terminal stage writes only its own result slot, the final `remaining`
+/// decrement hands exclusive ownership of the whole structure to exactly
+/// one thread, and the completion sender is claimed by a single CAS so
+/// the first failure can complete the handle early without a lock.
+struct PipeShared {
+    /// Buffer reassembly handle. Touched only by the final decrementer
+    /// of `remaining` — every other chunk job has already released its
+    /// decrement, and the AcqRel RMW chain orders their writes before
+    /// the final thread's reads.
+    group: UnsafeCell<Option<ChunkGroup>>,
+    /// Completion sender; taken at most once via `done_claimed`.
+    done: UnsafeCell<Option<WorkSender<(Vec<f32>, GroupCommReport)>>>,
+    done_claimed: AtomicBool,
+    /// One `(intra, inter)` result slot per chunk, written exclusively
+    /// by that chunk's terminal pipeline stage before it decrements
+    /// `remaining` (failed chunks leave theirs `None`).
+    slots: Vec<UnsafeCell<Option<(CommStats, CommStats)>>>,
+    /// Chunks still in flight; the decrement that reaches zero owns the
+    /// final assembly.
+    remaining: AtomicUsize,
+}
+
+// SAFETY: every `UnsafeCell` is accessed only under an exclusive-
+// ownership hand-off — per-chunk slots by their own (single) terminal
+// stage, `group` and the slot reads by the unique final decrementer,
+// `done` by the unique `done_claimed` CAS winner — so shared references
+// across the pipeline's comm threads are sound.
+unsafe impl Send for PipeShared {}
+unsafe impl Sync for PipeShared {}
+
+impl PipeShared {
+    /// Claim the completion sender; at most one caller ever wins.
+    fn claim_done(&self) -> Option<WorkSender<(Vec<f32>, GroupCommReport)>> {
+        if self
+            .done_claimed
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return None;
+        }
+        // SAFETY: winning the CAS above grants exclusive access to the
+        // sender cell (losers never touch it).
+        unsafe { (*self.done.get()).take() }
+    }
 }
 
 /// One chunk's pass through the 3-stage pipeline: the chunk slice, its
@@ -124,7 +166,9 @@ struct ChunkJob {
     relay: Option<Arc<dyn CollectiveBackend>>,
     inter_q: CommQueue,
     bcast_q: CommQueue,
-    pipe: Arc<Mutex<PipeInner>>,
+    pipe: Arc<PipeShared>,
+    /// This chunk's index into `pipe.slots`.
+    slot: usize,
 }
 
 impl ChunkJob {
@@ -184,34 +228,45 @@ impl ChunkJob {
     /// reclaim sees every view released.
     fn finish(self, res: Result<(CommStats, CommStats)>) {
         let ChunkJob {
-            chunk, rank, pipe, ..
+            chunk,
+            rank,
+            pipe,
+            slot,
+            ..
         } = self;
         drop(chunk);
-        let mut st = pipe.lock().unwrap();
-        st.remaining -= 1;
         match res {
-            Ok((ci, cx)) => {
-                st.intra.merge(&ci);
-                st.inter.merge(&cx);
-            }
+            // SAFETY: slot `slot` belongs to this chunk alone, and its
+            // terminal stage runs exactly once — nobody reads the cell
+            // until the final `remaining` decrement publishes it.
+            Ok(stats) => unsafe { *pipe.slots[slot].get() = Some(stats) },
             Err(e) => {
                 // First failure completes the handle; later chunks only
                 // account down so the buffer still gets reclaimed/freed.
-                if let Some(done) = st.done.take() {
+                if let Some(done) = pipe.claim_done() {
                     done.send(Err(e));
                 }
             }
         }
-        if st.remaining > 0 {
+        if pipe.remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
             return;
         }
-        let group = st.group.take();
-        let done = st.done.take();
-        let intra = std::mem::take(&mut st.intra);
-        let inter = std::mem::take(&mut st.inter);
-        drop(st);
+        // SAFETY: the decrement to zero grants exclusive ownership of
+        // the group cell and every result slot: all other chunk jobs
+        // released their AcqRel decrement after writing their slot, so
+        // those writes happen-before this point.
+        let group = unsafe { (*pipe.group.get()).take() };
+        let mut intra = CommStats::default();
+        let mut inter = CommStats::default();
+        for s in &pipe.slots {
+            // SAFETY: exclusive ownership established above.
+            if let Some((ci, cx)) = unsafe { (*s.get()).take() } {
+                intra.merge(&ci);
+                inter.merge(&cx);
+            }
+        }
         let buf = group.and_then(|g| g.try_reclaim().ok());
-        let Some(done) = done else { return };
+        let Some(done) = pipe.claim_done() else { return };
         match buf {
             Some(buf) => done.send(Ok((
                 buf,
@@ -430,15 +485,15 @@ impl ProcessGroupKaiTian {
             )));
         }
         let (handle, done) = WorkHandle::pair();
-        let pipe = Arc::new(Mutex::new(PipeInner {
-            group: Some(group),
-            done: Some(done),
-            intra: CommStats::default(),
-            inter: CommStats::default(),
-            remaining: chunks.len(),
-        }));
+        let pipe = Arc::new(PipeShared {
+            group: UnsafeCell::new(Some(group)),
+            done: UnsafeCell::new(Some(done)),
+            done_claimed: AtomicBool::new(false),
+            slots: (0..chunks.len()).map(|_| UnsafeCell::new(None)).collect(),
+            remaining: AtomicUsize::new(chunks.len()),
+        });
 
-        for chunk in chunks {
+        for (slot, chunk) in chunks.into_iter().enumerate() {
             let job = ChunkJob {
                 chunk,
                 tags: self.reserve_chunk_tags(),
@@ -449,6 +504,7 @@ impl ProcessGroupKaiTian {
                 inter_q: self.inter.queue(),
                 bcast_q: self.bcast.queue(),
                 pipe: pipe.clone(),
+                slot,
             };
             self.intra.submit(move || job.run_intra());
         }

@@ -38,6 +38,7 @@ pub mod device;
 pub mod group;
 pub mod metrics;
 pub mod perfmodel;
+pub mod ps;
 pub mod rendezvous;
 pub mod runtime;
 pub mod sched;

@@ -38,6 +38,19 @@ pub struct StepMetrics {
     /// Collective stages served per algorithm label (`"ring"`,
     /// `"doubling+eager"`, …) — the size-adaptive engine's choices.
     pub algo_ops: BTreeMap<&'static str, u64>,
+    /// Seconds spent blocked in the `ps_async` staleness gate waiting
+    /// for a pull to be granted (the price of being *too far ahead*).
+    pub ps_wait_s: f64,
+    /// Seconds this step ran ahead of the slowest rank's pushed version
+    /// (compute charged while `ps_lag > 0` — straggler time absorbed by
+    /// the bounded-staleness window instead of a barrier).
+    pub ps_ahead_s: f64,
+    /// `ps_async` version lag observed at the step's pull: this worker's
+    /// version minus the slowest rank's pushed version (≤ K).
+    pub ps_lag: u64,
+    /// Transport-level messages dropped by mailbox staleness culling
+    /// (gauge: lifetime count at the last sync on this rank).
+    pub stale_dropped: u64,
 }
 
 impl StepMetrics {
@@ -56,6 +69,7 @@ impl StepMetrics {
         for (&label, &count) in &sync.algo_ops {
             *self.algo_ops.entry(label).or_default() += count;
         }
+        self.stale_dropped = self.stale_dropped.max(sync.stale_dropped);
     }
 
     /// Critical-path seconds of the step. Charges the *exposed* comm time
@@ -89,6 +103,15 @@ pub struct Accumulator {
     pub samples: usize,
     /// Collective stages served per algorithm label across all steps.
     pub algo_ops: BTreeMap<&'static str, u64>,
+    /// Total seconds blocked in the `ps_async` staleness gate.
+    pub ps_wait_s: f64,
+    /// Total seconds run ahead of the slowest rank (`ps_async`).
+    pub ps_ahead_s: f64,
+    /// Max version lag observed at any pull (`ps_async`, ≤ K).
+    pub ps_lag: u64,
+    /// Mailbox stale-culled message count (lifetime gauge, max over
+    /// steps since each step stamps the current lifetime total).
+    pub stale_dropped: u64,
 }
 
 impl Accumulator {
@@ -108,6 +131,10 @@ impl Accumulator {
         for (&label, &count) in &m.algo_ops {
             *self.algo_ops.entry(label).or_default() += count;
         }
+        self.ps_wait_s += m.ps_wait_s;
+        self.ps_ahead_s += m.ps_ahead_s;
+        self.ps_lag = self.ps_lag.max(m.ps_lag);
+        self.stale_dropped = self.stale_dropped.max(m.stale_dropped);
     }
 
     /// Critical-path seconds (see [`StepMetrics::total_s`]): exposed comm
@@ -151,6 +178,10 @@ impl Accumulator {
             ("samples", Json::num(self.samples as f64)),
             ("throughput_sps", Json::num(self.throughput())),
             ("algo_ops", algo_ops),
+            ("ps_wait_s", Json::num(self.ps_wait_s)),
+            ("ps_ahead_s", Json::num(self.ps_ahead_s)),
+            ("ps_lag", Json::num(self.ps_lag as f64)),
+            ("stale_dropped", Json::num(self.stale_dropped as f64)),
         ])
     }
 }
@@ -340,6 +371,10 @@ mod tests {
             pool_hits: 2,
             copies: 6,
             algo_ops: BTreeMap::from([("ring", 3_u64), ("doubling+eager", 1)]),
+            ps_wait_s: 0.002,
+            ps_ahead_s: 0.1,
+            ps_lag: 2,
+            stale_dropped: 3,
         });
         acc.add(&StepMetrics {
             batch: 64,
@@ -355,6 +390,10 @@ mod tests {
             pool_hits: 8,
             copies: 6,
             algo_ops: BTreeMap::from([("ring", 2_u64)]),
+            ps_wait_s: 0.003,
+            ps_ahead_s: 0.1,
+            ps_lag: 1,
+            stale_dropped: 5,
         });
         assert_eq!(acc.steps, 2);
         assert_eq!(acc.samples, 128);
@@ -363,6 +402,11 @@ mod tests {
         assert_eq!(acc.copies, 12);
         assert_eq!(acc.algo_ops.get("ring"), Some(&5));
         assert_eq!(acc.algo_ops.get("doubling+eager"), Some(&1));
+        // ps_* seconds sum; lag and the stale-drop gauge merge by max.
+        assert!((acc.ps_wait_s - 0.005).abs() < 1e-12);
+        assert!((acc.ps_ahead_s - 0.2).abs() < 1e-12);
+        assert_eq!(acc.ps_lag, 2);
+        assert_eq!(acc.stale_dropped, 5);
         let json = Json::parse(&acc.to_json().to_string()).unwrap();
         let algo_ops = json.get("algo_ops").expect("algo_ops in report JSON");
         assert_eq!(

@@ -1,0 +1,864 @@
+//! Bounded-staleness sharded parameter server — the `ps_async` gradient
+//! sync mode (ROADMAP item 5).
+//!
+//! Bulk-synchronous data parallelism pays the straggler tax every step:
+//! between the scheduler's rebalances, each all-reduce barrier runs at
+//! the pace of the slowest device. This module replaces the barrier with
+//! a *stale-synchronous-parallel* (SSP) protocol:
+//!
+//! * Parameters are hash-partitioned **by bucket** across shards hosted
+//!   on the group-leader ranks ([`ShardPlan`]; bucket `b` → shard
+//!   `b % S`, shard `s` → leader `s % L`) — the same ranks that already
+//!   carry the host relay, so parameter traffic rides the staging path
+//!   the paper mandates for cross-vendor bytes.
+//! * Each step (a *version*), every worker **pushes** its local gradient
+//!   sum for each shard's owned ranges, then issues a **pull** that it
+//!   only completes at the top of the *next* step — overlapping the
+//!   server round-trip with the next forward pass.
+//! * The server applies version `v` only once *all* workers' pushes for
+//!   `v` have arrived, summing the per-worker gradients in rank order
+//!   0..W-1 and stepping SGD with the same fused update the synchronous
+//!   modes use — so `K = 0` degenerates to fully synchronous SGD and
+//!   (on two-rank clusters, where two-operand float addition is
+//!   order-independent) bitwise-matches the sharded mode.
+//! * The **bounded-staleness gate**: a pull for version `v` is granted
+//!   only when `v - min_w(pushed[w]) <= K`. Fast workers may run at most
+//!   `K` versions ahead of the slowest rank; the slowest rank itself is
+//!   never gated, so the protocol cannot deadlock. Blocked remote pulls
+//!   simply *are* the reply message not having been sent yet — the
+//!   worker's deferred `recv` parks on the mailbox like any other flow.
+//!
+//! Wire protocol (all-f32 frames over the `ps` tag namespace, strict
+//! PUSH-then-CTRL alternation per `(worker, shard, version)` so the
+//! server always knows the next frame's length):
+//!
+//! ```text
+//! worker → host  PUSH  = [0.0, version, grads…owned]        (2 + E)
+//! worker → host  CTRL  = [verb, version]                    (2)
+//!                        verb 1.0 = PULL, 2.0 = PULL_FINAL
+//! host → worker  PULL reply       = [min_pushed, pushed[0..W], params…]            (1 + W + E)
+//! host → worker  PULL_FINAL reply = [min_pushed, pushed[0..W], params…, momentum…] (1 + W + 2E)
+//! ```
+//!
+//! Versions are exact in f32 (training runs are far below 2^24 steps).
+//! The pushed-version vector piggybacks on every reply, giving each
+//! worker the cluster-wide version lag for the report JSON.
+//!
+//! The server also counts pushes per worker ([`PsHub::load_window`]):
+//! in `ps_async` mode the scheduler consumes these *server-observed push
+//! rates* as its load signal instead of the per-step timings a barrier
+//! would have produced.
+//!
+//! Knobs: `--staleness` / `KAITIAN_STALENESS` (window `K`) and
+//! `--ps_shards` / `KAITIAN_PS_SHARDS` (shard count; `0` = one per
+//! group leader), both validated by [`crate::util::env::parse_or_warn`].
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::comm::tensor::{CommTensor, DType};
+use crate::group::ProcessGroup;
+use crate::train::loop_::sgd_update_shard;
+use crate::train::LrSchedule;
+use crate::util::env::env_or_warn;
+use crate::Result;
+
+/// Environment override for the staleness window `K`.
+pub const ENV_STALENESS: &str = "KAITIAN_STALENESS";
+/// Environment override for the parameter-server shard count.
+pub const ENV_PS_SHARDS: &str = "KAITIAN_PS_SHARDS";
+/// Default staleness window when neither CLI nor env sets one.
+pub const DEFAULT_STALENESS: usize = 1;
+
+/// `KAITIAN_STALENESS`, validated (garbage warns and falls back).
+pub fn staleness_from_env() -> usize {
+    env_or_warn(ENV_STALENESS, DEFAULT_STALENESS)
+}
+
+/// `KAITIAN_PS_SHARDS`, validated (`0` = one shard per group leader).
+pub fn ps_shards_from_env() -> usize {
+    env_or_warn(ENV_PS_SHARDS, 0)
+}
+
+// --- tag namespace ----------------------------------------------------
+
+/// Base of the `ps` user-tag namespace: far above the p2p tags the
+/// collectives use, and well inside the 32-bit user-tag space that
+/// `collectives::chunk::ptp_tag` maps disjointly from collective op
+/// tags.
+pub const PS_TAG_BASE: u32 = 1 << 30;
+
+/// Request tag (worker → host) for one shard's flows. FIFO per
+/// `(peer, tag)` keeps each worker's PUSH/CTRL alternation ordered.
+pub fn req_tag(shard: usize) -> u32 {
+    PS_TAG_BASE | ((shard as u32) << 2)
+}
+
+/// Reply tag (host → worker) for one shard's flows.
+pub fn rep_tag(shard: usize) -> u32 {
+    PS_TAG_BASE | ((shard as u32) << 2) | 1
+}
+
+// --- wire encoding ----------------------------------------------------
+
+/// CTRL verb: pull current params (reply `1 + W + E` f32s).
+pub const VERB_PULL: f32 = 1.0;
+/// CTRL verb: final pull — params *and* momentum (reply `1 + W + 2E`).
+pub const VERB_PULL_FINAL: f32 = 2.0;
+/// PUSH frame header length (`[0.0, version]`).
+pub const PUSH_HDR: usize = 2;
+/// CTRL frame length (`[verb, version]`).
+pub const CTRL_LEN: usize = 2;
+
+/// Build one PUSH frame: `[0.0, version, grads…]`.
+pub fn encode_push(version: u64, grads: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(PUSH_HDR + grads.len());
+    out.push(0.0);
+    out.push(version as f32);
+    out.extend_from_slice(grads);
+    out
+}
+
+/// Build one CTRL frame: `[verb, version]`.
+pub fn encode_ctrl(verb: f32, version: u64) -> Vec<f32> {
+    vec![verb, version as f32]
+}
+
+// --- sharding ---------------------------------------------------------
+
+/// One shard: its host rank and the parameter ranges it owns.
+#[derive(Debug, Clone)]
+pub struct ShardSpec {
+    /// The group-leader rank hosting this shard.
+    pub host: usize,
+    /// The (bucket) ranges of the flat parameter vector this shard owns.
+    pub ranges: Vec<Range<usize>>,
+    /// Total owned elements (`Σ ranges[i].len()`).
+    pub elems: usize,
+}
+
+/// The bucket → shard → host partition of the flat parameter vector.
+///
+/// Built from the *same* bucket ranges the synchronous sync paths use
+/// ([`crate::ddp::DdpEngine::sync_ranges`]), so ps traffic has the same
+/// granularity as the collectives it replaces.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    n_params: usize,
+    shards: Vec<ShardSpec>,
+}
+
+impl ShardPlan {
+    /// Partition `ranges` (covering `0..n_params`) across `shards`
+    /// shards hosted round-robin on `leaders`. `shards == 0` means one
+    /// shard per leader; the count is clamped to the number of ranges so
+    /// no shard is empty.
+    pub fn build(
+        n_params: usize,
+        ranges: &[Range<usize>],
+        leaders: &[usize],
+        shards: usize,
+    ) -> Result<Self> {
+        anyhow::ensure!(!leaders.is_empty(), "ps: no group leaders to host shards");
+        let want = if shards == 0 { leaders.len() } else { shards };
+        let s = want.min(ranges.len()).max(1);
+        let mut specs: Vec<ShardSpec> = (0..s)
+            .map(|i| ShardSpec {
+                host: leaders[i % leaders.len()],
+                ranges: Vec::new(),
+                elems: 0,
+            })
+            .collect();
+        for (b, r) in ranges.iter().enumerate() {
+            let spec = &mut specs[b % s];
+            spec.ranges.push(r.clone());
+            spec.elems += r.len();
+        }
+        Ok(Self {
+            n_params,
+            shards: specs,
+        })
+    }
+
+    /// Flat parameter-vector length this plan partitions.
+    pub fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The rank hosting `shard`.
+    pub fn host(&self, shard: usize) -> usize {
+        self.shards[shard].host
+    }
+
+    /// Elements owned by `shard`.
+    pub fn shard_elems(&self, shard: usize) -> usize {
+        self.shards[shard].elems
+    }
+
+    /// The full spec of `shard`.
+    pub fn spec(&self, shard: usize) -> &ShardSpec {
+        &self.shards[shard]
+    }
+
+    /// Shards hosted on `rank` (empty for non-leaders).
+    pub fn hosted_shards(&self, rank: usize) -> Vec<usize> {
+        (0..self.shards.len())
+            .filter(|&s| self.shards[s].host == rank)
+            .collect()
+    }
+
+    /// Copy `shard`'s owned ranges out of the flat vector, concatenated
+    /// in range order (the wire layout of PUSH payloads and replies).
+    pub fn gather(&self, shard: usize, flat: &[f32]) -> Vec<f32> {
+        let spec = &self.shards[shard];
+        let mut out = Vec::with_capacity(spec.elems);
+        for r in &spec.ranges {
+            out.extend_from_slice(&flat[r.clone()]);
+        }
+        out
+    }
+
+    /// Scatter a concatenated shard payload back into the flat vector.
+    pub fn scatter(&self, shard: usize, data: &[f32], flat: &mut [f32]) {
+        let spec = &self.shards[shard];
+        debug_assert_eq!(data.len(), spec.elems);
+        let mut off = 0;
+        for r in &spec.ranges {
+            flat[r.clone()].copy_from_slice(&data[off..off + r.len()]);
+            off += r.len();
+        }
+    }
+}
+
+// --- server hyperparameters -------------------------------------------
+
+/// The optimizer state the server needs to apply versions: the same
+/// schedule and scaling the synchronous loop uses, so `K = 0` is
+/// *bitwise* the synchronous update.
+#[derive(Debug, Clone, Copy)]
+pub struct PsHyper {
+    /// Step-decay learning-rate schedule (per epoch).
+    pub schedule: LrSchedule,
+    /// SGD momentum coefficient.
+    pub momentum: f32,
+    /// L2 weight decay.
+    pub weight_decay: f32,
+    /// Gradient scale (`1 / global_batch`; pushes carry *sums*).
+    pub grad_scale: f32,
+    /// Steps per epoch (maps a version to its schedule epoch).
+    pub steps_per_epoch: usize,
+    /// The staleness window `K`.
+    pub staleness: usize,
+}
+
+impl PsHyper {
+    /// `[lr, momentum, weight_decay, grad_scale]` for applying `version`.
+    pub fn hyper_at(&self, version: u64) -> [f32; 4] {
+        let epoch = version as usize / self.steps_per_epoch.max(1);
+        [
+            self.schedule.lr_at(epoch),
+            self.momentum,
+            self.weight_decay,
+            self.grad_scale,
+        ]
+    }
+}
+
+// --- the hub ----------------------------------------------------------
+
+/// Stats returned with every granted pull (fed into the per-rank
+/// `ps_wait_s` / `ps_lag` report fields).
+#[derive(Debug, Clone, Default)]
+pub struct PsPullStats {
+    /// Wall-clock seconds this pull was gated (or spent blocked in
+    /// `recv` for remote shards).
+    pub wait_s: f64,
+    /// `version - min_w(pushed[w])` at grant time (`<= K` by the gate).
+    pub lag: u64,
+    /// Snapshot of every worker's highest pushed version (`-1` = none).
+    pub versions: Vec<i64>,
+    /// Highest version fully applied to the returned params.
+    pub applied: i64,
+}
+
+impl PsPullStats {
+    /// Fold another shard's grant into a per-step aggregate: waits add
+    /// (they are serial on the caller), lags take the max.
+    pub fn fold(&mut self, other: &PsPullStats) {
+        self.wait_s += other.wait_s;
+        self.lag = self.lag.max(other.lag);
+        if other.versions.len() > self.versions.len() {
+            self.versions = other.versions.clone();
+        }
+        self.applied = self.applied.max(other.applied);
+    }
+}
+
+/// One shard's authoritative optimizer state.
+struct ShardState {
+    /// Owned params, concatenated in range order.
+    params: Vec<f32>,
+    /// Owned momentum, same layout.
+    momentum: Vec<f32>,
+    /// Highest version pushed per worker (`-1` = none yet).
+    pushed: Vec<i64>,
+    /// Buffered pushes for versions not yet complete.
+    pending: BTreeMap<u64, Vec<Option<Vec<f32>>>>,
+    /// Highest version fully applied (`-1` = initial params).
+    applied: i64,
+}
+
+struct ShardSlot {
+    state: Mutex<ShardState>,
+    cv: Condvar,
+}
+
+/// Server-side push-rate accounting (the scheduler's load signal in
+/// `ps_async` mode).
+struct PsLoad {
+    counts: Vec<AtomicU64>,
+    window: Mutex<(Vec<u64>, Instant)>,
+}
+
+/// The in-process parameter-server hub: every shard's state plus the
+/// staleness gate. One hub is shared (via `Arc`) by all rank threads;
+/// co-located workers push/pull through direct calls, remote workers
+/// through [`PsHub::serve_remote`] sessions speaking the wire protocol
+/// over real p2p sends — so cross-host traffic is genuinely priced.
+pub struct PsHub {
+    plan: ShardPlan,
+    hyper: PsHyper,
+    workers: usize,
+    slots: Vec<ShardSlot>,
+    load: PsLoad,
+}
+
+/// Upper bound on a single gate/serve wait; turns protocol bugs into
+/// errors instead of hangs.
+const GATE_TIMEOUT: Duration = Duration::from_secs(120);
+
+impl PsHub {
+    /// Build the hub with the initial model state (`params` /
+    /// `momentum` are the full flat vectors; each shard copies out its
+    /// owned ranges). `workers` is the world size.
+    pub fn new(
+        plan: ShardPlan,
+        hyper: PsHyper,
+        workers: usize,
+        params: &[f32],
+        momentum: &[f32],
+    ) -> Arc<Self> {
+        let slots = (0..plan.num_shards())
+            .map(|s| ShardSlot {
+                state: Mutex::new(ShardState {
+                    params: plan.gather(s, params),
+                    momentum: plan.gather(s, momentum),
+                    pushed: vec![-1; workers],
+                    pending: BTreeMap::new(),
+                    applied: -1,
+                }),
+                cv: Condvar::new(),
+            })
+            .collect();
+        let load = PsLoad {
+            counts: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            window: Mutex::new((vec![0; workers], Instant::now())),
+        };
+        Arc::new(Self {
+            plan,
+            hyper,
+            workers,
+            slots,
+            load,
+        })
+    }
+
+    /// The partition this hub serves.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// The server's optimizer hyperparameters.
+    pub fn hyper(&self) -> &PsHyper {
+        &self.hyper
+    }
+
+    /// Accumulate one worker's gradient sum for `(shard, version)` and
+    /// apply every version that just became complete, in version order,
+    /// summing worker contributions in rank order 0..W-1 (deterministic
+    /// arithmetic regardless of arrival order).
+    pub fn push(&self, shard: usize, worker: usize, version: u64, grads: Vec<f32>) -> Result<()> {
+        anyhow::ensure!(
+            grads.len() == self.plan.shard_elems(shard),
+            "ps shard {shard}: push of {} elems, owns {}",
+            grads.len(),
+            self.plan.shard_elems(shard)
+        );
+        let slot = &self.slots[shard];
+        {
+            let mut st = slot.state.lock().unwrap();
+            anyhow::ensure!(
+                st.pushed[worker] + 1 == version as i64,
+                "ps shard {shard}: worker {worker} pushed version {version} after {}",
+                st.pushed[worker]
+            );
+            st.pushed[worker] = version as i64;
+            st.pending
+                .entry(version)
+                .or_insert_with(|| vec![None; self.workers])[worker] = Some(grads);
+            self.apply_ready(&mut st);
+        }
+        self.load.counts[worker].fetch_add(1, Ordering::Relaxed);
+        slot.cv.notify_all();
+        Ok(())
+    }
+
+    /// Apply every complete pending version in order.
+    fn apply_ready(&self, st: &mut ShardState) {
+        loop {
+            let next = (st.applied + 1) as u64;
+            match st.pending.get(&next) {
+                Some(entry) if entry.iter().all(Option::is_some) => {}
+                _ => return,
+            }
+            let entry = st.pending.remove(&next).expect("checked above");
+            let mut it = entry.into_iter().map(|g| g.expect("checked above"));
+            let mut sum = it.next().expect("at least one worker");
+            for g in it {
+                for (a, b) in sum.iter_mut().zip(&g) {
+                    *a += b;
+                }
+            }
+            sgd_update_shard(
+                &mut st.params,
+                &mut st.momentum,
+                &sum,
+                self.hyper.hyper_at(next),
+            );
+            st.applied = next as i64;
+        }
+    }
+
+    /// Pull `shard`'s params for a worker at `version`, blocking on the
+    /// bounded-staleness gate: granted only once
+    /// `version - min_w(pushed[w]) <= K`. The caller must have pushed
+    /// `version` first (the strict PUSH→CTRL alternation guarantees it),
+    /// so the slowest worker always passes immediately.
+    ///
+    /// Invariant on grant: the returned params include every version up
+    /// to at least `version - K` (`stats.applied >= version - K`).
+    pub fn pull(&self, shard: usize, version: u64) -> Result<(Vec<f32>, PsPullStats)> {
+        let t0 = Instant::now();
+        let slot = &self.slots[shard];
+        let k = self.hyper.staleness as i64;
+        let mut st = slot.state.lock().unwrap();
+        loop {
+            let min = st.pushed.iter().copied().min().unwrap_or(-1);
+            if version as i64 - min <= k {
+                break;
+            }
+            let (guard, timeout) = slot.cv.wait_timeout(st, GATE_TIMEOUT).unwrap();
+            st = guard;
+            anyhow::ensure!(
+                !timeout.timed_out(),
+                "ps shard {shard}: pull gate timed out at version {version}"
+            );
+        }
+        let min = st.pushed.iter().copied().min().unwrap_or(-1);
+        debug_assert!(st.applied >= version as i64 - k, "staleness invariant");
+        let stats = PsPullStats {
+            wait_s: t0.elapsed().as_secs_f64(),
+            lag: (version as i64 - min).max(0) as u64,
+            versions: st.pushed.clone(),
+            applied: st.applied,
+        };
+        Ok((st.params.clone(), stats))
+    }
+
+    /// Final pull: wait for `last_version` to be fully applied, then
+    /// return the authoritative `(params, momentum)` for the shard.
+    pub fn pull_final(&self, shard: usize, last_version: u64) -> Result<(Vec<f32>, Vec<f32>)> {
+        let slot = &self.slots[shard];
+        let mut st = slot.state.lock().unwrap();
+        while st.applied < last_version as i64 {
+            let (guard, timeout) = slot.cv.wait_timeout(st, GATE_TIMEOUT).unwrap();
+            st = guard;
+            anyhow::ensure!(
+                !timeout.timed_out(),
+                "ps shard {shard}: final pull timed out at version {last_version}"
+            );
+        }
+        Ok((st.params.clone(), st.momentum.clone()))
+    }
+
+    /// Serve one remote worker's flows for one shard, speaking the wire
+    /// protocol over `pg` (the host rank's process group). Runs until
+    /// the worker's `PULL_FINAL`. Spawn one session per
+    /// `(hosted shard, remote worker)` pair.
+    pub fn serve_remote(&self, pg: &dyn ProcessGroup, shard: usize, worker: usize) -> Result<()> {
+        let elems = self.plan.shard_elems(shard);
+        let (req, rep) = (req_tag(shard), rep_tag(shard));
+        loop {
+            let (frame, _) = pg.recv(DType::F32, PUSH_HDR + elems, worker, req)?;
+            let frame = frame.into_vec()?;
+            anyhow::ensure!(
+                frame[0] == 0.0,
+                "ps shard {shard}: expected PUSH verb, got {}",
+                frame[0]
+            );
+            let version = frame[1] as u64;
+            self.push(shard, worker, version, frame[PUSH_HDR..].to_vec())?;
+
+            let (ctrl, _) = pg.recv(DType::F32, CTRL_LEN, worker, req)?;
+            let ctrl = ctrl.into_vec()?;
+            let (verb, v) = (ctrl[0], ctrl[1] as u64);
+            anyhow::ensure!(
+                v == version,
+                "ps shard {shard}: CTRL version {v} after PUSH {version}"
+            );
+            if verb == VERB_PULL_FINAL {
+                let (params, momentum) = self.pull_final(shard, version)?;
+                let mut reply = Vec::with_capacity(1 + self.workers + 2 * elems);
+                // After PULL_FINAL every worker has pushed the last
+                // version, so the piggybacked vector is uniform.
+                reply.resize(1 + self.workers, version as f32);
+                reply.extend_from_slice(&params);
+                reply.extend_from_slice(&momentum);
+                let t = CommTensor::from_vec(reply);
+                pg.send(&t, worker, rep)?;
+                t.recycle();
+                return Ok(());
+            }
+            anyhow::ensure!(
+                verb == VERB_PULL,
+                "ps shard {shard}: unknown CTRL verb {verb}"
+            );
+            let (params, stats) = self.pull(shard, version)?;
+            let mut reply = Vec::with_capacity(1 + self.workers + elems);
+            reply.push((version as i64 - stats.lag as i64) as f32);
+            reply.extend(stats.versions.iter().map(|&x| x as f32));
+            reply.extend_from_slice(&params);
+            let t = CommTensor::from_vec(reply);
+            pg.send(&t, worker, rep)?;
+            t.recycle();
+        }
+    }
+
+    /// Drain the push-rate window: per-worker *per-sample seconds*
+    /// proxies since the previous call (`None` when a worker pushed
+    /// nothing in the window, or has no allocation). This is the load
+    /// signal `sched::controller` consumes in `ps_async` mode: a slow
+    /// device pushes fewer versions per wall-clock second, so its
+    /// modeled per-sample time rises and the allocator shifts batch
+    /// share away from it — no barrier-timed observations needed.
+    pub fn load_window(&self, alloc: &[usize]) -> Vec<Option<f64>> {
+        let shards = self.plan.num_shards().max(1) as f64;
+        let mut w = self.load.window.lock().unwrap();
+        let dt = w.1.elapsed().as_secs_f64();
+        let mut out = Vec::with_capacity(self.workers);
+        for r in 0..self.workers {
+            let now = self.load.counts[r].load(Ordering::Relaxed);
+            let delta = now - w.0[r];
+            w.0[r] = now;
+            let versions = delta as f64 / shards;
+            let b = alloc.get(r).copied().unwrap_or(0);
+            if versions <= 0.0 || b == 0 || dt <= 0.0 {
+                out.push(None);
+            } else {
+                out.push(Some(dt / (versions * b as f64)));
+            }
+        }
+        w.1 = Instant::now();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::env::parse_or_warn;
+
+    fn plan(n: usize, bucket: usize, leaders: &[usize], shards: usize) -> ShardPlan {
+        let ranges: Vec<Range<usize>> = (0..n)
+            .step_by(bucket)
+            .map(|s| s..(s + bucket).min(n))
+            .collect();
+        ShardPlan::build(n, &ranges, leaders, shards).unwrap()
+    }
+
+    fn hyper(k: usize) -> PsHyper {
+        PsHyper {
+            schedule: LrSchedule::new(0.1, 0.1, 20),
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            grad_scale: 1.0 / 8.0,
+            steps_per_epoch: 10,
+            staleness: k,
+        }
+    }
+
+    #[test]
+    fn shard_plan_partitions_all_params_disjointly() {
+        let p = plan(1003, 128, &[0, 2], 0);
+        assert_eq!(p.num_shards(), 2);
+        let mut seen = vec![false; 1003];
+        for s in 0..p.num_shards() {
+            assert_eq!(p.host(s), [0, 2][s]);
+            for r in &p.spec(s).ranges {
+                for i in r.clone() {
+                    assert!(!seen[i], "param {i} owned twice");
+                    seen[i] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "every param owned exactly once");
+        assert_eq!(p.hosted_shards(0), vec![0]);
+        assert_eq!(p.hosted_shards(1), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn shard_count_clamps_to_ranges_and_zero_means_leaders() {
+        // 3 ranges, 2 leaders, asking for 8 shards -> clamp to 3.
+        let p = plan(300, 100, &[0, 1], 8);
+        assert_eq!(p.num_shards(), 3);
+        assert_eq!((p.host(0), p.host(1), p.host(2)), (0, 1, 0));
+        // shards=0 -> one per leader.
+        assert_eq!(plan(300, 100, &[0, 1], 0).num_shards(), 2);
+    }
+
+    #[test]
+    fn gather_scatter_round_trip() {
+        let p = plan(517, 64, &[1, 3], 3);
+        let flat: Vec<f32> = (0..517).map(|i| i as f32 * 0.5).collect();
+        let mut rebuilt = vec![0.0_f32; 517];
+        for s in 0..p.num_shards() {
+            let owned = p.gather(s, &flat);
+            assert_eq!(owned.len(), p.shard_elems(s));
+            p.scatter(s, &owned, &mut rebuilt);
+        }
+        assert_eq!(rebuilt, flat);
+    }
+
+    #[test]
+    fn tag_namespace_is_disjoint_per_shard_and_direction() {
+        let mut tags = std::collections::BTreeSet::new();
+        for s in 0..64 {
+            assert!(tags.insert(req_tag(s)));
+            assert!(tags.insert(rep_tag(s)));
+            assert!(req_tag(s) >= PS_TAG_BASE);
+        }
+    }
+
+    #[test]
+    fn versions_are_exact_in_f32() {
+        for v in [0_u64, 1, 9_750, 100_000, (1 << 24) - 1] {
+            let f = v as f32;
+            assert_eq!(f as u64, v, "version {v} must round-trip through f32");
+        }
+    }
+
+    #[test]
+    fn push_frame_round_trips() {
+        let f = encode_push(9_750, &[1.5, -2.25]);
+        assert_eq!(f.len(), PUSH_HDR + 2);
+        assert_eq!(f[0], 0.0);
+        assert_eq!(f[1] as u64, 9_750);
+        assert_eq!(&f[PUSH_HDR..], &[1.5, -2.25]);
+        let c = encode_ctrl(VERB_PULL_FINAL, 19);
+        assert_eq!(c, vec![2.0, 19.0]);
+    }
+
+    /// Deterministic per-(worker, version) gradient sum.
+    fn grad(worker: usize, version: u64, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| ((i + worker * 7) % 13) as f32 * 0.25 - version as f32 * 0.001)
+            .collect()
+    }
+
+    /// Serial reference: apply every version in order, summing workers
+    /// in rank order — what the hub must compute regardless of arrival
+    /// interleaving.
+    fn serial_reference(
+        p: &ShardPlan,
+        h: &PsHyper,
+        workers: usize,
+        versions: u64,
+        n: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut params = vec![0.5_f32; n];
+        let mut momentum = vec![0.0_f32; n];
+        for v in 0..versions {
+            let mut sum = grad(0, v, n);
+            for w in 1..workers {
+                for (a, b) in sum.iter_mut().zip(&grad(w, v, n)) {
+                    *a += b;
+                }
+            }
+            for s in 0..p.num_shards() {
+                let mut ps = p.gather(s, &params);
+                let mut ms = p.gather(s, &momentum);
+                let gs = p.gather(s, &sum);
+                sgd_update_shard(&mut ps, &mut ms, &gs, h.hyper_at(v));
+                p.scatter(s, &ps, &mut params);
+                p.scatter(s, &ms, &mut momentum);
+            }
+        }
+        (params, momentum)
+    }
+
+    #[test]
+    fn staleness_gate_invariant_holds_under_concurrency() {
+        // Property: no pull is ever granted with the returned params
+        // older than `version - K`, and the observed lag never exceeds
+        // K — under 3 concurrent workers with a deliberate straggler.
+        let (n, workers, versions, k) = (96, 3, 40_u64, 2);
+        let p = plan(n, 16, &[0, 1], 0);
+        let h = hyper(k);
+        let params = vec![0.5_f32; n];
+        let momentum = vec![0.0_f32; n];
+        let hub = PsHub::new(p.clone(), h, workers, &params, &momentum);
+        std::thread::scope(|s| {
+            for w in 0..workers {
+                let hub = &hub;
+                let p = &p;
+                s.spawn(move || {
+                    for v in 0..versions {
+                        if w == 0 {
+                            // Straggler: let the others run ahead.
+                            std::thread::sleep(Duration::from_micros(300));
+                        }
+                        let g = grad(w, v, n);
+                        for shard in 0..p.num_shards() {
+                            hub.push(shard, w, v, p.gather(shard, &g)).unwrap();
+                        }
+                        for shard in 0..p.num_shards() {
+                            let (_, stats) = hub.pull(shard, v).unwrap();
+                            assert!(
+                                stats.applied >= v as i64 - k as i64,
+                                "worker {w} saw version {} at step {v} (K={k})",
+                                stats.applied
+                            );
+                            assert!(stats.lag <= k as u64, "lag {} > K", stats.lag);
+                        }
+                    }
+                });
+            }
+        });
+        // Regardless of interleaving, the final state is the serial one.
+        let (want_p, want_m) = serial_reference(&p, &h, workers, versions, n);
+        let mut got_p = vec![0.0_f32; n];
+        let mut got_m = vec![0.0_f32; n];
+        for shard in 0..p.num_shards() {
+            let (sp, sm) = hub.pull_final(shard, versions - 1).unwrap();
+            p.scatter(shard, &sp, &mut got_p);
+            p.scatter(shard, &sm, &mut got_m);
+        }
+        assert_eq!(got_p, want_p, "hub must match the serial reference bitwise");
+        assert_eq!(got_m, want_m);
+    }
+
+    #[test]
+    fn k0_gate_is_fully_synchronous() {
+        // With K=0 every granted pull has applied == version: the exact
+        // barrier semantics of synchronous SGD.
+        let (n, workers, versions) = (32, 2, 12_u64);
+        let p = plan(n, 8, &[0], 1);
+        let init = vec![0.5_f32; n];
+        let zeros = vec![0.0_f32; n];
+        let hub = PsHub::new(p.clone(), hyper(0), workers, &init, &zeros);
+        std::thread::scope(|s| {
+            for w in 0..workers {
+                let hub = &hub;
+                let p = &p;
+                s.spawn(move || {
+                    for v in 0..versions {
+                        if w == 1 && v % 3 == 0 {
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                        let g = grad(w, v, n);
+                        hub.push(0, w, v, p.gather(0, &g)).unwrap();
+                        let (_, stats) = hub.pull(0, v).unwrap();
+                        assert_eq!(stats.applied, v as i64, "K=0 must be synchronous");
+                        assert_eq!(stats.lag, 0);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn push_rejects_version_gaps() {
+        let p = plan(8, 8, &[0], 1);
+        let hub = PsHub::new(p, hyper(4), 1, &[0.0; 8], &[0.0; 8]);
+        hub.push(0, 0, 0, vec![0.0; 8]).unwrap();
+        // Skipping version 1 is a protocol violation.
+        assert!(hub.push(0, 0, 2, vec![0.0; 8]).is_err());
+        // Wrong payload size too.
+        assert!(hub.push(0, 0, 1, vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn load_window_tracks_push_rates() {
+        let p = plan(16, 8, &[0], 2);
+        let hub = PsHub::new(p, hyper(1), 2, &[0.0; 16], &[0.0; 16]);
+        // Worker 0 pushes 4 versions (x2 shards), worker 1 pushes 1.
+        for v in 0..4 {
+            for shard in 0..2 {
+                hub.push(shard, 0, v, vec![0.0; 8]).unwrap();
+            }
+        }
+        for shard in 0..2 {
+            hub.push(shard, 1, 0, vec![0.0; 8]).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        let w = hub.load_window(&[10, 10]);
+        let (a, b) = (w[0].unwrap(), w[1].unwrap());
+        assert!(a > 0.0 && b > 0.0);
+        assert!(b > a, "fewer pushes must read as slower per-sample time");
+        // Drained window with no new pushes -> None (no signal).
+        assert_eq!(hub.load_window(&[10, 10]), vec![None, None]);
+        // Zero allocation -> None even with pushes.
+        hub.push(0, 1, 1, vec![0.0; 8]).unwrap();
+        assert_eq!(hub.load_window(&[10, 0])[1], None);
+    }
+
+    // --- satellite: env-knob validation matches the house convention --
+
+    #[test]
+    fn staleness_knob_parses_and_rejects_garbage() {
+        assert_eq!(
+            parse_or_warn::<usize>(ENV_STALENESS, None, DEFAULT_STALENESS),
+            DEFAULT_STALENESS
+        );
+        assert_eq!(parse_or_warn::<usize>(ENV_STALENESS, Some("4"), 1), 4);
+        assert_eq!(parse_or_warn::<usize>(ENV_STALENESS, Some(" 0 "), 1), 0);
+        for bad in ["-1", "1.5", "fast", ""] {
+            assert_eq!(
+                parse_or_warn::<usize>(ENV_STALENESS, Some(bad), 1),
+                1,
+                "{bad:?} must fall back to the default"
+            );
+        }
+    }
+
+    #[test]
+    fn ps_shards_knob_parses_and_rejects_garbage() {
+        assert_eq!(parse_or_warn::<usize>(ENV_PS_SHARDS, None, 0), 0);
+        assert_eq!(parse_or_warn::<usize>(ENV_PS_SHARDS, Some("3"), 0), 3);
+        for bad in ["two", "-2", "1e3"] {
+            assert_eq!(
+                parse_or_warn::<usize>(ENV_PS_SHARDS, Some(bad), 0),
+                0,
+                "{bad:?} must fall back to the default"
+            );
+        }
+    }
+}

@@ -169,6 +169,13 @@ impl AdaptiveController {
 
     /// Feed one per-sample compute-time observation for `rank` at `step`.
     /// Non-finite or non-positive observations are dropped.
+    ///
+    /// The observation source is the caller's choice: synchronous modes
+    /// feed measured step times (all-reduced so every rank records
+    /// identically), while `ps_async` feeds *server-observed push
+    /// rates* ([`crate::ps::PsHub::load_window`]) — seconds per sample
+    /// derived from gradient-push counts, so the barrier-free mode gets
+    /// a load signal without adding a collective.
     pub fn record(&mut self, rank: usize, step: usize, per_sample_s: f64) {
         assert!(rank < self.world, "rank {rank} out of range");
         if !per_sample_s.is_finite() || per_sample_s <= 0.0 {

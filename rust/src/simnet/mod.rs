@@ -11,12 +11,17 @@
 //! compute with the guarded rebalancing controller in the loop.
 //! [`elastic`] extends it to membership changes: rank deaths and
 //! rejoins priced as detection + regroup + checkpoint replay.
+//! [`ps`] prices the bounded-staleness parameter-server protocol: the
+//! per-step barrier is replaced by a staleness gate, so straggler time
+//! is absorbed as bounded run-ahead instead of cluster-wide idling.
 
 pub mod dynamic;
 pub mod elastic;
+pub mod ps;
 
 pub use dynamic::{simulate_dynamic, DynamicSimConfig, DynamicSimReport};
 pub use elastic::{simulate_elastic, ElasticSimConfig, ElasticSimReport, SimRecovery};
+pub use ps::{simulate_ps, PsSimConfig, PsSimReport};
 
 use crate::device::{parse_cluster, DeviceSpec};
 use crate::group::GroupMode;

@@ -1,0 +1,316 @@
+//! Bounded-staleness parameter-server pricing in virtual time.
+//!
+//! The synchronous simulators charge every step the *straggler tax*:
+//! step `n` costs `max_w t(w, n)` because the all-reduce barrier holds
+//! every rank until the slowest finishes. Under `ps_async` there is no
+//! per-step barrier — a worker may run up to `K` versions ahead of the
+//! slowest rank — so the per-worker timelines decouple and the model
+//! becomes a small dynamic program over worker × version:
+//!
+//! ```text
+//! start(w, n)  = max(finish(w, n-1), gate(n))
+//! gate(n)      = max_w finish(w, n-K-1)        (n ≥ K+1, else 0)
+//! finish(w, n) = start(w, n) + t(w, n) + exposed_comm
+//! ```
+//!
+//! `gate` is the staleness gate: a pull for version `n` is granted only
+//! once every worker has pushed version `n-K-1`, which is exactly the
+//! invariant the real [`crate::ps::PsHub`] enforces. `exposed_comm` is
+//! the slice of the per-step push+pull cost not hidden behind the next
+//! forward pass (the DDP client overlaps the pull with compute).
+//!
+//! Progress is counted in *effective samples*: a gradient computed
+//! `lag` versions behind the applied state is discounted by
+//! `1 / (1 + penalty·lag)`, so time-to-target accounts for the extra
+//! versions stale gradients cost — the K=0 configuration degenerates to
+//! lockstep synchronous SGD with zero lag and no discount.
+//!
+//! When `base.online_adapt` is set the guarded [`AdaptiveController`]
+//! runs in the loop exactly as the trainer wires it in ps mode: fed
+//! per-sample times derived from the server-observed push rates, no
+//! collective added.
+
+use crate::device::{parse_cluster, Scenario};
+use crate::perfmodel::PerfModel;
+use crate::sched::{cap_allocation, AdaptiveController, RebalanceEvent, Strategy};
+use crate::Result;
+
+use super::dynamic::DynamicSimConfig;
+
+/// One `ps_async` virtual-time experiment.
+#[derive(Debug, Clone)]
+pub struct PsSimConfig {
+    /// The shared epoch shape: cluster, batch, gradient bytes, step
+    /// count, scenario and controller guards. `base.online_adapt` gates
+    /// the push-rate-fed rebalancing controller.
+    pub base: DynamicSimConfig,
+    /// Staleness window `K` (0 = fully synchronous semantics).
+    pub staleness: usize,
+    /// Fraction of the per-step PS communication hidden behind the next
+    /// step's compute (the client pulls during forward and pushes at
+    /// backward); the synchronous baselines expose their comm fully.
+    pub overlap: f64,
+    /// Per-version-lag effective-sample discount: a worker whose pull
+    /// lagged by `lag` versions contributes `b / (1 + penalty·lag)`
+    /// effective samples that step.
+    pub staleness_penalty: f64,
+}
+
+impl PsSimConfig {
+    /// The paper-shaped epoch (CIFAR-10 @ B=256, 195 steps) on
+    /// `cluster` under `scenario` with staleness window `K`, controller
+    /// in the loop — the ps-mode twin of
+    /// [`DynamicSimConfig::paper_epoch`].
+    pub fn paper_epoch(cluster: &str, scenario: Scenario, staleness: usize) -> Self {
+        Self {
+            base: DynamicSimConfig::paper_epoch(cluster, scenario, true),
+            staleness,
+            overlap: 0.85,
+            staleness_penalty: 0.05,
+        }
+    }
+}
+
+/// Outcome of one `ps_async` virtual-time experiment.
+#[derive(Debug, Clone)]
+pub struct PsSimReport {
+    pub cluster: String,
+    pub staleness: usize,
+    /// Virtual seconds until one epoch's worth of effective samples
+    /// (`steps × global_batch`) has been applied by the server.
+    pub time_to_target_s: f64,
+    /// Versions actually run to reach the target (> `steps` when
+    /// staleness discounts cost extra versions).
+    pub versions_run: usize,
+    /// Per-rank seconds blocked in the staleness gate (the price of
+    /// running *too far ahead*).
+    pub wait_s: Vec<f64>,
+    /// Per-rank compute seconds spent running ahead of the slowest rank
+    /// (lag > 0) — straggler time absorbed by the window instead of a
+    /// barrier.
+    pub ahead_s: Vec<f64>,
+    /// Max version lag any pull observed (≤ K by construction).
+    pub max_lag: u64,
+    /// Mean version lag over all (worker, version) pulls.
+    pub mean_lag: f64,
+    /// Rebalances the push-rate-fed controller applied.
+    pub events: Vec<RebalanceEvent>,
+    pub final_allocation: Vec<usize>,
+}
+
+/// Run one bounded-staleness parameter-server experiment.
+pub fn simulate_ps(model: &PerfModel, cfg: &PsSimConfig) -> Result<PsSimReport> {
+    let base = &cfg.base;
+    anyhow::ensure!(base.adapt_every > 0, "adapt_every must be positive");
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&cfg.overlap),
+        "overlap must be within [0, 1], got {}",
+        cfg.overlap
+    );
+    let mut devices = parse_cluster(&base.cluster)?;
+    base.scenario.apply(&mut devices)?;
+    let world = devices.len();
+
+    let scores = model.scores(&devices);
+    let mut allocation = cap_allocation(
+        &base.strategy.allocate(&scores, base.global_batch),
+        base.cap,
+    )?;
+    let online = base.online_adapt && matches!(base.strategy, Strategy::Adaptive);
+    let mut controller = if online {
+        let ctl = AdaptiveController::new(
+            base.controller.clone(),
+            &scores,
+            base.global_batch,
+            base.cap,
+        )?;
+        allocation = ctl.allocation().to_vec();
+        Some(ctl)
+    } else {
+        None
+    };
+
+    // One PS round trip (push grads, pull params) moves the same wire
+    // bytes as one gradient sync; only the exposed slice differs.
+    let comm = model.step_cost_with_alloc(&devices, &allocation, base.grad_bytes, base.mode);
+    let exposed_comm_s = (comm.intra_s + comm.inter_s + comm.dispatch_s) * (1.0 - cfg.overlap);
+
+    let k = cfg.staleness;
+    let target = (base.steps * base.global_batch) as f64;
+    // The discount never shrinks a version below 1/(1+penalty·K) of the
+    // batch, so this cap is unreachable padding — a loud failure mode,
+    // never a hang.
+    let max_versions = base.steps * 3 + k + 1;
+
+    // finish[w][n]: worker w's finish time of version n (monotone in n).
+    let mut finish: Vec<Vec<f64>> = vec![Vec::with_capacity(base.steps); world];
+    let mut wait_s = vec![0.0_f64; world];
+    let mut ahead_s = vec![0.0_f64; world];
+    let (mut max_lag, mut lag_sum, mut lag_count) = (0_u64, 0_u64, 0_u64);
+    let mut cum_eff = 0.0_f64;
+    let mut time_to_target_s = 0.0_f64;
+    let mut n = 0usize;
+
+    while cum_eff < target {
+        anyhow::ensure!(
+            n < max_versions,
+            "ps simulation ran {n} versions without reaching the sample target \
+             (staleness_penalty too aggressive?)"
+        );
+        // The staleness gate: pulls for version n wait for every
+        // worker's push of version n-K-1.
+        let gate = if n > k {
+            (0..world)
+                .map(|w| finish[w][n - k - 1])
+                .fold(0.0_f64, f64::max)
+        } else {
+            0.0
+        };
+
+        let mut version_eff = 0.0_f64;
+        for w in 0..world {
+            let b = allocation[w];
+            let prev = if n == 0 { 0.0 } else { finish[w][n - 1] };
+            let start = prev.max(gate);
+            wait_s[w] += start - prev;
+            let t = if b == 0 {
+                0.0
+            } else {
+                model.speed.step_time_loaded(&devices[w], b, n)
+            };
+            finish[w].push(start + t + exposed_comm_s);
+
+            // Version lag at this worker's pull: how many versions it
+            // runs ahead of the slowest pusher (bounded by the gate).
+            let lag = if n == 0 {
+                0
+            } else {
+                let completed_min = (0..world)
+                    .map(|v| finish[v][..n].partition_point(|&f| f <= start))
+                    .min()
+                    .unwrap_or(n);
+                (n - completed_min.min(n)) as u64
+            };
+            debug_assert!(lag <= k as u64, "gate must bound lag: {lag} > {k}");
+            max_lag = max_lag.max(lag);
+            lag_sum += lag;
+            lag_count += 1;
+            if lag > 0 {
+                ahead_s[w] += t;
+            }
+            version_eff += b as f64 / (1.0 + cfg.staleness_penalty * lag as f64);
+
+            if let Some(ctl) = controller.as_mut() {
+                // The trainer feeds the controller per-sample times from
+                // server-observed push rates; in virtual time that rate
+                // is exactly t / b.
+                if b > 0 {
+                    ctl.record(w, n, t / b as f64);
+                }
+            }
+        }
+
+        // Version n is applied when its last push lands.
+        let applied_at = (0..world).map(|w| finish[w][n]).fold(0.0_f64, f64::max);
+        cum_eff += version_eff;
+        if cum_eff >= target {
+            time_to_target_s = applied_at;
+        }
+
+        if let Some(ctl) = controller.as_mut() {
+            if (n + 1) % base.adapt_every == 0 && ctl.maybe_rebalance(n)?.is_some() {
+                allocation = ctl.allocation().to_vec();
+            }
+        }
+        n += 1;
+    }
+
+    Ok(PsSimReport {
+        cluster: base.cluster.clone(),
+        staleness: k,
+        time_to_target_s,
+        versions_run: n,
+        wait_s,
+        ahead_s,
+        max_lag,
+        mean_lag: if lag_count > 0 {
+            lag_sum as f64 / lag_count as f64
+        } else {
+            0.0
+        },
+        events: controller.map(|mut c| c.take_events()).unwrap_or_default(),
+        final_allocation: allocation,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::simulate_dynamic;
+
+    #[test]
+    fn k0_is_lockstep_and_lag_free() {
+        let m = PerfModel::paper_default();
+        let cfg = PsSimConfig::paper_epoch("2G+2M", Scenario::none(), 0);
+        let r = simulate_ps(&m, &cfg).unwrap();
+        assert_eq!(r.max_lag, 0, "K=0 must never observe lag");
+        assert_eq!(
+            r.versions_run, 195,
+            "no lag means no discount: exactly the synchronous step count"
+        );
+        assert!(r.ahead_s.iter().all(|&a| a == 0.0));
+    }
+
+    #[test]
+    fn staleness_gate_bounds_lag_in_simulation() {
+        let m = PerfModel::paper_default();
+        for k in [1_usize, 2, 4] {
+            let scenario = Scenario::named("step-change").unwrap();
+            let cfg = PsSimConfig::paper_epoch("2G+2M", scenario, k);
+            let r = simulate_ps(&m, &cfg).unwrap();
+            assert!(
+                r.max_lag <= k as u64,
+                "K={k}: observed lag {} breaks the window",
+                r.max_lag
+            );
+        }
+    }
+
+    #[test]
+    fn straggler_scenario_charges_waits_not_everyone() {
+        // Under a step change one rank slows down; with K>0 the fast
+        // ranks absorb it as bounded run-ahead plus gate waits, and the
+        // slowest rank itself never waits at the gate.
+        let m = PerfModel::paper_default();
+        let scenario = Scenario::named("step-change").unwrap();
+        let mut cfg = PsSimConfig::paper_epoch("2G+2M", scenario, 4);
+        cfg.base.online_adapt = false; // isolate the gate from the controller
+        let r = simulate_ps(&m, &cfg).unwrap();
+        assert!(r.max_lag > 0, "a straggler must induce run-ahead");
+        let total_wait: f64 = r.wait_s.iter().sum();
+        assert!(total_wait > 0.0, "fast ranks must park at the gate");
+        assert!(
+            r.wait_s.iter().any(|&w| w < 1e-9),
+            "the slowest rank never waits: {:?}",
+            r.wait_s
+        );
+    }
+
+    #[test]
+    fn ps_async_beats_synchronous_allreduce_under_drift() {
+        let m = PerfModel::paper_default();
+        let scenario = Scenario::named("thermal-drift").unwrap();
+        let sync = simulate_dynamic(
+            &m,
+            &DynamicSimConfig::paper_epoch("2G+2M", scenario.clone(), false),
+        )
+        .unwrap();
+        let ps = simulate_ps(&m, &PsSimConfig::paper_epoch("2G+2M", scenario, 2)).unwrap();
+        assert!(
+            ps.time_to_target_s < sync.total_s,
+            "ps {:.3}s must beat sync {:.3}s",
+            ps.time_to_target_s,
+            sync.total_s
+        );
+    }
+}

@@ -5,11 +5,13 @@ use std::time::Instant;
 
 use anyhow::Context;
 
+use crate::collectives::{CommStats, WorkHandle};
 use crate::data::{image_batch, token_batch, SynthCifar, SynthCorpus};
 use crate::ddp::{DdpEngine, GradSyncMode};
 use crate::device::{cluster_name, parse_cluster, DeviceSpec, Scenario, SpeedModel};
-use crate::group::{build_cluster, ProcessGroup};
+use crate::group::{build_cluster, GroupCommReport, GroupMode, ProcessGroup};
 use crate::metrics::{Accumulator, StepMetrics, TrainReport};
+use crate::ps::{PsHub, PsHyper, PsPullStats, ShardPlan};
 use crate::runtime::{BatchData, Engine, ModelPrograms};
 use crate::sched::{AdaptiveController, KaitianSampler, Profiler};
 use crate::Result;
@@ -147,6 +149,49 @@ pub fn train(engine: Arc<Engine>, opts: &TrainOptions) -> Result<TrainReport> {
         .unwrap_or_else(|| sampler.steps_per_epoch());
     anyhow::ensure!(steps_per_epoch > 0, "dataset too small for one step");
 
+    // --- ps_async: the shared parameter-server hub -----------------------
+    // All ranks are threads of this process, so the leader-hosted shards
+    // live in one hub: co-located workers push/pull directly, remote
+    // workers speak the wire protocol against per-(shard, worker) serve
+    // sessions spawned below — pricing the cross-host traffic for real.
+    let ps_hub: Option<Arc<PsHub>> = if opts.grad_sync == GradSyncMode::PsAsync {
+        anyhow::ensure!(
+            opts.group_mode == GroupMode::Kaitian,
+            "grad_sync=ps_async needs group_mode=kaitian (leader-hosted shards)"
+        );
+        // Seed the hub with the initial model state — the same state
+        // rank 0 broadcasts to every worker — and partition on the
+        // bucket ranges the synchronous sync paths use.
+        let progs = ModelPrograms::new(engine.clone(), &opts.preset)?;
+        let n_params = progs.param_count();
+        let (params0, momentum0) = match &opts.resume_from {
+            Some(path) => {
+                let ck = super::checkpoint::Checkpoint::load(path)?;
+                anyhow::ensure!(ck.params.len() == n_params, "checkpoint size mismatch");
+                (ck.params, ck.momentum)
+            }
+            None => (
+                progs.init_params(opts.seed as i32)?,
+                vec![0.0_f32; n_params],
+            ),
+        };
+        let ranges = DdpEngine::new(handles.groups[0].as_ref(), opts.bucket_bytes)
+            .sync_ranges(n_params);
+        let plan =
+            ShardPlan::build(n_params, &ranges, &handles.topo.leaders(), opts.ps_shards)?;
+        let hyper = PsHyper {
+            schedule: LrSchedule::new(opts.lr, opts.lr_decay, opts.lr_decay_epochs),
+            momentum: opts.momentum,
+            weight_decay: opts.weight_decay,
+            grad_scale: 1.0 / opts.global_batch as f32,
+            steps_per_epoch,
+            staleness: opts.staleness,
+        };
+        Some(PsHub::new(plan, hyper, world, &params0, &momentum0))
+    } else {
+        None
+    };
+
     let shared = Arc::new(Shared {
         scores: Mutex::new(vec![1.0; world]),
         allocation: Mutex::new(Vec::new()),
@@ -168,6 +213,7 @@ pub fn train(engine: Arc<Engine>, opts: &TrainOptions) -> Result<TrainReport> {
             let device = devices[rank].clone();
             let sampler = sampler.clone();
             let opts = opts.clone();
+            let hub = ps_hub.clone();
             joins.push(s.spawn(move || {
                 worker(
                     rank,
@@ -180,14 +226,37 @@ pub fn train(engine: Arc<Engine>, opts: &TrainOptions) -> Result<TrainReport> {
                     steps_per_epoch,
                     &speed_model,
                     &opts,
+                    hub,
                 )
                 .with_context(|| format!("worker rank {rank} ({})", device.dtype))
             }));
         }
-        joins
+        // ps_async serve sessions: one per (hosted shard, remote worker),
+        // running against the *host's* process group concurrently with
+        // its worker thread (distinct tags keep the flows apart).
+        let mut serves = Vec::new();
+        if let Some(hub) = &ps_hub {
+            for shard in 0..hub.plan().num_shards() {
+                let host = hub.plan().host(shard);
+                for wkr in (0..world).filter(|&w| w != host) {
+                    let hub = hub.clone();
+                    let pg = &handles.groups[host];
+                    serves.push(s.spawn(move || {
+                        hub.serve_remote(pg.as_ref(), shard, wkr)
+                            .with_context(|| format!("ps serve shard {shard} worker {wkr}"))
+                    }));
+                }
+            }
+        }
+        let accs: Result<Vec<Accumulator>> = joins
             .into_iter()
             .map(|j| j.join().expect("worker thread panicked"))
-            .collect()
+            .collect();
+        let accs = accs?;
+        for sj in serves {
+            sj.join().expect("ps serve thread panicked")?;
+        }
+        Ok(accs)
     })?;
     let wall_s = t_start.elapsed().as_secs_f64();
 
@@ -239,6 +308,7 @@ fn worker(
     steps_per_epoch: usize,
     speed_model: &SpeedModel,
     opts: &TrainOptions,
+    ps_hub: Option<Arc<PsHub>>,
 ) -> Result<Accumulator> {
     let progs = ModelPrograms::new(engine, &opts.preset)?;
     let n_params = progs.param_count();
@@ -361,6 +431,7 @@ fn worker(
     let mut scores = scores;
     let mut allocation = shared.allocation.lock().unwrap().clone();
     let mut global_step = 0_usize;
+    let total_steps = opts.epochs * steps_per_epoch;
     for epoch in 0..opts.epochs {
         let lr = schedule.lr_at(epoch);
         let mut epoch_loss_num = 0.0_f64;
@@ -373,6 +444,19 @@ fn worker(
                 batch: my_indices.len(),
                 ..Default::default()
             };
+
+            // ps_async: complete the pull issued with the *previous*
+            // step's push and install the updated params before this
+            // step's forward — the server round-trip (and any staleness
+            // gating) overlapped the compute we just finished.
+            let mut ps_stats = PsPullStats::default();
+            if opts.grad_sync == GradSyncMode::PsAsync && global_step > 0 {
+                let hub = ps_hub.as_ref().expect("ps hub exists in ps_async mode");
+                let (sync, stats) =
+                    ddp.ps_install(hub, &mut params, (global_step - 1) as u64)?;
+                m.absorb_sync(&sync);
+                ps_stats = stats;
+            }
 
             // Local compute (or a zero contribution if starved).
             let t0 = Instant::now();
@@ -455,6 +539,36 @@ fn worker(
                     m.absorb_sync(&gather);
                     metrics_work
                 }
+                GradSyncMode::PsAsync => {
+                    // Push-accumulate this step's gradient sums to the
+                    // leader-hosted shards and issue the pull; the reply
+                    // is completed at the top of the *next* step. No
+                    // per-step collective runs in this mode — the global
+                    // loss is extrapolated from the local share and the
+                    // exact cluster-wide metrics sync happens at the
+                    // per-epoch eval.
+                    let hub = ps_hub.as_ref().expect("ps hub exists in ps_async mode");
+                    let is_last = global_step + 1 == total_steps;
+                    let sync = ddp.ps_push(hub, &grads, global_step as u64, is_last)?;
+                    m.absorb_sync(&sync);
+                    m.ps_wait_s = ps_stats.wait_s;
+                    m.ps_lag = ps_stats.lag;
+                    if ps_stats.lag > 0 {
+                        // Compute done while running ahead of the
+                        // slowest rank — work a synchronous barrier
+                        // would have serialized behind the straggler.
+                        m.ps_ahead_s = m.compute_s;
+                    }
+                    let extrapolated = if m.batch == 0 {
+                        0.0
+                    } else {
+                        loss_sum * (opts.global_batch as f32 / m.batch as f32)
+                    };
+                    WorkHandle::ready(Ok((
+                        vec![extrapolated, 0.0, 0.0],
+                        GroupCommReport::vendor(CommStats::default()),
+                    )))
+                }
             };
 
             // Global train-loss logging (the metrics op was issued before
@@ -480,7 +594,38 @@ fn worker(
             // per-sample timing; at each adapt boundary rank 0 lets the
             // controller decide (cooldown / hysteresis / shift-cap /
             // freshness guards) and publishes any new allocation.
-            if online_adapt {
+            if online_adapt && opts.grad_sync == GradSyncMode::PsAsync {
+                // Barrier-free adaptation: the load signal is the
+                // *server-observed push rate* (a slow device completes
+                // fewer versions per second), folded in by rank 0 alone —
+                // no step-time observations, no barriers. The published
+                // allocation takes effect for every rank at the epoch
+                // boundary below, so the sampler's global-batch partition
+                // stays coherent within an epoch.
+                if rank == 0 && global_step % opts.adapt_every == 0 {
+                    let hub = ps_hub.as_ref().expect("ps hub exists in ps_async mode");
+                    let window = hub.load_window(&allocation);
+                    let mut guard = shared.controller.lock().unwrap();
+                    let ctl = guard.as_mut().expect("controller initialized before the loop");
+                    for (r, obs) in window.iter().enumerate() {
+                        if let Some(per_sample) = obs {
+                            ctl.record(r, global_step, *per_sample);
+                        }
+                    }
+                    if ctl
+                        .maybe_rebalance(global_step)
+                        .expect("feasibility was validated at controller init")
+                        .is_some()
+                    {
+                        shared.scores.lock().unwrap().copy_from_slice(ctl.scores());
+                        shared
+                            .allocation
+                            .lock()
+                            .unwrap()
+                            .copy_from_slice(ctl.allocation());
+                    }
+                }
+            } else if online_adapt {
                 if !my_indices.is_empty() {
                     // Normalization must match what produced the time:
                     // throttled compute is stretched to the *share*-based
@@ -524,6 +669,15 @@ fn worker(
             }
         }
 
+        // ps_async: the epoch boundary is the documented SSP sync point —
+        // every rank meets here and adopts whatever allocation rank 0
+        // published mid-epoch.
+        if opts.grad_sync == GradSyncMode::PsAsync && online_adapt {
+            pg.barrier()?;
+            scores = shared.scores.lock().unwrap().clone();
+            allocation = shared.allocation.lock().unwrap().clone();
+        }
+
         if rank == 0 {
             shared
                 .epoch_losses
@@ -552,6 +706,17 @@ fn worker(
     // checkpoints stay mode-agnostic. SPMD: every rank participates.
     if opts.grad_sync == GradSyncMode::Sharded {
         ddp.all_gather_shards(&mut momentum)?;
+    }
+
+    // --- ps_async: install the authoritative final state -----------------
+    // The server owns the last applications this worker never installed;
+    // the PULL_FINAL replies (issued with the last push) deliver identical
+    // params *and* momentum to every rank — the ps-mode analogue of the
+    // momentum gather above, so checkpoints and the divergence probe stay
+    // mode-agnostic.
+    if opts.grad_sync == GradSyncMode::PsAsync && total_steps > 0 {
+        let hub = ps_hub.as_ref().expect("ps hub exists in ps_async mode");
+        ddp.ps_finish(hub, &mut params, &mut momentum, (total_steps - 1) as u64)?;
     }
 
     // --- checkpoint (rank 0 owns the write; replicas are identical) ------
@@ -595,7 +760,10 @@ fn worker(
 /// The sharded gradient-sync mode updates only this rank's segment with
 /// this, then all-gathers the updated parameter shards; the fused kernel
 /// is compiled for the full parameter length and cannot run on a slice.
-fn sgd_update_shard(params: &mut [f32], momentum: &mut [f32], grads: &[f32], hyper: [f32; 4]) {
+/// The parameter-server hub ([`crate::ps::PsHub`]) applies versions with
+/// the same function, so `ps_async` with `K = 0` stays bitwise-equal to
+/// the synchronous modes.
+pub fn sgd_update_shard(params: &mut [f32], momentum: &mut [f32], grads: &[f32], hyper: [f32; 4]) {
     let [lr, mu, wd, gs] = hyper;
     debug_assert_eq!(params.len(), momentum.len());
     debug_assert_eq!(params.len(), grads.len());

@@ -47,10 +47,18 @@ pub struct TrainOptions {
     pub profile: bool,
     /// DDP gradient bucket size in bytes.
     pub bucket_bytes: usize,
-    /// Gradient aggregation mode: bucketed all-reduce (default) or the
-    /// ZeRO-1-style sharded reduce-scatter + parameter all-gather
-    /// (`--grad_sync={allreduce,sharded}`).
+    /// Gradient aggregation mode: bucketed all-reduce (default), the
+    /// ZeRO-1-style sharded reduce-scatter + parameter all-gather, or
+    /// the bounded-staleness async parameter server
+    /// (`--grad_sync={allreduce,sharded,ps_async}`).
     pub grad_sync: GradSyncMode,
+    /// `ps_async` staleness window `K` (`--staleness` /
+    /// `KAITIAN_STALENESS`): a worker may run at most `K` versions ahead
+    /// of the slowest rank. `0` = fully synchronous semantics.
+    pub staleness: usize,
+    /// `ps_async` shard count (`--ps_shards` / `KAITIAN_PS_SHARDS`):
+    /// `0` = one shard per group leader.
+    pub ps_shards: usize,
     /// Collective algorithm policy
     /// (`--algo={adaptive,ring,doubling,halving-doubling,tree}`):
     /// `adaptive` (default) picks per message size via the α–β engine;
@@ -114,6 +122,8 @@ impl Default for TrainOptions {
             profile: true,
             bucket_bytes: 25 << 20, // PyTorch DDP default bucket
             grad_sync: GradSyncMode::AllReduce,
+            staleness: crate::ps::staleness_from_env(),
+            ps_shards: crate::ps::ps_shards_from_env(),
             algo: "adaptive".into(),
             log_every: 0,
             online_adapt: false,

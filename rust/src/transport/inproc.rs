@@ -86,6 +86,10 @@ impl Transport for InprocEndpoint {
         "inproc"
     }
 
+    fn stale_dropped(&self) -> u64 {
+        self.mailboxes[self.rank].stale_dropped()
+    }
+
     fn fail_peer(&self, peer: usize) {
         if peer < self.mailboxes.len() {
             self.mailboxes[self.rank].close_peer(peer);

@@ -55,6 +55,13 @@ pub trait Transport: Send + Sync {
         0
     }
 
+    /// Messages this endpoint's mailbox culled as epoch-stale over its
+    /// lifetime (see `Mailbox::push_epoch`); 0 for transports without a
+    /// staleness fence.
+    fn stale_dropped(&self) -> u64 {
+        0
+    }
+
     /// Mark `peer` as failed: receives from it error promptly with a
     /// "peer N lost" message while every other peer's traffic keeps
     /// flowing. Idempotent; default is a no-op for transports without

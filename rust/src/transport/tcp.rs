@@ -483,6 +483,10 @@ impl Transport for TcpEndpoint {
         self.inflight.high_water.load(Ordering::Relaxed)
     }
 
+    fn stale_dropped(&self) -> u64 {
+        self.mailbox.stale_dropped()
+    }
+
     fn fail_peer(&self, peer: usize) {
         self.mailbox.close_peer(peer);
     }

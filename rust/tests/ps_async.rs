@@ -1,0 +1,339 @@
+//! Acceptance suite for `--grad_sync=ps_async` (bounded-staleness
+//! parameter-server sync).
+//!
+//! Pure-rust tests drive the full client protocol — [`DdpEngine::ps_push`]
+//! / `ps_install` / `ps_finish` against leader-hosted shards with real
+//! p2p serve sessions — over an inproc cluster, checking the wire
+//! protocol, the staleness-window invariant and bitwise determinism.
+//! Engine-gated tests (skip without artifacts, like the rest of the
+//! train-level suites) run the real trainer: `K = 0` must bitwise-match
+//! synchronous sharded SGD, `K = 4` must stay within loss tolerance over
+//! 20 steps, and the report JSON must surface the ps gauges.
+
+use std::sync::{Arc, Mutex};
+
+use kaitian::ddp::{DdpEngine, GradSyncMode};
+use kaitian::device::parse_cluster;
+use kaitian::group::{build_cluster, ClusterHandles, GroupMode, RelayKind};
+use kaitian::metrics::{Accumulator, StepMetrics};
+use kaitian::ps::{PsHub, PsHyper, PsPullStats, ShardPlan};
+use kaitian::runtime::Engine;
+use kaitian::train::loop_::sgd_update_shard;
+use kaitian::train::{train, Checkpoint, LrSchedule, TrainOptions};
+
+const BUCKET_BYTES: usize = 4 << 10; // 1024 f32 per bucket
+
+/// Deterministic per-(worker, version) gradient sum.
+fn grad(worker: usize, version: u64, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| ((i + worker * 11) % 17) as f32 * 0.125 - version as f32 * 0.002)
+        .collect()
+}
+
+fn hyper(k: usize, workers: usize) -> PsHyper {
+    PsHyper {
+        schedule: LrSchedule::new(0.1, 0.1, 20),
+        momentum: 0.9,
+        weight_decay: 5e-4,
+        grad_scale: 1.0 / workers as f32,
+        steps_per_epoch: 10,
+        staleness: k,
+    }
+}
+
+/// Serial reference: every version applied in order with worker sums
+/// folded in rank order — the state the hub must reach regardless of
+/// arrival interleaving or remote routing.
+fn serial_reference(
+    hyper: &PsHyper,
+    workers: usize,
+    versions: u64,
+    init: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let n = init.len();
+    let mut params = init.to_vec();
+    let mut momentum = vec![0.0_f32; n];
+    for v in 0..versions {
+        let mut sum = grad(0, v, n);
+        for w in 1..workers {
+            for (a, b) in sum.iter_mut().zip(&grad(w, v, n)) {
+                *a += b;
+            }
+        }
+        sgd_update_shard(&mut params, &mut momentum, &sum, hyper.hyper_at(v));
+    }
+    (params, momentum)
+}
+
+/// Run the full ps_async client protocol over a real cluster: every
+/// rank pushes `versions` deterministic gradients through
+/// [`DdpEngine::ps_push`], installs pulls, and finishes; remote flows go
+/// through per-(shard, worker) serve sessions exactly as the trainer
+/// spawns them. Returns each rank's final `(params, momentum)` plus the
+/// per-rank folded pull stats.
+fn run_protocol(
+    handles: &ClusterHandles,
+    hub: &Arc<PsHub>,
+    versions: u64,
+    init: &[f32],
+    straggle: Option<usize>,
+) -> Vec<(Vec<f32>, Vec<f32>, PsPullStats)> {
+    let world = handles.groups.len();
+    let n = init.len();
+    let out = Mutex::new(vec![None; world]);
+    std::thread::scope(|s| {
+        for (rank, pg) in handles.groups.iter().enumerate() {
+            let hub = hub.clone();
+            let out = &out;
+            s.spawn(move || {
+                let ddp = DdpEngine::new(pg.as_ref(), BUCKET_BYTES);
+                let mut params = init.to_vec();
+                let mut momentum = vec![0.0_f32; n];
+                let mut agg = PsPullStats::default();
+                for v in 0..versions {
+                    if v > 0 {
+                        let (_, stats) = ddp.ps_install(&hub, &mut params, v - 1).unwrap();
+                        agg.fold(&stats);
+                    }
+                    if straggle == Some(rank) {
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
+                    let g = grad(rank, v, n);
+                    ddp.ps_push(&hub, &g, v, v + 1 == versions).unwrap();
+                }
+                ddp.ps_finish(&hub, &mut params, &mut momentum, versions - 1)
+                    .unwrap();
+                out.lock().unwrap()[rank] = Some((params, momentum, agg));
+            });
+        }
+        // Serve sessions: one per (hosted shard, remote worker), on the
+        // host's process group — the trainer's exact spawn pattern.
+        for shard in 0..hub.plan().num_shards() {
+            let host = hub.plan().host(shard);
+            for wkr in (0..world).filter(|&w| w != host) {
+                let hub = hub.clone();
+                let pg = &handles.groups[host];
+                s.spawn(move || hub.serve_remote(pg.as_ref(), shard, wkr).unwrap());
+            }
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|x| x.expect("every rank reports"))
+        .collect()
+}
+
+#[test]
+fn remote_protocol_matches_serial_reference_bitwise() {
+    // Two single-device groups: every shard is remote for exactly one
+    // worker, so both the direct hub path and the wire protocol run.
+    let devices = parse_cluster("1G+1M").unwrap();
+    let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+    let world = handles.groups.len();
+    let n = 5_000;
+    let init: Vec<f32> = (0..n).map(|i| (i % 29) as f32 * 0.03125).collect();
+    let versions = 12_u64;
+
+    let ranges = DdpEngine::new(handles.groups[0].as_ref(), BUCKET_BYTES).sync_ranges(n);
+    assert!(ranges.len() > 1, "need multiple buckets to exercise sharding");
+    let plan = ShardPlan::build(n, &ranges, &handles.topo.leaders(), 0).unwrap();
+    assert!(plan.num_shards() > 1, "two leaders must host two shards");
+    let h = hyper(1, world);
+    let zeros = vec![0.0_f32; n];
+    let hub = PsHub::new(plan, h, world, &init, &zeros);
+
+    let results = run_protocol(&handles, &hub, versions, &init, None);
+    let (want_p, want_m) = serial_reference(&h, world, versions, &init);
+    for (rank, (p, m, _)) in results.iter().enumerate() {
+        assert_eq!(
+            p.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want_p.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "rank {rank}: final params must bitwise-match the serial reference"
+        );
+        assert_eq!(m, &want_m, "rank {rank}: momentum must match");
+    }
+}
+
+#[test]
+fn staleness_window_invariant_holds_over_real_cluster() {
+    // A deliberate straggler forces real run-ahead; the piggybacked
+    // version vectors and lags must respect the K-window at every rank.
+    for k in [0_usize, 2] {
+        let devices = parse_cluster("1G+1M").unwrap();
+        let handles = build_cluster(&devices, RelayKind::Inproc, GroupMode::Kaitian).unwrap();
+        let world = handles.groups.len();
+        let n = 2_048;
+        let init = vec![0.25_f32; n];
+        let versions = 16_u64;
+
+        let ranges = DdpEngine::new(handles.groups[0].as_ref(), BUCKET_BYTES).sync_ranges(n);
+        let plan = ShardPlan::build(n, &ranges, &handles.topo.leaders(), 0).unwrap();
+        let h = hyper(k, world);
+        let zeros = vec![0.0_f32; n];
+        let hub = PsHub::new(plan, h, world, &init, &zeros);
+
+        let results = run_protocol(&handles, &hub, versions, &init, Some(0));
+        for (rank, (_, _, stats)) in results.iter().enumerate() {
+            assert!(
+                stats.lag <= k as u64,
+                "K={k} rank {rank}: observed lag {} breaks the window",
+                stats.lag
+            );
+            assert_eq!(
+                stats.versions.len(),
+                world,
+                "K={k} rank {rank}: version vector must cover every worker"
+            );
+            assert!(
+                stats.applied >= versions as i64 - 2 - k as i64,
+                "K={k} rank {rank}: last install saw version {}",
+                stats.applied
+            );
+        }
+        // Still deterministic: both ranks end on the reference state.
+        let (want_p, _) = serial_reference(&h, world, versions, &init);
+        for (rank, (p, _, _)) in results.iter().enumerate() {
+            assert_eq!(p, &want_p, "K={k} rank {rank}: replica diverged");
+        }
+    }
+}
+
+#[test]
+fn report_json_surfaces_ps_and_stale_gauges() {
+    // The per-rank accumulator must carry the ps wait/ahead/lag gauges
+    // and the mailbox stale-drop counter into the report JSON.
+    let mut acc = Accumulator::default();
+    let m = StepMetrics {
+        ps_wait_s: 0.25,
+        ps_ahead_s: 0.5,
+        ps_lag: 3,
+        stale_dropped: 7,
+        ..Default::default()
+    };
+    acc.add(&m);
+    let json = acc.to_json().to_string();
+    for key in ["ps_wait_s", "ps_ahead_s", "ps_lag", "stale_dropped"] {
+        assert!(json.contains(&format!("\"{key}\"")), "missing {key}: {json}");
+    }
+}
+
+// --- engine-gated train-level parity (skip without artifacts) ---------
+
+fn engine() -> Option<Arc<Engine>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts — run `make artifacts-quick`");
+        return None;
+    }
+    Some(Arc::new(Engine::load(dir).expect("engine load")))
+}
+
+fn ckpt_path(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("kaitian_ps_async_{}_{name}.ckpt", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn parity_opts(sync: GradSyncMode, staleness: usize, ckpt: &str) -> TrainOptions {
+    let mut opts = TrainOptions::quick_test("1G+1M");
+    opts.epochs = 1;
+    opts.steps_per_epoch = Some(6);
+    opts.eval_batches = 0;
+    opts.grad_sync = sync;
+    opts.staleness = staleness;
+    opts.ps_shards = 0;
+    opts.checkpoint = Some(ckpt.into());
+    opts
+}
+
+#[test]
+fn train_k0_ps_async_bitwise_matches_sharded() {
+    let Some(engine) = engine() else { return };
+    let ps_path = ckpt_path("k0_ps");
+    let sh_path = ckpt_path("k0_sharded");
+    train(
+        engine.clone(),
+        &parity_opts(GradSyncMode::PsAsync, 0, &ps_path),
+    )
+    .unwrap();
+    train(engine, &parity_opts(GradSyncMode::Sharded, 0, &sh_path)).unwrap();
+    let ps = Checkpoint::load(&ps_path).unwrap();
+    let sh = Checkpoint::load(&sh_path).unwrap();
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(
+        bits(&ps.params),
+        bits(&sh.params),
+        "K=0 ps_async must be bitwise-identical to synchronous sharded SGD"
+    );
+    assert_eq!(bits(&ps.momentum), bits(&sh.momentum), "momentum too");
+    let _ = std::fs::remove_file(&ps_path);
+    let _ = std::fs::remove_file(&sh_path);
+}
+
+#[test]
+fn train_k4_ps_async_stays_within_loss_tolerance() {
+    let Some(engine) = engine() else { return };
+    let mk = |sync, k, path: &str| {
+        let mut opts = parity_opts(sync, k, path);
+        opts.dataset_len = 512; // 32 steps/epoch available
+        opts.steps_per_epoch = Some(20);
+        opts
+    };
+    let k4_path = ckpt_path("k4_ps");
+    let k0_path = ckpt_path("k0_ref");
+    let sh_path = ckpt_path("k4_sharded");
+    let k4 = train(
+        engine.clone(),
+        &mk(GradSyncMode::PsAsync, 4, &k4_path),
+    )
+    .unwrap();
+    let k0 = train(
+        engine.clone(),
+        &mk(GradSyncMode::PsAsync, 0, &k0_path),
+    )
+    .unwrap();
+    train(engine, &mk(GradSyncMode::Sharded, 0, &sh_path)).unwrap();
+
+    // Loss parity over the 20-step run: identical extrapolation on both
+    // sides, so any gap is genuine staleness drift.
+    let (l4, l0) = (k4.final_loss().unwrap(), k0.final_loss().unwrap());
+    assert!(
+        (l4 - l0).abs() <= 1e-3,
+        "K=4 epoch loss {l4:.6} drifts more than 1e-3 from K=0 {l0:.6}"
+    );
+    // Model-state parity against the synchronous baseline.
+    let k4_ck = Checkpoint::load(&k4_path).unwrap();
+    let sh_ck = Checkpoint::load(&sh_path).unwrap();
+    let drift = k4_ck
+        .params
+        .iter()
+        .zip(&sh_ck.params)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0_f32, f32::max);
+    assert!(
+        drift <= 1e-3,
+        "K=4 params drift {drift} from synchronous sharded SGD"
+    );
+    for p in [&k4_path, &k0_path, &sh_path] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn train_report_json_carries_ps_fields_end_to_end() {
+    let Some(engine) = engine() else { return };
+    let mut opts = TrainOptions::quick_test("1G+1M");
+    opts.epochs = 1;
+    opts.steps_per_epoch = Some(4);
+    opts.eval_batches = 0;
+    opts.grad_sync = GradSyncMode::PsAsync;
+    opts.staleness = 2;
+    let report = train(engine, &opts).unwrap();
+    assert_eq!(report.grad_sync, "ps_async");
+    let json = report.to_json().to_string();
+    for key in ["ps_wait_s", "ps_ahead_s", "ps_lag", "stale_dropped"] {
+        assert!(json.contains(&format!("\"{key}\"")), "missing {key}");
+    }
+}
