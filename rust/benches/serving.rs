@@ -1,0 +1,134 @@
+//! Bench: SLO-aware serving — load-adaptive routing vs static
+//! round-robin under runtime load perturbations, plus the
+//! pipeline-parallel parity gate (ISSUE 9 acceptance).
+//!
+//! Each scenario replays the paper-shaped serving experiment
+//! ([`ServeSimConfig::paper_serving`]: 2G+2M, 25 ms SLO, max_batch 8,
+//! 6000 rps open loop, 4000 requests) in virtual time, once per
+//! routing policy. Gates, for the step-change and thermal-drift
+//! scenarios:
+//!
+//! * adaptive p99 latency ≤ 0.80 × round-robin p99 (≥ 20% better), with
+//!   goodput (SLO-met requests per second) no worse;
+//! * at least one guarded rebalance event lands;
+//! * the pipeline-parallel forward is bitwise-identical to the
+//!   single-device forward (checked through the real threaded pipeline).
+//!
+//! Writes `results/serving.json`.
+//!
+//! Run: `cargo bench --bench serving` (`-- --quick` shrinks the run and
+//! skips the headline gates).
+
+use std::collections::BTreeMap;
+
+use kaitian::device::Scenario;
+use kaitian::metrics::MarkdownTable;
+use kaitian::serve::{pipeline_forward, RoutePolicy, StageModel, StagePlan};
+use kaitian::simnet::{simulate_serve, ServeSimConfig, ServeSimReport};
+use kaitian::util::json::Json;
+
+const CLUSTER: &str = "2G+2M";
+const SCENARIOS: [&str; 3] = ["none", "step-change", "thermal-drift"];
+/// Scenarios whose ≥ 20% p99 win is an acceptance criterion.
+const HEADLINE: [&str; 2] = ["step-change", "thermal-drift"];
+
+fn run(scenario: &Scenario, policy: RoutePolicy, quick: bool) -> kaitian::Result<ServeSimReport> {
+    let mut cfg = ServeSimConfig::paper_serving(CLUSTER, scenario.clone(), policy);
+    if quick {
+        cfg.requests = 1200;
+    }
+    simulate_serve(&cfg)
+}
+
+/// The pipeline-parallel output must be bitwise-identical to the
+/// single-device forward — through the real stage threads and the
+/// CommTensor p2p wire, not a model of them.
+fn parity_gate() -> kaitian::Result<()> {
+    let model = StageModel::new(6, 16, 42);
+    let inputs: Vec<Vec<f32>> = (0..3).map(|i| model.input(4, 7 + i)).collect();
+    let shares = vec![1.0; 3];
+    let plan = StagePlan::balanced(&model.layer_costs(), &shares)?;
+    let outs = pipeline_forward(&model, &plan, &inputs)?;
+    for (x, y) in inputs.iter().map(|x| model.forward(x)).zip(&outs) {
+        assert_eq!(x.len(), y.len());
+        for (a, b) in x.iter().zip(y) {
+            assert_eq!(a.to_bits(), b.to_bits(), "pipeline parity gate");
+        }
+    }
+    Ok(())
+}
+
+fn main() -> kaitian::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    parity_gate()?;
+    println!("pipeline-parallel parity: bitwise OK (3 stages)\n");
+
+    let mut table = MarkdownTable::new(&[
+        "scenario",
+        "rr p99 (ms)",
+        "adaptive p99 (ms)",
+        "p99 win",
+        "rr goodput (rps)",
+        "adaptive goodput (rps)",
+        "rebalances",
+    ]);
+    let mut json = BTreeMap::new();
+    json.insert(
+        "pipeline_parity".to_string(),
+        Json::obj(vec![("stages", Json::num(3.0)), ("bitwise", Json::Bool(true))]),
+    );
+
+    for name in SCENARIOS {
+        let scenario = Scenario::named(name)?;
+        let rr = run(&scenario, RoutePolicy::RoundRobin, quick)?;
+        let ad = run(&scenario, RoutePolicy::Adaptive, quick)?;
+        let win = 1.0 - ad.p99_ms / rr.p99_ms;
+
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}", rr.p99_ms),
+            format!("{:.2}", ad.p99_ms),
+            format!("{:.1}%", win * 100.0),
+            format!("{:.0}", rr.goodput_rps),
+            format!("{:.0}", ad.goodput_rps),
+            format!("{}", ad.events.len()),
+        ]);
+        json.insert(
+            name.to_string(),
+            Json::obj(vec![
+                ("round_robin", rr.to_json()),
+                ("adaptive", ad.to_json()),
+                ("p99_win", Json::num(win)),
+            ]),
+        );
+
+        if HEADLINE.contains(&name) && !quick {
+            assert!(
+                !ad.events.is_empty(),
+                "{name}: the perturbation must land a rebalance"
+            );
+            assert!(
+                ad.p99_ms <= 0.80 * rr.p99_ms,
+                "{name}: adaptive p99 {:.2}ms must be >= 20% better than \
+                 round-robin {:.2}ms",
+                ad.p99_ms,
+                rr.p99_ms
+            );
+            assert!(
+                ad.goodput_rps >= rr.goodput_rps,
+                "{name}: adaptive goodput {:.0} rps must not trail round-robin {:.0} rps",
+                ad.goodput_rps,
+                rr.goodput_rps
+            );
+        }
+    }
+    if quick {
+        println!("(--quick: 1200-request runs, headline gates skipped)\n");
+    }
+
+    println!("== SLO-aware serving: adaptive routing vs round-robin ({CLUSTER}, virtual time) ==\n");
+    println!("{}", table.render());
+    let path = kaitian::metrics::write_report("results", "serving", json)?;
+    println!("wrote {path}");
+    Ok(())
+}

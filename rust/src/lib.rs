@@ -15,7 +15,9 @@
 //!   with intra-group reduces and compute; plus the load-adaptive
 //!   scheduler ([`sched`]), a Redis-like rendezvous service
 //!   ([`rendezvous`]), and the simulated heterogeneous device substrate
-//!   ([`device`]).
+//!   ([`device`]). The same plumbing serves inference: [`serve`] runs an
+//!   SLO-aware micro-batching front-end over pipeline-parallel stage
+//!   workers with load-adaptive request routing.
 //! * **L2** — JAX model programs (`python/compile/model.py`), AOT-lowered
 //!   to HLO text artifacts loaded by [`runtime`].
 //! * **L1** — Pallas kernels (`python/compile/kernels/`) fused into those
@@ -42,6 +44,7 @@ pub mod ps;
 pub mod rendezvous;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod simnet;
 pub mod train;
 pub mod transport;

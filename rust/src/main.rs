@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! kaitian train  [--config cfg.json] [--preset P --cluster 2G+2M ...]
+//! kaitian serve  [--cluster 2G+2M --policy adaptive --slo_ms 50 --max_batch 8
+//!                 --rps 400 --requests 200 --stages 2 --scenario none --out results/]
 //! kaitian bench  --fig 2|3|4|micro|all [--out results/] [--quick]
 //! kaitian probe  [--cluster 2G+2M] [--preset mobinet]
 //! kaitian rendezvous-serve [--addr 127.0.0.1:6379]
@@ -34,13 +36,18 @@ fn main() {
 fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(args),
+        Some("serve") => cmd_serve(args),
         Some("bench") => cmd_bench(args),
         Some("probe") => cmd_probe(args),
         Some("rendezvous-serve") => cmd_rendezvous_serve(args),
         Some("worker") => cmd_worker(args),
+        // `--mode=serve` / `--mode=train` aliases for launchers that pass
+        // the workload as a flag rather than a subcommand.
+        _ if args.flag("mode") == Some("serve") => cmd_serve(args),
+        _ if args.flag("mode") == Some("train") => cmd_train(args),
         _ => {
             eprintln!(
-                "usage: kaitian <train|bench|probe|rendezvous-serve|worker> [--flags]\n\
+                "usage: kaitian <train|serve|bench|probe|rendezvous-serve|worker> [--flags]\n\
                  see README.md for details"
             );
             Ok(())
@@ -72,6 +79,31 @@ fn cmd_train(args: &Args) -> Result<()> {
         std::fs::create_dir_all(out)?;
         let path = format!("{out}/train_{}_{}.json", opts.preset, report.cluster.replace('+', "_"));
         std::fs::write(&path, report.to_json().to_string_pretty())?;
+        eprintln!("[kaitian] wrote {path}");
+    }
+    Ok(())
+}
+
+/// Real-time serving run: threads per pipeline stage, wall-clock SLO
+/// accounting, `ServeReport` JSON to `--out`.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use kaitian::serve::{serve, ServeOptions};
+    let opts = ServeOptions::from_args(args)?;
+    eprintln!(
+        "[kaitian] serving on {} (policy={}, slo={}ms, max_batch={}, rps={}, stages={})",
+        opts.cluster,
+        opts.policy.name(),
+        opts.slo_ms,
+        opts.max_batch,
+        opts.rps,
+        opts.stages
+    );
+    let report = serve(&opts)?;
+    println!("{}", report.summary());
+    if let Some(out) = args.flag("out") {
+        let mut entries = BTreeMap::new();
+        entries.insert("serve".to_string(), report.to_json());
+        let path = kaitian::metrics::write_report(out, "serving", entries)?;
         eprintln!("[kaitian] wrote {path}");
     }
     Ok(())

@@ -1,0 +1,254 @@
+//! SLO-aware micro-batching: the admission queue between the request
+//! stream and the pipelines.
+//!
+//! Batching amortizes the per-step fixed cost (`t0` in the speed
+//! model) but spends queueing delay out of each request's latency
+//! budget. The [`MicroBatcher`] closes a batch on whichever bound
+//! binds first:
+//!
+//! * **size** — the queue reaches `max_batch` (throughput bound);
+//! * **budget** — the *oldest* queued request has waited its full
+//!   batching budget (latency bound). The budget is the SLO minus the
+//!   caller's estimate of downstream service time, so a request is
+//!   never parked past the point where it could still meet its
+//!   deadline.
+//!
+//! The batcher is deliberately clock-free: callers pass `now` into
+//! [`MicroBatcher::poll`], so the real-time front-end (wall clock) and
+//! the virtual-time simulator (event clock) share one implementation,
+//! and the formation invariants are property-testable without timers
+//! (`tests/serving.rs`).
+
+use std::collections::VecDeque;
+
+use super::request::Request;
+
+/// Why a micro-batch was closed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CloseReason {
+    /// The queue reached `max_batch`.
+    Full,
+    /// The oldest request exhausted its batching budget.
+    Budget,
+    /// End of stream: the front-end flushed the residue.
+    Drain,
+}
+
+impl CloseReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CloseReason::Full => "full",
+            CloseReason::Budget => "budget",
+            CloseReason::Drain => "drain",
+        }
+    }
+}
+
+/// A formed micro-batch, ready to route to a replica.
+#[derive(Debug, Clone)]
+pub struct MicroBatch {
+    /// Formation sequence number (0, 1, 2, ... per batcher).
+    pub seq: u64,
+    /// FIFO slice of the queue, oldest first; never empty, never more
+    /// than `max_batch`.
+    pub requests: Vec<Request>,
+    /// Clock time at which the batch closed.
+    pub formed_s: f64,
+    pub closed_by: CloseReason,
+}
+
+impl MicroBatch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// The SLO-aware admission queue. See the module docs for the closing
+/// rule.
+#[derive(Debug)]
+pub struct MicroBatcher {
+    max_batch: usize,
+    budget_s: f64,
+    queue: VecDeque<Request>,
+    seq: u64,
+}
+
+impl MicroBatcher {
+    /// A batcher closing at `max_batch` requests or `budget_s` seconds
+    /// of oldest-request residency, whichever comes first.
+    pub fn new(max_batch: usize, budget_s: f64) -> Self {
+        Self {
+            max_batch: max_batch.max(1),
+            budget_s: budget_s.max(0.0),
+            queue: VecDeque::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn budget_s(&self) -> f64 {
+        self.budget_s
+    }
+
+    /// Retune the batching budget (the front-end shrinks it as its
+    /// service-time estimate grows). Applies from the next `poll`;
+    /// already-queued requests are re-judged under the new budget.
+    pub fn set_budget(&mut self, budget_s: f64) {
+        self.budget_s = budget_s.max(0.0);
+    }
+
+    /// Queued (not yet batched) requests.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Admit one request (FIFO; callers push in arrival order).
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    /// The clock time at which the current queue head must close by
+    /// budget, if any — the event-driven callers' next timer.
+    pub fn close_deadline(&self) -> Option<f64> {
+        self.queue.front().map(|r| r.arrival_s + self.budget_s)
+    }
+
+    /// Close and return the next micro-batch if either bound binds at
+    /// `now_s`; `None` while the queue can keep accumulating.
+    pub fn poll(&mut self, now_s: f64) -> Option<MicroBatch> {
+        if self.queue.len() >= self.max_batch {
+            return Some(self.take(self.max_batch, now_s, CloseReason::Full));
+        }
+        match self.close_deadline() {
+            Some(d) if now_s >= d => {
+                let n = self.queue.len();
+                Some(self.take(n, now_s, CloseReason::Budget))
+            }
+            _ => None,
+        }
+    }
+
+    /// Flush up to `max_batch` queued requests regardless of budget
+    /// (end of stream). Call repeatedly until `None`.
+    pub fn drain(&mut self, now_s: f64) -> Option<MicroBatch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let n = self.queue.len().min(self.max_batch);
+        Some(self.take(n, now_s, CloseReason::Drain))
+    }
+
+    fn take(&mut self, n: usize, now_s: f64, closed_by: CloseReason) -> MicroBatch {
+        let requests: Vec<Request> = self.queue.drain(..n).collect();
+        let b = MicroBatch {
+            seq: self.seq,
+            requests,
+            formed_s: now_s,
+            closed_by,
+        };
+        self.seq += 1;
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arrival_s: f64) -> Request {
+        Request {
+            id,
+            arrival_s,
+            deadline_s: arrival_s + 0.05,
+        }
+    }
+
+    #[test]
+    fn closes_full_at_max_batch() {
+        let mut b = MicroBatcher::new(4, 1.0);
+        for i in 0..3 {
+            b.push(req(i, 0.001 * i as f64));
+            assert!(b.poll(0.01).is_none(), "below max_batch, budget far off");
+        }
+        b.push(req(3, 0.004));
+        let mb = b.poll(0.004).expect("full batch closes immediately");
+        assert_eq!(mb.len(), 4);
+        assert_eq!(mb.closed_by, CloseReason::Full);
+        assert_eq!(
+            mb.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3],
+            "FIFO order"
+        );
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn closes_budget_on_oldest_residency() {
+        let mut b = MicroBatcher::new(8, 0.010);
+        b.push(req(0, 0.000));
+        b.push(req(1, 0.004));
+        assert!(b.poll(0.009).is_none(), "budget not yet spent");
+        assert_eq!(b.close_deadline(), Some(0.010));
+        let mb = b.poll(0.010).expect("oldest request hit its budget");
+        assert_eq!(mb.closed_by, CloseReason::Budget);
+        assert_eq!(mb.len(), 2, "a budget close takes the whole queue");
+    }
+
+    #[test]
+    fn full_takes_priority_and_leaves_residue() {
+        let mut b = MicroBatcher::new(2, 0.010);
+        for i in 0..5 {
+            b.push(req(i, 0.0));
+        }
+        let mb = b.poll(0.0).unwrap();
+        assert_eq!((mb.len(), mb.closed_by), (2, CloseReason::Full));
+        let mb = b.poll(0.0).unwrap();
+        assert_eq!(mb.requests[0].id, 2, "residue keeps FIFO order");
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn drain_flushes_everything_in_chunks() {
+        let mut b = MicroBatcher::new(4, 100.0);
+        for i in 0..6 {
+            b.push(req(i, 0.0));
+        }
+        assert!(b.poll(0.001).is_none(), "budget huge, size not reached");
+        let first = b.drain(0.002).unwrap();
+        assert_eq!((first.len(), first.closed_by), (4, CloseReason::Drain));
+        let second = b.drain(0.002).unwrap();
+        assert_eq!(second.len(), 2);
+        assert!(b.drain(0.002).is_none());
+    }
+
+    #[test]
+    fn zero_budget_closes_each_poll() {
+        let mut b = MicroBatcher::new(8, 0.0);
+        b.push(req(0, 0.5));
+        let mb = b.poll(0.5).expect("zero budget closes as soon as polled");
+        assert_eq!(mb.len(), 1);
+        // Negative budgets clamp to zero rather than closing in the past.
+        b.set_budget(-3.0);
+        assert_eq!(b.budget_s(), 0.0);
+    }
+
+    #[test]
+    fn seq_increments_per_batch() {
+        let mut b = MicroBatcher::new(1, 1.0);
+        b.push(req(0, 0.0));
+        b.push(req(1, 0.0));
+        assert_eq!(b.poll(0.0).unwrap().seq, 0);
+        assert_eq!(b.poll(0.0).unwrap().seq, 1);
+    }
+}

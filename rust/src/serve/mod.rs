@@ -1,0 +1,679 @@
+//! Inference serving: SLO-aware micro-batching, pipeline-parallel
+//! execution, load-adaptive routing.
+//!
+//! Training moves bulk-synchronous steps; embodied inference moves
+//! small, deadline-bound, asymmetric traffic. This module serves that
+//! regime on the same comm/sched/device layers:
+//!
+//! ```text
+//!   OpenLoopStream ──> MicroBatcher ──> Router ──> StagePipeline (replica 0)
+//!    (request.rs)       (batcher.rs)  (router.rs)  StagePipeline (replica 1)
+//!    Poisson arrivals   closes at      adaptive     ... (pipeline.rs)
+//!    + SLO deadlines    max_batch or   traffic        stages linked by
+//!                       SLO budget     shares         CommTensor p2p
+//! ```
+//!
+//! * [`OpenLoopStream`] offers a fixed request rate regardless of
+//!   server speed, so overload shows up in the latency tail.
+//! * [`MicroBatcher`] closes a batch at `max_batch` or when the oldest
+//!   request's deadline-derived budget expires, whichever binds first.
+//! * [`Router`] spreads batches across data-parallel replicas; the
+//!   adaptive policy feeds observed service times into the guarded
+//!   [`AdaptiveController`](crate::sched::AdaptiveController) and
+//!   steers toward currently-fast devices under `device::perturb`
+//!   contention. In-flight batches are never re-routed.
+//! * [`StagePipeline`] splits the forward across pipeline stages over
+//!   the CommTensor p2p verbs, micro-batches overlapping in flight;
+//!   output is bitwise-identical to the single-device forward.
+//!
+//! [`serve`] runs the whole stack in real time and produces a
+//! [`ServeReport`] (throughput, p50/p99 latency, SLO-violation rate,
+//! per-replica utilization, batch-size histogram); `simnet::serve`
+//! replays the identical batching/routing logic in virtual time for
+//! the bench gates. Knobs come from the CLI or `KAITIAN_*` environment
+//! variables validated through [`util::env::parse_or_warn`]
+//! (`crate::util::env`) — garbage warns and falls back, never panics.
+
+pub mod batcher;
+pub mod model;
+pub mod pipeline;
+pub mod request;
+pub mod router;
+
+pub use batcher::{CloseReason, MicroBatch, MicroBatcher};
+pub use model::{StageModel, StagePlan};
+pub use pipeline::{pipeline_forward, PipelineDone, StagePipeline, StageThrottle};
+pub use request::{percentile, OpenLoopStream, Request};
+pub use router::{RoutePolicy, Router};
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::config::cli::Args;
+use crate::device::{cluster_name, parse_cluster, Scenario, SpeedModel};
+use crate::metrics::MarkdownTable;
+use crate::sched::{ControllerConfig, RebalanceEvent};
+use crate::util::env::parse_or_warn;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Default SLO per request, milliseconds (`KAITIAN_SLO_MS`).
+pub const DEFAULT_SLO_MS: f64 = 50.0;
+/// Default micro-batch size cap (`KAITIAN_MAX_BATCH`).
+pub const DEFAULT_MAX_BATCH: usize = 8;
+/// Default offered load, requests/second (`KAITIAN_SERVE_RPS`).
+pub const DEFAULT_RPS: f64 = 400.0;
+/// Default request count for one run (`KAITIAN_SERVE_REQUESTS`).
+pub const DEFAULT_REQUESTS: usize = 200;
+/// Default pipeline stages per replica (`KAITIAN_SERVE_STAGES`).
+pub const DEFAULT_STAGES: usize = 2;
+
+/// The serving env knobs after validation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeKnobs {
+    pub slo_ms: f64,
+    pub max_batch: usize,
+    pub rps: f64,
+    pub requests: usize,
+    pub stages: usize,
+}
+
+impl Default for ServeKnobs {
+    fn default() -> Self {
+        Self {
+            slo_ms: DEFAULT_SLO_MS,
+            max_batch: DEFAULT_MAX_BATCH,
+            rps: DEFAULT_RPS,
+            requests: DEFAULT_REQUESTS,
+            stages: DEFAULT_STAGES,
+        }
+    }
+}
+
+/// `parse_or_warn` result clamped to a positive, finite value; warns
+/// (once per call, like the parser) when a parseable-but-nonsensical
+/// value such as `-1` or `0` is rejected.
+fn positive_f64(var: &str, v: f64, default: f64) -> f64 {
+    if v.is_finite() && v > 0.0 {
+        v
+    } else {
+        eprintln!("[kaitian] warning: ignoring {var}={v} (must be positive); using {default}");
+        default
+    }
+}
+
+fn positive_usize(var: &str, v: usize, default: usize) -> usize {
+    if v >= 1 {
+        v
+    } else {
+        eprintln!("[kaitian] warning: ignoring {var}={v} (must be >= 1); using {default}");
+        default
+    }
+}
+
+/// Resolve the serving knobs from raw env values (`None` = unset). Raw
+/// values are passed in rather than read here so unit tests exercise
+/// the rejection paths without racing on the process environment — the
+/// PR 4 convention.
+pub fn knobs_from(
+    slo_ms: Option<&str>,
+    max_batch: Option<&str>,
+    rps: Option<&str>,
+    requests: Option<&str>,
+    stages: Option<&str>,
+) -> ServeKnobs {
+    ServeKnobs {
+        slo_ms: positive_f64(
+            "KAITIAN_SLO_MS",
+            parse_or_warn("KAITIAN_SLO_MS", slo_ms, DEFAULT_SLO_MS),
+            DEFAULT_SLO_MS,
+        ),
+        max_batch: positive_usize(
+            "KAITIAN_MAX_BATCH",
+            parse_or_warn("KAITIAN_MAX_BATCH", max_batch, DEFAULT_MAX_BATCH),
+            DEFAULT_MAX_BATCH,
+        ),
+        rps: positive_f64(
+            "KAITIAN_SERVE_RPS",
+            parse_or_warn("KAITIAN_SERVE_RPS", rps, DEFAULT_RPS),
+            DEFAULT_RPS,
+        ),
+        requests: positive_usize(
+            "KAITIAN_SERVE_REQUESTS",
+            parse_or_warn("KAITIAN_SERVE_REQUESTS", requests, DEFAULT_REQUESTS),
+            DEFAULT_REQUESTS,
+        ),
+        stages: positive_usize(
+            "KAITIAN_SERVE_STAGES",
+            parse_or_warn("KAITIAN_SERVE_STAGES", stages, DEFAULT_STAGES),
+            DEFAULT_STAGES,
+        ),
+    }
+}
+
+/// [`knobs_from`] over the live process environment.
+pub fn knobs_from_env() -> ServeKnobs {
+    let get = |var: &str| std::env::var(var).ok();
+    let vals = [
+        get("KAITIAN_SLO_MS"),
+        get("KAITIAN_MAX_BATCH"),
+        get("KAITIAN_SERVE_RPS"),
+        get("KAITIAN_SERVE_REQUESTS"),
+        get("KAITIAN_SERVE_STAGES"),
+    ];
+    knobs_from(
+        vals[0].as_deref(),
+        vals[1].as_deref(),
+        vals[2].as_deref(),
+        vals[3].as_deref(),
+        vals[4].as_deref(),
+    )
+}
+
+/// Full configuration of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Cluster spec, e.g. `2G+2M` — one pipeline replica per device.
+    pub cluster: String,
+    pub policy: RoutePolicy,
+    pub slo_ms: f64,
+    pub max_batch: usize,
+    /// Offered load (requests/second), open loop.
+    pub rps: f64,
+    /// Total requests in the run.
+    pub requests: usize,
+    /// Pipeline stages per replica.
+    pub stages: usize,
+    /// Synthetic model shape.
+    pub model_layers: usize,
+    pub model_width: usize,
+    pub seed: u64,
+    /// Load perturbation applied to the devices (`device::perturb`).
+    pub scenario: Scenario,
+    /// Rebalance cadence in batches (adaptive policy).
+    pub adapt_every: usize,
+    pub controller: ControllerConfig,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        let knobs = knobs_from_env();
+        Self {
+            cluster: "2G+2M".into(),
+            policy: RoutePolicy::Adaptive,
+            slo_ms: knobs.slo_ms,
+            max_batch: knobs.max_batch,
+            rps: knobs.rps,
+            requests: knobs.requests,
+            stages: knobs.stages,
+            model_layers: 6,
+            model_width: 16,
+            seed: 42,
+            scenario: Scenario::none(),
+            adapt_every: 5,
+            controller: Self::serving_controller(),
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Controller tuning for the serving loop: rebalances are judged
+    /// over batch sequence numbers, which tick much faster than
+    /// training steps, so the freshness window is wider and the shift
+    /// cap is off (traffic shares are not data-order perturbations).
+    pub fn serving_controller() -> ControllerConfig {
+        ControllerConfig {
+            ema_alpha: 0.5,
+            min_rel_delta: 0.08,
+            cooldown_steps: 10,
+            shift_cap: 0,
+            freshness_steps: 60,
+            min_share: 1,
+        }
+    }
+
+    /// Options from CLI flags, with `KAITIAN_*` env values as the
+    /// defaults underneath (flags win; flag garbage is a hard error,
+    /// env garbage warns and falls back).
+    pub fn from_args(args: &Args) -> Result<ServeOptions> {
+        let base = ServeOptions::default();
+        let mut o = ServeOptions {
+            cluster: args.flag_or("cluster", &base.cluster).to_string(),
+            policy: RoutePolicy::parse(args.flag_or("policy", base.policy.name()))?,
+            ..base
+        };
+        if let Some(v) = args.flag("slo_ms") {
+            o.slo_ms = v
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--slo_ms expects a number, got {v:?}"))?;
+            anyhow::ensure!(o.slo_ms > 0.0, "--slo_ms must be positive");
+        }
+        if let Some(v) = args.flag("rps") {
+            o.rps = v
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--rps expects a number, got {v:?}"))?;
+            anyhow::ensure!(o.rps > 0.0, "--rps must be positive");
+        }
+        o.max_batch = args.usize_flag("max_batch", o.max_batch)?.max(1);
+        o.requests = args.usize_flag("requests", o.requests)?.max(1);
+        o.stages = args.usize_flag("stages", o.stages)?.max(1);
+        o.model_layers = args.usize_flag("model_layers", o.model_layers)?.max(1);
+        o.model_width = args.usize_flag("model_width", o.model_width)?.max(1);
+        o.seed = args.usize_flag("seed", o.seed as usize)? as u64;
+        o.adapt_every = args.usize_flag("adapt_every", o.adapt_every)?.max(1);
+        if let Some(s) = args.flag("scenario") {
+            o.scenario = Scenario::parse(s)?;
+        }
+        anyhow::ensure!(
+            o.stages <= o.model_layers,
+            "--stages {} exceeds --model_layers {}",
+            o.stages,
+            o.model_layers
+        );
+        Ok(o)
+    }
+
+    pub fn slo_s(&self) -> f64 {
+        self.slo_ms * 1e-3
+    }
+}
+
+/// Per-replica serving statistics.
+#[derive(Debug, Clone)]
+pub struct ReplicaStats {
+    pub device: String,
+    pub batches: usize,
+    pub requests: usize,
+    /// Wall seconds the replica's busiest stage spent computing.
+    pub busy_s: f64,
+    /// `busy_s / wall_s` — occupancy of the bottleneck stage.
+    pub utilization: f64,
+}
+
+/// The serving run report (the `--mode=serve` JSON).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub cluster: String,
+    pub policy: String,
+    pub scenario: String,
+    pub slo_ms: f64,
+    pub max_batch: usize,
+    pub offered_rps: f64,
+    pub requests: usize,
+    pub completed: usize,
+    pub wall_s: f64,
+    /// Completed requests per second.
+    pub throughput_rps: f64,
+    /// Requests completed *within their SLO* per second.
+    pub goodput_rps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    /// Fraction of completed requests that missed their deadline.
+    pub violation_rate: f64,
+    /// batch size -> number of batches formed at that size.
+    pub batch_hist: BTreeMap<usize, usize>,
+    pub per_replica: Vec<ReplicaStats>,
+    pub rebalance_events: Vec<RebalanceEvent>,
+}
+
+impl ServeReport {
+    pub fn to_json(&self) -> Json {
+        let hist = Json::Obj(
+            self.batch_hist
+                .iter()
+                .map(|(k, v)| (k.to_string(), Json::num(*v as f64)))
+                .collect(),
+        );
+        let replicas = Json::arr(
+            self.per_replica
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("device", Json::str(r.device.clone())),
+                        ("batches", Json::num(r.batches as f64)),
+                        ("requests", Json::num(r.requests as f64)),
+                        ("busy_s", Json::num(r.busy_s)),
+                        ("utilization", Json::num(r.utilization)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("cluster", Json::str(self.cluster.clone())),
+            ("policy", Json::str(self.policy.clone())),
+            ("scenario", Json::str(self.scenario.clone())),
+            ("slo_ms", Json::num(self.slo_ms)),
+            ("max_batch", Json::num(self.max_batch as f64)),
+            ("offered_rps", Json::num(self.offered_rps)),
+            ("requests", Json::num(self.requests as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("goodput_rps", Json::num(self.goodput_rps)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("violation_rate", Json::num(self.violation_rate)),
+            ("batch_hist", hist),
+            ("per_replica", replicas),
+            (
+                "rebalance_events",
+                Json::arr(self.rebalance_events.iter().map(|e| e.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Console summary (the `serve` subcommand's stdout).
+    pub fn summary(&self) -> String {
+        let mut t = MarkdownTable::new(&[
+            "cluster", "policy", "p50 ms", "p99 ms", "viol %", "thr rps", "good rps",
+        ]);
+        t.row(vec![
+            self.cluster.clone(),
+            self.policy.clone(),
+            format!("{:.2}", self.p50_ms),
+            format!("{:.2}", self.p99_ms),
+            format!("{:.1}", self.violation_rate * 100.0),
+            format!("{:.0}", self.throughput_rps),
+            format!("{:.0}", self.goodput_rps),
+        ]);
+        t.render()
+    }
+}
+
+/// A dispatched batch waiting on its pipeline.
+struct InFlight {
+    batch: MicroBatch,
+    dispatch_s: f64,
+    global_step: usize,
+}
+
+/// Run one real-time serving experiment: spawn a pipeline replica per
+/// device, stream open-loop requests through the batcher and router,
+/// and measure end-to-end latency. See the module docs for the
+/// architecture.
+pub fn serve(opts: &ServeOptions) -> Result<ServeReport> {
+    anyhow::ensure!(
+        opts.stages <= opts.model_layers,
+        "{} stages over a {}-layer model",
+        opts.stages,
+        opts.model_layers
+    );
+    let mut devices = parse_cluster(&opts.cluster)?;
+    opts.scenario.apply(&mut devices)?;
+    let world = devices.len();
+    let speed = SpeedModel::paper_default();
+    let model = Arc::new(StageModel::new(opts.model_layers, opts.model_width, opts.seed));
+    let plan = StagePlan::balanced(&model.layer_costs(), &vec![1.0; opts.stages])?;
+    let stage_shares = plan.cost_shares(&model.layer_costs());
+
+    // Offline-benchmark scores seed the router, as in training.
+    let times: Vec<f64> = devices
+        .iter()
+        .map(|d| speed.step_time(d.dtype, opts.max_batch))
+        .collect();
+    let t_best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let scores: Vec<f64> = times.iter().map(|t| t_best / t).collect();
+    let mut router = Router::new(opts.policy, &scores, opts.controller.clone(), opts.adapt_every)?;
+
+    // One pipeline replica per device, throttled to that device's
+    // (possibly perturbed) modeled speed.
+    let (done_tx, done_rx) = mpsc::channel();
+    let mut pipes = Vec::with_capacity(world);
+    for (r, dev) in devices.iter().enumerate() {
+        let spec = dev.clone();
+        let shares = stage_shares.clone();
+        let throttle: StageThrottle = Arc::new(move |stage, n, seq| {
+            shares[stage] * speed.step_time_loaded(&spec, n, seq as usize)
+        });
+        pipes.push(StagePipeline::spawn(
+            r,
+            model.clone(),
+            &plan,
+            Some(throttle),
+            done_tx.clone(),
+        )?);
+    }
+    drop(done_tx);
+
+    // Initial batching budget: SLO minus the modeled full-batch service
+    // time on the slowest device; refined online from observations.
+    let worst = times.iter().cloned().fold(0.0, f64::max);
+    let mut service_est = worst;
+    let slo_s = opts.slo_s();
+    let mut batcher = MicroBatcher::new(opts.max_batch, (slo_s - service_est).max(0.0));
+
+    let arrivals: Vec<Request> =
+        OpenLoopStream::new(opts.rps, slo_s, opts.seed).take(opts.requests).collect();
+
+    let t0 = Instant::now();
+    let mut next_arrival = 0;
+    let mut inflight: HashMap<(usize, u64), InFlight> = HashMap::new();
+    let mut global_step = 0usize;
+    let mut batch_hist: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut replica_batches = vec![0usize; world];
+    let mut replica_requests = vec![0usize; world];
+    let mut latencies: Vec<f64> = Vec::with_capacity(opts.requests);
+    let mut violations = 0usize;
+    let mut completed = 0usize;
+
+    // Hard wall so a wedged pipeline fails loudly instead of hanging
+    // the test suite.
+    let deadline = arrivals.last().map_or(1.0, |r| r.arrival_s) + 30.0;
+
+    while completed < opts.requests {
+        let now_s = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(
+            now_s < deadline,
+            "serving run wedged: {completed}/{} after {now_s:.1}s",
+            opts.requests
+        );
+        let mut progressed = false;
+
+        // Admit due arrivals.
+        while next_arrival < arrivals.len() && arrivals[next_arrival].arrival_s <= now_s {
+            batcher.push(arrivals[next_arrival]);
+            next_arrival += 1;
+            progressed = true;
+        }
+
+        // Form and dispatch batches.
+        loop {
+            let formed = match batcher.poll(now_s) {
+                Some(b) => Some(b),
+                None if next_arrival == arrivals.len() => batcher.drain(now_s),
+                None => None,
+            };
+            let Some(b) = formed else { break };
+            progressed = true;
+            let r = router.route();
+            let n = b.len();
+            *batch_hist.entry(n).or_insert(0) += 1;
+            replica_batches[r] += 1;
+            replica_requests[r] += n;
+            let input = model.input(n, opts.seed ^ ((global_step as u64) << 1));
+            let seq = pipes[r].submit(input, n)?;
+            inflight.insert(
+                (r, seq),
+                InFlight {
+                    batch: b,
+                    dispatch_s: now_s,
+                    global_step,
+                },
+            );
+            global_step += 1;
+        }
+
+        // Collect completions.
+        while let Ok(d) = done_rx.try_recv() {
+            progressed = true;
+            let now_s = t0.elapsed().as_secs_f64();
+            let fl = inflight
+                .remove(&(d.replica, d.seq))
+                .ok_or_else(|| anyhow::anyhow!("unknown completion {}/{}", d.replica, d.seq))?;
+            let service = now_s - fl.dispatch_s;
+            for req in &fl.batch.requests {
+                let lat = now_s - req.arrival_s;
+                latencies.push(lat);
+                if now_s > req.deadline_s {
+                    violations += 1;
+                }
+                completed += 1;
+            }
+            // Feed the router and retune the batching budget.
+            router.on_complete(d.replica, fl.global_step, service / d.n as f64)?;
+            service_est = 0.7 * service_est + 0.3 * service;
+            batcher.set_budget((slo_s - service_est).max(0.0));
+        }
+
+        if !progressed {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+    }
+
+    let wall_s = t0.elapsed().as_secs_f64().max(f64::MIN_POSITIVE);
+    let per_replica: Vec<ReplicaStats> = pipes
+        .iter()
+        .enumerate()
+        .map(|(r, p)| {
+            let busy = p.busy_s().into_iter().fold(0.0, f64::max);
+            ReplicaStats {
+                device: devices[r].dtype.to_string(),
+                batches: replica_batches[r],
+                requests: replica_requests[r],
+                busy_s: busy,
+                utilization: busy / wall_s,
+            }
+        })
+        .collect();
+    for p in pipes {
+        p.shutdown();
+    }
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let mean_s = latencies.iter().sum::<f64>() / latencies.len().max(1) as f64;
+    let within_slo = completed - violations;
+    Ok(ServeReport {
+        cluster: cluster_name(&devices),
+        policy: router.policy().name().to_string(),
+        scenario: opts.scenario.name.clone(),
+        slo_ms: opts.slo_ms,
+        max_batch: opts.max_batch,
+        offered_rps: opts.rps,
+        requests: opts.requests,
+        completed,
+        wall_s,
+        throughput_rps: completed as f64 / wall_s,
+        goodput_rps: within_slo as f64 / wall_s,
+        p50_ms: percentile(&latencies, 0.50) * 1e3,
+        p99_ms: percentile(&latencies, 0.99) * 1e3,
+        mean_ms: mean_s * 1e3,
+        violation_rate: violations as f64 / completed.max(1) as f64,
+        batch_hist,
+        per_replica,
+        rebalance_events: router.take_events(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knob_defaults_when_unset() {
+        assert_eq!(knobs_from(None, None, None, None, None), ServeKnobs::default());
+    }
+
+    #[test]
+    fn knob_valid_values_parse() {
+        let k = knobs_from(Some("25.5"), Some("16"), Some("1200"), Some("5000"), Some("3"));
+        assert_eq!(k.slo_ms, 25.5);
+        assert_eq!(k.max_batch, 16);
+        assert_eq!(k.rps, 1200.0);
+        assert_eq!(k.requests, 5000);
+        assert_eq!(k.stages, 3);
+    }
+
+    #[test]
+    fn knob_garbage_warns_and_falls_back() {
+        // Unparseable strings, negatives, zeros, NaN: every one must
+        // come back as the default — never a panic, never a silent
+        // nonsense config.
+        for bad in ["banana", "", "8.5.3", "-1", "0", "nan", "-inf"] {
+            let k = knobs_from(Some(bad), Some(bad), Some(bad), Some(bad), Some(bad));
+            assert_eq!(k, ServeKnobs::default(), "{bad:?} must fall back");
+        }
+        // f64 knobs parse "-1" fine but must still reject it as
+        // non-positive.
+        let k = knobs_from(Some("-1"), None, Some("-3.5"), None, None);
+        assert_eq!(k.slo_ms, DEFAULT_SLO_MS);
+        assert_eq!(k.rps, DEFAULT_RPS);
+    }
+
+    #[test]
+    fn options_from_args_flags_win() {
+        let args = Args::parse_from(
+            [
+                "serve", "--cluster", "1G+1M", "--policy", "rr", "--slo_ms", "20",
+                "--max_batch", "4", "--rps", "800", "--requests", "64", "--stages", "2",
+                "--scenario", "step-change", "--seed", "7",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        );
+        let o = ServeOptions::from_args(&args).unwrap();
+        assert_eq!(o.cluster, "1G+1M");
+        assert_eq!(o.policy, RoutePolicy::RoundRobin);
+        assert_eq!(o.slo_ms, 20.0);
+        assert_eq!(o.max_batch, 4);
+        assert_eq!(o.rps, 800.0);
+        assert_eq!(o.requests, 64);
+        assert_eq!(o.seed, 7);
+        assert_eq!(o.scenario.name, "step-change");
+    }
+
+    #[test]
+    fn options_reject_flag_garbage_and_bad_shapes() {
+        let parse = |tokens: &[&str]| {
+            ServeOptions::from_args(&Args::parse_from(
+                tokens.iter().map(|s| s.to_string()).collect(),
+            ))
+        };
+        assert!(parse(&["serve", "--slo_ms", "soon"]).is_err());
+        assert!(parse(&["serve", "--slo_ms", "-5"]).is_err());
+        assert!(parse(&["serve", "--rps", "fast"]).is_err());
+        assert!(parse(&["serve", "--policy", "best-effort"]).is_err());
+        assert!(parse(&["serve", "--stages", "9", "--model_layers", "4"]).is_err());
+    }
+
+    #[test]
+    fn serve_smoke_round_robin() {
+        // Tiny real-time run: everything completes, the report is
+        // coherent, batches respect max_batch.
+        let o = ServeOptions {
+            cluster: "1G+1M".into(),
+            policy: RoutePolicy::RoundRobin,
+            slo_ms: 50.0,
+            max_batch: 4,
+            rps: 2000.0,
+            requests: 40,
+            stages: 2,
+            model_layers: 4,
+            model_width: 8,
+            ..ServeOptions::default()
+        };
+        let r = serve(&o).unwrap();
+        assert_eq!(r.completed, 40);
+        assert_eq!(r.policy, "round-robin");
+        assert!(r.throughput_rps > 0.0);
+        assert!(r.p99_ms >= r.p50_ms);
+        assert!(r.batch_hist.keys().all(|&n| (1..=4).contains(&n)));
+        let batches: usize = r.per_replica.iter().map(|p| p.batches).sum();
+        assert_eq!(r.batch_hist.values().sum::<usize>(), batches);
+        assert_eq!(r.per_replica.len(), 2);
+        assert!(r.rebalance_events.is_empty(), "rr has no controller");
+    }
+}

@@ -1,0 +1,254 @@
+//! Deterministic synthetic forward model + pipeline stage partitioner.
+//!
+//! Serving must run without the PJRT artifact bundle (the tier-1 test
+//! environment has no engine), so the pipeline executes a seeded dense
+//! [`StageModel`] instead of the compiled forward programs: `layers`
+//! leaky-ReLU layers of `width x width` f32 matmuls, evaluated in a
+//! fixed accumulation order. Because a pipeline stage runs *exactly*
+//! the same scalar operations over the same intermediate values as the
+//! corresponding slice of the single-device loop, splitting the layers
+//! across stages is bitwise-exact by construction — the property the
+//! serving bench gates on, and the same contract the real engine's
+//! per-stage programs would have to meet.
+//!
+//! [`StagePlan`] maps layers to pipeline stages: contiguous ranges,
+//! balanced so each stage's modeled compute cost tracks its share, with
+//! every stage owning at least one layer.
+
+use crate::util::Rng;
+use crate::Result;
+
+/// A seeded dense f32 network: `layers` layers of `width x width`
+/// weights with bias and leaky-ReLU. Cloneable so every replica and
+/// the single-device reference hold identical parameters.
+#[derive(Debug, Clone)]
+pub struct StageModel {
+    width: usize,
+    layers: usize,
+    /// Row-major `[layer][out][in]`.
+    weights: Vec<f32>,
+    /// `[layer][out]`.
+    bias: Vec<f32>,
+}
+
+impl StageModel {
+    /// Build a model from a seed; identical `(layers, width, seed)`
+    /// yield bitwise-identical parameters everywhere.
+    pub fn new(layers: usize, width: usize, seed: u64) -> Self {
+        assert!(layers >= 1 && width >= 1, "model needs layers >= 1, width >= 1");
+        let mut rng = Rng::new(seed ^ 0x57a6_e0de);
+        let scale = 1.0 / (width as f32).sqrt();
+        let weights = (0..layers * width * width)
+            .map(|_| rng.normal_f32(0.0, scale))
+            .collect();
+        let bias = (0..layers * width).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        Self {
+            width,
+            layers,
+            weights,
+            bias,
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    /// A deterministic input batch of `n` samples (flat `n * width`),
+    /// seeded per request batch so replays are exact.
+    pub fn input(&self, n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed ^ 0x1a2b_3c4d);
+        (0..n * self.width).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    /// Run layers `lo..hi` over a flat `n * width` activation batch.
+    /// The accumulation order is fixed (per-output dot product walked
+    /// in input order), so `forward_layers(0, k)` then
+    /// `forward_layers(k, L)` is bitwise-identical to
+    /// `forward_layers(0, L)`.
+    pub fn forward_layers(&self, lo: usize, hi: usize, act: &[f32]) -> Vec<f32> {
+        assert!(lo <= hi && hi <= self.layers, "layer range {lo}..{hi}");
+        assert!(
+            act.len() % self.width == 0,
+            "activation length {} not a multiple of width {}",
+            act.len(),
+            self.width
+        );
+        let w = self.width;
+        let n = act.len() / w;
+        let mut cur = act.to_vec();
+        let mut next = vec![0.0_f32; cur.len()];
+        for l in lo..hi {
+            let lw = &self.weights[l * w * w..(l + 1) * w * w];
+            let lb = &self.bias[l * w..(l + 1) * w];
+            for s in 0..n {
+                let x = &cur[s * w..(s + 1) * w];
+                for j in 0..w {
+                    let row = &lw[j * w..(j + 1) * w];
+                    let mut acc = 0.0_f32;
+                    for k in 0..w {
+                        acc += row[k] * x[k];
+                    }
+                    let v = acc + lb[j];
+                    next[s * w + j] = if v > 0.0 { v } else { 0.01 * v };
+                }
+            }
+            std::mem::swap(&mut cur, &mut next);
+        }
+        cur
+    }
+
+    /// The full single-device forward (the parity reference).
+    pub fn forward(&self, act: &[f32]) -> Vec<f32> {
+        self.forward_layers(0, self.layers, act)
+    }
+
+    /// Modeled relative compute cost per layer (uniform here — every
+    /// layer is the same matmul — but the planner takes a vector so a
+    /// real per-program cost model drops in unchanged).
+    pub fn layer_costs(&self) -> Vec<f64> {
+        vec![(self.width * self.width) as f64; self.layers]
+    }
+}
+
+/// Contiguous layer ranges, one per pipeline stage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StagePlan {
+    /// `[lo, hi)` layer range per stage, covering all layers in order.
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl StagePlan {
+    pub fn stages(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Split `layer_costs.len()` layers into `shares.len()` contiguous
+    /// stages, cutting so each stage's cumulative cost tracks its share
+    /// (a greedy midpoint rule), with every stage owning at least one
+    /// layer. Errors when there are more stages than layers or a share
+    /// is non-positive.
+    pub fn balanced(layer_costs: &[f64], shares: &[f64]) -> Result<StagePlan> {
+        let l = layer_costs.len();
+        let s = shares.len();
+        anyhow::ensure!(s >= 1, "stage plan needs at least one stage");
+        anyhow::ensure!(
+            l >= s,
+            "cannot split {l} layers across {s} stages (every stage needs one)"
+        );
+        anyhow::ensure!(
+            shares.iter().all(|&x| x.is_finite() && x > 0.0),
+            "stage shares must be positive, got {shares:?}"
+        );
+        anyhow::ensure!(
+            layer_costs.iter().all(|&c| c.is_finite() && c > 0.0),
+            "layer costs must be positive"
+        );
+        let total: f64 = layer_costs.iter().sum();
+        let share_total: f64 = shares.iter().sum();
+        let mut ranges = Vec::with_capacity(s);
+        let mut lo = 0;
+        let mut acc = 0.0;
+        let mut cum_target = 0.0;
+        for stage in 0..s {
+            if stage == s - 1 {
+                ranges.push((lo, l));
+                break;
+            }
+            cum_target += total * shares[stage] / share_total;
+            // Leave one layer for each of the remaining stages.
+            let must_leave = s - stage - 1;
+            let mut hi = lo + 1;
+            acc += layer_costs[lo];
+            while hi < l - must_leave && acc + layer_costs[hi] / 2.0 <= cum_target {
+                acc += layer_costs[hi];
+                hi += 1;
+            }
+            ranges.push((lo, hi));
+            lo = hi;
+        }
+        Ok(StagePlan { ranges })
+    }
+
+    /// The cost fraction each stage carries under `layer_costs` (the
+    /// pipeline's per-stage throttle shares).
+    pub fn cost_shares(&self, layer_costs: &[f64]) -> Vec<f64> {
+        let total: f64 = layer_costs.iter().sum();
+        self.ranges
+            .iter()
+            .map(|&(lo, hi)| layer_costs[lo..hi].iter().sum::<f64>() / total.max(f64::MIN_POSITIVE))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_forward_is_bitwise_identical() {
+        let m = StageModel::new(6, 16, 42);
+        let x = m.input(5, 9);
+        let whole = m.forward(&x);
+        for cut in 1..6 {
+            let part = m.forward_layers(cut, 6, &m.forward_layers(0, cut, &x));
+            assert_eq!(whole.len(), part.len());
+            for (a, b) in whole.iter().zip(&part) {
+                assert_eq!(a.to_bits(), b.to_bits(), "cut at layer {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn model_and_input_are_seed_deterministic() {
+        let a = StageModel::new(3, 8, 7);
+        let b = StageModel::new(3, 8, 7);
+        let x = a.input(4, 1);
+        assert_eq!(x, b.input(4, 1));
+        assert_eq!(a.forward(&x), b.forward(&x));
+        assert_ne!(
+            StageModel::new(3, 8, 8).forward(&x),
+            a.forward(&x),
+            "different seed, different parameters"
+        );
+    }
+
+    #[test]
+    fn balanced_plan_covers_all_layers_contiguously() {
+        let costs = vec![1.0; 8];
+        let plan = StagePlan::balanced(&costs, &[1.0, 1.0]).unwrap();
+        assert_eq!(plan.ranges, vec![(0, 4), (4, 8)]);
+        let plan = StagePlan::balanced(&costs, &[3.0, 1.0]).unwrap();
+        assert_eq!(plan.ranges, vec![(0, 6), (6, 8)]);
+        let plan = StagePlan::balanced(&costs, &[1.0, 1.0, 1.0, 1.0]).unwrap();
+        assert_eq!(plan.ranges, vec![(0, 2), (2, 4), (4, 6), (6, 8)]);
+        // Every stage owns >= 1 layer even under extreme skew.
+        let plan = StagePlan::balanced(&costs, &[100.0, 1.0, 1.0]).unwrap();
+        assert_eq!(plan.stages(), 3);
+        for &(lo, hi) in &plan.ranges {
+            assert!(hi > lo);
+        }
+        assert_eq!(plan.ranges.last().unwrap().1, 8);
+    }
+
+    #[test]
+    fn plan_rejects_bad_shapes() {
+        assert!(StagePlan::balanced(&[1.0, 1.0], &[1.0; 3]).is_err(), "stages > layers");
+        assert!(StagePlan::balanced(&[1.0; 4], &[]).is_err());
+        assert!(StagePlan::balanced(&[1.0; 4], &[1.0, 0.0]).is_err());
+        assert!(StagePlan::balanced(&[1.0, -1.0], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn cost_shares_sum_to_one() {
+        let costs = vec![1.0; 10];
+        let plan = StagePlan::balanced(&costs, &[1.0, 2.0, 2.0]).unwrap();
+        let shares = plan.cost_shares(&costs);
+        assert_eq!(shares.len(), 3);
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+}

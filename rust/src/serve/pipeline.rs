@@ -1,0 +1,372 @@
+//! Pipeline-parallel micro-batch execution over the CommTensor p2p
+//! verbs.
+//!
+//! One [`StagePipeline`] is one data-parallel replica: each pipeline
+//! stage owns a contiguous layer range of the [`StageModel`] and a
+//! dedicated worker thread with its own rank on a private
+//! [`InprocMesh`]; activations flow stage-to-stage as f32 CommTensor
+//! payloads under `send_tagged` / `recv_tagged`.
+//!
+//! The tag discipline is `group/kaitian.rs`'s, generalized to
+//! concurrent issue: the front-end reserves every inter-stage link tag
+//! for a micro-batch *at submit time, in program order*, from the
+//! lock-free [`PtpTagTable`], then fans a ticket out to every stage.
+//! Stages execute in any interleaving — batch `k+1` can occupy stage 0
+//! while batch `k` is still in stage 1 (that overlap is the pipeline's
+//! whole point) — and the per-link FIFO match of the transport plus
+//! the pre-reserved, per-link-monotonic tags keep every transfer
+//! paired with its batch, exactly as the A/B/C chunk stages of the
+//! kaitian group pipeline pair theirs.
+//!
+//! Heterogeneity: compute here is a synthetic dense model, identical
+//! on every replica, so an optional *throttle* stretches each stage's
+//! wall time to the device speed model (the same relative-throttle
+//! trick the real-mode trainer uses). Bitwise parity with the
+//! single-device forward is unaffected — the throttle only sleeps.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::collectives::chunk::PtpTagTable;
+use crate::collectives::Communicator;
+use crate::comm::tensor::{CommTensor, DType};
+use crate::transport::InprocMesh;
+use crate::Result;
+
+use super::model::{StageModel, StagePlan};
+
+/// Models a stage's wall time: `(stage, batch_len, seq) -> seconds`.
+/// The stage sleeps out any remainder after real compute.
+pub type StageThrottle = Arc<dyn Fn(usize, usize, u64) -> f64 + Send + Sync>;
+
+/// A completed micro-batch, delivered on the pipeline's done channel.
+#[derive(Debug)]
+pub struct PipelineDone {
+    /// Which replica finished it (as passed to [`StagePipeline::spawn`]).
+    pub replica: usize,
+    /// Submit sequence number within that replica.
+    pub seq: u64,
+    /// Samples in the batch.
+    pub n: usize,
+    /// Final activations, flat `n * width`.
+    pub output: Vec<f32>,
+}
+
+/// One ticket per stage per micro-batch (issue-time fan-out).
+struct Ticket {
+    seq: u64,
+    n: usize,
+    /// Pre-reserved transport tag for each inter-stage link
+    /// (`link_tags[s]` carries stage `s` -> `s+1`).
+    link_tags: Arc<Vec<u64>>,
+    /// The input activations; present only on the stage-0 ticket.
+    input: Option<Vec<f32>>,
+}
+
+/// A running pipeline-parallel replica. Submit micro-batches with
+/// [`StagePipeline::submit`]; completions arrive on the done channel
+/// given at spawn, in per-replica submit order.
+pub struct StagePipeline {
+    stages: usize,
+    width: usize,
+    txs: Vec<mpsc::Sender<Ticket>>,
+    tags: Arc<PtpTagTable>,
+    next_seq: AtomicU64,
+    busy_ns: Arc<Vec<AtomicU64>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl StagePipeline {
+    /// Spawn one worker thread per stage of `plan` over a private
+    /// in-process mesh. `throttle`, when present, stretches stage wall
+    /// times to a device speed model. Completions go to `done`.
+    pub fn spawn(
+        replica: usize,
+        model: Arc<StageModel>,
+        plan: &StagePlan,
+        throttle: Option<StageThrottle>,
+        done: mpsc::Sender<PipelineDone>,
+    ) -> Result<StagePipeline> {
+        let stages = plan.stages();
+        anyhow::ensure!(stages >= 1, "pipeline needs at least one stage");
+        anyhow::ensure!(
+            plan.ranges.last().map(|r| r.1) == Some(model.layers())
+                && plan.ranges.first().map(|r| r.0) == Some(0),
+            "stage plan {:?} does not cover the model's {} layers",
+            plan.ranges,
+            model.layers()
+        );
+        let tags = Arc::new(PtpTagTable::new(stages));
+        let busy_ns: Arc<Vec<AtomicU64>> =
+            Arc::new((0..stages).map(|_| AtomicU64::new(0)).collect());
+        let mut txs = Vec::with_capacity(stages);
+        let mut workers = Vec::with_capacity(stages);
+        let comms: Vec<Communicator> = InprocMesh::new(stages)
+            .into_iter()
+            .map(|e| Communicator::new(Arc::new(e)))
+            .collect();
+        for (stage, comm) in comms.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<Ticket>();
+            txs.push(tx);
+            let (lo, hi) = plan.ranges[stage];
+            let model = model.clone();
+            let done = done.clone();
+            let busy = busy_ns.clone();
+            let throttle = throttle.clone();
+            workers.push(std::thread::spawn(move || {
+                stage_loop(
+                    replica, stage, stages, lo, hi, &model, &comm, rx, &done, &busy, throttle,
+                );
+            }));
+        }
+        Ok(StagePipeline {
+            stages,
+            width: model.width(),
+            txs,
+            tags,
+            next_seq: AtomicU64::new(0),
+            busy_ns,
+            workers,
+        })
+    }
+
+    pub fn stages(&self) -> usize {
+        self.stages
+    }
+
+    /// Submit one micro-batch of `n` samples (`input` flat
+    /// `n * width`). Reserves all inter-stage link tags here, at issue
+    /// time in program order (lock-free, any thread), then fans the
+    /// ticket out; returns the replica-local sequence number.
+    pub fn submit(&self, input: Vec<f32>, n: usize) -> Result<u64> {
+        anyhow::ensure!(
+            input.len() == n * self.width,
+            "input length {} != n {} x width {}",
+            input.len(),
+            n,
+            self.width
+        );
+        anyhow::ensure!(n >= 1, "empty micro-batch");
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let link_tags: Arc<Vec<u64>> = Arc::new(
+            (0..self.stages.saturating_sub(1))
+                .map(|s| self.tags.reserve(s, s + 1))
+                .collect::<Result<_>>()?,
+        );
+        for (stage, tx) in self.txs.iter().enumerate() {
+            let ticket = Ticket {
+                seq,
+                n,
+                link_tags: link_tags.clone(),
+                input: (stage == 0).then(|| input.clone()),
+            };
+            tx.send(ticket)
+                .map_err(|_| anyhow::anyhow!("pipeline stage {stage} is gone"))?;
+        }
+        Ok(seq)
+    }
+
+    /// Accumulated per-stage compute seconds (throttled wall time).
+    pub fn busy_s(&self) -> Vec<f64> {
+        self.busy_ns
+            .iter()
+            .map(|ns| ns.load(Ordering::Relaxed) as f64 * 1e-9)
+            .collect()
+    }
+
+    /// Close the ticket queues and join the stage workers. All
+    /// submitted batches complete first: stage queues drain in order
+    /// and every p2p transfer has a matching peer by construction.
+    pub fn shutdown(mut self) {
+        self.txs.clear();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for StagePipeline {
+    fn drop(&mut self) {
+        self.txs.clear();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn stage_loop(
+    replica: usize,
+    stage: usize,
+    stages: usize,
+    lo: usize,
+    hi: usize,
+    model: &StageModel,
+    comm: &Communicator,
+    rx: mpsc::Receiver<Ticket>,
+    done: &mpsc::Sender<PipelineDone>,
+    busy_ns: &[AtomicU64],
+    throttle: Option<StageThrottle>,
+) {
+    let width = model.width();
+    while let Ok(t) = rx.recv() {
+        // Input: from the ticket (stage 0) or the upstream stage's
+        // pre-reserved link tag.
+        let act: Vec<f32> = match t.input {
+            Some(x) => x,
+            None => {
+                let mut tensor = CommTensor::zeros(DType::F32, t.n * width);
+                if comm
+                    .recv_tagged(stage - 1, t.link_tags[stage - 1], DType::F32, tensor.as_bytes_mut())
+                    .is_err()
+                {
+                    return; // peer gone mid-shutdown
+                }
+                tensor.to_f32()
+            }
+        };
+        let t0 = Instant::now();
+        let out = model.forward_layers(lo, hi, &act);
+        if let Some(f) = &throttle {
+            let target = f(stage, t.n, t.seq);
+            let elapsed = t0.elapsed().as_secs_f64();
+            if target > elapsed {
+                std::thread::sleep(std::time::Duration::from_secs_f64(target - elapsed));
+            }
+        }
+        busy_ns[stage].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if stage + 1 < stages {
+            let tensor = CommTensor::from_f32(DType::F32, &out);
+            if comm
+                .send_tagged(stage + 1, t.link_tags[stage], DType::F32, tensor.as_bytes())
+                .is_err()
+            {
+                return;
+            }
+        } else if done
+            .send(PipelineDone {
+                replica,
+                seq: t.seq,
+                n: t.n,
+                output: out,
+            })
+            .is_err()
+        {
+            return; // front-end gone; nothing left to deliver to
+        }
+    }
+}
+
+/// Run `inputs` through a staged pipeline and return the outputs in
+/// submit order — the blocking convenience the parity tests and bench
+/// compare against `StageModel::forward`.
+pub fn pipeline_forward(
+    model: &StageModel,
+    plan: &StagePlan,
+    inputs: &[Vec<f32>],
+) -> Result<Vec<Vec<f32>>> {
+    let width = model.width();
+    let (done_tx, done_rx) = mpsc::channel();
+    let pipe = StagePipeline::spawn(0, Arc::new(model.clone()), plan, None, done_tx)?;
+    for input in inputs {
+        anyhow::ensure!(
+            !input.is_empty() && input.len() % width == 0,
+            "input length {} not a positive multiple of width {width}",
+            input.len()
+        );
+        pipe.submit(input.clone(), input.len() / width)?;
+    }
+    let mut outputs: Vec<Option<Vec<f32>>> = vec![None; inputs.len()];
+    for _ in 0..inputs.len() {
+        let d = done_rx.recv()?;
+        outputs[d.seq as usize] = Some(d.output);
+    }
+    pipe.shutdown();
+    Ok(outputs.into_iter().map(|o| o.expect("one done per submit")).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_matches_single_device_bitwise() {
+        let model = StageModel::new(6, 12, 42);
+        let inputs: Vec<Vec<f32>> = (0..5).map(|i| model.input(3, i)).collect();
+        let reference: Vec<Vec<f32>> = inputs.iter().map(|x| model.forward(x)).collect();
+        for stages in [1, 2, 3] {
+            let plan = StagePlan::balanced(&model.layer_costs(), &vec![1.0; stages]).unwrap();
+            let outs = pipeline_forward(&model, &plan, &inputs).unwrap();
+            for (o, r) in outs.iter().zip(&reference) {
+                assert_eq!(o.len(), r.len());
+                for (a, b) in o.iter().zip(r) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{stages}-stage pipeline");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn in_flight_batches_overlap_stages() {
+        // Submit many batches at once: the pipeline must accept them
+        // all without waiting for completions (tickets queue per
+        // stage), and completions arrive in submit order.
+        let model = StageModel::new(4, 8, 7);
+        let plan = StagePlan::balanced(&model.layer_costs(), &[1.0, 1.0]).unwrap();
+        let (done_tx, done_rx) = mpsc::channel();
+        let pipe = StagePipeline::spawn(3, Arc::new(model.clone()), &plan, None, done_tx).unwrap();
+        for i in 0..16 {
+            let seq = pipe.submit(model.input(2, i), 2).unwrap();
+            assert_eq!(seq, i);
+        }
+        for i in 0..16 {
+            let d = done_rx.recv().unwrap();
+            assert_eq!((d.replica, d.seq, d.n), (3, i, 2));
+        }
+        assert!(pipe.busy_s().iter().all(|&b| b >= 0.0));
+        pipe.shutdown();
+    }
+
+    #[test]
+    fn throttle_stretches_stage_time() {
+        let model = StageModel::new(2, 4, 1);
+        let plan = StagePlan::balanced(&model.layer_costs(), &[1.0, 1.0]).unwrap();
+        let (done_tx, done_rx) = mpsc::channel();
+        let throttle: StageThrottle = Arc::new(|_, _, _| 5e-3);
+        let pipe =
+            StagePipeline::spawn(0, Arc::new(model.clone()), &plan, Some(throttle), done_tx)
+                .unwrap();
+        pipe.submit(model.input(1, 0), 1).unwrap();
+        let d = done_rx.recv().unwrap();
+        assert_eq!(d.n, 1);
+        let busy = pipe.busy_s();
+        assert!(
+            busy.iter().all(|&b| b >= 4e-3),
+            "each stage sleeps to the modeled time: {busy:?}"
+        );
+        pipe.shutdown();
+    }
+
+    #[test]
+    fn submit_rejects_bad_shapes() {
+        let model = StageModel::new(2, 4, 1);
+        let plan = StagePlan::balanced(&model.layer_costs(), &[1.0]).unwrap();
+        let (done_tx, _done_rx) = mpsc::channel();
+        let pipe = StagePipeline::spawn(0, Arc::new(model), &plan, None, done_tx).unwrap();
+        assert!(pipe.submit(vec![0.0; 3], 1).is_err(), "length mismatch");
+        assert!(pipe.submit(vec![], 0).is_err(), "empty batch");
+        pipe.shutdown();
+    }
+
+    #[test]
+    fn spawn_rejects_mismatched_plan() {
+        let model = StageModel::new(4, 4, 1);
+        let short = StagePlan {
+            ranges: vec![(0, 2)],
+        };
+        let (done_tx, _rx) = mpsc::channel();
+        assert!(StagePipeline::spawn(0, Arc::new(model), &short, None, done_tx).is_err());
+    }
+}

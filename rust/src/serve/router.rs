@@ -1,0 +1,303 @@
+//! Load-adaptive request routing across data-parallel replicas.
+//!
+//! Training rebalances by *resizing* per-device batch shares; serving
+//! cannot resize a request, so the same signal steers *where whole
+//! micro-batches go*. The [`Router`] reuses the guarded
+//! [`AdaptiveController`] unchanged: observed per-sample service times
+//! feed `record`, and the controller's allocation over a nominal
+//! 100-sample batch is reinterpreted as a **traffic-share table**
+//! (percent of batches each replica should receive). All the training
+//! guards carry over for free — EMA smoothing, cooldown, hysteresis,
+//! and the freshness rule that refuses to rescore on stale data.
+//!
+//! Dispatch picks the replica maximizing `share / (1 + outstanding)` —
+//! proportional steering with a least-outstanding correction, so a
+//! replica that stops completing work stops attracting new work even
+//! between rebalances.
+//!
+//! Two serving-specific rules:
+//!
+//! * **probe guarantee** — the freshness guard needs an observation
+//!   from *every* replica, but a replica the router has steered away
+//!   from produces none; left alone this deadlocks adaptation (one
+//!   starved replica blocks every future rebalance). Any replica not
+//!   routed to within `world * adapt_every` batches gets the next
+//!   batch as a probe.
+//! * **staleness of in-flight work** — routing is consulted only at
+//!   dispatch. A batch in flight is never re-routed by a rebalance;
+//!   re-convergence happens purely through where *new* batches go.
+
+use crate::sched::{AdaptiveController, ControllerConfig, RebalanceEvent};
+use crate::Result;
+
+/// Nominal batch the controller's allocation is computed over; shares
+/// are therefore percentages of offered traffic.
+const ROUTE_SHARE_TOTAL: usize = 100;
+
+/// How new micro-batches are spread across replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Static round-robin (the baseline the bench gates against).
+    RoundRobin,
+    /// Guarded adaptive steering via [`AdaptiveController`].
+    Adaptive,
+}
+
+impl RoutePolicy {
+    pub fn parse(text: &str) -> Result<RoutePolicy> {
+        match text.trim() {
+            "rr" | "round-robin" | "static" => Ok(RoutePolicy::RoundRobin),
+            "adaptive" => Ok(RoutePolicy::Adaptive),
+            other => anyhow::bail!("unknown route policy {other:?} (round-robin|adaptive)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// Per-batch replica chooser; see the module docs for the policy.
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    world: usize,
+    controller: Option<AdaptiveController>,
+    adapt_every: usize,
+    /// Batches dispatched but not yet completed, per replica.
+    outstanding: Vec<usize>,
+    /// Batch index at which each replica was last dispatched to.
+    last_routed: Vec<u64>,
+    /// Total batches dispatched per replica (report).
+    dispatched: Vec<usize>,
+    batches: u64,
+    probe_every: u64,
+}
+
+impl Router {
+    /// A router over `initial_scores.len()` replicas. `initial_scores`
+    /// seed the traffic shares (offline benchmark scores, as in
+    /// training); `adapt_every` is the rebalance cadence in batches.
+    pub fn new(
+        policy: RoutePolicy,
+        initial_scores: &[f64],
+        cfg: ControllerConfig,
+        adapt_every: usize,
+    ) -> Result<Router> {
+        let world = initial_scores.len();
+        anyhow::ensure!(world >= 1, "router needs at least one replica");
+        anyhow::ensure!(
+            world <= ROUTE_SHARE_TOTAL,
+            "router supports at most {ROUTE_SHARE_TOTAL} replicas, got {world}"
+        );
+        let adapt_every = adapt_every.max(1);
+        let controller = match policy {
+            RoutePolicy::RoundRobin => None,
+            RoutePolicy::Adaptive => Some(AdaptiveController::new(
+                cfg,
+                initial_scores,
+                ROUTE_SHARE_TOTAL,
+                ROUTE_SHARE_TOTAL,
+            )?),
+        };
+        Ok(Router {
+            policy,
+            world,
+            controller,
+            adapt_every,
+            outstanding: vec![0; world],
+            last_routed: vec![0; world],
+            dispatched: vec![0; world],
+            batches: 0,
+            probe_every: (world * adapt_every) as u64,
+        })
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// Current traffic shares (percent per replica); uniform for
+    /// round-robin.
+    pub fn shares(&self) -> Vec<usize> {
+        match &self.controller {
+            Some(c) => c.allocation().to_vec(),
+            None => vec![ROUTE_SHARE_TOTAL / self.world; self.world],
+        }
+    }
+
+    /// Batches dispatched to each replica so far.
+    pub fn dispatched(&self) -> &[usize] {
+        &self.dispatched
+    }
+
+    /// Pick the replica for the next micro-batch and record the
+    /// dispatch. Never re-routes in-flight work: the choice is made
+    /// once, here.
+    pub fn route(&mut self) -> usize {
+        let r = match (&self.policy, &self.controller) {
+            (RoutePolicy::RoundRobin, _) | (_, None) => (self.batches % self.world as u64) as usize,
+            (RoutePolicy::Adaptive, Some(ctl)) => {
+                // Probe guarantee: never let a replica starve out of the
+                // freshness window (see module docs).
+                let starved = (0..self.world)
+                    .filter(|&r| self.batches.saturating_sub(self.last_routed[r]) >= self.probe_every)
+                    .min_by_key(|&r| self.last_routed[r]);
+                starved.unwrap_or_else(|| {
+                    let alloc = ctl.allocation();
+                    let mut best = 0;
+                    let mut best_w = f64::MIN;
+                    for r in 0..self.world {
+                        let w = alloc[r] as f64 / (1.0 + self.outstanding[r] as f64);
+                        if w > best_w {
+                            best_w = w;
+                            best = r;
+                        }
+                    }
+                    best
+                })
+            }
+        };
+        self.outstanding[r] += 1;
+        self.last_routed[r] = self.batches;
+        self.dispatched[r] += 1;
+        self.batches += 1;
+        r
+    }
+
+    /// Report a completed batch: replica `rank` served `step` (its
+    /// dispatch sequence number) at `per_sample_s` observed seconds per
+    /// request. Feeds the controller and, on the `adapt_every` cadence,
+    /// lets a guarded rebalance land. Returns `true` when the traffic
+    /// shares changed.
+    pub fn on_complete(&mut self, rank: usize, step: usize, per_sample_s: f64) -> Result<bool> {
+        assert!(rank < self.world, "rank {rank} out of range");
+        self.outstanding[rank] = self.outstanding[rank].saturating_sub(1);
+        let Some(ctl) = &mut self.controller else {
+            return Ok(false);
+        };
+        ctl.record(rank, step, per_sample_s);
+        if (step + 1) % self.adapt_every == 0 {
+            return Ok(ctl.maybe_rebalance(step)?.is_some());
+        }
+        Ok(false)
+    }
+
+    /// Rebalance events applied so far (empty for round-robin).
+    pub fn events(&self) -> &[RebalanceEvent] {
+        self.controller.as_ref().map_or(&[], |c| c.events())
+    }
+
+    /// Drain the applied rebalance events (for the report).
+    pub fn take_events(&mut self) -> Vec<RebalanceEvent> {
+        self.controller
+            .as_mut()
+            .map_or_else(Vec::new, |c| c.take_events())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_and_names() {
+        assert_eq!(RoutePolicy::parse("rr").unwrap(), RoutePolicy::RoundRobin);
+        assert_eq!(
+            RoutePolicy::parse(" round-robin ").unwrap(),
+            RoutePolicy::RoundRobin
+        );
+        assert_eq!(RoutePolicy::parse("adaptive").unwrap(), RoutePolicy::Adaptive);
+        assert!(RoutePolicy::parse("random").is_err());
+        assert_eq!(RoutePolicy::Adaptive.name(), "adaptive");
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(
+            RoutePolicy::RoundRobin,
+            &[1.0, 1.0, 1.0],
+            ControllerConfig::default(),
+            5,
+        )
+        .unwrap();
+        let picks: Vec<usize> = (0..6).map(|_| r.route()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        assert!(!r.on_complete(0, 0, 1e-3).unwrap());
+        assert!(r.events().is_empty());
+    }
+
+    #[test]
+    fn adaptive_prefers_high_share_low_outstanding() {
+        let mut r = Router::new(
+            RoutePolicy::Adaptive,
+            &[1.0, 1.0],
+            ControllerConfig::default(),
+            5,
+        )
+        .unwrap();
+        // Equal shares: first pick is replica 0, and with it loaded the
+        // next pick must move to replica 1.
+        assert_eq!(r.route(), 0);
+        assert_eq!(r.route(), 1);
+        // Complete 1's batch only: 1 is now strictly less loaded.
+        r.on_complete(1, 1, 1e-3).unwrap();
+        assert_eq!(r.route(), 1);
+    }
+
+    #[test]
+    fn adaptive_rebalances_toward_fast_replica() {
+        let cfg = ControllerConfig {
+            cooldown_steps: 4,
+            freshness_steps: 50,
+            shift_cap: 0,
+            ..ControllerConfig::default()
+        };
+        let mut r = Router::new(RoutePolicy::Adaptive, &[1.0, 1.0], cfg, 2).unwrap();
+        let before = r.shares();
+        let mut changed = false;
+        // Replica 0 reports 3x the service time of replica 1.
+        for step in 0..40 {
+            let _ = r.route();
+            changed |= r.on_complete(step % 2, step, if step % 2 == 0 { 3e-3 } else { 1e-3 }).unwrap();
+        }
+        assert!(changed, "drift this large must land a rebalance");
+        let after = r.shares();
+        assert!(
+            after[1] > before[1] && after[0] < before[0],
+            "shares must shift toward the fast replica: {before:?} -> {after:?}"
+        );
+        assert!(!r.events().is_empty());
+        assert!(!r.take_events().is_empty());
+        assert!(r.events().is_empty(), "take_events drains");
+    }
+
+    #[test]
+    fn probe_guarantee_revisits_starved_replica() {
+        let cfg = ControllerConfig {
+            shift_cap: 0,
+            freshness_steps: 1000,
+            ..ControllerConfig::default()
+        };
+        let mut r = Router::new(RoutePolicy::Adaptive, &[1.0, 0.02], cfg, 2).unwrap();
+        // Replica 1's share collapses to min_share; without probing it
+        // would rarely be routed to once replica 0 keeps completing.
+        let mut saw_probe = false;
+        for step in 0..30 {
+            let pick = r.route();
+            r.on_complete(pick, step, 1e-3).unwrap();
+            if pick == 1 {
+                saw_probe = true;
+            }
+        }
+        assert!(saw_probe, "starved replica must still be probed");
+        assert!(r.dispatched()[1] >= 2, "probed at least every world*adapt_every");
+    }
+}

@@ -14,14 +14,19 @@
 //! [`ps`] prices the bounded-staleness parameter-server protocol: the
 //! per-step barrier is replaced by a staleness gate, so straggler time
 //! is absorbed as bounded run-ahead instead of cluster-wide idling.
+//! [`serve`] prices the inference workload: open-loop arrivals through
+//! the real micro-batcher and router against modeled replica service
+//! times, for the SLO-latency bench gates.
 
 pub mod dynamic;
 pub mod elastic;
 pub mod ps;
+pub mod serve;
 
 pub use dynamic::{simulate_dynamic, DynamicSimConfig, DynamicSimReport};
 pub use elastic::{simulate_elastic, ElasticSimConfig, ElasticSimReport, SimRecovery};
 pub use ps::{simulate_ps, PsSimConfig, PsSimReport};
+pub use serve::{simulate_serve, ServeSimConfig, ServeSimReport};
 
 use crate::device::{parse_cluster, DeviceSpec};
 use crate::group::GroupMode;

@@ -1,0 +1,376 @@
+//! Virtual-time serving simulator: the bench arm behind
+//! `benches/serving.rs`.
+//!
+//! Replays the *same* front-end logic as the real-time server — the
+//! [`MicroBatcher`] and [`Router`] are the production structs, not
+//! models of them — against modeled replica service times
+//! ([`SpeedModel::step_time_loaded`]) in an event-driven virtual
+//! clock, so a 4000-request experiment under a perturbation scenario
+//! prices in milliseconds of wall time. Three event sources drive the
+//! clock: request arrivals (open loop), batching-budget expiries, and
+//! batch completions; each replica is a FIFO server whose per-batch
+//! service time consults the device's (possibly perturbed) load
+//! profile at its per-replica service count.
+//!
+//! One idealization: replica compute is modeled as a single server per
+//! replica rather than a staged pipeline — the pipeline's stage
+//! overlap changes *throughput per replica*, not the routing dynamics
+//! this arm prices (the real stage overlap is exercised by
+//! `serve::pipeline` and its parity tests).
+//!
+//! Routing observations feed the controller at *completion* events
+//! (carrying their dispatch step), so adaptation sees exactly the
+//! signal a real front-end would: queue-inflated service times,
+//! arriving late.
+
+use std::collections::BTreeMap;
+
+use crate::device::{cluster_name, parse_cluster, Scenario, SpeedModel};
+use crate::sched::{ControllerConfig, RebalanceEvent};
+use crate::serve::{percentile, MicroBatcher, OpenLoopStream, RoutePolicy, Router, ServeOptions};
+use crate::util::json::Json;
+use crate::Result;
+
+/// One virtual-time serving experiment.
+#[derive(Debug, Clone)]
+pub struct ServeSimConfig {
+    pub cluster: String,
+    pub scenario: Scenario,
+    pub policy: RoutePolicy,
+    pub slo_ms: f64,
+    pub max_batch: usize,
+    /// Offered load, requests/second (open loop).
+    pub rps: f64,
+    pub requests: usize,
+    pub seed: u64,
+    /// Rebalance cadence in batches (adaptive policy).
+    pub adapt_every: usize,
+    pub controller: ControllerConfig,
+}
+
+impl ServeSimConfig {
+    /// The serving experiment shape the bench gates run: a 2G+2M-class
+    /// cluster near ~55% utilization at `max_batch`, tight 25 ms SLO,
+    /// 4000 requests — long enough for the step-change and
+    /// thermal-drift scenarios to bite and for routing to re-converge.
+    pub fn paper_serving(cluster: &str, scenario: Scenario, policy: RoutePolicy) -> Self {
+        Self {
+            cluster: cluster.into(),
+            scenario,
+            policy,
+            slo_ms: 25.0,
+            max_batch: 8,
+            rps: 6000.0,
+            requests: 4000,
+            seed: 42,
+            adapt_every: 5,
+            controller: ServeOptions::serving_controller(),
+        }
+    }
+}
+
+/// Virtual-time serving outcome.
+#[derive(Debug, Clone)]
+pub struct ServeSimReport {
+    pub cluster: String,
+    pub policy: String,
+    pub scenario: String,
+    pub requests: usize,
+    /// Virtual time at which the last batch completed.
+    pub horizon_s: f64,
+    pub throughput_rps: f64,
+    /// Requests completed within their SLO, per second.
+    pub goodput_rps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub violation_rate: f64,
+    /// Per-replica busy fraction of the horizon.
+    pub utilization: Vec<f64>,
+    /// batch size -> batches formed at that size.
+    pub batch_hist: BTreeMap<usize, usize>,
+    /// Replica chosen for each batch, in dispatch order (the routing
+    /// re-convergence tests read this).
+    pub dispatch_replicas: Vec<usize>,
+    /// Final traffic shares (percent per replica).
+    pub shares: Vec<usize>,
+    pub events: Vec<RebalanceEvent>,
+}
+
+impl ServeSimReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cluster", Json::str(self.cluster.clone())),
+            ("policy", Json::str(self.policy.clone())),
+            ("scenario", Json::str(self.scenario.clone())),
+            ("requests", Json::num(self.requests as f64)),
+            ("horizon_s", Json::num(self.horizon_s)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("goodput_rps", Json::num(self.goodput_rps)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("violation_rate", Json::num(self.violation_rate)),
+            (
+                "utilization",
+                Json::arr(self.utilization.iter().map(|u| Json::num(*u)).collect()),
+            ),
+            (
+                "batch_hist",
+                Json::Obj(
+                    self.batch_hist
+                        .iter()
+                        .map(|(k, v)| (k.to_string(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "shares",
+                Json::arr(self.shares.iter().map(|s| Json::num(*s as f64)).collect()),
+            ),
+            ("rebalances", Json::num(self.events.len() as f64)),
+            (
+                "events",
+                Json::arr(self.events.iter().map(|e| e.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Run one virtual-time serving experiment.
+pub fn simulate_serve(cfg: &ServeSimConfig) -> Result<ServeSimReport> {
+    let mut devices = parse_cluster(&cfg.cluster)?;
+    cfg.scenario.apply(&mut devices)?;
+    let world = devices.len();
+    let speed = SpeedModel::paper_default();
+    let slo_s = cfg.slo_ms * 1e-3;
+
+    // Offline-benchmark scores seed the router, as in training.
+    let times: Vec<f64> = devices
+        .iter()
+        .map(|d| speed.step_time(d.dtype, cfg.max_batch))
+        .collect();
+    let t_best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let scores: Vec<f64> = times.iter().map(|t| t_best / t).collect();
+    let mut router = Router::new(cfg.policy, &scores, cfg.controller.clone(), cfg.adapt_every)?;
+
+    let worst = times.iter().cloned().fold(0.0, f64::max);
+    let mut service_est = worst;
+    let mut batcher = MicroBatcher::new(cfg.max_batch, (slo_s - worst).max(0.0));
+
+    let mut stream = OpenLoopStream::new(cfg.rps, slo_s, cfg.seed);
+    let mut produced = 0usize;
+    let mut pending = if cfg.requests > 0 {
+        produced = 1;
+        stream.next()
+    } else {
+        None
+    };
+
+    /// A dispatched batch waiting out its modeled service.
+    struct InFlight {
+        done_s: f64,
+        replica: usize,
+        /// Global dispatch step (the controller's step axis).
+        step: usize,
+        /// Queue-inflated seconds per request, observed at completion.
+        per_sample_s: f64,
+    }
+
+    let mut inflight: Vec<InFlight> = Vec::new();
+    let mut free_at = vec![0.0_f64; world];
+    let mut busy = vec![0.0_f64; world];
+    // Per-replica service count: the perturbation step axis.
+    let mut served = vec![0_usize; world];
+    let mut global_step = 0usize;
+    let mut latencies: Vec<f64> = Vec::with_capacity(cfg.requests);
+    let mut violations = 0usize;
+    let mut batch_hist: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut dispatch_replicas: Vec<usize> = Vec::new();
+    let mut horizon = 0.0_f64;
+    let mut now = 0.0_f64;
+
+    loop {
+        // Next event: arrival, budget expiry, or completion.
+        let mut next = f64::INFINITY;
+        if let Some(r) = &pending {
+            next = next.min(r.arrival_s);
+        }
+        if let Some(d) = batcher.close_deadline() {
+            next = next.min(d);
+        }
+        for fl in &inflight {
+            next = next.min(fl.done_s);
+        }
+        if !next.is_finite() {
+            break;
+        }
+        now = now.max(next);
+
+        // 1. Completions feed the router (observations carry their
+        //    dispatch step) and retune the batching budget.
+        let mut due: Vec<InFlight> = Vec::new();
+        let mut i = 0;
+        while i < inflight.len() {
+            if inflight[i].done_s <= now + 1e-12 {
+                due.push(inflight.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        due.sort_by(|a, b| a.done_s.partial_cmp(&b.done_s).expect("finite times"));
+        for fl in due {
+            router.on_complete(fl.replica, fl.step, fl.per_sample_s)?;
+            service_est = 0.7 * service_est + 0.3 * fl.per_sample_s * cfg.max_batch as f64;
+            batcher.set_budget((slo_s - service_est).max(0.0));
+        }
+
+        // 2. Admit due arrivals.
+        while pending.is_some_and(|r| r.arrival_s <= now) {
+            batcher.push(pending.take().expect("just checked"));
+            pending = if produced < cfg.requests {
+                produced += 1;
+                stream.next()
+            } else {
+                None
+            };
+        }
+
+        // 3. Form and dispatch micro-batches.
+        while let Some(b) = batcher.poll(now) {
+            let r = router.route();
+            let n = b.len();
+            dispatch_replicas.push(r);
+            *batch_hist.entry(n).or_insert(0) += 1;
+            let start = now.max(free_at[r]);
+            let service = speed.step_time_loaded(&devices[r], n, served[r]);
+            let done = start + service;
+            free_at[r] = done;
+            busy[r] += service;
+            served[r] += 1;
+            horizon = horizon.max(done);
+            for req in &b.requests {
+                latencies.push(done - req.arrival_s);
+                if done > req.deadline_s {
+                    violations += 1;
+                }
+            }
+            inflight.push(InFlight {
+                done_s: done,
+                replica: r,
+                step: global_step,
+                per_sample_s: (done - b.formed_s) / n as f64,
+            });
+            global_step += 1;
+        }
+    }
+
+    let completed = latencies.len();
+    anyhow::ensure!(
+        completed == cfg.requests,
+        "simulator lost requests: {completed} of {}",
+        cfg.requests
+    );
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let horizon_s = horizon.max(f64::MIN_POSITIVE);
+    let mean_s = latencies.iter().sum::<f64>() / completed.max(1) as f64;
+    Ok(ServeSimReport {
+        cluster: cluster_name(&devices),
+        policy: router.policy().name().to_string(),
+        scenario: cfg.scenario.name.clone(),
+        requests: cfg.requests,
+        horizon_s,
+        throughput_rps: completed as f64 / horizon_s,
+        goodput_rps: (completed - violations) as f64 / horizon_s,
+        p50_ms: percentile(&latencies, 0.50) * 1e3,
+        p99_ms: percentile(&latencies, 0.99) * 1e3,
+        mean_ms: mean_s * 1e3,
+        violation_rate: violations as f64 / completed.max(1) as f64,
+        utilization: busy.iter().map(|b| b / horizon_s).collect(),
+        batch_hist,
+        dispatch_replicas,
+        shares: router.shares(),
+        events: router.take_events(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(scenario: &str, policy: RoutePolicy) -> ServeSimReport {
+        let cfg = ServeSimConfig::paper_serving(
+            "2G+2M",
+            Scenario::named(scenario).unwrap(),
+            policy,
+        );
+        simulate_serve(&cfg).unwrap()
+    }
+
+    #[test]
+    fn unperturbed_cluster_meets_slo_under_both_policies() {
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::Adaptive] {
+            let r = run("none", policy);
+            assert_eq!(r.requests, 4000);
+            assert!(
+                r.violation_rate < 0.05,
+                "{}: violation rate {} on an unperturbed cluster",
+                r.policy,
+                r.violation_rate
+            );
+            assert!(r.p99_ms < 2.0 * 25.0, "{}: p99 {}", r.policy, r.p99_ms);
+            assert!(r.utilization.iter().all(|&u| u > 0.05 && u <= 1.0));
+        }
+    }
+
+    #[test]
+    fn simulation_is_deterministic() {
+        let a = run("step-change", RoutePolicy::Adaptive);
+        let b = run("step-change", RoutePolicy::Adaptive);
+        assert_eq!(a.p99_ms, b.p99_ms);
+        assert_eq!(a.dispatch_replicas, b.dispatch_replicas);
+        assert_eq!(a.events.len(), b.events.len());
+    }
+
+    #[test]
+    fn step_change_adaptive_beats_round_robin_p99() {
+        let rr = run("step-change", RoutePolicy::RoundRobin);
+        let ad = run("step-change", RoutePolicy::Adaptive);
+        assert!(
+            ad.p99_ms <= 0.8 * rr.p99_ms,
+            "adaptive p99 {} vs rr {}",
+            ad.p99_ms,
+            rr.p99_ms
+        );
+        assert!(!ad.events.is_empty(), "the perturbation must trigger rebalances");
+        assert!(rr.events.is_empty());
+    }
+
+    #[test]
+    fn routing_reconverges_after_perturbation() {
+        let r = run("step-change", RoutePolicy::Adaptive);
+        let first = r.events.first().expect("at least one rebalance").step;
+        let pre: Vec<usize> = r.dispatch_replicas[..first].to_vec();
+        let post: Vec<usize> = r.dispatch_replicas[first..].to_vec();
+        let share = |xs: &[usize]| {
+            xs.iter().filter(|&&x| x == 0).count() as f64 / xs.len().max(1) as f64
+        };
+        assert!(
+            share(&post) < share(&pre),
+            "perturbed replica 0 must receive less traffic after the rebalance: \
+             pre {:.3} post {:.3}",
+            share(&pre),
+            share(&post)
+        );
+        // The perturbed replica keeps being probed (never fully starved).
+        assert!(post.contains(&0), "probe guarantee keeps replica 0 observed");
+    }
+
+    #[test]
+    fn batches_respect_max_batch() {
+        let r = run("thermal-drift", RoutePolicy::Adaptive);
+        assert!(r.batch_hist.keys().all(|&n| (1..=8).contains(&n)));
+        let total: usize = r.batch_hist.iter().map(|(n, c)| n * c).sum();
+        assert_eq!(total, 4000, "every request batched exactly once");
+    }
+}
