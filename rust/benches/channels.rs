@@ -1,0 +1,141 @@
+//! Bench: multi-channel striped TCP transport (ISSUE 10 tentpole).
+//!
+//! A single TCP connection per peer caps inter-group throughput at what
+//! one writer/reader thread pair (and one kernel socket buffer) can
+//! move. With `KAITIAN_CHANNELS=N` the endpoint opens N parallel
+//! connections per peer and the chunked data plane stripes an op's
+//! frames round-robin across them by sub-tag, so large all-reduces
+//! saturate the link with N concurrent streams.
+//!
+//! This bench times a 4 MiB f32 ring all-reduce over a 4-rank TCP
+//! loopback mesh at 1, 2, and 4 channels per peer.
+//!
+//! Acceptance gate (ISSUE 10): 4 channels must deliver >= 1.3x the
+//! 1-channel throughput (best of several trials), and the result buffer
+//! must stay *bit-identical* across channel counts.
+//!
+//! Run: `cargo bench --bench channels [-- --quick]`
+//! (`--quick` shrinks trials and skips the timing gate — parity is
+//! always asserted.)
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use kaitian::collectives::chunk::CHUNK_TAG_BITS;
+use kaitian::collectives::ring::ring_all_reduce_chunked;
+use kaitian::collectives::ReduceOp;
+use kaitian::metrics::MarkdownTable;
+use kaitian::transport::{TcpMesh, Transport};
+use kaitian::util::json::Json;
+
+const WORLD: usize = 4;
+const ELEMS: usize = 1 << 20; // 4 MiB of f32 per rank
+const CHUNK_BYTES: usize = 256 << 10;
+
+/// Straggler seconds/op over `iters` chunked ring all-reduces on a
+/// fresh `nch`-channel mesh, plus rank 0's final buffer bit pattern
+/// (deterministic for fixed `iters`, so it doubles as the parity
+/// signature across channel counts).
+fn trial(nch: usize, iters: usize) -> kaitian::Result<(f64, Vec<u32>)> {
+    let eps = TcpMesh::loopback_with(WORLD, None, nch)?;
+    let results: Vec<(f64, Vec<f32>)> = std::thread::scope(|s| {
+        let hs: Vec<_> = eps
+            .iter()
+            .map(|ep| {
+                s.spawn(move || {
+                    let mut buf: Vec<f32> = (0..ELEMS)
+                        .map(|i| (i % 251) as f32 * 0.1253 + (ep.rank() + 1) as f32 * 0.071)
+                        .collect();
+                    // Warmup op: fills buffer pools and socket windows.
+                    let warm_tag = 1_u64 << CHUNK_TAG_BITS;
+                    ring_all_reduce_chunked(ep, &mut buf, ReduceOp::Sum, warm_tag, CHUNK_BYTES)
+                        .unwrap();
+                    let t0 = Instant::now();
+                    for k in 0..iters {
+                        let tag = ((k + 2) as u64) << CHUNK_TAG_BITS;
+                        ring_all_reduce_chunked(ep, &mut buf, ReduceOp::Sum, tag, CHUNK_BYTES)
+                            .unwrap();
+                    }
+                    (t0.elapsed().as_secs_f64() / iters as f64, buf)
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = results.iter().map(|r| r.0).fold(0.0, f64::max);
+    let sig = results[0].1.iter().map(|x| x.to_bits()).collect();
+    Ok((wall, sig))
+}
+
+fn main() -> kaitian::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let iters = if quick { 2 } else { 6 };
+    let trials = if quick { 1 } else { 3 };
+    // Ring all-reduce moves 2*(w-1)/w of the payload per rank each way.
+    let wire_bytes = 2.0 * (WORLD - 1) as f64 / WORLD as f64 * (ELEMS * 4) as f64;
+
+    let mut table = MarkdownTable::new(&["channels", "s/op", "wire GB/s/rank", "vs 1ch"]);
+    let mut json = BTreeMap::new();
+    let mut base_s = f64::NAN;
+    let mut base_sig: Vec<u32> = Vec::new();
+    let mut speedup4 = f64::NAN;
+
+    for nch in [1, 2, 4] {
+        let mut best = f64::INFINITY;
+        let mut sig = Vec::new();
+        for _ in 0..trials {
+            let (s, bits) = trial(nch, iters)?;
+            best = best.min(s);
+            sig = bits;
+        }
+        if nch == 1 {
+            base_s = best;
+            base_sig = sig;
+        } else {
+            assert_eq!(
+                base_sig, sig,
+                "{nch}-channel all-reduce result diverged bitwise from 1-channel"
+            );
+        }
+        let speedup = base_s / best;
+        if nch == 4 {
+            speedup4 = speedup;
+        }
+        let gbps = wire_bytes / best / 1e9;
+        table.row(vec![
+            nch.to_string(),
+            kaitian::util::fmt_secs(best),
+            format!("{gbps:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+        json.insert(
+            format!("tcp{WORLD}_{nch}ch"),
+            Json::obj(vec![
+                ("channels", Json::num(nch as f64)),
+                ("bytes", Json::num((ELEMS * 4) as f64)),
+                ("s_per_op", Json::num(best)),
+                ("wire_gbps_per_rank", Json::num(gbps)),
+                ("speedup_vs_1ch", Json::num(speedup)),
+                ("bitwise_parity", Json::Bool(true)),
+            ]),
+        );
+    }
+
+    println!("== multi-channel striped TCP all-reduce (w={WORLD}, 4 MiB f32) ==\n");
+    println!("{}", table.render());
+
+    // Acceptance gate (ISSUE 10): striping across 4 channels must buy
+    // >= 1.3x over the single-socket wire at >= 4 MiB payloads. Skipped
+    // under --quick (too few iters for a stable timing assert).
+    if !quick {
+        assert!(
+            speedup4 >= 1.3,
+            "4-channel all-reduce must deliver >= 1.3x the 1-channel throughput \
+             (1ch {base_s:.3e}s/op, 4ch speedup {speedup4:.2}x)"
+        );
+    }
+
+    let path = kaitian::metrics::write_report("results", "channels", json)?;
+    println!("wrote {path}");
+    Ok(())
+}

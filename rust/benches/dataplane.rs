@@ -362,34 +362,48 @@ fn main() -> kaitian::Result<()> {
     }
 
     // --- specialized Sum wire-fold vs generic per-element apply ------
-    // One 4 MiB accumulator folded repeatedly from wire bytes; the
-    // specialized loop must not be slower than the dispatching baseline
-    // (in practice it vectorizes and wins; only report, don't gate on
-    // CI timing).
+    // One 4 MiB accumulator folded repeatedly from wire bytes. Since
+    // ISSUE 10 the specialized path reinterprets aligned wire bytes as
+    // f32 lanes and folds 8-wide (`fold_wide`), so it is gated: >= 1.5x
+    // over the dispatching baseline on >= 1 MiB folds (best of several
+    // trials — single-shot timing is too noisy for a hard assert on
+    // shared CI runners).
     {
         let n = 1 << 20; // 4 MiB of f32
         let fold_iters = if quick { 10 } else { 40 };
+        let trials = if quick { 2 } else { 3 };
         let incoming: Vec<f32> = (0..n).map(|i| (i % 97) as f32 * 0.25).collect();
         let wire = kaitian::transport::f32s_to_bytes(&incoming);
-        let mut acc = vec![1.0_f32; n];
-        let t0 = std::time::Instant::now();
-        for _ in 0..fold_iters {
-            ReduceOp::Sum.fold_bytes_via_apply(&mut acc, &wire).unwrap();
+        let (mut generic_s, mut specialized_s) = (f64::INFINITY, f64::INFINITY);
+        for _ in 0..trials {
+            let mut acc = vec![1.0_f32; n];
+            let t0 = std::time::Instant::now();
+            for _ in 0..fold_iters {
+                ReduceOp::Sum.fold_bytes_via_apply(&mut acc, &wire).unwrap();
+            }
+            generic_s = generic_s.min(t0.elapsed().as_secs_f64() / fold_iters as f64);
+            std::hint::black_box(&acc);
+            let mut acc2 = vec![1.0_f32; n];
+            let t1 = std::time::Instant::now();
+            for _ in 0..fold_iters {
+                ReduceOp::Sum.fold_bytes(&mut acc2, &wire).unwrap();
+            }
+            specialized_s = specialized_s.min(t1.elapsed().as_secs_f64() / fold_iters as f64);
+            std::hint::black_box(&acc2);
         }
-        let generic_s = t0.elapsed().as_secs_f64() / fold_iters as f64;
-        std::hint::black_box(&acc);
-        let mut acc2 = vec![1.0_f32; n];
-        let t1 = std::time::Instant::now();
-        for _ in 0..fold_iters {
-            ReduceOp::Sum.fold_bytes(&mut acc2, &wire).unwrap();
-        }
-        let specialized_s = t1.elapsed().as_secs_f64() / fold_iters as f64;
-        std::hint::black_box(&acc2);
         let speedup = generic_s / specialized_s.max(1e-12);
         println!(
             "fold_sum (4 MiB): generic {}/op, specialized {}/op ({speedup:.2}x)\n",
             kaitian::util::fmt_secs(generic_s),
             kaitian::util::fmt_secs(specialized_s),
+        );
+        // Acceptance gate (ISSUE 10): the wide fold kernel must deliver
+        // >= 1.5x the per-element apply dispatch at 4 MiB.
+        assert!(
+            speedup >= 1.5,
+            "fold_sum 4 MiB: wide fold must run >= 1.5x the scalar apply baseline \
+             (generic {generic_s:.2e}s/op -> specialized {specialized_s:.2e}s/op, \
+             {speedup:.2}x)"
         );
         json.insert(
             "fold_sum".to_string(),

@@ -238,6 +238,10 @@ const PROBE_TAG: u64 = 1 << 61;
 /// Tag of the post-probe agreement all-reduce (low 16 bits free for its
 /// chunk sub-tags; bit 32 keeps it clear of the ping-pong tags).
 const PROBE_AGREE_TAG: u64 = PROBE_TAG | (1 << 32);
+/// Tag namespace of the striped (multi-channel) big rounds — bit 33
+/// keeps it clear of both the plain ping-pong tags and the agreement
+/// all-reduce.
+const PROBE_STRIPE_TAG: u64 = PROBE_TAG | (1 << 33);
 const PROBE_SMALL_ROUNDS: u64 = 6;
 const PROBE_BIG_ROUNDS: u64 = 3;
 const PROBE_BIG_BYTES: usize = 256 << 10;
@@ -256,12 +260,42 @@ fn probe_round(t: &dyn Transport, payload: &[u8], base: u64) -> Result<f64> {
     Ok(t0.elapsed().as_secs_f64())
 }
 
+/// One striped ping-pong round (ISSUE 10): the payload crosses each hop
+/// as `nch` frames, one per transport channel, so the measured round
+/// trip reflects the link's aggregate multi-channel bandwidth. Lane
+/// tags stay below 32 and the return leg uses `base | 32 | lane`, both
+/// well inside the low-16-bit sub-tag space of `base`.
+fn probe_round_striped(t: &dyn Transport, payload: &[u8], base: u64, nch: usize) -> Result<f64> {
+    let (rank, w) = (t.rank(), t.world());
+    let next = (rank + 1) % w;
+    let prev = (rank + w - 1) % w;
+    let part = payload.len().div_ceil(nch);
+    let t0 = Instant::now();
+    for l in 0..nch {
+        let lo = (l * part).min(payload.len());
+        let hi = ((l + 1) * part).min(payload.len());
+        t.send_on(next, base | l as u64, Buf::copy_from_slice(&payload[lo..hi]), l)?;
+    }
+    let mut back = Vec::with_capacity(nch);
+    for l in 0..nch {
+        back.push(t.recv(prev, base | l as u64)?);
+    }
+    for (l, b) in back.into_iter().enumerate() {
+        t.send_on(prev, base | 32 | l as u64, b, l)?;
+    }
+    for l in 0..nch {
+        t.recv(next, base | 32 | l as u64)?;
+    }
+    Ok(t0.elapsed().as_secs_f64())
+}
+
 /// One-shot α–β microprobe over the live transport. Every rank measures
 /// ping-pong round trips with its ring neighbor (min over rounds, the
-/// robust latency estimator), then one ring all-reduce averages
-/// `[α, 1/β]` across ranks — the reduced bytes are identical on every
-/// rank, so the derived tuning table (and with it every later
-/// algorithm selection) is identical too.
+/// robust latency estimator) — plus striped big rounds when the
+/// transport runs multiple channels — then one ring all-reduce averages
+/// `[α, 1/β, 1/β_striped]` across ranks: the reduced bytes are
+/// identical on every rank, so the derived tuning table (and with it
+/// every later algorithm selection) is identical too.
 pub fn microprobe(t: &dyn Transport) -> Result<AlphaBeta> {
     let w = t.world();
     if w <= 1 {
@@ -284,20 +318,39 @@ pub fn microprobe(t: &dyn Transport) -> Result<AlphaBeta> {
             best_big = best_big.min(rtt);
         }
     }
+    // Striped big rounds: the same payload split over every channel.
+    // The channel count is SPMD-consistent by construction (the TCP
+    // handshake hard-errors on a mismatch), so every rank takes this
+    // branch together. One channel → aggregate β = single-stream β.
+    let nch = t.channels();
+    let mut best_striped = best_big;
+    if nch > 1 {
+        best_striped = f64::MAX;
+        for k in 0..PROBE_BIG_ROUNDS {
+            let rtt = probe_round_striped(t, &big, PROBE_STRIPE_TAG | (k << 16), nch)?;
+            if k >= 1 {
+                best_striped = best_striped.min(rtt);
+            }
+        }
+    }
     // A round trip crosses two hops; the large round pays ~2α + 2n/β.
     let alpha = best_small / 2.0;
     let one_way_big = (best_big / 2.0 - alpha).max(1e-9);
     let bw = PROBE_BIG_BYTES as f64 / one_way_big;
+    let one_way_striped = (best_striped / 2.0 - alpha).max(1e-9);
+    let striped_bw = PROBE_BIG_BYTES as f64 / one_way_striped;
 
     // Agreement: average the per-rank estimates with a deterministic
     // ring all-reduce (all ranks end with bit-identical sums).
-    let mut vals = [alpha as f32, (1.0 / bw) as f32];
+    let mut vals = [alpha as f32, (1.0 / bw) as f32, (1.0 / striped_bw) as f32];
     ring::ring_all_reduce_chunked(t, &mut vals, ReduceOp::Sum, PROBE_AGREE_TAG, 1 << 20)?;
     let alpha_mean = vals[0] as f64 / w as f64;
     let inv_bw_mean = (vals[1] as f64 / w as f64).max(1e-13);
+    let inv_striped_mean = (vals[2] as f64 / w as f64).max(1e-13);
     Ok(AlphaBeta {
         alpha_s: alpha_mean,
         bw_bps: 1.0 / inv_bw_mean,
+        striped_bw_bps: 1.0 / inv_striped_mean,
     }
     .clamped())
 }

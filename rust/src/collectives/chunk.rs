@@ -321,6 +321,14 @@ impl PtpTagTable {
 
 /// Send `wire` (bytes of whole `elem_bytes` elements) to `peer` as
 /// chunked frames built in pooled buffers.
+///
+/// Channel striping (ISSUE 10): each frame's lane is its low-16-bit
+/// sub-tag (`tag & (MAX_CHUNKS_PER_OP - 1)`), so consecutive chunks of
+/// one op round-robin across the transport's channels. The lane is a
+/// pure function of the full frame tag — no sender/receiver agreement
+/// protocol is needed because reassembly is tag-addressed in the
+/// mailbox, and FIFO only matters *within* one tag, which always rides
+/// one channel. The eager path ([`send_eager`]) stays on channel 0.
 pub fn send_wire(
     t: &dyn Transport,
     peer: usize,
@@ -346,7 +354,8 @@ pub fn send_wire(
         }
         stats.bytes_sent += part.len() as u64;
         stats.messages += 1;
-        t.send(peer, base + i, frame.freeze())?;
+        let tag = base + i;
+        t.send_on(peer, tag, frame.freeze(), (tag & (MAX_CHUNKS_PER_OP - 1)) as usize)?;
     }
     Ok(())
 }

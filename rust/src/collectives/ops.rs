@@ -27,27 +27,36 @@ pub enum ReduceOp {
     Min,
 }
 
+/// 8-lane-unrolled elementwise fold (ISSUE 10 wide kernel): the
+/// fixed-width inner block gives the optimizer straight-line,
+/// dependency-free lanes to vectorize, so the receive-side fold keeps up
+/// with N striped channels' worth of incoming bytes. Bitwise identical
+/// to the scalar loop — each lane is an independent `f(a, b)` with no
+/// reassociation across elements.
+#[inline]
+fn fold_wide<F: Fn(f32, f32) -> f32>(acc: &mut [f32], incoming: &[f32], f: F) {
+    const LANES: usize = 8;
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut inc = incoming.chunks_exact(LANES);
+    for (a, b) in (&mut ac).zip(&mut inc) {
+        for l in 0..LANES {
+            a[l] = f(a[l], b[l]);
+        }
+    }
+    for (a, b) in ac.into_remainder().iter_mut().zip(inc.remainder()) {
+        *a = f(*a, *b);
+    }
+}
+
 impl ReduceOp {
-    /// Fold `incoming` into `acc` elementwise.
+    /// Fold `incoming` into `acc` elementwise (8-lane wide kernel).
     #[inline]
     pub fn fold(self, acc: &mut [f32], incoming: &[f32]) {
         debug_assert_eq!(acc.len(), incoming.len());
         match self {
-            ReduceOp::Sum => {
-                for (a, b) in acc.iter_mut().zip(incoming) {
-                    *a += *b;
-                }
-            }
-            ReduceOp::Max => {
-                for (a, b) in acc.iter_mut().zip(incoming) {
-                    *a = a.max(*b);
-                }
-            }
-            ReduceOp::Min => {
-                for (a, b) in acc.iter_mut().zip(incoming) {
-                    *a = a.min(*b);
-                }
-            }
+            ReduceOp::Sum => fold_wide(acc, incoming, |a, b| a + b),
+            ReduceOp::Max => fold_wide(acc, incoming, f32::max),
+            ReduceOp::Min => fold_wide(acc, incoming, f32::min),
         }
     }
 
@@ -84,8 +93,13 @@ impl ReduceOp {
 
     /// Fold little-endian f32 wire bytes into `acc` — the zero-copy
     /// receive path: parse-and-fold in one pass, no intermediate vector.
-    /// The operator match is hoisted out of the loop; `Sum` gets its own
-    /// straight-line add loop (the gradient-aggregation hot path).
+    ///
+    /// Fast path (ISSUE 10): on little-endian targets an f32-aligned
+    /// wire buffer *is* an `&[f32]`, so `align_to::<f32>` hands the
+    /// whole fold to the 8-lane wide kernel with zero decode work.
+    /// Misaligned or big-endian buffers take the per-element decode
+    /// loops below (the operator match stays hoisted; `Sum` keeps its
+    /// dedicated loop — the gradient-aggregation hot path).
     pub fn fold_bytes(self, acc: &mut [f32], bytes: &[u8]) -> crate::Result<()> {
         if bytes.len() != acc.len() * 4 {
             anyhow::bail!(
@@ -93,6 +107,17 @@ impl ReduceOp {
                 bytes.len(),
                 acc.len()
             );
+        }
+        #[cfg(target_endian = "little")]
+        {
+            // SAFETY: every bit pattern is a valid f32, and `align_to`
+            // only yields a non-empty middle when the pointer and length
+            // satisfy f32 alignment/size.
+            let (pre, mid, post) = unsafe { bytes.align_to::<f32>() };
+            if pre.is_empty() && post.is_empty() {
+                self.fold(acc, mid);
+                return Ok(());
+            }
         }
         match self {
             ReduceOp::Sum => {
@@ -149,8 +174,14 @@ impl ReduceOp {
         }
         match dtype {
             DType::F32 => {
-                // Native accumulator view would need alignment; decode/
-                // encode per element keeps it valid for any byte buffer.
+                // Wide fast path (ISSUE 10): when both wire buffers are
+                // f32-aligned on a little-endian target, fold them as
+                // native `&[f32]` through the 8-lane kernel.
+                if self.try_fold_wire_f32_wide(acc, incoming) {
+                    return Ok(());
+                }
+                // Decode/encode per element keeps the fold valid for any
+                // byte buffer (misaligned or big-endian).
                 match self {
                     ReduceOp::Sum => {
                         // Specialized hot loop (see `fold_bytes`).
@@ -205,6 +236,36 @@ impl ReduceOp {
             }
         }
         Ok(())
+    }
+
+    /// Attempt the aligned-f32 wide fold for [`ReduceOp::fold_wire`];
+    /// returns `false` (fold not performed) when either buffer is
+    /// misaligned for f32 or the target is big-endian, in which case the
+    /// caller falls back to per-element decode/encode. Lengths were
+    /// validated by the caller.
+    #[inline]
+    fn try_fold_wire_f32_wide(self, acc: &mut [u8], incoming: &[u8]) -> bool {
+        #[cfg(target_endian = "little")]
+        {
+            // SAFETY: every bit pattern is a valid f32; `align_to`
+            // guarantees the middle views are properly aligned and
+            // sized, and the mutable view borrows `acc` exclusively.
+            let (apre, amid, apost) = unsafe { acc.align_to_mut::<f32>() };
+            if !apre.is_empty() || !apost.is_empty() {
+                return false;
+            }
+            let (bpre, bmid, bpost) = unsafe { incoming.align_to::<f32>() };
+            if !bpre.is_empty() || !bpost.is_empty() || bmid.len() != amid.len() {
+                return false;
+            }
+            self.fold(amid, bmid);
+            return true;
+        }
+        #[cfg(target_endian = "big")]
+        {
+            let _ = (acc, incoming);
+            false
+        }
     }
 
     pub fn name(self) -> &'static str {
@@ -315,6 +376,74 @@ mod tests {
         // Wrapping: 200 + 100 = 44 (mod 256) — deterministic under any
         // fold order, which is the property the data plane needs.
         assert_eq!(acc.to_f32(), vec![44.0, 3.0]);
+    }
+
+    #[test]
+    fn wide_fold_matches_scalar_on_all_lengths() {
+        // The 8-lane kernel must be bitwise identical to the scalar
+        // fold across lane-remainder boundaries (0..=19 covers empty,
+        // sub-lane, exact-lane and remainder cases) — including NaN
+        // propagation differences being *identical*, hence bit compare.
+        for n in 0..=19_usize {
+            let a0: Vec<f32> = (0..n).map(|i| (i as f32) * 0.75 - 3.0).collect();
+            let b: Vec<f32> = (0..n)
+                .map(|i| if i % 7 == 3 { f32::NAN } else { 10.0 - i as f32 })
+                .collect();
+            for op in [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min] {
+                let mut wide = a0.clone();
+                op.fold(&mut wide, &b);
+                let mut scalar = a0.clone();
+                for (x, y) in scalar.iter_mut().zip(&b) {
+                    *x = op.apply(*x, *y);
+                }
+                let wb: Vec<u32> = wide.iter().map(|x| x.to_bits()).collect();
+                let sb: Vec<u32> = scalar.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(wb, sb, "{} n={n}", op.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fold_bytes_misaligned_wire_matches_aligned() {
+        // Wire bytes at an odd offset force the scalar fallback; it must
+        // agree bitwise with the aligned `align_to` fast path.
+        let incoming = [3.5_f32, -1.25, 9.0, 0.125, 7.75];
+        let aligned = crate::transport::f32s_to_bytes(&incoming);
+        let mut shifted = vec![0_u8; aligned.len() + 1];
+        shifted[1..].copy_from_slice(&aligned);
+        for op in [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min] {
+            let mut a = vec![1.0_f32, 2.0, -3.0, 4.0, 0.5];
+            let mut b = a.clone();
+            op.fold_bytes(&mut a, &aligned).unwrap();
+            op.fold_bytes(&mut b, &shifted[1..]).unwrap();
+            assert_eq!(a, b, "{}", op.name());
+        }
+    }
+
+    #[test]
+    fn fold_wire_f32_misaligned_buffers_match_aligned() {
+        // Same for the dtype-generic path: misalign the accumulator, the
+        // incoming buffer, and both; all must agree with aligned.
+        let a0 = [1.0_f32, -2.5, 3.75, 8.0];
+        let b0 = [0.5_f32, 2.0, -7.25, 1.0];
+        let wa = crate::transport::f32s_to_bytes(&a0);
+        let wb = crate::transport::f32s_to_bytes(&b0);
+        let shift = |w: &[u8]| {
+            let mut s = vec![0_u8; w.len() + 1];
+            s[1..].copy_from_slice(w);
+            s
+        };
+        for op in [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min] {
+            let mut aligned = wa.clone();
+            op.fold_wire(DType::F32, &mut aligned, &wb).unwrap();
+            let mut sa = shift(&wa);
+            op.fold_wire(DType::F32, &mut sa[1..], &wb).unwrap();
+            assert_eq!(&sa[1..], &aligned[..], "{} (acc misaligned)", op.name());
+            let sb = shift(&wb);
+            let mut acc = wa.clone();
+            op.fold_wire(DType::F32, &mut acc, &sb[1..]).unwrap();
+            assert_eq!(acc, aligned, "{} (incoming misaligned)", op.name());
+        }
     }
 
     #[test]

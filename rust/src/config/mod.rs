@@ -93,6 +93,9 @@ fn apply_json(o: &mut TrainOptions, v: &Json) -> Result<()> {
         x.parse::<crate::collectives::AlgoPolicy>()?;
         o.algo = x.to_string();
     }
+    if let Some(x) = v.get("channels").and_then(Json::as_usize) {
+        o.channels = x;
+    }
     if let Some(x) = v.get("log_every").and_then(Json::as_usize) {
         o.log_every = x;
     }
@@ -150,6 +153,7 @@ pub fn apply_cli_overrides(o: &mut TrainOptions, args: &Args) -> Result<()> {
         "staleness",
         "ps_shards",
         "algo",
+        "channels",
         "log_every",
         "adapt_every",
         "adapt_ema_alpha",
@@ -300,6 +304,22 @@ mod tests {
         assert_eq!(o.grad_sync, GradSyncMode::PsAsync);
         assert_eq!(o.staleness, 0);
         assert_eq!(o.ps_shards, 3);
+    }
+
+    #[test]
+    fn channels_knob_parses() {
+        let o = train_options_from_json(r#"{"channels": 4}"#).unwrap();
+        assert_eq!(o.channels, 4);
+        assert_eq!(
+            TrainOptions::default().channels,
+            0,
+            "default defers to KAITIAN_CHANNELS"
+        );
+        let args =
+            Args::parse_from(vec!["train".into(), "--channels".into(), "2".into()]);
+        let mut o = TrainOptions::default();
+        apply_cli_overrides(&mut o, &args).unwrap();
+        assert_eq!(o.channels, 2);
     }
 
     #[test]

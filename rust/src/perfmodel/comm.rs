@@ -120,35 +120,56 @@ impl Default for CommModel {
 pub struct AlphaBeta {
     /// Per-message latency in seconds (the α term).
     pub alpha_s: f64,
-    /// Effective link bandwidth in bytes/second (the β term).
+    /// Effective single-stream link bandwidth in bytes/second (the β
+    /// term of one channel).
     pub bw_bps: f64,
+    /// Aggregate bandwidth with the transport's full channel count
+    /// (ISSUE 10): equals `bw_bps` at 1 channel or when unprobed. The
+    /// chunked data plane stripes every non-eager payload across all
+    /// channels, so the bandwidth term of the all-reduce cost functions
+    /// uses this — selection would otherwise silently assume
+    /// single-stream costs on a striped transport.
+    pub striped_bw_bps: f64,
 }
 
 impl AlphaBeta {
+    /// `AlphaBeta` with no channel striping measured: aggregate
+    /// bandwidth = single-stream bandwidth.
+    pub fn uniform(alpha_s: f64, bw_bps: f64) -> Self {
+        Self {
+            alpha_s,
+            bw_bps,
+            striped_bw_bps: bw_bps,
+        }
+    }
+
     /// Paper-calibrated defaults for a transport kind: the TCP-class
     /// host path gets the Gloo-hop parameters, everything else the
-    /// vendor (PCIe-class) ring-step parameters.
+    /// vendor (PCIe-class) ring-step parameters. Striped bandwidth
+    /// defaults to the single-stream value until a microprobe measures
+    /// the real multi-channel aggregate.
     pub fn for_transport_kind(kind: &str) -> Self {
         let m = CommModel::paper_default();
         if kind == "tcp" {
-            Self {
-                alpha_s: m.host_alpha,
-                bw_bps: m.host_bw,
-            }
+            Self::uniform(m.host_alpha, m.host_bw)
         } else {
-            Self {
-                alpha_s: m.nccl_alpha,
-                bw_bps: m.vendor_bw,
-            }
+            Self::uniform(m.nccl_alpha, m.vendor_bw)
         }
     }
 
     /// Clamp probed values into a sane range (a microprobe on a noisy
-    /// host can return near-zero or negative deltas).
+    /// host can return near-zero or negative deltas). Striped bandwidth
+    /// is additionally floored at the single-stream bandwidth — extra
+    /// parallel sockets on one link cannot reduce its capacity, so a
+    /// noisy striped probe must never make selection *pessimize*.
     pub fn clamped(self) -> Self {
+        let alpha_s = self.alpha_s.clamp(1e-9, 1.0);
+        let bw_bps = self.bw_bps.clamp(1e6, 1e13);
+        let striped_bw_bps = self.striped_bw_bps.clamp(1e6, 1e13).max(bw_bps);
         Self {
-            alpha_s: self.alpha_s.clamp(1e-9, 1.0),
-            bw_bps: self.bw_bps.clamp(1e6, 1e13),
+            alpha_s,
+            bw_bps,
+            striped_bw_bps,
         }
     }
 
@@ -163,7 +184,7 @@ impl AlphaBeta {
         if world.is_power_of_two() {
             0.0
         } else {
-            2.0 * (self.alpha_s + bytes as f64 / self.bw_bps)
+            2.0 * (self.alpha_s + bytes as f64 / self.striped_bw_bps)
         }
     }
 
@@ -174,7 +195,7 @@ impl AlphaBeta {
             return 0.0;
         }
         let seg = bytes as f64 / world as f64;
-        2.0 * (world - 1) as f64 * (seg / self.bw_bps + self.alpha_s)
+        2.0 * (world - 1) as f64 * (seg / self.striped_bw_bps + self.alpha_s)
     }
 
     /// Recursive-doubling all-reduce: ⌈log2 p⌉ full-buffer exchanges
@@ -185,7 +206,7 @@ impl AlphaBeta {
             return 0.0;
         }
         let p = prev_power_of_two(world);
-        Self::log2_rounds(p) * (self.alpha_s + bytes as f64 / self.bw_bps)
+        Self::log2_rounds(p) * (self.alpha_s + bytes as f64 / self.striped_bw_bps)
             + self.non_pow2_extra(bytes, world)
     }
 
@@ -198,7 +219,7 @@ impl AlphaBeta {
         }
         let p = prev_power_of_two(world) as f64;
         2.0 * Self::log2_rounds(p as usize) * self.alpha_s
-            + 2.0 * (p - 1.0) / p * bytes as f64 / self.bw_bps
+            + 2.0 * (p - 1.0) / p * bytes as f64 / self.striped_bw_bps
             + self.non_pow2_extra(bytes, world)
     }
 
@@ -208,7 +229,7 @@ impl AlphaBeta {
         if world <= 1 || bytes == 0 {
             return 0.0;
         }
-        2.0 * Self::log2_rounds(world) * (self.alpha_s + bytes as f64 / self.bw_bps)
+        2.0 * Self::log2_rounds(world) * (self.alpha_s + bytes as f64 / self.striped_bw_bps)
     }
 }
 
@@ -317,9 +338,49 @@ mod tests {
         let clamped = AlphaBeta {
             alpha_s: -1.0,
             bw_bps: 0.0,
+            striped_bw_bps: 0.0,
         }
         .clamped();
         assert!(clamped.alpha_s > 0.0 && clamped.bw_bps > 0.0);
+        assert!(clamped.striped_bw_bps >= clamped.bw_bps);
+    }
+
+    #[test]
+    fn striped_bandwidth_feeds_cost_functions() {
+        // 4 channels measured at 3x the single stream: every cost
+        // function's bandwidth term must shrink accordingly, and a noisy
+        // striped probe below the single stream must clamp back up.
+        let single = AlphaBeta::uniform(0.2e-3, 1.25e9);
+        let striped = AlphaBeta {
+            striped_bw_bps: 3.75e9,
+            ..single
+        };
+        let n = 64 << 20;
+        for w in [2_usize, 4, 5, 8] {
+            assert!(
+                striped.ring_all_reduce_s(n, w) < single.ring_all_reduce_s(n, w),
+                "w={w} ring"
+            );
+            assert!(
+                striped.halving_doubling_all_reduce_s(n, w)
+                    < single.halving_doubling_all_reduce_s(n, w),
+                "w={w} halving-doubling"
+            );
+            assert!(
+                striped.tree_all_reduce_s(n, w) < single.tree_all_reduce_s(n, w),
+                "w={w} tree"
+            );
+        }
+        // Latency term untouched: tiny payloads cost (almost) the same.
+        let tiny_single = single.doubling_all_reduce_s(4, 4);
+        let tiny_striped = striped.doubling_all_reduce_s(4, 4);
+        assert!((tiny_single - tiny_striped).abs() / tiny_single < 1e-3);
+        let noisy = AlphaBeta {
+            striped_bw_bps: 0.5e9,
+            ..single
+        }
+        .clamped();
+        assert_eq!(noisy.striped_bw_bps, noisy.bw_bps, "striped floor");
     }
 
     #[test]

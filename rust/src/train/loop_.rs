@@ -120,6 +120,11 @@ pub fn train(engine: Arc<Engine>, opts: &TrainOptions) -> Result<TrainReport> {
     // issues traffic (`--algo` / config `algo`; `adaptive` is the
     // size-adaptive default).
     crate::collectives::algo::set_policy_str(&opts.algo)?;
+    // Pin the TCP channel count before any endpoint connects
+    // (`--channels` / config `channels`; 0 defers to `KAITIAN_CHANNELS`).
+    if opts.channels > 0 {
+        crate::transport::tcp::set_channels(opts.channels);
+    }
     let mut devices = parse_cluster(&opts.cluster)?;
     // Install runtime load perturbations (dynamic-load scenarios); the
     // throttle consults each device's profile per step.

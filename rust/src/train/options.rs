@@ -65,6 +65,11 @@ pub struct TrainOptions {
     /// anything else forces one algorithm everywhere (same effect as
     /// `KAITIAN_ALGO`).
     pub algo: String,
+    /// Parallel TCP connections per peer pair (`--channels` /
+    /// `KAITIAN_CHANNELS`): the chunked data plane stripes large
+    /// payloads round-robin across them. `0` (default) defers to the
+    /// env knob / its single-channel default; every rank must agree.
+    pub channels: usize,
     /// Print a progress line every N steps (0 = silent).
     pub log_every: usize,
     /// Online load adaptation (paper §III-C dynamic balancing): every
@@ -125,6 +130,7 @@ impl Default for TrainOptions {
             staleness: crate::ps::staleness_from_env(),
             ps_shards: crate::ps::ps_shards_from_env(),
             algo: "adaptive".into(),
+            channels: 0,
             log_every: 0,
             online_adapt: false,
             adapt_every: 10,

@@ -42,6 +42,27 @@ pub trait Transport: Send + Sync {
     /// transports may briefly block for queue backpressure.
     fn send(&self, peer: usize, tag: u64, data: Buf) -> Result<()>;
 
+    /// [`send`](Transport::send) with a channel hint: multi-channel
+    /// transports route the frame onto channel `lane % channels()`,
+    /// single-channel transports ignore the hint. Ordering contract:
+    /// frames sharing a (peer, full tag, lane) triple stay FIFO; frames
+    /// on different lanes may reorder on the wire, which the tag-
+    /// addressed mailbox absorbs. Callers that stripe MUST derive `lane`
+    /// deterministically from the full frame tag (the chunk layer uses
+    /// the low [`CHUNK_TAG_BITS`](crate::collectives::chunk::CHUNK_TAG_BITS)
+    /// sub-tag) so both a tag's sends and its matching receives agree on
+    /// which lane carries it.
+    fn send_on(&self, peer: usize, tag: u64, data: Buf, lane: usize) -> Result<()> {
+        let _ = lane;
+        self.send(peer, tag, data)
+    }
+
+    /// Number of parallel wire channels this endpoint opens per peer
+    /// (1 for transports without channel striping).
+    fn channels(&self) -> usize {
+        1
+    }
+
     /// Receive the next message from `peer` under `tag` (blocking).
     fn recv(&self, peer: usize, tag: u64) -> Result<Buf>;
 

@@ -14,9 +14,22 @@
 //! deadlocking on a dead peer), and the endpoint exposes a
 //! bytes-in-flight high-water gauge for `CommStats`.
 //!
+//! Multi-channel striping (ISSUE 10): `KAITIAN_CHANNELS` / `--channels`
+//! (default 1) opens N parallel connections per peer pair, each with its
+//! own writer/reader thread pair and its own bytes-in-flight account, so
+//! one fat link is drained by N streams instead of one. [`Transport::send_on`]
+//! routes a frame onto `lane % N`; the chunk layer derives the lane from
+//! the frame's low-16-bit sub-tag, so striping is deterministic and the
+//! tag-addressed mailbox absorbs any cross-channel reordering. Frames
+//! sharing a (peer, tag, lane) triple stay FIFO per channel.
+//!
 //! Frame format (little-endian):
 //! `[tag: u64][epoch: u64][len: u64][payload: len bytes]`
-//! The sender's rank is exchanged once at connection setup. The epoch
+//! Connection setup exchanges a 16-byte handshake
+//! `[rank: u64][channel: u32][channel count: u32]` (it was a bare 8-byte
+//! rank before channels existed): the acceptor slots the socket into its
+//! per-(peer, channel) table and hard-errors on a channel-count mismatch,
+//! so every rank must agree on `KAITIAN_CHANNELS`. The epoch
 //! stamp is the sender's membership epoch at write time; the receiving
 //! mailbox drops frames stamped older than its own fence (see
 //! [`Mailbox::push_epoch`]), so traffic from a dead group generation
@@ -27,11 +40,13 @@
 //! "peer N lost" error), and the wire length field is validated against
 //! `KAITIAN_MAX_FRAME_BYTES` before it reaches the buffer pool, so a
 //! corrupt or hostile header is a peer failure, not a near-unbounded
-//! allocation.
+//! allocation. With channels, the first channel reader that sees
+//! EOF/error fails the whole peer exactly once and shuts the sibling
+//! channels' sockets, so no channel is left half-open.
 
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, IoSlice, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -43,9 +58,44 @@ use super::Transport;
 use crate::comm::buf::{Buf, BufPool};
 use crate::Result;
 
-/// Default bytes-in-flight soft cap per endpoint (all peers combined).
-/// Overridable via `KAITIAN_TCP_INFLIGHT_CAP` (`0` disables the cap).
+/// Default bytes-in-flight soft cap **per channel** (all peers on that
+/// channel combined). Overridable via `KAITIAN_TCP_INFLIGHT_CAP` (`0`
+/// disables the cap). With N channels the endpoint therefore admits up
+/// to N x cap queued bytes — the cap bounds what each writer thread can
+/// buffer, and channels are independent writers by design.
 pub const DEFAULT_INFLIGHT_CAP: u64 = 64 << 20;
+
+/// Hard ceiling on parallel connections per peer pair: past ~16 streams
+/// the mesh's fd count (`world^2 * channels`) and thread count grow with
+/// no bandwidth left to claim on one link.
+pub const MAX_CHANNELS: usize = 16;
+
+/// Resolved `KAITIAN_CHANNELS` (0 = not yet resolved; see [`channels`]).
+static CHANNELS: AtomicUsize = AtomicUsize::new(0);
+
+/// Parallel connections per peer pair (default 1 = the single-socket
+/// wire behavior that predates channels). Resolved once from
+/// `KAITIAN_CHANNELS` on first use — garbage values warn and fall back
+/// to the default via [`crate::util::env::parse_or_warn`] — and clamped
+/// to `1..=MAX_CHANNELS`.
+pub fn channels() -> usize {
+    let v = CHANNELS.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let n = crate::util::env_or_warn("KAITIAN_CHANNELS", 1_usize).clamp(1, MAX_CHANNELS);
+    // First resolver wins; a concurrent `set_channels` may already have
+    // published a CLI override, which then takes precedence.
+    let _ = CHANNELS.compare_exchange(0, n, Ordering::Relaxed, Ordering::Relaxed);
+    CHANNELS.load(Ordering::Relaxed)
+}
+
+/// Install the channel count programmatically (the `--channels` CLI
+/// knob). Applies to endpoints connected after the call; every rank of a
+/// mesh must agree (the connection handshake hard-errors on mismatch).
+pub fn set_channels(n: usize) {
+    CHANNELS.store(n.clamp(1, MAX_CHANNELS), Ordering::Relaxed);
+}
 
 /// The configured soft cap (`None` = unbounded, the pre-refactor
 /// behavior). A malformed `KAITIAN_TCP_INFLIGHT_CAP` falls back to the
@@ -77,7 +127,9 @@ fn max_frame_bytes() -> Option<u64> {
     })
 }
 
-/// Bytes queued to writer threads but not yet written to a socket.
+/// Bytes queued to one channel's writer threads but not yet written to a
+/// socket (one account per channel — channels are independent pipes, so
+/// backpressure on one never stalls another).
 /// `add` applies the soft-cap backpressure; writers call `sub` after the
 /// frame hits the wire (or `poison` when the link dies, so blocked
 /// senders fail fast instead of waiting out the cap).
@@ -197,6 +249,18 @@ impl TcpMesh {
     /// (`None` = unbounded). Tests and benches use this to exercise
     /// writer backpressure deterministically.
     pub fn loopback_with_cap(world: usize, cap: Option<u64>) -> Result<Vec<TcpEndpoint>> {
+        Self::loopback_with(world, cap, channels())
+    }
+
+    /// Loopback mesh with an explicit soft cap (per channel) *and*
+    /// channel count — the striping tests and `benches/channels.rs`
+    /// compare channel counts side by side without touching the global
+    /// `KAITIAN_CHANNELS` knob.
+    pub fn loopback_with(
+        world: usize,
+        cap: Option<u64>,
+        channels: usize,
+    ) -> Result<Vec<TcpEndpoint>> {
         // Bind one listener per rank on an ephemeral port.
         let listeners: Vec<TcpListener> = (0..world)
             .map(|_| TcpListener::bind("127.0.0.1:0").context("bind loopback"))
@@ -213,7 +277,7 @@ impl TcpMesh {
             .map(|(rank, listener)| {
                 let addrs = addrs.clone();
                 std::thread::spawn(move || {
-                    TcpEndpoint::connect_with_cap(rank, &addrs, listener, cap)
+                    TcpEndpoint::connect_with_opts(rank, &addrs, listener, cap, channels)
                 })
             })
             .collect();
@@ -235,18 +299,48 @@ struct PeerLink {
     queue: mpsc::Sender<WriterMsg>,
 }
 
+/// Shared death latch for all channel readers of one peer: the first
+/// channel that hits EOF/error fails the peer exactly once
+/// ([`Mailbox::close_peer`]) and shuts the sibling channels' sockets, so
+/// a partial hangup can never leave surviving channels half-open with
+/// the peer already reported lost (ISSUE 10 satellite).
+struct PeerDeath {
+    dead: AtomicBool,
+    /// One duplicated fd per channel of this peer; `shutdown` on any
+    /// clone tears down the shared socket, waking its blocked reader.
+    socks: Vec<TcpStream>,
+}
+
+impl PeerDeath {
+    /// First caller wins: returns `true` exactly once, after shutting
+    /// every channel socket of the peer.
+    fn mark(&self) -> bool {
+        if self.dead.swap(true, Ordering::SeqCst) {
+            return false;
+        }
+        for s in &self.socks {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        true
+    }
+}
+
 /// One rank's endpoint in a TCP mesh.
 pub struct TcpEndpoint {
     rank: usize,
     world: usize,
+    /// Parallel connections per peer pair (>= 1).
+    channels: usize,
     mailbox: Arc<Mailbox>,
-    /// Writer queues per peer (`None` for self).
-    links: Vec<Option<PeerLink>>,
+    /// Writer queues per peer (`None` for self), one per channel.
+    links: Vec<Option<Vec<PeerLink>>>,
     threads: Vec<JoinHandle<()>>,
-    bytes_sent: Arc<AtomicU64>,
-    inflight: Arc<Inflight>,
+    /// Payload bytes written, accounted per channel (index = channel).
+    bytes_sent: Vec<Arc<AtomicU64>>,
+    /// Bytes-in-flight accounts, one per channel (index = channel).
+    inflight: Vec<Arc<Inflight>>,
     /// Membership epoch stamped on outgoing frames (shared with the
-    /// writer threads, read per frame at write time).
+    /// writer threads, read once per write burst).
     epoch: Arc<AtomicU64>,
 }
 
@@ -257,82 +351,148 @@ impl TcpEndpoint {
         Self::connect_with_cap(rank, addrs, listener, inflight_cap())
     }
 
-    /// [`TcpEndpoint::connect`] with an explicit writer-queue soft cap.
+    /// [`TcpEndpoint::connect`] with an explicit writer-queue soft cap
+    /// (per channel); the channel count comes from the global
+    /// [`channels`] knob.
     pub fn connect_with_cap(
         rank: usize,
         addrs: &[SocketAddr],
         listener: TcpListener,
         cap: Option<u64>,
     ) -> Result<Self> {
-        let world = addrs.len();
-        let mailbox = Arc::new(Mailbox::new());
-        let bytes_sent = Arc::new(AtomicU64::new(0));
-        let inflight = Arc::new(Inflight::new(cap));
-        let epoch = Arc::new(AtomicU64::new(0));
-        let mut streams: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+        Self::connect_with_opts(rank, addrs, listener, cap, channels())
+    }
 
-        // Dial higher ranks (retry briefly: the peer may not be listening
-        // yet in multi-process mode).
+    /// [`TcpEndpoint::connect`] with explicit cap and channel count.
+    ///
+    /// Opens `channels` parallel connections to every higher rank and
+    /// accepts `rank * channels` connections from lower ranks. Each
+    /// connection starts with the 16-byte handshake
+    /// `[rank: u64][channel: u32][channel count: u32]` (little-endian);
+    /// the acceptor slots the socket by (rank, channel) — connections of
+    /// one peer may arrive in any order — and rejects a rank out of
+    /// range, a channel-count disagreement, a channel index out of
+    /// range, or a duplicate (rank, channel) claim.
+    pub fn connect_with_opts(
+        rank: usize,
+        addrs: &[SocketAddr],
+        listener: TcpListener,
+        cap: Option<u64>,
+        channels: usize,
+    ) -> Result<Self> {
+        let world = addrs.len();
+        let nch = channels.clamp(1, MAX_CHANNELS);
+        let mailbox = Arc::new(Mailbox::new());
+        let bytes_sent: Vec<Arc<AtomicU64>> =
+            (0..nch).map(|_| Arc::new(AtomicU64::new(0))).collect();
+        let inflight: Vec<Arc<Inflight>> =
+            (0..nch).map(|_| Arc::new(Inflight::new(cap))).collect();
+        let epoch = Arc::new(AtomicU64::new(0));
+        let mut streams: Vec<Vec<Option<TcpStream>>> =
+            (0..world).map(|_| (0..nch).map(|_| None).collect()).collect();
+
+        // Dial higher ranks, one connection per channel (retry briefly:
+        // the peer may not be listening yet in multi-process mode).
         for peer in rank + 1..world {
-            let mut attempt = 0;
-            let stream = loop {
-                match TcpStream::connect(addrs[peer]) {
-                    Ok(s) => break s,
-                    Err(e) if attempt < 50 => {
-                        attempt += 1;
-                        std::thread::sleep(Duration::from_millis(100));
-                        let _ = e;
+            for ch in 0..nch {
+                let mut attempt = 0;
+                let stream = loop {
+                    match TcpStream::connect(addrs[peer]) {
+                        Ok(s) => break s,
+                        Err(e) if attempt < 50 => {
+                            attempt += 1;
+                            std::thread::sleep(Duration::from_millis(100));
+                            let _ = e;
+                        }
+                        Err(e) => return Err(e).context(format!("dial rank {peer} channel {ch}")),
                     }
-                    Err(e) => return Err(e).context(format!("dial rank {peer}")),
-                }
-            };
-            stream.set_nodelay(true).ok();
-            // Identify ourselves.
-            let mut s = stream.try_clone()?;
-            s.write_all(&(rank as u64).to_le_bytes())?;
-            streams[peer] = Some(stream);
+                };
+                stream.set_nodelay(true).ok();
+                // Identify ourselves: rank, channel, channel count.
+                let mut hello = [0_u8; 16];
+                hello[0..8].copy_from_slice(&(rank as u64).to_le_bytes());
+                hello[8..12].copy_from_slice(&(ch as u32).to_le_bytes());
+                hello[12..16].copy_from_slice(&(nch as u32).to_le_bytes());
+                let mut s = stream.try_clone()?;
+                s.write_all(&hello)?;
+                streams[peer][ch] = Some(stream);
+            }
         }
-        // Accept lower ranks.
-        for _ in 0..rank {
+        // Accept lower ranks: `rank` peers x `nch` channels each, in
+        // whatever order they arrive — the handshake names the slot.
+        for _ in 0..rank * nch {
             let (stream, _) = listener.accept().context("accept")?;
             stream.set_nodelay(true).ok();
-            let mut id = [0_u8; 8];
+            let mut hello = [0_u8; 16];
             let mut r = stream.try_clone()?;
-            r.read_exact(&mut id)?;
-            let peer = u64::from_le_bytes(id) as usize;
+            r.read_exact(&mut hello)?;
+            let peer = u64::from_le_bytes(hello[0..8].try_into().unwrap()) as usize;
+            let ch = u32::from_le_bytes(hello[8..12].try_into().unwrap()) as usize;
+            let peer_nch = u32::from_le_bytes(hello[12..16].try_into().unwrap()) as usize;
             if peer >= world {
                 bail!("peer announced invalid rank {peer}");
             }
-            streams[peer] = Some(stream);
+            if peer_nch != nch {
+                bail!(
+                    "peer {peer} runs {peer_nch} channels but this rank runs {nch} — \
+                     KAITIAN_CHANNELS must agree on every rank"
+                );
+            }
+            if ch >= nch {
+                bail!("peer {peer} announced invalid channel {ch} (of {nch})");
+            }
+            if streams[peer][ch].is_some() {
+                bail!("peer {peer} claimed channel {ch} twice");
+            }
+            streams[peer][ch] = Some(stream);
         }
 
-        // Spawn reader + writer threads per link.
-        let mut links: Vec<Option<PeerLink>> = Vec::with_capacity(world);
+        // Spawn reader + writer threads per (peer, channel) link. All of
+        // one peer's readers share a PeerDeath latch so the first broken
+        // channel fails the peer once and tears its siblings down.
+        let mut links: Vec<Option<Vec<PeerLink>>> = Vec::with_capacity(world);
         let mut threads = Vec::new();
-        for (peer, stream) in streams.into_iter().enumerate() {
-            match stream {
-                None => links.push(None),
-                Some(stream) => {
-                    let (tx, rx) = mpsc::channel::<WriterMsg>();
-                    let write_half = stream.try_clone().context("clone for writer")?;
-                    let sent = bytes_sent.clone();
-                    let infl = inflight.clone();
-                    let ep = epoch.clone();
-                    threads.push(std::thread::spawn(move || {
-                        writer_loop(write_half, rx, sent, infl, ep);
-                    }));
-                    let mb = mailbox.clone();
-                    threads.push(std::thread::spawn(move || {
-                        reader_loop(stream, peer, mb);
-                    }));
-                    links.push(Some(PeerLink { queue: tx }));
-                }
+        for (peer, chans) in streams.into_iter().enumerate() {
+            if chans.iter().all(|s| s.is_none()) {
+                links.push(None); // self — loops back through the mailbox
+                continue;
             }
+            let socks: Vec<TcpStream> = chans
+                .iter()
+                .flatten()
+                .map(|s| s.try_clone())
+                .collect::<std::io::Result<_>>()
+                .context("clone for peer shutdown")?;
+            let death = Arc::new(PeerDeath {
+                dead: AtomicBool::new(false),
+                socks,
+            });
+            let mut peer_links = Vec::with_capacity(nch);
+            for (ch, stream) in chans.into_iter().enumerate() {
+                let stream =
+                    stream.ok_or_else(|| anyhow::anyhow!("missing channel {ch} to rank {peer}"))?;
+                let (tx, rx) = mpsc::channel::<WriterMsg>();
+                let write_half = stream.try_clone().context("clone for writer")?;
+                let sent = bytes_sent[ch].clone();
+                let infl = inflight[ch].clone();
+                let ep = epoch.clone();
+                threads.push(std::thread::spawn(move || {
+                    writer_loop(write_half, rx, sent, infl, ep);
+                }));
+                let mb = mailbox.clone();
+                let d = death.clone();
+                threads.push(std::thread::spawn(move || {
+                    reader_loop(stream, peer, mb, d);
+                }));
+                peer_links.push(PeerLink { queue: tx });
+            }
+            links.push(Some(peer_links));
         }
 
         Ok(Self {
             rank,
             world,
+            channels: nch,
             mailbox,
             links,
             threads,
@@ -342,9 +502,22 @@ impl TcpEndpoint {
         })
     }
 
-    /// Total payload bytes pushed to the wire by this endpoint.
+    /// Total payload bytes pushed to the wire by this endpoint (all
+    /// channels).
     pub fn bytes_sent(&self) -> u64 {
-        self.bytes_sent.load(Ordering::Relaxed)
+        self.bytes_sent
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Payload bytes pushed to the wire on channel `ch` — the striping
+    /// tests use this to prove eager traffic never leaves channel 0.
+    pub fn bytes_sent_on(&self, ch: usize) -> u64 {
+        self.bytes_sent
+            .get(ch)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 
     /// Frames this endpoint's mailbox refused by epoch fencing.
@@ -353,67 +526,141 @@ impl TcpEndpoint {
     }
 }
 
+/// Most frames gathered into one vectored write: 2 iovecs per frame
+/// (header + payload) keeps a burst well under Linux's `IOV_MAX` (1024)
+/// while still amortizing the syscall over a whole chunk burst.
+const MAX_BURST_FRAMES: usize = 64;
+
+/// `write_all` over a gather list. `IoSlice::advance_slices` is too new
+/// for this crate's toolchain floor, so short writes (rare on blocking
+/// sockets) rebuild the slice view past the consumed prefix by hand.
+fn write_all_vectored(stream: &mut TcpStream, bufs: &[IoSlice<'_>]) -> std::io::Result<()> {
+    let total: usize = bufs.iter().map(|b| b.len()).sum();
+    let mut done = 0_usize;
+    // Cursor: first slice not fully written + byte offset into it.
+    let mut idx = 0_usize;
+    let mut off = 0_usize;
+    while done < total {
+        let wrote = if idx == 0 && off == 0 {
+            stream.write_vectored(bufs)
+        } else {
+            let mut view: Vec<IoSlice<'_>> = Vec::with_capacity(bufs.len() - idx);
+            view.push(IoSlice::new(&bufs[idx][off..]));
+            for b in &bufs[idx + 1..] {
+                view.push(IoSlice::new(b));
+            }
+            stream.write_vectored(&view)
+        };
+        let mut n = match wrote {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "vectored write returned 0",
+                ))
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        done += n;
+        // Advance the cursor past `n` written bytes (zero-length payload
+        // slices fall through with rem == 0).
+        while n > 0 {
+            let rem = bufs[idx].len() - off;
+            if n >= rem {
+                n -= rem;
+                idx += 1;
+                off = 0;
+            } else {
+                off += n;
+                n = 0;
+            }
+        }
+    }
+    Ok(())
+}
+
 fn writer_loop(
-    stream: TcpStream,
+    mut stream: TcpStream,
     rx: mpsc::Receiver<WriterMsg>,
     sent: Arc<AtomicU64>,
     inflight: Arc<Inflight>,
     epoch: Arc<AtomicU64>,
 ) {
-    let mut w = BufWriter::new(stream);
-    loop {
-        // Drain the queue with `try_recv` and flush only once it runs
-        // dry: a chunk burst coalesces into one (or few) syscalls, while
-        // a lone frame still hits the wire immediately — the flush
-        // happens right before the blocking `recv`, so latency-sensitive
-        // single messages never sit in the buffer waiting for traffic.
-        let msg = match rx.try_recv() {
-            Ok(m) => m,
-            Err(mpsc::TryRecvError::Empty) => {
-                if w.flush().is_err() {
-                    break;
-                }
-                match rx.recv() {
-                    Ok(m) => m,
-                    Err(_) => break,
-                }
-            }
-            Err(mpsc::TryRecvError::Disconnected) => break,
+    let mut shutdown = false;
+    while !shutdown {
+        // Block for the first frame, then drain whatever else is already
+        // queued into one gather list: a chunk burst coalesces into one
+        // vectored syscall, while a lone frame still hits the wire
+        // immediately (flush-when-dry — nothing ever waits in a
+        // userspace buffer for more traffic). A Shutdown seen mid-drain
+        // still writes the frames queued before it (flush-on-shutdown).
+        let first = match rx.recv() {
+            Ok(WriterMsg::Frame(tag, data)) => (tag, data),
+            Ok(WriterMsg::Shutdown) | Err(_) => break,
         };
-        match msg {
-            WriterMsg::Frame(tag, data) => {
-                let n = data.len() as u64;
-                let ep = epoch.load(Ordering::SeqCst);
-                let ok = w.write_all(&tag.to_le_bytes()).is_ok()
-                    && w.write_all(&ep.to_le_bytes()).is_ok()
-                    && w.write_all(&n.to_le_bytes()).is_ok()
-                    && w.write_all(&data).is_ok();
-                if !ok {
+        let mut frames = vec![first];
+        while frames.len() < MAX_BURST_FRAMES {
+            match rx.try_recv() {
+                Ok(WriterMsg::Frame(tag, data)) => frames.push((tag, data)),
+                Ok(WriterMsg::Shutdown) => {
+                    shutdown = true;
                     break;
                 }
-                sent.fetch_add(n, Ordering::Relaxed);
-                inflight.sub(n);
+                Err(_) => break,
             }
-            WriterMsg::Shutdown => break,
+        }
+        // One epoch stamp per burst: every frame in it was queued before
+        // this load, so the stamp is at least as fresh as the per-frame
+        // load it replaces.
+        let ep = epoch.load(Ordering::SeqCst);
+        let hdrs: Vec<[u8; 24]> = frames
+            .iter()
+            .map(|(tag, data)| {
+                let mut h = [0_u8; 24];
+                h[0..8].copy_from_slice(&tag.to_le_bytes());
+                h[8..16].copy_from_slice(&ep.to_le_bytes());
+                h[16..24].copy_from_slice(&(data.len() as u64).to_le_bytes());
+                h
+            })
+            .collect();
+        let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(frames.len() * 2);
+        for (h, (_, data)) in hdrs.iter().zip(&frames) {
+            slices.push(IoSlice::new(h));
+            slices.push(IoSlice::new(data));
+        }
+        if write_all_vectored(&mut stream, &slices).is_err() {
+            break;
+        }
+        for (_, data) in &frames {
+            let n = data.len() as u64;
+            sent.fetch_add(n, Ordering::Relaxed);
+            inflight.sub(n);
         }
     }
-    let _ = w.flush();
     inflight.poison();
     // Kernel-level shutdown (affects every duplicated fd of this
     // socket): the peer's reader sees EOF *promptly* and fails just
     // this link, instead of discovering the death via recv timeout.
-    let _ = w.get_ref().shutdown(std::net::Shutdown::Both);
+    let _ = stream.shutdown(std::net::Shutdown::Both);
 }
 
-fn reader_loop(stream: TcpStream, peer: usize, mailbox: Arc<Mailbox>) {
+/// Fail `peer` exactly once across all of its channel readers.
+fn fail_link(mailbox: &Mailbox, peer: usize, death: &PeerDeath) {
+    if death.mark() {
+        // Fail *only* this peer's flows — receivers on it error out with
+        // "peer N lost" while traffic from every other rank keeps
+        // flowing; sibling channels are shut so their readers exit too.
+        mailbox.close_peer(peer);
+    }
+}
+
+fn reader_loop(stream: TcpStream, peer: usize, mailbox: Arc<Mailbox>, death: Arc<PeerDeath>) {
     let mut r = BufReader::new(stream);
     loop {
         let mut hdr = [0_u8; 24];
         if r.read_exact(&mut hdr).is_err() {
-            // Peer closed: fail *only* this peer's flows — receivers on
-            // it error out with "peer N lost" while traffic from every
-            // other rank keeps flowing.
-            mailbox.close_peer(peer);
+            fail_link(&mailbox, peer, &death);
             return;
         }
         let tag = u64::from_le_bytes(hdr[0..8].try_into().unwrap());
@@ -427,7 +674,7 @@ fn reader_loop(stream: TcpStream, peer: usize, mailbox: Arc<Mailbox>) {
                     "kaitian: tcp frame from peer {peer} claims {len} bytes \
                      (cap {cap}, KAITIAN_MAX_FRAME_BYTES) — failing peer"
                 );
-                mailbox.close_peer(peer);
+                fail_link(&mailbox, peer, &death);
                 return;
             }
         }
@@ -435,7 +682,7 @@ fn reader_loop(stream: TcpStream, peer: usize, mailbox: Arc<Mailbox>) {
         // nothing once the pool is warm.
         let mut data = BufPool::global().take(len as usize);
         if r.read_exact(data.as_mut_slice()).is_err() {
-            mailbox.close_peer(peer);
+            fail_link(&mailbox, peer, &death);
             return;
         }
         // Epoch fence: frames stamped from a dead group generation are
@@ -454,21 +701,31 @@ impl Transport for TcpEndpoint {
     }
 
     fn send(&self, peer: usize, tag: u64, data: Buf) -> Result<()> {
+        self.send_on(peer, tag, data, 0)
+    }
+
+    fn send_on(&self, peer: usize, tag: u64, data: Buf, lane: usize) -> Result<()> {
         if peer == self.rank {
             // Loop back locally; no socket for self.
             self.mailbox.push(peer, tag, data);
             return Ok(());
         }
+        let ch = lane % self.channels;
         let link = self
             .links
             .get(peer)
             .and_then(|l| l.as_ref())
             .ok_or_else(|| anyhow::anyhow!("no link to rank {peer}"))?;
-        self.inflight.add(data.len() as u64)?;
-        link.queue
+        self.inflight[ch].add(data.len() as u64)?;
+        link[ch]
+            .queue
             .send(WriterMsg::Frame(tag, data))
-            .map_err(|_| anyhow::anyhow!("writer thread for rank {peer} is gone"))?;
+            .map_err(|_| anyhow::anyhow!("writer thread for rank {peer} channel {ch} is gone"))?;
         Ok(())
+    }
+
+    fn channels(&self) -> usize {
+        self.channels
     }
 
     fn recv(&self, peer: usize, tag: u64) -> Result<Buf> {
@@ -480,7 +737,13 @@ impl Transport for TcpEndpoint {
     }
 
     fn inflight_high_water(&self) -> u64 {
-        self.inflight.high_water.load(Ordering::Relaxed)
+        // Sum of per-channel high-water marks: exact at 1 channel; with
+        // striping it upper-bounds the true combined peak, which is the
+        // right direction for a backpressure gauge.
+        self.inflight
+            .iter()
+            .map(|i| i.high_water.load(Ordering::Relaxed))
+            .sum()
     }
 
     fn stale_dropped(&self) -> u64 {
@@ -507,7 +770,7 @@ impl Transport for TcpEndpoint {
 
 impl Drop for TcpEndpoint {
     fn drop(&mut self) {
-        for link in self.links.iter().flatten() {
+        for link in self.links.iter().flatten().flatten() {
             let _ = link.queue.send(WriterMsg::Shutdown);
         }
         self.mailbox.close();
@@ -661,5 +924,120 @@ mod tests {
             eps[0].inflight_high_water() >= 10_000,
             "at least one frame must have been observed in flight"
         );
+    }
+
+    #[test]
+    fn multi_channel_frames_spread_and_reassemble() {
+        // 100 frames striped lane = tag over 4 channels: every channel
+        // must carry traffic, and the tag-addressed mailbox must hand
+        // them back in tag order regardless of wire interleaving.
+        let eps = TcpMesh::loopback_with(2, None, 4).unwrap();
+        assert_eq!(eps[0].channels(), 4);
+        for i in 0..100_u64 {
+            eps[0]
+                .send_on(1, i, Buf::copy_from_slice(&[i as u8; 32]), i as usize)
+                .unwrap();
+        }
+        for i in 0..100_u64 {
+            assert_eq!(eps[1].recv(0, i).unwrap(), vec![i as u8; 32]);
+        }
+        for ch in 0..4 {
+            assert!(
+                eps[0].bytes_sent_on(ch) > 0,
+                "channel {ch} carried no bytes"
+            );
+        }
+    }
+
+    #[test]
+    fn same_tag_same_lane_stays_fifo_with_channels() {
+        // FIFO contract: frames sharing (peer, tag, lane) must arrive in
+        // send order even when other lanes carry unrelated traffic.
+        let eps = TcpMesh::loopback_with(2, None, 4).unwrap();
+        for k in 0..300_u32 {
+            eps[0]
+                .send_on(1, 9, Buf::copy_from_slice(&k.to_le_bytes()), 2)
+                .unwrap();
+            // Noise on the other lanes under different tags.
+            eps[0]
+                .send_on(1, 1000 + k as u64, Buf::copy_from_slice(&[0; 8]), k as usize)
+                .unwrap();
+        }
+        for k in 0..300_u32 {
+            assert_eq!(eps[1].recv(0, 9).unwrap(), k.to_le_bytes().to_vec());
+        }
+    }
+
+    #[test]
+    fn plain_send_stays_on_channel_zero() {
+        let eps = TcpMesh::loopback_with(2, None, 4).unwrap();
+        for _ in 0..8 {
+            eps[0].send(1, 3, Buf::copy_from_slice(&[1; 128])).unwrap();
+        }
+        for _ in 0..8 {
+            let _ = eps[1].recv(0, 3).unwrap();
+        }
+        assert!(eps[0].bytes_sent_on(0) >= 8 * 128);
+        for ch in 1..4 {
+            assert_eq!(
+                eps[0].bytes_sent_on(ch),
+                0,
+                "un-laned send leaked onto channel {ch}"
+            );
+        }
+    }
+
+    #[test]
+    fn handshake_rejects_channel_count_mismatch() {
+        // Rank 0 dials with 2 channels while rank 1 expects 1: rank 1's
+        // accept loop must hard-error instead of wiring a half mesh.
+        let listeners: Vec<TcpListener> = (0..2)
+            .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+            .collect();
+        let addrs: Vec<SocketAddr> = listeners.iter().map(|l| l.local_addr().unwrap()).collect();
+        let mut it = listeners.into_iter();
+        let (l0, l1) = (it.next().unwrap(), it.next().unwrap());
+        let a = addrs.clone();
+        let h0 =
+            std::thread::spawn(move || TcpEndpoint::connect_with_opts(0, &a, l0, None, 2));
+        let h1 =
+            std::thread::spawn(move || TcpEndpoint::connect_with_opts(1, &addrs, l1, None, 1));
+        let r1 = h1.join().unwrap();
+        let err = r1.err().expect("mismatched channel counts must fail");
+        assert!(
+            err.to_string().contains("channels"),
+            "unexpected error: {err}"
+        );
+        // Rank 0 may or may not finish connecting before rank 1 bails;
+        // either way its thread must terminate.
+        let _ = h0.join().unwrap();
+    }
+
+    #[test]
+    fn multi_channel_peer_death_fails_peer_once_and_fully() {
+        // Drop rank 2 of a 3-rank, 4-channel mesh: all four of its
+        // channels hang up, the survivors must report "peer 2 lost"
+        // exactly like the single-channel path, and 0<->1 traffic must
+        // keep flowing on every channel.
+        let mut eps = TcpMesh::loopback_with(3, None, 4).unwrap();
+        let e2 = eps.pop().unwrap();
+        drop(e2);
+        std::thread::sleep(Duration::from_millis(100));
+        let (e0, e1) = (&eps[0], &eps[1]);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for lane in 0..4 {
+                    e1.send_on(0, 50 + lane as u64, Buf::copy_from_slice(&[1]), lane)
+                        .unwrap();
+                }
+                assert_eq!(e1.recv(0, 60).unwrap(), vec![9]);
+            });
+            e0.send(1, 60, Buf::copy_from_slice(&[9])).unwrap();
+            for lane in 0..4 {
+                assert_eq!(e0.recv(1, 50 + lane as u64).unwrap(), vec![1]);
+            }
+        });
+        let err = e0.recv(2, 99).unwrap_err();
+        assert!(err.to_string().contains("peer 2 lost"), "got: {err}");
     }
 }

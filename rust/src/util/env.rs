@@ -79,4 +79,19 @@ mod tests {
             77
         );
     }
+
+    #[test]
+    fn garbage_channel_count_warns_and_falls_back() {
+        // `KAITIAN_CHANNELS` rides the same parser (ISSUE 10): a typo'd
+        // channel count must run the single-channel default loudly, not
+        // a silent zero-channel panic.
+        for bad in ["four", "2x", "-2", "1.0", ""] {
+            assert_eq!(
+                parse_or_warn("KAITIAN_CHANNELS", Some(bad), 1_usize),
+                1,
+                "{bad:?} must fall back to the single-channel default"
+            );
+        }
+        assert_eq!(parse_or_warn("KAITIAN_CHANNELS", Some("4"), 1_usize), 4);
+    }
 }

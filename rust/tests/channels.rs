@@ -1,0 +1,244 @@
+//! Multi-channel striped transport (ISSUE 10): bitwise parity of the
+//! chunked data plane across channel counts.
+//!
+//! Striping assigns each frame to channel `tag & (MAX_CHUNKS_PER_OP - 1)
+//! % channels` — a pure function of the full frame tag — so the
+//! tag-addressed mailbox reassembles identical bytes no matter how many
+//! sockets the frames rode. These tests pin that invariant: chunked
+//! all-reduce, all-to-all, and p2p must be *bit-identical* at 1, 2, and
+//! 4 channels (including non-power-of-two worlds and ops with fewer
+//! chunks than channels), same-tag streams must stay FIFO, and eager
+//! payloads must never leave channel 0.
+//!
+//! Channel counts are passed explicitly via [`TcpMesh::loopback_with`]
+//! so the process-global `KAITIAN_CHANNELS` knob is never touched.
+
+use std::sync::Arc;
+
+use kaitian::collectives::chunk::{self, SubTags};
+use kaitian::collectives::ring::ring_all_reduce_chunked;
+use kaitian::collectives::{CommStats, Communicator, ReduceOp};
+use kaitian::comm::DType;
+use kaitian::transport::{TcpEndpoint, TcpMesh, Transport};
+
+/// Run one chunked ring all-reduce per rank (scoped threads) and return
+/// each rank's result buffer.
+fn all_reduce_mesh(eps: &[TcpEndpoint], n: usize, chunk_bytes: usize) -> Vec<Vec<f32>> {
+    std::thread::scope(|s| {
+        let hs: Vec<_> = eps
+            .iter()
+            .map(|ep| {
+                s.spawn(move || {
+                    // Non-integer values so association order would show
+                    // up bitwise if striping ever reordered folds.
+                    let mut buf: Vec<f32> = (0..n)
+                        .map(|i| {
+                            (i % 251) as f32 * 0.1253
+                                + (ep.rank() + 1) as f32 * 0.071
+                                + i as f32 * 1e-3
+                        })
+                        .collect();
+                    ring_all_reduce_chunked(ep, &mut buf, ReduceOp::Sum, 1 << 20, chunk_bytes)
+                        .unwrap();
+                    buf
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn chunked_all_reduce_bitwise_parity_across_channel_counts() {
+    // Worlds include non-powers-of-two; 4 KiB chunks over a 47 KB buffer
+    // give every rank a multi-chunk segment to stripe.
+    for world in [2, 3, 5] {
+        let n = 12_017; // prime-ish length: uneven ring segments
+        let cb = 4 << 10;
+        let base = all_reduce_mesh(&TcpMesh::loopback_with(world, None, 1).unwrap(), n, cb);
+        for nch in [2, 4] {
+            let out = all_reduce_mesh(&TcpMesh::loopback_with(world, None, nch).unwrap(), n, cb);
+            for (r, (a, b)) in base.iter().zip(&out).enumerate() {
+                assert_eq!(
+                    bits(a),
+                    bits(b),
+                    "world {world} rank {r}: {nch}-channel all-reduce diverged from 1-channel"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parity_holds_with_more_channels_than_chunks() {
+    // 3 floats across 4 channels: every segment is a single chunk, so
+    // most channels carry nothing — striping must degrade gracefully.
+    for world in [2, 3] {
+        let base = all_reduce_mesh(&TcpMesh::loopback_with(world, None, 1).unwrap(), 3, 4 << 10);
+        let out = all_reduce_mesh(&TcpMesh::loopback_with(world, None, 4).unwrap(), 3, 4 << 10);
+        for (r, (a, b)) in base.iter().zip(&out).enumerate() {
+            assert_eq!(bits(a), bits(b), "world {world} rank {r}: tiny-op divergence");
+        }
+    }
+}
+
+/// Run one tagged all-to-all per rank and return each rank's output.
+fn all_to_all_mesh(eps: Vec<TcpEndpoint>, world: usize) -> Vec<Vec<u8>> {
+    std::thread::scope(|s| {
+        let hs: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                s.spawn(move || {
+                    let rank = ep.rank();
+                    let comm = Communicator::new(Arc::new(ep) as Arc<dyn Transport>);
+                    // `world` segments of 4 KiB each.
+                    let n = 1024 * world;
+                    let send: Vec<f32> =
+                        (0..n).map(|i| (rank * 100_000 + i) as f32 * 0.377).collect();
+                    let wire: Vec<u8> = send.iter().flat_map(|x| x.to_le_bytes()).collect();
+                    let tag = comm.reserve_tag();
+                    let (out, _) = comm.all_to_all_tagged_t(DType::F32, &wire, tag).unwrap();
+                    out
+                })
+            })
+            .collect();
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[test]
+fn all_to_all_bitwise_parity_across_channel_counts() {
+    for world in [3, 4] {
+        let base = all_to_all_mesh(TcpMesh::loopback_with(world, None, 1).unwrap(), world);
+        for nch in [2, 4] {
+            let out = all_to_all_mesh(TcpMesh::loopback_with(world, None, nch).unwrap(), world);
+            assert_eq!(
+                base, out,
+                "world {world}: {nch}-channel all-to-all diverged from 1-channel"
+            );
+        }
+    }
+}
+
+#[test]
+fn p2p_same_tag_stays_fifo_at_every_channel_count() {
+    // 20 sequential 8 KiB messages under ONE full tag, chunked into four
+    // 2 KiB frames each. Sub-tags repeat across messages, so ordering
+    // relies on per-(peer, tag) FIFO — which striping must preserve by
+    // keeping every repeat of a sub-tag on the same channel.
+    for nch in [1, 2, 4] {
+        let mut eps = TcpMesh::loopback_with(2, None, nch).unwrap();
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let tag = chunk::PTP_TAG_BASE + (7 << chunk::CHUNK_TAG_BITS);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for k in 0..20u8 {
+                    let msg = vec![k; 8 << 10];
+                    let mut tags = SubTags::new(tag);
+                    let mut stats = CommStats::default();
+                    chunk::send_wire(&e0, 1, &mut tags, &msg, 1, 2 << 10, &mut stats).unwrap();
+                }
+            });
+            s.spawn(|| {
+                for k in 0..20u8 {
+                    let mut dst = vec![0u8; 8 << 10];
+                    let mut tags = SubTags::new(tag);
+                    let mut stats = CommStats::default();
+                    chunk::recv_place_wire(&e1, 0, &mut tags, &mut dst, 1, 2 << 10, &mut stats)
+                        .unwrap();
+                    assert!(
+                        dst.iter().all(|&b| b == k),
+                        "nch {nch}: message {k} arrived out of order"
+                    );
+                }
+            });
+        });
+    }
+}
+
+#[test]
+fn p2p_chunked_parity_across_channel_counts() {
+    let run = |nch: usize| -> Vec<u8> {
+        let mut eps = TcpMesh::loopback_with(2, None, nch).unwrap();
+        let e1 = eps.pop().unwrap();
+        let e0 = eps.pop().unwrap();
+        let tag = chunk::PTP_TAG_BASE + (9 << chunk::CHUNK_TAG_BITS);
+        let msg: Vec<u8> = (0..48 * 1024).map(|i| (i % 253) as u8).collect();
+        std::thread::scope(|s| {
+            let sender = {
+                let msg = msg.clone();
+                s.spawn(move || {
+                    let mut tags = SubTags::new(tag);
+                    let mut stats = CommStats::default();
+                    chunk::send_wire(&e0, 1, &mut tags, &msg, 1, 4 << 10, &mut stats).unwrap();
+                })
+            };
+            let out = s
+                .spawn(move || {
+                    let mut dst = vec![0u8; 48 * 1024];
+                    let mut tags = SubTags::new(tag);
+                    let mut stats = CommStats::default();
+                    chunk::recv_place_wire(&e1, 0, &mut tags, &mut dst, 1, 4 << 10, &mut stats)
+                        .unwrap();
+                    dst
+                })
+                .join()
+                .unwrap();
+            sender.join().unwrap();
+            out
+        })
+    };
+    let base = run(1);
+    for nch in [2, 4] {
+        assert_eq!(base, run(nch), "{nch}-channel p2p payload diverged");
+    }
+}
+
+#[test]
+fn eager_payloads_never_stripe() {
+    // Payloads ≤ KAITIAN_EAGER_BYTES ride `chunk::send_eager` (a plain
+    // `send`), which the transport pins to channel 0 — even when the
+    // reserved sub-tags would map to other lanes if striped.
+    let eager = kaitian::collectives::algo::eager_bytes();
+    let mut eps = TcpMesh::loopback_with(2, None, 4).unwrap();
+    let e1 = eps.pop().unwrap();
+    let e0 = eps.pop().unwrap();
+    let tag = 42 << chunk::CHUNK_TAG_BITS;
+    const MSGS: usize = 8;
+    std::thread::scope(|s| {
+        let h = s.spawn(|| {
+            let mut tags = SubTags::new(tag);
+            let mut stats = CommStats::default();
+            for _ in 0..MSGS {
+                let msg = vec![7u8; eager];
+                chunk::send_eager(&e0, 1, &mut tags, &msg, &mut stats).unwrap();
+            }
+        });
+        s.spawn(|| {
+            let mut tags = SubTags::new(tag);
+            let mut stats = CommStats::default();
+            for _ in 0..MSGS {
+                let mut dst = vec![0u8; eager];
+                chunk::recv_eager_place(&e1, 0, &mut tags, &mut dst, &mut stats).unwrap();
+                assert!(dst.iter().all(|&b| b == 7));
+            }
+        });
+        h.join().unwrap();
+    });
+    assert!(
+        e0.bytes_sent_on(0) >= (MSGS * eager) as u64,
+        "eager traffic should ride channel 0"
+    );
+    for ch in 1..4 {
+        assert_eq!(
+            e0.bytes_sent_on(ch),
+            0,
+            "eager payload leaked onto channel {ch}"
+        );
+    }
+}
